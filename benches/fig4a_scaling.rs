@@ -1,0 +1,57 @@
+//! Figure 4a reproduction: total runtime vs dataset size on `simden`, with
+//! fitted log-log slopes (the paper reports slopes: exact-baseline 1.31,
+//! approx 0.94, fenwick 1.02, incomplete 1.05, priority 0.94).
+//!
+//!   cargo bench --bench fig4a_scaling
+
+use parcluster::bench::{fmt_secs, loglog_slope, time_once, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::approx::run_approx;
+use parcluster::dpc::{Dpc, DensityAlgo, DepAlgo, DpcParams};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("PARBENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').map(|t| t.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1_000, 4_000, 16_000, 64_000]);
+    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+
+    let mut headers: Vec<String> = vec!["algo".into()];
+    headers.extend(sizes.iter().map(|n| format!("n={n}")));
+    headers.push("slope".into());
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let runs: Vec<(&str, Box<dyn Fn(&parcluster::geom::PointSet) -> f64>)> = vec![
+        (
+            "exact-baseline",
+            Box::new(move |pts| {
+                time_once(|| {
+                    Dpc::new(params).dep_algo(DepAlgo::ExactBaseline).density_algo(DensityAlgo::BaselineIncremental).run(pts)
+                })
+                .0
+            }),
+        ),
+        ("approx-baseline", Box::new(move |pts| time_once(|| run_approx(pts, params)).0)),
+        ("fenwick", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(pts)).0)),
+        ("incomplete", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Incomplete).run(pts)).0)),
+        ("priority", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Priority).run(pts)).0)),
+    ];
+
+    println!("# Figure 4a: total runtime (s) on simden vs n, log-log slope fit");
+    for (name, run) in &runs {
+        let mut times = Vec::new();
+        for &n in &sizes {
+            let pts = synthetic::simden(n, 2, 42);
+            times.push(run(&pts));
+            eprintln!("done: {name} n={n}");
+        }
+        let slope = loglog_slope(&sizes.iter().map(|&n| n as f64).collect::<Vec<_>>(), &times);
+        let mut row = vec![name.to_string()];
+        row.extend(times.iter().map(|&t| fmt_secs(t)));
+        row.push(format!("{slope:.2}"));
+        table.row(row);
+    }
+    table.print();
+    println!("\n# Paper slopes: base 1.31 | approx 0.94 | fenwick 1.02 | incomplete 1.05 | priority 0.94");
+    println!("# Shape check: exact-baseline steepest; priority/fenwick near-linear.");
+}

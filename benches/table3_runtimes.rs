@@ -1,0 +1,108 @@
+//! Table 3 / Figure 3 reproduction: per-step runtimes (density, dependent
+//! point finding, total) of the five DPC implementations across the nine
+//! benchmark datasets.
+//!
+//!   cargo bench --bench table3_runtimes            # default sizes
+//!   PARBENCH_N=5000 cargo bench --bench table3_runtimes
+//!
+//! Differences vs the paper's setup (see EXPERIMENTS.md): single-core
+//! container (paper: 30 cores / 60 HT), scaled-down n, surrogate real-world
+//! datasets. The *shape* — who wins, roughly by what factor — is the
+//! reproduction target. Entries projected to exceed the per-entry budget
+//! are printed as "INF" (the paper's "—", did not terminate in 48h).
+
+use std::time::Instant;
+
+use parcluster::bench::{fmt_secs, Table};
+use parcluster::datasets;
+use parcluster::dpc::approx::run_approx_budgeted;
+use parcluster::dpc::{compute_density, dep, linkage, DensityAlgo, DepAlgo, DpcParams};
+use parcluster::geom::PointSet;
+
+struct Entry {
+    density: f64,
+    dep: f64,
+    total: f64,
+}
+
+fn run_exact(pts: &PointSet, params: DpcParams, algo: DepAlgo, density_algo: DensityAlgo) -> Entry {
+    let t0 = Instant::now();
+    let rho = compute_density(pts, params.d_cut, density_algo);
+    let density = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let deps = dep::compute_dependents(pts, &rho, params.rho_min, algo);
+    let dep_s = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let link = linkage::single_linkage(pts, &rho, &deps, params);
+    let linkage_s = t2.elapsed().as_secs_f64();
+    std::hint::black_box(link.num_clusters);
+    Entry { density, dep: dep_s, total: density + dep_s + linkage_s }
+}
+
+fn main() {
+    let n_default: usize = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(0);
+    // (dataset, default n) — sized for a single-core container.
+    let datasets_cfg: &[(&str, usize)] = &[
+        ("uniform", 30_000),
+        ("simden", 30_000),
+        ("varden", 30_000),
+        ("geolife", 30_000),
+        ("pamap2", 20_000),
+        ("sensor", 20_000),
+        ("ht", 10_000),
+        ("query", 20_000),
+        ("gowalla", 30_000),
+    ];
+    let algos = [DepAlgo::ExactBaseline, DepAlgo::Fenwick, DepAlgo::Incomplete, DepAlgo::Priority];
+
+    let mut table = Table::new(&[
+        "dataset", "n",
+        "base.den", "base.dep", "base.tot",
+        "apx.den", "apx.dep", "apx.tot",
+        "fen.den", "fen.dep", "fen.tot",
+        "inc.den", "inc.dep", "inc.tot",
+        "pri.den", "pri.dep", "pri.tot",
+    ]);
+
+    println!("# Table 3: per-step runtimes (seconds)");
+    println!("# base = DPC-EXACT-BASELINE (incremental kd-tree + unpruned density)");
+    println!("# apx  = DPC-APPROX-BASELINE (grid); fen/inc/pri = this paper's algorithms");
+    for &(name, dn) in datasets_cfg {
+        let n = if n_default > 0 { n_default } else { dn };
+        let ds = datasets::by_name(name, Some(n), 42).expect("dataset");
+        let mut row = vec![name.to_string(), n.to_string()];
+
+        // Exact baseline: unpruned density + incremental-tree sequential dep.
+        let e = run_exact(&ds.pts, ds.params, DepAlgo::ExactBaseline, DensityAlgo::BaselineIncremental);
+        row.extend([fmt_secs(e.density), fmt_secs(e.dep), fmt_secs(e.total)]);
+
+        // Approx baseline; INF = projected past the budget (the paper's "—",
+        // did-not-terminate-in-48h entries).
+        let budget_s: f64 = std::env::var("PARBENCH_APPROX_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(60.0);
+        match run_approx_budgeted(&ds.pts, ds.params, budget_s) {
+            Some(out) => {
+                std::hint::black_box(out.num_clusters);
+                row.extend([
+                    fmt_secs(out.timings.density_s),
+                    fmt_secs(out.timings.dep_s),
+                    fmt_secs(out.timings.total_s()),
+                ]);
+            }
+            None => row.extend(["INF".into(), "INF".into(), "INF".into()]),
+        }
+
+        // Our three algorithms (all share the pruned density step).
+        for algo in &algos[1..] {
+            let e = run_exact(&ds.pts, ds.params, *algo, DensityAlgo::TreePruned);
+            row.extend([fmt_secs(e.density), fmt_secs(e.dep), fmt_secs(e.total)]);
+        }
+        table.row(row);
+        eprintln!("done: {name} (n={n})");
+    }
+    table.print();
+
+    println!("\n# Shape checks vs the paper:");
+    println!("#  - pruned density (fen/inc/pri .den) should beat base.den everywhere");
+    println!("#  - pri.dep fastest on most datasets; fen.dep close; inc.dep and base.dep slower");
+    println!("#  - apx blows up (INF or large) on high-d (ht) and skewed (varden) data");
+}

@@ -1,0 +1,66 @@
+//! Backend crossover study (repo addition, exercises L1/L2/runtime): the
+//! AOT-compiled tensorized Θ(n²) DPC vs the tree engine as n grows, i.e.
+//! where the coordinator's Auto routing threshold should sit.
+//!
+//! The Θ(n²) engine is the "Original DPC" row of Table 1 — better constants
+//! (dense matmul), worse asymptotics. Expect XLA to win or tie at small n
+//! and lose badly by n ~ 10^4 (and remember: this CPU PJRT runs the Pallas
+//! kernels in interpret-lowered HLO; on a real TPU the crossover moves
+//! right but the asymptotics still win).
+//!
+//!   make artifacts && cargo bench --bench xla_crossover
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use parcluster::bench::{fmt_secs, Table};
+use parcluster::dpc::{compute_density, dep, DensityAlgo, DepAlgo};
+use parcluster::geom::PointSet;
+use parcluster::prng::SplitMix64;
+use parcluster::runtime::{artifacts_available, artifacts_dir, XlaService};
+
+fn grid_points(seed: u64, n: usize) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    let side = (4.0 * (n as f64).sqrt()) as u64 + 2;
+    let coords: Vec<f64> = (0..n * 2).map(|_| rng.next_below(side) as f64).collect();
+    PointSet::new(coords, 2)
+}
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let svc = XlaService::start(&artifacts_dir()).expect("xla service");
+    let sizes = [256usize, 512, 1024, 2048, 4096, 8192];
+    let d_cut = 8.0;
+
+    let mut table = Table::new(&["n", "xla steps1+2", "tree steps1+2", "tree/xla", "agree"]);
+    println!("# XLA brute-force vs tree engine (steps 1+2), integer-grid 2-d data");
+    for &n in &sizes {
+        let pts = Arc::new(grid_points(7 + n as u64, n));
+
+        // Warm both paths once (XLA compile is cached per padded size).
+        let _ = svc.run(Arc::clone(&pts), d_cut).unwrap();
+        let t0 = Instant::now();
+        let xla_out = svc.run(Arc::clone(&pts), d_cut).unwrap();
+        let xla_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let rho = compute_density(&pts, d_cut, DensityAlgo::TreePruned);
+        let deps = dep::compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
+        let tree_s = t1.elapsed().as_secs_f64();
+
+        let agree = xla_out.rho == rho && xla_out.dep == deps;
+        table.row(vec![
+            n.to_string(),
+            fmt_secs(xla_s),
+            fmt_secs(tree_s),
+            format!("{:.2}x", tree_s / xla_s),
+            if agree { "yes".into() } else { "NO".into() },
+        ]);
+        eprintln!("done: n={n}");
+    }
+    table.print();
+    println!("\n# Routing guidance: set coordinator xla_threshold near the n where tree/xla < 1.");
+}

@@ -1,0 +1,100 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): exercises every layer of the
+//! stack on a real small workload and proves they compose:
+//!
+//!   L1 Pallas kernels -> L2 JAX graph -> `make artifacts` (AOT HLO) ->
+//!   Rust PJRT runtime -> coordinator routing -> tree engine cross-check ->
+//!   single-linkage -> quality metrics.
+//!
+//! Workload: a batch of clustering requests over integer-grid check-in-like
+//! data (so f32/f64 agree bit-exactly), served through the coordinator with
+//! per-request routing; reports per-backend latency/throughput and verifies
+//! label agreement (ARI == 1) between the XLA and tree backends.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example compare_backends
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use parcluster::bench::fmt_secs;
+use parcluster::coordinator::{Backend, ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::dpc::DpcParams;
+use parcluster::geom::PointSet;
+use parcluster::metrics::adjusted_rand_index;
+use parcluster::prng::SplitMix64;
+
+/// Check-in-like integer workload: a few dense "city" blocks plus uniform
+/// background, all on an integer grid.
+fn workload(seed: u64, n: usize) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    let mut coords = Vec::with_capacity(n * 2);
+    let cities = [(100i64, 100i64), (400, 120), (250, 420)];
+    for _ in 0..n {
+        if rng.next_f64() < 0.8 {
+            let (cx, cy) = cities[rng.next_below(3) as usize];
+            coords.push((cx + rng.next_below(40) as i64) as f64);
+            coords.push((cy + rng.next_below(40) as i64) as f64);
+        } else {
+            coords.push(rng.next_below(512) as f64);
+            coords.push(rng.next_below(512) as f64);
+        }
+    }
+    PointSet::new(coords, 2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig::default())?;
+    if !coord.has_xla() {
+        eprintln!("XLA backend unavailable — run `make artifacts` first.");
+        std::process::exit(2);
+    }
+    let params = DpcParams { d_cut: 6.0, rho_min: 3.0, delta_min: 60.0 };
+    let n_requests = 24;
+    let n_points = 2_000;
+    println!("E2E: {n_requests} clustering requests x {n_points} points, both backends\n");
+
+    let mut total = (0.0f64, 0.0f64);
+    let mut agree = 0usize;
+    let mut clusters = Vec::new();
+    let t_all = Instant::now();
+    for r in 0..n_requests {
+        let pts = Arc::new(workload(1000 + r as u64, n_points));
+        let xla = coord
+            .run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::XlaBruteForce).tag("xla"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let tree = coord
+            .run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::TreeExact).tag("tree"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        assert_eq!(xla.backend_used, Backend::XlaBruteForce);
+        assert_eq!(tree.backend_used, Backend::TreeExact);
+        let ari = adjusted_rand_index(&xla.result.labels, &tree.result.labels);
+        if ari == 1.0 && xla.result.rho == tree.result.rho && xla.result.dep == tree.result.dep {
+            agree += 1;
+        } else {
+            println!("request {r}: DISAGREEMENT (ari={ari})");
+        }
+        total.0 += xla.wall_s;
+        total.1 += tree.wall_s;
+        clusters.push(tree.result.num_clusters);
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+
+    println!("requests            : {n_requests} ({} points each)", n_points);
+    println!("exact agreement     : {agree}/{n_requests} (rho, dep, labels via ARI=1)");
+    println!("clusters per request: {:?}", &clusters[..6.min(clusters.len())]);
+    println!("xla  backend        : total {}  mean latency {}", fmt_secs(total.0), fmt_secs(total.0 / n_requests as f64));
+    println!("tree backend        : total {}  mean latency {}", fmt_secs(total.1), fmt_secs(total.1 / n_requests as f64));
+    println!(
+        "throughput          : {:.0} points/s end-to-end (both backends, {} requests)",
+        (2 * n_requests * n_points) as f64 / wall,
+        2 * n_requests
+    );
+    println!("\nservice metrics:\n{}", coord.metrics.render());
+
+    if agree != n_requests {
+        anyhow::bail!("backends disagreed on {} requests", n_requests - agree);
+    }
+    println!("E2E OK: all layers compose; XLA and tree backends are bit-identical on this workload.");
+    Ok(())
+}

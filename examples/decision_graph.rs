@@ -1,0 +1,37 @@
+//! Decision-graph workflow (Rodriguez & Laio's parameter-selection aid):
+//! run a parameter-free scan, plot (ρ, δ), auto-suggest δ_min for a target
+//! cluster count, and re-cluster with the suggestion.
+//!
+//! ```sh
+//! cargo run --release --example decision_graph
+//! ```
+
+use parcluster::datasets;
+use parcluster::dpc::{decision, Dpc, DpcParams};
+
+fn main() {
+    let ds = datasets::by_name("gowalla", Some(20_000), 42).expect("dataset");
+    println!("dataset: {} (n={}, d={})", ds.name, ds.pts.len(), ds.pts.dim());
+
+    // Scan pass: no thresholds, just compute (rho, delta) for every point.
+    let scan_params = DpcParams { d_cut: ds.params.d_cut, rho_min: 0.0, delta_min: f64::INFINITY };
+    let scan = Dpc::new(scan_params).run(&ds.pts);
+    let graph = decision::decision_graph(&scan);
+
+    println!("\ndecision graph (each mark is a point; centers = high rho AND high delta):");
+    print!("{}", decision::ascii_plot(&graph, 72, 18));
+
+    println!("\ntop-8 center candidates by rho*delta:");
+    for p in graph.iter().take(8) {
+        println!("  id {:>7}  rho {:>6}  delta {:>12.4}", p.id, p.rho, p.delta);
+    }
+
+    for k in [2, 5, 10] {
+        let (rho_min, delta_min) = decision::suggest_params(&graph, k);
+        let out = Dpc::new(DpcParams { d_cut: ds.params.d_cut, rho_min, delta_min }).run(&ds.pts);
+        println!(
+            "k={k:>2}: suggested delta_min={delta_min:<12.4} -> {} clusters, {} noise",
+            out.num_clusters, out.num_noise
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! §Perf probe: hot-path timings used for the optimization log in
+//! EXPERIMENTS.md (density query loop, priority-NN loop, kd builds).
+use parcluster::datasets::{by_name, synthetic};
+use parcluster::dpc::{compute_density, dep, DensityAlgo};
+use parcluster::kdtree::KdTree;
+use parcluster::pskd::PriorityKdTree;
+use parcluster::dpc::priority_key;
+use std::time::Instant;
+
+fn med3<F: FnMut() -> f64>(mut f: F) -> f64 {
+    let mut v = [f(), f(), f()];
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[1]
+}
+
+fn main() {
+    // 2-d large
+    let pts = synthetic::simden(300_000, 2, 42);
+    println!("kd build 300k 2d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(KdTree::build(&pts)); t.elapsed().as_secs_f64() }));
+    println!("density 300k 2d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(compute_density(&pts, 30.0, DensityAlgo::TreePruned)); t.elapsed().as_secs_f64() }));
+    let rho = compute_density(&pts, 30.0, DensityAlgo::TreePruned);
+    let gamma: Vec<u64> = rho.iter().enumerate().map(|(i,&r)| priority_key(r, i as u32)).collect();
+    println!("pskd build 300k 2d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(PriorityKdTree::build(&pts, &gamma)); t.elapsed().as_secs_f64() }));
+    println!("dep priority 300k 2d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(dep::dep_priority(&pts, &rho, 0.0)); t.elapsed().as_secs_f64() }));
+    println!("dep fenwick 300k 2d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(dep::dep_fenwick(&pts, &rho, 0.0)); t.elapsed().as_secs_f64() }));
+
+    // 5-d
+    let ds = by_name("sensor", Some(100_000), 42).unwrap();
+    println!("density sensor 100k 5d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(compute_density(&ds.pts, ds.params.d_cut, DensityAlgo::TreePruned)); t.elapsed().as_secs_f64() }));
+    let rho = compute_density(&ds.pts, ds.params.d_cut, DensityAlgo::TreePruned);
+    println!("dep priority sensor 100k 5d: {:.3}s", med3(|| { let t = Instant::now(); std::hint::black_box(dep::dep_priority(&ds.pts, &rho, ds.params.rho_min)); t.elapsed().as_secs_f64() }));
+}

@@ -1,0 +1,12 @@
+use parcluster::datasets;
+use parcluster::dpc::{compute_density, dep, DensityAlgo, DepAlgo};
+use std::time::Instant;
+fn main() {
+    for n in [15000usize, 20000, 25000] {
+        let ds = datasets::by_name("geolife", Some(n), 42).unwrap();
+        let rho = compute_density(&ds.pts, ds.params.d_cut, DensityAlgo::TreePruned);
+        let t = Instant::now();
+        let _ = dep::compute_dependents(&ds.pts, &rho, ds.params.rho_min, DepAlgo::ExactBaseline);
+        println!("geolife n={n} baseline dep: {:.2}s", t.elapsed().as_secs_f64());
+    }
+}

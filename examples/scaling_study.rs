@@ -1,0 +1,36 @@
+//! Scaling study (a compact, example-sized version of Figure 4a): runtime of
+//! the five exact algorithms as n grows on `simden`, with fitted log-log
+//! slopes. The full bench is `cargo bench --bench fig4a_scaling`.
+//!
+//! ```sh
+//! cargo run --release --example scaling_study
+//! ```
+
+use parcluster::bench::{fmt_secs, loglog_slope, time_once, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{Dpc, DepAlgo, DpcParams};
+
+fn main() {
+    let sizes = [1_000usize, 4_000, 16_000, 64_000];
+    let algos = [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Fenwick, DepAlgo::Priority];
+    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+
+    let mut table = Table::new(&["algo", "n=1e3", "n=4e3", "n=1.6e4", "n=6.4e4", "slope"]);
+    for algo in algos {
+        let mut times = Vec::new();
+        for &n in &sizes {
+            let pts = synthetic::simden(n, 2, 42);
+            let (secs, out) = time_once(|| Dpc::new(params).dep_algo(algo).run(&pts));
+            assert!(out.num_clusters >= 1);
+            times.push(secs);
+        }
+        let slope = loglog_slope(&sizes.iter().map(|&n| n as f64).collect::<Vec<_>>(), &times);
+        let mut row = vec![algo.name().to_string()];
+        row.extend(times.iter().map(|&t| fmt_secs(t)));
+        row.push(format!("{slope:.2}"));
+        table.row(row);
+    }
+    println!("simden total runtime (seconds) vs n — paper Figure 4a shape:");
+    println!("(expect: priority's slope ~<= 1, exact-baseline clearly steeper)");
+    table.print();
+}

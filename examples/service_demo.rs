@@ -1,0 +1,59 @@
+//! Coordinator service demo: start the service, submit a mixed batch of
+//! clustering jobs (different datasets, algorithms, and backends), and
+//! report per-job results plus service metrics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example service_demo
+//! ```
+
+use std::sync::Arc;
+
+use parcluster::bench::fmt_secs;
+use parcluster::coordinator::{Backend, ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::datasets;
+use parcluster::dpc::DepAlgo;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() };
+    let coord = Coordinator::start(cfg)?;
+    println!("coordinator up: workers={}, xla_backend={}", coord.config().workers, coord.has_xla());
+
+    // A mixed batch: small jobs (XLA-eligible under Auto), large jobs
+    // (tree), explicit algorithm choices.
+    let mut ids = Vec::new();
+    for (name, n, algo, backend) in [
+        ("query", 1_500usize, DepAlgo::Priority, Backend::Auto),
+        ("gowalla", 1_000, DepAlgo::Fenwick, Backend::Auto),
+        ("simden", 30_000, DepAlgo::Priority, Backend::Auto),
+        ("uniform", 20_000, DepAlgo::Fenwick, Backend::TreeExact),
+        ("varden", 15_000, DepAlgo::Incomplete, Backend::TreeExact),
+        ("pamap2", 1_024, DepAlgo::Priority, Backend::Auto),
+    ] {
+        let ds = datasets::by_name(name, Some(n), 42).expect("dataset");
+        let job = ClusterJob::new(Arc::new(ds.pts), ds.params).dep_algo(algo).backend(backend).tag(name);
+        ids.push(coord.submit(job));
+    }
+    println!("submitted {} jobs\n", ids.len());
+
+    println!(
+        "{:<10} {:>8} {:>9} {:>8} {:>8} {:>10}",
+        "dataset", "backend", "clusters", "noise", "wall", "algo"
+    );
+    for id in ids {
+        match coord.wait(id) {
+            Ok(out) => println!(
+                "{:<10} {:>8} {:>9} {:>8} {:>8} {:>10}",
+                out.tag,
+                out.backend_used.name(),
+                out.result.num_clusters,
+                out.result.num_noise,
+                fmt_secs(out.wall_s),
+                "-"
+            ),
+            Err(e) => println!("job {id} FAILED: {e}"),
+        }
+    }
+
+    println!("\nservice metrics:\n{}", coord.metrics.render());
+    Ok(())
+}

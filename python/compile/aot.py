@@ -1,0 +1,76 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits one artifact per padded size in SIZE_MENU:
+
+    artifacts/dpc_bf_n{N}_d8.hlo.txt
+    artifacts/manifest.txt   # lines: <name> <n_pad> <d_pad>
+
+Signature of every artifact (return_tuple=True, so Rust unwraps a 3-tuple):
+
+    (points f32[N,8], dcut_sq f32[1]) -> (rho i32[N], dep i32[N],
+                                          dist_sq f32[N])
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import dpc_bruteforce
+
+# Padded-size menu: powers of two that are multiples of the kernel tiles
+# (TQ=128, TP=512). The Rust router dispatches a job of n points to the
+# smallest artifact >= n, or to the tree engine if n exceeds the menu.
+SIZE_MENU = [512, 1024, 2048, 4096, 8192]
+D_PAD = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(n_pad: int) -> str:
+    pts_spec = jax.ShapeDtypeStruct((n_pad, D_PAD), jnp.float32)
+    dcut_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(dpc_bruteforce).lower(pts_spec, dcut_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in SIZE_MENU))
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for n_pad in sizes:
+        name = f"dpc_bf_n{n_pad}_d{D_PAD}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_one(n_pad)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {n_pad} {D_PAD}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')} ({len(sizes)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""L1 — Pallas kernels for tensorized brute-force DPC.
+
+The paper's tree algorithms are irregular and live in the Rust L3 engine;
+this module implements the *tensorized* O(n^2) DPC (the "Original DPC" row
+of Table 1 — what a GPU/TPU implementation such as Liu et al. [47] computes)
+as two tiled Pallas kernels. The Rust coordinator AOT-loads the lowered HLO
+and routes small/dense jobs here (and uses it as an independent exactness
+oracle for the tree engine).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the pairwise squared
+distance matrix is computed tile-by-tile as
+
+    D2[i, j] = |x_i|^2 + |x_j|^2 - 2 <x_i, x_j>
+
+so the inner product lands on the MXU as a (TQ x d) @ (d x TP) matmul, with
+the masks/reductions on the VPU. The 2-D BlockSpec grid (query tiles x point
+tiles) expresses the HBM<->VMEM schedule a CUDA version would express with
+threadblocks; the per-row accumulators (density count / running min) live in
+the revisited output block across the point-tile axis (standard Pallas
+accumulation: the point-tile axis is the minor grid dimension, so each
+output block sees its j-tiles sequentially).
+
+Kernels must be lowered with interpret=True on this CPU image (real TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute).
+
+Conventions (identical to the Rust engine, crate::dpc):
+ - density rho(i) = #{j : D(i,j) <= d_cut}, self-inclusive;
+ - priority(j) > priority(i)  <=>  rho_j > rho_i, or rho_j == rho_i and
+   j < i (lexicographic id tiebreak);
+ - dependent point = argmin_{higher priority} (distance, id) — distance
+   ties broken by the smaller id;
+ - padding rows use the PAD_COORD sentinel coordinate, giving them huge
+   distances to everything (excluded from every ball and candidate set).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Query-tile and point-tile sizes. TQ matches the MXU row dimension; TP wide
+# enough to amortize the VPU mask work. VMEM footprint per step:
+#   x_tile (128 x 8 x 4 B) + y_tile (512 x 8 x 4 B) + D2 tile (128 x 512 x 4B)
+#   ~= 0.27 MiB  << 16 MiB VMEM.
+TQ = 128
+TP = 512
+
+# Base sentinel coordinate for padding rows: distances to real points
+# >= ~1e18, far above any d_cut^2 yet well below f32 overflow (3.4e38) even
+# squared, staggered per row (see model.pad_points — padding rows must not
+# cluster with each other), and summed over 8 lanes.
+PAD_COORD = 1.0e9
+
+
+def _density_kernel(dcut_sq_ref, x_ref, y_ref, rho_ref):
+    """One (i-tile, j-tile) step: rho[i-tile] += #{j in tile : D2 <= dcut^2}.
+
+    Grid = (n/TQ, n/TP); rho block depends only on i, so the j axis revisits
+    and accumulates into it.
+    """
+    j = pl.program_id(1)
+    x = x_ref[...]  # (TQ, d)
+    y = y_ref[...]  # (TP, d)
+    # ||x-y||^2 via the MXU: x@y^T is the (TQ, TP) matmul.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (TQ, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, TP)
+    d2 = xx + yy - 2.0 * jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    inball = (d2 <= dcut_sq_ref[0]).astype(jnp.int32)
+    counts = jnp.sum(inball, axis=1)  # (TQ,)
+
+    @pl.when(j == 0)
+    def _init():
+        rho_ref[...] = jnp.zeros_like(rho_ref)
+
+    rho_ref[...] += counts
+
+
+def _dep_kernel(dcut_sq_ref, x_ref, xrho_ref, y_ref, yrho_ref, dep_ref, dist_ref):
+    """One (i-tile, j-tile) step of the dependent-point argmin.
+
+    Maintains, per query row, the running (best_dist, best_id) over all
+    higher-priority points seen so far. j-tiles arrive in ascending id
+    order, and within a tile argmin picks the first (= smallest id) minimum,
+    so a strict `<` merge preserves the smaller-id tiebreak globally.
+    """
+    del dcut_sq_ref  # unused; shared input signature with the density kernel
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[...]
+    y = y_ref[...]
+    xrho = xrho_ref[...]  # (TQ,)
+    yrho = yrho_ref[...]  # (TP,)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T
+    d2 = xx + yy - 2.0 * jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+
+    # Global ids of this tile's rows/cols.
+    row_ids = i * TQ + jax.lax.broadcasted_iota(jnp.int32, (TQ, TP), 0)
+    col_ids = j * TP + jax.lax.broadcasted_iota(jnp.int32, (TQ, TP), 1)
+    # priority(col) > priority(row)?
+    higher = (yrho[None, :] > xrho[:, None]) | ((yrho[None, :] == xrho[:, None]) & (col_ids < row_ids))
+    masked = jnp.where(higher, d2, jnp.inf)
+
+    tile_best = jnp.min(masked, axis=1)  # (TQ,)
+    tile_arg = jnp.argmin(masked, axis=1).astype(jnp.int32)  # first min => smallest id
+    tile_id = j * TP + tile_arg
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, jnp.inf)
+        dep_ref[...] = jnp.full_like(dep_ref, -1)
+
+    improved = tile_best < dist_ref[...]
+    dist_ref[...] = jnp.where(improved, tile_best, dist_ref[...])
+    dep_ref[...] = jnp.where(improved & jnp.isfinite(tile_best), tile_id, dep_ref[...])
+
+
+def _check_shapes(points):
+    n, d = points.shape
+    if n % TQ != 0 or n % TP != 0:
+        raise ValueError(f"n={n} must be a multiple of TQ={TQ} and TP={TP}; pad first")
+    return n, d
+
+
+@functools.partial(jax.jit, static_argnames=())
+def density(points: jax.Array, dcut_sq: jax.Array) -> jax.Array:
+    """rho[i] = #points within sqrt(dcut_sq) of points[i] (self-inclusive).
+
+    `points`: (n, d) f32, padded rows at PAD_COORD; `dcut_sq`: f32 scalar.
+    """
+    n, d = _check_shapes(points)
+    dcut_arr = jnp.reshape(dcut_sq.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _density_kernel,
+        grid=(n // TQ, n // TP),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((TQ, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TP, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TQ,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(dcut_arr, points, points)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dependents(points: jax.Array, rho: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(dep, dist_sq) per point: nearest strictly-higher-priority neighbor.
+
+    dep[i] = -1 where no higher-priority point exists (the global peak, and
+    padding rows). `rho`: (n,) i32.
+    """
+    n, d = _check_shapes(points)
+    dcut_arr = jnp.zeros((1,), jnp.float32)
+    return pl.pallas_call(
+        _dep_kernel,
+        grid=(n // TQ, n // TP),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((TQ, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TQ,), lambda i, j: (i,)),
+            pl.BlockSpec((TP, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((TP,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TQ,), lambda i, j: (i,)),
+            pl.BlockSpec((TQ,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(dcut_arr, points, rho, points, rho)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the Pallas kernels — the build-time correctness
+signal (pytest asserts kernel == ref on every shape/dtype sweep).
+
+Implements the same semantics with dense O(n^2) jnp ops and no tiling, so a
+bug in the Pallas BlockSpec plumbing cannot hide here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_dist_sq(points: jax.Array) -> jax.Array:
+    """Full (n, n) squared-distance matrix, the same |x|^2+|y|^2-2xy formula
+    the kernels use (so float behaviour matches)."""
+    xx = jnp.sum(points * points, axis=1)
+    d2 = xx[:, None] + xx[None, :] - 2.0 * points @ points.T
+    return d2
+
+
+def density(points: jax.Array, dcut_sq: jax.Array) -> jax.Array:
+    """rho[i] = #{j : D2[i,j] <= dcut_sq} (self-inclusive)."""
+    d2 = pairwise_dist_sq(points)
+    return jnp.sum(d2 <= dcut_sq, axis=1).astype(jnp.int32)
+
+
+def dependents(points: jax.Array, rho: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(dep, dist_sq): nearest strictly-higher-priority neighbor per row.
+
+    priority(j) > priority(i)  <=>  rho_j > rho_i or (rho_j == rho_i and
+    j < i); distance ties broken by smaller id (argmin picks the first
+    minimum). dep = -1 where no candidate exists.
+    """
+    n = points.shape[0]
+    d2 = pairwise_dist_sq(points)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    higher = (rho[None, :] > rho[:, None]) | ((rho[None, :] == rho[:, None]) & (ids[None, :] < ids[:, None]))
+    masked = jnp.where(higher, d2, jnp.inf)
+    best = jnp.min(masked, axis=1)
+    dep = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    dep = jnp.where(jnp.isfinite(best), dep, -1)
+    return dep, best
+
+
+def dpc_bruteforce_ref(points: jax.Array, dcut_sq: jax.Array):
+    """Full reference pipeline: (rho, dep, dist_sq)."""
+    rho = density(points, dcut_sq)
+    dep, dist = dependents(points, rho)
+    return rho, dep, dist

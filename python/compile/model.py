@@ -1,0 +1,66 @@
+"""L2 — the JAX compute graph for tensorized brute-force DPC.
+
+Composes the L1 Pallas kernels (`kernels.pairwise`) into the function the
+Rust runtime executes:
+
+    dpc_bruteforce(points f32[n, d], dcut_sq f32[]) ->
+        (rho i32[n], dep i32[n], dist_sq f32[n])
+
+`n` must be a multiple of the kernel tile sizes — [`pad_points`] handles
+padding with the PAD_COORD sentinel (padding rows get rho = 0 from real
+points' perspective... more precisely: real points never count padding rows
+because their distance is ~1e18; padding rows' own outputs are garbage and
+sliced off by the caller).
+
+This file is build-time only: `aot.py` lowers `dpc_bruteforce` to HLO text
+for the menu of padded sizes, and the Rust L3 coordinator executes the
+artifacts via PJRT. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import pairwise
+
+
+def dpc_bruteforce(points: jax.Array, dcut_sq: jax.Array):
+    """The full tensorized DPC forward graph (Steps 1 + 2 of the paper).
+
+    Step 3 (union-find single linkage) is irregular pointer-chasing and
+    stays in Rust — it is a negligible fraction of runtime (paper §7.2).
+    """
+    rho = pairwise.density(points, dcut_sq)
+    dep, dist = pairwise.dependents(points, rho)
+    return rho, dep, dist
+
+
+def pad_points(points: np.ndarray, n_pad: int, d_pad: int = 8) -> np.ndarray:
+    """Pad an (n, d) float array to (n_pad, d_pad) f32 with PAD_COORD rows.
+
+    Extra *columns* are zero (they contribute 0 to distances); extra *rows*
+    are PAD_COORD (huge distance to everything).
+    """
+    n, d = points.shape
+    if n > n_pad or d > d_pad:
+        raise ValueError(f"cannot pad ({n},{d}) to ({n_pad},{d_pad})")
+    out = np.zeros((n_pad, d_pad), dtype=np.float32)
+    out[:n, :d] = points.astype(np.float32)
+    # Staggered sentinels: each padding row sits at its own far-away location
+    # so padding rows do NOT cluster with each other (identical sentinels
+    # would give them huge densities and make them bogus dependent-point
+    # candidates). With rho <= 1 and ids after all real ids, the priority
+    # rule can never select a padding row for a real point.
+    stagger = (np.arange(n, n_pad, dtype=np.float32) + 1.0)[:, None]
+    out[n:, :] = pairwise.PAD_COORD * stagger
+    return out
+
+
+def choose_padded_size(n: int, menu: list[int]) -> int:
+    """Smallest menu size >= n (the AOT artifact to dispatch to)."""
+    for m in sorted(menu):
+        if m >= n:
+            return m
+    raise ValueError(f"n={n} exceeds the largest AOT artifact ({max(menu)})")

@@ -1,0 +1,178 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py),
+including hypothesis sweeps over shapes, coordinate regimes, and d_cut.
+
+These tests are the build-time gate: `make artifacts` output is only
+trusted because this suite passes on the same kernel code.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pairwise, ref
+from compile.kernels.pairwise import PAD_COORD, TP, TQ
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_PAD = 512  # one tile of TP, four tiles of TQ — smallest legal size
+
+
+def make_points(rng: np.random.Generator, n_real: int, d: int, grid: int | None):
+    """Random points padded to (N_PAD, 8) via model.pad_points (staggered
+    sentinels). grid != None quantizes coords to integers in [0, grid) so
+    f32 distance arithmetic is exact."""
+    from compile.model import pad_points
+
+    if grid is not None:
+        pts = rng.integers(0, grid, size=(n_real, d)).astype(np.float32)
+    else:
+        pts = rng.uniform(0.0, 100.0, size=(n_real, d)).astype(np.float32)
+    return jnp.asarray(pad_points(pts, N_PAD))
+
+
+def brute_density(pts: np.ndarray, n_real: int, dcut_sq: float) -> np.ndarray:
+    """Independent numpy oracle (different formula: explicit differences)."""
+    x = pts[:n_real].astype(np.float64)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    return (d2 <= dcut_sq + 1e-9).sum(1).astype(np.int32)
+
+
+class TestDensityKernel:
+    def test_matches_ref_small(self):
+        rng = np.random.default_rng(0)
+        pts = make_points(rng, 300, 2, grid=50)
+        got = pairwise.density(pts, jnp.float32(25.0))
+        want = ref.density(pts, jnp.float32(25.0))
+        np.testing.assert_array_equal(got, want)
+
+    def test_matches_independent_numpy_oracle_on_grid(self):
+        rng = np.random.default_rng(1)
+        n_real = 400
+        pts = make_points(rng, n_real, 3, grid=20)
+        got = np.asarray(pairwise.density(pts, jnp.float32(16.0)))[:n_real]
+        want = brute_density(np.asarray(pts), n_real, 16.0)
+        np.testing.assert_array_equal(got, want)
+
+    def test_padding_rows_do_not_pollute_real_counts(self):
+        from compile.model import pad_points
+
+        # All real points identical: every real rho = n_real exactly.
+        n_real = 37
+        pts = pad_points(np.ones((n_real, 8), dtype=np.float32), N_PAD)
+        got = np.asarray(pairwise.density(jnp.asarray(pts), jnp.float32(1.0)))
+        assert (got[:n_real] == n_real).all()
+        # Padding rows are isolated: rho <= 1 each.
+        assert (got[n_real:] <= 1).all()
+
+    def test_self_inclusive(self):
+        from compile.model import pad_points
+
+        pts = pad_points(np.zeros((1, 8), dtype=np.float32), N_PAD)
+        got = np.asarray(pairwise.density(jnp.asarray(pts), jnp.float32(0.01)))
+        assert got[0] == 1
+
+    def test_rejects_unpadded_shapes(self):
+        with pytest.raises(ValueError):
+            pairwise.density(jnp.zeros((100, 8), jnp.float32), jnp.float32(1.0))
+
+    @hypothesis.settings(max_examples=15, deadline=None)
+    @hypothesis.given(
+        seed=st.integers(0, 2**31),
+        n_real=st.integers(2, N_PAD),
+        d=st.integers(1, 8),
+        dcut=st.floats(0.5, 50.0),
+    )
+    def test_hypothesis_matches_ref(self, seed, n_real, d, dcut):
+        rng = np.random.default_rng(seed)
+        pts = make_points(rng, n_real, d, grid=None)
+        got = pairwise.density(pts, jnp.float32(dcut * dcut))
+        want = ref.density(pts, jnp.float32(dcut * dcut))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestDependentKernel:
+    def _rho(self, pts, dcut_sq=25.0):
+        return pairwise.density(pts, jnp.float32(dcut_sq))
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        pts = make_points(rng, 350, 2, grid=40)
+        rho = self._rho(pts)
+        got_dep, got_dist = pairwise.dependents(pts, rho)
+        want_dep, want_dist = ref.dependents(pts, rho)
+        np.testing.assert_array_equal(np.asarray(got_dep), np.asarray(want_dep))
+        np.testing.assert_allclose(np.asarray(got_dist), np.asarray(want_dist), rtol=1e-6)
+
+    def test_priority_rule_ties_broken_by_smaller_id(self):
+        from compile.model import pad_points
+
+        # Three identical points: equal rho; dep must point to the smallest
+        # lower id.
+        jpts = jnp.asarray(pad_points(np.full((3, 8), 5.0, dtype=np.float32), N_PAD))
+        rho = self._rho(jpts, dcut_sq=1.0)
+        dep, dist = pairwise.dependents(jpts, rho)
+        dep = np.asarray(dep)
+        assert dep[0] == -1  # highest priority (smallest id at equal rho)
+        assert dep[1] == 0
+        assert dep[2] == 0  # distance ties to 0 and 1; smaller id wins
+        assert np.asarray(dist)[2] == 0.0
+
+    def test_global_peak_gets_minus_one(self):
+        rng = np.random.default_rng(4)
+        n_real = 200
+        pts = make_points(rng, n_real, 2, grid=10)
+        rho = self._rho(pts, dcut_sq=4.0)
+        dep, _ = pairwise.dependents(pts, rho)
+        dep = np.asarray(dep)[:n_real]
+        assert (dep == -1).sum() == 1
+
+    def test_dependent_has_strictly_higher_priority(self):
+        rng = np.random.default_rng(5)
+        n_real = 300
+        pts = make_points(rng, n_real, 3, grid=15)
+        rho_j = self._rho(pts, dcut_sq=9.0)
+        dep, _ = pairwise.dependents(pts, rho_j)
+        rho = np.asarray(rho_j)
+        dep = np.asarray(dep)
+        for i in range(n_real):
+            j = dep[i]
+            if j >= 0:
+                assert (rho[j], -j) > (rho[i], -i), f"dep of {i} is {j}"
+
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(
+        seed=st.integers(0, 2**31),
+        n_real=st.integers(2, N_PAD),
+        d=st.integers(1, 8),
+        grid=st.sampled_from([5, 20, 100]),
+    )
+    def test_hypothesis_matches_ref(self, seed, n_real, d, grid):
+        rng = np.random.default_rng(seed)
+        pts = make_points(rng, n_real, d, grid=grid)
+        rho = self._rho(pts, dcut_sq=float(grid))
+        got_dep, got_dist = pairwise.dependents(pts, rho)
+        want_dep, want_dist = ref.dependents(pts, rho)
+        np.testing.assert_array_equal(np.asarray(got_dep), np.asarray(want_dep))
+        np.testing.assert_allclose(np.asarray(got_dist), np.asarray(want_dist), rtol=1e-6)
+
+
+class TestMultiTile:
+    """Exercise n > one tile in both grid dimensions."""
+
+    def test_density_and_dep_at_1024(self):
+        rng = np.random.default_rng(6)
+        n = 1024
+        pts_np = rng.integers(0, 30, size=(n, 2)).astype(np.float32)
+        pts = np.zeros((n, 8), dtype=np.float32)
+        pts[:, :2] = pts_np
+        jpts = jnp.asarray(pts)
+        rho = pairwise.density(jpts, jnp.float32(9.0))
+        want_rho = ref.density(jpts, jnp.float32(9.0))
+        np.testing.assert_array_equal(np.asarray(rho), np.asarray(want_rho))
+        dep, dist = pairwise.dependents(jpts, rho)
+        want_dep, want_dist = ref.dependents(jpts, rho)
+        np.testing.assert_array_equal(np.asarray(dep), np.asarray(want_dep))
+        np.testing.assert_allclose(np.asarray(dist), np.asarray(want_dist), rtol=1e-6)

@@ -1,0 +1,80 @@
+"""L2 model + AOT lowering tests: padding helpers, the composed graph, and
+an HLO-text lowering smoke check (the artifact the Rust runtime loads)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.pairwise import PAD_COORD
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestPadding:
+    def test_pad_points_shape_and_sentinels(self):
+        pts = np.arange(12, dtype=np.float64).reshape(6, 2)
+        out = model.pad_points(pts, 512)
+        assert out.shape == (512, 8)
+        assert out.dtype == np.float32
+        np.testing.assert_array_equal(out[:6, :2], pts.astype(np.float32))
+        assert (out[:6, 2:] == 0.0).all()  # extra columns zero
+        # Extra rows: staggered far-away sentinels (each >= PAD_COORD, all
+        # rows distinct so they do not cluster with each other).
+        assert (out[6:] >= PAD_COORD).all()
+        assert len({float(v) for v in out[6:, 0]}) == out[6:].shape[0]
+
+    def test_pad_points_rejects_oversize(self):
+        with pytest.raises(ValueError):
+            model.pad_points(np.zeros((600, 2)), 512)
+        with pytest.raises(ValueError):
+            model.pad_points(np.zeros((10, 9)), 512)
+
+    def test_choose_padded_size(self):
+        menu = [512, 1024, 4096]
+        assert model.choose_padded_size(1, menu) == 512
+        assert model.choose_padded_size(512, menu) == 512
+        assert model.choose_padded_size(513, menu) == 1024
+        with pytest.raises(ValueError):
+            model.choose_padded_size(5000, menu)
+
+
+class TestComposedModel:
+    def test_model_matches_ref_pipeline(self):
+        rng = np.random.default_rng(7)
+        n_real = 300
+        pts = model.pad_points(rng.integers(0, 25, size=(n_real, 3)).astype(np.float64), 512)
+        jpts = jnp.asarray(pts)
+        dcut_sq = jnp.float32(16.0)
+        rho, dep, dist = model.dpc_bruteforce(jpts, dcut_sq)
+        w_rho, w_dep, w_dist = ref.dpc_bruteforce_ref(jpts, dcut_sq)
+        np.testing.assert_array_equal(np.asarray(rho), np.asarray(w_rho))
+        np.testing.assert_array_equal(np.asarray(dep), np.asarray(w_dep))
+        np.testing.assert_allclose(np.asarray(dist), np.asarray(w_dist), rtol=1e-6)
+
+    def test_real_region_is_invariant_to_padding_amount(self):
+        rng = np.random.default_rng(8)
+        n_real = 200
+        raw = rng.integers(0, 25, size=(n_real, 2)).astype(np.float64)
+        dcut_sq = jnp.float32(9.0)
+        out512 = model.dpc_bruteforce(jnp.asarray(model.pad_points(raw, 512)), dcut_sq)
+        out1024 = model.dpc_bruteforce(jnp.asarray(model.pad_points(raw, 1024)), dcut_sq)
+        for a, b in zip(out512, out1024):
+            np.testing.assert_array_equal(np.asarray(a)[:n_real], np.asarray(b)[:n_real])
+
+
+class TestAotLowering:
+    def test_lower_one_produces_hlo_text(self):
+        text = aot.lower_one(512)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # Signature: f32[512,8] input present.
+        assert "f32[512,8]" in text.replace(" ", "")
+
+    def test_manifest_menu_is_tile_aligned(self):
+        from compile.kernels.pairwise import TP, TQ
+
+        for n in aot.SIZE_MENU:
+            assert n % TQ == 0 and n % TP == 0, n

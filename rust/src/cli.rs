@@ -1,0 +1,159 @@
+//! Command-line parsing (clap is not available offline): a small
+//! `--flag value` / `--switch` parser plus the subcommand surface of the
+//! `parcluster` binary.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: positionals plus `--key value` / `--switch` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    /// Flags consumed via accessors (unknown-flag detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. A token `--name` followed by a non-`--` token is a
+    /// valued flag; a `--name` followed by another flag (or nothing) is a
+    /// switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), toks[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(t.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.known.borrow_mut().push(name.to_string());
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("--{name} {v:?}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.known.borrow_mut().push(name.to_string());
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on any flag that was never consumed (typo safety). Call after
+    /// all accessors.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for k in self.flags.keys() {
+            if !known.iter().any(|n| n == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for s in &self.switches {
+            if !known.iter().any(|n| n == s) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+parcluster — parallel exact Density Peaks Clustering (DPC)
+
+USAGE:
+  parcluster <COMMAND> [FLAGS]
+
+COMMANDS:
+  datasets                         print the benchmark dataset inventory (Table 2)
+  generate   --dataset NAME [--n N] [--seed S] --out FILE [--csv]
+  cluster    (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--rho-min X]
+             [--delta-min X] [--algo A] [--backend B] [--threads T]
+             [--labels-out FILE] [--seed S]
+  decision   (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--k K]
+             [--csv-out FILE] [--seed S]
+  serve      [--config FILE] [--workers N]    read jobs from stdin, one per line:
+             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`
+  help
+
+Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick
+Backends  (--backend): auto | tree | xla
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = args("cluster --n 100 --csv --dataset simden");
+        assert_eq!(a.positional, vec!["cluster"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("dataset"), Some("simden"));
+        assert!(a.switch("csv"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = args("--n 42 --x 1.5");
+        assert_eq!(a.get_or("n", 7usize).unwrap(), 42);
+        assert_eq!(a.get_or("missing", 7usize).unwrap(), 7);
+        assert_eq!(a.get_or("x", 0.0f64).unwrap(), 1.5);
+        assert!(a.get_parse::<usize>("x").is_err());
+    }
+
+    #[test]
+    fn require_and_unknown_detection() {
+        let a = args("--good 1 --bad 2");
+        assert!(a.require("good").is_ok());
+        assert!(a.require("absent").is_err());
+        // `bad` not consumed:
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("bad");
+        assert!(a.reject_unknown().is_ok());
+    }
+}

@@ -1,0 +1,160 @@
+//! Configuration: a hand-rolled `key = value` format (serde/toml are not
+//! available offline). Lines are `key = value`, `#` comments; unknown keys
+//! are errors (typo safety). Env overrides via `PARCLUSTER_<KEY>`.
+//!
+//! Example (`parcluster.conf`):
+//!
+//! ```text
+//! threads = 8
+//! backend = auto          # auto | tree | xla
+//! dep_algo = priority     # naive | exact-baseline | incomplete | priority | fenwick
+//! xla_threshold = 4096
+//! artifacts_dir = artifacts
+//! workers = 2
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dpc::DepAlgo;
+
+use super::router::Backend;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Parallelism of the compute pool (0 = auto).
+    pub threads: usize,
+    /// Default routing policy.
+    pub backend: Backend,
+    /// Default dependent-point algorithm for the tree backend.
+    pub dep_algo: DepAlgo,
+    /// Auto mode: jobs with n ≤ threshold go to XLA (if artifacts exist).
+    pub xla_threshold: usize,
+    /// AOT artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Coordinator worker threads (job-level concurrency).
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            threads: 0,
+            backend: Backend::Auto,
+            dep_algo: DepAlgo::Priority,
+            xla_threshold: 2048,
+            artifacts_dir: crate::runtime::artifacts_dir(),
+            workers: 1,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Parse the `key = value` text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: HashMap<String, String> = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.split('#').next().unwrap_or("").trim();
+            if t.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = t.split_once('=') else {
+                bail!("config line {}: expected `key = value`, got {t:?}", lineno + 1);
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Self::from_map(kv)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn from_map(kv: HashMap<String, String>) -> Result<Self> {
+        let mut cfg = CoordinatorConfig::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "threads" => cfg.threads = v.parse().context("threads")?,
+                "backend" => cfg.backend = parse_backend(&v)?,
+                "dep_algo" => cfg.dep_algo = parse_dep_algo(&v)?,
+                "xla_threshold" => cfg.xla_threshold = v.parse().context("xla_threshold")?,
+                "artifacts_dir" => cfg.artifacts_dir = PathBuf::from(v),
+                "workers" => cfg.workers = v.parse::<usize>().context("workers")?.max(1),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `PARCLUSTER_THREADS`-style env overrides.
+    pub fn with_env_overrides(mut self) -> Result<Self> {
+        if let Ok(v) = std::env::var("PARCLUSTER_BACKEND") {
+            self.backend = parse_backend(&v)?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_DEP_ALGO") {
+            self.dep_algo = parse_dep_algo(&v)?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_XLA_THRESHOLD") {
+            self.xla_threshold = v.parse().context("PARCLUSTER_XLA_THRESHOLD")?;
+        }
+        Ok(self)
+    }
+}
+
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    Ok(match s {
+        "auto" => Backend::Auto,
+        "tree" => Backend::TreeExact,
+        "xla" => Backend::XlaBruteForce,
+        other => bail!("unknown backend {other:?} (auto|tree|xla)"),
+    })
+}
+
+pub fn parse_dep_algo(s: &str) -> Result<DepAlgo> {
+    for a in DepAlgo::ALL {
+        if a.name() == s {
+            return Ok(a);
+        }
+    }
+    bail!("unknown dep_algo {s:?} (naive|exact-baseline|incomplete|priority|fenwick)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = CoordinatorConfig::parse(
+            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.backend, Backend::XlaBruteForce);
+        assert_eq!(cfg.dep_algo, DepAlgo::Fenwick);
+        assert_eq!(cfg.xla_threshold, 999);
+        assert_eq!(cfg.workers, 3);
+    }
+
+    #[test]
+    fn empty_config_is_default() {
+        assert_eq!(CoordinatorConfig::parse("# nothing\n\n").unwrap(), CoordinatorConfig::default());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_syntax() {
+        assert!(CoordinatorConfig::parse("nope = 1\n").is_err());
+        assert!(CoordinatorConfig::parse("just words\n").is_err());
+        assert!(CoordinatorConfig::parse("backend = gpu\n").is_err());
+        assert!(CoordinatorConfig::parse("dep_algo = quantum\n").is_err());
+    }
+
+    #[test]
+    fn workers_clamped_to_one() {
+        let cfg = CoordinatorConfig::parse("workers = 0\n").unwrap();
+        assert_eq!(cfg.workers, 1);
+    }
+}

@@ -1,0 +1,68 @@
+//! Clustering jobs: the unit of work submitted to the [`super::Coordinator`].
+
+use std::sync::Arc;
+
+use crate::dpc::{DpcParams, DpcResult, DepAlgo};
+use crate::geom::PointSet;
+
+use super::router::Backend;
+
+/// A clustering request.
+#[derive(Clone)]
+pub struct ClusterJob {
+    /// Shared so large point sets are not copied per worker.
+    pub pts: Arc<PointSet>,
+    pub params: DpcParams,
+    /// Routing override (None = coordinator default policy).
+    pub backend: Option<Backend>,
+    /// Step-2 algorithm override for the tree backend.
+    pub dep_algo: Option<DepAlgo>,
+    /// Free-form tag echoed in the result (dataset name etc.).
+    pub tag: String,
+}
+
+impl ClusterJob {
+    pub fn new(pts: Arc<PointSet>, params: DpcParams) -> Self {
+        ClusterJob { pts, params, backend: None, dep_algo: None, tag: String::new() }
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    pub fn dep_algo(mut self, a: DepAlgo) -> Self {
+        self.dep_algo = Some(a);
+        self
+    }
+
+    pub fn tag(mut self, t: impl Into<String>) -> Self {
+        self.tag = t.into();
+        self
+    }
+}
+
+/// Completed job output.
+#[derive(Clone, Debug)]
+pub struct JobOutput {
+    pub result: DpcResult,
+    /// Which backend actually ran (Auto resolves to a concrete one).
+    pub backend_used: Backend,
+    pub wall_s: f64,
+    pub tag: String,
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done(Box<JobOutput>),
+    Failed(String),
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done(_) | JobStatus::Failed(_))
+    }
+}

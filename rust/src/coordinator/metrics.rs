@@ -1,0 +1,83 @@
+//! Lightweight metrics registry: named atomic counters and duration sums,
+//! rendered as a flat text report (`/metrics`-style).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    /// Sums stored as f64 bits.
+    sums: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut g = self.counters.lock().unwrap();
+        g.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0)).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn observe_secs(&self, name: &str, secs: f64) {
+        let mut g = self.sums.lock().unwrap();
+        let slot = g.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0f64.to_bits()));
+        // CAS-loop float accumulation.
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + secs).to_bits();
+            match slot.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).map(|a| a.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    pub fn sum_secs(&self, name: &str) -> f64 {
+        self.sums.lock().unwrap().get(name).map(|a| f64::from_bits(a.load(Ordering::Relaxed))).unwrap_or(0.0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.sums.lock().unwrap().iter() {
+            out.push_str(&format!("{k}_seconds {:.6}\n", f64::from_bits(v.load(Ordering::Relaxed))));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_sums() {
+        let m = Metrics::new();
+        m.inc("jobs");
+        m.inc("jobs");
+        m.add("points", 500);
+        m.observe_secs("cluster", 0.25);
+        m.observe_secs("cluster", 0.5);
+        assert_eq!(m.counter("jobs"), 2);
+        assert_eq!(m.counter("points"), 500);
+        assert!((m.sum_secs("cluster") - 0.75).abs() < 1e-12);
+        assert_eq!(m.counter("missing"), 0);
+        let r = m.render();
+        assert!(r.contains("jobs 2"));
+        assert!(r.contains("cluster_seconds 0.75"));
+    }
+}

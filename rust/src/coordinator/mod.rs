@@ -1,0 +1,27 @@
+//! L3 coordinator: a clustering job service over the two engines.
+//!
+//! The paper's contribution is the parallel algorithm suite itself, so the
+//! coordinator is the *driver* layer mandated by the three-layer
+//! architecture: it owns process lifecycle, a job queue with a worker pool,
+//! a backend router, metrics, and the configuration system.
+//!
+//! Backends:
+//! - **TreeExact** — the Rust engine (`crate::dpc`): exact, any n, the
+//!   paper's algorithms (priority / fenwick / incomplete / baselines).
+//! - **XlaBruteForce** — the AOT-compiled tensorized Θ(n²) DPC
+//!   (`crate::runtime`): exact Steps 1–2 in f32, competitive only for small
+//!   n (the crossover is measured by `benches/xla_crossover.rs`); Step 3
+//!   always runs in Rust.
+//! - **Auto** — route by size: n ≤ threshold and artifacts present → XLA,
+//!   else trees.
+
+pub mod config;
+pub mod job;
+pub mod router;
+pub mod service;
+pub mod metrics;
+
+pub use config::CoordinatorConfig;
+pub use job::{ClusterJob, JobOutput, JobStatus};
+pub use router::{Backend, Router};
+pub use service::Coordinator;

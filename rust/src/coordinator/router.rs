@@ -1,0 +1,86 @@
+//! Backend routing: decide, per job, whether the tree engine or the
+//! AOT-compiled XLA brute-force engine runs it.
+
+use std::sync::Arc;
+
+use crate::runtime::XlaService;
+
+/// Execution backend for a clustering job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Resolve by size at submission time.
+    Auto,
+    /// Rust tree engine (the paper's algorithms); any n, f64 exact.
+    TreeExact,
+    /// AOT XLA Θ(n²) engine; n ≤ artifact capacity, f32.
+    XlaBruteForce,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::TreeExact => "tree",
+            Backend::XlaBruteForce => "xla",
+        }
+    }
+}
+
+/// Size-based router.
+pub struct Router {
+    xla: Option<Arc<XlaService>>,
+    xla_threshold: usize,
+}
+
+impl Router {
+    pub fn new(xla: Option<Arc<XlaService>>, xla_threshold: usize) -> Self {
+        Router { xla, xla_threshold }
+    }
+
+    pub fn xla_engine(&self) -> Option<&Arc<XlaService>> {
+        self.xla.as_ref()
+    }
+
+    /// Resolve a (possibly `Auto`) backend request for a job of `n` points
+    /// in `d` dims. Falls back to the tree engine whenever XLA cannot take
+    /// the job (no artifacts, too large, d > 8).
+    pub fn resolve(&self, requested: Backend, n: usize, d: usize) -> Backend {
+        let xla_ok = self
+            .xla
+            .as_ref()
+            .map(|e| n <= e.capacity() && d <= crate::runtime::engine::D_PAD)
+            .unwrap_or(false);
+        match requested {
+            Backend::TreeExact => Backend::TreeExact,
+            Backend::XlaBruteForce => {
+                if xla_ok {
+                    Backend::XlaBruteForce
+                } else {
+                    Backend::TreeExact
+                }
+            }
+            Backend::Auto => {
+                if xla_ok && n <= self.xla_threshold {
+                    Backend::XlaBruteForce
+                } else {
+                    Backend::TreeExact
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn without_xla_everything_routes_to_tree() {
+        let r = Router::new(None, 4096);
+        assert_eq!(r.resolve(Backend::Auto, 100, 2), Backend::TreeExact);
+        assert_eq!(r.resolve(Backend::XlaBruteForce, 100, 2), Backend::TreeExact);
+        assert_eq!(r.resolve(Backend::TreeExact, 100, 2), Backend::TreeExact);
+    }
+
+    // Routing with a live engine is exercised in rust/tests/xla_integration.rs.
+}

@@ -1,0 +1,299 @@
+//! The coordinator service: job queue + worker pool + router + metrics.
+//!
+//! Jobs are submitted (non-blocking) and executed by dedicated worker
+//! threads; `wait` blocks on a condvar until the job reaches a terminal
+//! state. The XLA engine runs Steps 1–2 for routed jobs, with Step 3
+//! (single-linkage union-find) always in Rust.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::dpc::{linkage, Dpc, DpcResult, DepAlgo};
+use crate::runtime::XlaService;
+
+use super::config::CoordinatorConfig;
+use super::job::{ClusterJob, JobOutput, JobStatus};
+use super::metrics::Metrics;
+use super::router::{Backend, Router};
+
+pub type JobId = u64;
+
+struct Shared {
+    queue: Mutex<VecDeque<(JobId, ClusterJob)>>,
+    queue_cv: Condvar,
+    status: Mutex<HashMap<JobId, JobStatus>>,
+    status_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The clustering service. Create with [`Coordinator::start`], submit jobs,
+/// `wait` for results, and `shutdown` (also done on drop).
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    router: Arc<Router>,
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start the service. Loads the XLA engine if artifacts are present
+    /// (failure to load degrades to tree-only with a warning, never an
+    /// error — the tree engine is always available).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        if cfg.threads > 0 {
+            crate::parlay::set_threads(cfg.threads);
+        }
+        let xla = if cfg.artifacts_dir.join("manifest.txt").exists() {
+            match XlaService::start(&cfg.artifacts_dir) {
+                Ok(e) => Some(Arc::new(e)),
+                Err(e) => {
+                    eprintln!("warning: XLA engine unavailable ({e}); tree backend only");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let router = Arc::new(Router::new(xla, cfg.xla_threshold));
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            status: Mutex::new(HashMap::new()),
+            status_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                let rt = Arc::clone(&router);
+                let mt = Arc::clone(&metrics);
+                let cfg = cfg.clone();
+                thread::Builder::new()
+                    .name(format!("coord-{w}"))
+                    .spawn(move || worker_loop(&sh, &rt, &mt, &cfg))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Ok(Coordinator { cfg, router, shared, workers, next_id: AtomicU64::new(1), metrics })
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn has_xla(&self) -> bool {
+        self.router.xla_engine().is_some()
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn submit(&self, job: ClusterJob) -> JobId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
+        self.shared.queue.lock().unwrap().push_back((id, job));
+        self.shared.queue_cv.notify_one();
+        self.metrics.inc("jobs_submitted");
+        id
+    }
+
+    /// Current status (non-blocking).
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.shared.status.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job completes; returns the output or the failure
+    /// message.
+    pub fn wait(&self, id: JobId) -> Result<JobOutput, String> {
+        let mut st = self.shared.status.lock().unwrap();
+        loop {
+            match st.get(&id) {
+                None => return Err(format!("unknown job {id}")),
+                Some(s) if s.is_terminal() => {
+                    return match s.clone() {
+                        JobStatus::Done(out) => Ok(*out),
+                        JobStatus::Failed(msg) => Err(msg),
+                        _ => unreachable!(),
+                    };
+                }
+                _ => st = self.shared.status_cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Convenience: submit + wait.
+    pub fn run_sync(&self, job: ClusterJob) -> Result<JobOutput, String> {
+        let id = self.submit(job);
+        self.wait(id)
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.queue_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &CoordinatorConfig) {
+    loop {
+        let (id, job) = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(item) = q.pop_front() {
+                    break item;
+                }
+                q = sh.queue_cv.wait(q).unwrap();
+            }
+        };
+        set_status(sh, id, JobStatus::Running);
+        let t = Instant::now();
+        let backend = router.resolve(job.backend.unwrap_or(cfg.backend), job.pts.len(), job.pts.dim());
+        let outcome = run_job(&job, backend, router, cfg);
+        let wall = t.elapsed().as_secs_f64();
+        metrics.inc(&format!("jobs_{}", backend.name()));
+        metrics.observe_secs("job_wall", wall);
+        metrics.add("points_processed", job.pts.len() as u64);
+        match outcome {
+            Ok(result) => set_status(
+                sh,
+                id,
+                JobStatus::Done(Box::new(JobOutput { result, backend_used: backend, wall_s: wall, tag: job.tag.clone() })),
+            ),
+            Err(e) => set_status(sh, id, JobStatus::Failed(e.to_string())),
+        }
+    }
+}
+
+fn set_status(sh: &Shared, id: JobId, s: JobStatus) {
+    sh.status.lock().unwrap().insert(id, s);
+    sh.status_cv.notify_all();
+}
+
+fn run_job(job: &ClusterJob, backend: Backend, router: &Router, cfg: &CoordinatorConfig) -> Result<DpcResult> {
+    match backend {
+        Backend::XlaBruteForce => {
+            let engine = router.xla_engine().expect("router resolved XLA without an engine");
+            let t0 = Instant::now();
+            let out = engine.run(Arc::clone(&job.pts), job.params.d_cut)?;
+            let steps12 = t0.elapsed().as_secs_f64();
+            // Noise handling mirrors the tree engine: noise points get no λ.
+            let dep: Vec<Option<u32>> = out
+                .rho
+                .iter()
+                .zip(&out.dep)
+                .map(|(&r, &d)| if (r as f64) < job.params.rho_min { None } else { d })
+                .collect();
+            let t1 = Instant::now();
+            let link = linkage::single_linkage(&job.pts, &out.rho, &dep, job.params);
+            let linkage_s = t1.elapsed().as_secs_f64();
+            let delta = crate::dpc::dep::dependent_distances(&job.pts, &dep);
+            Ok(DpcResult {
+                rho: out.rho,
+                dep,
+                delta,
+                labels: link.labels,
+                centers: link.centers,
+                num_clusters: link.num_clusters,
+                num_noise: link.num_noise,
+                timings: crate::dpc::StepTimings { density_s: steps12, dep_s: 0.0, linkage_s },
+            })
+        }
+        Backend::TreeExact | Backend::Auto => {
+            let algo: DepAlgo = job.dep_algo.unwrap_or(cfg.dep_algo);
+            Ok(Dpc::new(job.params).dep_algo(algo).run(&job.pts))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::DpcParams;
+    use crate::geom::PointSet;
+    use crate::prng::SplitMix64;
+
+    fn blob_points() -> Arc<PointSet> {
+        let mut rng = SplitMix64::new(91);
+        let mut coords = Vec::new();
+        for c in [(0.0, 0.0), (50.0, 50.0)] {
+            for _ in 0..80 {
+                coords.push(c.0 + rng.normal());
+                coords.push(c.1 + rng.normal());
+            }
+        }
+        Arc::new(PointSet::new(coords, 2))
+    }
+
+    fn tree_only_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let job = ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 })
+            .tag("two-blobs");
+        let out = coord.run_sync(job).unwrap();
+        assert_eq!(out.result.num_clusters, 2);
+        assert_eq!(out.backend_used, Backend::TreeExact);
+        assert_eq!(out.tag, "two-blobs");
+        assert!(coord.metrics.counter("jobs_submitted") == 1);
+        assert!(coord.metrics.counter("jobs_tree") == 1);
+    }
+
+    #[test]
+    fn multiple_jobs_complete() {
+        let mut cfg = tree_only_config();
+        cfg.workers = 2;
+        let coord = Coordinator::start(cfg).unwrap();
+        let pts = blob_points();
+        let ids: Vec<JobId> = (0..6)
+            .map(|i| {
+                coord.submit(
+                    ClusterJob::new(Arc::clone(&pts), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 })
+                        .dep_algo(DepAlgo::ALL[i % 5])
+                        .tag(format!("job{i}")),
+                )
+            })
+            .collect();
+        for id in ids {
+            let out = coord.wait(id).unwrap();
+            assert_eq!(out.result.num_clusters, 2);
+        }
+        assert_eq!(coord.metrics.counter("jobs_submitted"), 6);
+    }
+
+    #[test]
+    fn unknown_job_is_error() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert!(coord.wait(999).is_err());
+    }
+
+    #[test]
+    fn status_transitions_to_done() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let id = coord.submit(ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }));
+        let _ = coord.wait(id);
+        assert!(matches!(coord.status(id), Some(JobStatus::Done(_))));
+    }
+}

@@ -1,0 +1,162 @@
+//! Point-set IO: a simple little-endian binary format (`PCLB`) and CSV.
+//!
+//! Binary layout: magic `PCLB`, u32 version, u64 n, u32 d, then n·d f64
+//! little-endian coordinates. Used to cache generated datasets between
+//! bench runs and to hand points to external tools.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::geom::PointSet;
+
+const MAGIC: &[u8; 4] = b"PCLB";
+const VERSION: u32 = 1;
+
+/// Write a point set in the binary format.
+pub fn write_binary(pts: &PointSet, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(pts.len() as u64).to_le_bytes())?;
+    w.write_all(&(pts.dim() as u32).to_le_bytes())?;
+    for &c in pts.coords() {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a point set in the binary format.
+pub fn read_binary(path: &Path) -> std::io::Result<PointSet> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut u4 = [0u8; 4];
+    r.read_exact(&mut u4)?;
+    let version = u32::from_le_bytes(u4);
+    if version != VERSION {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("unsupported version {version}")));
+    }
+    let mut u8b = [0u8; 8];
+    r.read_exact(&mut u8b)?;
+    let n = u64::from_le_bytes(u8b) as usize;
+    r.read_exact(&mut u4)?;
+    let d = u32::from_le_bytes(u4) as usize;
+    if d == 0 || n.checked_mul(d).is_none() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad header"));
+    }
+    let mut coords = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        r.read_exact(&mut u8b)?;
+        coords.push(f64::from_le_bytes(u8b));
+    }
+    Ok(PointSet::new(coords, d))
+}
+
+/// Write CSV (no header, one point per row).
+pub fn write_csv(pts: &PointSet, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..pts.len() {
+        let row: Vec<String> = pts.point(i).iter().map(|c| format!("{c}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read CSV of floats (rows may not be ragged; `#`-prefixed lines and a
+/// non-numeric first row are skipped as headers/comments).
+pub fn read_csv(path: &Path) -> std::io::Result<PointSet> {
+    let r = BufReader::new(File::open(path)?);
+    let mut coords: Vec<f64> = Vec::new();
+    let mut d: Option<usize> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> = t.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        let vals = match vals {
+            Ok(v) => v,
+            Err(_) if lineno == 0 => continue, // header row
+            Err(e) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1)))
+            }
+        };
+        match d {
+            None => d = Some(vals.len()),
+            Some(dd) if dd != vals.len() => {
+                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("ragged row at line {}", lineno + 1)))
+            }
+            _ => {}
+        }
+        coords.extend(vals);
+    }
+    let d = d.ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"))?;
+    Ok(PointSet::new(coords, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::gen_uniform_points;
+    use crate::prng::SplitMix64;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("parcluster-io-{}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = SplitMix64::new(1);
+        let pts = gen_uniform_points(&mut rng, 500, 3, 10.0);
+        let path = tmpdir().join("rt.pclb");
+        write_binary(&pts, &path).unwrap();
+        let back = read_binary(&path).unwrap();
+        assert_eq!(back.coords(), pts.coords());
+        assert_eq!(back.dim(), 3);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let path = tmpdir().join("garbage.pclb");
+        std::fs::write(&path, b"NOTAPOINTSET").unwrap();
+        assert!(read_binary(&path).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut rng = SplitMix64::new(2);
+        let pts = gen_uniform_points(&mut rng, 100, 2, 5.0);
+        let path = tmpdir().join("rt.csv");
+        write_csv(&pts, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.len(), 100);
+        for i in 0..100 {
+            for k in 0..2 {
+                assert!((back.coord(i, k) - pts.coord(i, k)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_skips_header_and_comments() {
+        let path = tmpdir().join("hdr.csv");
+        std::fs::write(&path, "x,y\n# comment\n1.0,2.0\n3.0,4.0\n").unwrap();
+        let pts = read_csv(&path).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let path = tmpdir().join("ragged.csv");
+        std::fs::write(&path, "1.0,2.0\n3.0\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Datasets: the paper's synthetic generators, surrogate generators for its
+//! real-world datasets, and simple IO.
+//!
+//! The paper evaluates on three synthetic families (`uniform`, `simden`,
+//! `varden` — the latter two are Gan–Tao random-walk cluster generators
+//! [29]) and six real datasets (GeoLife, PAMAP2, Sensor, HT, Query,
+//! Gowalla). The real datasets are not redistributable/downloadable in this
+//! offline environment, so [`surrogate`] provides generators matched to each
+//! dataset's (n, d) and qualitative density profile from Table 2 — see
+//! DESIGN.md §5 for the substitution argument. Sizes default to a scaled-
+//! down n (this container is a single core; the paper used 30).
+
+pub mod synthetic;
+pub mod surrogate;
+pub mod io;
+
+use crate::dpc::DpcParams;
+use crate::geom::PointSet;
+
+/// A named benchmark dataset with its Table-2 hyper-parameters.
+pub struct Dataset {
+    pub name: String,
+    pub pts: PointSet,
+    pub params: DpcParams,
+    /// The paper's original size (for the Table-2 printout).
+    pub paper_n: usize,
+}
+
+/// The nine benchmark datasets of Table 2, at a scale factor (1.0 = the
+/// sizes used by this repo's benches; the paper's original n is recorded in
+/// [`Dataset::paper_n`]).
+pub fn registry(scale: f64) -> Vec<&'static str> {
+    let _ = scale;
+    vec!["uniform", "simden", "varden", "geolife", "pamap2", "sensor", "ht", "query", "gowalla"]
+}
+
+/// Instantiate a benchmark dataset by name. `n` overrides the default
+/// (scaled) size; pass `None` for the default.
+pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
+    let ds = match name {
+        // Synthetic family (Table 2: d=2, d_cut=30, rho_min=0, delta_min=100,
+        // n up to 1e7; default scaled to 1e5). The extent is chosen so that
+        // densities at d_cut=30 are "nonzero but much less than n" (§7.1).
+        "uniform" => {
+            let n = n.unwrap_or(100_000);
+            let extent = 1000.0 * (n as f64 / 1e5).sqrt() * 30.0 / 30.0 * 30.0;
+            Dataset {
+                name: "uniform".into(),
+                pts: synthetic::uniform(n, 2, extent, seed),
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                paper_n: 10_000_000,
+            }
+        }
+        "simden" => {
+            let n = n.unwrap_or(100_000);
+            Dataset {
+                name: "simden".into(),
+                pts: synthetic::simden(n, 2, seed),
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                paper_n: 10_000_000,
+            }
+        }
+        "varden" => {
+            let n = n.unwrap_or(100_000);
+            Dataset {
+                name: "varden".into(),
+                pts: synthetic::varden(n, 2, seed),
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                paper_n: 10_000_000,
+            }
+        }
+        "geolife" => {
+            let n = n.unwrap_or(250_000);
+            Dataset {
+                name: "geolife".into(),
+                pts: surrogate::geolife_like(n, seed),
+                params: DpcParams { d_cut: 1.0, rho_min: 10.0, delta_min: 10.0 },
+                paper_n: 24_876_978,
+            }
+        }
+        "pamap2" => {
+            let n = n.unwrap_or(50_000);
+            Dataset {
+                name: "pamap2".into(),
+                pts: surrogate::pamap2_like(n, seed),
+                params: DpcParams { d_cut: 0.02, rho_min: 20.0, delta_min: 0.2 },
+                paper_n: 259_803,
+            }
+        }
+        _ => return by_name2(name, n, seed),
+    };
+    Some(ds)
+}
+
+fn by_name2(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
+    let ds = match name {
+        "sensor" => {
+            let n = n.unwrap_or(100_000);
+            Dataset {
+                name: "sensor".into(),
+                pts: surrogate::sensor_like(n, seed),
+                params: DpcParams { d_cut: 0.2, rho_min: 5.0, delta_min: 2.0 },
+                paper_n: 3_843_160,
+            }
+        }
+        "ht" => {
+            let n = n.unwrap_or(50_000);
+            Dataset {
+                name: "ht".into(),
+                pts: surrogate::ht_like(n, seed),
+                params: DpcParams { d_cut: 0.5, rho_min: 30.0, delta_min: 10.0 },
+                paper_n: 928_991,
+            }
+        }
+        "query" => {
+            let n = n.unwrap_or(50_000);
+            Dataset {
+                name: "query".into(),
+                pts: surrogate::query_like(n, seed),
+                params: DpcParams { d_cut: 0.01, rho_min: 0.0, delta_min: 0.05 },
+                paper_n: 50_000,
+            }
+        }
+        "gowalla" => {
+            let n = n.unwrap_or(150_000);
+            Dataset {
+                name: "gowalla".into(),
+                pts: surrogate::gowalla_like(n, seed),
+                params: DpcParams { d_cut: 0.03, rho_min: 0.0, delta_min: 40.0 },
+                paper_n: 1_256_248,
+            }
+        }
+        _ => return None,
+    };
+    Some(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_instantiates_all_datasets() {
+        for name in registry(1.0) {
+            let ds = by_name(name, Some(2000), 42).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(ds.pts.len(), 2000, "{name}");
+            assert!(ds.pts.dim() >= 2 && ds.pts.dim() <= 8);
+            assert!(ds.params.d_cut > 0.0);
+            assert!(ds.paper_n >= 50_000);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope", None, 1).is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = by_name("simden", Some(1000), 7).unwrap();
+        let b = by_name("simden", Some(1000), 7).unwrap();
+        assert_eq!(a.pts.coords(), b.pts.coords());
+        let c = by_name("simden", Some(1000), 8).unwrap();
+        assert_ne!(a.pts.coords(), c.pts.coords());
+    }
+}

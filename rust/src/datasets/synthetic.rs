@@ -1,0 +1,119 @@
+//! Synthetic generators: `uniform`, plus reimplementations of Gan & Tao's
+//! random-walk cluster generators [29] — `simden` (clusters of **sim**ilar
+//! **den**sity) and `varden` (**var**ying **den**sity). A cluster is the
+//! trace of a random walk whose step length controls its density; restart
+//! points scatter the clusters over the domain.
+
+use crate::geom::PointSet;
+use crate::prng::SplitMix64;
+
+/// Uniform points in `[0, extent)^d`.
+pub fn uniform(n: usize, d: usize, extent: f64, seed: u64) -> PointSet {
+    let mut rng = SplitMix64::new(seed ^ 0x556E_1F0A); // stream-split
+    let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(0.0, extent)).collect();
+    PointSet::new(coords, d)
+}
+
+/// Shared random-walk engine. Each of `n_clusters` clusters walks
+/// `n / n_clusters` steps with per-cluster step length `step(c)`; each step
+/// displaces uniformly in `[-step, step]^d` and emits one point. Walks start
+/// at uniform restarts in `[0, extent)^d` and reflect off the boundary.
+fn random_walk_clusters<F: Fn(usize) -> f64>(
+    n: usize,
+    d: usize,
+    extent: f64,
+    n_clusters: usize,
+    step_of: F,
+    seed: u64,
+) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    let mut coords = Vec::with_capacity(n * d);
+    let per = n / n_clusters;
+    let mut emitted = 0usize;
+    for c in 0..n_clusters {
+        let step = step_of(c);
+        let mut pos: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, extent)).collect();
+        let count = if c == n_clusters - 1 { n - emitted } else { per };
+        for _ in 0..count {
+            for x in pos.iter_mut() {
+                *x += rng.uniform(-step, step);
+                // Reflect into the domain.
+                if *x < 0.0 {
+                    *x = -*x;
+                }
+                if *x > extent {
+                    *x = 2.0 * extent - *x;
+                }
+            }
+            coords.extend_from_slice(&pos);
+        }
+        emitted += count;
+    }
+    PointSet::new(coords, d)
+}
+
+/// `simden`: 10 clusters of similar density (equal step length). The extent
+/// scales with √n so the per-point density at the paper's d_cut = 30 stays
+/// roughly constant as n grows (matching how the paper's densities remain
+/// "nonzero but ≪ n" across its 10³..10⁷ sweep).
+pub fn simden(n: usize, d: usize, seed: u64) -> PointSet {
+    let extent = 30_000.0 * (n as f64 / 1e5).powf(1.0 / d as f64);
+    random_walk_clusters(n, d, extent, 10, |_| 15.0, seed ^ 0x51D3)
+}
+
+/// `varden`: 10 clusters whose step lengths span ~2 orders of magnitude, so
+/// cluster densities vary widely (the distribution on which the paper's
+/// approximate baseline collapses).
+pub fn varden(n: usize, d: usize, seed: u64) -> PointSet {
+    let extent = 30_000.0 * (n as f64 / 1e5).powf(1.0 / d as f64);
+    random_walk_clusters(n, d, extent, 10, |c| 2.0 * 1.8f64.powi(c as i32), seed ^ 0xFAde_0000u64 ^ 0xBDE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::{compute_density, DensityAlgo};
+
+    #[test]
+    fn sizes_and_dims() {
+        for f in [uniform2 as fn(usize, u64) -> PointSet] {
+            let p = f(1000, 1);
+            assert_eq!(p.len(), 1000);
+        }
+        assert_eq!(simden(997, 2, 3).len(), 997); // non-divisible n
+        assert_eq!(varden(1003, 3, 3).dim(), 3);
+    }
+
+    fn uniform2(n: usize, seed: u64) -> PointSet {
+        uniform(n, 2, 100.0, seed)
+    }
+
+    #[test]
+    fn simden_clusters_have_similar_density() {
+        let pts = simden(10_000, 2, 5);
+        let rho = compute_density(&pts, 30.0, DensityAlgo::TreePruned);
+        // Compare mean density of first vs last cluster (1000 points each).
+        let m1: f64 = rho[..1000].iter().map(|&r| r as f64).sum::<f64>() / 1000.0;
+        let m2: f64 = rho[9000..].iter().map(|&r| r as f64).sum::<f64>() / 1000.0;
+        assert!(m1 > 1.0 && m2 > 1.0);
+        let ratio = m1.max(m2) / m1.min(m2);
+        assert!(ratio < 3.0, "similar-density clusters, ratio={ratio}");
+    }
+
+    #[test]
+    fn varden_clusters_have_varying_density() {
+        let pts = varden(10_000, 2, 5);
+        let rho = compute_density(&pts, 30.0, DensityAlgo::TreePruned);
+        let m_dense: f64 = rho[..1000].iter().map(|&r| r as f64).sum::<f64>() / 1000.0;
+        let m_sparse: f64 = rho[9000..].iter().map(|&r| r as f64).sum::<f64>() / 1000.0;
+        let ratio = m_dense / m_sparse.max(1e-9);
+        assert!(ratio > 10.0, "varying density expected, ratio={ratio}");
+    }
+
+    #[test]
+    fn walk_points_stay_in_domain() {
+        let pts = simden(5000, 2, 9);
+        let bb = pts.bbox();
+        assert!(bb.min().iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,164 @@
+//! Decision graph support (Rodriguez & Laio [57]): the (ρ, δ) scatter used
+//! to pick `ρ_min` / `δ_min` by eye. Cluster centers are the points with
+//! anomalously large δ at non-trivial ρ; DPC's robustness to
+//! hyper-parameters comes from this plot being easy to threshold.
+
+use std::io::Write;
+
+use crate::dpc::DpcResult;
+
+/// One decision-graph point.
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionPoint {
+    pub id: u32,
+    pub rho: u32,
+    pub delta: f64,
+}
+
+/// Extract the decision graph, sorted by descending γ = ρ·δ (the usual
+/// center-scoring heuristic; ∞ deltas sort first by ρ).
+pub fn decision_graph(result: &DpcResult) -> Vec<DecisionPoint> {
+    let mut pts: Vec<DecisionPoint> = (0..result.rho.len())
+        .map(|i| DecisionPoint { id: i as u32, rho: result.rho[i], delta: result.delta[i] })
+        .collect();
+    pts.sort_by(|a, b| {
+        let ka = score(a);
+        let kb = score(b);
+        kb.partial_cmp(&ka).unwrap().then(a.id.cmp(&b.id))
+    });
+    pts
+}
+
+fn score(p: &DecisionPoint) -> f64 {
+    if p.delta.is_infinite() {
+        f64::MAX
+    } else {
+        p.rho as f64 * p.delta
+    }
+}
+
+/// Suggest (ρ_min, δ_min) for a target number of clusters `k`: pick the k-th
+/// largest δ gap among the top candidates.
+pub fn suggest_params(graph: &[DecisionPoint], k: usize) -> (f64, f64) {
+    assert!(k >= 1 && k <= graph.len());
+    // δ_min: halfway (log-scale) between the k-th and (k+1)-th candidate δ.
+    let dk = finite(graph[k - 1].delta, graph);
+    let dn = if k < graph.len() { finite(graph[k].delta, graph) } else { 0.0 };
+    let delta_min = if dn > 0.0 { (dk * dn).sqrt() } else { dk * 0.5 };
+    (0.0, delta_min)
+}
+
+fn finite(d: f64, graph: &[DecisionPoint]) -> f64 {
+    if d.is_finite() {
+        d
+    } else {
+        // ∞ (the global peak): substitute the largest finite δ times 2.
+        graph.iter().map(|p| p.delta).filter(|d| d.is_finite()).fold(0.0, f64::max) * 2.0
+    }
+}
+
+/// Write the decision graph as CSV (`id,rho,delta`).
+pub fn write_csv<W: Write>(graph: &[DecisionPoint], mut w: W) -> std::io::Result<()> {
+    writeln!(w, "id,rho,delta")?;
+    for p in graph {
+        writeln!(w, "{},{},{}", p.id, p.rho, p.delta)?;
+    }
+    Ok(())
+}
+
+/// Render a coarse ASCII scatter of the decision graph (rows = δ buckets,
+/// cols = ρ buckets) for terminal inspection.
+pub fn ascii_plot(graph: &[DecisionPoint], width: usize, height: usize) -> String {
+    let max_rho = graph.iter().map(|p| p.rho).max().unwrap_or(1).max(1) as f64;
+    let max_delta = graph.iter().map(|p| finite(p.delta, graph)).fold(0.0, f64::max).max(1e-12);
+    let mut cells = vec![vec![0u32; width]; height];
+    for p in graph {
+        let x = ((p.rho as f64 / max_rho) * (width - 1) as f64).round() as usize;
+        let y = ((finite(p.delta, graph) / max_delta) * (height - 1) as f64).round() as usize;
+        cells[height - 1 - y][x] += 1;
+    }
+    let mut out = String::new();
+    out.push_str(&format!("delta (max {max_delta:.3})\n"));
+    for row in &cells {
+        out.push('|');
+        for &c in row {
+            out.push(match c {
+                0 => ' ',
+                1 => '.',
+                2..=4 => 'o',
+                5..=16 => 'O',
+                _ => '@',
+            });
+        }
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push_str(&format!("> rho (max {max_rho})\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::{Dpc, DpcParams};
+    use crate::geom::PointSet;
+    use crate::prng::SplitMix64;
+
+    fn blobs() -> PointSet {
+        let mut rng = SplitMix64::new(81);
+        let mut coords = Vec::new();
+        for c in [(0.0, 0.0), (50.0, 0.0), (0.0, 50.0)] {
+            for _ in 0..100 {
+                coords.push(c.0 + rng.normal());
+                coords.push(c.1 + rng.normal());
+            }
+        }
+        PointSet::new(coords, 2)
+    }
+
+    #[test]
+    fn top_decision_points_are_the_blob_centers() {
+        let pts = blobs();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let graph = decision_graph(&out);
+        // Top 3 by ρ·δ should each come from a different blob.
+        let blob_of = |id: u32| (id / 100) as usize;
+        let blobs: std::collections::HashSet<usize> = graph[..3].iter().map(|p| blob_of(p.id)).collect();
+        assert_eq!(blobs.len(), 3, "top-3: {:?}", &graph[..3]);
+        // And there's a big δ gap after rank 3.
+        assert!(finite(graph[2].delta, &graph) > 5.0 * graph[3].delta);
+    }
+
+    #[test]
+    fn suggested_delta_separates_k_clusters() {
+        let pts = blobs();
+        let params0 = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 1.0 };
+        let out = Dpc::new(params0).run(&pts);
+        let graph = decision_graph(&out);
+        let (rho_min, delta_min) = suggest_params(&graph, 3);
+        let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts);
+        assert_eq!(out2.num_clusters, 3);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let pts = blobs();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let graph = decision_graph(&out);
+        let mut buf = Vec::new();
+        write_csv(&graph, &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.lines().count(), pts.len() + 1);
+        assert!(s.starts_with("id,rho,delta"));
+    }
+
+    #[test]
+    fn ascii_plot_is_well_formed() {
+        let pts = blobs();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let graph = decision_graph(&out);
+        let plot = ascii_plot(&graph, 40, 10);
+        assert_eq!(plot.lines().count(), 12); // header + 10 rows + axis
+    }
+}

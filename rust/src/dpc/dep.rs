@@ -1,0 +1,225 @@
+//! Step 2 — dependent point finding, five exact algorithms.
+//!
+//! All variants compute, for every non-noise point `x_i`, the nearest
+//! neighbor among points with strictly higher priority (density with the
+//! lexicographic id tiebreak, [`super::priority_key`]); distance ties are
+//! broken by smaller id. Noise points (ρ < ρ_min) are skipped (their λ is
+//! `None`), matching Algorithm 1 line 3 / Algorithm 2 line 14.
+//!
+//! Note a subtlety the paper relies on: the dependent point of a *non-noise*
+//! point is always itself non-noise (it has strictly higher density), so
+//! skipping noise queries never breaks the dependency forest of Step 3.
+
+use crate::dpc::priority_key;
+use crate::fenwick::FenwickDep;
+use crate::geom::PointSet;
+use crate::kdtree::incomplete::IncompleteKdTree;
+use crate::kdtree::incremental::IncrementalKdTree;
+use crate::kdtree::{KdTree, NoStats};
+use crate::parlay;
+use crate::pskd::PriorityKdTree;
+
+use super::DepAlgo;
+
+/// Dispatch to the chosen algorithm. Returns `dep[i] = Some(λ(x_i))`, or
+/// `None` for noise points and the global priority peak.
+pub fn compute_dependents(pts: &PointSet, rho: &[u32], rho_min: f64, algo: DepAlgo) -> Vec<Option<u32>> {
+    match algo {
+        DepAlgo::Naive => dep_naive(pts, rho, rho_min),
+        DepAlgo::ExactBaseline => dep_exact_baseline(pts, rho, rho_min),
+        DepAlgo::Incomplete => dep_incomplete(pts, rho, rho_min),
+        DepAlgo::Priority => dep_priority(pts, rho, rho_min),
+        DepAlgo::Fenwick => dep_fenwick(pts, rho, rho_min),
+    }
+}
+
+/// δ(x_i) = D(x_i, λ(x_i)); ∞ where λ is undefined (Definition 3).
+pub fn dependent_distances(pts: &PointSet, dep: &[Option<u32>]) -> Vec<f64> {
+    parlay::par_map(dep.len(), |i| match dep[i] {
+        Some(j) => pts.dist_sq(i, j as usize).sqrt(),
+        None => f64::INFINITY,
+    })
+}
+
+fn gammas(rho: &[u32]) -> Vec<u64> {
+    rho.iter().enumerate().map(|(i, &r)| priority_key(r, i as u32)).collect()
+}
+
+/// Θ(n²) all-pairs scan ("Original DPC" row of Table 1): parallel over
+/// queries, O(1) span each.
+pub fn dep_naive(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+    let n = pts.len();
+    let gamma = gammas(rho);
+    parlay::par_map(n, |i| {
+        if (rho[i] as f64) < rho_min {
+            return None;
+        }
+        let gi = gamma[i];
+        let q = pts.point(i);
+        let mut best: Option<(u32, f64)> = None;
+        for j in 0..n {
+            if gamma[j] <= gi {
+                continue;
+            }
+            let ds = pts.dist_sq_to(j, q);
+            match best {
+                Some((bj, bd)) if ds > bd || (ds == bd && j as u32 > bj) => {}
+                _ => best = Some((j as u32, ds)),
+            }
+        }
+        best.map(|(j, _)| j)
+    })
+}
+
+/// Ids sorted by descending priority.
+fn desc_priority_order(gamma: &[u64]) -> Vec<u32> {
+    let mut items: Vec<(u64, u32)> = gamma.iter().enumerate().map(|(i, &g)| (!g, i as u32)).collect();
+    parlay::par_radix_sort_u64(&mut items);
+    items.into_iter().map(|(_, id)| id).collect()
+}
+
+/// DPC-EXACT-BASELINE (Amagata–Hara [3]): points inserted into an
+/// *incremental* kd-tree in descending priority order; each point queries its
+/// NN among previously-inserted (= higher priority) points, **sequentially**.
+pub fn dep_exact_baseline(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+    let gamma = gammas(rho);
+    let order = desc_priority_order(&gamma);
+    let mut tree = IncrementalKdTree::new(pts);
+    let mut dep = vec![None; pts.len()];
+    for &p in &order {
+        if (rho[p as usize] as f64) >= rho_min && !tree.is_empty() {
+            dep[p as usize] = tree.nn(pts.point(p as usize), p, &mut NoStats).map(|(j, _)| j);
+        }
+        tree.insert(p);
+    }
+    dep
+}
+
+/// DPC-INCOMPLETE (§4.1): same sequential loop, but over a balanced
+/// *incomplete* kd-tree — activation replaces insertion, queries prune
+/// inactive subtrees. Faster per query; still O(n log n) span overall.
+pub fn dep_incomplete(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+    let gamma = gammas(rho);
+    let order = desc_priority_order(&gamma);
+    let tree = KdTree::build_with_maps(pts);
+    let inc = IncompleteKdTree::new(&tree);
+    let mut dep = vec![None; pts.len()];
+    let mut first = true;
+    for &p in &order {
+        if !first && (rho[p as usize] as f64) >= rho_min {
+            dep[p as usize] = inc.nn(pts.point(p as usize), p, &mut NoStats).map(|(j, _)| j);
+        }
+        inc.activate(p);
+        first = false;
+    }
+    dep
+}
+
+/// DPC-PRIORITY (§4.3, Algorithm 1): build a priority search kd-tree once,
+/// then one fully-parallel priority-NN query per non-noise point.
+pub fn dep_priority(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+    let gamma = gammas(rho);
+    let tree = PriorityKdTree::build(pts, &gamma);
+    parlay::par_map(pts.len(), |i| {
+        if (rho[i] as f64) < rho_min {
+            return None;
+        }
+        tree.priority_nn(pts.point(i), gamma[i], &mut NoStats).map(|(j, _)| j)
+    })
+}
+
+/// DPC-FENWICK (§5, Algorithm 2): Fenwick decomposition over the descending
+/// density order, one kd-tree per block, fully-parallel queries.
+pub fn dep_fenwick(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+    let gamma = gammas(rho);
+    let fen = FenwickDep::build(pts, &gamma);
+    parlay::par_map(pts.len(), |i| {
+        if (rho[i] as f64) < rho_min {
+            return None;
+        }
+        fen.query(i as u32, &mut NoStats).map(|(j, _)| j)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::{compute_density, DensityAlgo};
+    use crate::proputil::{gen_clustered_points, gen_degenerate_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+
+    fn check_all_agree(pts: &PointSet, d_cut: f64, rho_min: f64) {
+        let rho = compute_density(pts, d_cut, DensityAlgo::TreePruned);
+        let reference = dep_naive(pts, &rho, rho_min);
+        for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
+            let got = compute_dependents(pts, &rho, rho_min, algo);
+            assert_eq!(got, reference, "{algo:?} disagrees with naive");
+        }
+    }
+
+    #[test]
+    fn all_algos_agree_uniform() {
+        let mut rng = SplitMix64::new(51);
+        let pts = gen_uniform_points(&mut rng, 600, 2, 50.0);
+        check_all_agree(&pts, 4.0, 0.0);
+    }
+
+    #[test]
+    fn all_algos_agree_clustered_3d() {
+        let mut rng = SplitMix64::new(52);
+        let pts = gen_clustered_points(&mut rng, 500, 3, 5, 60.0, 2.0);
+        check_all_agree(&pts, 3.0, 0.0);
+    }
+
+    #[test]
+    fn all_algos_agree_with_noise_threshold() {
+        let mut rng = SplitMix64::new(53);
+        let pts = gen_uniform_points(&mut rng, 400, 2, 80.0);
+        check_all_agree(&pts, 5.0, 3.0);
+    }
+
+    #[test]
+    fn all_algos_agree_degenerate_ties() {
+        let mut rng = SplitMix64::new(54);
+        // Heavy duplicates => massive density ties => stresses the
+        // lexicographic tiebreak path in every algorithm.
+        let pts = gen_degenerate_points(&mut rng, 150, 2);
+        check_all_agree(&pts, 2.0, 0.0);
+    }
+
+    #[test]
+    fn exactly_one_peak_has_no_dependent() {
+        let mut rng = SplitMix64::new(55);
+        let pts = gen_uniform_points(&mut rng, 300, 2, 30.0);
+        let rho = compute_density(&pts, 4.0, DensityAlgo::TreePruned);
+        let dep = dep_priority(&pts, &rho, 0.0);
+        let peaks = dep.iter().filter(|d| d.is_none()).count();
+        assert_eq!(peaks, 1);
+    }
+
+    #[test]
+    fn dependent_has_strictly_higher_priority() {
+        let mut rng = SplitMix64::new(56);
+        let pts = gen_clustered_points(&mut rng, 400, 2, 3, 40.0, 2.0);
+        let rho = compute_density(&pts, 3.0, DensityAlgo::TreePruned);
+        let dep = dep_fenwick(&pts, &rho, 0.0);
+        for (i, d) in dep.iter().enumerate() {
+            if let Some(j) = d {
+                assert!(
+                    priority_key(rho[*j as usize], *j) > priority_key(rho[i], i as u32),
+                    "dep of {i} must have higher priority"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dependent_distances_match_deps() {
+        let pts = PointSet::new(vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0], 2);
+        let dep = vec![Some(1), None, Some(0)];
+        let delta = dependent_distances(&pts, &dep);
+        assert_eq!(delta[0], 1.0);
+        assert!(delta[1].is_infinite());
+        assert_eq!(delta[2], 2.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Step 3 — single-linkage clustering via lock-free union-find
+//! (§6.2, Algorithm 3).
+//!
+//! Every non-noise point that is *not* a cluster center (δ < δ_min) is
+//! unioned with its dependent point, in parallel. Because each point has at
+//! most one outgoing dependency edge and centers contribute none, each
+//! resulting component is a tree containing exactly one center — the
+//! component's cluster. Noise points (ρ < ρ_min) are left out of the forest
+//! entirely and labeled −1.
+
+use crate::dpc::{DpcParams, dep::dependent_distances};
+use crate::geom::PointSet;
+use crate::parlay;
+use crate::unionfind::ConcurrentUnionFind;
+
+pub struct LinkageOutput {
+    /// Cluster label per point: the *center's point id*, or −1 for noise.
+    pub labels: Vec<i64>,
+    pub centers: Vec<u32>,
+    pub num_clusters: usize,
+    pub num_noise: usize,
+}
+
+/// Algorithm 3 (with the noise handling of Definitions 4-5 made explicit).
+pub fn single_linkage(pts: &PointSet, rho: &[u32], dep: &[Option<u32>], params: DpcParams) -> LinkageOutput {
+    let n = pts.len();
+    let delta = dependent_distances(pts, dep);
+    let is_noise: Vec<bool> = parlay::par_map(n, |i| (rho[i] as f64) < params.rho_min);
+    // Center: non-noise with δ ≥ δ_min (the global peak has δ = ∞).
+    let is_center: Vec<bool> = parlay::par_map(n, |i| !is_noise[i] && delta[i] >= params.delta_min);
+
+    let uf = ConcurrentUnionFind::new(n);
+    parlay::par_for(n, |i| {
+        if !is_noise[i] && !is_center[i] {
+            if let Some(j) = dep[i] {
+                uf.union(i as u32, j);
+            }
+        }
+    });
+
+    // Each component contains exactly one center; label every member with
+    // the center's id.
+    let roots = uf.labels();
+    let mut center_of_root: Vec<i64> = vec![-1; n];
+    for i in 0..n {
+        if is_center[i] {
+            debug_assert_eq!(center_of_root[roots[i] as usize], -1, "two centers in one component");
+            center_of_root[roots[i] as usize] = i as i64;
+        }
+    }
+    let labels: Vec<i64> = parlay::par_map(n, |i| {
+        if is_noise[i] {
+            -1
+        } else {
+            center_of_root[roots[i] as usize]
+        }
+    });
+    let centers: Vec<u32> = parlay::par_filter(n, |i| is_center[i], |i| i as u32);
+    let num_noise = is_noise.iter().filter(|&&b| b).count();
+    LinkageOutput { num_clusters: centers.len(), centers, labels, num_noise }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::{compute_density, dep::compute_dependents, DensityAlgo, DepAlgo};
+    use crate::proputil::gen_clustered_points;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn every_non_noise_point_labeled_with_a_center() {
+        let mut rng = SplitMix64::new(61);
+        let pts = gen_clustered_points(&mut rng, 500, 2, 4, 200.0, 2.0);
+        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 30.0 };
+        let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
+        let dep = compute_dependents(&pts, &rho, params.rho_min, DepAlgo::Priority);
+        let out = single_linkage(&pts, &rho, &dep, params);
+        let centers: std::collections::HashSet<i64> = out.centers.iter().map(|&c| c as i64).collect();
+        for i in 0..pts.len() {
+            if out.labels[i] == -1 {
+                assert!((rho[i] as f64) < params.rho_min);
+            } else {
+                assert!(centers.contains(&out.labels[i]), "point {i} labeled with non-center");
+            }
+        }
+        // Every center is labeled with itself.
+        for &c in &out.centers {
+            assert_eq!(out.labels[c as usize], c as i64);
+        }
+    }
+
+    #[test]
+    fn delta_min_infinity_means_every_point_is_own_cluster_or_peakless() {
+        // With δ_min = ∞ only the global peak(s) are centers.
+        let mut rng = SplitMix64::new(62);
+        let pts = gen_clustered_points(&mut rng, 200, 2, 2, 100.0, 2.0);
+        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: f64::INFINITY };
+        let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
+        let dep = compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
+        let out = single_linkage(&pts, &rho, &dep, params);
+        assert_eq!(out.num_clusters, 1); // only the peak has δ = ∞
+        assert_eq!(out.num_noise, 0);
+        let l = out.labels[out.centers[0] as usize];
+        assert!(out.labels.iter().all(|&x| x == l));
+    }
+
+    #[test]
+    fn delta_min_zero_means_every_point_is_a_center() {
+        let mut rng = SplitMix64::new(63);
+        let pts = gen_clustered_points(&mut rng, 100, 2, 2, 50.0, 2.0);
+        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: 0.0 };
+        let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
+        let dep = compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
+        let out = single_linkage(&pts, &rho, &dep, params);
+        assert_eq!(out.num_clusters, 100);
+        for (i, &l) in out.labels.iter().enumerate() {
+            assert_eq!(l, i as i64);
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! Density Peaks Clustering: the paper's three-step pipeline.
+//!
+//! 1. **Density** (§6.1): ρ(x) = #points within `d_cut` of x — parallel
+//!    kd-tree range counts with the subtree-count pruning optimization.
+//! 2. **Dependent points** (§4, §5): λ(x) = nearest strictly-higher-priority
+//!    neighbor, where priority = (ρ, lexicographic id tiebreak). Five
+//!    interchangeable algorithms, all *exact* (see [`DepAlgo`]).
+//! 3. **Single-linkage cut** (§6.2): union every non-noise non-center point
+//!    with its dependent point via lock-free union-find; components =
+//!    clusters, ρ < ρ_min = noise.
+//!
+//! All five Step-2 algorithms produce byte-identical (λ, δ) arrays (this is
+//! an invariant under property test — exactness is the paper's headline
+//! claim vs. approximate DPC).
+
+pub mod dep;
+pub mod linkage;
+pub mod approx;
+pub mod decision;
+
+use std::time::Instant;
+
+use crate::geom::PointSet;
+use crate::kdtree::{KdTree, NoStats};
+use crate::parlay;
+
+/// DPC hyper-parameters (Table 2 of the paper lists per-dataset choices).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpcParams {
+    /// Density radius (ρ(x) counts points with D(x,·) ≤ d_cut).
+    pub d_cut: f64,
+    /// Noise threshold: ρ < ρ_min ⇒ noise point (Definition 4).
+    pub rho_min: f64,
+    /// Cluster-center threshold: δ ≥ δ_min ⇒ center (Definition 5).
+    pub delta_min: f64,
+}
+
+impl Default for DpcParams {
+    fn default() -> Self {
+        DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::INFINITY }
+    }
+}
+
+/// Dependent-point-finding algorithm (Step 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DepAlgo {
+    /// Θ(n²) all-pairs scan (the "Original DPC" of Table 1).
+    Naive,
+    /// Amagata–Hara's incremental kd-tree with a sequential insert loop
+    /// (DPC-EXACT-BASELINE).
+    ExactBaseline,
+    /// §4.1 incomplete kd-tree, sequential activation loop (DPC-INCOMPLETE).
+    Incomplete,
+    /// §4.3 priority search kd-tree, fully parallel (DPC-PRIORITY).
+    Priority,
+    /// §5 Fenwick tree of kd-trees, fully parallel (DPC-FENWICK).
+    Fenwick,
+}
+
+impl DepAlgo {
+    pub const ALL: [DepAlgo; 5] =
+        [DepAlgo::Naive, DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DepAlgo::Naive => "naive",
+            DepAlgo::ExactBaseline => "exact-baseline",
+            DepAlgo::Incomplete => "incomplete",
+            DepAlgo::Priority => "priority",
+            DepAlgo::Fenwick => "fenwick",
+        }
+    }
+}
+
+/// Density-computation variant (Step 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DensityAlgo {
+    /// kd-tree range count **with** §6.1 subtree-count pruning (ours).
+    TreePruned,
+    /// Arena kd-tree range count without the containment shortcut (ablation:
+    /// isolates the §6.1 pruning effect from the allocation/layout effect).
+    TreeNoPrune,
+    /// DPC-EXACT-BASELINE's density step: pointer-based kd-tree with
+    /// individually heap-allocated nodes (built by randomized insertion),
+    /// no containment pruning — models Amagata–Hara's implementation,
+    /// whose dynamic allocation the paper calls out as a cache liability
+    /// (§7.2).
+    BaselineIncremental,
+    /// Θ(n²) all-pairs (the "Original DPC" of Table 1).
+    Naive,
+}
+
+impl DensityAlgo {
+    pub const ALL: [DensityAlgo; 4] =
+        [DensityAlgo::TreePruned, DensityAlgo::TreeNoPrune, DensityAlgo::BaselineIncremental, DensityAlgo::Naive];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DensityAlgo::TreePruned => "tree-pruned",
+            DensityAlgo::TreeNoPrune => "tree-noprune",
+            DensityAlgo::BaselineIncremental => "baseline-incremental",
+            DensityAlgo::Naive => "naive",
+        }
+    }
+}
+
+/// The priority key: density-major, then *smaller id wins* ties
+/// (Definition 2's lexicographic tiebreak). Unique per point.
+#[inline]
+pub fn priority_key(rho: u32, id: u32) -> u64 {
+    ((rho as u64) << 32) | (u32::MAX - id) as u64
+}
+
+/// Per-step wall-clock timings (seconds) — the rows of Table 3.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimings {
+    pub density_s: f64,
+    pub dep_s: f64,
+    pub linkage_s: f64,
+}
+
+impl StepTimings {
+    pub fn total_s(&self) -> f64 {
+        self.density_s + self.dep_s + self.linkage_s
+    }
+}
+
+/// Full clustering output.
+#[derive(Clone, Debug)]
+pub struct DpcResult {
+    /// ρ(x_i): #points within d_cut (self-inclusive).
+    pub rho: Vec<u32>,
+    /// λ(x_i): dependent point id; `None` for noise points and the global
+    /// density peak.
+    pub dep: Vec<Option<u32>>,
+    /// δ(x_i): dependent distance; ∞ for the peak, NaN-free.
+    pub delta: Vec<f64>,
+    /// Cluster label per point (−1 = noise). Labels are center point ids.
+    pub labels: Vec<i64>,
+    /// Cluster-center point ids.
+    pub centers: Vec<u32>,
+    pub num_clusters: usize,
+    pub num_noise: usize,
+    pub timings: StepTimings,
+}
+
+/// DPC pipeline runner (builder-style).
+#[derive(Clone, Debug)]
+pub struct Dpc {
+    params: DpcParams,
+    dep_algo: DepAlgo,
+    density_algo: DensityAlgo,
+}
+
+impl Dpc {
+    pub fn new(params: DpcParams) -> Self {
+        Dpc { params, dep_algo: DepAlgo::Priority, density_algo: DensityAlgo::TreePruned }
+    }
+
+    pub fn dep_algo(mut self, a: DepAlgo) -> Self {
+        self.dep_algo = a;
+        self
+    }
+
+    pub fn density_algo(mut self, a: DensityAlgo) -> Self {
+        self.density_algo = a;
+        self
+    }
+
+    pub fn params(&self) -> DpcParams {
+        self.params
+    }
+
+    /// Run the full three-step pipeline.
+    pub fn run(&self, pts: &PointSet) -> DpcResult {
+        assert!(!pts.is_empty(), "cannot cluster an empty point set");
+        let mut timings = StepTimings::default();
+
+        // Step 1: density.
+        let t0 = Instant::now();
+        let rho = compute_density(pts, self.params.d_cut, self.density_algo);
+        timings.density_s = t0.elapsed().as_secs_f64();
+
+        // Step 2: dependent points.
+        let t1 = Instant::now();
+        let dep = dep::compute_dependents(pts, &rho, self.params.rho_min, self.dep_algo);
+        timings.dep_s = t1.elapsed().as_secs_f64();
+
+        // Step 3: single-linkage cut.
+        let t2 = Instant::now();
+        let link = linkage::single_linkage(pts, &rho, &dep, self.params);
+        timings.linkage_s = t2.elapsed().as_secs_f64();
+
+        let delta = dep::dependent_distances(pts, &dep);
+        DpcResult {
+            rho,
+            dep,
+            delta,
+            labels: link.labels,
+            centers: link.centers,
+            num_clusters: link.num_clusters,
+            num_noise: link.num_noise,
+            timings,
+        }
+    }
+}
+
+/// Step 1: ρ for every point.
+pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32> {
+    let r_sq = d_cut * d_cut;
+    match algo {
+        DensityAlgo::Naive => {
+            let n = pts.len();
+            parlay::par_map(n, |i| {
+                let q = pts.point(i);
+                let mut c = 0u32;
+                for j in 0..n {
+                    if pts.dist_sq_to(j, q) <= r_sq {
+                        c += 1;
+                    }
+                }
+                c
+            })
+        }
+        DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune => {
+            let tree = KdTree::build(pts);
+            let prune = algo == DensityAlgo::TreePruned;
+            parlay::par_map(pts.len(), |i| {
+                let q = pts.point(i);
+                let c = if prune {
+                    tree.range_count(q, r_sq, &mut NoStats)
+                } else {
+                    tree.range_count_noprune(q, r_sq, &mut NoStats)
+                };
+                c as u32
+            })
+        }
+        DensityAlgo::BaselineIncremental => {
+            // Randomized insertion order gives expected O(log n) depth —
+            // modeling the baseline's bulk-built but pointer-based tree.
+            let mut order: Vec<u32> = (0..pts.len() as u32).collect();
+            let mut rng = crate::prng::SplitMix64::new(0xBA5E_11E5);
+            rng.shuffle(&mut order);
+            let mut tree = crate::kdtree::incremental::IncrementalKdTree::new(pts);
+            for &p in &order {
+                tree.insert(p);
+            }
+            parlay::par_map(pts.len(), |i| tree.range_count(pts.point(i), r_sq, &mut NoStats) as u32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{gen_clustered_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn priority_key_orders_by_density_then_smaller_id() {
+        // Higher density wins.
+        assert!(priority_key(5, 100) > priority_key(4, 0));
+        // Equal density: smaller id has higher priority.
+        assert!(priority_key(5, 3) > priority_key(5, 4));
+        // Unique.
+        assert_ne!(priority_key(5, 3), priority_key(5, 4));
+    }
+
+    #[test]
+    fn density_variants_agree() {
+        let mut rng = SplitMix64::new(41);
+        let pts = gen_uniform_points(&mut rng, 800, 2, 50.0);
+        let a = compute_density(&pts, 5.0, DensityAlgo::Naive);
+        for algo in [DensityAlgo::TreePruned, DensityAlgo::TreeNoPrune, DensityAlgo::BaselineIncremental] {
+            assert_eq!(a, compute_density(&pts, 5.0, algo), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn density_is_self_inclusive() {
+        let pts = PointSet::new(vec![0.0, 0.0, 10.0, 10.0], 2);
+        let rho = compute_density(&pts, 1.0, DensityAlgo::TreePruned);
+        assert_eq!(rho, vec![1, 1]);
+    }
+
+    #[test]
+    fn pipeline_separates_two_blobs() {
+        let mut rng = SplitMix64::new(42);
+        // Two well-separated tight blobs.
+        let mut coords = Vec::new();
+        for _ in 0..100 {
+            coords.push(rng.uniform(0.0, 5.0));
+            coords.push(rng.uniform(0.0, 5.0));
+        }
+        for _ in 0..100 {
+            coords.push(rng.uniform(100.0, 105.0));
+            coords.push(rng.uniform(100.0, 105.0));
+        }
+        let pts = PointSet::new(coords, 2);
+        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 };
+        for algo in DepAlgo::ALL {
+            let out = Dpc::new(params).dep_algo(algo).run(&pts);
+            assert_eq!(out.num_clusters, 2, "algo {algo:?}");
+            assert_eq!(out.num_noise, 0);
+            // All points in each blob share one label.
+            let l0 = out.labels[0];
+            assert!(out.labels[..100].iter().all(|&l| l == l0));
+            let l1 = out.labels[100];
+            assert!(out.labels[100..].iter().all(|&l| l == l1));
+            assert_ne!(l0, l1);
+        }
+    }
+
+    #[test]
+    fn all_dep_algos_identical_results() {
+        let mut rng = SplitMix64::new(43);
+        let pts = gen_clustered_points(&mut rng, 500, 2, 4, 100.0, 3.0);
+        let params = DpcParams { d_cut: 5.0, rho_min: 2.0, delta_min: 10.0 };
+        let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+        for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
+            let out = Dpc::new(params).dep_algo(algo).run(&pts);
+            assert_eq!(out.rho, reference.rho, "{algo:?} rho");
+            assert_eq!(out.dep, reference.dep, "{algo:?} dep");
+            assert_eq!(out.labels, reference.labels, "{algo:?} labels");
+        }
+    }
+
+    #[test]
+    fn noise_points_are_labeled_minus_one() {
+        let mut rng = SplitMix64::new(44);
+        // Dense blob + isolated far-away stragglers.
+        let mut coords = Vec::new();
+        for _ in 0..200 {
+            coords.push(rng.uniform(0.0, 5.0));
+            coords.push(rng.uniform(0.0, 5.0));
+        }
+        for i in 0..5 {
+            coords.push(1000.0 + 50.0 * i as f64);
+            coords.push(1000.0);
+        }
+        let pts = PointSet::new(coords, 2);
+        let params = DpcParams { d_cut: 3.0, rho_min: 5.0, delta_min: 100.0 };
+        let out = Dpc::new(params).run(&pts);
+        assert_eq!(out.num_noise, 5);
+        for i in 200..205 {
+            assert_eq!(out.labels[i], -1);
+            assert_eq!(out.dep[i], None);
+        }
+        assert!(out.num_clusters >= 1);
+    }
+}

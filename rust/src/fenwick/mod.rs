@@ -1,0 +1,231 @@
+//! Fenwick-tree-of-kd-trees dependent point finding (§5, Algorithm 2).
+//!
+//! Points are sorted by **descending** priority (density with id tiebreak)
+//! into `P̄`. A Fenwick (binary indexed) decomposition covers `[1, n]` with
+//! blocks `B[i] = [i - LSB(i) + 1, i]` (1-based), and one kd-tree is built
+//! per block (parallel across blocks, `Σ|B[i]| = O(n log n)` total points).
+//! The dependent point of the rank-`r` point is the NN over the prefix
+//! `[1, r-1]`, which the Fenwick structure splits into `O(log n)` blocks
+//! `S[r-1]`; the query runs a kd-tree NN in each and keeps the minimum
+//! `(dist, id)`.
+//!
+//! Compared to the priority search kd-tree this does more work
+//! (O(n log² n) average) but its average-case analysis only assumes local
+//! uniformity of the *whole* point set, not of every priority-suffix
+//! (§5 intro) — and it is faster on some real distributions (paper: PAMAP2).
+
+use crate::geom::PointSet;
+use crate::kdtree::{KdTree, StatSink};
+use crate::parlay;
+
+/// Decompose the 1-based prefix `[1, i]` into Fenwick block indices
+/// (`S[i]` in the paper). Returns block indices `j`, each covering
+/// `[j - LSB(j) + 1, j]`.
+pub fn fenwick_decompose(i: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(usize::BITS as usize);
+    let mut j = i;
+    while j > 0 {
+        out.push(j);
+        j &= j - 1; // j -= LSB(j)
+    }
+    out
+}
+
+#[inline]
+fn lsb(i: usize) -> usize {
+    i & i.wrapping_neg()
+}
+
+/// The Fenwick dependent-point structure.
+pub struct FenwickDep<'p> {
+    pts: &'p PointSet,
+    /// `sorted[r]` = point id with rank `r` (0-based, descending priority).
+    sorted: Vec<u32>,
+    /// `rank_of[id]` = 0-based rank.
+    rank_of: Vec<u32>,
+    /// `trees[i]` (1-based, `trees[0]` unused) = kd-tree over block `B[i]`.
+    trees: Vec<Option<KdTree<'p>>>,
+}
+
+impl<'p> FenwickDep<'p> {
+    /// Lines 9-13 of Algorithm 2: radix-sort by descending priority and
+    /// build all block kd-trees in parallel.
+    pub fn build(pts: &'p PointSet, gamma: &[u64]) -> Self {
+        let n = pts.len();
+        assert_eq!(gamma.len(), n);
+        assert!(n > 0);
+        // Descending sort: radix-sort ascending on the complement.
+        let mut items: Vec<(u64, u32)> = (0..n).map(|i| (!gamma[i], i as u32)).collect();
+        parlay::par_radix_sort_u64(&mut items);
+        let sorted: Vec<u32> = items.into_iter().map(|(_, id)| id).collect();
+        let mut rank_of = vec![0u32; n];
+        for (r, &id) in sorted.iter().enumerate() {
+            rank_of[id as usize] = r as u32;
+        }
+        // Build B[i] over sorted[i-LSB(i) .. i] (0-based slice of the
+        // 1-based range [i-LSB(i)+1, i]).
+        let sorted_ref = &sorted;
+        let mut trees: Vec<Option<KdTree<'p>>> = parlay::par_map(n + 1, |i| {
+            if i == 0 {
+                return None;
+            }
+            let lo = i - lsb(i);
+            Some(KdTree::build_from_ids(pts, sorted_ref[lo..i].to_vec()))
+        });
+        // Slot 0 is a placeholder.
+        trees[0] = None;
+        FenwickDep { pts, sorted, rank_of, trees }
+    }
+
+    /// FENWICK-QUERY (Algorithm 2 lines 1-6) for the point with id `id`:
+    /// nearest neighbor among all strictly-higher-priority points. `None`
+    /// iff `id` is the global priority peak (rank 0).
+    ///
+    /// The O(log n) block queries of line 4 run sequentially here — the
+    /// *outer* per-point loop (Algorithm 2 line 14) is already fully
+    /// parallel, so inner parallelism would only add task overhead; the
+    /// aggregation of line 6 becomes an exact sequential `(dist, id)` min.
+    pub fn query<S: StatSink>(&self, id: u32, stats: &mut S) -> Option<(u32, f64)> {
+        let r = self.rank_of[id as usize] as usize;
+        if r == 0 {
+            return None;
+        }
+        let q = self.pts.point(id as usize);
+        let mut best = (u32::MAX, f64::INFINITY);
+        let mut j = r; // 1-based prefix [1, r] = 0-based ranks [0, r-1]
+        while j > 0 {
+            let tree = self.trees[j].as_ref().expect("block tree exists");
+            if let Some((p, ds)) = tree.nn(q, u32::MAX, stats) {
+                if ds < best.1 || (ds == best.1 && p < best.0) {
+                    best = (p, ds);
+                }
+            }
+            j &= j - 1;
+        }
+        debug_assert!(best.0 != u32::MAX);
+        Some(best)
+    }
+
+    /// Rank (0-based, descending priority) of a point id.
+    pub fn rank_of(&self, id: u32) -> usize {
+        self.rank_of[id as usize] as usize
+    }
+
+    /// The descending-priority order (testing/diagnostics).
+    pub fn sorted_ids(&self) -> &[u32] {
+        &self.sorted
+    }
+
+    /// Total points stored across all block trees (= Θ(n log n); test hook).
+    pub fn total_stored(&self) -> usize {
+        self.trees.iter().flatten().map(|t| t.size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::NoStats;
+    use crate::proputil::{gen_clustered_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+    use crate::pskd::brute_priority_nn;
+
+    fn random_gamma(rng: &mut SplitMix64, n: usize) -> Vec<u64> {
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut idx);
+        let mut g = vec![0u64; n];
+        for (i, &j) in idx.iter().enumerate() {
+            g[j as usize] = i as u64;
+        }
+        g
+    }
+
+    #[test]
+    fn decompose_is_disjoint_cover() {
+        for i in 1..=512usize {
+            let blocks = fenwick_decompose(i);
+            // Blocks [j-LSB(j)+1, j] must tile [1, i] exactly.
+            let mut covered = vec![false; i + 1];
+            for &j in &blocks {
+                let lo = j - lsb(j) + 1;
+                for k in lo..=j {
+                    assert!(!covered[k], "overlap at {k} for i={i}");
+                    covered[k] = true;
+                }
+            }
+            assert!(covered[1..].iter().all(|&c| c), "gap for i={i}");
+            assert!(blocks.len() <= (usize::BITS - i.leading_zeros()) as usize + 1);
+        }
+    }
+
+    #[test]
+    fn block_sizes_sum_is_n_log_n_bounded() {
+        let n = 1024usize;
+        let total: usize = (1..=n).map(lsb).sum();
+        // Σ LSB(i) for i in [1, n=2^k] is (k/2 + 1) n approx; just check the
+        // O(n log n) bound.
+        assert!(total <= n * (n.ilog2() as usize + 1));
+    }
+
+    #[test]
+    fn fenwick_query_matches_brute_priority_nn_uniform() {
+        let mut rng = SplitMix64::new(21);
+        let n = 700;
+        let pts = gen_uniform_points(&mut rng, n, 2, 100.0);
+        let gamma = random_gamma(&mut rng, n);
+        let f = FenwickDep::build(&pts, &gamma);
+        for id in (0..n as u32).step_by(7) {
+            let got = f.query(id, &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(id as usize), gamma[id as usize]);
+            assert_eq!(got, want, "id {id}");
+        }
+    }
+
+    #[test]
+    fn fenwick_query_matches_brute_priority_nn_clustered() {
+        let mut rng = SplitMix64::new(22);
+        let n = 600;
+        let pts = gen_clustered_points(&mut rng, n, 3, 4, 50.0, 1.5);
+        let gamma = random_gamma(&mut rng, n);
+        let f = FenwickDep::build(&pts, &gamma);
+        for id in (0..n as u32).step_by(5) {
+            let got = f.query(id, &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(id as usize), gamma[id as usize]);
+            assert_eq!(got, want, "id {id}");
+        }
+    }
+
+    #[test]
+    fn peak_has_no_dependent() {
+        let mut rng = SplitMix64::new(23);
+        let pts = gen_uniform_points(&mut rng, 64, 2, 10.0);
+        let gamma = random_gamma(&mut rng, 64);
+        let f = FenwickDep::build(&pts, &gamma);
+        let peak = (0..64u32).max_by_key(|&i| gamma[i as usize]).unwrap();
+        assert_eq!(f.rank_of(peak), 0);
+        assert_eq!(f.query(peak, &mut NoStats), None);
+    }
+
+    #[test]
+    fn sorted_order_is_descending_priority() {
+        let mut rng = SplitMix64::new(24);
+        let pts = gen_uniform_points(&mut rng, 200, 2, 10.0);
+        let gamma = random_gamma(&mut rng, 200);
+        let f = FenwickDep::build(&pts, &gamma);
+        let s = f.sorted_ids();
+        for w in s.windows(2) {
+            assert!(gamma[w[0] as usize] > gamma[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn space_usage_is_n_log_n() {
+        let mut rng = SplitMix64::new(25);
+        let n = 2048;
+        let pts = gen_uniform_points(&mut rng, n, 2, 10.0);
+        let gamma = random_gamma(&mut rng, n);
+        let f = FenwickDep::build(&pts, &gamma);
+        assert!(f.total_stored() <= n * (n.ilog2() as usize + 1));
+        assert!(f.total_stored() >= n); // at least every point stored once
+    }
+}

@@ -1,0 +1,187 @@
+//! Axis-aligned bounding boxes ("cells" in the paper's kd-tree terminology)
+//! with the two geometric predicates the DPC traversals need:
+//!
+//! - `dist_sq_to(q)`: minimum squared distance from the cell to a query
+//!   point — the standard NN / range-search pruning test;
+//! - `inside_ball(c, r²)`: whether the **farthest corner** of the cell is
+//!   within the ball — the §6.1 density-computation optimization (a cell
+//!   fully inside the query ball contributes its point count wholesale).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bbox {
+    min: Vec<f64>,
+    max: Vec<f64>,
+}
+
+impl Bbox {
+    /// An empty (inverted) box; `expand` fixes it up.
+    pub fn empty(d: usize) -> Self {
+        Bbox { min: vec![f64::INFINITY; d], max: vec![f64::NEG_INFINITY; d] }
+    }
+
+    pub fn new(min: Vec<f64>, max: Vec<f64>) -> Self {
+        assert_eq!(min.len(), max.len());
+        Bbox { min, max }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.min.len()
+    }
+
+    pub fn min(&self) -> &[f64] {
+        &self.min
+    }
+
+    pub fn max(&self) -> &[f64] {
+        &self.max
+    }
+
+    #[inline]
+    pub fn expand(&mut self, p: &[f64]) {
+        for k in 0..self.min.len() {
+            if p[k] < self.min[k] {
+                self.min[k] = p[k];
+            }
+            if p[k] > self.max[k] {
+                self.max[k] = p[k];
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &Bbox) {
+        for k in 0..self.min.len() {
+            self.min[k] = self.min[k].min(other.min[k]);
+            self.max[k] = self.max[k].max(other.max[k]);
+        }
+    }
+
+    /// Index of the widest side (the paper splits cells perpendicular to the
+    /// longest side).
+    pub fn widest_dim(&self) -> usize {
+        let mut best = 0;
+        let mut best_w = f64::NEG_INFINITY;
+        for k in 0..self.min.len() {
+            let w = self.max[k] - self.min[k];
+            if w > best_w {
+                best_w = w;
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Minimum squared distance from `q` to any point of the box (0 if `q`
+    /// is inside).
+    #[inline]
+    pub fn dist_sq_to(&self, q: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for k in 0..self.min.len() {
+            let v = q[k];
+            let t = if v < self.min[k] {
+                self.min[k] - v
+            } else if v > self.max[k] {
+                v - self.max[k]
+            } else {
+                0.0
+            };
+            s += t * t;
+        }
+        s
+    }
+
+    /// Squared distance from `q` to the **farthest corner** of the box.
+    #[inline]
+    pub fn far_corner_dist_sq(&self, q: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for k in 0..self.min.len() {
+            let lo = (q[k] - self.min[k]).abs();
+            let hi = (q[k] - self.max[k]).abs();
+            let t = lo.max(hi);
+            s += t * t;
+        }
+        s
+    }
+
+    /// §6.1 containment test: is the whole cell inside the ball
+    /// `{x : |x-c|² ≤ r_sq}`?
+    #[inline]
+    pub fn inside_ball(&self, c: &[f64], r_sq: f64) -> bool {
+        self.far_corner_dist_sq(c) <= r_sq
+    }
+
+    /// Does the cell intersect the ball `{x : |x-c|² ≤ r_sq}`?
+    #[inline]
+    pub fn intersects_ball(&self, c: &[f64], r_sq: f64) -> bool {
+        self.dist_sq_to(c) <= r_sq
+    }
+
+    pub fn contains(&self, p: &[f64]) -> bool {
+        (0..self.min.len()).all(|k| self.min[k] <= p[k] && p[k] <= self.max[k])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_box() -> Bbox {
+        Bbox::new(vec![0.0, 0.0], vec![1.0, 1.0])
+    }
+
+    #[test]
+    fn expand_from_empty() {
+        let mut bb = Bbox::empty(2);
+        bb.expand(&[1.0, 2.0]);
+        bb.expand(&[-1.0, 0.5]);
+        assert_eq!(bb.min(), &[-1.0, 0.5]);
+        assert_eq!(bb.max(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn dist_inside_is_zero() {
+        assert_eq!(unit_box().dist_sq_to(&[0.5, 0.5]), 0.0);
+    }
+
+    #[test]
+    fn dist_outside() {
+        assert_eq!(unit_box().dist_sq_to(&[2.0, 0.5]), 1.0);
+        assert_eq!(unit_box().dist_sq_to(&[2.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn far_corner() {
+        // From the origin corner the far corner of the unit box is (1,1).
+        assert_eq!(unit_box().far_corner_dist_sq(&[0.0, 0.0]), 2.0);
+        // From the center all corners are at distance sqrt(0.5).
+        assert!((unit_box().far_corner_dist_sq(&[0.5, 0.5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inside_ball_requires_far_corner() {
+        let bb = unit_box();
+        assert!(bb.inside_ball(&[0.5, 0.5], 0.5 + 1e-9));
+        assert!(!bb.inside_ball(&[0.5, 0.5], 0.49));
+    }
+
+    #[test]
+    fn intersects_ball_edge_cases() {
+        let bb = unit_box();
+        assert!(bb.intersects_ball(&[2.0, 0.5], 1.0)); // touches at boundary
+        assert!(!bb.intersects_ball(&[2.0, 0.5], 0.99));
+    }
+
+    #[test]
+    fn widest_dim_picks_longest() {
+        let bb = Bbox::new(vec![0.0, 0.0, 0.0], vec![1.0, 5.0, 2.0]);
+        assert_eq!(bb.widest_dim(), 1);
+    }
+
+    #[test]
+    fn merge_unions() {
+        let mut a = Bbox::new(vec![0.0], vec![1.0]);
+        a.merge(&Bbox::new(vec![-2.0], vec![0.5]));
+        assert_eq!(a.min(), &[-2.0]);
+        assert_eq!(a.max(), &[1.0]);
+    }
+}

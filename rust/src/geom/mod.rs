@@ -1,0 +1,169 @@
+//! Geometric primitives: flat point sets, axis-aligned bounding boxes, and
+//! squared-Euclidean distance kernels.
+//!
+//! Points are stored row-major (`coords[i*d + k]`), which keeps each point's
+//! coordinates on one cache line during tree traversals — the dominant access
+//! pattern in this crate. Distances are computed and compared **squared**
+//! everywhere (monotone for Euclidean metrics), taking a single `sqrt` only
+//! at user-facing boundaries.
+
+pub mod bbox;
+
+pub use bbox::Bbox;
+
+/// A set of `n` points in `d`-dimensional space, row-major.
+#[derive(Clone, Debug)]
+pub struct PointSet {
+    coords: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl PointSet {
+    pub fn new(coords: Vec<f64>, d: usize) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(coords.len() % d, 0, "coords length {} not divisible by d={}", coords.len(), d);
+        let n = coords.len() / d;
+        PointSet { coords, n, d }
+    }
+
+    pub fn empty(d: usize) -> Self {
+        PointSet { coords: Vec::new(), n: 0, d }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut coords = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d);
+            coords.extend_from_slice(r);
+        }
+        PointSet::new(coords, d)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.coords[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn coord(&self, i: usize, k: usize) -> f64 {
+        self.coords[i * self.d + k]
+    }
+
+    pub fn coords(&self) -> &[f64] {
+        &self.coords
+    }
+
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.d);
+        self.coords.extend_from_slice(p);
+        self.n += 1;
+    }
+
+    /// Squared Euclidean distance between stored points `i` and `j`.
+    #[inline]
+    pub fn dist_sq(&self, i: usize, j: usize) -> f64 {
+        dist_sq(self.point(i), self.point(j))
+    }
+
+    /// Squared Euclidean distance from stored point `i` to an arbitrary `q`.
+    #[inline]
+    pub fn dist_sq_to(&self, i: usize, q: &[f64]) -> f64 {
+        dist_sq(self.point(i), q)
+    }
+
+    /// Bounding box over a subset of point ids.
+    pub fn bbox_of(&self, ids: &[u32]) -> Bbox {
+        let mut bb = Bbox::empty(self.d);
+        for &i in ids {
+            bb.expand(self.point(i as usize));
+        }
+        bb
+    }
+
+    /// Bounding box over all points.
+    pub fn bbox(&self) -> Bbox {
+        let mut bb = Bbox::empty(self.d);
+        for i in 0..self.n {
+            bb.expand(self.point(i));
+        }
+        bb
+    }
+}
+
+/// Squared Euclidean distance between two coordinate slices.
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for k in 0..a.len() {
+        let t = a[k] - b[k];
+        s += t * t;
+    }
+    s
+}
+
+/// Euclidean distance (single sqrt; use [`dist_sq`] in hot paths).
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    dist_sq(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointset_roundtrip() {
+        let ps = PointSet::new(vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0], 2);
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps.dim(), 2);
+        assert_eq!(ps.point(1), &[3.0, 4.0]);
+        assert_eq!(ps.dist_sq(0, 1), 25.0);
+        assert_eq!(ps.dist_sq_to(0, &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn from_rows_matches() {
+        let ps = PointSet::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(ps.dim(), 3);
+        assert_eq!(ps.coord(1, 2), 6.0);
+    }
+
+    #[test]
+    fn push_extends() {
+        let mut ps = PointSet::empty(2);
+        ps.push(&[1.0, 2.0]);
+        ps.push(&[3.0, 4.0]);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_coords_len_panics() {
+        PointSet::new(vec![1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn dist_matches_dist_sq() {
+        assert!((dist(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

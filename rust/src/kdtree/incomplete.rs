@@ -1,0 +1,179 @@
+//! Incomplete kd-tree (§4.1): a balanced kd-tree built over **all** points up
+//! front, in which points start *inactive*. "Inserting" a point merely
+//! activates it and marks its ancestor path active (a bottom-up walk along
+//! parent pointers — no per-insert top-down traversal, no rebalancing).
+//! Nearest-neighbor searches prune any subtree whose `isActive` flag is
+//! false (Figure 1 of the paper).
+//!
+//! This is the paper's replacement for Amagata–Hara's incremental kd-tree in
+//! the sequential dependent-point loop (DPC-INCOMPLETE), and the conceptual
+//! stepping stone to the priority search kd-tree.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::{KdTree, StatSink};
+
+pub struct IncompleteKdTree<'t, 'p> {
+    tree: &'t KdTree<'p>,
+    node_active: Vec<AtomicBool>,
+    point_active: Vec<AtomicBool>,
+}
+
+impl<'t, 'p> IncompleteKdTree<'t, 'p> {
+    pub fn new(tree: &'t KdTree<'p>) -> Self {
+        IncompleteKdTree {
+            node_active: (0..tree.num_slots()).map(|_| AtomicBool::new(false)).collect(),
+            point_active: (0..tree.points().len()).map(|_| AtomicBool::new(false)).collect(),
+            tree,
+        }
+    }
+
+    /// Activate point `p`: bottom-up walk from its leaf, stopping at the
+    /// first already-active ancestor. O(path length) with no comparisons —
+    /// the advantage over incremental insertion the paper highlights.
+    pub fn activate(&self, p: u32) {
+        self.point_active[p as usize].store(true, Ordering::Release);
+        let mut cur = self.tree.leaf_of(p);
+        loop {
+            let was = self.node_active[cur as usize].swap(true, Ordering::AcqRel);
+            if was {
+                break; // ancestors already active
+            }
+            let parent = self.tree.parent_of(cur);
+            if parent == u32::MAX {
+                break;
+            }
+            cur = parent;
+        }
+    }
+
+    pub fn is_active(&self, p: u32) -> bool {
+        self.point_active[p as usize].load(Ordering::Acquire)
+    }
+
+    /// Nearest *active* neighbor of `q`, excluding id `exclude`; ties by
+    /// smaller id. Subtrees with no active point are pruned (grey subtree in
+    /// Figure 1).
+    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
+        let root = self.tree.root_idx();
+        if !self.node_active[root as usize].load(Ordering::Acquire) {
+            return None;
+        }
+        let mut best = (u32::MAX, f64::INFINITY);
+        self.nn_rec(root, q, exclude, &mut best, stats, 1);
+        if best.0 == u32::MAX {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    fn nn_rec<S: StatSink>(&self, i: u32, q: &[f64], exclude: u32, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+        stats.visit_node();
+        stats.depth(depth);
+        if self.tree.is_leaf_idx(i) {
+            for &p in self.tree.leaf_pts(i) {
+                if p == exclude || !self.point_active[p as usize].load(Ordering::Acquire) {
+                    continue;
+                }
+                stats.scan_point();
+                let ds = self.tree.points().dist_sq_to(p as usize, q);
+                if ds < best.1 || (ds == best.1 && p < best.0) {
+                    *best = (p, ds);
+                }
+            }
+            return;
+        }
+        let (l, r) = self.tree.children(i);
+        let la = self.node_active[l as usize].load(Ordering::Acquire);
+        let ra = self.node_active[r as usize].load(Ordering::Acquire);
+        let dl = if la { self.tree.bbox_dist(l, q) } else { f64::INFINITY };
+        let dr = if ra { self.tree.bbox_dist(r, q) } else { f64::INFINITY };
+        let (first, d1, second, d2) = if dl <= dr { (l, dl, r, dr) } else { (r, dr, l, dl) };
+        if d1 <= best.1 && d1.is_finite() {
+            self.nn_rec(first, q, exclude, best, stats, depth + 1);
+        }
+        if d2 <= best.1 && d2.is_finite() {
+            self.nn_rec(second, q, exclude, best, stats, depth + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::PointSet;
+    use crate::kdtree::NoStats;
+    use crate::proputil::gen_uniform_points;
+    use crate::prng::SplitMix64;
+
+    fn brute_active_nn(pts: &PointSet, active: &[bool], q: &[f64], exclude: u32) -> Option<(u32, f64)> {
+        let mut best: Option<(u32, f64)> = None;
+        for i in 0..pts.len() {
+            if i as u32 == exclude || !active[i] {
+                continue;
+            }
+            let ds = pts.dist_sq_to(i, q);
+            match best {
+                Some((bi, bd)) if ds > bd || (ds == bd && i as u32 > bi) => {}
+                _ => best = Some((i as u32, ds)),
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn empty_tree_returns_none() {
+        let mut rng = SplitMix64::new(1);
+        let pts = gen_uniform_points(&mut rng, 100, 2, 50.0);
+        let tree = KdTree::build_with_maps(&pts);
+        let inc = IncompleteKdTree::new(&tree);
+        assert_eq!(inc.nn(pts.point(0), u32::MAX, &mut NoStats), None);
+    }
+
+    #[test]
+    fn incremental_activation_matches_brute_force() {
+        let mut rng = SplitMix64::new(2);
+        let pts = gen_uniform_points(&mut rng, 400, 3, 100.0);
+        let tree = KdTree::build_with_maps(&pts);
+        let inc = IncompleteKdTree::new(&tree);
+        let mut active = vec![false; pts.len()];
+        let mut order: Vec<u32> = (0..pts.len() as u32).collect();
+        rng.shuffle(&mut order);
+        for (step, &p) in order.iter().enumerate() {
+            // Query BEFORE activating p (the dependent-point pattern).
+            let q = pts.point(p as usize);
+            let got = inc.nn(q, p, &mut NoStats);
+            let want = brute_active_nn(&pts, &active, q, p);
+            assert_eq!(got, want, "step {step} point {p}");
+            inc.activate(p);
+            active[p as usize] = true;
+        }
+    }
+
+    #[test]
+    fn activate_is_idempotent() {
+        let mut rng = SplitMix64::new(3);
+        let pts = gen_uniform_points(&mut rng, 50, 2, 10.0);
+        let tree = KdTree::build_with_maps(&pts);
+        let inc = IncompleteKdTree::new(&tree);
+        inc.activate(7);
+        inc.activate(7);
+        assert!(inc.is_active(7));
+        let got = inc.nn(pts.point(3), 3, &mut NoStats).unwrap();
+        assert_eq!(got.0, 7);
+    }
+
+    #[test]
+    fn excluded_point_is_skipped_even_if_active() {
+        let pts = PointSet::new(vec![0.0, 0.0, 1.0, 0.0, 5.0, 0.0], 2);
+        let tree = KdTree::build_with_maps(&pts);
+        let inc = IncompleteKdTree::new(&tree);
+        inc.activate(0);
+        inc.activate(1);
+        // NN of point 0 excluding itself: point 1.
+        assert_eq!(inc.nn(pts.point(0), 0, &mut NoStats), Some((1, 1.0)));
+        // Exclude 1 too (simulate): query from its coords.
+        assert_eq!(inc.nn(pts.point(1), 1, &mut NoStats), Some((0, 1.0)));
+    }
+}

@@ -1,0 +1,225 @@
+//! Incremental (pointer-based, dynamically allocated) kd-tree — a faithful
+//! reimplementation of the data structure inside DPC-EXACT-BASELINE
+//! (Amagata–Hara [3]). Points are inserted one at a time via top-down
+//! traversals with cyclic splitting dimensions; the tree can become
+//! unbalanced, and nodes are heap-allocated individually (the cache-
+//! unfriendliness the paper contrasts against in §7.2).
+//!
+//! This exists purely as the *baseline* under benchmark; the paper's
+//! improvements (incomplete kd-tree, priority search kd-tree, Fenwick tree)
+//! live in sibling modules.
+
+use crate::geom::PointSet;
+
+use super::StatSink;
+
+struct Node {
+    point: u32,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+pub struct IncrementalKdTree<'p> {
+    pts: &'p PointSet,
+    root: Option<Box<Node>>,
+    len: usize,
+}
+
+impl<'p> IncrementalKdTree<'p> {
+    pub fn new(pts: &'p PointSet) -> Self {
+        IncrementalKdTree { pts, root: None, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert point id `p` (top-down traversal, cyclic split dimension).
+    pub fn insert(&mut self, p: u32) {
+        let d = self.pts.dim();
+        let pts = self.pts;
+        let mut cur = &mut self.root;
+        let mut depth = 0usize;
+        loop {
+            match cur {
+                None => {
+                    *cur = Some(Box::new(Node { point: p, left: None, right: None }));
+                    self.len += 1;
+                    return;
+                }
+                Some(node) => {
+                    let dim = depth % d;
+                    let nv = pts.coord(node.point as usize, dim);
+                    let pv = pts.coord(p as usize, dim);
+                    cur = if pv < nv { &mut node.left } else { &mut node.right };
+                    depth += 1;
+                }
+            }
+        }
+    }
+
+    /// Range count without subtree-count pruning: tests every node's point
+    /// individually, descending children whenever the query ball crosses
+    /// the splitting hyperplane. This is the DPC-EXACT-BASELINE density
+    /// step: pointer-chasing over individually heap-allocated nodes, no
+    /// §6.1 containment shortcut.
+    pub fn range_count<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+        match &self.root {
+            Some(root) => Self::count_rec(self.pts, root, q, r_sq, 0, stats),
+            None => 0,
+        }
+    }
+
+    fn count_rec<S: StatSink>(pts: &PointSet, node: &Node, q: &[f64], r_sq: f64, depth: usize, stats: &mut S) -> usize {
+        stats.visit_node();
+        stats.scan_point();
+        let mut c = usize::from(pts.dist_sq_to(node.point as usize, q) <= r_sq);
+        let dim = depth % pts.dim();
+        let diff = q[dim] - pts.coord(node.point as usize, dim);
+        let (near, far) = if diff < 0.0 { (&node.left, &node.right) } else { (&node.right, &node.left) };
+        if let Some(n) = near {
+            c += Self::count_rec(pts, n, q, r_sq, depth + 1, stats);
+        }
+        if diff * diff <= r_sq {
+            if let Some(f) = far {
+                c += Self::count_rec(pts, f, q, r_sq, depth + 1, stats);
+            }
+        }
+        c
+    }
+
+    /// Nearest neighbor among inserted points, excluding `exclude`; ties by
+    /// smaller id.
+    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
+        let mut best = (u32::MAX, f64::INFINITY);
+        if let Some(root) = &self.root {
+            Self::nn_rec(self.pts, root, q, 0, exclude, &mut best, stats, 1);
+        }
+        if best.0 == u32::MAX {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn nn_rec<S: StatSink>(
+        pts: &PointSet,
+        node: &Node,
+        q: &[f64],
+        depth: usize,
+        exclude: u32,
+        best: &mut (u32, f64),
+        stats: &mut S,
+        level: usize,
+    ) {
+        stats.visit_node();
+        stats.depth(level);
+        if node.point != exclude {
+            stats.scan_point();
+            let ds = pts.dist_sq_to(node.point as usize, q);
+            if ds < best.1 || (ds == best.1 && node.point < best.0) {
+                *best = (node.point, ds);
+            }
+        }
+        let dim = depth % pts.dim();
+        let diff = q[dim] - pts.coord(node.point as usize, dim);
+        let (near, far) = if diff < 0.0 { (&node.left, &node.right) } else { (&node.right, &node.left) };
+        if let Some(n) = near {
+            Self::nn_rec(pts, n, q, depth + 1, exclude, best, stats, level + 1);
+        }
+        if diff * diff <= best.1 {
+            if let Some(f) = far {
+                Self::nn_rec(pts, f, q, depth + 1, exclude, best, stats, level + 1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::{brute_nn, NoStats};
+    use crate::proputil::gen_uniform_points;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn empty_returns_none() {
+        let pts = PointSet::new(vec![0.0, 0.0], 2);
+        let t = IncrementalKdTree::new(&pts);
+        assert_eq!(t.nn(&[0.0, 0.0], u32::MAX, &mut NoStats), None);
+    }
+
+    #[test]
+    fn incremental_nn_matches_brute_force_over_inserted_prefix() {
+        let mut rng = SplitMix64::new(11);
+        let pts = gen_uniform_points(&mut rng, 300, 2, 50.0);
+        let mut t = IncrementalKdTree::new(&pts);
+        let mut order: Vec<u32> = (0..300u32).collect();
+        rng.shuffle(&mut order);
+        let mut inserted: Vec<u32> = Vec::new();
+        for &p in order.iter() {
+            if !inserted.is_empty() {
+                let q = pts.point(p as usize);
+                let got = t.nn(q, p, &mut NoStats).unwrap();
+                // brute force over inserted prefix
+                let mut best = (u32::MAX, f64::INFINITY);
+                for &j in &inserted {
+                    let ds = pts.dist_sq_to(j as usize, q);
+                    if ds < best.1 || (ds == best.1 && j < best.0) {
+                        best = (j, ds);
+                    }
+                }
+                assert_eq!(got, best);
+            }
+            t.insert(p);
+            inserted.push(p);
+        }
+        assert_eq!(t.len(), 300);
+    }
+
+    #[test]
+    fn range_count_matches_brute_force() {
+        let mut rng = SplitMix64::new(13);
+        let pts = gen_uniform_points(&mut rng, 400, 3, 20.0);
+        let mut t = IncrementalKdTree::new(&pts);
+        let mut order: Vec<u32> = (0..400u32).collect();
+        rng.shuffle(&mut order);
+        for &p in &order {
+            t.insert(p);
+        }
+        for i in (0..400).step_by(17) {
+            for r in [0.0, 2.0, 5.0, 50.0] {
+                let want = crate::kdtree::brute_range_count(&pts, pts.point(i), r * r);
+                let got = t.range_count(pts.point(i), r * r, &mut NoStats);
+                assert_eq!(got, want, "i={i} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_count_empty_tree_is_zero() {
+        let pts = PointSet::new(vec![0.0, 0.0], 2);
+        let t = IncrementalKdTree::new(&pts);
+        assert_eq!(t.range_count(&[0.0, 0.0], 100.0, &mut NoStats), 0);
+    }
+
+    #[test]
+    fn full_tree_matches_global_brute_force() {
+        let mut rng = SplitMix64::new(12);
+        let pts = gen_uniform_points(&mut rng, 500, 4, 10.0);
+        let mut t = IncrementalKdTree::new(&pts);
+        for p in 0..500u32 {
+            t.insert(p);
+        }
+        for i in (0..500).step_by(29) {
+            let got = t.nn(pts.point(i), i as u32, &mut NoStats).unwrap();
+            let want = brute_nn(&pts, pts.point(i), i as u32).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,766 @@
+//! Parallel balanced kd-tree (the paper's §3.2 workhorse).
+//!
+//! - **Arena layout, preallocated**: all nodes live in one flat `Vec`,
+//!   allocated up front (the paper credits preallocation for part of its
+//!   density-step speedup over the baseline's dynamically-allocated nodes,
+//!   §7.2). A subtree over `m` points occupies a contiguous slot range of
+//!   size `2m-1`, so parallel recursive construction writes disjoint slots
+//!   without locks.
+//! - **Split rule**: median along the widest dimension of the node's cell
+//!   (the bounding box of its points), leaves hold ≤ `LEAF_SIZE` points.
+//! - **Queries**: nearest-neighbor / K-NN with cell-distance pruning, range
+//!   **count** with the §6.1 optimization (cells fully inside the query ball
+//!   contribute `count` without traversal) plus an unoptimized variant used
+//!   by the DPC-EXACT-BASELINE reproduction, and range report.
+//! - **Instrumentation**: every traversal can feed a [`StatSink`] so the
+//!   Table-1 bench can measure empirical work (nodes visited) and span
+//!   (traversal depth) — machine-independent evidence for the complexity
+//!   claims.
+
+pub mod incomplete;
+pub mod incremental;
+
+use crate::geom::{dist_sq, Bbox, PointSet};
+use crate::parlay;
+
+pub const LEAF_SIZE: usize = 16;
+/// Subtrees smaller than this build sequentially.
+const BUILD_GRAIN: usize = 2048;
+const NONE: u32 = u32::MAX;
+
+/// Observer for traversal statistics. The no-op impl compiles away.
+pub trait StatSink {
+    #[inline]
+    fn visit_node(&mut self) {}
+    #[inline]
+    fn scan_point(&mut self) {}
+    #[inline]
+    fn depth(&mut self, _d: usize) {}
+}
+
+/// Zero-cost sink.
+pub struct NoStats;
+impl StatSink for NoStats {}
+
+/// Counting sink for the empirical-complexity bench (Table 1).
+#[derive(Default, Debug, Clone)]
+pub struct Stats {
+    pub nodes_visited: u64,
+    pub points_scanned: u64,
+    pub max_depth: usize,
+}
+
+impl StatSink for Stats {
+    #[inline]
+    fn visit_node(&mut self) {
+        self.nodes_visited += 1;
+    }
+    #[inline]
+    fn scan_point(&mut self) {
+        self.points_scanned += 1;
+    }
+    #[inline]
+    fn depth(&mut self, d: usize) {
+        self.max_depth = self.max_depth.max(d);
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    left: u32,
+    right: u32,
+    /// Point range [lo, hi) in `perm` — `hi - lo` is the subtree count used
+    /// by the §6.1 pruning.
+    lo: u32,
+    hi: u32,
+}
+
+/// Balanced kd-tree over a borrowed [`PointSet`].
+pub struct KdTree<'p> {
+    pts: &'p PointSet,
+    nodes: Vec<Node>,
+    /// Flat bounds arena: `[node * 2d .. node * 2d + d)` = min,
+    /// `[.. + d ..)` = max.
+    bounds: Vec<f64>,
+    /// Permutation of point ids; leaves own contiguous ranges of it.
+    perm: Vec<u32>,
+    /// Coordinates in `perm` order (leaf scans read contiguously — §Perf:
+    /// removes the scattered per-point indirection into the PointSet).
+    pcoords: Vec<f64>,
+    root: u32,
+    /// parent[node] (NONE for root). Needed by the incomplete-tree wrapper.
+    parent: Vec<u32>,
+    /// leaf_of_point[original id] = leaf node index.
+    leaf_of_point: Vec<u32>,
+}
+
+impl<'p> KdTree<'p> {
+    /// Build over all points of `pts` (parallel recursion).
+    pub fn build(pts: &'p PointSet) -> Self {
+        let ids: Vec<u32> = (0..pts.len() as u32).collect();
+        Self::build_impl(pts, ids, false)
+    }
+
+    /// Build with parent pointers and the point→leaf map populated — required
+    /// by [`incomplete::IncompleteKdTree`]. (Opt-in because the leaf map is
+    /// O(|P|) per tree, which would make the Fenwick structure's n block
+    /// trees quadratic in memory.)
+    pub fn build_with_maps(pts: &'p PointSet) -> Self {
+        let ids: Vec<u32> = (0..pts.len() as u32).collect();
+        Self::build_impl(pts, ids, true)
+    }
+
+    /// Build over a subset of point ids (used by the Fenwick structure).
+    pub fn build_from_ids(pts: &'p PointSet, ids: Vec<u32>) -> Self {
+        Self::build_impl(pts, ids, false)
+    }
+
+    fn build_impl(pts: &'p PointSet, mut ids: Vec<u32>, with_maps: bool) -> Self {
+        let n = ids.len();
+        let d = pts.dim();
+        assert!(n > 0, "cannot build kd-tree over zero points");
+        let slots = 2 * n - 1;
+        let mut tree = KdTree {
+            pts,
+            nodes: vec![Node { left: NONE, right: NONE, lo: 0, hi: 0 }; slots],
+            bounds: vec![0.0; slots * 2 * d],
+            perm: Vec::new(),
+            pcoords: Vec::new(),
+            root: 0,
+            parent: if with_maps { vec![NONE; slots] } else { Vec::new() },
+            leaf_of_point: if with_maps { vec![NONE; pts.len()] } else { Vec::new() },
+        };
+        {
+            let b = Builder {
+                pts,
+                nodes_ptr: tree.nodes.as_mut_ptr() as usize,
+                bounds_ptr: tree.bounds.as_mut_ptr() as usize,
+                parent_ptr: if with_maps { tree.parent.as_mut_ptr() as usize } else { 0 },
+                leaf_ptr: if with_maps { tree.leaf_of_point.as_mut_ptr() as usize } else { 0 },
+                d,
+            };
+            b.build_rec(&mut ids, 0, 0, NONE);
+        }
+        // Perm-ordered coordinate copy for contiguous leaf scans.
+        let mut pcoords = vec![0.0f64; ids.len() * d];
+        for (j, &p) in ids.iter().enumerate() {
+            pcoords[j * d..(j + 1) * d].copy_from_slice(pts.point(p as usize));
+        }
+        tree.pcoords = pcoords;
+        tree.perm = ids;
+        tree
+    }
+
+    #[inline]
+    pub fn points(&self) -> &PointSet {
+        self.pts
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.perm.len()
+    }
+
+    #[inline]
+    fn node(&self, i: u32) -> &Node {
+        &self.nodes[i as usize]
+    }
+
+    #[inline]
+    fn bbox_dist_sq(&self, i: u32, q: &[f64]) -> f64 {
+        let d = self.pts.dim();
+        let base = i as usize * 2 * d;
+        let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
+        let mut s = 0.0;
+        for k in 0..d {
+            let v = q[k];
+            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { 0.0 };
+            s += t * t;
+        }
+        s
+    }
+
+    #[inline]
+    fn bbox_far_corner_sq(&self, i: u32, q: &[f64]) -> f64 {
+        let d = self.pts.dim();
+        let base = i as usize * 2 * d;
+        let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
+        let mut s = 0.0;
+        for k in 0..d {
+            let t = (q[k] - min[k]).abs().max((q[k] - max[k]).abs());
+            s += t * t;
+        }
+        s
+    }
+
+    /// Bounding box of a node (copies; for tests/debug).
+    pub fn node_bbox(&self, i: u32) -> Bbox {
+        let d = self.pts.dim();
+        let base = i as usize * 2 * d;
+        Bbox::new(self.bounds[base..base + d].to_vec(), self.bounds[base + d..base + 2 * d].to_vec())
+    }
+
+    #[inline]
+    fn is_leaf(&self, i: u32) -> bool {
+        self.node(i).left == NONE
+    }
+
+    #[inline]
+    fn leaf_points(&self, i: u32) -> &[u32] {
+        let n = self.node(i);
+        &self.perm[n.lo as usize..n.hi as usize]
+    }
+
+    // -----------------------------------------------------------------
+    // Range count (Step 1 density): QUERY-RANGE(x, r) of the paper.
+    // -----------------------------------------------------------------
+
+    /// Count points within squared radius `r_sq` of `q`, **with** the §6.1
+    /// subtree-count pruning.
+    pub fn range_count<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+        self.range_count_rec(self.root, q, r_sq, true, stats, 1)
+    }
+
+    /// Unoptimized variant (no cell-containment shortcut) — models the
+    /// DPC-EXACT-BASELINE density step, which iterates over every point in
+    /// range.
+    pub fn range_count_noprune<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+        self.range_count_rec(self.root, q, r_sq, false, stats, 1)
+    }
+
+    fn range_count_rec<S: StatSink>(&self, i: u32, q: &[f64], r_sq: f64, prune: bool, stats: &mut S, depth: usize) -> usize {
+        stats.visit_node();
+        stats.depth(depth);
+        if self.bbox_dist_sq(i, q) > r_sq {
+            return 0;
+        }
+        let n = self.node(i);
+        if prune && self.bbox_far_corner_sq(i, q) <= r_sq {
+            return (n.hi - n.lo) as usize;
+        }
+        if self.is_leaf(i) {
+            let d = self.pts.dim();
+            let mut c = 0;
+            for j in n.lo as usize..n.hi as usize {
+                stats.scan_point();
+                if dist_sq_at(&self.pcoords, d, j, q) <= r_sq {
+                    c += 1;
+                }
+            }
+            return c;
+        }
+        self.range_count_rec(n.left, q, r_sq, prune, stats, depth + 1)
+            + self.range_count_rec(n.right, q, r_sq, prune, stats, depth + 1)
+    }
+
+    /// Report ids of points within squared radius `r_sq` of `q`.
+    pub fn range_report(&self, q: &[f64], r_sq: f64, out: &mut Vec<u32>) {
+        self.range_report_rec(self.root, q, r_sq, out);
+    }
+
+    fn range_report_rec(&self, i: u32, q: &[f64], r_sq: f64, out: &mut Vec<u32>) {
+        if self.bbox_dist_sq(i, q) > r_sq {
+            return;
+        }
+        let n = self.node(i);
+        if self.bbox_far_corner_sq(i, q) <= r_sq {
+            out.extend_from_slice(&self.perm[n.lo as usize..n.hi as usize]);
+            return;
+        }
+        if self.is_leaf(i) {
+            for &p in self.leaf_points(i) {
+                if self.pts.dist_sq_to(p as usize, q) <= r_sq {
+                    out.push(p);
+                }
+            }
+            return;
+        }
+        self.range_report_rec(n.left, q, r_sq, out);
+        self.range_report_rec(n.right, q, r_sq, out);
+    }
+
+    // -----------------------------------------------------------------
+    // Nearest neighbor: QUERY-NN(x) of the paper.
+    // -----------------------------------------------------------------
+
+    /// Nearest neighbor of `q`, excluding point id `exclude` (pass
+    /// `u32::MAX` to exclude nothing). Ties broken by smaller id.
+    /// Returns `(id, dist_sq)` or `None` if the tree holds only `exclude`.
+    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
+        let mut best = (NONE, f64::INFINITY);
+        self.nn_rec(self.root, q, exclude, &mut best, stats, 1);
+        if best.0 == NONE {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    fn nn_rec<S: StatSink>(&self, i: u32, q: &[f64], exclude: u32, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+        stats.visit_node();
+        stats.depth(depth);
+        let n = self.node(i);
+        if self.is_leaf(i) {
+            let d = self.pts.dim();
+            for j in n.lo as usize..n.hi as usize {
+                stats.scan_point();
+                let ds = dist_sq_at(&self.pcoords, d, j, q);
+                if ds < best.1 || ds == best.1 {
+                    let p = self.perm[j];
+                    if p == exclude {
+                        continue;
+                    }
+                    if ds < best.1 || p < best.0 {
+                        *best = (p, ds);
+                    }
+                }
+            }
+            return;
+        }
+        let dl = self.bbox_dist_sq(n.left, q);
+        let dr = self.bbox_dist_sq(n.right, q);
+        let (first, d1, second, d2) = if dl <= dr { (n.left, dl, n.right, dr) } else { (n.right, dr, n.left, dl) };
+        if d1 <= best.1 {
+            self.nn_rec(first, q, exclude, best, stats, depth + 1);
+        }
+        if d2 <= best.1 {
+            self.nn_rec(second, q, exclude, best, stats, depth + 1);
+        }
+    }
+
+    /// K nearest neighbors of `q` (excluding `exclude`), ascending by
+    /// `(dist_sq, id)`.
+    pub fn knn(&self, q: &[f64], k: usize, exclude: u32) -> Vec<(u32, f64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut heap: Vec<(f64, u32)> = Vec::with_capacity(k + 1); // max-heap by (dist, id)
+        self.knn_rec(self.root, q, k, exclude, &mut heap);
+        let mut out: Vec<(u32, f64)> = heap.into_iter().map(|(d, p)| (p, d)).collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        out
+    }
+
+    fn knn_rec(&self, i: u32, q: &[f64], k: usize, exclude: u32, heap: &mut Vec<(f64, u32)>) {
+        let bound = if heap.len() == k { heap[0].0 } else { f64::INFINITY };
+        if self.bbox_dist_sq(i, q) > bound {
+            return;
+        }
+        let n = self.node(i);
+        if self.is_leaf(i) {
+            for &p in self.leaf_points(i) {
+                if p == exclude {
+                    continue;
+                }
+                let ds = self.pts.dist_sq_to(p as usize, q);
+                let cand = (ds, p);
+                if heap.len() < k {
+                    heap.push(cand);
+                    heap_up(heap);
+                } else if cand < heap[0] {
+                    heap[0] = cand;
+                    heap_down(heap);
+                }
+            }
+            return;
+        }
+        let dl = self.bbox_dist_sq(n.left, q);
+        let dr = self.bbox_dist_sq(n.right, q);
+        let (first, second) = if dl <= dr { (n.left, n.right) } else { (n.right, n.left) };
+        self.knn_rec(first, q, k, exclude, heap);
+        self.knn_rec(second, q, k, exclude, heap);
+    }
+
+    // Accessors for the incomplete-tree wrapper.
+    pub(crate) fn root_idx(&self) -> u32 {
+        self.root
+    }
+    pub(crate) fn num_slots(&self) -> usize {
+        self.nodes.len()
+    }
+    pub(crate) fn parent_of(&self, i: u32) -> u32 {
+        self.parent[i as usize]
+    }
+    pub(crate) fn leaf_of(&self, point: u32) -> u32 {
+        self.leaf_of_point[point as usize]
+    }
+    pub(crate) fn is_leaf_idx(&self, i: u32) -> bool {
+        self.is_leaf(i)
+    }
+    pub(crate) fn children(&self, i: u32) -> (u32, u32) {
+        let n = self.node(i);
+        (n.left, n.right)
+    }
+    pub(crate) fn bbox_dist(&self, i: u32, q: &[f64]) -> f64 {
+        self.bbox_dist_sq(i, q)
+    }
+    pub(crate) fn leaf_pts(&self, i: u32) -> &[u32] {
+        self.leaf_points(i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Construction
+// ---------------------------------------------------------------------------
+
+/// Shared-nothing builder: subtree over `m` ids occupies exactly `2m-1`
+/// contiguous node slots, so recursive halves write disjoint regions (raw
+/// pointer writes, no locks).
+struct Builder<'p> {
+    pts: &'p PointSet,
+    nodes_ptr: usize,
+    bounds_ptr: usize,
+    parent_ptr: usize,
+    leaf_ptr: usize,
+    d: usize,
+}
+
+unsafe impl Sync for Builder<'_> {}
+
+impl Builder<'_> {
+    /// `ids` is the subrange of the permutation this subtree owns;
+    /// `perm_off` its absolute offset; `slot` this node's arena index.
+    fn build_rec(&self, ids: &mut [u32], perm_off: usize, slot: usize, parent: u32) {
+        let m = ids.len();
+        debug_assert!(m >= 1);
+        let d = self.d;
+        // Compute the cell (bbox of the subtree's points).
+        let bb = self.compute_bbox(ids);
+        unsafe {
+            let bptr = (self.bounds_ptr as *mut f64).add(slot * 2 * d);
+            for k in 0..d {
+                *bptr.add(k) = bb.min()[k];
+                *bptr.add(d + k) = bb.max()[k];
+            }
+            if self.parent_ptr != 0 {
+                *(self.parent_ptr as *mut u32).add(slot) = parent;
+            }
+        }
+        if m <= LEAF_SIZE {
+            unsafe {
+                *(self.nodes_ptr as *mut Node).add(slot) = Node {
+                    left: NONE,
+                    right: NONE,
+                    lo: perm_off as u32,
+                    hi: (perm_off + m) as u32,
+                };
+                if self.leaf_ptr != 0 {
+                    let lp = self.leaf_ptr as *mut u32;
+                    for &p in ids.iter() {
+                        *lp.add(p as usize) = slot as u32;
+                    }
+                }
+            }
+            return;
+        }
+        let dim = bb.widest_dim();
+        let mid = m / 2;
+        let pts = self.pts;
+        ids.select_nth_unstable_by(mid, |&a, &b| {
+            pts.coord(a as usize, dim)
+                .partial_cmp(&pts.coord(b as usize, dim))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let (left_ids, right_ids) = ids.split_at_mut(mid);
+        let left_slot = slot + 1;
+        let right_slot = slot + 2 * mid; // left subtree occupies 2*mid-1 slots
+        unsafe {
+            *(self.nodes_ptr as *mut Node).add(slot) = Node {
+                left: left_slot as u32,
+                right: right_slot as u32,
+                lo: perm_off as u32,
+                hi: (perm_off + m) as u32,
+            };
+        }
+        if m >= BUILD_GRAIN {
+            let pool = parlay::pool::global();
+            pool.join(
+                || self.build_rec(left_ids, perm_off, left_slot, slot as u32),
+                || self.build_rec(right_ids, perm_off + mid, right_slot, slot as u32),
+            );
+        } else {
+            self.build_rec(left_ids, perm_off, left_slot, slot as u32);
+            self.build_rec(right_ids, perm_off + mid, right_slot, slot as u32);
+        }
+    }
+
+    fn compute_bbox(&self, ids: &[u32]) -> Bbox {
+        let m = ids.len();
+        if m < 65_536 {
+            return self.pts.bbox_of(ids);
+        }
+        // Parallel chunked reduce for very large nodes.
+        let nchunks = 16;
+        let chunk = m.div_ceil(nchunks);
+        let boxes: Vec<Bbox> = parlay::par_map(nchunks, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(m);
+            self.pts.bbox_of(&ids[lo..hi.max(lo)])
+        });
+        let mut bb = Bbox::empty(self.d);
+        for b in &boxes {
+            bb.merge(b);
+        }
+        bb
+    }
+}
+
+/// Squared distance between `q` and the `j`-th perm-ordered point,
+/// specialized by dimension so the compiler fully unrolls the common cases.
+#[inline(always)]
+fn dist_sq_at(pcoords: &[f64], d: usize, j: usize, q: &[f64]) -> f64 {
+    let base = j * d;
+    // SAFETY: j < perm.len(), q.len() == d — callers pass tree-owned values.
+    unsafe {
+        let p = pcoords.get_unchecked(base..base + d);
+        match d {
+            1 => {
+                let t = p[0] - q[0];
+                t * t
+            }
+            2 => {
+                let (a, b) = (p[0] - q[0], p[1] - q[1]);
+                a * a + b * b
+            }
+            3 => {
+                let (a, b, c) = (p[0] - q[0], p[1] - q[1], p[2] - q[2]);
+                a * a + b * b + c * c
+            }
+            4 => {
+                let (a, b, c, e) = (p[0] - q[0], p[1] - q[1], p[2] - q[2], p[3] - q[3]);
+                a * a + b * b + c * c + e * e
+            }
+            5 => {
+                let (a, b, c, e, f) = (p[0] - q[0], p[1] - q[1], p[2] - q[2], p[3] - q[3], p[4] - q[4]);
+                a * a + b * b + c * c + e * e + f * f
+            }
+            _ => {
+                let mut s = 0.0;
+                for k in 0..d {
+                    let t = p[k] - *q.get_unchecked(k);
+                    s += t * t;
+                }
+                s
+            }
+        }
+    }
+}
+
+// Small binary-heap helpers on a Vec<(f64, u32)> max-heap (root = max).
+fn heap_up(h: &mut [(f64, u32)]) {
+    let mut i = h.len() - 1;
+    while i > 0 {
+        let p = (i - 1) / 2;
+        if h[i] > h[p] {
+            h.swap(i, p);
+            i = p;
+        } else {
+            break;
+        }
+    }
+}
+
+fn heap_down(h: &mut [(f64, u32)]) {
+    let n = h.len();
+    let mut i = 0;
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut m = i;
+        if l < n && h[l] > h[m] {
+            m = l;
+        }
+        if r < n && h[r] > h[m] {
+            m = r;
+        }
+        if m == i {
+            break;
+        }
+        h.swap(i, m);
+        i = m;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Brute-force oracles (shared by tests and property suites)
+// ---------------------------------------------------------------------------
+
+/// O(n) reference NN: min (dist_sq, id), excluding `exclude`.
+pub fn brute_nn(pts: &PointSet, q: &[f64], exclude: u32) -> Option<(u32, f64)> {
+    let mut best: Option<(u32, f64)> = None;
+    for i in 0..pts.len() {
+        if i as u32 == exclude {
+            continue;
+        }
+        let ds = dist_sq(pts.point(i), q);
+        match best {
+            Some((bi, bd)) if ds > bd || (ds == bd && i as u32 > bi) => {}
+            _ => best = Some((i as u32, ds)),
+        }
+    }
+    best
+}
+
+/// O(n) reference range count.
+pub fn brute_range_count(pts: &PointSet, q: &[f64], r_sq: f64) -> usize {
+    (0..pts.len()).filter(|&i| dist_sq(pts.point(i), q) <= r_sq).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{gen_degenerate_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+
+    fn sample_points(seed: u64, n: usize, d: usize) -> PointSet {
+        let mut rng = SplitMix64::new(seed);
+        gen_uniform_points(&mut rng, n, d, 100.0)
+    }
+
+    #[test]
+    fn nn_matches_brute_force_2d() {
+        let pts = sample_points(1, 2000, 2);
+        let tree = KdTree::build(&pts);
+        for i in (0..pts.len()).step_by(37) {
+            let q = pts.point(i);
+            let got = tree.nn(q, i as u32, &mut NoStats).unwrap();
+            let want = brute_nn(&pts, q, i as u32).unwrap();
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn nn_matches_brute_force_high_dim() {
+        for d in [1, 3, 5, 8] {
+            let pts = sample_points(d as u64, 500, d);
+            let tree = KdTree::build(&pts);
+            for i in (0..pts.len()).step_by(23) {
+                let got = tree.nn(pts.point(i), i as u32, &mut NoStats).unwrap();
+                let want = brute_nn(&pts, pts.point(i), i as u32).unwrap();
+                assert_eq!(got, want, "d={d} query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_with_duplicates_ties_by_id() {
+        let mut rng = SplitMix64::new(5);
+        let pts = gen_degenerate_points(&mut rng, 120, 2);
+        let tree = KdTree::build(&pts);
+        for i in 0..pts.len() {
+            let got = tree.nn(pts.point(i), i as u32, &mut NoStats).unwrap();
+            let want = brute_nn(&pts, pts.point(i), i as u32).unwrap();
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn range_count_matches_brute_force() {
+        let pts = sample_points(2, 3000, 3);
+        let tree = KdTree::build(&pts);
+        for (i, r) in [(0usize, 5.0f64), (100, 20.0), (500, 50.0), (999, 0.0), (1500, 200.0)] {
+            let q = pts.point(i);
+            let want = brute_range_count(&pts, q, r * r);
+            assert_eq!(tree.range_count(q, r * r, &mut NoStats), want, "pruned i={i} r={r}");
+            assert_eq!(tree.range_count_noprune(q, r * r, &mut NoStats), want, "noprune i={i} r={r}");
+        }
+    }
+
+    #[test]
+    fn range_report_matches_filter() {
+        let pts = sample_points(3, 1000, 2);
+        let tree = KdTree::build(&pts);
+        let q = pts.point(123);
+        let r_sq = 15.0 * 15.0;
+        let mut got = Vec::new();
+        tree.range_report(q, r_sq, &mut got);
+        got.sort();
+        let want: Vec<u32> =
+            (0..pts.len() as u32).filter(|&i| pts.dist_sq_to(i as usize, q) <= r_sq).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let pts = sample_points(4, 800, 3);
+        let tree = KdTree::build(&pts);
+        for k in [1usize, 5, 17] {
+            let q = pts.point(42);
+            let got = tree.knn(q, k, 42);
+            let mut all: Vec<(u32, f64)> = (0..pts.len() as u32)
+                .filter(|&i| i != 42)
+                .map(|i| (i, pts.dist_sq_to(i as usize, q)))
+                .collect();
+            all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            all.truncate(k);
+            assert_eq!(got, all, "k={k}");
+        }
+    }
+
+    #[test]
+    fn build_from_subset_queries_only_subset() {
+        let pts = sample_points(6, 500, 2);
+        let ids: Vec<u32> = (0..500u32).filter(|i| i % 2 == 0).collect();
+        let tree = KdTree::build_from_ids(&pts, ids.clone());
+        assert_eq!(tree.size(), ids.len());
+        let q = pts.point(1); // odd point, not in tree
+        let got = tree.nn(q, NONE, &mut NoStats).unwrap();
+        assert!(got.0 % 2 == 0);
+        // brute force over subset
+        let mut best = (NONE, f64::INFINITY);
+        for &i in &ids {
+            let ds = pts.dist_sq_to(i as usize, q);
+            if ds < best.1 || (ds == best.1 && i < best.0) {
+                best = (i, ds);
+            }
+        }
+        assert_eq!(got, best);
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let pts = PointSet::new(vec![1.0, 2.0], 2);
+        let tree = KdTree::build(&pts);
+        assert_eq!(tree.nn(&[0.0, 0.0], NONE, &mut NoStats), Some((0, 5.0)));
+        assert_eq!(tree.nn(&[0.0, 0.0], 0, &mut NoStats), None);
+        assert_eq!(tree.range_count(&[1.0, 2.0], 0.0, &mut NoStats), 1);
+    }
+
+    #[test]
+    fn stats_are_collected() {
+        let pts = sample_points(7, 5000, 2);
+        let tree = KdTree::build(&pts);
+        let mut st = Stats::default();
+        tree.nn(pts.point(0), 0, &mut st);
+        assert!(st.nodes_visited > 0);
+        assert!(st.max_depth > 1);
+        // With pruning the visited count for a huge radius is tiny (root
+        // containment) vs noprune which must touch every leaf.
+        let mut s1 = Stats::default();
+        let mut s2 = Stats::default();
+        tree.range_count(pts.point(0), 1e12, &mut s1);
+        tree.range_count_noprune(pts.point(0), 1e12, &mut s2);
+        assert!(s1.nodes_visited < s2.nodes_visited / 10, "{} vs {}", s1.nodes_visited, s2.nodes_visited);
+    }
+
+    #[test]
+    fn parent_and_leaf_maps_consistent() {
+        let pts = sample_points(8, 1000, 2);
+        let tree = KdTree::build_with_maps(&pts);
+        assert_eq!(tree.parent_of(tree.root_idx()), NONE);
+        for p in 0..pts.len() as u32 {
+            let leaf = tree.leaf_of(p);
+            assert!(tree.is_leaf_idx(leaf));
+            assert!(tree.leaf_pts(leaf).contains(&p));
+            // walk to root
+            let mut cur = leaf;
+            let mut steps = 0;
+            while tree.parent_of(cur) != NONE {
+                cur = tree.parent_of(cur);
+                steps += 1;
+                assert!(steps < 64, "parent chain too long");
+            }
+            assert_eq!(cur, tree.root_idx());
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # ParCluster-RS
+//!
+//! A parallel exact Density Peaks Clustering (DPC) library, reproducing
+//! *"Faster Parallel Exact Density Peaks Clustering"* (Huang, Yu, Shun 2023)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! ## Layers
+//!
+//! - **L3 (this crate)** — the paper's contribution: parallel balanced
+//!   kd-trees, the *priority search kd-tree*, the *Fenwick-tree-of-kd-trees*
+//!   dependent-point finder, lock-free union-find single-linkage, plus the
+//!   coordinator that routes clustering jobs between the tree engine and the
+//!   AOT-compiled XLA brute-force engine.
+//! - **L2** — `python/compile/model.py`: tensorized brute-force DPC in JAX,
+//!   lowered once to HLO text under `artifacts/`.
+//! - **L1** — `python/compile/kernels/pairwise.py`: the Pallas tiled
+//!   pairwise-distance kernel feeding L2.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parcluster::dpc::{DpcParams, Dpc, DepAlgo};
+//! use parcluster::datasets::synthetic;
+//!
+//! let pts = synthetic::uniform(10_000, 2, 1000.0, 42);
+//! let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+//! let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts);
+//! println!("{} clusters, {} noise", out.num_clusters, out.num_noise);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod parlay;
+pub mod prng;
+pub mod geom;
+pub mod proputil;
+pub mod kdtree;
+pub mod pskd;
+pub mod fenwick;
+pub mod unionfind;
+pub mod dpc;
+pub mod datasets;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod cli;
+pub mod metrics;

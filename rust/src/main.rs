@@ -1,0 +1,223 @@
+//! `parcluster` — the leader binary: CLI over the coordinator service.
+
+use std::io::BufRead;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use parcluster::bench::fmt_secs;
+use parcluster::cli::{Args, USAGE};
+use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
+use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::datasets::{self, io};
+use parcluster::dpc::{decision, DpcParams};
+use parcluster::geom::PointSet;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "datasets" => cmd_datasets(&args),
+        "generate" => cmd_generate(&args),
+        "cluster" => cmd_cluster(&args),
+        "decision" => cmd_decision(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Print the Table-2 style dataset inventory.
+fn cmd_datasets(args: &Args) -> Result<()> {
+    let n = args.get_parse::<usize>("n")?;
+    let seed = args.get_or("seed", 42u64)?;
+    args.reject_unknown()?;
+    let mut table = parcluster::bench::Table::new(&["name", "n (here)", "n (paper)", "d", "d_cut", "rho_min", "delta_min"]);
+    for name in datasets::registry(1.0) {
+        let ds = datasets::by_name(name, n, seed).unwrap();
+        table.row(vec![
+            ds.name.clone(),
+            ds.pts.len().to_string(),
+            ds.paper_n.to_string(),
+            ds.pts.dim().to_string(),
+            format!("{}", ds.params.d_cut),
+            format!("{}", ds.params.rho_min),
+            format!("{}", ds.params.delta_min),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let name = args.require("dataset")?.to_string();
+    let n = args.get_parse::<usize>("n")?;
+    let seed = args.get_or("seed", 42u64)?;
+    let out = args.require("out")?.to_string();
+    let csv = args.switch("csv");
+    args.reject_unknown()?;
+    let ds = datasets::by_name(&name, n, seed).with_context(|| format!("unknown dataset {name:?}"))?;
+    let path = Path::new(&out);
+    if csv {
+        io::write_csv(&ds.pts, path)?;
+    } else {
+        io::write_binary(&ds.pts, path)?;
+    }
+    println!("wrote {} points (d={}) to {}", ds.pts.len(), ds.pts.dim(), out);
+    Ok(())
+}
+
+/// Load points from --dataset/--input and default params.
+fn load_input(args: &Args) -> Result<(PointSet, DpcParams, String)> {
+    if let Some(name) = args.get("dataset") {
+        let n = args.get_parse::<usize>("n")?;
+        let seed = args.get_or("seed", 42u64)?;
+        let ds = datasets::by_name(name, n, seed).with_context(|| format!("unknown dataset {name:?}"))?;
+        return Ok((ds.pts, ds.params, ds.name));
+    }
+    if let Some(path) = args.get("input") {
+        let p = Path::new(path);
+        let pts = if path.ends_with(".csv") { io::read_csv(p)? } else { io::read_binary(p)? };
+        return Ok((pts, DpcParams::default(), path.to_string()));
+    }
+    bail!("need --dataset NAME or --input FILE")
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let (pts, mut params, tag) = load_input(args)?;
+    params.d_cut = args.get_or("d-cut", params.d_cut)?;
+    params.rho_min = args.get_or("rho-min", params.rho_min)?;
+    params.delta_min = args.get_or("delta-min", params.delta_min)?;
+    let mut cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() }.with_env_overrides()?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = parse_backend(b)?;
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.dep_algo = parse_dep_algo(a)?;
+    }
+    cfg.threads = args.get_or("threads", 0usize)?;
+    let labels_out = args.get("labels-out").map(|s| s.to_string());
+    args.reject_unknown()?;
+
+    let coord = Coordinator::start(cfg)?;
+    let out = coord
+        .run_sync(ClusterJob::new(Arc::new(pts), params).tag(&tag))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let r = &out.result;
+    println!("dataset    : {tag}");
+    println!("backend    : {}", out.backend_used.name());
+    println!("points     : {}", r.labels.len());
+    println!("clusters   : {}", r.num_clusters);
+    println!("noise      : {}", r.num_noise);
+    println!(
+        "time       : total {} (density {}, dep {}, linkage {})",
+        fmt_secs(out.wall_s),
+        fmt_secs(r.timings.density_s),
+        fmt_secs(r.timings.dep_s),
+        fmt_secs(r.timings.linkage_s)
+    );
+    if let Some(path) = labels_out {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "id,label")?;
+        for (i, l) in r.labels.iter().enumerate() {
+            writeln!(f, "{i},{l}")?;
+        }
+        println!("labels -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_decision(args: &Args) -> Result<()> {
+    let (pts, mut params, tag) = load_input(args)?;
+    params.d_cut = args.get_or("d-cut", params.d_cut)?;
+    params.rho_min = 0.0;
+    params.delta_min = f64::INFINITY;
+    let k = args.get_or("k", 0usize)?;
+    let csv_out = args.get("csv-out").map(|s| s.to_string());
+    args.reject_unknown()?;
+    let result = parcluster::dpc::Dpc::new(params).run(&pts);
+    let graph = decision::decision_graph(&result);
+    println!("decision graph for {tag} (n={}, d_cut={}):", pts.len(), params.d_cut);
+    print!("{}", decision::ascii_plot(&graph, 64, 16));
+    if k > 0 {
+        let (rho_min, delta_min) = decision::suggest_params(&graph, k);
+        println!("suggested for k={k}: rho_min={rho_min}, delta_min={delta_min:.4}");
+    }
+    if let Some(path) = csv_out {
+        let f = std::fs::File::create(&path)?;
+        decision::write_csv(&graph, std::io::BufWriter::new(f))?;
+        println!("decision graph -> {path}");
+    }
+    Ok(())
+}
+
+/// Service demo: read jobs from stdin, submit to the coordinator, report.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => CoordinatorConfig::load(Path::new(p))?,
+        None => CoordinatorConfig::default(),
+    }
+    .with_env_overrides()?;
+    if let Some(w) = args.get_parse::<usize>("workers")? {
+        cfg.workers = w.max(1);
+    }
+    args.reject_unknown()?;
+    let coord = Coordinator::start(cfg)?;
+    println!(
+        "parcluster serve: {} workers, xla={}; job lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`",
+        coord.config().workers,
+        coord.has_xla()
+    );
+    let stdin = std::io::stdin();
+    let mut ids = Vec::new();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        if parts.len() < 5 {
+            eprintln!("skipping malformed job line: {t:?}");
+            continue;
+        }
+        let Some(ds) = datasets::by_name(parts[0], Some(parts[1].parse()?), 42) else {
+            eprintln!("unknown dataset {:?}", parts[0]);
+            continue;
+        };
+        let params = DpcParams { d_cut: parts[2].parse()?, rho_min: parts[3].parse()?, delta_min: parts[4].parse()? };
+        let mut job = ClusterJob::new(Arc::new(ds.pts), params).tag(parts[0]);
+        if let Some(a) = parts.get(5) {
+            job = job.dep_algo(parse_dep_algo(a)?);
+        }
+        ids.push(coord.submit(job));
+    }
+    for id in ids {
+        match coord.wait(id) {
+            Ok(out) => println!(
+                "job {id}: tag={} backend={} clusters={} noise={} wall={}",
+                out.tag,
+                out.backend_used.name(),
+                out.result.num_clusters,
+                out.result.num_noise,
+                fmt_secs(out.wall_s)
+            ),
+            Err(e) => println!("job {id}: FAILED {e}"),
+        }
+    }
+    println!("--- metrics ---\n{}", coord.metrics.render());
+    Ok(())
+}

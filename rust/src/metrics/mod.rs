@@ -1,0 +1,114 @@
+//! Clustering-quality metrics: Adjusted Rand Index and Normalized Mutual
+//! Information. Used to verify (a) exactness — our five Step-2 algorithms
+//! must yield ARI = 1 against each other — and (b) the quality of the
+//! approximate baseline and the XLA brute-force backend against the exact
+//! engine.
+//!
+//! Labels use the convention of [`crate::dpc::DpcResult`]: any i64, −1 =
+//! noise. Noise is treated as its own (shared) label, matching how the
+//! paper's quality comparisons count unassigned points.
+
+use std::collections::HashMap;
+
+fn contingency(a: &[i64], b: &[i64]) -> (HashMap<(i64, i64), f64>, HashMap<i64, f64>, HashMap<i64, f64>) {
+    assert_eq!(a.len(), b.len());
+    let mut joint: HashMap<(i64, i64), f64> = HashMap::new();
+    let mut ma: HashMap<i64, f64> = HashMap::new();
+    let mut mb: HashMap<i64, f64> = HashMap::new();
+    for i in 0..a.len() {
+        *joint.entry((a[i], b[i])).or_insert(0.0) += 1.0;
+        *ma.entry(a[i]).or_insert(0.0) += 1.0;
+        *mb.entry(b[i]).or_insert(0.0) += 1.0;
+    }
+    (joint, ma, mb)
+}
+
+fn comb2(x: f64) -> f64 {
+    x * (x - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index in [−1, 1]; 1 = identical partitions.
+pub fn adjusted_rand_index(a: &[i64], b: &[i64]) -> f64 {
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let (joint, ma, mb) = contingency(a, b);
+    let sum_ij: f64 = joint.values().map(|&v| comb2(v)).sum();
+    let sum_a: f64 = ma.values().map(|&v| comb2(v)).sum();
+    let sum_b: f64 = mb.values().map(|&v| comb2(v)).sum();
+    let expected = sum_a * sum_b / comb2(n);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // degenerate: both trivial partitions
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information in [0, 1] (arithmetic-mean normalization).
+pub fn normalized_mutual_info(a: &[i64], b: &[i64]) -> f64 {
+    let n = a.len() as f64;
+    if n == 0.0 {
+        return 1.0;
+    }
+    let (joint, ma, mb) = contingency(a, b);
+    let mut mi = 0.0;
+    for (&(x, y), &nxy) in &joint {
+        let px = ma[&x] / n;
+        let py = mb[&y] / n;
+        let pxy = nxy / n;
+        mi += pxy * (pxy / (px * py)).ln();
+    }
+    let ha: f64 = -ma.values().map(|&v| (v / n) * (v / n).ln()).sum::<f64>();
+    let hb: f64 = -mb.values().map(|&v| (v / n) * (v / n).ln()).sum::<f64>();
+    if ha < 1e-12 && hb < 1e-12 {
+        return 1.0;
+    }
+    (mi / (0.5 * (ha + hb))).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = vec![0, 0, 1, 1, 2, -1];
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+        assert!((normalized_mutual_info(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renamed_labels_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![7, 7, 3, 3, 9, 9];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_info(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_partitions_score_near_zero() {
+        // Alternating vs. block labels over 1000 points.
+        let a: Vec<i64> = (0..1000).map(|i| i % 2).collect();
+        let b: Vec<i64> = (0..1000).map(|i| i / 500).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.05, "ari={ari}");
+    }
+
+    #[test]
+    fn partial_agreement_between_zero_and_one() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.0 && ari < 1.0, "ari={ari}");
+        let nmi = normalized_mutual_info(&a, &b);
+        assert!(nmi > 0.0 && nmi < 1.0, "nmi={nmi}");
+    }
+
+    #[test]
+    fn single_cluster_degenerate_cases() {
+        let a = vec![0; 10];
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+        assert_eq!(normalized_mutual_info(&a, &a), 1.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! ParlayLib-style parallel primitives on top of `std::thread`.
+//!
+//! The paper's implementation uses ParlayLib [9] (fork-join work stealing,
+//! parallel loops, sorts, and priority concurrent writes). Neither ParlayLib
+//! nor rayon is available in this offline image, so this module rebuilds the
+//! required subset from scratch:
+//!
+//! - [`pool`]: a fork-join thread pool with *help-first* joins (a blocked
+//!   joiner executes queued tasks instead of sleeping, so nested parallelism
+//!   — e.g. the recursive kd-tree build — cannot deadlock).
+//! - [`ops`]: `par_for`, `par_map`, `par_reduce`, `par_scan` (prefix sums),
+//!   `par_filter`/`pack`, and the paper's `WRITE-MIN` priority concurrent
+//!   write [60].
+//! - [`sort`]: parallel merge sort and a parallel LSD radix sort (used for
+//!   the density sort in `FENWICK-DEPENDENT-POINT`, Algorithm 2 line 9).
+//!
+//! All primitives degrade to efficient sequential code when the pool has a
+//! single thread (the container this repo was built in has one core; see
+//! `EXPERIMENTS.md` §Threads for how parallel scalability is evidenced).
+
+pub mod pool;
+pub mod ops;
+pub mod sort;
+
+pub use ops::{par_for, par_for_grained, par_map, par_reduce, par_scan_add, par_filter, WriteMinF64, WriteMinPair};
+pub use pool::{Pool, set_threads, num_threads};
+pub use sort::{par_sort_by_key, par_radix_sort_u64, par_sort_unstable_by};

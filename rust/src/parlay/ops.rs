@@ -1,0 +1,317 @@
+//! Core parallel operations: loops, map, reduce, scan, pack, and the
+//! paper's `WRITE-MIN` priority concurrent write [60].
+
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pool;
+
+/// Default grain: coarse enough that task overhead is amortized, fine enough
+/// to load-balance. Tuned in §Perf (EXPERIMENTS.md).
+fn auto_grain(n: usize, threads: usize) -> usize {
+    (n / (8 * threads.max(1))).max(256).min(n.max(1))
+}
+
+/// Parallel for over `0..n` with an automatically chosen grain.
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let p = pool::global();
+    let grain = auto_grain(n, p.threads());
+    p.for_range(0, n, grain, &|lo, hi| {
+        for i in lo..hi {
+            f(i);
+        }
+    });
+}
+
+/// Parallel for over `0..n` with an explicit grain size.
+pub fn par_for_grained<F: Fn(usize) + Sync>(n: usize, grain: usize, f: F) {
+    let p = pool::global();
+    p.for_range(0, n, grain.max(1), &|lo, hi| {
+        for i in lo..hi {
+            f(i);
+        }
+    });
+}
+
+/// Parallel chunked for: `f(lo, hi)` is called on disjoint chunks covering
+/// `0..n`. Lets callers hoist per-chunk state (e.g. reused query stacks).
+pub fn par_chunks<F: Fn(usize, usize) + Sync>(n: usize, grain: usize, f: F) {
+    let p = pool::global();
+    p.for_range(0, n, grain.max(1), &f);
+}
+
+/// Parallel map `0..n -> Vec<T>`.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: every slot in 0..n is written exactly once below before we
+    // assume initialization (for_range covers 0..n with disjoint chunks).
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(n);
+    }
+    {
+        let slots = out.as_mut_ptr() as usize;
+        par_for(n, |i| {
+            let p = slots as *mut MaybeUninit<T>;
+            // SAFETY: disjoint indices; each written once.
+            unsafe {
+                (*p.add(i)).write(f(i));
+            }
+        });
+    }
+    // SAFETY: all n slots initialized.
+    unsafe { std::mem::transmute::<Vec<MaybeUninit<T>>, Vec<T>>(out) }
+}
+
+/// Parallel reduce of `map(0) ⊕ map(1) ⊕ ... ⊕ map(n-1)` with identity `id`.
+/// `combine` must be associative.
+pub fn par_reduce<T, M, C>(n: usize, id: T, map: M, combine: C) -> T
+where
+    T: Send + Sync + Clone,
+    M: Fn(usize) -> T + Sync,
+    C: Fn(T, T) -> T + Sync + Send,
+{
+    let p = pool::global();
+    let grain = auto_grain(n, p.threads());
+    let nchunks = n.div_ceil(grain.max(1)).max(1);
+    let partials: Vec<T> = par_map(nchunks, |c| {
+        let lo = c * grain;
+        let hi = ((c + 1) * grain).min(n);
+        let mut acc = id.clone();
+        for i in lo..hi {
+            acc = combine(acc, map(i));
+        }
+        acc
+    });
+    let mut acc = id;
+    for x in partials {
+        acc = combine(acc, x);
+    }
+    acc
+}
+
+/// Parallel exclusive prefix sum over `vals`. Returns the prefix array
+/// (`out[i] = Σ_{j<i} vals[j]`) and the total sum.
+pub fn par_scan_add(vals: &[usize]) -> (Vec<usize>, usize) {
+    let n = vals.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let p = pool::global();
+    let grain = auto_grain(n, p.threads());
+    let nchunks = n.div_ceil(grain);
+    // Pass 1: per-chunk sums.
+    let sums: Vec<usize> = par_map(nchunks, |c| {
+        let lo = c * grain;
+        let hi = ((c + 1) * grain).min(n);
+        vals[lo..hi].iter().sum()
+    });
+    // Sequential scan over chunk sums (nchunks is small).
+    let mut offsets = vec![0usize; nchunks];
+    let mut total = 0usize;
+    for c in 0..nchunks {
+        offsets[c] = total;
+        total += sums[c];
+    }
+    // Pass 2: local scans with offsets.
+    let mut out: Vec<MaybeUninit<usize>> = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(n);
+    }
+    let base = out.as_mut_ptr() as usize;
+    par_for_grained(nchunks, 1, |c| {
+        let lo = c * grain;
+        let hi = ((c + 1) * grain).min(n);
+        let mut acc = offsets[c];
+        let ptr = base as *mut MaybeUninit<usize>;
+        for i in lo..hi {
+            // SAFETY: disjoint chunks, each index written once.
+            unsafe {
+                (*ptr.add(i)).write(acc);
+            }
+            acc += vals[i];
+        }
+    });
+    let out = unsafe { std::mem::transmute::<Vec<MaybeUninit<usize>>, Vec<usize>>(out) };
+    (out, total)
+}
+
+/// Parallel filter: keep `i` where `keep(i)`, mapping kept indices through
+/// `f`. Stable (output preserves index order).
+pub fn par_filter<T, K, F>(n: usize, keep: K, f: F) -> Vec<T>
+where
+    T: Send,
+    K: Fn(usize) -> bool + Sync,
+    F: Fn(usize) -> T + Sync,
+{
+    let flags: Vec<usize> = par_map(n, |i| usize::from(keep(i)));
+    let (pos, total) = par_scan_add(&flags);
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(total);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(total);
+    }
+    let base = out.as_mut_ptr() as usize;
+    par_for(n, |i| {
+        if flags[i] == 1 {
+            let ptr = base as *mut MaybeUninit<T>;
+            // SAFETY: scan positions are unique for kept elements.
+            unsafe {
+                (*ptr.add(pos[i])).write(f(i));
+            }
+        }
+    });
+    unsafe { std::mem::transmute::<Vec<MaybeUninit<T>>, Vec<T>>(out) }
+}
+
+// ---------------------------------------------------------------------------
+// WRITE-MIN priority concurrent writes [60]
+// ---------------------------------------------------------------------------
+
+/// Atomic minimum over non-negative `f64` values (`WRITE-MIN`).
+///
+/// Relies on the fact that for non-negative IEEE-754 doubles the bit pattern
+/// ordering equals numeric ordering, so `fetch_min` on the raw bits is exact.
+pub struct WriteMinF64 {
+    bits: AtomicU64,
+}
+
+impl WriteMinF64 {
+    pub fn new() -> Self {
+        WriteMinF64 { bits: AtomicU64::new(f64::INFINITY.to_bits()) }
+    }
+
+    /// Atomically `self = min(self, v)`. `v` must be non-negative (or +inf).
+    #[inline]
+    pub fn update(&self, v: f64) {
+        debug_assert!(v >= 0.0);
+        self.bits.fetch_min(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for WriteMinF64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Atomic `WRITE-MIN` over `(distance, id)` pairs, packed into one `u64`:
+/// high 32 bits = monotone bits of the `f32`-rounded distance, low 32 bits =
+/// id. Ordering is therefore (f32(dist), id) lexicographic — ties at f32
+/// resolution are broken by smaller id, matching the paper's tie rule.
+///
+/// Call sites that need exact f64 comparisons (e.g. the Fenwick query's
+/// O(log n)-way aggregation) use a sequential exact reduce instead; this type
+/// is for high-fan-in concurrent writes where f32 key resolution suffices.
+pub struct WriteMinPair {
+    bits: AtomicU64,
+}
+
+impl WriteMinPair {
+    pub fn new() -> Self {
+        WriteMinPair { bits: AtomicU64::new(u64::MAX) }
+    }
+
+    #[inline]
+    fn pack(dist: f64, id: u32) -> u64 {
+        let key = (dist as f32).to_bits(); // non-negative => monotone
+        ((key as u64) << 32) | id as u64
+    }
+
+    /// Atomically keep the smallest `(dist, id)`.
+    #[inline]
+    pub fn update(&self, dist: f64, id: u32) {
+        debug_assert!(dist >= 0.0);
+        self.bits.fetch_min(Self::pack(dist, id), Ordering::Relaxed);
+    }
+
+    /// Returns `(dist, id)`, or `None` if never updated.
+    pub fn get(&self) -> Option<(f32, u32)> {
+        let b = self.bits.load(Ordering::Relaxed);
+        if b == u64::MAX {
+            return None;
+        }
+        Some((f32::from_bits((b >> 32) as u32), (b & 0xFFFF_FFFF) as u32))
+    }
+}
+
+impl Default for WriteMinPair {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let v = par_map(10_000, |i| i * i);
+        assert_eq!(v.len(), 10_000);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_reduce_sum() {
+        let n = 100_000usize;
+        let s = par_reduce(n, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(s, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_scan_matches_serial() {
+        let vals: Vec<usize> = (0..5000).map(|i| (i * 7 + 3) % 11).collect();
+        let (scan, total) = par_scan_add(&vals);
+        let mut acc = 0;
+        for i in 0..vals.len() {
+            assert_eq!(scan[i], acc, "at {i}");
+            acc += vals[i];
+        }
+        assert_eq!(total, acc);
+    }
+
+    #[test]
+    fn par_scan_empty_and_one() {
+        assert_eq!(par_scan_add(&[]), (vec![], 0));
+        assert_eq!(par_scan_add(&[5]), (vec![0], 5));
+    }
+
+    #[test]
+    fn par_filter_stable() {
+        let v = par_filter(1000, |i| i % 3 == 0, |i| i);
+        let expect: Vec<usize> = (0..1000).filter(|i| i % 3 == 0).collect();
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn write_min_f64_concurrent() {
+        let wm = WriteMinF64::new();
+        par_for(10_000, |i| {
+            wm.update((i as f64 * 13.7) % 997.0);
+        });
+        let seq = (0..10_000).map(|i| (i as f64 * 13.7) % 997.0).fold(f64::INFINITY, f64::min);
+        assert_eq!(wm.get(), seq);
+    }
+
+    #[test]
+    fn write_min_pair_tie_breaks_by_id() {
+        let wm = WriteMinPair::new();
+        wm.update(1.5, 7);
+        wm.update(1.5, 3);
+        wm.update(2.0, 1);
+        assert_eq!(wm.get(), Some((1.5, 3)));
+    }
+
+    #[test]
+    fn write_min_pair_empty() {
+        assert_eq!(WriteMinPair::new().get(), None);
+    }
+}

@@ -1,0 +1,209 @@
+//! Parallel sorting: merge sort (comparison) and LSD radix sort (integer
+//! keys; used for the density sort in Algorithm 2 line 9, which the paper
+//! notes takes O(n) work because densities are bounded by n [53]).
+
+use super::ops::{par_for_grained, par_map};
+use super::pool;
+
+/// Parallel stable merge sort by a key function.
+pub fn par_sort_by_key<T, K, F>(items: &mut [T], key: F)
+where
+    T: Send + Sync + Clone,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    par_sort_unstable_by(items, |a, b| key(a).cmp(&key(b)));
+}
+
+/// Parallel sort with a comparator: chunk-sort then log-round pairwise merge.
+/// (Merges within a round run in parallel across pairs; each merge is
+/// sequential — adequate for the coarse-grained uses in this crate.)
+pub fn par_sort_unstable_by<T, C>(items: &mut [T], cmp: C)
+where
+    T: Send + Sync + Clone,
+    C: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+{
+    let n = items.len();
+    let threads = pool::num_threads();
+    if threads == 1 || n < 4096 {
+        items.sort_by(&cmp);
+        return;
+    }
+    let nchunks = (threads * 4).next_power_of_two();
+    let chunk = n.div_ceil(nchunks);
+    // Sort chunks in parallel. Split via chunks_mut to get disjoint &mut.
+    {
+        let chunks: Vec<&mut [T]> = items.chunks_mut(chunk).collect();
+        let nreal = chunks.len();
+        let ptrs: Vec<usize> = chunks.iter().map(|c| c.as_ptr() as usize).collect();
+        let lens: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        drop(chunks);
+        par_for_grained(nreal, 1, |i| {
+            // SAFETY: chunks are disjoint subslices of `items`.
+            let s = unsafe { std::slice::from_raw_parts_mut(ptrs[i] as *mut T, lens[i]) };
+            s.sort_by(&cmp);
+        });
+    }
+    // Iterative pairwise merge rounds.
+    let mut buf: Vec<T> = items.to_vec();
+    let mut width = chunk;
+    let mut src_is_items = true;
+    while width < n {
+        let (src, dst): (&[T], &mut [T]) = if src_is_items {
+            (unsafe { std::slice::from_raw_parts(items.as_ptr(), n) }, &mut buf[..])
+        } else {
+            (unsafe { std::slice::from_raw_parts(buf.as_ptr(), n) }, &mut items[..])
+        };
+        let dst_ptr = dst.as_mut_ptr() as usize;
+        let npairs = n.div_ceil(2 * width);
+        par_for_grained(npairs, 1, |p| {
+            let lo = p * 2 * width;
+            let mid = (lo + width).min(n);
+            let hi = (lo + 2 * width).min(n);
+            // SAFETY: [lo,hi) ranges are disjoint across p.
+            let out = unsafe { std::slice::from_raw_parts_mut((dst_ptr as *mut T).add(lo), hi - lo) };
+            merge_into(&src[lo..mid], &src[mid..hi], out, &cmp);
+        });
+        src_is_items = !src_is_items;
+        width *= 2;
+    }
+    if !src_is_items {
+        items.clone_from_slice(&buf);
+    }
+}
+
+fn merge_into<T: Clone, C: Fn(&T, &T) -> std::cmp::Ordering>(a: &[T], b: &[T], out: &mut [T], cmp: &C) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j, mut k) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        if cmp(&a[i], &b[j]) != std::cmp::Ordering::Greater {
+            out[k] = a[i].clone();
+            i += 1;
+        } else {
+            out[k] = b[j].clone();
+            j += 1;
+        }
+        k += 1;
+    }
+    while i < a.len() {
+        out[k] = a[i].clone();
+        i += 1;
+        k += 1;
+    }
+    while j < b.len() {
+        out[k] = b[j].clone();
+        j += 1;
+        k += 1;
+    }
+}
+
+/// Parallel LSD radix sort of `(key, payload)` pairs by `key`, 8 bits per
+/// round, skipping rounds where all keys share the digit. Stable.
+pub fn par_radix_sort_u64(items: &mut Vec<(u64, u32)>) {
+    let n = items.len();
+    if n <= 1 {
+        return;
+    }
+    let max_key = items.iter().map(|(k, _)| *k).max().unwrap_or(0);
+    let rounds = if max_key == 0 { 1 } else { (64 - max_key.leading_zeros()).div_ceil(8) as usize };
+    let threads = pool::num_threads();
+    let nchunks = (threads * 2).max(1);
+    let chunk = n.div_ceil(nchunks);
+    let mut buf: Vec<(u64, u32)> = vec![(0, 0); n];
+    for r in 0..rounds {
+        let shift = r * 8;
+        // Per-chunk histograms.
+        let hists: Vec<[u32; 256]> = par_map(nchunks, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            let mut h = [0u32; 256];
+            for it in &items[lo..hi.max(lo)] {
+                h[((it.0 >> shift) & 0xFF) as usize] += 1;
+            }
+            h
+        });
+        // Global digit offsets: for stability, order = digit-major then chunk.
+        let mut offsets = vec![[0u32; 256]; nchunks];
+        let mut run = 0u32;
+        for d in 0..256 {
+            for c in 0..nchunks {
+                offsets[c][d] = run;
+                run += hists[c][d];
+            }
+        }
+        // Scatter.
+        {
+            let src = &*items;
+            let dst = buf.as_mut_ptr() as usize;
+            par_for_grained(nchunks, 1, |c| {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                let mut offs = offsets[c];
+                let dptr = dst as *mut (u64, u32);
+                for it in &src[lo..hi.max(lo)] {
+                    let d = ((it.0 >> shift) & 0xFF) as usize;
+                    // SAFETY: offsets partition 0..n disjointly across
+                    // (chunk, digit) pairs.
+                    unsafe {
+                        *dptr.add(offs[d] as usize) = *it;
+                    }
+                    offs[d] += 1;
+                }
+            });
+        }
+        std::mem::swap(items, &mut buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn par_sort_matches_std() {
+        let mut rng = SplitMix64::new(1);
+        let mut v: Vec<u64> = (0..50_000).map(|_| rng.next_u64() % 10_000).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        par_sort_unstable_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn par_sort_small_and_empty() {
+        let mut v: Vec<u32> = vec![];
+        par_sort_unstable_by(&mut v, |a, b| a.cmp(b));
+        let mut v = vec![3u32, 1, 2];
+        par_sort_unstable_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn radix_sort_matches_std_and_is_stable() {
+        let mut rng = SplitMix64::new(7);
+        let mut v: Vec<(u64, u32)> = (0..30_000).map(|i| (rng.next_u64() % 512, i as u32)).collect();
+        let mut expect = v.clone();
+        expect.sort_by_key(|&(k, id)| (k, id)); // stability => id order within key
+        par_radix_sort_u64(&mut v);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn radix_sort_large_keys() {
+        let mut rng = SplitMix64::new(9);
+        let mut v: Vec<(u64, u32)> = (0..10_000).map(|i| (rng.next_u64(), i as u32)).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        par_radix_sort_u64(&mut v);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn radix_sort_all_equal() {
+        let mut v: Vec<(u64, u32)> = (0..100).map(|i| (42, i as u32)).collect();
+        let expect = v.clone();
+        par_radix_sort_u64(&mut v);
+        assert_eq!(v, expect);
+    }
+}

@@ -1,0 +1,164 @@
+//! A minimal property-based testing harness (proptest/quickcheck are not
+//! available offline). Each property runs `cases` times with a deterministic
+//! per-case seed derived from a base seed; a failure reports the case index
+//! and seed so it can be replayed exactly.
+//!
+//! Used by the invariant suites in `rust/tests/` (see DESIGN.md §6 for the
+//! invariant list).
+
+use crate::geom::PointSet;
+use crate::prng::SplitMix64;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xDA7A_5EED }
+    }
+}
+
+impl Config {
+    pub fn cases(n: u64) -> Self {
+        Config { cases: n, ..Default::default() }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs. `gen` receives a fresh
+/// deterministic RNG per case. Panics with replay info on the first failure.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cfg: Config, gen: G, prop: P)
+where
+    G: Fn(&mut SplitMix64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case);
+        let mut rng = SplitMix64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' FAILED at case {case}/{} (seed {case_seed:#x}):\n  {msg}\n  input: {input:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Random point count in `[lo, hi]`.
+pub fn gen_size(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+/// Uniform points in `[0, extent)^d`.
+pub fn gen_uniform_points(rng: &mut SplitMix64, n: usize, d: usize, extent: f64) -> PointSet {
+    let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(0.0, extent)).collect();
+    PointSet::new(coords, d)
+}
+
+/// Points on an integer grid in `[0, side)^d` — distances are exactly
+/// representable, which removes floating-point boundary ambiguity when
+/// comparing two different distance formulas (e.g. Rust engine vs XLA).
+pub fn gen_grid_points(rng: &mut SplitMix64, n: usize, d: usize, side: u64) -> PointSet {
+    let coords: Vec<f64> = (0..n * d).map(|_| rng.next_below(side) as f64).collect();
+    PointSet::new(coords, d)
+}
+
+/// Clustered points: `k` Gaussian blobs with uniform centers.
+pub fn gen_clustered_points(rng: &mut SplitMix64, n: usize, d: usize, k: usize, extent: f64, sigma: f64) -> PointSet {
+    let centers: Vec<f64> = (0..k * d).map(|_| rng.uniform(0.0, extent)).collect();
+    let mut coords = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = rng.next_below(k as u64) as usize;
+        for kdim in 0..d {
+            coords.push(centers[c * d + kdim] + sigma * rng.normal());
+        }
+    }
+    PointSet::new(coords, d)
+}
+
+/// Degenerate sets that stress tie-breaking: many duplicate points plus
+/// collinear runs.
+pub fn gen_degenerate_points(rng: &mut SplitMix64, n: usize, d: usize) -> PointSet {
+    let mut coords = Vec::with_capacity(n * d);
+    let n_dup = n / 3;
+    let n_line = n / 3;
+    for _ in 0..n_dup {
+        for k in 0..d {
+            coords.push(if k == 0 { 5.0 } else { 1.0 });
+        }
+    }
+    for i in 0..n_line {
+        for k in 0..d {
+            coords.push(if k == 0 { i as f64 } else { 0.0 });
+        }
+    }
+    for _ in 0..(n - n_dup - n_line) {
+        for _ in 0..d {
+            coords.push(rng.next_below(8) as f64);
+        }
+    }
+    PointSet::new(coords, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", Config::cases(16), |rng| rng.next_below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", Config::cases(8), |rng| rng.next_below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_produce_requested_shapes() {
+        let mut rng = SplitMix64::new(1);
+        let ps = gen_uniform_points(&mut rng, 100, 3, 10.0);
+        assert_eq!((ps.len(), ps.dim()), (100, 3));
+        let ps = gen_grid_points(&mut rng, 50, 2, 4);
+        assert!(ps.coords().iter().all(|&c| c.fract() == 0.0 && c < 4.0));
+        let ps = gen_clustered_points(&mut rng, 60, 2, 3, 100.0, 1.0);
+        assert_eq!(ps.len(), 60);
+        let ps = gen_degenerate_points(&mut rng, 30, 2);
+        assert_eq!(ps.len(), 30);
+    }
+
+    #[test]
+    fn gen_size_bounds() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..100 {
+            let s = gen_size(&mut rng, 5, 9);
+            assert!((5..=9).contains(&s));
+        }
+    }
+}

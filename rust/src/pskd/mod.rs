@@ -1,0 +1,422 @@
+//! Priority search kd-tree (§4.2) — the paper's main data-structure
+//! contribution, a d-dimensional generalization of McCreight's priority
+//! search tree and an optimization of the max kd-tree.
+//!
+//! Every node stores **the highest-priority point of its subtree at the node
+//! itself** (not at a leaf), so γ values satisfy the max-heap property along
+//! every root-to-leaf path. The remaining points are split evenly by the
+//! median along the widest side of the node's cell. Consequences:
+//!
+//! - For any threshold γ_q, the node set `T_q = {v : γ(v) > γ_q}` is a
+//!   connected upper portion of the tree (footnote 6), so a *priority
+//!   nearest-neighbor* query — NN among points with priority > γ_q — is a
+//!   plain NN search on an incomplete kd-tree whose active part is `T_q`:
+//!   prune on `γ(v) ≤ γ_q` exactly like an `isActive == false` subtree.
+//! - Each cell is uniquely associated with one point, which is what makes
+//!   the Appendix-A priority range query bound `O(n^(1-1/d) + |Q|)` provable
+//!   (impossible for a max kd-tree).
+//!
+//! With γ = DPC density (ties broken by id, packed into the key — see
+//! [`crate::dpc::priority_key`]), one priority-NN query per point computes
+//! all dependent points fully in parallel (Algorithm 1).
+//!
+//! Layout: a subtree over `m` points occupies exactly `m` contiguous arena
+//! slots (each node consumes one point), so the parallel recursive build
+//! writes disjoint regions lock-free. Construction: O(n log n) work,
+//! O(log n log log n) span (theoretical; the per-node median select is
+//! sequential in this implementation — see DESIGN.md §Perf).
+
+use crate::geom::{Bbox, PointSet};
+use crate::kdtree::StatSink;
+use crate::parlay;
+
+const NONE: u32 = u32::MAX;
+const BUILD_GRAIN: usize = 2048;
+
+/// Priority search kd-tree over a borrowed point set with one `u64` priority
+/// per point. Priorities must be **unique** (callers pack a tiebreaker into
+/// the low bits; see `dpc::priority_key`).
+pub struct PriorityKdTree<'p> {
+    pts: &'p PointSet,
+    node_point: Vec<u32>,
+    node_gamma: Vec<u64>,
+    /// Node points' coordinates, slot-ordered (§Perf: the candidate-distance
+    /// computation at every visited node reads these contiguously instead of
+    /// chasing into the PointSet).
+    node_coords: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    bounds: Vec<f64>,
+    root: u32,
+}
+
+impl<'p> PriorityKdTree<'p> {
+    /// BUILD-PRIORITY-SEARCH-KD-TREE(P, γ).
+    pub fn build(pts: &'p PointSet, gamma: &[u64]) -> Self {
+        assert_eq!(gamma.len(), pts.len());
+        assert!(!pts.is_empty());
+        let n = pts.len();
+        let d = pts.dim();
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        let mut t = PriorityKdTree {
+            pts,
+            node_point: vec![NONE; n],
+            node_gamma: vec![0; n],
+            node_coords: vec![0.0; n * d],
+            left: vec![NONE; n],
+            right: vec![NONE; n],
+            bounds: vec![0.0; n * 2 * d],
+            root: 0,
+        };
+        {
+            let b = PskdBuilder {
+                pts,
+                gamma,
+                d,
+                node_point: t.node_point.as_mut_ptr() as usize,
+                node_gamma: t.node_gamma.as_mut_ptr() as usize,
+                node_coords: t.node_coords.as_mut_ptr() as usize,
+                left: t.left.as_mut_ptr() as usize,
+                right: t.right.as_mut_ptr() as usize,
+                bounds: t.bounds.as_mut_ptr() as usize,
+            };
+            b.build_rec(&mut ids, 0);
+        }
+        t
+    }
+
+    #[inline]
+    fn bbox_dist_sq(&self, i: u32, q: &[f64]) -> f64 {
+        let d = self.pts.dim();
+        let base = i as usize * 2 * d;
+        let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
+        let mut s = 0.0;
+        for k in 0..d {
+            let v = q[k];
+            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { 0.0 };
+            s += t * t;
+        }
+        s
+    }
+
+    /// QUERY-PRIORITY-NN: nearest point with priority strictly greater than
+    /// `gamma_q`. Ties in distance broken by smaller point id. Returns
+    /// `(id, dist_sq)`; `None` iff no point has priority > `gamma_q` (i.e.
+    /// the query is the global density peak).
+    pub fn priority_nn<S: StatSink>(&self, q: &[f64], gamma_q: u64, stats: &mut S) -> Option<(u32, f64)> {
+        let mut best = (NONE, f64::INFINITY);
+        self.pnn_rec(self.root, q, gamma_q, &mut best, stats, 1);
+        if best.0 == NONE {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    fn pnn_rec<S: StatSink>(&self, i: u32, q: &[f64], gamma_q: u64, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+        // Heap-property prune: γ of node = max γ of subtree.
+        if self.node_gamma[i as usize] <= gamma_q {
+            return;
+        }
+        stats.visit_node();
+        stats.depth(depth);
+        // The node's own point is a valid candidate (γ > γ_q holds here).
+        stats.scan_point();
+        let d = self.pts.dim();
+        let base = i as usize * d;
+        let mut ds = 0.0;
+        for k in 0..d {
+            let t = self.node_coords[base + k] - q[k];
+            ds += t * t;
+        }
+        if ds < best.1 || ds == best.1 {
+            let p = self.node_point[i as usize];
+            if ds < best.1 || p < best.0 {
+                *best = (p, ds);
+            }
+        }
+        let (l, r) = (self.left[i as usize], self.right[i as usize]);
+        let dl = if l != NONE { self.bbox_dist_sq(l, q) } else { f64::INFINITY };
+        let dr = if r != NONE { self.bbox_dist_sq(r, q) } else { f64::INFINITY };
+        let (first, d1, second, d2) = if dl <= dr { (l, dl, r, dr) } else { (r, dr, l, dl) };
+        if first != NONE && d1 <= best.1 {
+            self.pnn_rec(first, q, gamma_q, best, stats, depth + 1);
+        }
+        if second != NONE && d2 <= best.1 {
+            self.pnn_rec(second, q, gamma_q, best, stats, depth + 1);
+        }
+    }
+
+    /// Priority range query (Appendix A): all points inside the ball
+    /// `|x-q|² ≤ r_sq` with priority > `gamma_q`.
+    pub fn priority_range(&self, q: &[f64], r_sq: f64, gamma_q: u64, out: &mut Vec<u32>) {
+        self.prange_rec(self.root, q, r_sq, gamma_q, out);
+    }
+
+    fn prange_rec(&self, i: u32, q: &[f64], r_sq: f64, gamma_q: u64, out: &mut Vec<u32>) {
+        if self.node_gamma[i as usize] <= gamma_q || self.bbox_dist_sq(i, q) > r_sq {
+            return;
+        }
+        let p = self.node_point[i as usize];
+        if self.pts.dist_sq_to(p as usize, q) <= r_sq {
+            out.push(p);
+        }
+        let (l, r) = (self.left[i as usize], self.right[i as usize]);
+        if l != NONE {
+            self.prange_rec(l, q, r_sq, gamma_q, out);
+        }
+        if r != NONE {
+            self.prange_rec(r, q, r_sq, gamma_q, out);
+        }
+    }
+
+    /// Max depth of the tree (test/diagnostic; O(n)).
+    pub fn depth(&self) -> usize {
+        fn rec(t: &PriorityKdTree, i: u32) -> usize {
+            let (l, r) = (t.left[i as usize], t.right[i as usize]);
+            let dl = if l != NONE { rec(t, l) } else { 0 };
+            let dr = if r != NONE { rec(t, r) } else { 0 };
+            1 + dl.max(dr)
+        }
+        rec(self, self.root)
+    }
+
+    /// Verify the heap property (test/diagnostic).
+    pub fn check_heap_property(&self) -> bool {
+        fn rec(t: &PriorityKdTree, i: u32) -> bool {
+            let g = t.node_gamma[i as usize];
+            for c in [t.left[i as usize], t.right[i as usize]] {
+                if c != NONE && (t.node_gamma[c as usize] > g || !rec(t, c)) {
+                    return false;
+                }
+            }
+            true
+        }
+        rec(self, self.root)
+    }
+}
+
+struct PskdBuilder<'a> {
+    pts: &'a PointSet,
+    gamma: &'a [u64],
+    d: usize,
+    node_point: usize,
+    node_gamma: usize,
+    node_coords: usize,
+    left: usize,
+    right: usize,
+    bounds: usize,
+}
+
+unsafe impl Sync for PskdBuilder<'_> {}
+
+impl PskdBuilder<'_> {
+    /// Subtree over `ids` occupies slots `[slot, slot + ids.len())`.
+    fn build_rec(&self, ids: &mut [u32], slot: usize) {
+        let m = ids.len();
+        debug_assert!(m >= 1);
+        let d = self.d;
+        // Cell = bbox over ALL points of the subtree (incl. the hoisted max).
+        let bb = self.compute_bbox(ids);
+        unsafe {
+            let bptr = (self.bounds as *mut f64).add(slot * 2 * d);
+            for k in 0..d {
+                *bptr.add(k) = bb.min()[k];
+                *bptr.add(d + k) = bb.max()[k];
+            }
+        }
+        // Hoist the max-priority point to this node.
+        let mut max_i = 0usize;
+        for (j, &id) in ids.iter().enumerate() {
+            if self.gamma[id as usize] > self.gamma[ids[max_i] as usize] {
+                max_i = j;
+            }
+            let _ = id;
+        }
+        ids.swap(0, max_i);
+        let p = ids[0];
+        unsafe {
+            *(self.node_point as *mut u32).add(slot) = p;
+            *(self.node_gamma as *mut u64).add(slot) = self.gamma[p as usize];
+            let cptr = (self.node_coords as *mut f64).add(slot * d);
+            let src = self.pts.point(p as usize);
+            std::ptr::copy_nonoverlapping(src.as_ptr(), cptr, d);
+        }
+        let rest = &mut ids[1..];
+        let r = rest.len();
+        if r == 0 {
+            unsafe {
+                *(self.left as *mut u32).add(slot) = NONE;
+                *(self.right as *mut u32).add(slot) = NONE;
+            }
+            return;
+        }
+        let dim = bb.widest_dim();
+        let mid = r / 2;
+        if mid > 0 {
+            let pts = self.pts;
+            rest.select_nth_unstable_by(mid, |&a, &b| {
+                pts.coord(a as usize, dim)
+                    .partial_cmp(&pts.coord(b as usize, dim))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        }
+        let (lids, rids) = rest.split_at_mut(mid);
+        let lslot = slot + 1;
+        let rslot = slot + 1 + mid;
+        unsafe {
+            *(self.left as *mut u32).add(slot) = if lids.is_empty() { NONE } else { lslot as u32 };
+            *(self.right as *mut u32).add(slot) = if rids.is_empty() { NONE } else { rslot as u32 };
+        }
+        let go = |ids: &mut [u32], s: usize| {
+            if !ids.is_empty() {
+                self.build_rec(ids, s);
+            }
+        };
+        if m >= BUILD_GRAIN {
+            let pool = parlay::pool::global();
+            pool.join(|| go(lids, lslot), || go(rids, rslot));
+        } else {
+            go(lids, lslot);
+            go(rids, rslot);
+        }
+    }
+
+    fn compute_bbox(&self, ids: &[u32]) -> Bbox {
+        let m = ids.len();
+        if m < 65_536 {
+            return self.pts.bbox_of(ids);
+        }
+        let nchunks = 16;
+        let chunk = m.div_ceil(nchunks);
+        let boxes: Vec<Bbox> = parlay::par_map(nchunks, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(m);
+            self.pts.bbox_of(&ids[lo..hi.max(lo)])
+        });
+        let mut bb = Bbox::empty(self.d);
+        for b in &boxes {
+            bb.merge(b);
+        }
+        bb
+    }
+}
+
+/// Brute-force priority-NN oracle: nearest point with priority > `gamma_q`,
+/// ties by id.
+pub fn brute_priority_nn(pts: &PointSet, gamma: &[u64], q: &[f64], gamma_q: u64) -> Option<(u32, f64)> {
+    let mut best: Option<(u32, f64)> = None;
+    for i in 0..pts.len() {
+        if gamma[i] <= gamma_q {
+            continue;
+        }
+        let ds = pts.dist_sq_to(i, q);
+        match best {
+            Some((bi, bd)) if ds > bd || (ds == bd && i as u32 > bi) => {}
+            _ => best = Some((i as u32, ds)),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::NoStats;
+    use crate::proputil::{gen_clustered_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+
+    /// Unique priorities: random permutation of 0..n.
+    fn random_gamma(rng: &mut SplitMix64, n: usize) -> Vec<u64> {
+        let mut g: Vec<u64> = (0..n as u64).collect();
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut idx);
+        for (i, &j) in idx.iter().enumerate() {
+            g[j as usize] = i as u64;
+        }
+        g
+    }
+
+    #[test]
+    fn heap_property_holds() {
+        let mut rng = SplitMix64::new(1);
+        let pts = gen_uniform_points(&mut rng, 1000, 2, 100.0);
+        let gamma = random_gamma(&mut rng, 1000);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        assert!(t.check_heap_property());
+    }
+
+    #[test]
+    fn depth_is_logarithmic() {
+        let mut rng = SplitMix64::new(2);
+        let n = 4096;
+        let pts = gen_uniform_points(&mut rng, n, 2, 100.0);
+        let gamma = random_gamma(&mut rng, n);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        // Median splits on the REST of each node: depth ≤ ~log2(n) + slack.
+        assert!(t.depth() <= 2 * (n as f64).log2() as usize, "depth={}", t.depth());
+    }
+
+    #[test]
+    fn priority_nn_matches_brute_force_uniform() {
+        let mut rng = SplitMix64::new(3);
+        let pts = gen_uniform_points(&mut rng, 1500, 3, 100.0);
+        let gamma = random_gamma(&mut rng, 1500);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        for i in (0..1500).step_by(13) {
+            let got = t.priority_nn(pts.point(i), gamma[i], &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]);
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn priority_nn_matches_brute_force_clustered() {
+        let mut rng = SplitMix64::new(4);
+        let pts = gen_clustered_points(&mut rng, 1200, 2, 5, 100.0, 2.0);
+        let gamma = random_gamma(&mut rng, 1200);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        for i in (0..1200).step_by(11) {
+            let got = t.priority_nn(pts.point(i), gamma[i], &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]);
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn global_max_has_no_dependent() {
+        let mut rng = SplitMix64::new(5);
+        let pts = gen_uniform_points(&mut rng, 100, 2, 10.0);
+        let gamma = random_gamma(&mut rng, 100);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        let peak = (0..100).max_by_key(|&i| gamma[i]).unwrap();
+        assert_eq!(t.priority_nn(pts.point(peak), gamma[peak], &mut NoStats), None);
+    }
+
+    #[test]
+    fn priority_range_matches_filter() {
+        let mut rng = SplitMix64::new(6);
+        let pts = gen_uniform_points(&mut rng, 800, 2, 50.0);
+        let gamma = random_gamma(&mut rng, 800);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        let q = pts.point(17);
+        let r_sq = 100.0;
+        let gq = gamma[17];
+        let mut got = Vec::new();
+        t.priority_range(q, r_sq, gq, &mut got);
+        got.sort();
+        let want: Vec<u32> = (0..800u32)
+            .filter(|&i| gamma[i as usize] > gq && pts.dist_sq_to(i as usize, q) <= r_sq)
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn single_point() {
+        let pts = crate::geom::PointSet::new(vec![1.0, 1.0], 2);
+        let t = PriorityKdTree::build(&pts, &[5]);
+        assert_eq!(t.priority_nn(&[0.0, 0.0], 4, &mut NoStats), Some((0, 2.0)));
+        assert_eq!(t.priority_nn(&[0.0, 0.0], 5, &mut NoStats), None);
+    }
+}

@@ -1,0 +1,236 @@
+//! The XLA brute-force DPC engine: manifest parsing, executable cache, and
+//! padded execution.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::geom::PointSet;
+
+/// Pad-row base coordinate; must match `python/compile/kernels/pairwise.py`.
+pub const PAD_COORD: f32 = 1.0e9;
+/// Padded feature dimension of every artifact.
+pub const D_PAD: usize = 8;
+
+/// One artifact in `manifest.txt`: `<name> <n_pad> <d_pad>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n_pad: usize,
+    pub d_pad: usize,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = t.split_whitespace().collect();
+            if parts.len() != 3 {
+                bail!("manifest line {}: expected `<name> <n_pad> <d_pad>`, got {t:?}", lineno + 1);
+            }
+            entries.push(ManifestEntry {
+                name: parts[0].to_string(),
+                n_pad: parts[1].parse().context("n_pad")?,
+                d_pad: parts[2].parse().context("d_pad")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        entries.sort_by_key(|e| e.n_pad);
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Smallest artifact with `n_pad >= n`.
+    pub fn pick(&self, n: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.n_pad >= n)
+    }
+
+    pub fn max_n(&self) -> usize {
+        self.entries.last().map(|e| e.n_pad).unwrap_or(0)
+    }
+}
+
+/// Output of one brute-force DPC execution (truncated to the real n).
+#[derive(Clone, Debug)]
+pub struct XlaDpcOutput {
+    pub rho: Vec<u32>,
+    /// Dependent ids; `None` = global peak (or no candidate).
+    pub dep: Vec<Option<u32>>,
+    /// Squared dependent distances (f32 precision).
+    pub dist_sq: Vec<f32>,
+}
+
+/// AOT-compiled brute-force DPC on the PJRT CPU client.
+///
+/// Executables are compiled lazily per padded size and cached. The client
+/// and cache are behind a mutex: PJRT CPU execution is internally
+/// single-stream here and callers (the coordinator) already batch.
+pub struct XlaDpcEngine {
+    dir: PathBuf,
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    cache: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaDpcEngine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaDpcEngine {
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            inner: Mutex::new(Inner { client, cache: BTreeMap::new() }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Largest point count this engine can handle.
+    pub fn capacity(&self) -> usize {
+        self.manifest.max_n()
+    }
+
+    /// Pad `pts` to `(n_pad, D_PAD)` f32 row-major, staggered sentinels for
+    /// padding rows (mirrors `model.pad_points`).
+    pub fn pad(pts: &PointSet, n_pad: usize) -> Result<Vec<f32>> {
+        let (n, d) = (pts.len(), pts.dim());
+        if n > n_pad {
+            bail!("{n} points exceed padded size {n_pad}");
+        }
+        if d > D_PAD {
+            bail!("dimension {d} exceeds artifact dimension {D_PAD}");
+        }
+        let mut out = vec![0f32; n_pad * D_PAD];
+        for i in 0..n {
+            for k in 0..d {
+                out[i * D_PAD + k] = pts.coord(i, k) as f32;
+            }
+        }
+        for (row, i) in (n..n_pad).enumerate() {
+            let v = PAD_COORD * (row as f32 + 1.0);
+            for k in 0..D_PAD {
+                out[i * D_PAD + k] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute brute-force DPC (density + dependent points) for `pts`.
+    pub fn run(&self, pts: &PointSet, d_cut: f64) -> Result<XlaDpcOutput> {
+        let n = pts.len();
+        let entry = self
+            .manifest
+            .pick(n)
+            .ok_or_else(|| anyhow!("n={n} exceeds largest artifact (capacity {})", self.capacity()))?;
+        let n_pad = entry.n_pad;
+        let padded = Self::pad(pts, n_pad)?;
+
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&n_pad) {
+            let path = self.dir.join(format!("{}.hlo.txt", entry.name));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            inner.cache.insert(n_pad, exe);
+        }
+        let exe = inner.cache.get(&n_pad).expect("just inserted");
+
+        let points_lit = xla::Literal::vec1(&padded)
+            .reshape(&[n_pad as i64, D_PAD as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let dcut_lit = xla::Literal::scalar((d_cut * d_cut) as f32);
+        let result = exe
+            .execute::<xla::Literal>(&[points_lit, dcut_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (rho_l, dep_l, dist_l) = result.to_tuple3().map_err(|e| anyhow!("to_tuple3: {e:?}"))?;
+        let rho_raw: Vec<i32> = rho_l.to_vec().map_err(|e| anyhow!("rho: {e:?}"))?;
+        let dep_raw: Vec<i32> = dep_l.to_vec().map_err(|e| anyhow!("dep: {e:?}"))?;
+        let dist_raw: Vec<f32> = dist_l.to_vec().map_err(|e| anyhow!("dist: {e:?}"))?;
+        drop(inner);
+
+        Ok(XlaDpcOutput {
+            rho: rho_raw[..n].iter().map(|&r| r as u32).collect(),
+            dep: dep_raw[..n]
+                .iter()
+                .map(|&d| if d < 0 || d as usize >= n { None } else { Some(d as u32) })
+                .collect(),
+            dist_sq: dist_raw[..n].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_sorts() {
+        let m = Manifest::parse("b 1024 8\na 512 8\n# comment\n\nc 2048 8\n").unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].n_pad, 512);
+        assert_eq!(m.max_n(), 2048);
+        assert_eq!(m.pick(513).unwrap().n_pad, 1024);
+        assert_eq!(m.pick(512).unwrap().n_pad, 512);
+        assert!(m.pick(4096).is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_lines() {
+        assert!(Manifest::parse("only two\n").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("a b c\n").is_err());
+    }
+
+    #[test]
+    fn pad_layout_matches_python() {
+        let pts = PointSet::new(vec![1.0, 2.0, 3.0, 4.0], 2);
+        let padded = XlaDpcEngine::pad(&pts, 4).unwrap();
+        assert_eq!(padded.len(), 4 * D_PAD);
+        assert_eq!(&padded[..2], &[1.0, 2.0]);
+        assert_eq!(padded[2], 0.0); // zero-filled extra columns
+        assert_eq!(&padded[D_PAD..D_PAD + 2], &[3.0, 4.0]);
+        // Staggered sentinels.
+        assert_eq!(padded[2 * D_PAD], PAD_COORD);
+        assert_eq!(padded[3 * D_PAD], 2.0 * PAD_COORD);
+    }
+
+    #[test]
+    fn pad_rejects_oversize() {
+        let pts = PointSet::new(vec![0.0; 18], 9);
+        assert!(XlaDpcEngine::pad(&pts, 16).is_err());
+        let pts = PointSet::new(vec![0.0; 20], 2);
+        assert!(XlaDpcEngine::pad(&pts, 4).is_err());
+    }
+
+    // Execution tests live in rust/tests/xla_integration.rs (they need the
+    // artifacts built by `make artifacts`).
+}

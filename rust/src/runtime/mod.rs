@@ -1,0 +1,43 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! graph (which embeds the L1 Pallas kernels) to HLO **text** once, and this
+//! module compiles each artifact on the PJRT CPU client at startup, caching
+//! one executable per padded size (see `artifacts/manifest.txt`).
+//!
+//! The executed computation is the tensorized brute-force DPC
+//! (Steps 1 + 2):
+//!
+//! ```text
+//! (points f32[N,8], dcut_sq f32[]) -> (rho i32[N], dep i32[N], dist f32[N])
+//! ```
+//!
+//! [`XlaDpcEngine::run`] pads the input to the smallest artifact size,
+//! executes, and truncates the outputs back to the real `n`.
+
+pub mod engine;
+pub mod service;
+
+pub use engine::{Manifest, ManifestEntry, XlaDpcEngine, XlaDpcOutput};
+pub use service::XlaService;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$PARCLUSTER_ARTIFACTS`, else
+/// `./artifacts` if present, else `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PARCLUSTER_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

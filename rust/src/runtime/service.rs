@@ -1,0 +1,88 @@
+//! Thread-confined XLA service: the `xla` crate's PJRT handles are
+//! `Rc`-based (not `Send`), so the engine lives on one dedicated thread and
+//! the rest of the system talks to it through a channel. This also gives
+//! natural request serialization (PJRT CPU execution is single-stream
+//! anyway) and a clean place for request batching.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::geom::PointSet;
+
+use super::engine::{XlaDpcEngine, XlaDpcOutput};
+
+enum Request {
+    Run { pts: Arc<PointSet>, d_cut: f64, reply: mpsc::Sender<Result<XlaDpcOutput>> },
+    Shutdown,
+}
+
+/// Send/Sync handle to the thread-confined [`XlaDpcEngine`].
+pub struct XlaService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    handle: Option<thread::JoinHandle<()>>,
+    capacity: usize,
+}
+
+impl XlaService {
+    /// Spawn the engine thread; fails if the artifacts/manifest cannot be
+    /// loaded or the PJRT client cannot start.
+    pub fn start(artifacts_dir: &Path) -> Result<Self> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let handle = thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || {
+                let engine = match XlaDpcEngine::new(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.capacity()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Run { pts, d_cut, reply } => {
+                            let _ = reply.send(engine.run(&pts, d_cut));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn xla-engine: {e}"))?;
+        let capacity = ready_rx.recv().map_err(|_| anyhow!("xla-engine thread died during startup"))??;
+        Ok(XlaService { tx: Mutex::new(tx), handle: Some(handle), capacity })
+    }
+
+    /// Largest point count the loaded artifacts support.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Execute brute-force DPC (Steps 1–2) on the engine thread.
+    pub fn run(&self, pts: Arc<PointSet>, d_cut: f64) -> Result<XlaDpcOutput> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Run { pts, d_cut, reply: reply_tx })
+            .map_err(|_| anyhow!("xla-engine thread has exited"))?;
+        reply_rx.recv().map_err(|_| anyhow!("xla-engine dropped the request"))?
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Concurrent lock-free union-find (Jayanti–Tarjan style [41]) plus a
+//! sequential reference implementation.
+//!
+//! Used by Step 3 of DPC (Algorithm 3): single-linkage clustering over the
+//! dependency forest runs O(n) `UNION`s with `O(n α(n,n))` work and
+//! `O(log n)` span, replacing the O(n) span of the baseline.
+//!
+//! The concurrent variant links by *random priority* (each element gets a
+//! fixed pseudo-random weight; the lower-priority root is CAS-linked under
+//! the higher-priority one) and performs path-halving with benign-race CAS
+//! compression — linearizable unions without locks.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Lock-free concurrent union-find over `n` elements.
+pub struct ConcurrentUnionFind {
+    parent: Vec<AtomicU32>,
+    /// Static random link priorities (break symmetry; expected O(α) finds).
+    weight: Vec<u32>,
+}
+
+impl ConcurrentUnionFind {
+    pub fn new(n: usize) -> Self {
+        assert!(n < u32::MAX as usize);
+        let parent = (0..n as u32).map(AtomicU32::new).collect();
+        // SplitMix-scramble of the index: deterministic, uniform enough.
+        let weight = (0..n as u64)
+            .map(|i| {
+                let mut z = i.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                (z ^ (z >> 31)) as u32
+            })
+            .collect();
+        ConcurrentUnionFind { parent, weight }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Find with path halving (concurrent-safe).
+    pub fn find(&self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize].load(Ordering::Acquire);
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize].load(Ordering::Acquire);
+            if gp == p {
+                return p;
+            }
+            // Path halving: benign race; any stale write still points to an
+            // ancestor.
+            let _ = self.parent[x as usize].compare_exchange_weak(p, gp, Ordering::AcqRel, Ordering::Relaxed);
+            x = gp;
+        }
+    }
+
+    /// Merge the sets of `a` and `b` (thread-safe, lock-free).
+    pub fn union(&self, a: u32, b: u32) {
+        let mut a = a;
+        let mut b = b;
+        loop {
+            a = self.find(a);
+            b = self.find(b);
+            if a == b {
+                return;
+            }
+            // Link lower weight under higher (ties by id to stay acyclic).
+            let (lo, hi) = if (self.weight[a as usize], a) < (self.weight[b as usize], b) { (a, b) } else { (b, a) };
+            if self.parent[lo as usize]
+                .compare_exchange(lo, hi, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+            // Lost a race; retry with refreshed roots.
+        }
+    }
+
+    /// Are `a` and `b` in the same set? (Quiescent accuracy: exact when no
+    /// concurrent unions touch these sets.)
+    pub fn same(&self, a: u32, b: u32) -> bool {
+        loop {
+            let ra = self.find(a);
+            let rb = self.find(b);
+            if ra == rb {
+                return true;
+            }
+            // ra may have been linked concurrently; confirm it is still root.
+            if self.parent[ra as usize].load(Ordering::Acquire) == ra {
+                return false;
+            }
+        }
+    }
+
+    /// Canonical labels: `labels[i] = find(i)` for all i (call after all
+    /// unions have completed).
+    pub fn labels(&self) -> Vec<u32> {
+        (0..self.parent.len() as u32).map(|i| self.find(i)).collect()
+    }
+}
+
+/// Sequential union-find with union by rank + full path compression
+/// (reference/oracle).
+pub struct SeqUnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+}
+
+impl SeqUnionFind {
+    pub fn new(n: usize) -> Self {
+        SeqUnionFind { parent: (0..n as u32).collect(), rank: vec![0; n] }
+    }
+
+    pub fn find(&mut self, x: u32) -> u32 {
+        let p = self.parent[x as usize];
+        if p == x {
+            return x;
+        }
+        let root = self.find(p);
+        self.parent[x as usize] = root;
+        root
+    }
+
+    pub fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        match self.rank[ra as usize].cmp(&self.rank[rb as usize]) {
+            std::cmp::Ordering::Less => self.parent[ra as usize] = rb,
+            std::cmp::Ordering::Greater => self.parent[rb as usize] = ra,
+            std::cmp::Ordering::Equal => {
+                self.parent[rb as usize] = ra;
+                self.rank[ra as usize] += 1;
+            }
+        }
+    }
+
+    pub fn labels(&mut self) -> Vec<u32> {
+        (0..self.parent.len() as u32).map(|i| self.find(i)).collect()
+    }
+}
+
+/// Do two label vectors describe the same partition (up to renaming)?
+pub fn same_partition(a: &[u32], b: &[u32]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    use std::collections::HashMap;
+    let mut fwd: HashMap<u32, u32> = HashMap::new();
+    let mut bwd: HashMap<u32, u32> = HashMap::new();
+    for i in 0..a.len() {
+        if *fwd.entry(a[i]).or_insert(b[i]) != b[i] {
+            return false;
+        }
+        if *bwd.entry(b[i]).or_insert(a[i]) != a[i] {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parlay;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn basic_union_find() {
+        let uf = ConcurrentUnionFind::new(10);
+        assert!(!uf.same(0, 1));
+        uf.union(0, 1);
+        uf.union(2, 3);
+        assert!(uf.same(0, 1));
+        assert!(uf.same(1, 0));
+        assert!(!uf.same(1, 2));
+        uf.union(1, 3);
+        assert!(uf.same(0, 2));
+    }
+
+    #[test]
+    fn matches_sequential_on_random_unions() {
+        let mut rng = SplitMix64::new(31);
+        let n = 2000;
+        let ops: Vec<(u32, u32)> = (0..1500)
+            .map(|_| (rng.next_below(n as u64) as u32, rng.next_below(n as u64) as u32))
+            .collect();
+        let cuf = ConcurrentUnionFind::new(n);
+        let mut suf = SeqUnionFind::new(n);
+        for &(a, b) in &ops {
+            cuf.union(a, b);
+            suf.union(a, b);
+        }
+        assert!(same_partition(&cuf.labels(), &suf.labels()));
+    }
+
+    #[test]
+    fn concurrent_stress_matches_sequential() {
+        parlay::set_threads(4);
+        let mut rng = SplitMix64::new(32);
+        let n = 5000;
+        let ops: Vec<(u32, u32)> = (0..8000)
+            .map(|_| (rng.next_below(n as u64) as u32, rng.next_below(n as u64) as u32))
+            .collect();
+        let cuf = ConcurrentUnionFind::new(n);
+        parlay::par_for(ops.len(), |i| {
+            cuf.union(ops[i].0, ops[i].1);
+        });
+        let mut suf = SeqUnionFind::new(n);
+        for &(a, b) in &ops {
+            suf.union(a, b);
+        }
+        assert!(same_partition(&cuf.labels(), &suf.labels()));
+        parlay::set_threads(1);
+    }
+
+    #[test]
+    fn chain_unions_single_component() {
+        let uf = ConcurrentUnionFind::new(1000);
+        for i in 0..999u32 {
+            uf.union(i, i + 1);
+        }
+        let labels = uf.labels();
+        assert!(labels.iter().all(|&l| l == labels[0]));
+    }
+
+    #[test]
+    fn same_partition_detects_differences() {
+        assert!(same_partition(&[0, 0, 1], &[5, 5, 9]));
+        assert!(!same_partition(&[0, 0, 1], &[5, 9, 9]));
+        assert!(!same_partition(&[0, 1], &[0, 1, 2]));
+    }
+}

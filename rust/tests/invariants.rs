@@ -1,0 +1,271 @@
+//! Property-based invariant suite (DESIGN.md §6) over the `proputil`
+//! harness: randomized inputs with deterministic replay seeds.
+
+use parcluster::dpc::{self, compute_density, DensityAlgo, DepAlgo, Dpc, DpcParams};
+use parcluster::fenwick::{fenwick_decompose, FenwickDep};
+use parcluster::geom::PointSet;
+use parcluster::kdtree::{brute_nn, brute_range_count, KdTree, NoStats};
+use parcluster::parlay;
+use parcluster::proputil::{self, Config};
+use parcluster::prng::SplitMix64;
+use parcluster::pskd::{brute_priority_nn, PriorityKdTree};
+use parcluster::unionfind::{same_partition, ConcurrentUnionFind, SeqUnionFind};
+
+/// Wrapper type so the harness can Debug-print failures compactly.
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    n: usize,
+    d: usize,
+}
+
+fn gen_case(rng: &mut SplitMix64, max_n: usize, max_d: usize) -> Case {
+    Case {
+        seed: rng.next_u64(),
+        n: proputil::gen_size(rng, 2, max_n),
+        d: proputil::gen_size(rng, 1, max_d),
+    }
+}
+
+fn gen_points(c: &Case, flavor: u64) -> PointSet {
+    let mut rng = SplitMix64::new(c.seed ^ flavor);
+    match flavor % 4 {
+        0 => proputil::gen_uniform_points(&mut rng, c.n, c.d, 50.0),
+        1 => proputil::gen_clustered_points(&mut rng, c.n, c.d, 1 + c.n / 50, 100.0, 2.0),
+        2 => proputil::gen_grid_points(&mut rng, c.n, c.d, 8),
+        _ => proputil::gen_degenerate_points(&mut rng, c.n, c.d),
+    }
+}
+
+// 1. kd-tree NN == brute force.
+#[test]
+fn prop_kdtree_nn_matches_brute_force() {
+    proputil::check("kdtree-nn", Config::cases(40), |rng| gen_case(rng, 400, 5), |c| {
+        for flavor in 0..4 {
+            let pts = gen_points(c, flavor);
+            let tree = KdTree::build(&pts);
+            for i in (0..pts.len()).step_by(1 + pts.len() / 16) {
+                let got = tree.nn(pts.point(i), i as u32, &mut NoStats);
+                let want = brute_nn(&pts, pts.point(i), i as u32);
+                if got != want {
+                    return Err(format!("flavor {flavor} query {i}: {got:?} != {want:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// 2. Range count (pruned and unpruned) == brute force.
+#[test]
+fn prop_range_count_matches_brute_force() {
+    proputil::check("range-count", Config::cases(40), |rng| gen_case(rng, 400, 5), |c| {
+        let mut rr = SplitMix64::new(c.seed);
+        for flavor in 0..4 {
+            let pts = gen_points(c, flavor);
+            let tree = KdTree::build(&pts);
+            for _ in 0..8 {
+                let i = rr.next_below(pts.len() as u64) as usize;
+                let r = rr.uniform(0.0, 30.0);
+                let want = brute_range_count(&pts, pts.point(i), r * r);
+                let got = tree.range_count(pts.point(i), r * r, &mut NoStats);
+                let got2 = tree.range_count_noprune(pts.point(i), r * r, &mut NoStats);
+                if got != want || got2 != want {
+                    return Err(format!("flavor {flavor} i={i} r={r}: {got}/{got2} != {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// 3. Priority-NN == brute force over the higher-priority subset.
+#[test]
+fn prop_priority_nn_matches_brute_force() {
+    proputil::check("priority-nn", Config::cases(30), |rng| gen_case(rng, 300, 4), |c| {
+        for flavor in 0..4 {
+            let pts = gen_points(c, flavor);
+            let mut rng = SplitMix64::new(c.seed ^ 0xFFFF);
+            // Priorities with deliberate collisions resolved by packing ids.
+            let gamma: Vec<u64> = (0..pts.len())
+                .map(|i| (rng.next_below(8) << 32) | (u32::MAX - i as u32) as u64)
+                .collect();
+            let tree = PriorityKdTree::build(&pts, &gamma);
+            if !tree.check_heap_property() {
+                return Err("heap property violated".into());
+            }
+            for i in (0..pts.len()).step_by(1 + pts.len() / 16) {
+                let got = tree.priority_nn(pts.point(i), gamma[i], &mut NoStats);
+                let want = brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]);
+                if got != want {
+                    return Err(format!("flavor {flavor} query {i}: {got:?} != {want:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// 4. All five dependent-point algorithms agree (the exactness claim).
+#[test]
+fn prop_all_dep_algorithms_identical() {
+    proputil::check("dep-agreement", Config::cases(25), |rng| gen_case(rng, 250, 4), |c| {
+        for flavor in 0..4 {
+            let pts = gen_points(c, flavor);
+            let d_cut = 2.0 + (c.seed % 7) as f64;
+            let rho_min = (c.seed % 3) as f64;
+            let rho = compute_density(&pts, d_cut, DensityAlgo::TreePruned);
+            let reference = dpc::dep::compute_dependents(&pts, &rho, rho_min, DepAlgo::Naive);
+            for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
+                let got = dpc::dep::compute_dependents(&pts, &rho, rho_min, algo);
+                if got != reference {
+                    let idx = (0..got.len()).find(|&i| got[i] != reference[i]).unwrap();
+                    return Err(format!("flavor {flavor} {algo:?} differs at {idx}: {:?} != {:?}", got[idx], reference[idx]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// 5. Concurrent union-find == sequential DSU.
+#[test]
+fn prop_concurrent_union_find_matches_sequential() {
+    parlay::set_threads(4);
+    proputil::check("union-find", Config::cases(30), |rng| {
+        let n = proputil::gen_size(rng, 2, 800);
+        let m = proputil::gen_size(rng, 1, 1200);
+        let ops: Vec<(u32, u32)> =
+            (0..m).map(|_| (rng.next_below(n as u64) as u32, rng.next_below(n as u64) as u32)).collect();
+        (n, ops)
+    }, |(n, ops)| {
+        let cuf = ConcurrentUnionFind::new(*n);
+        parlay::par_for(ops.len(), |i| cuf.union(ops[i].0, ops[i].1));
+        let mut suf = SeqUnionFind::new(*n);
+        for &(a, b) in ops {
+            suf.union(a, b);
+        }
+        if !same_partition(&cuf.labels(), &suf.labels()) {
+            return Err("partitions differ".into());
+        }
+        Ok(())
+    });
+    parlay::set_threads(1);
+}
+
+// 6. Full pipeline: identical labels across all Step-2 algorithms.
+#[test]
+fn prop_pipeline_labels_identical_across_algorithms() {
+    proputil::check("pipeline-labels", Config::cases(15), |rng| gen_case(rng, 200, 3), |c| {
+        for flavor in 0..4 {
+            let pts = gen_points(c, flavor);
+            let params = DpcParams { d_cut: 3.0, rho_min: (c.seed % 3) as f64, delta_min: 5.0 };
+            let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+            for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
+                let got = Dpc::new(params).dep_algo(algo).run(&pts);
+                if got.labels != reference.labels {
+                    return Err(format!("flavor {flavor} {algo:?}: labels differ"));
+                }
+                if got.num_clusters != reference.num_clusters || got.num_noise != reference.num_noise {
+                    return Err(format!("flavor {flavor} {algo:?}: counts differ"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// 7. Fenwick decomposition: disjoint cover with O(log) blocks.
+#[test]
+fn prop_fenwick_decomposition_tiles_prefix() {
+    proputil::check("fenwick-decompose", Config::cases(50), |rng| proputil::gen_size(rng, 1, 100_000), |&i| {
+        let blocks = fenwick_decompose(i);
+        let total: usize = blocks.iter().map(|&j| j & j.wrapping_neg()).sum();
+        if total != i {
+            return Err(format!("blocks cover {total} != {i}"));
+        }
+        let maxlen = (usize::BITS - i.leading_zeros()) as usize;
+        if blocks.len() > maxlen {
+            return Err(format!("{} blocks > log bound {maxlen}", blocks.len()));
+        }
+        Ok(())
+    });
+}
+
+// 8. Parallel sorts == std sort.
+#[test]
+fn prop_sorts_match_std() {
+    proputil::check("sorts", Config::cases(20), |rng| {
+        let n = proputil::gen_size(rng, 0, 30_000);
+        let keys: Vec<u64> = (0..n)
+            .map(|_| {
+                let bits = 1 + rng.next_below(40);
+                rng.next_below(1 << bits)
+            })
+            .collect();
+        keys
+    }, |keys| {
+        let mut a: Vec<u64> = keys.clone();
+        parlay::par_sort_unstable_by(&mut a, |x, y| x.cmp(y));
+        let mut want = keys.clone();
+        want.sort();
+        if a != want {
+            return Err("par_sort mismatch".into());
+        }
+        let mut pairs: Vec<(u64, u32)> = keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
+        let mut want_pairs = pairs.clone();
+        want_pairs.sort(); // stable == sort by (key, id) for unique ids
+        parlay::par_radix_sort_u64(&mut pairs);
+        if pairs != want_pairs {
+            return Err("radix sort mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+// 9. Fenwick queries == priority-NN brute force even under heavy ties.
+#[test]
+fn prop_fenwick_matches_brute_with_ties() {
+    proputil::check("fenwick-ties", Config::cases(20), |rng| gen_case(rng, 200, 3), |c| {
+        let pts = gen_points(c, 3); // degenerate flavor: heavy duplicates
+        let mut rng = SplitMix64::new(c.seed ^ 0xABCD);
+        let gamma: Vec<u64> = (0..pts.len())
+            .map(|i| (rng.next_below(4) << 32) | (u32::MAX - i as u32) as u64)
+            .collect();
+        let f = FenwickDep::build(&pts, &gamma);
+        for i in 0..pts.len() as u32 {
+            let got = f.query(i, &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(i as usize), gamma[i as usize]);
+            if got != want {
+                return Err(format!("query {i}: {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// 10. Decision-graph param suggestion recovers k clusters on blobby data.
+#[test]
+fn prop_decision_graph_suggestion_recovers_k() {
+    proputil::check("decision-k", Config::cases(8), |rng| (rng.next_u64(), 2 + rng.next_below(3) as usize), |&(seed, k)| {
+        let mut rng = SplitMix64::new(seed);
+        // k well-separated tight blobs.
+        let mut coords = Vec::new();
+        for b in 0..k {
+            let (cx, cy) = (b as f64 * 200.0, (b % 2) as f64 * 200.0);
+            for _ in 0..60 {
+                coords.push(cx + rng.normal());
+                coords.push(cy + rng.normal());
+            }
+        }
+        let pts = PointSet::new(coords, 2);
+        let scan = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: f64::INFINITY }).run(&pts);
+        let graph = dpc::decision::decision_graph(&scan);
+        let (rho_min, delta_min) = dpc::decision::suggest_params(&graph, k);
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts);
+        if out.num_clusters != k {
+            return Err(format!("expected {k} clusters, got {}", out.num_clusters));
+        }
+        Ok(())
+    });
+}

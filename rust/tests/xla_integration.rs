@@ -1,0 +1,136 @@
+//! Integration: the AOT XLA brute-force engine vs the Rust tree engine.
+//!
+//! Requires `make artifacts` (skips gracefully if artifacts are absent).
+//! Points are drawn on integer grids so f32 (XLA) and f64 (Rust) distance
+//! arithmetic agree exactly — any mismatch is a real semantic bug, not a
+//! rounding artifact.
+
+use std::sync::Arc;
+
+use parcluster::coordinator::{Backend, ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::dpc::{compute_density, dep, DensityAlgo, Dpc, DpcParams, DepAlgo};
+use parcluster::geom::PointSet;
+use parcluster::metrics::adjusted_rand_index;
+use parcluster::prng::SplitMix64;
+use parcluster::runtime::{artifacts_available, artifacts_dir, XlaService};
+
+fn grid_points(seed: u64, n: usize, d: usize, side: u64) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    let coords: Vec<f64> = (0..n * d).map(|_| rng.next_below(side) as f64).collect();
+    PointSet::new(coords, d)
+}
+
+fn require_artifacts() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn xla_density_and_deps_match_tree_engine() {
+    if !require_artifacts() {
+        return;
+    }
+    let svc = XlaService::start(&artifacts_dir()).expect("start XLA service");
+    for (seed, n, d, side, d_cut) in
+        [(1u64, 300usize, 2usize, 40u64, 5.0f64), (2, 777, 3, 20, 4.0), (3, 512, 5, 10, 3.0), (4, 60, 2, 6, 2.0)]
+    {
+        let pts = Arc::new(grid_points(seed, n, d, side));
+        let out = svc.run(Arc::clone(&pts), d_cut).expect("xla run");
+        // Density must match the kd-tree count exactly.
+        let rho = compute_density(&pts, d_cut, DensityAlgo::TreePruned);
+        assert_eq!(out.rho, rho, "density mismatch (seed {seed})");
+        // Dependents must match the priority algorithm exactly (grid coords
+        // => no f32/f64 boundary or tie ambiguity).
+        let dep_tree = dep::compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
+        assert_eq!(out.dep, dep_tree, "dependent mismatch (seed {seed})");
+    }
+}
+
+#[test]
+fn xla_handles_exact_padding_boundary() {
+    if !require_artifacts() {
+        return;
+    }
+    let svc = XlaService::start(&artifacts_dir()).expect("start XLA service");
+    // n exactly equal to an artifact size: no padding rows at all.
+    let pts = Arc::new(grid_points(5, 512, 2, 30));
+    let out = svc.run(Arc::clone(&pts), 4.0).expect("xla run");
+    let rho = compute_density(&pts, 4.0, DensityAlgo::TreePruned);
+    assert_eq!(out.rho, rho);
+}
+
+#[test]
+fn xla_rejects_oversize_jobs() {
+    if !require_artifacts() {
+        return;
+    }
+    let svc = XlaService::start(&artifacts_dir()).expect("start XLA service");
+    let cap = svc.capacity();
+    let pts = Arc::new(grid_points(6, cap + 1, 2, 10));
+    assert!(svc.run(pts, 1.0).is_err());
+}
+
+#[test]
+fn coordinator_routes_small_jobs_to_xla_and_matches_tree_labels() {
+    if !require_artifacts() {
+        return;
+    }
+    let cfg = CoordinatorConfig { xla_threshold: 2048, ..CoordinatorConfig::default() };
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    assert!(coord.has_xla(), "artifacts exist but XLA engine failed to start");
+    let pts = Arc::new(grid_points(7, 600, 2, 50));
+    let params = DpcParams { d_cut: 6.0, rho_min: 2.0, delta_min: 15.0 };
+
+    let out_xla = coord
+        .run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::XlaBruteForce))
+        .expect("xla job");
+    assert_eq!(out_xla.backend_used, Backend::XlaBruteForce);
+
+    let out_tree = coord
+        .run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::TreeExact))
+        .expect("tree job");
+    assert_eq!(out_tree.backend_used, Backend::TreeExact);
+
+    // Exactness across backends: identical densities, deps, and labels.
+    assert_eq!(out_xla.result.rho, out_tree.result.rho);
+    assert_eq!(out_xla.result.dep, out_tree.result.dep);
+    assert_eq!(out_xla.result.labels, out_tree.result.labels);
+    assert_eq!(adjusted_rand_index(&out_xla.result.labels, &out_tree.result.labels), 1.0);
+
+    // Auto routing: small -> xla, big -> tree.
+    let small = coord.run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::Auto)).unwrap();
+    assert_eq!(small.backend_used, Backend::XlaBruteForce);
+    let big_pts = Arc::new(grid_points(8, 3000, 2, 80));
+    let big = coord.run_sync(ClusterJob::new(big_pts, params).backend(Backend::Auto)).unwrap();
+    assert_eq!(big.backend_used, Backend::TreeExact);
+}
+
+#[test]
+fn full_pipeline_agreement_on_clustered_grid_data() {
+    if !require_artifacts() {
+        return;
+    }
+    // Two separated integer blobs; every backend and every dep algorithm
+    // must produce the same 2-cluster labeling.
+    let mut rng = SplitMix64::new(9);
+    let mut coords = Vec::new();
+    for base in [0i64, 1000] {
+        for _ in 0..200 {
+            coords.push((base + rng.next_below(20) as i64) as f64);
+            coords.push((base + rng.next_below(20) as i64) as f64);
+        }
+    }
+    let pts = Arc::new(PointSet::new(coords, 2));
+    let params = DpcParams { d_cut: 8.0, rho_min: 0.0, delta_min: 100.0 };
+    let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+    assert_eq!(reference.num_clusters, 2);
+
+    let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
+    let out = coord.run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::XlaBruteForce)).unwrap();
+    assert_eq!(out.backend_used, Backend::XlaBruteForce);
+    assert_eq!(out.result.labels, reference.labels);
+    assert_eq!(out.result.num_clusters, 2);
+}
