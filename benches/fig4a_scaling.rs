@@ -26,15 +26,19 @@ fn main() {
             "exact-baseline",
             Box::new(move |pts| {
                 time_once(|| {
-                    Dpc::new(params).dep_algo(DepAlgo::ExactBaseline).density_algo(DensityAlgo::BaselineIncremental).run(pts)
+                    Dpc::new(params)
+                        .dep_algo(DepAlgo::ExactBaseline)
+                        .density_algo(DensityAlgo::BaselineIncremental)
+                        .run(pts)
+                        .expect("cluster")
                 })
                 .0
             }),
         ),
         ("approx-baseline", Box::new(move |pts| time_once(|| run_approx(pts, params)).0)),
-        ("fenwick", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(pts)).0)),
-        ("incomplete", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Incomplete).run(pts)).0)),
-        ("priority", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Priority).run(pts)).0)),
+        ("fenwick", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(pts).expect("cluster")).0)),
+        ("incomplete", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Incomplete).run(pts).expect("cluster")).0)),
+        ("priority", Box::new(move |pts| time_once(|| Dpc::new(params).dep_algo(DepAlgo::Priority).run(pts).expect("cluster")).0)),
     ];
 
     println!("# Figure 4a: total runtime (s) on simden vs n, log-log slope fit");

@@ -45,7 +45,7 @@ fn main() {
         let mut times = Vec::new();
         for &t in &threads {
             parlay::set_threads(t);
-            let (secs, out) = time_once(|| Dpc::new(params).dep_algo(algo).density_algo(dalgo).run(&pts));
+            let (secs, out) = time_once(|| Dpc::new(params).dep_algo(algo).density_algo(dalgo).run(&pts).expect("cluster"));
             std::hint::black_box(out.num_clusters);
             times.push(secs);
             eprintln!("done: {} T={t}", algo.name());

@@ -1,0 +1,73 @@
+//! Re-cut amortization bench: threshold-only `ClusterSession::cut()` vs a
+//! fresh full `Dpc::run` at the same parameters — the serving-time win the
+//! staged session exists for (the Rodriguez–Laio workflow re-cuts the same
+//! dataset many times while the analyst reads the decision graph).
+//!
+//!   cargo bench --bench recut_latency
+//!   PARBENCH_N=200000 cargo bench --bench recut_latency
+//!
+//! Expected: re-cut latency ≥10x below the full rerun at n = 100k (the cut
+//! is a mask + union-find pass; the rerun pays kd-tree build + density +
+//! dependent points again), and the gap widens with n.
+
+use parcluster::bench::{fmt_secs, time_median, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{ClusterSession, DepAlgo, Dpc, DpcParams};
+
+fn main() {
+    let n: usize = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000);
+    let trials: usize = std::env::var("PARBENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let d_cut = 30.0;
+    let pts = synthetic::simden(n, 2, 42);
+
+    // The threshold sweep an analyst would drive from the decision graph.
+    let sweeps: &[(f64, f64)] = &[(0.0, 100.0), (5.0, 100.0), (0.0, 300.0), (10.0, 50.0)];
+
+    let mut session = ClusterSession::build(&pts).expect("build session");
+    session.density(d_cut).expect("density");
+    session.dependents(DepAlgo::Priority).expect("dependents");
+
+    println!("# Re-cut latency vs full rerun on simden n={n} (median of {trials})");
+    let mut table = Table::new(&["rho_min", "delta_min", "full run", "session cut", "speedup", "identical"]);
+    let mut worst_speedup = f64::INFINITY;
+    for &(rho_min, delta_min) in sweeps {
+        let params = DpcParams { d_cut, rho_min, delta_min };
+        let full_s = time_median(trials, || {
+            std::hint::black_box(Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("cluster"));
+        });
+        let cut_s = time_median(trials, || {
+            std::hint::black_box(session.cut(rho_min, delta_min).expect("cut"));
+        });
+        let fresh = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("cluster");
+        let recut = session.cut(rho_min, delta_min).expect("cut");
+        let identical = fresh.labels == recut.labels
+            && fresh.rho == recut.rho
+            && fresh.dep == recut.dep
+            && fresh.delta == recut.delta
+            && fresh.centers == recut.centers;
+        let speedup = full_s / cut_s.max(1e-12);
+        worst_speedup = worst_speedup.min(speedup);
+        table.row(vec![
+            format!("{rho_min}"),
+            format!("{delta_min}"),
+            fmt_secs(full_s),
+            fmt_secs(cut_s),
+            format!("{speedup:.1}x"),
+            if identical { "yes".into() } else { "NO".into() },
+        ]);
+        eprintln!("done: rho_min={rho_min} delta_min={delta_min}");
+    }
+    table.print();
+    let stats = session.stats();
+    println!(
+        "\n# session artifacts computed once: density x{}, dependents x{} (for {} timed cuts)",
+        stats.density_computes,
+        stats.dep_computes,
+        sweeps.len()
+    );
+    println!("# worst-case speedup across the sweep: {worst_speedup:.1}x (target: >= 10x at n=100k)");
+    if worst_speedup < 10.0 {
+        eprintln!("WARNING: amortization below the 10x target");
+        std::process::exit(1);
+    }
+}

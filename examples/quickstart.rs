@@ -17,7 +17,7 @@ fn main() {
     let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
 
     // DPC-PRIORITY: the paper's fastest algorithm (Algorithm 1).
-    let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts);
+    let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("well-formed input");
 
     println!("points    : {}", pts.len());
     println!("clusters  : {}", out.num_clusters);

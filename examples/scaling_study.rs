@@ -20,7 +20,7 @@ fn main() {
         let mut times = Vec::new();
         for &n in &sizes {
             let pts = synthetic::simden(n, 2, 42);
-            let (secs, out) = time_once(|| Dpc::new(params).dep_algo(algo).run(&pts));
+            let (secs, out) = time_once(|| Dpc::new(params).dep_algo(algo).run(&pts).expect("cluster"));
             assert!(out.num_clusters >= 1);
             times.push(secs);
         }

@@ -112,7 +112,10 @@ COMMANDS:
   decision   (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--k K]
              [--csv-out FILE] [--seed S]
   serve      [--config FILE] [--workers N]    read jobs from stdin, one per line:
-             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`
+             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`  full pipeline job
+             `open <dataset> <n> <d_cut>`                          open a cached session
+             `recut <session> <rho_min> <delta_min>`               linkage-only re-cut
+             `close <session>`                                     drop a session's cache
   help
 
 Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick

@@ -1,0 +1,205 @@
+//! The unified execution-backend abstraction.
+//!
+//! The coordinator used to hard-code an `if xla / else tree` branch per
+//! job; both backends now sit behind the [`Engine`] trait — Step 1
+//! (`density`) and Step 2 (`dependents`) as separate calls so staged
+//! sessions can cache each, with Step 3 (union-find linkage) always in Rust
+//! on the caller's side. The [`super::Router`] hands out `Arc<dyn Engine>`
+//! per resolved backend.
+
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::dpc::{self, DensityAlgo, DepAlgo};
+use crate::error::DpcError;
+use crate::geom::PointSet;
+use crate::runtime::engine::D_PAD;
+use crate::runtime::{XlaDpcOutput, XlaService};
+
+/// Shape and algorithm choices of one clustering job — what an engine needs
+/// for capability checks ([`Engine::supports`]) and per-job overrides.
+#[derive(Clone, Copy, Debug)]
+pub struct JobSpec {
+    pub n: usize,
+    pub d: usize,
+    pub d_cut: f64,
+    /// Step-2 algorithm (tree backend only; brute-force backends ignore it).
+    pub dep_algo: DepAlgo,
+    /// Step-1 variant (tree backend only).
+    pub density_algo: DensityAlgo,
+}
+
+impl JobSpec {
+    pub fn new(pts: &PointSet, d_cut: f64) -> Self {
+        JobSpec {
+            n: pts.len(),
+            d: pts.dim(),
+            d_cut,
+            dep_algo: DepAlgo::Priority,
+            density_algo: DensityAlgo::TreePruned,
+        }
+    }
+
+    pub fn dep_algo(mut self, a: DepAlgo) -> Self {
+        self.dep_algo = a;
+        self
+    }
+}
+
+/// An execution backend for Steps 1–2 of the DPC pipeline.
+pub trait Engine: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Can this engine execute a job of the given shape?
+    fn supports(&self, job: &JobSpec) -> bool;
+
+    /// Step 1: ρ(x) for every point at radius `job.d_cut`.
+    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError>;
+
+    /// Step 2: λ(x) per point — `None` for points below `rho_min` and the
+    /// global peak. Candidate sets are threshold-free (pass `rho_min = 0.0`
+    /// for the full forest used by cached sessions).
+    fn dependents(
+        &self,
+        pts: &Arc<PointSet>,
+        rho: &[u32],
+        rho_min: f64,
+        job: &JobSpec,
+    ) -> Result<Vec<Option<u32>>, DpcError>;
+}
+
+/// The Rust tree engine: the paper's algorithm suite. Exact in f64, any
+/// size and dimension.
+pub struct TreeEngine;
+
+impl Engine for TreeEngine {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn supports(&self, _job: &JobSpec) -> bool {
+        true
+    }
+
+    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+        Ok(dpc::compute_density(pts, job.d_cut, job.density_algo))
+    }
+
+    fn dependents(
+        &self,
+        pts: &Arc<PointSet>,
+        rho: &[u32],
+        rho_min: f64,
+        job: &JobSpec,
+    ) -> Result<Vec<Option<u32>>, DpcError> {
+        Ok(dpc::dep::compute_dependents(pts, rho, rho_min, job.dep_algo))
+    }
+}
+
+/// The AOT-compiled XLA brute-force engine, adapted to the trait.
+///
+/// One PJRT execution produces both ρ and λ; since the trait splits the
+/// steps, the adapter memoizes recent (point set, radius) outputs so each
+/// job's `density` → `dependents` sequence executes once — including when
+/// several workers interleave jobs (one slot per in-flight point set, not a
+/// single global slot). Each memo holds a `Weak` to its point set: the weak
+/// count pins the allocation, so a pointer match can never be a recycled
+/// address from a dropped job, and dead entries are pruned on insert.
+pub struct XlaEngine {
+    svc: Arc<XlaService>,
+    memo: Mutex<Vec<Memo>>,
+}
+
+/// More concurrent XLA jobs than this re-execute instead of caching.
+const MEMO_CAP: usize = 16;
+
+struct Memo {
+    pts: Weak<PointSet>,
+    d_cut_bits: u64,
+    out: XlaDpcOutput,
+}
+
+impl XlaEngine {
+    pub fn new(svc: Arc<XlaService>) -> Self {
+        XlaEngine { svc, memo: Mutex::new(Vec::new()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.svc.capacity()
+    }
+
+    fn run_memo(&self, pts: &Arc<PointSet>, d_cut: f64) -> Result<XlaDpcOutput, DpcError> {
+        let bits = d_cut.to_bits();
+        {
+            let memo = self.memo.lock().unwrap();
+            if let Some(m) = memo
+                .iter()
+                .find(|m| std::ptr::eq(m.pts.as_ptr(), Arc::as_ptr(pts)) && m.d_cut_bits == bits)
+            {
+                return Ok(m.out.clone());
+            }
+        }
+        let out = self
+            .svc
+            .run(Arc::clone(pts), d_cut)
+            .map_err(|e| DpcError::Backend { engine: "xla".into(), message: e.to_string() })?;
+        let mut memo = self.memo.lock().unwrap();
+        memo.retain(|m| m.pts.strong_count() > 0);
+        if memo.len() >= MEMO_CAP {
+            memo.remove(0);
+        }
+        memo.push(Memo { pts: Arc::downgrade(pts), d_cut_bits: bits, out: out.clone() });
+        Ok(out)
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn supports(&self, job: &JobSpec) -> bool {
+        job.n <= self.svc.capacity() && job.d <= D_PAD
+    }
+
+    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+        Ok(self.run_memo(pts, job.d_cut)?.rho)
+    }
+
+    fn dependents(
+        &self,
+        pts: &Arc<PointSet>,
+        rho: &[u32],
+        rho_min: f64,
+        job: &JobSpec,
+    ) -> Result<Vec<Option<u32>>, DpcError> {
+        let out = self.run_memo(pts, job.d_cut)?;
+        // Noise handling mirrors the tree engine: noise points get no λ.
+        Ok(rho
+            .iter()
+            .zip(&out.dep)
+            .map(|(&r, &d)| if (r as f64) < rho_min { None } else { d })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::DpcParams;
+    use crate::prng::SplitMix64;
+    use crate::proputil::gen_clustered_points;
+
+    #[test]
+    fn tree_engine_matches_direct_pipeline() {
+        let mut rng = SplitMix64::new(77);
+        let pts = Arc::new(gen_clustered_points(&mut rng, 300, 2, 3, 80.0, 2.0));
+        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 10.0 };
+        let spec = JobSpec::new(&pts, params.d_cut).dep_algo(DepAlgo::Fenwick);
+        let eng = TreeEngine;
+        assert!(eng.supports(&spec));
+        let rho = eng.density(&pts, &spec).unwrap();
+        assert_eq!(rho, dpc::compute_density(&pts, params.d_cut, DensityAlgo::TreePruned));
+        let dep = eng.dependents(&pts, &rho, params.rho_min, &spec).unwrap();
+        assert_eq!(dep, dpc::dep::compute_dependents(&pts, &rho, params.rho_min, DepAlgo::Fenwick));
+    }
+}

@@ -6,12 +6,23 @@ use crate::dpc::{DpcParams, DpcResult, DepAlgo};
 use crate::geom::PointSet;
 
 use super::router::Backend;
+use super::service::SessionId;
+
+/// What a job executes against.
+#[derive(Clone)]
+pub enum JobPayload {
+    /// A full three-step pipeline over a point set.
+    /// Shared so large point sets are not copied per worker.
+    Points(Arc<PointSet>),
+    /// A linkage-only re-cut against an open session's cached artifacts
+    /// (Steps 1–2 are served from the session).
+    Recut(SessionId),
+}
 
 /// A clustering request.
 #[derive(Clone)]
 pub struct ClusterJob {
-    /// Shared so large point sets are not copied per worker.
-    pub pts: Arc<PointSet>,
+    pub payload: JobPayload,
     pub params: DpcParams,
     /// Routing override (None = coordinator default policy).
     pub backend: Option<Backend>,
@@ -23,7 +34,13 @@ pub struct ClusterJob {
 
 impl ClusterJob {
     pub fn new(pts: Arc<PointSet>, params: DpcParams) -> Self {
-        ClusterJob { pts, params, backend: None, dep_algo: None, tag: String::new() }
+        ClusterJob { payload: JobPayload::Points(pts), params, backend: None, dep_algo: None, tag: String::new() }
+    }
+
+    /// A re-cut of an open session at new thresholds (`d_cut` is fixed by
+    /// the session; the field here is filled in from it for reporting).
+    pub fn recut(session: SessionId, params: DpcParams) -> Self {
+        ClusterJob { payload: JobPayload::Recut(session), params, backend: None, dep_algo: None, tag: String::new() }
     }
 
     pub fn backend(mut self, b: Backend) -> Self {

@@ -5,7 +5,8 @@
 //! architecture: it owns process lifecycle, a job queue with a worker pool,
 //! a backend router, metrics, and the configuration system.
 //!
-//! Backends:
+//! Backends (both behind the [`Engine`] trait; the worker pipeline is
+//! backend-agnostic):
 //! - **TreeExact** — the Rust engine (`crate::dpc`): exact, any n, the
 //!   paper's algorithms (priority / fenwick / incomplete / baselines).
 //! - **XlaBruteForce** — the AOT-compiled tensorized Θ(n²) DPC
@@ -14,14 +15,19 @@
 //!   always runs in Rust.
 //! - **Auto** — route by size: n ≤ threshold and artifacts present → XLA,
 //!   else trees.
+//!
+//! Sessions ([`Coordinator::open_session`] / [`Coordinator::submit_recut`])
+//! cache Steps 1–2 so decision-graph threshold sweeps pay only Step 3.
 
 pub mod config;
+pub mod engine;
 pub mod job;
 pub mod router;
 pub mod service;
 pub mod metrics;
 
 pub use config::CoordinatorConfig;
-pub use job::{ClusterJob, JobOutput, JobStatus};
+pub use engine::{Engine, JobSpec, TreeEngine, XlaEngine};
+pub use job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 pub use router::{Backend, Router};
-pub use service::Coordinator;
+pub use service::{Coordinator, SessionEntry, SessionId};

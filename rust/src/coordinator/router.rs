@@ -1,9 +1,12 @@
 //! Backend routing: decide, per job, whether the tree engine or the
-//! AOT-compiled XLA brute-force engine runs it.
+//! AOT-compiled XLA brute-force engine runs it, and hand out the resolved
+//! engine as a trait object.
 
 use std::sync::Arc;
 
 use crate::runtime::XlaService;
+
+use super::engine::{Engine, JobSpec, TreeEngine, XlaEngine};
 
 /// Execution backend for a clustering job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -26,30 +29,32 @@ impl Backend {
     }
 }
 
-/// Size-based router.
+/// Size-based router over the registered engines.
 pub struct Router {
-    xla: Option<Arc<XlaService>>,
+    tree: Arc<TreeEngine>,
+    xla: Option<Arc<XlaEngine>>,
     xla_threshold: usize,
 }
 
 impl Router {
     pub fn new(xla: Option<Arc<XlaService>>, xla_threshold: usize) -> Self {
-        Router { xla, xla_threshold }
+        Router {
+            tree: Arc::new(TreeEngine),
+            xla: xla.map(|svc| Arc::new(XlaEngine::new(svc))),
+            xla_threshold,
+        }
     }
 
-    pub fn xla_engine(&self) -> Option<&Arc<XlaService>> {
-        self.xla.as_ref()
+    pub fn has_xla(&self) -> bool {
+        self.xla.is_some()
     }
 
-    /// Resolve a (possibly `Auto`) backend request for a job of `n` points
-    /// in `d` dims. Falls back to the tree engine whenever XLA cannot take
-    /// the job (no artifacts, too large, d > 8).
-    pub fn resolve(&self, requested: Backend, n: usize, d: usize) -> Backend {
-        let xla_ok = self
-            .xla
-            .as_ref()
-            .map(|e| n <= e.capacity() && d <= crate::runtime::engine::D_PAD)
-            .unwrap_or(false);
+    /// Resolve a (possibly `Auto`) backend request for a job. Falls back to
+    /// the tree engine whenever XLA cannot take the job (no artifacts, too
+    /// large, d > padded dimension) — capability is the engine's own
+    /// [`Engine::supports`] answer, not router-side special cases.
+    pub fn resolve(&self, requested: Backend, spec: &JobSpec) -> Backend {
+        let xla_ok = self.xla.as_ref().map(|e| e.supports(spec)).unwrap_or(false);
         match requested {
             Backend::TreeExact => Backend::TreeExact,
             Backend::XlaBruteForce => {
@@ -60,7 +65,7 @@ impl Router {
                 }
             }
             Backend::Auto => {
-                if xla_ok && n <= self.xla_threshold {
+                if xla_ok && spec.n <= self.xla_threshold {
                     Backend::XlaBruteForce
                 } else {
                     Backend::TreeExact
@@ -68,18 +73,41 @@ impl Router {
             }
         }
     }
+
+    /// The engine for a *resolved* backend (`Auto` maps to the tree engine;
+    /// resolve first for size-based routing).
+    pub fn engine(&self, backend: Backend) -> Arc<dyn Engine> {
+        match backend {
+            Backend::XlaBruteForce => match &self.xla {
+                Some(e) => Arc::clone(e) as Arc<dyn Engine>,
+                None => Arc::clone(&self.tree) as Arc<dyn Engine>,
+            },
+            Backend::TreeExact | Backend::Auto => Arc::clone(&self.tree) as Arc<dyn Engine>,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpc::DpcParams;
+    use crate::geom::PointSet;
+
+    fn spec(n: usize) -> JobSpec {
+        let pts = PointSet::new(vec![0.0; n * 2], 2);
+        JobSpec::new(&pts, DpcParams::default().d_cut)
+    }
 
     #[test]
     fn without_xla_everything_routes_to_tree() {
         let r = Router::new(None, 4096);
-        assert_eq!(r.resolve(Backend::Auto, 100, 2), Backend::TreeExact);
-        assert_eq!(r.resolve(Backend::XlaBruteForce, 100, 2), Backend::TreeExact);
-        assert_eq!(r.resolve(Backend::TreeExact, 100, 2), Backend::TreeExact);
+        let s = spec(100);
+        assert_eq!(r.resolve(Backend::Auto, &s), Backend::TreeExact);
+        assert_eq!(r.resolve(Backend::XlaBruteForce, &s), Backend::TreeExact);
+        assert_eq!(r.resolve(Backend::TreeExact, &s), Backend::TreeExact);
+        assert!(!r.has_xla());
+        assert_eq!(r.engine(Backend::XlaBruteForce).name(), "tree");
+        assert_eq!(r.engine(Backend::TreeExact).name(), "tree");
     }
 
     // Routing with a live engine is exercised in rust/tests/xla_integration.rs.

@@ -1,9 +1,15 @@
-//! The coordinator service: job queue + worker pool + router + metrics.
+//! The coordinator service: job queue + worker pool + router + metrics +
+//! session store.
 //!
 //! Jobs are submitted (non-blocking) and executed by dedicated worker
 //! threads; `wait` blocks on a condvar until the job reaches a terminal
-//! state. The XLA engine runs Steps 1–2 for routed jobs, with Step 3
-//! (single-linkage union-find) always in Rust.
+//! state. Both backends are driven through the [`Engine`] trait: the worker
+//! runs Step 1 (`density`) and Step 2 (`dependents`) on the resolved engine
+//! and Step 3 (single-linkage union-find) always in Rust.
+//!
+//! Sessions ([`Coordinator::open_session`]) cache a point set's density and
+//! full dependency forest so [`Coordinator::submit_recut`] jobs — the
+//! decision-graph parameter sweeps of §6.2 — execute only the linkage step.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -13,15 +19,36 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::dpc::{linkage, Dpc, DpcResult, DepAlgo};
+use crate::dpc::{dep, linkage, session, DpcParams, DpcResult, StepTimings};
+use crate::error::DpcError;
+use crate::geom::PointSet;
 use crate::runtime::XlaService;
 
 use super::config::CoordinatorConfig;
-use super::job::{ClusterJob, JobOutput, JobStatus};
+use super::engine::JobSpec;
+use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 use super::metrics::Metrics;
 use super::router::{Backend, Router};
 
 pub type JobId = u64;
+pub type SessionId = u64;
+
+/// Cached Steps-1–2 artifacts for one open session: everything a
+/// threshold-only re-cut needs.
+pub struct SessionEntry {
+    pub pts: Arc<PointSet>,
+    pub d_cut: f64,
+    /// ρ per point at `d_cut`.
+    pub rho: Vec<u32>,
+    /// Full (unthresholded) dependency forest.
+    pub dep: Vec<Option<u32>>,
+    /// δ for the full forest.
+    pub delta: Vec<f64>,
+    /// Name of the engine that built the artifacts.
+    pub built_by: &'static str,
+    /// Wall-clock seconds the build (Steps 1–2) took.
+    pub build_s: f64,
+}
 
 struct Shared {
     queue: Mutex<VecDeque<(JobId, ClusterJob)>>,
@@ -29,6 +56,7 @@ struct Shared {
     status: Mutex<HashMap<JobId, JobStatus>>,
     status_cv: Condvar,
     shutdown: AtomicBool,
+    sessions: Mutex<HashMap<SessionId, Arc<SessionEntry>>>,
 }
 
 /// The clustering service. Create with [`Coordinator::start`], submit jobs,
@@ -39,6 +67,7 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    next_session_id: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
 
@@ -68,6 +97,7 @@ impl Coordinator {
             status: Mutex::new(HashMap::new()),
             status_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            sessions: Mutex::new(HashMap::new()),
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers)
@@ -82,7 +112,15 @@ impl Coordinator {
                     .expect("spawn worker")
             })
             .collect();
-        Ok(Coordinator { cfg, router, shared, workers, next_id: AtomicU64::new(1), metrics })
+        Ok(Coordinator {
+            cfg,
+            router,
+            shared,
+            workers,
+            next_id: AtomicU64::new(1),
+            next_session_id: AtomicU64::new(1),
+            metrics,
+        })
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -90,7 +128,7 @@ impl Coordinator {
     }
 
     pub fn has_xla(&self) -> bool {
-        self.router.xla_engine().is_some()
+        self.router.has_xla()
     }
 
     /// Submit a job; returns immediately.
@@ -101,6 +139,58 @@ impl Coordinator {
         self.shared.queue_cv.notify_one();
         self.metrics.inc("jobs_submitted");
         id
+    }
+
+    /// Open a session: validate the input, run Steps 1–2 once through the
+    /// routed engine, and cache the artifacts for threshold-only re-cuts.
+    /// Synchronous — the build is the expensive part the session exists to
+    /// amortize, so callers should see its cost exactly once.
+    pub fn open_session(&self, pts: Arc<PointSet>, d_cut: f64) -> Result<SessionId, DpcError> {
+        session::validate_points(&pts)?;
+        session::validate_d_cut(d_cut)?;
+        let spec = JobSpec::new(&pts, d_cut).dep_algo(self.cfg.dep_algo);
+        let backend = self.router.resolve(self.cfg.backend, &spec);
+        let engine = self.router.engine(backend);
+        let t = Instant::now();
+        let rho = engine.density(&pts, &spec)?;
+        // rho_min = 0: the full forest, so any later threshold is a mask.
+        let dep = engine.dependents(&pts, &rho, 0.0, &spec)?;
+        let delta = dep::dependent_distances(&pts, &dep);
+        let build_s = t.elapsed().as_secs_f64();
+        let entry = Arc::new(SessionEntry {
+            pts,
+            d_cut,
+            rho,
+            dep,
+            delta,
+            built_by: engine.name(),
+            build_s,
+        });
+        let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
+        self.shared.sessions.lock().unwrap().insert(id, entry);
+        self.metrics.inc("sessions_opened");
+        Ok(id)
+    }
+
+    /// Look up an open session's cached artifacts.
+    pub fn session(&self, id: SessionId) -> Option<Arc<SessionEntry>> {
+        self.shared.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Submit a linkage-only re-cut of an open session at new thresholds.
+    pub fn submit_recut(&self, id: SessionId, rho_min: f64, delta_min: f64) -> Result<JobId, DpcError> {
+        session::validate_thresholds(rho_min, delta_min)?;
+        let entry = self.session(id).ok_or(DpcError::UnknownSession(id))?;
+        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min };
+        let job = ClusterJob::recut(id, params).tag(format!("recut:{id}"));
+        self.metrics.inc("recuts_submitted");
+        Ok(self.submit(job))
+    }
+
+    /// Drop a session's cached artifacts. Returns whether it existed;
+    /// re-cuts already dequeued keep their `Arc` and complete.
+    pub fn close_session(&self, id: SessionId) -> bool {
+        self.shared.sessions.lock().unwrap().remove(&id).is_some()
     }
 
     /// Current status (non-blocking).
@@ -164,12 +254,13 @@ fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &Coordinato
         };
         set_status(sh, id, JobStatus::Running);
         let t = Instant::now();
-        let backend = router.resolve(job.backend.unwrap_or(cfg.backend), job.pts.len(), job.pts.dim());
-        let outcome = run_job(&job, backend, router, cfg);
+        let (outcome, backend) = run_job(&job, sh, router, cfg);
         let wall = t.elapsed().as_secs_f64();
         metrics.inc(&format!("jobs_{}", backend.name()));
         metrics.observe_secs("job_wall", wall);
-        metrics.add("points_processed", job.pts.len() as u64);
+        if let Ok(result) = &outcome {
+            metrics.add("points_processed", result.labels.len() as u64);
+        }
         match outcome {
             Ok(result) => set_status(
                 sh,
@@ -186,46 +277,81 @@ fn set_status(sh: &Shared, id: JobId, s: JobStatus) {
     sh.status_cv.notify_all();
 }
 
-fn run_job(job: &ClusterJob, backend: Backend, router: &Router, cfg: &CoordinatorConfig) -> Result<DpcResult> {
-    match backend {
-        Backend::XlaBruteForce => {
-            let engine = router.xla_engine().expect("router resolved XLA without an engine");
-            let t0 = Instant::now();
-            let out = engine.run(Arc::clone(&job.pts), job.params.d_cut)?;
-            let steps12 = t0.elapsed().as_secs_f64();
-            // Noise handling mirrors the tree engine: noise points get no λ.
-            let dep: Vec<Option<u32>> = out
-                .rho
-                .iter()
-                .zip(&out.dep)
-                .map(|(&r, &d)| if (r as f64) < job.params.rho_min { None } else { d })
-                .collect();
-            let t1 = Instant::now();
-            let link = linkage::single_linkage(&job.pts, &out.rho, &dep, job.params);
-            let linkage_s = t1.elapsed().as_secs_f64();
-            let delta = crate::dpc::dep::dependent_distances(&job.pts, &dep);
-            Ok(DpcResult {
-                rho: out.rho,
-                dep,
-                delta,
-                labels: link.labels,
-                centers: link.centers,
-                num_clusters: link.num_clusters,
-                num_noise: link.num_noise,
-                timings: crate::dpc::StepTimings { density_s: steps12, dep_s: 0.0, linkage_s },
-            })
+/// Execute one job; returns the result and the backend that ran it.
+fn run_job(
+    job: &ClusterJob,
+    sh: &Shared,
+    router: &Router,
+    cfg: &CoordinatorConfig,
+) -> (Result<DpcResult, DpcError>, Backend) {
+    match &job.payload {
+        JobPayload::Points(pts) => {
+            let spec = JobSpec::new(pts, job.params.d_cut).dep_algo(job.dep_algo.unwrap_or(cfg.dep_algo));
+            let backend = router.resolve(job.backend.unwrap_or(cfg.backend), &spec);
+            (run_points_job(pts, &spec, job.params, router, backend), backend)
         }
-        Backend::TreeExact | Backend::Auto => {
-            let algo: DepAlgo = job.dep_algo.unwrap_or(cfg.dep_algo);
-            Ok(Dpc::new(job.params).dep_algo(algo).run(&job.pts))
+        JobPayload::Recut(sid) => {
+            // Re-cuts are linkage-only and always run in Rust.
+            (run_recut_job(*sid, job.params, sh), Backend::TreeExact)
         }
     }
+}
+
+/// The unified Steps 1–3 pipeline over whatever engine the router resolved.
+fn run_points_job(
+    pts: &Arc<PointSet>,
+    spec: &JobSpec,
+    params: DpcParams,
+    router: &Router,
+    backend: Backend,
+) -> Result<DpcResult, DpcError> {
+    session::validate_points(pts)?;
+    session::validate_params(&params)?;
+    let engine = router.engine(backend);
+
+    let t0 = Instant::now();
+    let rho = engine.density(pts, spec)?;
+    let density_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let dep_ids = engine.dependents(pts, &rho, params.rho_min, spec)?;
+    let dep_s = t1.elapsed().as_secs_f64();
+
+    let t2 = Instant::now();
+    let link = linkage::single_linkage(pts, &rho, &dep_ids, params);
+    let linkage_s = t2.elapsed().as_secs_f64();
+
+    let delta = dep::dependent_distances(pts, &dep_ids);
+    Ok(DpcResult {
+        rho,
+        dep: dep_ids,
+        delta,
+        labels: link.labels,
+        centers: link.centers,
+        num_clusters: link.num_clusters,
+        num_noise: link.num_noise,
+        timings: StepTimings { density_s, dep_s, linkage_s },
+    })
+}
+
+fn run_recut_job(sid: SessionId, params: DpcParams, sh: &Shared) -> Result<DpcResult, DpcError> {
+    let entry = sh
+        .sessions
+        .lock()
+        .unwrap()
+        .get(&sid)
+        .cloned()
+        .ok_or(DpcError::UnknownSession(sid))?;
+    let mut out = session::cut_cached(&entry.pts, &entry.rho, &entry.dep, &entry.delta, params);
+    // Report the (amortized) build cost in the density slot for visibility.
+    out.timings.density_s = entry.build_s;
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dpc::DpcParams;
+    use crate::dpc::{Dpc, DepAlgo, DpcParams};
     use crate::geom::PointSet;
     use crate::prng::SplitMix64;
 
@@ -295,5 +421,61 @@ mod tests {
         let id = coord.submit(ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }));
         let _ = coord.wait(id);
         assert!(matches!(coord.status(id), Some(JobStatus::Done(_))));
+    }
+
+    #[test]
+    fn malformed_job_fails_with_typed_message_not_panic() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let empty = Arc::new(PointSet::empty(2));
+        let err = coord
+            .run_sync(ClusterJob::new(empty, DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }))
+            .unwrap_err();
+        assert!(err.contains("empty point set"), "{err}");
+        let bad = Arc::new(PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2));
+        let err = coord
+            .run_sync(ClusterJob::new(bad, DpcParams { d_cut: -1.0, rho_min: 0.0, delta_min: 20.0 }))
+            .unwrap_err();
+        assert!(err.contains("d_cut"), "{err}");
+    }
+
+    #[test]
+    fn session_recut_matches_full_run_and_skips_steps12() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let pts = blob_points();
+        let sid = coord.open_session(Arc::clone(&pts), 3.0).unwrap();
+        for (rho_min, delta_min) in [(0.0, 20.0), (2.0, 10.0), (0.0, f64::INFINITY)] {
+            let out = coord
+                .wait(coord.submit_recut(sid, rho_min, delta_min).unwrap())
+                .unwrap();
+            let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
+            assert_eq!(out.result.labels, fresh.labels);
+            assert_eq!(out.result.rho, fresh.rho);
+            assert_eq!(out.result.dep, fresh.dep);
+            assert_eq!(out.result.num_clusters, fresh.num_clusters);
+            assert_eq!(out.result.num_noise, fresh.num_noise);
+        }
+        assert_eq!(coord.metrics.counter("sessions_opened"), 1);
+        assert_eq!(coord.metrics.counter("recuts_submitted"), 3);
+        assert!(coord.close_session(sid));
+    }
+
+    #[test]
+    fn recut_of_unknown_or_closed_session_is_typed_error() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert!(matches!(coord.submit_recut(42, 0.0, 1.0), Err(DpcError::UnknownSession(42))));
+        let sid = coord.open_session(blob_points(), 3.0).unwrap();
+        assert!(coord.close_session(sid));
+        assert!(!coord.close_session(sid));
+        assert!(matches!(coord.submit_recut(sid, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
+    }
+
+    #[test]
+    fn open_session_validates_input() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert!(matches!(coord.open_session(Arc::new(PointSet::empty(2)), 1.0), Err(DpcError::EmptyInput)));
+        assert!(matches!(
+            coord.open_session(blob_points(), f64::NAN),
+            Err(DpcError::InvalidParam { name: "d_cut", .. })
+        ));
     }
 }

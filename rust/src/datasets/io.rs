@@ -3,15 +3,25 @@
 //! Binary layout: magic `PCLB`, u32 version, u64 n, u32 d, then n·d f64
 //! little-endian coordinates. Used to cache generated datasets between
 //! bench runs and to hand points to external tools.
+//!
+//! Reads return [`DpcError`]: underlying filesystem failures as
+//! `DpcError::Io`, malformed content (bad magic, ragged rows, non-finite
+//! coordinates) as the matching typed variant — nothing in this module
+//! panics on user files.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use crate::error::DpcError;
 use crate::geom::PointSet;
 
 const MAGIC: &[u8; 4] = b"PCLB";
 const VERSION: u32 = 1;
+
+fn bad_data(msg: String) -> DpcError {
+    DpcError::Io(std::io::Error::new(std::io::ErrorKind::InvalidData, msg))
+}
 
 /// Write a point set in the binary format.
 pub fn write_binary(pts: &PointSet, path: &Path) -> std::io::Result<()> {
@@ -27,18 +37,18 @@ pub fn write_binary(pts: &PointSet, path: &Path) -> std::io::Result<()> {
 }
 
 /// Read a point set in the binary format.
-pub fn read_binary(path: &Path) -> std::io::Result<PointSet> {
+pub fn read_binary(path: &Path) -> Result<PointSet, DpcError> {
     let mut r = BufReader::new(File::open(path)?);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        return Err(bad_data("bad magic".into()));
     }
     let mut u4 = [0u8; 4];
     r.read_exact(&mut u4)?;
     let version = u32::from_le_bytes(u4);
     if version != VERSION {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("unsupported version {version}")));
+        return Err(bad_data(format!("unsupported version {version}")));
     }
     let mut u8b = [0u8; 8];
     r.read_exact(&mut u8b)?;
@@ -46,14 +56,16 @@ pub fn read_binary(path: &Path) -> std::io::Result<PointSet> {
     r.read_exact(&mut u4)?;
     let d = u32::from_le_bytes(u4) as usize;
     if d == 0 || n.checked_mul(d).is_none() {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad header"));
+        return Err(bad_data("bad header".into()));
     }
     let mut coords = Vec::with_capacity(n * d);
     for _ in 0..n * d {
         r.read_exact(&mut u8b)?;
         coords.push(f64::from_le_bytes(u8b));
     }
-    Ok(PointSet::new(coords, d))
+    let pts = PointSet::try_new(coords, d)?;
+    pts.validate_finite()?;
+    Ok(pts)
 }
 
 /// Write CSV (no header, one point per row).
@@ -66,9 +78,10 @@ pub fn write_csv(pts: &PointSet, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Read CSV of floats (rows may not be ragged; `#`-prefixed lines and a
-/// non-numeric first row are skipped as headers/comments).
-pub fn read_csv(path: &Path) -> std::io::Result<PointSet> {
+/// Read CSV of floats (`#`-prefixed lines and a non-numeric first row are
+/// skipped as headers/comments). Ragged rows surface as
+/// [`DpcError::DimensionMismatch`], NaN/∞ as [`DpcError::NonFinite`].
+pub fn read_csv(path: &Path) -> Result<PointSet, DpcError> {
     let r = BufReader::new(File::open(path)?);
     let mut coords: Vec<f64> = Vec::new();
     let mut d: Option<usize> = None;
@@ -82,21 +95,21 @@ pub fn read_csv(path: &Path) -> std::io::Result<PointSet> {
         let vals = match vals {
             Ok(v) => v,
             Err(_) if lineno == 0 => continue, // header row
-            Err(e) => {
-                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1)))
-            }
+            Err(e) => return Err(bad_data(format!("line {}: {e}", lineno + 1))),
         };
         match d {
             None => d = Some(vals.len()),
             Some(dd) if dd != vals.len() => {
-                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, format!("ragged row at line {}", lineno + 1)))
+                return Err(DpcError::DimensionMismatch { expected: dd, got: vals.len() })
             }
             _ => {}
         }
         coords.extend(vals);
     }
-    let d = d.ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"))?;
-    Ok(PointSet::new(coords, d))
+    let d = d.ok_or(DpcError::EmptyInput)?;
+    let pts = PointSet::try_new(coords, d)?;
+    pts.validate_finite()?;
+    Ok(pts)
 }
 
 #[cfg(test)]
@@ -130,6 +143,14 @@ mod tests {
     }
 
     #[test]
+    fn binary_rejects_nonfinite_coords() {
+        let path = tmpdir().join("nan.pclb");
+        let pts = PointSet::new(vec![1.0, 2.0, f64::NAN, 4.0], 2);
+        write_binary(&pts, &path).unwrap();
+        assert!(matches!(read_binary(&path), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+    }
+
+    #[test]
     fn csv_roundtrip() {
         let mut rng = SplitMix64::new(2);
         let pts = gen_uniform_points(&mut rng, 100, 2, 5.0);
@@ -157,6 +178,16 @@ mod tests {
     fn csv_rejects_ragged() {
         let path = tmpdir().join("ragged.csv");
         std::fs::write(&path, "1.0,2.0\n3.0\n").unwrap();
-        assert!(read_csv(&path).is_err());
+        assert!(matches!(read_csv(&path), Err(DpcError::DimensionMismatch { expected: 2, got: 1 })));
+    }
+
+    #[test]
+    fn csv_rejects_nonfinite_and_empty() {
+        let path = tmpdir().join("nan.csv");
+        std::fs::write(&path, "1.0,2.0\nNaN,4.0\n").unwrap();
+        assert!(matches!(read_csv(&path), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+        let path = tmpdir().join("empty.csv");
+        std::fs::write(&path, "# nothing here\n").unwrap();
+        assert!(matches!(read_csv(&path), Err(DpcError::EmptyInput)));
     }
 }

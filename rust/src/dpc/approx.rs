@@ -383,7 +383,7 @@ mod tests {
         let mut rng = SplitMix64::new(74);
         let pts = two_blobs(&mut rng);
         let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 };
-        let exact = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts);
+        let exact = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).unwrap();
         let approx = run_approx(&pts, params);
         assert_eq!(exact.num_clusters, 2);
         assert_eq!(approx.num_clusters, 2);

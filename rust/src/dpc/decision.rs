@@ -6,6 +6,7 @@
 use std::io::Write;
 
 use crate::dpc::DpcResult;
+use crate::error::DpcError;
 
 /// One decision-graph point.
 #[derive(Clone, Copy, Debug)]
@@ -38,14 +39,20 @@ fn score(p: &DecisionPoint) -> f64 {
 }
 
 /// Suggest (ρ_min, δ_min) for a target number of clusters `k`: pick the k-th
-/// largest δ gap among the top candidates.
-pub fn suggest_params(graph: &[DecisionPoint], k: usize) -> (f64, f64) {
-    assert!(k >= 1 && k <= graph.len());
+/// largest δ gap among the top candidates. `k` must be in `1..=graph.len()`.
+pub fn suggest_params(graph: &[DecisionPoint], k: usize) -> Result<(f64, f64), DpcError> {
+    if k < 1 || k > graph.len() {
+        return Err(DpcError::InvalidParam {
+            name: "k",
+            value: k as f64,
+            requirement: "must be between 1 and the number of points",
+        });
+    }
     // δ_min: halfway (log-scale) between the k-th and (k+1)-th candidate δ.
     let dk = finite(graph[k - 1].delta, graph);
     let dn = if k < graph.len() { finite(graph[k].delta, graph) } else { 0.0 };
     let delta_min = if dn > 0.0 { (dk * dn).sqrt() } else { dk * 0.5 };
-    (0.0, delta_min)
+    Ok((0.0, delta_min))
 }
 
 fn finite(d: f64, graph: &[DecisionPoint]) -> f64 {
@@ -120,7 +127,7 @@ mod tests {
     #[test]
     fn top_decision_points_are_the_blob_centers() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         // Top 3 by ρ·δ should each come from a different blob.
         let blob_of = |id: u32| (id / 100) as usize;
@@ -134,17 +141,26 @@ mod tests {
     fn suggested_delta_separates_k_clusters() {
         let pts = blobs();
         let params0 = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 1.0 };
-        let out = Dpc::new(params0).run(&pts);
+        let out = Dpc::new(params0).run(&pts).unwrap();
         let graph = decision_graph(&out);
-        let (rho_min, delta_min) = suggest_params(&graph, 3);
-        let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts);
+        let (rho_min, delta_min) = suggest_params(&graph, 3).unwrap();
+        let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
         assert_eq!(out2.num_clusters, 3);
+    }
+
+    #[test]
+    fn suggest_params_rejects_out_of_range_k() {
+        let pts = blobs();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
+        let graph = decision_graph(&out);
+        assert!(matches!(suggest_params(&graph, 0), Err(DpcError::InvalidParam { name: "k", .. })));
+        assert!(matches!(suggest_params(&graph, graph.len() + 1), Err(DpcError::InvalidParam { name: "k", .. })));
     }
 
     #[test]
     fn csv_roundtrip_shape() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         let mut buf = Vec::new();
         write_csv(&graph, &mut buf).unwrap();
@@ -156,7 +172,7 @@ mod tests {
     #[test]
     fn ascii_plot_is_well_formed() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts);
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         let plot = ascii_plot(&graph, 40, 10);
         assert_eq!(plot.lines().count(), 12); // header + 10 rows + axis

@@ -17,9 +17,11 @@ pub mod dep;
 pub mod linkage;
 pub mod approx;
 pub mod decision;
+pub mod session;
 
-use std::time::Instant;
+pub use session::{ClusterSession, DepArtifacts, SessionStats};
 
+use crate::error::DpcError;
 use crate::geom::PointSet;
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
@@ -171,37 +173,23 @@ impl Dpc {
         self.params
     }
 
-    /// Run the full three-step pipeline.
-    pub fn run(&self, pts: &PointSet) -> DpcResult {
-        assert!(!pts.is_empty(), "cannot cluster an empty point set");
-        let mut timings = StepTimings::default();
-
-        // Step 1: density.
-        let t0 = Instant::now();
-        let rho = compute_density(pts, self.params.d_cut, self.density_algo);
-        timings.density_s = t0.elapsed().as_secs_f64();
-
-        // Step 2: dependent points.
-        let t1 = Instant::now();
-        let dep = dep::compute_dependents(pts, &rho, self.params.rho_min, self.dep_algo);
-        timings.dep_s = t1.elapsed().as_secs_f64();
-
-        // Step 3: single-linkage cut.
-        let t2 = Instant::now();
-        let link = linkage::single_linkage(pts, &rho, &dep, self.params);
-        timings.linkage_s = t2.elapsed().as_secs_f64();
-
-        let delta = dep::dependent_distances(pts, &dep);
-        DpcResult {
-            rho,
-            dep,
-            delta,
-            labels: link.labels,
-            centers: link.centers,
-            num_clusters: link.num_clusters,
-            num_noise: link.num_noise,
-            timings,
-        }
+    /// Run the full three-step pipeline: a thin wrapper over a one-shot
+    /// [`ClusterSession`]. Malformed input (empty/non-finite points, bad
+    /// parameters) surfaces as [`DpcError`] — iterative workflows should
+    /// hold a session directly and re-[`ClusterSession::cut`] instead of
+    /// re-running.
+    ///
+    /// Trade-off: the session computes the full `rho_min = 0` dependency
+    /// forest and masks it, so a one-shot run with a large noise fraction
+    /// does Step-2 queries the old thresholded pipeline skipped. Callers
+    /// that want exactly the thresholded work and no caching can still
+    /// compose [`compute_density`] + [`dep::compute_dependents`] +
+    /// [`linkage::single_linkage`] directly (the coordinator's per-job
+    /// pipeline does).
+    pub fn run(&self, pts: &PointSet) -> Result<DpcResult, DpcError> {
+        session::validate_params(&self.params)?;
+        let mut s = ClusterSession::build(pts)?.with_density_algo(self.density_algo);
+        s.run(self.params, self.dep_algo)
     }
 }
 
@@ -299,7 +287,7 @@ mod tests {
         let pts = PointSet::new(coords, 2);
         let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 };
         for algo in DepAlgo::ALL {
-            let out = Dpc::new(params).dep_algo(algo).run(&pts);
+            let out = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
             assert_eq!(out.num_clusters, 2, "algo {algo:?}");
             assert_eq!(out.num_noise, 0);
             // All points in each blob share one label.
@@ -316,9 +304,9 @@ mod tests {
         let mut rng = SplitMix64::new(43);
         let pts = gen_clustered_points(&mut rng, 500, 2, 4, 100.0, 3.0);
         let params = DpcParams { d_cut: 5.0, rho_min: 2.0, delta_min: 10.0 };
-        let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+        let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
         for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
-            let out = Dpc::new(params).dep_algo(algo).run(&pts);
+            let out = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
             assert_eq!(out.rho, reference.rho, "{algo:?} rho");
             assert_eq!(out.dep, reference.dep, "{algo:?} dep");
             assert_eq!(out.labels, reference.labels, "{algo:?} labels");
@@ -340,7 +328,7 @@ mod tests {
         }
         let pts = PointSet::new(coords, 2);
         let params = DpcParams { d_cut: 3.0, rho_min: 5.0, delta_min: 100.0 };
-        let out = Dpc::new(params).run(&pts);
+        let out = Dpc::new(params).run(&pts).unwrap();
         assert_eq!(out.num_noise, 5);
         for i in 200..205 {
             assert_eq!(out.labels[i], -1);

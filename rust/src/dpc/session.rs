@@ -1,0 +1,385 @@
+//! Staged clustering sessions: amortize index construction across repeated
+//! parameter queries.
+//!
+//! The Rodriguez–Laio workflow (§6.2) is iterative — cluster once, inspect
+//! the ρ–δ decision graph, re-cut with new `rho_min`/`delta_min` — yet only
+//! Step 3 (single-linkage) depends on those thresholds. A
+//! [`ClusterSession`] therefore splits the pipeline into cached stages:
+//!
+//! 1. [`ClusterSession::build`] validates the input; the session owns the
+//!    kd-tree, built **once** on the first tree-backed density call;
+//! 2. [`ClusterSession::density`] computes ρ for a radius, cached per
+//!    `d_cut`;
+//! 3. [`ClusterSession::dependents`] computes the *full* dependency forest
+//!    (λ, δ) on top of the cached density, cached per (`d_cut`, algorithm);
+//! 4. [`ClusterSession::cut`] runs only the union-find linkage against the
+//!    cached artifacts — a decision-graph re-cut costs Step 3 alone.
+//!
+//! A cut is byte-identical to a fresh full run at the same parameters: the
+//! candidate set of a dependent-point query is never filtered by `rho_min`
+//! (only *queries* are skipped for noise points), so masking the full forest
+//! by a threshold reproduces exactly what a thresholded Step 2 would have
+//! produced. `rust/tests/session.rs` holds the property proof.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::DpcError;
+use crate::geom::PointSet;
+use crate::kdtree::{KdTree, NoStats};
+use crate::parlay;
+
+use super::{compute_density, dep, linkage, DensityAlgo, DepAlgo, DpcParams, DpcResult, StepTimings};
+
+/// Cached Step-2 output: the full (unthresholded) dependency forest.
+#[derive(Clone, Debug)]
+pub struct DepArtifacts {
+    /// λ(x_i) computed with `rho_min = 0` — `None` only for the global peak.
+    pub dep: Vec<Option<u32>>,
+    /// δ(x_i) = D(x_i, λ(x_i)); ∞ for the peak.
+    pub delta: Vec<f64>,
+    /// Wall-clock seconds spent computing this artifact.
+    pub secs: f64,
+}
+
+/// Cached Step-1 output for one radius.
+#[derive(Clone, Debug)]
+struct DensityArtifacts {
+    rho: Arc<Vec<u32>>,
+    secs: f64,
+}
+
+/// Compute/reuse counters — the observable proof that re-cuts do not redo
+/// Steps 1–2.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub density_computes: u64,
+    pub density_cache_hits: u64,
+    pub dep_computes: u64,
+    pub dep_cache_hits: u64,
+}
+
+/// A staged, artifact-caching clustering session over one point set.
+///
+/// ```no_run
+/// use parcluster::dpc::{ClusterSession, DepAlgo};
+/// use parcluster::datasets::synthetic;
+///
+/// let pts = synthetic::uniform(10_000, 2, 1000.0, 42);
+/// let mut s = ClusterSession::build(&pts)?;
+/// s.density(30.0)?;
+/// s.dependents(DepAlgo::Priority)?;
+/// let first = s.cut(0.0, 100.0)?; // full pipeline price, artifacts cached
+/// let recut = s.cut(5.0, 200.0)?; // linkage-only price
+/// assert_eq!(first.rho, recut.rho);
+/// # Ok::<(), parcluster::error::DpcError>(())
+/// ```
+pub struct ClusterSession<'p> {
+    pts: &'p PointSet,
+    /// The session's amortized index: built on the first tree-backed
+    /// density call, then reused by every later radius. Lazy so the
+    /// baseline/naive density ablations never pay for a tree they don't
+    /// traverse.
+    tree: Option<KdTree<'p>>,
+    density_algo: DensityAlgo,
+    rho_cache: HashMap<u64, DensityArtifacts>,
+    dep_cache: HashMap<(u64, DepAlgo), Arc<DepArtifacts>>,
+    /// Radius of the most recent `density` call (cache key is the f64 bits).
+    active_d_cut: Option<f64>,
+    /// Algorithm of the most recent `dependents` call for the active radius.
+    active_algo: Option<DepAlgo>,
+    stats: SessionStats,
+}
+
+impl<'p> ClusterSession<'p> {
+    /// Validate the input (non-empty, finite coordinates) and open the
+    /// session. The owned kd-tree is built on the first tree-backed
+    /// `density` call and amortized across every radius after that.
+    pub fn build(pts: &'p PointSet) -> Result<Self, DpcError> {
+        if pts.is_empty() {
+            return Err(DpcError::EmptyInput);
+        }
+        pts.validate_finite()?;
+        Ok(ClusterSession {
+            pts,
+            tree: None,
+            density_algo: DensityAlgo::TreePruned,
+            rho_cache: HashMap::new(),
+            dep_cache: HashMap::new(),
+            active_d_cut: None,
+            active_algo: None,
+            stats: SessionStats::default(),
+        })
+    }
+
+    /// Select the Step-1 variant. The session's owned tree serves
+    /// `TreePruned`/`TreeNoPrune`; the baseline variants rebuild their own
+    /// structures per radius (they exist for ablations, not serving).
+    pub fn with_density_algo(mut self, a: DensityAlgo) -> Self {
+        self.density_algo = a;
+        self
+    }
+
+    pub fn points(&self) -> &PointSet {
+        self.pts
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    /// Radius of the currently active density stage, if any.
+    pub fn active_d_cut(&self) -> Option<f64> {
+        self.active_d_cut
+    }
+
+    /// Step 1: ρ for every point at radius `d_cut`, cached per radius.
+    /// Switching the radius invalidates the active dependents stage (the
+    /// per-radius artifact cache keeps a later switch back cheap).
+    pub fn density(&mut self, d_cut: f64) -> Result<Arc<Vec<u32>>, DpcError> {
+        validate_d_cut(d_cut)?;
+        let key = d_cut.to_bits();
+        if self.rho_cache.contains_key(&key) {
+            self.stats.density_cache_hits += 1;
+        } else {
+            let t = Instant::now();
+            let rho = match self.density_algo {
+                DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune => {
+                    let pts = self.pts;
+                    let tree = &*self.tree.get_or_insert_with(|| KdTree::build(pts));
+                    let r_sq = d_cut * d_cut;
+                    let prune = self.density_algo == DensityAlgo::TreePruned;
+                    parlay::par_map(pts.len(), |i| {
+                        let q = pts.point(i);
+                        let c = if prune {
+                            tree.range_count(q, r_sq, &mut NoStats)
+                        } else {
+                            tree.range_count_noprune(q, r_sq, &mut NoStats)
+                        };
+                        c as u32
+                    })
+                }
+                other => compute_density(self.pts, d_cut, other),
+            };
+            let secs = t.elapsed().as_secs_f64();
+            self.rho_cache.insert(key, DensityArtifacts { rho: Arc::new(rho), secs });
+            self.stats.density_computes += 1;
+        }
+        if self.active_d_cut.map(f64::to_bits) != Some(key) {
+            self.active_d_cut = Some(d_cut);
+            self.active_algo = None;
+        }
+        let cached = self.rho_cache.get(&key).expect("just ensured");
+        Ok(Arc::clone(&cached.rho))
+    }
+
+    /// Step 2: the full (λ, δ) forest on top of the active density, cached
+    /// per (radius, algorithm). Requires [`ClusterSession::density`] first.
+    pub fn dependents(&mut self, algo: DepAlgo) -> Result<Arc<DepArtifacts>, DpcError> {
+        let d_cut = self
+            .active_d_cut
+            .ok_or(DpcError::MissingStage { need: "density", call: "dependents" })?;
+        let key = (d_cut.to_bits(), algo);
+        if let Some(art) = self.dep_cache.get(&key) {
+            self.stats.dep_cache_hits += 1;
+            self.active_algo = Some(algo);
+            return Ok(Arc::clone(art));
+        }
+        let rho = Arc::clone(&self.rho_cache[&d_cut.to_bits()].rho);
+        let t = Instant::now();
+        // rho_min = 0: compute every point's dependent so any later noise
+        // threshold is a pure mask (candidate sets are threshold-free).
+        let dep = dep::compute_dependents(self.pts, &rho, 0.0, algo);
+        let delta = dep::dependent_distances(self.pts, &dep);
+        let secs = t.elapsed().as_secs_f64();
+        let art = Arc::new(DepArtifacts { dep, delta, secs });
+        self.dep_cache.insert(key, Arc::clone(&art));
+        self.stats.dep_computes += 1;
+        self.active_algo = Some(algo);
+        Ok(art)
+    }
+
+    /// Step 3 only: mask the cached forest by `rho_min` and run the
+    /// union-find linkage. Requires both prior stages; byte-identical to a
+    /// fresh full run at (active `d_cut`, `rho_min`, `delta_min`).
+    pub fn cut(&self, rho_min: f64, delta_min: f64) -> Result<DpcResult, DpcError> {
+        let d_cut = self.active_d_cut.ok_or(DpcError::MissingStage { need: "density", call: "cut" })?;
+        let algo = self.active_algo.ok_or(DpcError::MissingStage { need: "dependents", call: "cut" })?;
+        validate_thresholds(rho_min, delta_min)?;
+        let params = DpcParams { d_cut, rho_min, delta_min };
+        let density = &self.rho_cache[&d_cut.to_bits()];
+        let art = &self.dep_cache[&(d_cut.to_bits(), algo)];
+        let mut out = cut_cached(self.pts, &density.rho, &art.dep, &art.delta, params);
+        out.timings.density_s = density.secs;
+        out.timings.dep_s = art.secs;
+        Ok(out)
+    }
+
+    /// Convenience: run all three stages (hitting caches where possible) —
+    /// the one-shot path that [`super::Dpc::run`] wraps.
+    pub fn run(&mut self, params: DpcParams, algo: DepAlgo) -> Result<DpcResult, DpcError> {
+        self.density(params.d_cut)?;
+        self.dependents(algo)?;
+        self.cut(params.rho_min, params.delta_min)
+    }
+}
+
+/// Linkage-only execution against precomputed artifacts: mask the full
+/// forest by `rho_min`, union non-center non-noise points with their
+/// dependents, and assemble a [`DpcResult`]. Shared by
+/// [`ClusterSession::cut`] and the coordinator's session-scoped recut jobs.
+pub fn cut_cached(
+    pts: &PointSet,
+    rho: &[u32],
+    dep_full: &[Option<u32>],
+    delta_full: &[f64],
+    params: DpcParams,
+) -> DpcResult {
+    let n = pts.len();
+    let t = Instant::now();
+    let dep: Vec<Option<u32>> =
+        parlay::par_map(n, |i| if (rho[i] as f64) < params.rho_min { None } else { dep_full[i] });
+    let delta: Vec<f64> = parlay::par_map(n, |i| if dep[i].is_none() && dep_full[i].is_some() {
+        f64::INFINITY
+    } else {
+        delta_full[i]
+    });
+    let link = linkage::single_linkage(pts, rho, &dep, params);
+    let linkage_s = t.elapsed().as_secs_f64();
+    DpcResult {
+        rho: rho.to_vec(),
+        dep,
+        delta,
+        labels: link.labels,
+        centers: link.centers,
+        num_clusters: link.num_clusters,
+        num_noise: link.num_noise,
+        timings: StepTimings { density_s: 0.0, dep_s: 0.0, linkage_s },
+    }
+}
+
+/// Validate the input for one-shot entry points that skip session
+/// construction (the coordinator's engine pipeline).
+pub fn validate_points(pts: &PointSet) -> Result<(), DpcError> {
+    if pts.is_empty() {
+        return Err(DpcError::EmptyInput);
+    }
+    pts.validate_finite()
+}
+
+pub fn validate_d_cut(d_cut: f64) -> Result<(), DpcError> {
+    if !(d_cut.is_finite() && d_cut > 0.0) {
+        return Err(DpcError::InvalidParam {
+            name: "d_cut",
+            value: d_cut,
+            requirement: "must be positive and finite",
+        });
+    }
+    Ok(())
+}
+
+pub fn validate_thresholds(rho_min: f64, delta_min: f64) -> Result<(), DpcError> {
+    if rho_min.is_nan() || rho_min == f64::INFINITY {
+        return Err(DpcError::InvalidParam {
+            name: "rho_min",
+            value: rho_min,
+            requirement: "must not be NaN or +inf",
+        });
+    }
+    if delta_min.is_nan() {
+        return Err(DpcError::InvalidParam { name: "delta_min", value: delta_min, requirement: "must not be NaN" });
+    }
+    Ok(())
+}
+
+/// Validate a full parameter set (used by `Dpc::run` and the coordinator).
+pub fn validate_params(params: &DpcParams) -> Result<(), DpcError> {
+    validate_d_cut(params.d_cut)?;
+    validate_thresholds(params.rho_min, params.delta_min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+    use crate::proputil::gen_clustered_points;
+
+    fn blobs() -> PointSet {
+        let mut rng = SplitMix64::new(71);
+        gen_clustered_points(&mut rng, 400, 2, 3, 120.0, 2.0)
+    }
+
+    #[test]
+    fn staged_calls_must_run_in_order() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        assert!(matches!(s.cut(0.0, 10.0), Err(DpcError::MissingStage { need: "density", .. })));
+        assert!(matches!(s.dependents(DepAlgo::Priority), Err(DpcError::MissingStage { need: "density", .. })));
+        s.density(4.0).unwrap();
+        assert!(matches!(s.cut(0.0, 10.0), Err(DpcError::MissingStage { need: "dependents", .. })));
+        s.dependents(DepAlgo::Priority).unwrap();
+        assert!(s.cut(0.0, 10.0).is_ok());
+    }
+
+    #[test]
+    fn build_rejects_empty_and_nonfinite() {
+        assert!(matches!(ClusterSession::build(&PointSet::empty(2)), Err(DpcError::EmptyInput)));
+        let bad = PointSet::new(vec![0.0, 0.0, f64::NAN, 1.0], 2);
+        assert!(matches!(ClusterSession::build(&bad), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+    }
+
+    #[test]
+    fn density_rejects_bad_radius() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            assert!(matches!(s.density(bad), Err(DpcError::InvalidParam { name: "d_cut", .. })), "{bad}");
+        }
+    }
+
+    #[test]
+    fn recut_reuses_cached_artifacts() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        for (rho_min, delta_min) in [(0.0, 10.0), (2.0, 5.0), (1.0, 30.0), (0.0, f64::INFINITY)] {
+            s.cut(rho_min, delta_min).unwrap();
+        }
+        let st = s.stats();
+        assert_eq!(st.density_computes, 1);
+        assert_eq!(st.dep_computes, 1);
+    }
+
+    #[test]
+    fn radius_switch_invalidates_deps_but_caches_by_radius() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        s.density(6.0).unwrap();
+        // New radius: dependents stage must be re-established.
+        assert!(matches!(s.cut(0.0, 10.0), Err(DpcError::MissingStage { need: "dependents", .. })));
+        s.dependents(DepAlgo::Priority).unwrap();
+        s.cut(0.0, 10.0).unwrap();
+        // Back to the first radius: both stages served from cache.
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        let st = s.stats();
+        assert_eq!(st.density_computes, 2);
+        assert_eq!(st.density_cache_hits, 1);
+        assert_eq!(st.dep_computes, 2);
+        assert_eq!(st.dep_cache_hits, 1);
+    }
+
+    #[test]
+    fn tree_density_variants_match_oneshot_compute() {
+        let pts = blobs();
+        for algo in [DensityAlgo::TreePruned, DensityAlgo::TreeNoPrune, DensityAlgo::Naive] {
+            let mut s = ClusterSession::build(&pts).unwrap().with_density_algo(algo);
+            let rho = s.density(5.0).unwrap();
+            assert_eq!(*rho, compute_density(&pts, 5.0, algo), "{algo:?}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Typed errors for every user-facing API boundary.
+//!
+//! The seed API surfaced malformed input as `assert!`/panics; this enum
+//! replaces that contract: `geom::PointSet::try_*`, the staged
+//! [`crate::dpc::ClusterSession`], `Dpc::run`, `datasets::io`, and the
+//! coordinator's session endpoints all return `Result<_, DpcError>`.
+//! Internal invariants (never reachable from user input) remain
+//! `debug_assert!`s.
+
+use std::fmt;
+
+/// Error type for clustering requests.
+#[derive(Debug)]
+pub enum DpcError {
+    /// The point set has no points.
+    EmptyInput,
+    /// A row's length disagrees with the established dimension.
+    DimensionMismatch { expected: usize, got: usize },
+    /// A flat coordinate buffer whose length is not a multiple of the
+    /// dimension.
+    RaggedCoords { len: usize, dim: usize },
+    /// A coordinate is NaN or infinite.
+    NonFinite { point: usize, dim: usize },
+    /// A hyper-parameter violates its documented requirement.
+    InvalidParam { name: &'static str, value: f64, requirement: &'static str },
+    /// A staged-session call arrived before its prerequisite stage.
+    MissingStage { need: &'static str, call: &'static str },
+    /// A session id that was never opened (or already closed).
+    UnknownSession(u64),
+    /// An execution backend failed (engine name + its message).
+    Backend { engine: String, message: String },
+    /// An underlying I/O failure (dataset files, label dumps).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for DpcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DpcError::EmptyInput => write!(f, "empty point set: nothing to cluster"),
+            DpcError::DimensionMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}-d row, got {got}-d")
+            }
+            DpcError::RaggedCoords { len, dim } => {
+                write!(f, "coordinate buffer of length {len} is not divisible by dimension {dim}")
+            }
+            DpcError::NonFinite { point, dim } => {
+                write!(f, "non-finite coordinate at point {point}, dimension {dim}")
+            }
+            DpcError::InvalidParam { name, value, requirement } => {
+                write!(f, "invalid parameter {name} = {value}: {requirement}")
+            }
+            DpcError::MissingStage { need, call } => {
+                write!(f, "`{call}` requires the `{need}` stage to have run first")
+            }
+            DpcError::UnknownSession(id) => write!(f, "unknown session {id}"),
+            DpcError::Backend { engine, message } => write!(f, "{engine} backend: {message}"),
+            DpcError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DpcError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DpcError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DpcError {
+    fn from(e: std::io::Error) -> Self {
+        DpcError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let cases: Vec<(DpcError, &str)> = vec![
+            (DpcError::EmptyInput, "empty"),
+            (DpcError::DimensionMismatch { expected: 3, got: 2 }, "expected 3-d"),
+            (DpcError::RaggedCoords { len: 7, dim: 2 }, "not divisible"),
+            (DpcError::NonFinite { point: 4, dim: 1 }, "non-finite"),
+            (
+                DpcError::InvalidParam { name: "d_cut", value: -1.0, requirement: "must be positive and finite" },
+                "d_cut",
+            ),
+            (DpcError::MissingStage { need: "density", call: "cut" }, "density"),
+            (DpcError::UnknownSession(9), "9"),
+            (DpcError::Backend { engine: "xla".into(), message: "boom".into() }, "boom"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+
+    #[test]
+    fn io_error_preserves_source() {
+        let e = DpcError::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -11,6 +11,8 @@ pub mod bbox;
 
 pub use bbox::Bbox;
 
+use crate::error::DpcError;
+
 /// A set of `n` points in `d`-dimensional space, row-major.
 #[derive(Clone, Debug)]
 pub struct PointSet {
@@ -20,26 +22,60 @@ pub struct PointSet {
 }
 
 impl PointSet {
-    pub fn new(coords: Vec<f64>, d: usize) -> Self {
-        assert!(d > 0, "dimension must be positive");
-        assert_eq!(coords.len() % d, 0, "coords length {} not divisible by d={}", coords.len(), d);
+    /// Fallible constructor: rejects `d == 0` and coordinate buffers whose
+    /// length is not a multiple of `d`. This is the entry point for
+    /// user-supplied data; [`PointSet::new`] is the panicking convenience
+    /// for generators and tests whose inputs are correct by construction.
+    pub fn try_new(coords: Vec<f64>, d: usize) -> Result<Self, DpcError> {
+        if d == 0 {
+            return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
+        }
+        if coords.len() % d != 0 {
+            return Err(DpcError::RaggedCoords { len: coords.len(), dim: d });
+        }
         let n = coords.len() / d;
-        PointSet { coords, n, d }
+        Ok(PointSet { coords, n, d })
+    }
+
+    pub fn new(coords: Vec<f64>, d: usize) -> Self {
+        Self::try_new(coords, d).expect("well-formed coordinate buffer")
     }
 
     pub fn empty(d: usize) -> Self {
         PointSet { coords: Vec::new(), n: 0, d }
     }
 
-    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
-        assert!(!rows.is_empty());
+    /// Fallible row-wise constructor: rejects empty input and ragged rows.
+    pub fn try_from_rows(rows: &[Vec<f64>]) -> Result<Self, DpcError> {
+        if rows.is_empty() {
+            return Err(DpcError::EmptyInput);
+        }
         let d = rows[0].len();
         let mut coords = Vec::with_capacity(rows.len() * d);
         for r in rows {
-            assert_eq!(r.len(), d);
+            if r.len() != d {
+                return Err(DpcError::DimensionMismatch { expected: d, got: r.len() });
+            }
             coords.extend_from_slice(r);
         }
-        PointSet::new(coords, d)
+        Self::try_new(coords, d)
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        Self::try_from_rows(rows).expect("non-empty, non-ragged rows")
+    }
+
+    /// Scan for NaN/∞ coordinates, reporting the first offender's (point,
+    /// dimension). Clustering math (kd-tree bounds, squared distances)
+    /// silently misbehaves on non-finite input, so public entry points run
+    /// this once up front.
+    pub fn validate_finite(&self) -> Result<(), DpcError> {
+        for (idx, &c) in self.coords.iter().enumerate() {
+            if !c.is_finite() {
+                return Err(DpcError::NonFinite { point: idx / self.d, dim: idx % self.d });
+            }
+        }
+        Ok(())
     }
 
     #[inline]
@@ -160,6 +196,29 @@ mod tests {
     #[should_panic]
     fn bad_coords_len_panics() {
         PointSet::new(vec![1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_shapes() {
+        assert!(matches!(PointSet::try_new(vec![1.0, 2.0, 3.0], 2), Err(DpcError::RaggedCoords { len: 3, dim: 2 })));
+        assert!(matches!(PointSet::try_new(vec![1.0], 0), Err(DpcError::InvalidParam { .. })));
+        assert!(PointSet::try_new(vec![1.0, 2.0], 2).is_ok());
+    }
+
+    #[test]
+    fn try_from_rows_rejects_ragged_and_empty() {
+        assert!(matches!(PointSet::try_from_rows(&[]), Err(DpcError::EmptyInput)));
+        let ragged = vec![vec![1.0, 2.0], vec![3.0]];
+        assert!(matches!(PointSet::try_from_rows(&ragged), Err(DpcError::DimensionMismatch { expected: 2, got: 1 })));
+    }
+
+    #[test]
+    fn validate_finite_reports_position() {
+        let ps = PointSet::new(vec![0.0, 1.0, 2.0, f64::NAN, 4.0, 5.0], 2);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 1, dim: 1 })));
+        let ps = PointSet::new(vec![0.0, f64::INFINITY], 2);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 0, dim: 1 })));
+        assert!(PointSet::new(vec![1.0, 2.0], 2).validate_finite().is_ok());
     }
 
     #[test]

@@ -24,13 +24,20 @@
 //!
 //! let pts = synthetic::uniform(10_000, 2, 1000.0, 42);
 //! let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
-//! let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts);
+//! let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("cluster");
 //! println!("{} clusters, {} noise", out.num_clusters, out.num_noise);
 //! ```
+//!
+//! For the iterative decision-graph workflow, hold a
+//! [`dpc::ClusterSession`] instead: `build` once, then `density` →
+//! `dependents` → `cut`, where re-cutting with new thresholds costs only the
+//! union-find linkage step. Malformed input surfaces as
+//! [`error::DpcError`], never a panic.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod error;
 pub mod parlay;
 pub mod prng;
 pub mod geom;
@@ -46,3 +53,5 @@ pub mod coordinator;
 pub mod bench;
 pub mod cli;
 pub mod metrics;
+
+pub use error::DpcError;

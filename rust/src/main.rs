@@ -11,7 +11,7 @@ use parcluster::cli::{Args, USAGE};
 use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
 use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
 use parcluster::datasets::{self, io};
-use parcluster::dpc::{decision, DpcParams};
+use parcluster::dpc::{decision, ClusterSession, DepAlgo, DpcParams};
 use parcluster::geom::PointSet;
 
 fn main() {
@@ -143,18 +143,25 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 fn cmd_decision(args: &Args) -> Result<()> {
     let (pts, mut params, tag) = load_input(args)?;
     params.d_cut = args.get_or("d-cut", params.d_cut)?;
-    params.rho_min = 0.0;
-    params.delta_min = f64::INFINITY;
     let k = args.get_or("k", 0usize)?;
     let csv_out = args.get("csv-out").map(|s| s.to_string());
     args.reject_unknown()?;
-    let result = parcluster::dpc::Dpc::new(params).run(&pts);
-    let graph = decision::decision_graph(&result);
+    // Staged session: the scan pass pays for the kd-tree and (ρ, δ) once;
+    // the k-suggestion verification below re-cuts for the price of Step 3.
+    let mut session = ClusterSession::build(&pts)?;
+    session.density(params.d_cut)?;
+    session.dependents(DepAlgo::Priority)?;
+    let scan = session.cut(0.0, f64::INFINITY)?;
+    let graph = decision::decision_graph(&scan);
     println!("decision graph for {tag} (n={}, d_cut={}):", pts.len(), params.d_cut);
     print!("{}", decision::ascii_plot(&graph, 64, 16));
     if k > 0 {
-        let (rho_min, delta_min) = decision::suggest_params(&graph, k);
-        println!("suggested for k={k}: rho_min={rho_min}, delta_min={delta_min:.4}");
+        let (rho_min, delta_min) = decision::suggest_params(&graph, k)?;
+        let out = session.cut(rho_min, delta_min)?;
+        println!(
+            "suggested for k={k}: rho_min={rho_min}, delta_min={delta_min:.4} -> {} clusters, {} noise (re-cut {:.4}s)",
+            out.num_clusters, out.num_noise, out.timings.linkage_s
+        );
     }
     if let Some(path) = csv_out {
         let f = std::fs::File::create(&path)?;
@@ -177,7 +184,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}; job lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`",
+        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`",
         coord.config().workers,
         coord.has_xla()
     );
@@ -190,20 +197,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
             continue;
         }
         let parts: Vec<&str> = t.split_whitespace().collect();
-        if parts.len() < 5 {
-            eprintln!("skipping malformed job line: {t:?}");
-            continue;
+        // A malformed interactive line never takes the server down: every
+        // parse failure reports and skips, like the arity/dataset checks.
+        match parts[0] {
+            "open" => {
+                if parts.len() != 4 {
+                    eprintln!("skipping malformed open line: {t:?} (want `open <dataset> <n> <d_cut>`)");
+                    continue;
+                }
+                let (Ok(n), Ok(d_cut)) = (parts[2].parse::<usize>(), parts[3].parse::<f64>()) else {
+                    eprintln!("skipping open line with non-numeric n/d_cut: {t:?}");
+                    continue;
+                };
+                let Some(ds) = datasets::by_name(parts[1], Some(n), 42) else {
+                    eprintln!("unknown dataset {:?}", parts[1]);
+                    continue;
+                };
+                match coord.open_session(Arc::new(ds.pts), d_cut) {
+                    Ok(sid) => println!("session {sid}: {} (n={n}) d_cut={d_cut}", parts[1]),
+                    Err(e) => eprintln!("open failed: {e}"),
+                }
+            }
+            "close" => {
+                if parts.len() != 2 {
+                    eprintln!("skipping malformed close line: {t:?} (want `close <session>`)");
+                    continue;
+                }
+                let Ok(sid) = parts[1].parse::<u64>() else {
+                    eprintln!("skipping close line with non-numeric session: {t:?}");
+                    continue;
+                };
+                if coord.close_session(sid) {
+                    println!("session {sid} closed");
+                } else {
+                    eprintln!("close failed: unknown session {sid}");
+                }
+            }
+            "recut" => {
+                if parts.len() != 4 {
+                    eprintln!("skipping malformed recut line: {t:?} (want `recut <session> <rho_min> <delta_min>`)");
+                    continue;
+                }
+                let (Ok(sid), Ok(rho_min), Ok(delta_min)) =
+                    (parts[1].parse::<u64>(), parts[2].parse::<f64>(), parts[3].parse::<f64>())
+                else {
+                    eprintln!("skipping recut line with non-numeric fields: {t:?}");
+                    continue;
+                };
+                match coord.submit_recut(sid, rho_min, delta_min) {
+                    Ok(id) => ids.push(id),
+                    Err(e) => eprintln!("recut failed: {e}"),
+                }
+            }
+            _ => {
+                if parts.len() < 5 {
+                    eprintln!("skipping malformed job line: {t:?}");
+                    continue;
+                }
+                let (Ok(n), Ok(d_cut), Ok(rho_min), Ok(delta_min)) = (
+                    parts[1].parse::<usize>(),
+                    parts[2].parse::<f64>(),
+                    parts[3].parse::<f64>(),
+                    parts[4].parse::<f64>(),
+                ) else {
+                    eprintln!("skipping job line with non-numeric fields: {t:?}");
+                    continue;
+                };
+                let Some(ds) = datasets::by_name(parts[0], Some(n), 42) else {
+                    eprintln!("unknown dataset {:?}", parts[0]);
+                    continue;
+                };
+                let mut job =
+                    ClusterJob::new(Arc::new(ds.pts), DpcParams { d_cut, rho_min, delta_min }).tag(parts[0]);
+                if let Some(a) = parts.get(5) {
+                    match parse_dep_algo(a) {
+                        Ok(algo) => job = job.dep_algo(algo),
+                        Err(e) => {
+                            eprintln!("skipping job line: {e}");
+                            continue;
+                        }
+                    }
+                }
+                ids.push(coord.submit(job));
+            }
         }
-        let Some(ds) = datasets::by_name(parts[0], Some(parts[1].parse()?), 42) else {
-            eprintln!("unknown dataset {:?}", parts[0]);
-            continue;
-        };
-        let params = DpcParams { d_cut: parts[2].parse()?, rho_min: parts[3].parse()?, delta_min: parts[4].parse()? };
-        let mut job = ClusterJob::new(Arc::new(ds.pts), params).tag(parts[0]);
-        if let Some(a) = parts.get(5) {
-            job = job.dep_algo(parse_dep_algo(a)?);
-        }
-        ids.push(coord.submit(job));
     }
     for id in ids {
         match coord.wait(id) {

@@ -1,11 +1,17 @@
 //! The XLA brute-force DPC engine: manifest parsing, executable cache, and
 //! padded execution.
+//!
+//! The PJRT-backed executor needs the `xla` crate, which is not available
+//! in the offline build image — it sits behind the `xla` cargo feature (see
+//! `Cargo.toml`). Without the feature this module still compiles: the
+//! manifest parser, padding layout, and output types are feature-free (they
+//! are what the integration tests and the coordinator's capability checks
+//! use), and [`XlaDpcEngine::new`] returns an error so the service layer
+//! degrades to the tree backend.
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::geom::PointSet;
 
@@ -79,112 +85,166 @@ pub struct XlaDpcOutput {
     pub dist_sq: Vec<f32>,
 }
 
-/// AOT-compiled brute-force DPC on the PJRT CPU client.
-///
-/// Executables are compiled lazily per padded size and cached. The client
-/// and cache are behind a mutex: PJRT CPU execution is internally
-/// single-stream here and callers (the coordinator) already batch.
+/// Pad `pts` to `(n_pad, D_PAD)` f32 row-major, staggered sentinels for
+/// padding rows (mirrors `model.pad_points`).
+pub fn pad_points(pts: &PointSet, n_pad: usize) -> Result<Vec<f32>> {
+    let (n, d) = (pts.len(), pts.dim());
+    if n > n_pad {
+        bail!("{n} points exceed padded size {n_pad}");
+    }
+    if d > D_PAD {
+        bail!("dimension {d} exceeds artifact dimension {D_PAD}");
+    }
+    let mut out = vec![0f32; n_pad * D_PAD];
+    for i in 0..n {
+        for k in 0..d {
+            out[i * D_PAD + k] = pts.coord(i, k) as f32;
+        }
+    }
+    for (row, i) in (n..n_pad).enumerate() {
+        let v = PAD_COORD * (row as f32 + 1.0);
+        for k in 0..D_PAD {
+            out[i * D_PAD + k] = v;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::geom::PointSet;
+
+    use super::{pad_points, Manifest, XlaDpcOutput, D_PAD};
+
+    /// AOT-compiled brute-force DPC on the PJRT CPU client.
+    ///
+    /// Executables are compiled lazily per padded size and cached. The
+    /// client and cache are behind a mutex: PJRT CPU execution is internally
+    /// single-stream here and callers (the coordinator) already batch.
+    pub struct XlaDpcEngine {
+        dir: PathBuf,
+        manifest: Manifest,
+        inner: Mutex<Inner>,
+    }
+
+    struct Inner {
+        client: xla::PjRtClient,
+        cache: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    }
+
+    impl XlaDpcEngine {
+        /// Load the manifest and create the PJRT CPU client.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(XlaDpcEngine {
+                dir: artifacts_dir.to_path_buf(),
+                manifest,
+                inner: Mutex::new(Inner { client, cache: BTreeMap::new() }),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Largest point count this engine can handle.
+        pub fn capacity(&self) -> usize {
+            self.manifest.max_n()
+        }
+
+        /// See [`super::pad_points`].
+        pub fn pad(pts: &PointSet, n_pad: usize) -> Result<Vec<f32>> {
+            pad_points(pts, n_pad)
+        }
+
+        /// Execute brute-force DPC (density + dependent points) for `pts`.
+        pub fn run(&self, pts: &PointSet, d_cut: f64) -> Result<XlaDpcOutput> {
+            let n = pts.len();
+            let entry = self
+                .manifest
+                .pick(n)
+                .ok_or_else(|| anyhow!("n={n} exceeds largest artifact (capacity {})", self.capacity()))?;
+            let n_pad = entry.n_pad;
+            let padded = pad_points(pts, n_pad)?;
+
+            let mut inner = self.inner.lock().unwrap();
+            if !inner.cache.contains_key(&n_pad) {
+                let path = self.dir.join(format!("{}.hlo.txt", entry.name));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+                inner.cache.insert(n_pad, exe);
+            }
+            let exe = inner.cache.get(&n_pad).expect("just inserted");
+
+            let points_lit = xla::Literal::vec1(&padded)
+                .reshape(&[n_pad as i64, D_PAD as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            let dcut_lit = xla::Literal::scalar((d_cut * d_cut) as f32);
+            let result = exe
+                .execute::<xla::Literal>(&[points_lit, dcut_lit])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (rho_l, dep_l, dist_l) = result.to_tuple3().map_err(|e| anyhow!("to_tuple3: {e:?}"))?;
+            let rho_raw: Vec<i32> = rho_l.to_vec().map_err(|e| anyhow!("rho: {e:?}"))?;
+            let dep_raw: Vec<i32> = dep_l.to_vec().map_err(|e| anyhow!("dep: {e:?}"))?;
+            let dist_raw: Vec<f32> = dist_l.to_vec().map_err(|e| anyhow!("dist: {e:?}"))?;
+            drop(inner);
+
+            Ok(XlaDpcOutput {
+                rho: rho_raw[..n].iter().map(|&r| r as u32).collect(),
+                dep: dep_raw[..n]
+                    .iter()
+                    .map(|&d| if d < 0 || d as usize >= n { None } else { Some(d as u32) })
+                    .collect(),
+                dist_sq: dist_raw[..n].to_vec(),
+            })
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaDpcEngine;
+
+/// Stub engine for builds without the `xla` feature: construction always
+/// fails (after validating the manifest, so configuration errors still
+/// surface first), which the service layer reports and degrades from.
+#[cfg(not(feature = "xla"))]
 pub struct XlaDpcEngine {
-    dir: PathBuf,
     manifest: Manifest,
-    inner: Mutex<Inner>,
 }
 
-struct Inner {
-    client: xla::PjRtClient,
-    cache: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-}
-
+#[cfg(not(feature = "xla"))]
 impl XlaDpcEngine {
-    /// Load the manifest and create the PJRT CPU client.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(XlaDpcEngine {
-            dir: artifacts_dir.to_path_buf(),
-            manifest,
-            inner: Mutex::new(Inner { client, cache: BTreeMap::new() }),
-        })
+        let _ = Manifest::load(artifacts_dir)?;
+        bail!("parcluster was built without the `xla` feature; rebuild with `--features xla` (see Cargo.toml)")
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Largest point count this engine can handle.
     pub fn capacity(&self) -> usize {
         self.manifest.max_n()
     }
 
-    /// Pad `pts` to `(n_pad, D_PAD)` f32 row-major, staggered sentinels for
-    /// padding rows (mirrors `model.pad_points`).
+    /// See [`pad_points`].
     pub fn pad(pts: &PointSet, n_pad: usize) -> Result<Vec<f32>> {
-        let (n, d) = (pts.len(), pts.dim());
-        if n > n_pad {
-            bail!("{n} points exceed padded size {n_pad}");
-        }
-        if d > D_PAD {
-            bail!("dimension {d} exceeds artifact dimension {D_PAD}");
-        }
-        let mut out = vec![0f32; n_pad * D_PAD];
-        for i in 0..n {
-            for k in 0..d {
-                out[i * D_PAD + k] = pts.coord(i, k) as f32;
-            }
-        }
-        for (row, i) in (n..n_pad).enumerate() {
-            let v = PAD_COORD * (row as f32 + 1.0);
-            for k in 0..D_PAD {
-                out[i * D_PAD + k] = v;
-            }
-        }
-        Ok(out)
+        pad_points(pts, n_pad)
     }
 
-    /// Execute brute-force DPC (density + dependent points) for `pts`.
-    pub fn run(&self, pts: &PointSet, d_cut: f64) -> Result<XlaDpcOutput> {
-        let n = pts.len();
-        let entry = self
-            .manifest
-            .pick(n)
-            .ok_or_else(|| anyhow!("n={n} exceeds largest artifact (capacity {})", self.capacity()))?;
-        let n_pad = entry.n_pad;
-        let padded = Self::pad(pts, n_pad)?;
-
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.cache.contains_key(&n_pad) {
-            let path = self.dir.join(format!("{}.hlo.txt", entry.name));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
-            inner.cache.insert(n_pad, exe);
-        }
-        let exe = inner.cache.get(&n_pad).expect("just inserted");
-
-        let points_lit = xla::Literal::vec1(&padded)
-            .reshape(&[n_pad as i64, D_PAD as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let dcut_lit = xla::Literal::scalar((d_cut * d_cut) as f32);
-        let result = exe
-            .execute::<xla::Literal>(&[points_lit, dcut_lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let (rho_l, dep_l, dist_l) = result.to_tuple3().map_err(|e| anyhow!("to_tuple3: {e:?}"))?;
-        let rho_raw: Vec<i32> = rho_l.to_vec().map_err(|e| anyhow!("rho: {e:?}"))?;
-        let dep_raw: Vec<i32> = dep_l.to_vec().map_err(|e| anyhow!("dep: {e:?}"))?;
-        let dist_raw: Vec<f32> = dist_l.to_vec().map_err(|e| anyhow!("dist: {e:?}"))?;
-        drop(inner);
-
-        Ok(XlaDpcOutput {
-            rho: rho_raw[..n].iter().map(|&r| r as u32).collect(),
-            dep: dep_raw[..n]
-                .iter()
-                .map(|&d| if d < 0 || d as usize >= n { None } else { Some(d as u32) })
-                .collect(),
-            dist_sq: dist_raw[..n].to_vec(),
-        })
+    pub fn run(&self, _pts: &PointSet, _d_cut: f64) -> Result<XlaDpcOutput> {
+        bail!("xla feature disabled")
     }
 }
 
@@ -213,7 +273,7 @@ mod tests {
     #[test]
     fn pad_layout_matches_python() {
         let pts = PointSet::new(vec![1.0, 2.0, 3.0, 4.0], 2);
-        let padded = XlaDpcEngine::pad(&pts, 4).unwrap();
+        let padded = pad_points(&pts, 4).unwrap();
         assert_eq!(padded.len(), 4 * D_PAD);
         assert_eq!(&padded[..2], &[1.0, 2.0]);
         assert_eq!(padded[2], 0.0); // zero-filled extra columns
@@ -226,11 +286,11 @@ mod tests {
     #[test]
     fn pad_rejects_oversize() {
         let pts = PointSet::new(vec![0.0; 18], 9);
-        assert!(XlaDpcEngine::pad(&pts, 16).is_err());
+        assert!(pad_points(&pts, 16).is_err());
         let pts = PointSet::new(vec![0.0; 20], 2);
-        assert!(XlaDpcEngine::pad(&pts, 4).is_err());
+        assert!(pad_points(&pts, 4).is_err());
     }
 
     // Execution tests live in rust/tests/xla_integration.rs (they need the
-    // artifacts built by `make artifacts`).
+    // artifacts built by `make artifacts` and the `xla` feature).
 }

@@ -160,9 +160,9 @@ fn prop_pipeline_labels_identical_across_algorithms() {
         for flavor in 0..4 {
             let pts = gen_points(c, flavor);
             let params = DpcParams { d_cut: 3.0, rho_min: (c.seed % 3) as f64, delta_min: 5.0 };
-            let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+            let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
             for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
-                let got = Dpc::new(params).dep_algo(algo).run(&pts);
+                let got = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
                 if got.labels != reference.labels {
                     return Err(format!("flavor {flavor} {algo:?}: labels differ"));
                 }
@@ -259,10 +259,10 @@ fn prop_decision_graph_suggestion_recovers_k() {
             }
         }
         let pts = PointSet::new(coords, 2);
-        let scan = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: f64::INFINITY }).run(&pts);
+        let scan = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: f64::INFINITY }).run(&pts).unwrap();
         let graph = dpc::decision::decision_graph(&scan);
-        let (rho_min, delta_min) = dpc::decision::suggest_params(&graph, k);
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts);
+        let (rho_min, delta_min) = dpc::decision::suggest_params(&graph, k).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
         if out.num_clusters != k {
             return Err(format!("expected {k} clusters, got {}", out.num_clusters));
         }

@@ -14,7 +14,7 @@ use parcluster::metrics::{adjusted_rand_index, normalized_mutual_info};
 fn every_benchmark_dataset_clusters_at_paper_params() {
     for name in datasets::registry(1.0) {
         let ds = datasets::by_name(name, Some(3000), 42).unwrap();
-        let out = Dpc::new(ds.params).dep_algo(DepAlgo::Priority).run(&ds.pts);
+        let out = Dpc::new(ds.params).dep_algo(DepAlgo::Priority).run(&ds.pts).unwrap();
         assert_eq!(out.labels.len(), 3000, "{name}");
         // Structural sanity: every non-noise point has a cluster; all
         // cluster labels are centers.
@@ -36,9 +36,9 @@ fn every_benchmark_dataset_clusters_at_paper_params() {
 fn dep_algorithms_agree_on_every_dataset() {
     for name in datasets::registry(1.0) {
         let ds = datasets::by_name(name, Some(1200), 7).unwrap();
-        let reference = Dpc::new(ds.params).dep_algo(DepAlgo::Priority).run(&ds.pts);
+        let reference = Dpc::new(ds.params).dep_algo(DepAlgo::Priority).run(&ds.pts).unwrap();
         for algo in [DepAlgo::Fenwick, DepAlgo::Incomplete, DepAlgo::ExactBaseline] {
-            let got = Dpc::new(ds.params).dep_algo(algo).run(&ds.pts);
+            let got = Dpc::new(ds.params).dep_algo(algo).run(&ds.pts).unwrap();
             assert_eq!(got.dep, reference.dep, "{name}/{algo:?}");
             assert_eq!(got.labels, reference.labels, "{name}/{algo:?}");
         }
@@ -52,7 +52,7 @@ fn approx_baseline_quality_is_high_on_blobby_datasets() {
     // well-formed — the paper's quality argument for exactness is that
     // approx *can* deviate; ours: it broadly agrees but is not identical.
     let ds = datasets::by_name("simden", Some(4000), 11).unwrap();
-    let exact = Dpc::new(ds.params).run(&ds.pts);
+    let exact = Dpc::new(ds.params).run(&ds.pts).unwrap();
     let approx = run_approx(&ds.pts, ds.params);
     let ari = adjusted_rand_index(&exact.labels, &approx.labels);
     let nmi = normalized_mutual_info(&exact.labels, &approx.labels);
@@ -81,8 +81,8 @@ fn coordinator_runs_dataset_jobs_through_service() {
 #[test]
 fn rho_min_monotonicity_more_noise_with_higher_threshold() {
     let ds = datasets::by_name("varden", Some(3000), 5).unwrap();
-    let lo = Dpc::new(DpcParams { rho_min: 0.0, ..ds.params }).run(&ds.pts);
-    let hi = Dpc::new(DpcParams { rho_min: 20.0, ..ds.params }).run(&ds.pts);
+    let lo = Dpc::new(DpcParams { rho_min: 0.0, ..ds.params }).run(&ds.pts).unwrap();
+    let hi = Dpc::new(DpcParams { rho_min: 20.0, ..ds.params }).run(&ds.pts).unwrap();
     assert!(hi.num_noise >= lo.num_noise);
     assert_eq!(lo.num_noise, 0);
 }
@@ -90,8 +90,8 @@ fn rho_min_monotonicity_more_noise_with_higher_threshold() {
 #[test]
 fn delta_min_monotonicity_fewer_clusters_with_higher_threshold() {
     let ds = datasets::by_name("simden", Some(3000), 5).unwrap();
-    let fine = Dpc::new(DpcParams { delta_min: 10.0, ..ds.params }).run(&ds.pts);
-    let coarse = Dpc::new(DpcParams { delta_min: 500.0, ..ds.params }).run(&ds.pts);
+    let fine = Dpc::new(DpcParams { delta_min: 10.0, ..ds.params }).run(&ds.pts).unwrap();
+    let coarse = Dpc::new(DpcParams { delta_min: 500.0, ..ds.params }).run(&ds.pts).unwrap();
     assert!(coarse.num_clusters <= fine.num_clusters);
     assert!(coarse.num_clusters >= 1);
 }

@@ -1,0 +1,225 @@
+//! Session & typed-error suite: the staged `ClusterSession` must (a) turn
+//! every malformed-input panic of the old API into a `DpcError`, and (b)
+//! produce re-cuts byte-identical to fresh full runs while provably reusing
+//! the cached Step-1/2 artifacts.
+
+use std::sync::Arc;
+
+use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::dpc::{ClusterSession, DepAlgo, Dpc, DpcParams, DpcResult};
+use parcluster::error::DpcError;
+use parcluster::geom::PointSet;
+use parcluster::proputil::{self, Config};
+use parcluster::prng::SplitMix64;
+
+fn assert_same_result(a: &DpcResult, b: &DpcResult, ctx: &str) {
+    assert_eq!(a.rho, b.rho, "{ctx}: rho");
+    assert_eq!(a.dep, b.dep, "{ctx}: dep");
+    assert_eq!(a.delta, b.delta, "{ctx}: delta");
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.centers, b.centers, "{ctx}: centers");
+    assert_eq!(a.num_clusters, b.num_clusters, "{ctx}: num_clusters");
+    assert_eq!(a.num_noise, b.num_noise, "{ctx}: num_noise");
+}
+
+// 1. The headline property: a session re-cut at any thresholds equals a
+//    fresh full run at the same parameters, field for field, for every
+//    Step-2 algorithm and input flavor.
+#[test]
+fn prop_recut_is_byte_identical_to_fresh_run() {
+    proputil::check(
+        "recut-equivalence",
+        Config::cases(12),
+        |rng| (rng.next_u64(), proputil::gen_size(rng, 30, 250)),
+        |&(seed, n)| {
+            let mut rng = SplitMix64::new(seed);
+            let pts = match seed % 3 {
+                0 => proputil::gen_uniform_points(&mut rng, n, 2, 50.0),
+                1 => proputil::gen_clustered_points(&mut rng, n, 3, 1 + n / 40, 80.0, 2.0),
+                _ => proputil::gen_degenerate_points(&mut rng, n, 2),
+            };
+            let d_cut = 2.0 + (seed % 5) as f64;
+            for algo in [DepAlgo::Naive, DepAlgo::Priority, DepAlgo::Fenwick] {
+                let mut session = ClusterSession::build(&pts).map_err(|e| e.to_string())?;
+                session.density(d_cut).map_err(|e| e.to_string())?;
+                session.dependents(algo).map_err(|e| e.to_string())?;
+                for (rho_min, delta_min) in [(0.0, 5.0), (2.0, 3.0), (1.0, f64::INFINITY), (3.0, 0.0)] {
+                    let recut = session.cut(rho_min, delta_min).map_err(|e| e.to_string())?;
+                    let fresh = Dpc::new(DpcParams { d_cut, rho_min, delta_min })
+                        .dep_algo(algo)
+                        .run(&pts)
+                        .map_err(|e| e.to_string())?;
+                    if recut.rho != fresh.rho
+                        || recut.dep != fresh.dep
+                        || recut.delta != fresh.delta
+                        || recut.labels != fresh.labels
+                        || recut.centers != fresh.centers
+                    {
+                        return Err(format!("{algo:?} rho_min={rho_min} delta_min={delta_min}: recut != fresh"));
+                    }
+                }
+                // Every cut above reused the one cached compute per stage.
+                let st = session.stats();
+                if st.density_computes != 1 || st.dep_computes != 1 {
+                    return Err(format!("artifacts recomputed: {st:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// 2. Error paths: malformed input must surface as DpcError, never a panic.
+#[test]
+fn prop_malformed_inputs_are_typed_errors() {
+    proputil::check(
+        "typed-errors",
+        Config::cases(24),
+        |rng| (rng.next_u64(), proputil::gen_size(rng, 1, 60)),
+        |&(seed, n)| {
+            let mut rng = SplitMix64::new(seed);
+            // Empty input.
+            if !matches!(ClusterSession::build(&PointSet::empty(2)), Err(DpcError::EmptyInput)) {
+                return Err("empty: wrong error".into());
+            }
+            // Ragged flat buffer: n*2 + 1 coords at d = 2.
+            let coords: Vec<f64> = (0..n * 2 + 1).map(|_| rng.uniform(0.0, 9.0)).collect();
+            if !matches!(PointSet::try_new(coords, 2), Err(DpcError::RaggedCoords { .. })) {
+                return Err("ragged buffer: wrong error".into());
+            }
+            // Ragged rows.
+            let mut rows: Vec<Vec<f64>> = (0..n.max(2)).map(|_| vec![rng.next_f64(), rng.next_f64()]).collect();
+            rows[n.max(2) - 1].pop();
+            if !matches!(PointSet::try_from_rows(&rows), Err(DpcError::DimensionMismatch { .. })) {
+                return Err("ragged rows: wrong error".into());
+            }
+            // NaN / ∞ coordinates at a random position.
+            for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+                let mut coords: Vec<f64> = (0..n * 2).map(|_| rng.uniform(0.0, 9.0)).collect();
+                let pos = rng.next_below((n * 2) as u64) as usize;
+                coords[pos] = bad;
+                let pts = PointSet::new(coords, 2);
+                match ClusterSession::build(&pts) {
+                    Err(DpcError::NonFinite { point, dim }) => {
+                        if point * 2 + dim != pos {
+                            return Err(format!("nonfinite at {pos}: reported ({point}, {dim})"));
+                        }
+                    }
+                    other => return Err(format!("nonfinite: got {other:?}", other = other.err())),
+                }
+                // Same through the one-shot wrapper.
+                let pts = PointSet::new(vec![0.0, bad], 2);
+                if !matches!(
+                    Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+                    Err(DpcError::NonFinite { .. })
+                ) {
+                    return Err("Dpc::run nonfinite: wrong error".into());
+                }
+            }
+            // d_cut <= 0 / NaN.
+            let pts = proputil::gen_uniform_points(&mut rng, n.max(2), 2, 5.0);
+            for bad in [0.0, -1.0 - rng.next_f64(), f64::NAN] {
+                if !matches!(
+                    Dpc::new(DpcParams { d_cut: bad, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+                    Err(DpcError::InvalidParam { name: "d_cut", .. })
+                ) {
+                    return Err(format!("d_cut={bad}: wrong error"));
+                }
+            }
+            // NaN thresholds.
+            if !matches!(
+                Dpc::new(DpcParams { d_cut: 1.0, rho_min: f64::NAN, delta_min: 1.0 }).run(&pts),
+                Err(DpcError::InvalidParam { name: "rho_min", .. })
+            ) {
+                return Err("rho_min NaN: wrong error".into());
+            }
+            if !matches!(
+                Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::NAN }).run(&pts),
+                Err(DpcError::InvalidParam { name: "delta_min", .. })
+            ) {
+                return Err("delta_min NaN: wrong error".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// 3. Stage ordering is enforced with MissingStage, not panics or garbage.
+#[test]
+fn staged_api_enforces_order() {
+    let mut rng = SplitMix64::new(5);
+    let pts = proputil::gen_clustered_points(&mut rng, 120, 2, 2, 60.0, 2.0);
+    let mut s = ClusterSession::build(&pts).unwrap();
+    assert!(matches!(s.dependents(DepAlgo::Priority), Err(DpcError::MissingStage { need: "density", .. })));
+    assert!(matches!(s.cut(0.0, 1.0), Err(DpcError::MissingStage { need: "density", .. })));
+    s.density(3.0).unwrap();
+    assert!(matches!(s.cut(0.0, 1.0), Err(DpcError::MissingStage { need: "dependents", .. })));
+    s.dependents(DepAlgo::Priority).unwrap();
+    s.cut(0.0, 1.0).unwrap();
+}
+
+// 4. The coordinator's session-scoped serving: open once, re-cut many,
+//    always matching fresh runs; unknown sessions are typed errors.
+#[test]
+fn coordinator_session_recuts_match_fresh_runs() {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+        workers: 2,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = SplitMix64::new(17);
+    let pts = Arc::new(proputil::gen_clustered_points(&mut rng, 400, 2, 3, 150.0, 2.5));
+    let d_cut = 4.0;
+    let sid = coord.open_session(Arc::clone(&pts), d_cut).unwrap();
+    let entry = coord.session(sid).expect("entry");
+    assert_eq!(entry.built_by, "tree");
+    assert_eq!(entry.rho.len(), pts.len());
+
+    // Burst of concurrent re-cuts at different thresholds.
+    let sweeps: Vec<(f64, f64)> = vec![(0.0, 10.0), (2.0, 25.0), (1.0, f64::INFINITY), (4.0, 5.0)];
+    let ids: Vec<_> = sweeps.iter().map(|&(r, d)| coord.submit_recut(sid, r, d).unwrap()).collect();
+    for (id, &(rho_min, delta_min)) in ids.into_iter().zip(&sweeps) {
+        let out = coord.wait(id).unwrap();
+        let params = DpcParams { d_cut, rho_min, delta_min };
+        let fresh = Dpc::new(params).run(&pts).unwrap();
+        assert_same_result(&out.result, &fresh, &format!("rho_min={rho_min} delta_min={delta_min}"));
+        // The coordinator's direct (non-session) pipeline — Step 2 computed
+        // with the threshold rather than masked — must agree too.
+        let direct = coord
+            .run_sync(parcluster::coordinator::ClusterJob::new(Arc::clone(&pts), params))
+            .unwrap();
+        assert_same_result(&direct.result, &fresh, &format!("direct rho_min={rho_min}"));
+    }
+
+    assert!(matches!(coord.submit_recut(sid + 1, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
+    assert!(matches!(coord.submit_recut(sid, f64::NAN, 1.0), Err(DpcError::InvalidParam { name: "rho_min", .. })));
+    assert!(coord.close_session(sid));
+    assert!(matches!(coord.submit_recut(sid, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
+}
+
+// 5. Switching radii within one session: per-radius caches keep both
+//    radii's recuts exact and cheap.
+#[test]
+fn multi_radius_session_stays_exact() {
+    let mut rng = SplitMix64::new(23);
+    let pts = proputil::gen_clustered_points(&mut rng, 300, 2, 4, 120.0, 2.0);
+    let mut s = ClusterSession::build(&pts).unwrap();
+    for &d_cut in &[3.0, 6.0, 3.0] {
+        s.density(d_cut).unwrap();
+        s.dependents(DepAlgo::Fenwick).unwrap();
+        let recut = s.cut(1.0, 8.0).unwrap();
+        let fresh = Dpc::new(DpcParams { d_cut, rho_min: 1.0, delta_min: 8.0 })
+            .dep_algo(DepAlgo::Fenwick)
+            .run(&pts)
+            .unwrap();
+        assert_same_result(&recut, &fresh, &format!("d_cut={d_cut}"));
+    }
+    // Two distinct radii -> exactly two computes per stage; the third pass
+    // (back to 3.0) was served from cache.
+    let st = s.stats();
+    assert_eq!(st.density_computes, 2);
+    assert_eq!(st.dep_computes, 2);
+    assert_eq!(st.density_cache_hits, 1);
+    assert_eq!(st.dep_cache_hits, 1);
+}

@@ -125,7 +125,7 @@ fn full_pipeline_agreement_on_clustered_grid_data() {
     }
     let pts = Arc::new(PointSet::new(coords, 2));
     let params = DpcParams { d_cut: 8.0, rho_min: 0.0, delta_min: 100.0 };
-    let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts);
+    let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
     assert_eq!(reference.num_clusters, 2);
 
     let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
