@@ -1,0 +1,85 @@
+//! Streaming ingest bench: `StreamingSession::ingest` + cut on a batch vs a
+//! from-scratch `ClusterSession` pipeline (build + density + dependents +
+//! cut) on the concatenated set — the serving-time win the kd-forest exists
+//! for (a session absorbing traffic must not pay a full rebuild per batch).
+//!
+//!   cargo bench --bench stream_ingest
+//!   PARBENCH_N=200000 cargo bench --bench stream_ingest
+//!
+//! Expected: ingest latency ≥5x below the full rebuild at a 10% batch on
+//! n = 100k (the ingest rebuilds only colliding forest levels and repairs
+//! (ρ, λ, δ) from the batch's neighborhoods; the rebuild re-runs every
+//! range count and dependent query). Exits nonzero below the target.
+
+use parcluster::bench::{fmt_secs, time_median, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{ClusterSession, DepAlgo, StreamingSession};
+use parcluster::geom::PointSet;
+
+fn main() {
+    let n: usize = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000);
+    let trials: usize = std::env::var("PARBENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let d_cut = 30.0;
+    let pts = synthetic::simden(n, 2, 42);
+    let d = pts.dim();
+
+    println!("# Streaming ingest vs full rebuild on simden n={n} (median of {trials})");
+    let mut table = Table::new(&["batch", "full rebuild", "ingest+cut", "speedup", "identical"]);
+    let mut speedup_at_10pct = 0.0f64;
+    for frac in [0.01f64, 0.10] {
+        let b = ((n as f64 * frac) as usize).max(1);
+        let base_n = n - b;
+        let base = PointSet::new(pts.coords()[..base_n * d].to_vec(), d);
+        let batch = PointSet::new(pts.coords()[base_n * d..].to_vec(), d);
+
+        // The price a non-streaming server pays per batch arrival.
+        let full_s = time_median(trials, || {
+            let mut s = ClusterSession::build(&pts).expect("build");
+            s.density(d_cut).expect("density");
+            s.dependents(DepAlgo::Priority).expect("dependents");
+            std::hint::black_box(s.cut(0.0, f64::INFINITY).expect("cut"));
+        });
+
+        // Ingest price: base load is untimed per-trial setup.
+        let mut samples: Vec<f64> = (0..trials.max(1))
+            .map(|_| {
+                let mut s = StreamingSession::new(d, d_cut).expect("open");
+                s.ingest(&base).expect("base ingest");
+                let t = std::time::Instant::now();
+                s.ingest(&batch).expect("ingest");
+                std::hint::black_box(s.cut(0.0, f64::INFINITY).expect("cut"));
+                t.elapsed().as_secs_f64()
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ingest_s = samples[samples.len() / 2];
+
+        // Exactness spot-check at bench scale.
+        let mut s = StreamingSession::new(d, d_cut).expect("open");
+        s.ingest(&base).expect("base ingest");
+        s.ingest(&batch).expect("ingest");
+        let mut fresh = ClusterSession::build(&pts).expect("build");
+        let rho = fresh.density(d_cut).expect("density");
+        let art = fresh.dependents(DepAlgo::Priority).expect("dependents");
+        let identical = s.rho() == &rho[..] && s.dep() == &art.dep[..] && s.delta() == &art.delta[..];
+
+        let speedup = full_s / ingest_s.max(1e-12);
+        if frac == 0.10 {
+            speedup_at_10pct = speedup;
+        }
+        table.row(vec![
+            format!("{:.0}% ({b})", frac * 100.0),
+            fmt_secs(full_s),
+            fmt_secs(ingest_s),
+            format!("{speedup:.1}x"),
+            if identical { "yes".into() } else { "NO".into() },
+        ]);
+        eprintln!("done: batch {:.0}%", frac * 100.0);
+    }
+    table.print();
+    println!("\n# speedup at the 10% batch: {speedup_at_10pct:.1}x (target: >= 5x at n=100k)");
+    if speedup_at_10pct < 5.0 {
+        eprintln!("WARNING: streaming ingest below the 5x target");
+        std::process::exit(1);
+    }
+}

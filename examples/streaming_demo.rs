@@ -1,0 +1,68 @@
+//! Streaming ingestion demo: grow a session batch by batch, watching the
+//! kd-forest's binary-counter merges and the amortized repair stats, then
+//! verify the final state against a from-scratch staged session.
+//!
+//!   cargo run --release --example streaming_demo
+
+use parcluster::bench::{fmt_secs, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{ClusterSession, DepAlgo, StreamingSession};
+use parcluster::geom::PointSet;
+
+fn main() {
+    let n = 20_000usize;
+    let d_cut = 30.0;
+    let pts = synthetic::varden(n, 2, 7);
+    let d = pts.dim();
+    let batches = 10usize;
+    let per = n.div_ceil(batches);
+
+    let mut s = StreamingSession::new(d, d_cut).expect("open stream");
+    let mut table = Table::new(&["batch", "points", "total", "ingest", "levels", "clusters"]);
+    let mut sent = 0usize;
+    let mut batch_no = 0usize;
+    while sent < n {
+        let hi = (sent + per).min(n);
+        let batch = PointSet::new(pts.coords()[sent * d..hi * d].to_vec(), d);
+        let t = std::time::Instant::now();
+        s.ingest(&batch).expect("ingest");
+        let ingest_s = t.elapsed().as_secs_f64();
+        let out = s.cut(5.0, 500.0).expect("cut");
+        table.row(vec![
+            batch_no.to_string(),
+            (hi - sent).to_string(),
+            hi.to_string(),
+            fmt_secs(ingest_s),
+            format!("{:?}", s.level_sizes()),
+            out.num_clusters.to_string(),
+        ]);
+        sent = hi;
+        batch_no += 1;
+    }
+    table.print();
+
+    let st = s.stats();
+    println!(
+        "\nrepair stats: {} trees rebuilt ({} points) for {} ingested; \
+         rho bumps {}, dep full re-queries {}, seeded races {} ({} deps changed)",
+        st.trees_built,
+        st.tree_points_built,
+        st.points_ingested,
+        st.rho_bumped,
+        st.dep_full_queries,
+        st.dep_seeded_races,
+        st.dep_changed
+    );
+
+    // The exactness contract, checked end to end.
+    let mut fresh = ClusterSession::build(&pts).expect("fresh build");
+    let rho = fresh.density(d_cut).expect("density");
+    let art = fresh.dependents(DepAlgo::Priority).expect("dependents");
+    assert_eq!(s.rho(), &rho[..], "streaming rho must equal a fresh build");
+    assert_eq!(s.dep(), &art.dep[..], "streaming dep must equal a fresh build");
+    assert_eq!(s.delta(), &art.delta[..], "streaming delta must equal a fresh build");
+    let a = s.cut(5.0, 500.0).expect("cut");
+    let b = fresh.cut(5.0, 500.0).expect("cut");
+    assert_eq!(a.labels, b.labels, "streaming labels must equal a fresh build");
+    println!("exactness check vs from-scratch session: OK ({} clusters, {} noise)", a.num_clusters, a.num_noise);
+}

@@ -111,11 +111,19 @@ COMMANDS:
              [--labels-out FILE] [--seed S]
   decision   (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--k K]
              [--csv-out FILE] [--seed S]
+  stream     (--dataset NAME [--n N] | --input FILE) [--batches K] [--d-cut X]
+             [--rho-min X] [--delta-min X] [--verify] [--seed S]
+             ingest the input in K batches through a streaming session,
+             reporting per-batch latency (--verify re-checks exactness
+             against a from-scratch run after every batch)
   serve      [--config FILE] [--workers N]    read jobs from stdin, one per line:
              `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`  full pipeline job
              `open <dataset> <n> <d_cut>`                          open a cached session
              `recut <session> <rho_min> <delta_min>`               linkage-only re-cut
              `close <session>`                                     drop a session's cache
+             `stream <dim> <d_cut>`                                open a streaming session
+             `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`  batch + cut
+             `closestream <stream>`                                drop a streaming session
   help
 
 Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick

@@ -17,6 +17,12 @@ pub enum JobPayload {
     /// A linkage-only re-cut against an open session's cached artifacts
     /// (Steps 1–2 are served from the session).
     Recut(SessionId),
+    /// A batch ingest into an open streaming session, followed by a cut at
+    /// the job's thresholds (Steps 1–2 are incrementally repaired). `seq`
+    /// is the stream's FIFO ticket: workers apply ingests in ticket order,
+    /// so batches land in submission order even when several workers race
+    /// the shared queue.
+    Ingest { stream: SessionId, batch: Arc<PointSet>, seq: u64 },
 }
 
 /// A clustering request.
@@ -41,6 +47,20 @@ impl ClusterJob {
     /// the session; the field here is filled in from it for reporting).
     pub fn recut(session: SessionId, params: DpcParams) -> Self {
         ClusterJob { payload: JobPayload::Recut(session), params, backend: None, dep_algo: None, tag: String::new() }
+    }
+
+    /// A batch ingest into an open streaming session, reporting the
+    /// post-ingest clustering at the given thresholds (`d_cut` is fixed by
+    /// the stream; the field here is filled in from it for reporting).
+    /// `seq` is the per-stream FIFO ticket issued by the coordinator.
+    pub fn ingest(stream: SessionId, batch: Arc<PointSet>, seq: u64, params: DpcParams) -> Self {
+        ClusterJob {
+            payload: JobPayload::Ingest { stream, batch, seq },
+            params,
+            backend: None,
+            dep_algo: None,
+            tag: String::new(),
+        }
     }
 
     pub fn backend(mut self, b: Backend) -> Self {

@@ -18,6 +18,9 @@
 //!
 //! Sessions ([`Coordinator::open_session`] / [`Coordinator::submit_recut`])
 //! cache Steps 1–2 so decision-graph threshold sweeps pay only Step 3.
+//! Streams ([`Coordinator::open_stream`] / [`Coordinator::submit_ingest`])
+//! hold a [`crate::dpc::StreamingSession`] so batch arrivals repair Steps
+//! 1–2 incrementally instead of re-running them.
 
 pub mod config;
 pub mod engine;
@@ -30,4 +33,4 @@ pub use config::CoordinatorConfig;
 pub use engine::{Engine, JobSpec, TreeEngine, XlaEngine};
 pub use job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 pub use router::{Backend, Router};
-pub use service::{Coordinator, SessionEntry, SessionId};
+pub use service::{Coordinator, SessionEntry, SessionId, StreamEntry};

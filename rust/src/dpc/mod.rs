@@ -18,8 +18,10 @@ pub mod linkage;
 pub mod approx;
 pub mod decision;
 pub mod session;
+pub mod stream;
 
 pub use session::{ClusterSession, DepArtifacts, SessionStats};
+pub use stream::{StreamStats, StreamingSession};
 
 use crate::error::DpcError;
 use crate::geom::PointSet;

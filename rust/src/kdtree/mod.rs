@@ -328,6 +328,62 @@ impl<'p> KdTree<'p> {
         }
     }
 
+    /// Nearest neighbor of `q` among points accepted by `keep`, folded into
+    /// a running `best = (id, dist_sq)`. Pass `(u32::MAX, f64::INFINITY)` to
+    /// start fresh, or a previous winner to race it against this tree's
+    /// points — the streaming forest threads one best through every level
+    /// tree, and seeds it with a cached dependent so the traversal prunes at
+    /// the old δ. Ordering matches [`KdTree::nn`]: min by `(dist_sq, id)`.
+    pub fn nn_filtered<S: StatSink, F: Fn(u32) -> bool>(
+        &self,
+        q: &[f64],
+        keep: F,
+        best: &mut (u32, f64),
+        stats: &mut S,
+    ) {
+        if self.bbox_dist_sq(self.root, q) > best.1 {
+            return;
+        }
+        self.nn_filtered_rec(self.root, q, &keep, best, stats, 1);
+    }
+
+    fn nn_filtered_rec<S: StatSink, F: Fn(u32) -> bool>(
+        &self,
+        i: u32,
+        q: &[f64],
+        keep: &F,
+        best: &mut (u32, f64),
+        stats: &mut S,
+        depth: usize,
+    ) {
+        stats.visit_node();
+        stats.depth(depth);
+        let n = self.node(i);
+        if self.is_leaf(i) {
+            let d = self.pts.dim();
+            for j in n.lo as usize..n.hi as usize {
+                stats.scan_point();
+                let ds = dist_sq_at(&self.pcoords, d, j, q);
+                if ds <= best.1 {
+                    let p = self.perm[j];
+                    if (ds < best.1 || p < best.0) && keep(p) {
+                        *best = (p, ds);
+                    }
+                }
+            }
+            return;
+        }
+        let dl = self.bbox_dist_sq(n.left, q);
+        let dr = self.bbox_dist_sq(n.right, q);
+        let (first, d1, second, d2) = if dl <= dr { (n.left, dl, n.right, dr) } else { (n.right, dr, n.left, dl) };
+        if d1 <= best.1 {
+            self.nn_filtered_rec(first, q, keep, best, stats, depth + 1);
+        }
+        if d2 <= best.1 {
+            self.nn_filtered_rec(second, q, keep, best, stats, depth + 1);
+        }
+    }
+
     /// K nearest neighbors of `q` (excluding `exclude`), ascending by
     /// `(dist_sq, id)`.
     pub fn knn(&self, q: &[f64], k: usize, exclude: u32) -> Vec<(u32, f64)> {
@@ -601,6 +657,21 @@ pub fn brute_nn(pts: &PointSet, q: &[f64], exclude: u32) -> Option<(u32, f64)> {
     best
 }
 
+/// O(n) reference filtered NN: min `(dist_sq, id)` over points accepted by
+/// `keep`, folded into `best` with the same comparator as
+/// [`KdTree::nn_filtered`].
+pub fn brute_nn_filtered<F: Fn(u32) -> bool>(pts: &PointSet, q: &[f64], keep: F, best: &mut (u32, f64)) {
+    for i in 0..pts.len() as u32 {
+        if !keep(i) {
+            continue;
+        }
+        let ds = pts.dist_sq_to(i as usize, q);
+        if ds < best.1 || (ds == best.1 && i < best.0) {
+            *best = (i, ds);
+        }
+    }
+}
+
 /// O(n) reference range count.
 pub fn brute_range_count(pts: &PointSet, q: &[f64], r_sq: f64) -> usize {
     (0..pts.len()).filter(|&i| dist_sq(pts.point(i), q) <= r_sq).count()
@@ -652,6 +723,54 @@ mod tests {
             let want = brute_nn(&pts, pts.point(i), i as u32).unwrap();
             assert_eq!(got, want, "query {i}");
         }
+    }
+
+    #[test]
+    fn nn_filtered_matches_brute_force() {
+        let pts = sample_points(9, 1500, 2);
+        let tree = KdTree::build(&pts);
+        // Random-looking but deterministic priority per id.
+        let gamma: Vec<u64> = (0..pts.len() as u32).map(|i| (i as u64).wrapping_mul(0x9E37_79B9) % 1000).collect();
+        for i in (0..pts.len()).step_by(29) {
+            let q = pts.point(i);
+            let gi = gamma[i];
+            let mut got = (NONE, f64::INFINITY);
+            tree.nn_filtered(q, |p| gamma[p as usize] > gi, &mut got, &mut NoStats);
+            let mut want = (NONE, f64::INFINITY);
+            brute_nn_filtered(&pts, q, |p| gamma[p as usize] > gi, &mut want);
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn nn_filtered_respects_seeded_best() {
+        let pts = sample_points(10, 800, 3);
+        let tree = KdTree::build(&pts);
+        let q = pts.point(0);
+        // Seed with the true NN (excluding self): no even-id point closer can
+        // exist, so the seed must survive an odd-rejecting filter that would
+        // otherwise pick a different point.
+        let seed = brute_nn(&pts, q, 0).unwrap();
+        let mut got = seed;
+        tree.nn_filtered(q, |p| p % 2 == 0 && p != 0, &mut got, &mut NoStats);
+        let mut want = seed;
+        brute_nn_filtered(&pts, q, |p| p % 2 == 0 && p != 0, &mut want);
+        assert_eq!(got, want);
+        // And with an unreachable seed the filter result matches brute force.
+        let mut got = (NONE, f64::INFINITY);
+        tree.nn_filtered(q, |p| p % 2 == 1, &mut got, &mut NoStats);
+        let mut want = (NONE, f64::INFINITY);
+        brute_nn_filtered(&pts, q, |p| p % 2 == 1, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn nn_filtered_rejecting_everything_leaves_best_untouched() {
+        let pts = sample_points(11, 300, 2);
+        let tree = KdTree::build(&pts);
+        let mut best = (NONE, f64::INFINITY);
+        tree.nn_filtered(pts.point(5), |_| false, &mut best, &mut NoStats);
+        assert_eq!(best, (NONE, f64::INFINITY));
     }
 
     #[test]

@@ -31,8 +31,12 @@
 //! For the iterative decision-graph workflow, hold a
 //! [`dpc::ClusterSession`] instead: `build` once, then `density` →
 //! `dependents` → `cut`, where re-cutting with new thresholds costs only the
-//! union-find linkage step. Malformed input surfaces as
-//! [`error::DpcError`], never a panic.
+//! union-find linkage step. For *growing* data, hold a
+//! [`dpc::StreamingSession`]: `ingest` batches into a logarithmic kd-forest
+//! that repairs (ρ, λ, δ) incrementally while staying byte-identical to a
+//! from-scratch build on the concatenated points — then `cut` at any
+//! thresholds. Malformed input surfaces as [`error::DpcError`], never a
+//! panic.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use parcluster::bench::fmt_secs;
+use parcluster::bench::{fmt_secs, Table};
 use parcluster::cli::{Args, USAGE};
 use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
 use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
@@ -30,6 +30,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(&args),
         "cluster" => cmd_cluster(&args),
         "decision" => cmd_decision(&args),
+        "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -171,6 +172,81 @@ fn cmd_decision(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Streaming ingestion demo: feed the input in batches through a
+/// coordinator stream, reporting per-batch ingest+cut latency (and, with
+/// `--verify`, exactness against a from-scratch run on every prefix).
+fn cmd_stream(args: &Args) -> Result<()> {
+    let (pts, mut params, tag) = load_input(args)?;
+    params.d_cut = args.get_or("d-cut", params.d_cut)?;
+    params.rho_min = args.get_or("rho-min", params.rho_min)?;
+    params.delta_min = args.get_or("delta-min", params.delta_min)?;
+    let batches = args.get_or("batches", 10usize)?.max(1);
+    let verify = args.switch("verify");
+    args.reject_unknown()?;
+
+    let cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() }.with_env_overrides()?;
+    let coord = Coordinator::start(cfg)?;
+    let d = pts.dim();
+    let n = pts.len();
+    let per = n.div_ceil(batches);
+    let sid = coord.open_stream(d, params.d_cut)?;
+    println!(
+        "stream {sid}: {tag} (n={n}, d={d}) in {batches} batches, d_cut={}, rho_min={}, delta_min={}",
+        params.d_cut, params.rho_min, params.delta_min
+    );
+    let mut table =
+        Table::new(&["batch", "points", "total", "ingest+cut", "clusters", "noise", if verify { "exact" } else { "-" }]);
+    let mut sent = 0usize;
+    let mut batch_no = 0usize;
+    let mut all_exact = true;
+    while sent < n {
+        let hi = (sent + per).min(n);
+        let batch = PointSet::new(pts.coords()[sent * d..hi * d].to_vec(), d);
+        let id = coord.submit_ingest(sid, Arc::new(batch), params.rho_min, params.delta_min)?;
+        let out = coord.wait(id).map_err(|e| anyhow::anyhow!(e))?;
+        let exact = if verify {
+            let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
+            let fresh = parcluster::dpc::Dpc::new(params).run(&prefix)?;
+            let same = out.result.rho == fresh.rho
+                && out.result.dep == fresh.dep
+                && out.result.delta == fresh.delta
+                && out.result.labels == fresh.labels
+                && out.result.centers == fresh.centers;
+            all_exact &= same;
+            if same { "yes" } else { "NO" }
+        } else {
+            "-"
+        };
+        table.row(vec![
+            batch_no.to_string(),
+            (hi - sent).to_string(),
+            hi.to_string(),
+            fmt_secs(out.wall_s),
+            out.result.num_clusters.to_string(),
+            out.result.num_noise.to_string(),
+            exact.to_string(),
+        ]);
+        sent = hi;
+        batch_no += 1;
+    }
+    table.print();
+    if let Some(entry) = coord.stream(sid) {
+        let s = entry.session.lock().unwrap();
+        let st = s.stats();
+        println!(
+            "forest levels: {:?}; trees rebuilt: {} ({} points total) for {} ingested points",
+            s.level_sizes(),
+            st.trees_built,
+            st.tree_points_built,
+            st.points_ingested
+        );
+    }
+    if !all_exact {
+        bail!("streaming state diverged from a from-scratch run (see the `exact` column)");
+    }
+    Ok(())
+}
+
 /// Service demo: read jobs from stdin, submit to the coordinator, report.
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
@@ -184,7 +260,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`",
+        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`",
         coord.config().workers,
         coord.has_xla()
     );
@@ -231,6 +307,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     println!("session {sid} closed");
                 } else {
                     eprintln!("close failed: unknown session {sid}");
+                }
+            }
+            "stream" => {
+                if parts.len() != 3 {
+                    eprintln!("skipping malformed stream line: {t:?} (want `stream <dim> <d_cut>`)");
+                    continue;
+                }
+                let (Ok(dim), Ok(d_cut)) = (parts[1].parse::<usize>(), parts[2].parse::<f64>()) else {
+                    eprintln!("skipping stream line with non-numeric dim/d_cut: {t:?}");
+                    continue;
+                };
+                match coord.open_stream(dim, d_cut) {
+                    Ok(sid) => println!("stream {sid}: dim={dim} d_cut={d_cut}"),
+                    Err(e) => eprintln!("stream open failed: {e}"),
+                }
+            }
+            "ingest" => {
+                if parts.len() != 6 && parts.len() != 7 {
+                    eprintln!(
+                        "skipping malformed ingest line: {t:?} (want `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`)"
+                    );
+                    continue;
+                }
+                let (Ok(sid), Ok(n), Ok(rho_min), Ok(delta_min)) = (
+                    parts[1].parse::<u64>(),
+                    parts[3].parse::<usize>(),
+                    parts[4].parse::<f64>(),
+                    parts[5].parse::<f64>(),
+                ) else {
+                    eprintln!("skipping ingest line with non-numeric fields: {t:?}");
+                    continue;
+                };
+                // The stream grows with every line, so the batch seed
+                // matters: vary it to feed distinct batches.
+                let seed = match parts.get(6).map(|s| s.parse::<u64>()) {
+                    None => 42,
+                    Some(Ok(s)) => s,
+                    Some(Err(_)) => {
+                        eprintln!("skipping ingest line with non-numeric seed: {t:?}");
+                        continue;
+                    }
+                };
+                let Some(ds) = datasets::by_name(parts[2], Some(n), seed) else {
+                    eprintln!("unknown dataset {:?}", parts[2]);
+                    continue;
+                };
+                match coord.submit_ingest(sid, Arc::new(ds.pts), rho_min, delta_min) {
+                    Ok(id) => ids.push(id),
+                    Err(e) => eprintln!("ingest failed: {e}"),
+                }
+            }
+            "closestream" => {
+                if parts.len() != 2 {
+                    eprintln!("skipping malformed closestream line: {t:?} (want `closestream <stream>`)");
+                    continue;
+                }
+                let Ok(sid) = parts[1].parse::<u64>() else {
+                    eprintln!("skipping closestream line with non-numeric stream: {t:?}");
+                    continue;
+                };
+                if coord.close_stream(sid) {
+                    println!("stream {sid} closed");
+                } else {
+                    eprintln!("closestream failed: unknown stream {sid}");
                 }
             }
             "recut" => {

@@ -1,0 +1,322 @@
+//! Exactness conformance suite — the paper's headline claim, enforced.
+//!
+//! 1. **Cross-algorithm**: every `DepAlgo` × `DensityAlgo` combination must
+//!    produce identical (ρ, λ, δ, labels) on adversarial input families
+//!    (uniform, clustered, duplicate-heavy, collinear).
+//! 2. **Streaming**: after every `StreamingSession::ingest`, the maintained
+//!    artifacts and any cut must be byte-identical to a fresh
+//!    `ClusterSession` on the same prefix, for all five `DepAlgo`s.
+//! 3. **Golden snapshot**: a committed dataset + expected labels/centers
+//!    under `rust/tests/data/`, so an exactness regression shows as a
+//!    readable per-point diff instead of a property-test shrink.
+//! 4. **Edge cases** for the session/validation layer.
+
+use parcluster::dpc::{ClusterSession, DensityAlgo, DepAlgo, Dpc, DpcParams, DpcResult, StreamingSession};
+use parcluster::error::DpcError;
+use parcluster::geom::PointSet;
+use parcluster::prng::SplitMix64;
+use parcluster::proputil::{gen_clustered_points, gen_uniform_points};
+
+// ---------------------------------------------------------------------------
+// Input families
+// ---------------------------------------------------------------------------
+
+const FAMILIES: [&str; 4] = ["uniform", "clustered", "duplicate-heavy", "collinear"];
+
+/// Deterministic generator per (family, seed); n stays small enough for the
+/// Θ(n²) reference combinations.
+fn gen_family(family: &str, seed: u64, n: usize) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    match family {
+        "uniform" => gen_uniform_points(&mut rng, n, 2, 40.0),
+        "clustered" => gen_clustered_points(&mut rng, n, 3, 4, 60.0, 2.0),
+        "duplicate-heavy" => {
+            // A handful of sites, each stamped many times: maximal density
+            // ties, so every id-tiebreak path is exercised.
+            let sites: Vec<(f64, f64)> = (0..5).map(|_| (rng.uniform(0.0, 20.0), rng.uniform(0.0, 20.0))).collect();
+            let mut coords = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                let (x, y) = sites[rng.next_below(sites.len() as u64) as usize];
+                coords.push(x);
+                coords.push(y);
+            }
+            PointSet::new(coords, 2)
+        }
+        "collinear" => {
+            // Points on one line with irregular (sometimes duplicate)
+            // spacing: degenerate bounding boxes in every split dimension.
+            let mut coords = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                let t = rng.next_below(n as u64 / 2 + 1) as f64;
+                coords.push(t);
+                coords.push(2.0 * t);
+            }
+            PointSet::new(coords, 2)
+        }
+        other => panic!("unknown family {other}"),
+    }
+}
+
+fn family_d_cut(family: &str) -> f64 {
+    match family {
+        "uniform" => 4.0,
+        "clustered" => 3.0,
+        "duplicate-heavy" => 2.0,
+        _ => 5.0,
+    }
+}
+
+fn assert_identical(a: &DpcResult, b: &DpcResult, ctx: &str) {
+    assert_eq!(a.rho, b.rho, "{ctx}: rho");
+    assert_eq!(a.dep, b.dep, "{ctx}: dep");
+    assert_eq!(a.delta, b.delta, "{ctx}: delta");
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.centers, b.centers, "{ctx}: centers");
+    assert_eq!(a.num_clusters, b.num_clusters, "{ctx}: num_clusters");
+    assert_eq!(a.num_noise, b.num_noise, "{ctx}: num_noise");
+}
+
+// ---------------------------------------------------------------------------
+// 1. Cross-algorithm conformance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_dep_density_combinations_identical_across_families() {
+    for seed in [11u64, 12, 13] {
+        for family in FAMILIES {
+            let n = 80 + (seed as usize % 3) * 40;
+            let pts = gen_family(family, seed, n);
+            let params = DpcParams { d_cut: family_d_cut(family), rho_min: 2.0, delta_min: 6.0 };
+            let reference = Dpc::new(params)
+                .dep_algo(DepAlgo::Naive)
+                .density_algo(DensityAlgo::Naive)
+                .run(&pts)
+                .unwrap();
+            for dep_algo in DepAlgo::ALL {
+                for density_algo in DensityAlgo::ALL {
+                    let out = Dpc::new(params).dep_algo(dep_algo).density_algo(density_algo).run(&pts).unwrap();
+                    assert_identical(
+                        &out,
+                        &reference,
+                        &format!("{family} seed={seed} {dep_algo:?}×{density_algo:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Streaming conformance: every ingest state equals a fresh build
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streaming_state_matches_fresh_session_for_all_dep_algos() {
+    for family in FAMILIES {
+        let pts = gen_family(family, 77, 140);
+        let d = pts.dim();
+        let d_cut = family_d_cut(family);
+        let mut stream = StreamingSession::new(d, d_cut).unwrap();
+        let mut sent = 0usize;
+        for bsz in [33usize, 1, 60, 46] {
+            let hi = (sent + bsz).min(pts.len());
+            let batch = PointSet::new(pts.coords()[sent * d..hi * d].to_vec(), d);
+            stream.ingest(&batch).unwrap();
+            sent = hi;
+            let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
+            let mut fresh = ClusterSession::build(&prefix).unwrap();
+            let rho = fresh.density(d_cut).unwrap();
+            assert_eq!(stream.rho(), &rho[..], "{family}: rho at {hi}");
+            for algo in DepAlgo::ALL {
+                let art = fresh.dependents(algo).unwrap();
+                assert_eq!(stream.dep(), &art.dep[..], "{family}: dep at {hi} vs {algo:?}");
+                assert_eq!(stream.delta(), &art.delta[..], "{family}: delta at {hi} vs {algo:?}");
+                for (rho_min, delta_min) in [(0.0, 8.0), (3.0, 4.0)] {
+                    let a = stream.cut(rho_min, delta_min).unwrap();
+                    let b = fresh.cut(rho_min, delta_min).unwrap();
+                    assert_identical(&a, &b, &format!("{family}: cut at {hi} vs {algo:?}"));
+                }
+            }
+        }
+        assert_eq!(sent, pts.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Golden snapshot
+// ---------------------------------------------------------------------------
+
+const GOLDEN_INPUT: &str = include_str!("data/golden_input.csv");
+const GOLDEN_EXPECTED: &str = include_str!("data/golden_expected.csv");
+const GOLDEN_PARAMS: DpcParams = DpcParams { d_cut: 2.0, rho_min: 3.0, delta_min: 5.0 };
+
+struct Golden {
+    rho: Vec<u32>,
+    dep: Vec<Option<u32>>,
+    labels: Vec<i64>,
+    centers: Vec<u32>,
+}
+
+fn parse_golden() -> (PointSet, Golden) {
+    let rows: Vec<Vec<f64>> = GOLDEN_INPUT
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(|l| l.split(',').map(|c| c.trim().parse::<f64>().expect("coordinate")).collect())
+        .collect();
+    let pts = PointSet::from_rows(&rows);
+    let mut g = Golden { rho: Vec::new(), dep: Vec::new(), labels: Vec::new(), centers: Vec::new() };
+    for line in GOLDEN_EXPECTED.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with("id,") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("centers,") {
+            g.centers = rest.split_whitespace().map(|c| c.parse().expect("center id")).collect();
+            continue;
+        }
+        let cells: Vec<i64> = line.split(',').map(|c| c.trim().parse().expect("cell")).collect();
+        assert_eq!(cells.len(), 4, "expected `id,rho,dep,label`: {line:?}");
+        assert_eq!(cells[0] as usize, g.rho.len(), "rows must be in id order");
+        g.rho.push(cells[1] as u32);
+        g.dep.push(if cells[2] < 0 { None } else { Some(cells[2] as u32) });
+        g.labels.push(cells[3]);
+    }
+    assert_eq!(g.rho.len(), pts.len(), "expected file must cover every input point");
+    (pts, g)
+}
+
+/// Render a per-point expected-vs-got table for failures — the readable
+/// diff this snapshot exists for.
+fn golden_diff(golden: &Golden, got: &DpcResult) -> String {
+    let mut out = String::from("id | rho exp/got | dep exp/got | label exp/got\n");
+    let fmt_dep = |d: Option<u32>| d.map_or("-".to_string(), |j| j.to_string());
+    for i in 0..golden.rho.len() {
+        let same = golden.rho[i] == got.rho[i] && golden.dep[i] == got.dep[i] && golden.labels[i] == got.labels[i];
+        out.push_str(&format!(
+            "{:>2} | {:>3} {:>3} | {:>3} {:>3} | {:>5} {:>5} {}\n",
+            i,
+            golden.rho[i],
+            got.rho[i],
+            fmt_dep(golden.dep[i]),
+            fmt_dep(got.dep[i]),
+            golden.labels[i],
+            got.labels[i],
+            if same { "" } else { "  <-- MISMATCH" },
+        ));
+    }
+    out.push_str(&format!("centers: expected {:?}, got {:?}\n", golden.centers, got.centers));
+    out
+}
+
+#[test]
+fn golden_snapshot_matches_for_every_dep_algo() {
+    let (pts, golden) = parse_golden();
+    for algo in DepAlgo::ALL {
+        let got = Dpc::new(GOLDEN_PARAMS).dep_algo(algo).run(&pts).unwrap();
+        let ok = golden.rho == got.rho
+            && golden.dep == got.dep
+            && golden.labels == got.labels
+            && golden.centers == got.centers;
+        assert!(ok, "golden snapshot diverged under {algo:?}:\n{}", golden_diff(&golden, &got));
+    }
+}
+
+#[test]
+fn golden_snapshot_matches_streaming_ingest() {
+    let (pts, golden) = parse_golden();
+    let d = pts.dim();
+    let mut stream = StreamingSession::new(d, GOLDEN_PARAMS.d_cut).unwrap();
+    // One blob per batch, then the stragglers — exercises cross-batch ρ bumps.
+    for (lo, hi) in [(0usize, 5usize), (5, 11), (11, 13)] {
+        stream.ingest(&PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d)).unwrap();
+    }
+    let got = stream.cut(GOLDEN_PARAMS.rho_min, GOLDEN_PARAMS.delta_min).unwrap();
+    let ok = golden.rho == got.rho && golden.dep == got.dep && golden.labels == got.labels && golden.centers == got.centers;
+    assert!(ok, "golden snapshot diverged after streaming ingest:\n{}", golden_diff(&golden, &got));
+}
+
+// ---------------------------------------------------------------------------
+// 4. Session/validation edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_point_is_its_own_cluster() {
+    let pts = PointSet::new(vec![3.0, 4.0], 2);
+    for algo in DepAlgo::ALL {
+        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 10.0 }).dep_algo(algo).run(&pts).unwrap();
+        assert_eq!(out.rho, vec![1], "{algo:?}");
+        assert_eq!(out.dep, vec![None]);
+        assert!(out.delta[0].is_infinite());
+        assert_eq!(out.labels, vec![0]);
+        assert_eq!((out.num_clusters, out.num_noise), (1, 0));
+    }
+}
+
+#[test]
+fn all_duplicate_points_collapse_to_one_cluster() {
+    let n = 40;
+    let pts = PointSet::new(vec![7.0; n * 2], 2);
+    for algo in DepAlgo::ALL {
+        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0 }).dep_algo(algo).run(&pts).unwrap();
+        assert!(out.rho.iter().all(|&r| r == n as u32), "{algo:?}");
+        // Id tiebreak: point 0 is the unique peak; everyone else depends on
+        // it at distance zero.
+        assert_eq!(out.dep[0], None);
+        assert!(out.dep[1..].iter().all(|&d| d == Some(0)));
+        assert!(out.delta[1..].iter().all(|&x| x == 0.0));
+        assert_eq!((out.num_clusters, out.num_noise), (1, 0));
+        assert!(out.labels.iter().all(|&l| l == 0));
+    }
+}
+
+#[test]
+fn zero_d_cut_is_rejected_everywhere() {
+    let pts = PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2);
+    let mut s = ClusterSession::build(&pts).unwrap();
+    assert!(matches!(s.density(0.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
+    assert!(matches!(
+        Dpc::new(DpcParams { d_cut: 0.0, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+        Err(DpcError::InvalidParam { name: "d_cut", .. })
+    ));
+    assert!(matches!(StreamingSession::new(2, 0.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
+}
+
+#[test]
+fn rho_min_above_max_density_marks_everything_noise() {
+    let mut rng = SplitMix64::new(88);
+    let pts = gen_clustered_points(&mut rng, 120, 2, 2, 50.0, 2.0);
+    let mut s = ClusterSession::build(&pts).unwrap();
+    let rho = s.density(4.0).unwrap();
+    let over = *rho.iter().max().unwrap() as f64 + 1.0;
+    s.dependents(DepAlgo::Priority).unwrap();
+    let out = s.cut(over, 5.0).unwrap();
+    assert_eq!(out.num_noise, pts.len());
+    assert_eq!(out.num_clusters, 0);
+    assert!(out.labels.iter().all(|&l| l == -1));
+    assert!(out.centers.is_empty());
+    assert!(out.dep.iter().all(|d| d.is_none()));
+}
+
+#[test]
+fn second_radius_invalidates_cached_dep_artifacts() {
+    let mut rng = SplitMix64::new(89);
+    let pts = gen_uniform_points(&mut rng, 100, 2, 30.0);
+    let mut s = ClusterSession::build(&pts).unwrap();
+    s.density(3.0).unwrap();
+    s.dependents(DepAlgo::Fenwick).unwrap();
+    s.cut(0.0, 5.0).unwrap();
+    // Re-density at a new radius: the active dependents stage is gone until
+    // recomputed, and the fresh stage must match a from-scratch run.
+    s.density(6.0).unwrap();
+    assert!(matches!(s.cut(0.0, 5.0), Err(DpcError::MissingStage { need: "dependents", .. })));
+    s.dependents(DepAlgo::Fenwick).unwrap();
+    let recut = s.cut(0.0, 5.0).unwrap();
+    let fresh = Dpc::new(DpcParams { d_cut: 6.0, rho_min: 0.0, delta_min: 5.0 })
+        .dep_algo(DepAlgo::Fenwick)
+        .run(&pts)
+        .unwrap();
+    assert_identical(&recut, &fresh, "post-invalidation recut");
+    let st = s.stats();
+    assert_eq!(st.density_computes, 2);
+    assert_eq!(st.dep_computes, 2);
+}
