@@ -2,17 +2,20 @@
 //! on simden (paper: 13.2x for priority, 8.8x for fenwick, 1.3x for the
 //! exact baseline at 30 cores / 60 HT).
 //!
-//! THIS CONTAINER HAS ONE PHYSICAL CORE, so wall-clock cannot show real
-//! speedup. This bench therefore reports BOTH:
-//!  1. wall-clock per thread count (expected ~flat here; on a multicore
-//!     machine it reproduces Figure 4b directly), and
-//!  2. a machine-independent *parallelism-structure* check: the fraction of
-//!     Step-2 work inside fully-parallel loops (per-algorithm), which is
-//!     what determines the speedup on real hardware. The sequential
-//!     insert loop of exact-baseline/incomplete caps their scalability
-//!     regardless of core count — the paper's central scalability argument.
+//! The substrate being measured is the work-stealing scheduler of
+//! DESIGN.md §Scheduler: per-thread-count runs swap the global pool via
+//! `parlay::set_threads` (safe mid-flight — each run completes on the pool
+//! it started on). On a multicore machine the wall-clock column reproduces
+//! Figure 4b directly; results go in EXPERIMENTS.md §Threads.
 //!
-//!   cargo bench --bench fig4b_threads
+//! ON A ONE-CORE CONTAINER wall-clock cannot show real speedup, so the
+//! bench also reports a machine-independent *parallelism-structure* check:
+//! the fraction of Step-2 work inside fully-parallel loops (per-algorithm),
+//! which is what determines the speedup on real hardware. The sequential
+//! insert loop of exact-baseline/incomplete caps their scalability
+//! regardless of core count — the paper's central scalability argument.
+//!
+//!   PARBENCH_THREADS=1,2,4,8 cargo bench --bench fig4b_threads
 
 use parcluster::bench::{fmt_secs, time_once, Table};
 use parcluster::datasets::synthetic;
@@ -40,7 +43,11 @@ fn main() {
     let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
 
     println!("# Figure 4b: wall-clock vs threads on simden n={n}");
-    println!("# NOTE: single-core container — see bench header; expect ~flat wall-clock here.");
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("# host parallelism: {cores} (speedup beyond it is not expected)");
+    if cores == 1 {
+        println!("# NOTE: single-core host — see bench header; expect ~flat wall-clock here.");
+    }
     for (algo, dalgo) in algos {
         let mut times = Vec::new();
         for &t in &threads {

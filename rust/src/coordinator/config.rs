@@ -89,8 +89,15 @@ impl CoordinatorConfig {
         Ok(cfg)
     }
 
-    /// Apply `PARCLUSTER_THREADS`-style env overrides.
+    /// Apply env overrides. `PALLAS_THREADS` (or the legacy
+    /// `PARCLUSTER_THREADS`) pins the compute pool's parallelism, parsed by
+    /// `parlay::pool::env_threads` — the same reader and policy the pool
+    /// itself uses for its default, so the knob means the same thing on
+    /// every path.
     pub fn with_env_overrides(mut self) -> Result<Self> {
+        if let Some(n) = crate::parlay::pool::env_threads() {
+            self.threads = n;
+        }
         if let Ok(v) = std::env::var("PARCLUSTER_BACKEND") {
             self.backend = parse_backend(&v)?;
         }

@@ -94,7 +94,7 @@ fn approx_density(pts: &PointSet, grid: &Grid, d_cut: f64) -> Vec<u32> {
     let ncells = grid.members.len();
     // Max Chebyshev ring whose centroids can be within d_cut: ceil(√d) + 1.
     let max_r = (d_cut / grid.side).ceil() as i64 + 1;
-    let cell_rho: Vec<u32> = parlay::par_map(ncells, |c| {
+    let cell_rho: Vec<u32> = parlay::par_map_grained(ncells, crate::dpc::QUERY_GRAIN, |c| {
         let cen = grid.centroid(c as u32);
         let mut count = 0u32;
         for r in 0..=max_r {
@@ -191,7 +191,11 @@ fn approx_dependent_one_deadline(
 fn approx_dependents(pts: &PointSet, grid: &Grid, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let n = pts.len();
     let max_extent = grid_max_extent(grid);
-    parlay::par_map(n, |i| approx_dependent_one(pts, grid, rho, rho_min, i, max_extent))
+    // Ring-expansion cost is heavily skewed (isolated points scan far), so
+    // use the fine query grain and let the stealer balance.
+    parlay::par_map_grained(n, crate::dpc::QUERY_GRAIN, |i| {
+        approx_dependent_one(pts, grid, rho, rho_min, i, max_extent)
+    })
 }
 
 /// Budgeted variant for the benches: returns `None` (the analog of the
@@ -252,7 +256,7 @@ pub fn run_approx_budgeted(pts: &PointSet, params: DpcParams, budget_s: f64) -> 
     use std::sync::atomic::{AtomicBool, Ordering};
     let cancelled = AtomicBool::new(false);
     let deadline = Instant::now();
-    let dep: Vec<Option<u32>> = parlay::par_map(n, |i| {
+    let dep: Vec<Option<u32>> = parlay::par_map_grained(n, crate::dpc::QUERY_GRAIN, |i| {
         if cancelled.load(Ordering::Relaxed) {
             return None;
         }

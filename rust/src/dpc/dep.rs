@@ -50,7 +50,7 @@ fn gammas(rho: &[u32]) -> Vec<u64> {
 pub fn dep_naive(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let n = pts.len();
     let gamma = gammas(rho);
-    parlay::par_map(n, |i| {
+    parlay::par_map_grained(n, crate::dpc::QUERY_GRAIN, |i| {
         if (rho[i] as f64) < rho_min {
             return None;
         }
@@ -120,7 +120,7 @@ pub fn dep_incomplete(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u
 pub fn dep_priority(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let tree = PriorityKdTree::build(pts, &gamma);
-    parlay::par_map(pts.len(), |i| {
+    parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
         if (rho[i] as f64) < rho_min {
             return None;
         }
@@ -133,7 +133,7 @@ pub fn dep_priority(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32
 pub fn dep_fenwick(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let fen = FenwickDep::build(pts, &gamma);
-    parlay::par_map(pts.len(), |i| {
+    parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
         if (rho[i] as f64) < rho_min {
             return None;
         }

@@ -195,13 +195,19 @@ impl Dpc {
     }
 }
 
+/// Grain for loops whose per-index body is a tree traversal: the cost is
+/// large and skewed (dense queries visit far more nodes), so chunks finer
+/// than [`parlay::auto_grain`]'s default give the work-stealing scheduler
+/// something to rebalance.
+pub(crate) const QUERY_GRAIN: usize = 64;
+
 /// Step 1: ρ for every point.
 pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32> {
     let r_sq = d_cut * d_cut;
     match algo {
         DensityAlgo::Naive => {
             let n = pts.len();
-            parlay::par_map(n, |i| {
+            parlay::par_map_grained(n, QUERY_GRAIN, |i| {
                 let q = pts.point(i);
                 let mut c = 0u32;
                 for j in 0..n {
@@ -215,7 +221,7 @@ pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32
         DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune => {
             let tree = KdTree::build(pts);
             let prune = algo == DensityAlgo::TreePruned;
-            parlay::par_map(pts.len(), |i| {
+            parlay::par_map_grained(pts.len(), QUERY_GRAIN, |i| {
                 let q = pts.point(i);
                 let c = if prune {
                     tree.range_count(q, r_sq, &mut NoStats)
@@ -235,7 +241,9 @@ pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32
             for &p in &order {
                 tree.insert(p);
             }
-            parlay::par_map(pts.len(), |i| tree.range_count(pts.point(i), r_sq, &mut NoStats) as u32)
+            parlay::par_map_grained(pts.len(), QUERY_GRAIN, |i| {
+                tree.range_count(pts.point(i), r_sq, &mut NoStats) as u32
+            })
         }
     }
 }

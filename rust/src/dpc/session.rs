@@ -150,7 +150,7 @@ impl<'p> ClusterSession<'p> {
                     let tree = &*self.tree.get_or_insert_with(|| KdTree::build(pts));
                     let r_sq = d_cut * d_cut;
                     let prune = self.density_algo == DensityAlgo::TreePruned;
-                    parlay::par_map(pts.len(), |i| {
+                    parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
                         let q = pts.point(i);
                         let c = if prune {
                             tree.range_count(q, r_sq, &mut NoStats)

@@ -239,7 +239,7 @@ impl StreamingSession {
             let np = &new_pts;
             // Each new point's ρ = count over the old forest + count over
             // the batch (self-inclusive via the batch tree).
-            let new_rho: Vec<u32> = parlay::par_map(b, |t| {
+            let new_rho: Vec<u32> = parlay::par_map_grained(b, crate::dpc::QUERY_GRAIN, |t| {
                 let q = np.point(old_n + t);
                 let mut c = batch_tree.range_count(q, r_sq, &mut NoStats);
                 for lv in levels {
@@ -252,7 +252,7 @@ impl StreamingSession {
             // adds commute, so the counts are exact and deterministic
             // without materializing every (batch, old) close pair at once.
             let bumped: Vec<AtomicU32> = (0..old_n).map(|_| AtomicU32::new(0)).collect();
-            parlay::par_for(b, |t| {
+            parlay::par_for_grained(b, crate::dpc::QUERY_GRAIN, |t| {
                 let q = np.point(old_n + t);
                 let mut hits = Vec::new();
                 for lv in levels {
@@ -300,7 +300,7 @@ impl StreamingSession {
             let levels = &self.levels;
             let g = &self.gamma;
             let dep = &self.dep;
-            parlay::par_map(total, |i| {
+            parlay::par_map_grained(total, crate::dpc::QUERY_GRAIN, |i| {
                 let q = pts.point(i);
                 let gi = g[i];
                 // A cached dependent that still outranks the point pins the

@@ -24,7 +24,9 @@ use crate::geom::{dist_sq, Bbox, PointSet};
 use crate::parlay;
 
 pub const LEAF_SIZE: usize = 16;
-/// Subtrees smaller than this build sequentially.
+/// Subtrees smaller than this build sequentially. With the work-stealing
+/// scheduler a fork is one deque push, so this floor only amortizes task
+/// allocation — steals are rare because thieves take the biggest subtrees.
 const BUILD_GRAIN: usize = 2048;
 const NONE: u32 = u32::MAX;
 
@@ -138,6 +140,10 @@ impl<'p> KdTree<'p> {
                 parent_ptr: if with_maps { tree.parent.as_mut_ptr() as usize } else { 0 },
                 leaf_ptr: if with_maps { tree.leaf_of_point.as_mut_ptr() as usize } else { 0 },
                 d,
+                // Resolved once: the recursion forks on every node above
+                // BUILD_GRAIN, and re-reading the global costs an RwLock
+                // acquisition per fork.
+                pool: parlay::pool::global(),
             };
             b.build_rec(&mut ids, 0, 0, NONE);
         }
@@ -469,6 +475,7 @@ struct Builder<'p> {
     parent_ptr: usize,
     leaf_ptr: usize,
     d: usize,
+    pool: std::sync::Arc<parlay::Pool>,
 }
 
 unsafe impl Sync for Builder<'_> {}
@@ -530,8 +537,7 @@ impl Builder<'_> {
             };
         }
         if m >= BUILD_GRAIN {
-            let pool = parlay::pool::global();
-            pool.join(
+            self.pool.join(
                 || self.build_rec(left_ids, perm_off, left_slot, slot as u32),
                 || self.build_rec(right_ids, perm_off + mid, right_slot, slot as u32),
             );
@@ -546,10 +552,11 @@ impl Builder<'_> {
         if m < 65_536 {
             return self.pts.bbox_of(ids);
         }
-        // Parallel chunked reduce for very large nodes.
+        // Parallel chunked reduce for very large nodes. Grain 1: a few heavy
+        // chunks would collapse to one sequential task under the auto grain.
         let nchunks = 16;
         let chunk = m.div_ceil(nchunks);
-        let boxes: Vec<Bbox> = parlay::par_map(nchunks, |c| {
+        let boxes: Vec<Bbox> = parlay::par_map_grained(nchunks, 1, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             self.pts.bbox_of(&ids[lo..hi.max(lo)])

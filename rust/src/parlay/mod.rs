@@ -5,23 +5,37 @@
 //! nor rayon is available in this offline image, so this module rebuilds the
 //! required subset from scratch:
 //!
-//! - [`pool`]: a fork-join thread pool with *help-first* joins (a blocked
-//!   joiner executes queued tasks instead of sleeping, so nested parallelism
-//!   — e.g. the recursive kd-tree build — cannot deadlock).
+//! - [`pool`]: a randomized work-stealing fork-join scheduler — per-worker
+//!   Chase–Lev deques (LIFO local push/pop, FIFO steals), a global injector
+//!   for external submissions and overflow, parking for idle workers, and
+//!   *help-first* joins (a blocked joiner executes pending tasks instead of
+//!   sleeping, so nested parallelism — e.g. the recursive kd-tree build —
+//!   cannot deadlock). Design notes: DESIGN.md §Scheduler.
 //! - [`ops`]: `par_for`, `par_map`, `par_reduce`, `par_scan` (prefix sums),
 //!   `par_filter`/`pack`, and the paper's `WRITE-MIN` priority concurrent
-//!   write [60].
+//!   write [60]. Loops split eagerly down to a grain auto-tuned from the
+//!   pool's thread count ([`ops::auto_grain`]); pass an explicit grain for
+//!   skewed or expensive per-index work.
 //! - [`sort`]: parallel merge sort and a parallel LSD radix sort (used for
 //!   the density sort in `FENWICK-DEPENDENT-POINT`, Algorithm 2 line 9).
 //!
-//! All primitives degrade to efficient sequential code when the pool has a
-//! single thread (the container this repo was built in has one core; see
-//! `EXPERIMENTS.md` §Threads for how parallel scalability is evidenced).
+//! All primitives degrade to deterministic sequential code when the pool has
+//! a single thread (`PALLAS_THREADS=1`), and every *use in this crate*
+//! produces thread-count independent output: per-index loop bodies are pure,
+//! scans are exact integer math, sorts are stable, and concurrent
+//! minima/unions are order-independent or canonicalized — the stress suite
+//! (`rust/tests/parlay_stress.rs`) and the conformance suite pin this. (The
+//! primitives alone do not guarantee it: an auto-tuned grain varies with the
+//! configured thread count, so a chunk-order-sensitive float reduction would
+//! need an explicit grain — see [`ops::par_for_grained`].)
 
 pub mod pool;
 pub mod ops;
 pub mod sort;
 
-pub use ops::{par_for, par_for_grained, par_map, par_reduce, par_scan_add, par_filter, WriteMinF64, WriteMinPair};
-pub use pool::{Pool, set_threads, num_threads};
-pub use sort::{par_sort_by_key, par_radix_sort_u64, par_sort_unstable_by};
+pub use ops::{
+    auto_grain, par_chunks, par_filter, par_for, par_for_grained, par_map, par_map_grained,
+    par_reduce, par_scan_add, WriteMinF64, WriteMinPair,
+};
+pub use pool::{num_threads, set_threads, Pool};
+pub use sort::{par_radix_sort_u64, par_sort_by_key, par_sort_unstable_by};

@@ -6,26 +6,44 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::pool;
 
-/// Default grain: coarse enough that task overhead is amortized, fine enough
-/// to load-balance. Tuned in §Perf (EXPERIMENTS.md).
-fn auto_grain(n: usize, threads: usize) -> usize {
-    (n / (8 * threads.max(1))).max(256).min(n.max(1))
+/// Tasks the eager binary splitter aims to create per worker: enough slack
+/// for the work-stealing scheduler to balance uneven chunks, few enough that
+/// fork overhead stays negligible.
+const TASKS_PER_THREAD: usize = 8;
+
+/// Floor below which splitting further costs more than it balances, for
+/// cheap per-index bodies. Loops with expensive bodies (tree queries) pass an
+/// explicit finer grain instead.
+const MIN_GRAIN: usize = 256;
+
+/// Automatic granularity: the chunk size the splitter stops at, tuned from
+/// the pool's thread count. `threads == 1` collapses to one sequential chunk.
+/// Tuned in §Perf (EXPERIMENTS.md).
+pub fn auto_grain(n: usize, threads: usize) -> usize {
+    if threads <= 1 {
+        return n.max(1);
+    }
+    (n / (TASKS_PER_THREAD * threads)).max(MIN_GRAIN).min(n.max(1))
 }
 
-/// Parallel for over `0..n` with an automatically chosen grain.
+/// Parallel for over `0..n`; grain auto-tuned from the pool's thread count.
 pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
-    let p = pool::global();
-    let grain = auto_grain(n, p.threads());
-    p.for_range(0, n, grain, &|lo, hi| {
-        for i in lo..hi {
-            f(i);
-        }
-    });
+    par_for_grained(n, 0, f)
 }
 
-/// Parallel for over `0..n` with an explicit grain size.
+/// Parallel for over `0..n` with an explicit grain size — the default path
+/// every loop entry point funnels into. `grain == 0` means auto-tune from
+/// `num_threads` (see [`auto_grain`]). The split schedule is eager (forks are
+/// unconditional down to the grain), so for a given grain the chunk
+/// boundaries do not depend on stealing or on how many workers show up.
+/// An **auto** grain, however, is derived from the configured thread count,
+/// so its chunk boundaries change with `set_threads`: callers whose output
+/// depends on chunk-local evaluation order (e.g. a float reduction) must
+/// pass an explicit grain; per-index-pure loops (every caller in this crate)
+/// are unaffected.
 pub fn par_for_grained<F: Fn(usize) + Sync>(n: usize, grain: usize, f: F) {
     let p = pool::global();
+    let grain = if grain == 0 { auto_grain(n, p.threads()) } else { grain };
     p.for_range(0, n, grain.max(1), &|lo, hi| {
         for i in lo..hi {
             f(i);
@@ -35,13 +53,23 @@ pub fn par_for_grained<F: Fn(usize) + Sync>(n: usize, grain: usize, f: F) {
 
 /// Parallel chunked for: `f(lo, hi)` is called on disjoint chunks covering
 /// `0..n`. Lets callers hoist per-chunk state (e.g. reused query stacks).
+/// `grain == 0` auto-tunes.
 pub fn par_chunks<F: Fn(usize, usize) + Sync>(n: usize, grain: usize, f: F) {
     let p = pool::global();
+    let grain = if grain == 0 { auto_grain(n, p.threads()) } else { grain };
     p.for_range(0, n, grain.max(1), &f);
 }
 
-/// Parallel map `0..n -> Vec<T>`.
+/// Parallel map `0..n -> Vec<T>`; grain auto-tuned.
 pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    par_map_grained(n, 0, f)
+}
+
+/// Parallel map with an explicit grain (`0` = auto). Query-heavy loops (kd
+/// traversals, priority-NN) pass a finer grain than [`auto_grain`]'s default:
+/// their per-index cost is large and skewed, so smaller chunks give the
+/// stealer something to balance.
+pub fn par_map_grained<T: Send, F: Fn(usize) -> T + Sync>(n: usize, grain: usize, f: F) -> Vec<T> {
     let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
     // SAFETY: every slot in 0..n is written exactly once below before we
     // assume initialization (for_range covers 0..n with disjoint chunks).
@@ -51,7 +79,7 @@ pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     }
     {
         let slots = out.as_mut_ptr() as usize;
-        par_for(n, |i| {
+        par_for_grained(n, grain, |i| {
             let p = slots as *mut MaybeUninit<T>;
             // SAFETY: disjoint indices; each written once.
             unsafe {
@@ -74,7 +102,9 @@ where
     let p = pool::global();
     let grain = auto_grain(n, p.threads());
     let nchunks = n.div_ceil(grain.max(1)).max(1);
-    let partials: Vec<T> = par_map(nchunks, |c| {
+    // Grain 1: nchunks is a few heavy items; the auto grain's floor would
+    // collapse them into one sequential task.
+    let partials: Vec<T> = par_map_grained(nchunks, 1, |c| {
         let lo = c * grain;
         let hi = ((c + 1) * grain).min(n);
         let mut acc = id.clone();
@@ -100,8 +130,9 @@ pub fn par_scan_add(vals: &[usize]) -> (Vec<usize>, usize) {
     let p = pool::global();
     let grain = auto_grain(n, p.threads());
     let nchunks = n.div_ceil(grain);
-    // Pass 1: per-chunk sums.
-    let sums: Vec<usize> = par_map(nchunks, |c| {
+    // Pass 1: per-chunk sums. Grain 1 for the same reason as par_reduce —
+    // nchunks heavy items must not collapse to one sequential task.
+    let sums: Vec<usize> = par_map_grained(nchunks, 1, |c| {
         let lo = c * grain;
         let hi = ((c + 1) * grain).min(n);
         vals[lo..hi].iter().sum()

@@ -1,105 +1,511 @@
-//! Fork-join thread pool with help-first joins.
+//! Work-stealing fork-join scheduler (DESIGN.md §Scheduler).
 //!
-//! Design: a global FIFO injector queue guarded by a mutex plus a condvar.
-//! `join(a, b)` pushes `b` as a claimable task, runs `a` inline, then either
-//! claims and runs `b` itself or *helps* (executes other queued tasks) until
-//! `b` completes. Help-first joining makes nested fork-join (the recursive
-//! kd-tree builds in this crate) deadlock-free with a bounded worker count.
+//! ParlayLib-style runtime underneath every parallel primitive in this crate.
+//! The span bounds of the paper's algorithms (O(log n log log n) for Step 2)
+//! assume a randomized work-stealing scheduler; the previous implementation —
+//! a single mutex-guarded FIFO queue — serialized every `join` on one lock.
+//! This version is the real thing:
 //!
-//! This is deliberately simple (single shared queue, no per-worker deques):
-//! the algorithms in this crate fork at coarse grains, so queue contention is
-//! negligible relative to the work per task (verified in §Perf of
-//! EXPERIMENTS.md).
+//! - **Per-worker Chase–Lev deques.** Each worker owns a bounded lock-free
+//!   deque: it pushes and pops forked tasks LIFO at the bottom (preserving
+//!   the sequential execution order, so working sets stay cache-hot), while
+//!   thieves steal FIFO from the top (taking the *oldest* — i.e. biggest —
+//!   subtree of the recursion, which minimizes steal frequency). Orderings
+//!   follow Lê, Pop, Cohen, Zappa Nardelli, "Correct and Efficient
+//!   Work-Stealing for Weak Memory Models" (PPoPP '13).
+//! - **Global injector.** External threads (anything that is not a pool
+//!   worker, e.g. the coordinator's job threads) submit through a
+//!   mutex-guarded injector queue; workers drain it when their own deque is
+//!   empty. Deque overflow also spills here, so pushes never block.
+//! - **Randomized stealing with backoff.** An out-of-work worker scans the
+//!   injector then sweeps victims starting at a random offset; failed sweeps
+//!   back off exponentially (spin, then yield) before re-scanning.
+//! - **Parking.** After repeated empty sweeps a worker sleeps on a condvar
+//!   instead of burning a core. The epoch-counter protocol in [`Sleep`]
+//!   makes lost wakeups impossible (proof at [`Shared::unpark_one`]).
+//! - **Help-first joins.** `join(a, b)` forks `b`, runs `a` inline, then — if
+//!   `b` was stolen — *executes other pending tasks* while waiting instead of
+//!   blocking. Every thread waiting on a join is therefore still a worker, so
+//!   nested fork-join (the recursive kd-tree builds) cannot deadlock at any
+//!   worker count: a task's fork is always runnable by *someone*, including
+//!   the joiner itself.
+//! - **Panic propagation.** Both sides of a `join` run under `catch_unwind`:
+//!   a panicking forked task still reaches its DONE state (no hung joiner,
+//!   no dead worker), `join` always waits for the forked task before
+//!   unwinding (its closure borrows the joiner's stack), and the panic
+//!   resurfaces at the joiner via `resume_unwind`.
+//! - **Deterministic single-thread mode.** `threads == 1` spawns no workers
+//!   and runs both sides of every `join` inline in program order — bit-exact
+//!   reproducible scheduling for tests (`PALLAS_THREADS=1`).
 
+use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{fence, AtomicBool, AtomicIsize, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread;
 
-use once_cell::sync::Lazy;
+// ---------------------------------------------------------------------------
+// Tasks
+// ---------------------------------------------------------------------------
 
-/// A unit of queued work. The closure is type-erased and lifetime-erased;
-/// safety relies on `join` not returning until the task has run (see the
-/// `Safety` note in [`Pool::join`]).
+const PENDING: u8 = 0;
+const RUNNING: u8 = 1;
+const DONE: u8 = 2;
+
+/// A unit of forked work. The closure is type- and lifetime-erased; safety
+/// relies on `join` not returning until the task has run (see the safety
+/// discussion in [`Pool::join`]).
+///
+/// Claiming is a `PENDING -> RUNNING` CAS on `state`, so a task is executed
+/// exactly once no matter how many hands it passes through (own deque, a
+/// thief, the injector after an overflow spill).
 struct Task {
-    func: Mutex<Option<Box<dyn FnOnce() + Send + 'static>>>,
-    done: AtomicBool,
+    state: AtomicU8,
+    func: UnsafeCell<Option<Box<dyn FnOnce() + Send + 'static>>>,
 }
+
+// SAFETY: `func` is only accessed by the single thread that wins the
+// PENDING -> RUNNING CAS in `run`; every other thread only touches `state`.
+unsafe impl Sync for Task {}
 
 impl Task {
     fn new(f: Box<dyn FnOnce() + Send + 'static>) -> Arc<Self> {
-        Arc::new(Task { func: Mutex::new(Some(f)), done: AtomicBool::new(false) })
+        Arc::new(Task { state: AtomicU8::new(PENDING), func: UnsafeCell::new(Some(f)) })
     }
 
-    /// Attempt to claim and run the task. Returns true if this call ran it.
+    /// Attempt to claim and run the task. Returns true iff this call ran it.
+    ///
+    /// Ordering audit: success ordering is `Acquire` so the claimer observes
+    /// the closure written before the task was published (the publish edge
+    /// itself is the deque's `bottom` Release store or the injector mutex;
+    /// the Acquire here additionally orders any re-claim attempt after a
+    /// failed one). Failure ordering `Relaxed`: a loser takes no action that
+    /// depends on the task's contents.
     fn run(&self) -> bool {
-        let f = self.func.lock().unwrap().take();
-        match f {
-            Some(f) => {
-                f();
-                self.done.store(true, Ordering::Release);
-                true
-            }
-            None => false,
+        if self.state.compare_exchange(PENDING, RUNNING, Ordering::Acquire, Ordering::Relaxed).is_err() {
+            return false;
         }
+        // SAFETY: winning the CAS grants exclusive access to `func`.
+        let f = unsafe { (*self.func.get()).take() }.expect("claimed task has a closure");
+        f();
+        // Release: everything the closure wrote (e.g. the join's result slot)
+        // happens-before a joiner's Acquire load that observes DONE.
+        self.state.store(DONE, Ordering::Release);
+        true
     }
 
     fn is_done(&self) -> bool {
-        self.done.load(Ordering::Acquire)
+        self.state.load(Ordering::Acquire) == DONE
     }
 }
 
-struct Shared {
-    queue: Mutex<VecDeque<Arc<Task>>>,
-    cond: Condvar,
-    shutdown: AtomicBool,
+// ---------------------------------------------------------------------------
+// Chase–Lev deque
+// ---------------------------------------------------------------------------
+
+/// Slots per worker deque (power of two). Outstanding tasks per worker are
+/// O(fork depth) — one per live `join` frame — so 1024 is far above any real
+/// recursion in this crate; on overflow the push spills to the injector, so
+/// capacity is a performance knob, never a correctness one.
+const DEQUE_CAP: usize = 1024;
+
+enum Steal {
+    Empty,
+    Retry,
+    Task(Arc<Task>),
 }
 
-/// A fork-join thread pool. See module docs.
-pub struct Pool {
-    shared: Arc<Shared>,
-    handles: Vec<thread::JoinHandle<()>>,
+/// Bounded Chase–Lev work-stealing deque of `Arc<Task>`.
+///
+/// The owner pushes and pops at `bottom` (LIFO); thieves CAS `top` upward
+/// (FIFO). Slots store `Arc::into_raw` pointers as `usize`; each index in
+/// `top..bottom` is handed to exactly one consumer (the owner's pop or the
+/// unique thief that wins the `top` CAS), which takes over the refcount.
+///
+/// Ordering audit (PPoPP '13, Fig. 1, adapted to a fixed ring):
+/// - `push` publishes the slot write with a Release store of `bottom`;
+///   thieves read `bottom` with Acquire, so a stolen slot's contents (and the
+///   closure behind the pointer) are visible.
+/// - `pop` decrements `bottom` then issues a SeqCst fence before reading
+///   `top`: the decrement must be globally visible before the owner decides
+///   the deque is non-empty, or owner and thief could both take the last
+///   element. The thief's symmetric SeqCst fence sits between its `top` and
+///   `bottom` loads.
+/// - Both "take the last element" CASes on `top` are SeqCst, forming a total
+///   order that arbitrates the owner/thief race.
+struct Deque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    slots: Box<[AtomicUsize]>,
+}
+
+impl Deque {
+    fn new() -> Self {
+        let slots: Vec<AtomicUsize> = (0..DEQUE_CAP).map(|_| AtomicUsize::new(0)).collect();
+        Deque { top: AtomicIsize::new(0), bottom: AtomicIsize::new(0), slots: slots.into_boxed_slice() }
+    }
+
+    #[inline]
+    fn slot(&self, i: isize) -> &AtomicUsize {
+        &self.slots[(i as usize) & (DEQUE_CAP - 1)]
+    }
+
+    /// Owner-only. Returns the task back on overflow (caller spills it to the
+    /// injector). Never overwrites an unconsumed slot: the fullness check
+    /// against `top` guarantees writes stay ≥ DEQUE_CAP ahead of any index a
+    /// thief could still claim.
+    fn push(&self, task: Arc<Task>) -> Result<(), Arc<Task>> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t >= DEQUE_CAP as isize {
+            return Err(task);
+        }
+        self.slot(b).store(Arc::into_raw(task) as usize, Ordering::Relaxed);
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only LIFO pop.
+    fn pop(&self) -> Option<Arc<Task>> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Deque was empty; restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let raw = self.slot(b).load(Ordering::Relaxed) as *const Task;
+        if t == b {
+            // Last element: race thieves for it via `top`.
+            let won = self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                // The winning thief owns the refcount at this index.
+                return None;
+            }
+        }
+        // SAFETY: either b > t (thieves can never advance `top` to `b`
+        // because they observe our decremented `bottom` after the fences), or
+        // we won the CAS above — both make us the unique consumer of index b.
+        Some(unsafe { Arc::from_raw(raw) })
+    }
+
+    /// Any thread. FIFO steal from the top.
+    fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let raw = self.slot(t).load(Ordering::Relaxed) as *const Task;
+        if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_err() {
+            // Lost the race (to the owner's pop of a last element or another
+            // thief). `raw` may be stale — discard it unconsumed.
+            return Steal::Retry;
+        }
+        // SAFETY: winning the CAS at `t` makes us the unique consumer of that
+        // index. The owner cannot have overwritten the slot: a colliding push
+        // requires bottom - top >= DEQUE_CAP, which push refuses, so any
+        // overwrite implies `top` already moved past `t` — and then our CAS
+        // would have failed.
+        Steal::Task(unsafe { Arc::from_raw(raw) })
+    }
+}
+
+impl Drop for Deque {
+    fn drop(&mut self) {
+        // `&mut self`: no concurrent owner or thieves. Reclaim unconsumed
+        // refcounts (possible only if the pool is torn down with tasks never
+        // joined — defensive; join semantics prevent it in practice).
+        let t = *self.top.get_mut();
+        let b = *self.bottom.get_mut();
+        for i in t..b {
+            let raw = self.slots[(i as usize) & (DEQUE_CAP - 1)].load(Ordering::Relaxed) as *const Task;
+            // SAFETY: indices in top..bottom each still own one refcount.
+            drop(unsafe { Arc::from_raw(raw) });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared pool state, parking, and the worker loop
+// ---------------------------------------------------------------------------
+
+/// Parking state. Workers sleep here after `PARK_AFTER_SCANS` empty sweeps.
+///
+/// The protocol is an eventcount: `epoch` is bumped on every wake signal, and
+/// a worker only commits to sleeping if the epoch has not moved since *before*
+/// its last (failed) scan for work. See [`Shared::unpark_one`] for the
+/// lost-wakeup proof.
+struct Sleep {
+    lock: Mutex<()>,
+    cv: Condvar,
+    epoch: AtomicUsize,
+    sleepers: AtomicUsize,
+}
+
+/// Empty find_task sweeps (with exponential spin/yield backoff between them)
+/// before a worker parks.
+const PARK_AFTER_SCANS: u32 = 16;
+
+struct Shared {
+    /// One deque per spawned worker (the external caller has none and uses
+    /// the injector).
+    deques: Box<[Deque]>,
+    /// External submissions and deque-overflow spill.
+    injector: Mutex<VecDeque<Arc<Task>>>,
+    /// Mirror of `injector.len()`, maintained under the injector lock and
+    /// read without it: lets the (very hot) empty-injector path of
+    /// `find_task` skip the mutex entirely, so spinning workers/joiners
+    /// don't serialize on it. Approximate by design — a racing push is
+    /// discovered on the next scan, and the pusher's epoch bump prevents a
+    /// parked miss.
+    injector_len: AtomicUsize,
+    sleep: Sleep,
+    shutdown: AtomicBool,
+    /// Total parallelism (workers + the participating caller).
     threads: usize,
 }
 
+impl Shared {
+    /// Append to the injector (external submission or deque-overflow spill).
+    fn inject(&self, t: Arc<Task>) {
+        let mut q = self.injector.lock().unwrap();
+        q.push_back(t);
+        self.injector_len.store(q.len(), Ordering::Relaxed);
+    }
+
+    /// Find one runnable task: own deque (LIFO), then the injector, then
+    /// randomized steal sweeps over the other workers' deques.
+    fn find_task(&self, me: Option<usize>, rng: &mut u64) -> Option<Arc<Task>> {
+        if let Some(i) = me {
+            if let Some(t) = self.deques[i].pop() {
+                return Some(t);
+            }
+        }
+        if self.injector_len.load(Ordering::Relaxed) > 0 {
+            let mut q = self.injector.lock().unwrap();
+            let t = q.pop_front();
+            self.injector_len.store(q.len(), Ordering::Relaxed);
+            if let Some(t) = t {
+                return Some(t);
+            }
+        }
+        let n = self.deques.len();
+        if n == 0 {
+            return None;
+        }
+        // Up to 4 sweeps; keep sweeping only while some victim said Retry
+        // (a racing operation we may be able to win next time around).
+        for _ in 0..4 {
+            let start = (xorshift(rng) as usize) % n;
+            let mut saw_retry = false;
+            for k in 0..n {
+                let v = (start + k) % n;
+                if Some(v) == me {
+                    continue;
+                }
+                match self.deques[v].steal() {
+                    Steal::Task(t) => return Some(t),
+                    Steal::Retry => saw_retry = true,
+                    Steal::Empty => {}
+                }
+            }
+            if !saw_retry {
+                break;
+            }
+        }
+        None
+    }
+
+    /// Wake (at most) one parked worker because one task became available.
+    ///
+    /// Lost-wakeup proof sketch: the bump of `epoch` comes FIRST, and both it
+    /// and the parking worker's re-check are SeqCst, so they share one total
+    /// order. If a worker commits to sleeping (re-check saw the old epoch),
+    /// its re-check precedes our bump in that order; its `sleepers` increment
+    /// precedes its re-check; therefore our `sleepers` load (after the bump)
+    /// observes it and we take the lock and notify. Conversely if the worker
+    /// observes the bumped epoch it aborts the park and re-scans — and the
+    /// task was already published before `unpark_one` was called. The lock is
+    /// held while notifying so the signal cannot fire between the re-check
+    /// and the `Condvar::wait` (the parker holds the lock across that span).
+    fn unpark_one(&self) {
+        self.sleep.epoch.fetch_add(1, Ordering::SeqCst);
+        if self.sleep.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep.lock.lock().unwrap();
+            self.sleep.cv.notify_one();
+        }
+    }
+
+    /// Wake every parked worker (shutdown).
+    fn wake_all(&self) {
+        self.sleep.epoch.fetch_add(1, Ordering::SeqCst);
+        let _g = self.sleep.lock.lock().unwrap();
+        self.sleep.cv.notify_all();
+    }
+}
+
+thread_local! {
+    /// (address of the `Shared` this thread is a worker of, worker index).
+    /// The address cannot be stale-reused while the thread lives: each worker
+    /// holds an `Arc<Shared>` for its entire lifetime.
+    static WORKER: Cell<(usize, usize)> = const { Cell::new((0, usize::MAX)) };
+}
+
+#[inline]
+fn xorshift(s: &mut u64) -> u64 {
+    let mut x = *s;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *s = x;
+    x
+}
+
+fn worker_loop(shared: &Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set((Arc::as_ptr(shared) as usize, idx)));
+    let mut rng = 0x9E37_79B9_7F4A_7C15u64 ^ ((idx as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    let mut idle: u32 = 0;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Epoch is sampled BEFORE the scan: if a task is published after the
+        // scan misses it, the publisher's epoch bump makes the park abort.
+        let epoch = shared.sleep.epoch.load(Ordering::SeqCst);
+        if let Some(t) = shared.find_task(Some(idx), &mut rng) {
+            idle = 0;
+            t.run();
+            continue;
+        }
+        idle += 1;
+        if idle < PARK_AFTER_SCANS {
+            // Exponential backoff: spin briefly, then start yielding.
+            for _ in 0..(1u32 << idle.min(6)) {
+                std::hint::spin_loop();
+            }
+            if idle > 4 {
+                thread::yield_now();
+            }
+            continue;
+        }
+        idle = 0;
+        // Park. Order matters: advertise sleeper intent, then re-check the
+        // epoch under the lock (see unpark_one).
+        shared.sleep.sleepers.fetch_add(1, Ordering::SeqCst);
+        let guard = shared.sleep.lock.lock().unwrap();
+        if shared.sleep.epoch.load(Ordering::SeqCst) == epoch && !shared.shutdown.load(Ordering::Acquire) {
+            drop(shared.sleep.cv.wait(guard).unwrap());
+        } else {
+            drop(guard);
+        }
+        shared.sleep.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool
+// ---------------------------------------------------------------------------
+
+/// A work-stealing fork-join pool. See module docs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// Worker stack size: the kd-tree/pskd builds and deep help-first chains
+/// recurse; match the default main-thread stack instead of the 2 MiB thread
+/// default.
+const WORKER_STACK: usize = 8 << 20;
+
 impl Pool {
     /// Create a pool with `threads` total parallelism (including the caller).
-    /// `threads == 1` means fully sequential: no worker threads are spawned
-    /// and `join` runs both closures inline.
+    /// `threads == 1` is the deterministic sequential mode: no workers are
+    /// spawned and `join` runs both closures inline in program order.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
+        let nworkers = threads - 1;
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cond: Condvar::new(),
+            deques: (0..nworkers).map(|_| Deque::new()).collect::<Vec<_>>().into_boxed_slice(),
+            injector: Mutex::new(VecDeque::new()),
+            injector_len: AtomicUsize::new(0),
+            sleep: Sleep {
+                lock: Mutex::new(()),
+                cv: Condvar::new(),
+                epoch: AtomicUsize::new(0),
+                sleepers: AtomicUsize::new(0),
+            },
             shutdown: AtomicBool::new(false),
+            threads,
         });
-        // The caller participates, so spawn threads-1 workers.
-        let handles = (1..threads)
+        let handles = (0..nworkers)
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 thread::Builder::new()
                     .name(format!("parlay-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .stack_size(WORKER_STACK)
+                    .spawn(move || worker_loop(&sh, i))
                     .expect("spawn worker")
             })
             .collect();
-        Pool { shared, handles, threads }
+        Pool { shared, handles }
     }
 
     /// Total parallelism of this pool (worker threads + caller).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.shared.threads
     }
 
-    fn push(&self, t: Arc<Task>) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(t);
-        drop(q);
-        self.shared.cond.notify_one();
+    /// This thread's worker index in `self`, if it is one of our workers.
+    fn worker_index(&self) -> Option<usize> {
+        let (addr, idx) = WORKER.with(|w| w.get());
+        if addr == Arc::as_ptr(&self.shared) as usize && idx < self.shared.deques.len() {
+            Some(idx)
+        } else {
+            None
+        }
     }
 
-    fn try_pop(&self) -> Option<Arc<Task>> {
-        self.shared.queue.lock().unwrap().pop_front()
+    /// Fork `task`: workers push onto their own deque (LIFO end), external
+    /// threads and deque overflow go through the injector.
+    fn push_task(&self, task: Arc<Task>) {
+        let spilled = match self.worker_index() {
+            Some(i) => self.shared.deques[i].push(task).err(),
+            None => Some(task),
+        };
+        if let Some(t) = spilled {
+            self.shared.inject(t);
+        }
+        self.shared.unpark_one();
+    }
+
+    /// Help-first wait: execute other pending tasks until `task` completes.
+    fn help_until(&self, task: &Task) {
+        let me = self.worker_index();
+        let mut rng = 0xD1B5_4A32_D192_ED03u64 ^ (task as *const Task as usize as u64);
+        let mut idle: u32 = 0;
+        while !task.is_done() {
+            if let Some(t) = self.shared.find_task(me, &mut rng) {
+                t.run();
+                idle = 0;
+            } else {
+                // Nothing to help with: the task is running elsewhere. Spin
+                // with backoff — never park, completion is imminent and there
+                // is no wake signal tied to a specific task.
+                idle = (idle + 1).min(10);
+                for _ in 0..(1u32 << idle.min(6)) {
+                    std::hint::spin_loop();
+                }
+                if idle > 3 {
+                    thread::yield_now();
+                }
+            }
+        }
     }
 
     /// Run `a` and `b`, potentially in parallel. Both have completed when
@@ -120,45 +526,89 @@ impl Pool {
         RA: Send + 'a,
         RB: Send + 'a,
     {
-        if self.threads == 1 {
+        if self.shared.threads == 1 {
+            // Deterministic sequential mode.
             return (a(), b());
         }
-        let mut rb: Option<RB> = None;
+        // Unwind safety: both closures run under `catch_unwind` so that
+        // (1) a panicking forked task still reaches DONE — a joiner spinning
+        //     on `is_done` would otherwise hang forever, and the panic would
+        //     kill the worker thread that happened to steal the task;
+        // (2) a panic in `a` cannot unwind out of `join` while the
+        //     lifetime-erased task still holds borrows into this stack frame
+        //     — we always wait for `b` before resuming the panic.
+        let mut rb: Option<std::thread::Result<RB>> = None;
         // Raw pointer (not a borrow) so `rb` stays movable after the task
         // finishes; Send-wrapped for the closure.
         struct SendPtr<T>(*mut T);
         unsafe impl<T> Send for SendPtr<T> {}
-        let rb_ptr = SendPtr(&mut rb as *mut Option<RB>);
+        let rb_ptr = SendPtr(&mut rb as *mut Option<std::thread::Result<RB>>);
         let bf: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
             let rb_ptr = rb_ptr;
+            let r = catch_unwind(AssertUnwindSafe(b));
             // SAFETY: `rb` outlives the task (join blocks until done).
             unsafe {
-                *rb_ptr.0 = Some(b());
+                *rb_ptr.0 = Some(r);
             }
         });
-        // SAFETY: `task` is fully executed (or executed by us below) before
-        // `join` returns; all captured borrows live at least that long
-        // because we do not return until `task.is_done()`.
+        // SAFETY: the task is fully executed before `join` returns; all
+        // captured borrows live at least that long because we do not return
+        // until `task.is_done()` (or we ran it ourselves).
         let bf: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(bf) };
         let task = Task::new(bf);
-        self.push(Arc::clone(&task));
-        let ra = a();
-        // Try to run b ourselves; if a worker already claimed it, help with
-        // other tasks until it completes.
-        if !task.run() {
-            while !task.is_done() {
-                if let Some(other) = self.try_pop() {
-                    other.run();
-                } else {
-                    thread::yield_now();
+        self.push_task(Arc::clone(&task));
+        let ra = catch_unwind(AssertUnwindSafe(a));
+        // Fast path: `b` is usually still at the bottom of our own deque
+        // (LIFO — everything `a` forked has been consumed by the nesting
+        // discipline), so pop it and run it inline.
+        match self.worker_index() {
+            Some(i) => match self.shared.deques[i].pop() {
+                Some(t) if Arc::ptr_eq(&t, &task) => {
+                    t.run();
+                }
+                Some(t) => {
+                    // `b` is elsewhere (stolen, or spilled to the injector on
+                    // overflow), so the bottom held an *ancestor* join's
+                    // fork. Re-pushing restores it to exactly the position it
+                    // was popped from; the epoch bump upholds the "every
+                    // publication wakes a sleeper" invariant (a worker that
+                    // parked during the pop→push window would otherwise
+                    // sleep through a stealable fork). Then help until `b`
+                    // completes.
+                    if let Err(t) = self.shared.deques[i].push(t) {
+                        self.shared.inject(t);
+                    }
+                    self.shared.unpark_one();
+                    self.help_until(&task);
+                }
+                None => self.help_until(&task),
+            },
+            // External joiner: `b` went through the injector; help (the scan
+            // checks the injector first, so we usually run `b` ourselves).
+            None => {
+                if !task.run() {
+                    self.help_until(&task);
                 }
             }
         }
-        (ra, rb.expect("join: task b did not produce a result"))
+        debug_assert!(task.is_done());
+        let rb = rb.expect("join: task b did not produce a result");
+        match (ra, rb) {
+            (Ok(ra), Ok(rb)) => (ra, rb),
+            // `a`'s panic wins if both sides panicked (its payload is the one
+            // a sequential execution would have surfaced first).
+            (Err(p), _) | (Ok(_), Err(p)) => resume_unwind(p),
+        }
     }
 
-    /// Recursive binary split of `[lo, hi)` down to `grain`-sized chunks,
-    /// each processed by `f(chunk_lo, chunk_hi)`.
+    /// Eager binary splitting of `[lo, hi)` down to `grain`-sized chunks,
+    /// each processed by `f(chunk_lo, chunk_hi)`. Splits are forked
+    /// unconditionally (not steal-triggered), so for a *fixed* grain the
+    /// chunk boundaries are independent of how many workers show up or what
+    /// gets stolen. Note the caveat: a grain *derived from the thread count*
+    /// (`ops::auto_grain`) changes boundaries when `set_threads` does —
+    /// callers whose output depends on chunk-local association order (e.g.
+    /// float reductions) must pass an explicit grain.
     pub fn for_range<'a, F>(&self, lo: usize, hi: usize, grain: usize, f: &F)
     where
         F: Fn(usize, usize) + Sync + 'a,
@@ -167,7 +617,7 @@ impl Pool {
         if hi <= lo {
             return;
         }
-        if self.threads == 1 || hi - lo <= grain {
+        if self.shared.threads == 1 || hi - lo <= grain {
             f(lo, hi);
             return;
         }
@@ -178,29 +628,22 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
+        // Release pairs with the workers' Acquire loads of `shutdown`.
         self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cond.notify_all();
+        self.shared.wake_all();
+        let me = thread::current().id();
         for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(sh: &Shared) {
-    loop {
-        let task = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if sh.shutdown.load(Ordering::Acquire) {
-                    return;
-                }
-                if let Some(t) = q.pop_front() {
-                    break t;
-                }
-                q = sh.cond.wait(q).unwrap();
+            // The last `Arc<Pool>` can legally be dropped *on one of this
+            // pool's own workers*: a task body that cloned the global pool
+            // (nested ops) and raced a `set_threads` swap. Joining our own
+            // thread would deadlock — detach it instead (it exits on its own
+            // via the shutdown flag) and join the rest.
+            if h.thread().id() == me {
+                drop(h);
+            } else {
+                let _ = h.join();
             }
-        };
-        task.run();
+        }
     }
 }
 
@@ -208,34 +651,71 @@ fn worker_loop(sh: &Shared) {
 // Global pool management
 // ---------------------------------------------------------------------------
 
-static GLOBAL: Lazy<RwLock<Arc<Pool>>> = Lazy::new(|| RwLock::new(Arc::new(Pool::new(default_threads()))));
+static GLOBAL: OnceLock<RwLock<Arc<Pool>>> = OnceLock::new();
 static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn global_cell() -> &'static RwLock<Arc<Pool>> {
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(Pool::new(default_threads()))))
+}
+
+/// The thread-count environment override, if set: `PALLAS_THREADS` (the
+/// documented knob — CI's thread matrix sets it), falling back to the legacy
+/// `PARCLUSTER_THREADS`. Single source of truth for the parse policy —
+/// unparsable values are ignored, parsed values clamp to ≥ 1 — so every
+/// reader (this pool's default, the coordinator config's env override)
+/// agrees on what a given value means.
+pub fn env_threads() -> Option<usize> {
+    for var in ["PALLAS_THREADS", "PARCLUSTER_THREADS"] {
+        if let Ok(v) = std::env::var(var) {
+            if let Ok(n) = v.parse::<usize>() {
+                return Some(n.max(1));
+            }
+        }
+    }
+    None
+}
 
 fn default_threads() -> usize {
     let ov = OVERRIDE_THREADS.load(Ordering::Relaxed);
     if ov > 0 {
         return ov;
     }
-    if let Ok(v) = std::env::var("PARCLUSTER_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = env_threads() {
+        return n;
     }
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// The global pool used by all `parlay::ops` entry points.
 pub fn global() -> Arc<Pool> {
-    Arc::clone(&GLOBAL.read().unwrap())
+    Arc::clone(&global_cell().read().unwrap())
 }
 
-/// Replace the global pool with one of `t` threads. Used by the thread
-/// scalability benches (Figure 4b). Must not be called while parallel work is
-/// in flight.
+/// Resize the global pool to `t` threads. Safe at any time, including while
+/// parallel work is in flight: operations hold an `Arc` to the pool they
+/// started on and run to completion there; the old pool's workers shut down
+/// when its last reference drops. A no-op if the size already matches.
 pub fn set_threads(t: usize) {
-    OVERRIDE_THREADS.store(t.max(1), Ordering::Relaxed);
-    let mut g = GLOBAL.write().unwrap();
-    *g = Arc::new(Pool::new(t.max(1)));
+    let t = t.max(1);
+    OVERRIDE_THREADS.store(t, Ordering::Relaxed);
+    if global_cell().read().unwrap().threads() == t {
+        return;
+    }
+    // Spawn the replacement pool BEFORE taking the write lock — thread
+    // creation is milliseconds of syscalls that must not stall every
+    // `global()` reader — then swap under the lock, re-checking the size in
+    // case a racing resize won.
+    let fresh = Arc::new(Pool::new(t));
+    let mut g = global_cell().write().unwrap();
+    if g.threads() == t {
+        drop(g);
+        return; // raced: discard `fresh` (its workers shut down on drop)
+    }
+    let old = std::mem::replace(&mut *g, fresh);
+    drop(g);
+    // Drop (and possibly join) the old pool outside the lock so readers are
+    // never blocked behind worker shutdown.
+    drop(old);
 }
 
 /// Current global parallelism.
@@ -243,10 +723,28 @@ pub fn num_threads() -> usize {
     global().threads()
 }
 
+/// Serializes unit tests (within this crate's test binary) that mutate the
+/// global pool via [`set_threads`]: results are thread-count independent by
+/// design, but a test asserting a specific `num_threads()` must not race a
+/// neighbor's resize. Lock with
+/// `.lock().unwrap_or_else(|e| e.into_inner())` so a panicking test does not
+/// poison the rest.
+#[cfg(test)]
+pub(crate) static TEST_POOL_LOCK: Mutex<()> = Mutex::new(());
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    /// Sizes shrink under miri (it interprets every instruction).
+    const fn sz(real: usize, miri: usize) -> usize {
+        if cfg!(miri) {
+            miri
+        } else {
+            real
+        }
+    }
 
     #[test]
     fn join_returns_both_results() {
@@ -274,15 +772,17 @@ mod tests {
             let (a, b) = p.join(|| fib(p, n - 1), || fib(p, n - 2));
             a + b
         }
-        assert_eq!(fib(&p, 16), 987);
+        let n = sz(16, 8) as u64;
+        let expect = [0, 1, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233, 377, 610, 987][n as usize];
+        assert_eq!(fib(&p, n), expect);
     }
 
     #[test]
     fn for_range_covers_every_index_once() {
         let p = Pool::new(4);
-        let n = 100_000;
+        let n = sz(100_000, 2_000);
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        p.for_range(0, n, 1024, &|lo, hi| {
+        p.for_range(0, n, 64, &|lo, hi| {
             for i in lo..hi {
                 hits[i].fetch_add(1, Ordering::Relaxed);
             }
@@ -291,24 +791,196 @@ mod tests {
     }
 
     #[test]
-    fn single_thread_pool_is_sequential() {
+    fn single_thread_pool_is_sequential_and_ordered() {
         let p = Pool::new(1);
         let (a, b) = p.join(|| 7, || 8);
         assert_eq!((a, b), (7, 8));
-        let mut acc = 0usize;
-        // for_range with threads=1 runs inline, so a mutable capture is fine
-        // through a cell.
-        let cell = std::cell::Cell::new(&mut acc);
-        let _ = cell; // (illustrative; real sequential use goes through ops::)
+        // Deterministic mode runs chunks inline in program order.
+        let order = Mutex::new(Vec::new());
         p.for_range(0, 10, 4, &|lo, hi| {
-            assert!(lo < hi);
+            order.lock().unwrap().push((lo, hi));
         });
+        let chunks = order.into_inner().unwrap();
+        for w in chunks.windows(2) {
+            assert!(w[0].1 == w[1].0, "in-order inline chunks: {chunks:?}");
+        }
     }
 
     #[test]
-    fn set_threads_swaps_global_pool() {
+    fn deque_lifo_pop_fifo_steal() {
+        let d = Deque::new();
+        let mk = || Task::new(Box::new(|| {}));
+        let (t0, t1, t2) = (mk(), mk(), mk());
+        d.push(Arc::clone(&t0)).unwrap();
+        d.push(Arc::clone(&t1)).unwrap();
+        d.push(Arc::clone(&t2)).unwrap();
+        // Steal takes the oldest…
+        match d.steal() {
+            Steal::Task(t) => assert!(Arc::ptr_eq(&t, &t0)),
+            _ => panic!("expected steal of t0"),
+        }
+        // …pop takes the newest.
+        assert!(Arc::ptr_eq(&d.pop().unwrap(), &t2));
+        assert!(Arc::ptr_eq(&d.pop().unwrap(), &t1));
+        assert!(d.pop().is_none());
+        assert!(matches!(d.steal(), Steal::Empty));
+    }
+
+    #[test]
+    fn deque_overflow_returns_task() {
+        let d = Deque::new();
+        for _ in 0..DEQUE_CAP {
+            d.push(Task::new(Box::new(|| {}))).unwrap();
+        }
+        assert!(d.push(Task::new(Box::new(|| {}))).is_err());
+        // Consuming one makes room again.
+        assert!(d.pop().is_some());
+        d.push(Task::new(Box::new(|| {}))).unwrap();
+    }
+
+    #[test]
+    fn deque_drop_reclaims_unconsumed_tasks() {
+        // Drop with items still queued must not leak (exercised under miri).
+        let d = Deque::new();
+        for _ in 0..10 {
+            d.push(Task::new(Box::new(|| {}))).unwrap();
+        }
+        drop(d);
+    }
+
+    #[test]
+    fn deque_concurrent_steal_race_is_exactly_once() {
+        let n = sz(20_000, 200);
+        let nthieves = 3;
+        let d = Arc::new(Deque::new());
+        let counter = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..nthieves)
+            .map(|_| {
+                let d = Arc::clone(&d);
+                let stop = Arc::clone(&stop);
+                thread::spawn(move || {
+                    let mut got = 0u64;
+                    loop {
+                        match d.steal() {
+                            Steal::Task(t) => {
+                                assert!(t.run(), "stolen task already claimed");
+                                got += 1;
+                            }
+                            Steal::Retry => {}
+                            Steal::Empty => {
+                                if stop.load(Ordering::Acquire) {
+                                    break;
+                                }
+                                thread::yield_now();
+                            }
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        // Owner interleaves pushes and pops.
+        let mut owner_ran = 0u64;
+        for i in 0..n {
+            let c = Arc::clone(&counter);
+            let t = Task::new(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }));
+            if let Err(t) = d.push(t) {
+                // Full (thieves stalled): run inline.
+                assert!(t.run());
+                owner_ran += 1;
+            }
+            if i % 3 == 0 {
+                if let Some(t) = d.pop() {
+                    assert!(t.run(), "popped task already claimed");
+                    owner_ran += 1;
+                }
+            }
+        }
+        while let Some(t) = d.pop() {
+            assert!(t.run());
+            owner_ran += 1;
+        }
+        stop.store(true, Ordering::Release);
+        let stolen: u64 = thieves.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(owner_ran + stolen, n as u64, "every task consumed exactly once");
+        assert_eq!(counter.load(Ordering::Relaxed), n as u64, "every task ran exactly once");
+    }
+
+    #[test]
+    fn panicking_closures_propagate_and_pool_survives() {
+        let p = Pool::new(4);
+        // Panic in the forked side: must reach the joiner, not hang it or
+        // kill a worker.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            p.join(|| 1u32, || -> u32 { panic!("boom-b") });
+        }));
+        assert!(r.is_err());
+        // Panic in the inline side: must wait for b (stack borrows!) and
+        // then resume.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            p.join(|| -> u32 { panic!("boom-a") }, || 2u32);
+        }));
+        assert!(r.is_err());
+        // The pool is still fully functional afterwards.
+        let (a, b) = p.join(|| 3, || 4);
+        assert_eq!((a, b), (3, 4));
+        let n = sz(10_000, 200);
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        p.for_range(0, n, 64, &|lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn workers_park_and_unpark() {
+        let p = Pool::new(4);
+        // Give workers time to reach the parked state, then verify new work
+        // still completes (i.e. unpark is not lost).
+        if !cfg!(miri) {
+            thread::sleep(std::time::Duration::from_millis(20));
+        }
+        for _ in 0..10 {
+            let n = sz(10_000, 100);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            p.for_range(0, n, 64, &|lo, hi| {
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn set_threads_swaps_global_pool_safely_mid_flight() {
+        let _g = TEST_POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // An operation keeps the pool it started on alive and completes even
+        // if the global is swapped underneath it.
+        let before = global();
+        let h = thread::spawn(move || {
+            let n = sz(50_000, 500);
+            let total = AtomicU64::new(0);
+            before.for_range(0, n, 128, &|lo, hi| {
+                let mut local = 0u64;
+                for i in lo..hi {
+                    local += i as u64;
+                }
+                total.fetch_add(local, Ordering::Relaxed);
+            });
+            total.load(Ordering::Relaxed)
+        });
         set_threads(3);
         assert_eq!(num_threads(), 3);
+        set_threads(2);
+        assert_eq!(num_threads(), 2);
+        let n = sz(50_000, 500) as u64;
+        assert_eq!(h.join().unwrap(), n * (n - 1) / 2);
         set_threads(1);
         assert_eq!(num_threads(), 1);
         set_threads(2);

@@ -2,7 +2,7 @@
 //! keys; used for the density sort in Algorithm 2 line 9, which the paper
 //! notes takes O(n) work because densities are bounded by n [53]).
 
-use super::ops::{par_for_grained, par_map};
+use super::ops::{par_for_grained, par_map_grained};
 use super::pool;
 
 /// Parallel stable merge sort by a key function.
@@ -29,6 +29,8 @@ where
         items.sort_by(&cmp);
         return;
     }
+    // Power-of-two chunk count so the pairwise merge rounds stay balanced;
+    // ~4 chunks per worker gives the stealer slack on uneven comparators.
     let nchunks = (threads * 4).next_power_of_two();
     let chunk = n.div_ceil(nchunks);
     // Sort chunks in parallel. Split via chunks_mut to get disjoint &mut.
@@ -109,15 +111,21 @@ pub fn par_radix_sort_u64(items: &mut Vec<(u64, u32)>) {
     let threads = pool::num_threads();
     let nchunks = (threads * 2).max(1);
     let chunk = n.div_ceil(nchunks);
+    // When n < nchunks·chunk, trailing chunks are empty and `c * chunk` can
+    // exceed n — clamp BOTH bounds (an unclamped `lo` made `&items[lo..]`
+    // panic for n < 2·threads, e.g. tiny conformance datasets under the
+    // PALLAS_THREADS=8 CI leg).
     let mut buf: Vec<(u64, u32)> = vec![(0, 0); n];
     for r in 0..rounds {
         let shift = r * 8;
-        // Per-chunk histograms.
-        let hists: Vec<[u32; 256]> = par_map(nchunks, |c| {
-            let lo = c * chunk;
+        // Per-chunk histograms. Grain 1: nchunks is a few heavy items, so
+        // the auto grain's floor would collapse this loop to one sequential
+        // task (matching the scatter loop below).
+        let hists: Vec<[u32; 256]> = par_map_grained(nchunks, 1, |c| {
+            let lo = (c * chunk).min(n);
             let hi = ((c + 1) * chunk).min(n);
             let mut h = [0u32; 256];
-            for it in &items[lo..hi.max(lo)] {
+            for it in &items[lo..hi] {
                 h[((it.0 >> shift) & 0xFF) as usize] += 1;
             }
             h
@@ -136,11 +144,11 @@ pub fn par_radix_sort_u64(items: &mut Vec<(u64, u32)>) {
             let src = &*items;
             let dst = buf.as_mut_ptr() as usize;
             par_for_grained(nchunks, 1, |c| {
-                let lo = c * chunk;
+                let lo = (c * chunk).min(n);
                 let hi = ((c + 1) * chunk).min(n);
                 let mut offs = offsets[c];
                 let dptr = dst as *mut (u64, u32);
-                for it in &src[lo..hi.max(lo)] {
+                for it in &src[lo..hi] {
                     let d = ((it.0 >> shift) & 0xFF) as usize;
                     // SAFETY: offsets partition 0..n disjointly across
                     // (chunk, digit) pairs.

@@ -79,6 +79,8 @@ impl<'p> PriorityKdTree<'p> {
                 left: t.left.as_mut_ptr() as usize,
                 right: t.right.as_mut_ptr() as usize,
                 bounds: t.bounds.as_mut_ptr() as usize,
+                // Resolved once; the fork path below runs per node.
+                pool: parlay::pool::global(),
             };
             b.build_rec(&mut ids, 0);
         }
@@ -206,6 +208,7 @@ struct PskdBuilder<'a> {
     left: usize,
     right: usize,
     bounds: usize,
+    pool: std::sync::Arc<parlay::Pool>,
 }
 
 unsafe impl Sync for PskdBuilder<'_> {}
@@ -275,8 +278,7 @@ impl PskdBuilder<'_> {
             }
         };
         if m >= BUILD_GRAIN {
-            let pool = parlay::pool::global();
-            pool.join(|| go(lids, lslot), || go(rids, rslot));
+            self.pool.join(|| go(lids, lslot), || go(rids, rslot));
         } else {
             go(lids, lslot);
             go(rids, rslot);
@@ -288,9 +290,11 @@ impl PskdBuilder<'_> {
         if m < 65_536 {
             return self.pts.bbox_of(ids);
         }
+        // Grain 1: a few heavy chunks would collapse to one sequential task
+        // under the auto grain.
         let nchunks = 16;
         let chunk = m.div_ceil(nchunks);
-        let boxes: Vec<Bbox> = parlay::par_map(nchunks, |c| {
+        let boxes: Vec<Bbox> = parlay::par_map_grained(nchunks, 1, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             self.pts.bbox_of(&ids[lo..hi.max(lo)])

@@ -204,6 +204,8 @@ mod tests {
 
     #[test]
     fn concurrent_stress_matches_sequential() {
+        let _g = crate::parlay::pool::TEST_POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = parlay::num_threads();
         parlay::set_threads(4);
         let mut rng = SplitMix64::new(32);
         let n = 5000;
@@ -219,7 +221,9 @@ mod tests {
             suf.union(a, b);
         }
         assert!(same_partition(&cuf.labels(), &suf.labels()));
-        parlay::set_threads(1);
+        // Restore the ambient count (e.g. the PALLAS_THREADS CI matrix)
+        // instead of degrading sibling tests to 1 thread.
+        parlay::set_threads(prev);
     }
 
     #[test]

@@ -128,9 +128,13 @@ fn prop_all_dep_algorithms_identical() {
     });
 }
 
-// 5. Concurrent union-find == sequential DSU.
+// 5. Concurrent union-find == sequential DSU. Pins the pool to 4 threads for
+// real contention; restores the ambient count afterwards so sibling tests
+// keep whatever parallelism the environment (e.g. the PALLAS_THREADS CI
+// matrix) configured, instead of being silently degraded to 1.
 #[test]
 fn prop_concurrent_union_find_matches_sequential() {
+    let prev = parlay::num_threads();
     parlay::set_threads(4);
     proputil::check("union-find", Config::cases(30), |rng| {
         let n = proputil::gen_size(rng, 2, 800);
@@ -150,7 +154,7 @@ fn prop_concurrent_union_find_matches_sequential() {
         }
         Ok(())
     });
-    parlay::set_threads(1);
+    parlay::set_threads(prev);
 }
 
 // 6. Full pipeline: identical labels across all Step-2 algorithms.

@@ -1,0 +1,200 @@
+//! Scheduler stress suite (ISSUE 3): every `parlay` primitive must produce
+//! sequential-identical output at every thread count, and nested fork-join
+//! must stay deadlock-free under worker starvation.
+//!
+//! `set_threads` swaps the process-global pool, so every test that pins a
+//! thread count holds `POOL_LOCK` — tests within this binary then observe
+//! exactly the thread count they asked for. (Correctness never depends on
+//! the count — that is the point of the suite — but the tests should
+//! actually *exercise* 2, 7, and 16 workers, not whatever their neighbor
+//! last set.)
+
+use std::sync::Mutex;
+
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{DensityAlgo, DepAlgo, Dpc, DpcParams};
+use parcluster::parlay;
+use parcluster::prng::SplitMix64;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Thread counts from the issue: sequential, minimal stealing, odd (uneven
+/// victim distribution), and oversubscribed (more workers than CI cores —
+/// parking and help-first get real coverage).
+const THREAD_COUNTS: [usize; 4] = [1, 2, 7, 16];
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking neighbor must not cascade: the pool itself is never left
+    // in a broken state, so poisoning is ignorable.
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn par_scan_add_matches_sequential_across_thread_counts() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0x5CA9);
+    let vals: Vec<usize> = (0..100_000).map(|_| (rng.next_u64() % 1000) as usize).collect();
+    let mut expect = Vec::with_capacity(vals.len());
+    let mut acc = 0usize;
+    for &v in &vals {
+        expect.push(acc);
+        acc += v;
+    }
+    for &t in &THREAD_COUNTS {
+        parlay::set_threads(t);
+        let (scan, total) = parlay::par_scan_add(&vals);
+        assert_eq!(total, acc, "total at T={t}");
+        assert_eq!(scan, expect, "scan at T={t}");
+    }
+}
+
+#[test]
+fn par_sort_by_key_matches_sequential_across_thread_counts() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0x50F7);
+    // Narrow key range forces heavy ties, and sorting by the key ALONE while
+    // expecting (k, id) order pins the stable tie order — at every thread
+    // count, i.e. across every chunk/merge-round layout.
+    let base: Vec<(u64, u32)> = (0..80_000).map(|i| (rng.next_u64() % 64, i as u32)).collect();
+    let mut expect = base.clone();
+    expect.sort_by_key(|&(k, id)| (k, id));
+    for &t in &THREAD_COUNTS {
+        parlay::set_threads(t);
+        let mut v = base.clone();
+        parlay::par_sort_by_key(&mut v, |&(k, _)| k);
+        assert_eq!(v, expect, "stable sort at T={t}");
+    }
+}
+
+#[test]
+fn par_radix_sort_matches_sequential_across_thread_counts() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0x4AD1);
+    let base: Vec<(u64, u32)> = (0..80_000).map(|i| (rng.next_u64() % 100_000, i as u32)).collect();
+    let mut expect = base.clone();
+    expect.sort_by_key(|&(k, id)| (k, id)); // radix sort is stable
+    for &t in &THREAD_COUNTS {
+        parlay::set_threads(t);
+        let mut v = base.clone();
+        parlay::par_radix_sort_u64(&mut v);
+        assert_eq!(v, expect, "radix at T={t}");
+        // Regression: n below the chunk grid (n < 2·threads) used to panic
+        // on an unclamped chunk start index.
+        for n in 1..8usize {
+            let mut tiny: Vec<(u64, u32)> = (0..n).map(|i| ((7 - i) as u64 % 3, i as u32)).collect();
+            let mut tiny_expect = tiny.clone();
+            tiny_expect.sort_by_key(|&(k, id)| (k, id));
+            parlay::par_radix_sort_u64(&mut tiny);
+            assert_eq!(tiny, tiny_expect, "tiny radix n={n} at T={t}");
+        }
+    }
+}
+
+#[test]
+fn par_map_filter_reduce_match_sequential_across_thread_counts() {
+    let _g = lock();
+    let n = 50_000usize;
+    for &t in &THREAD_COUNTS {
+        parlay::set_threads(t);
+        let m = parlay::par_map(n, |i| (i as u64).wrapping_mul(0x9E37_79B9));
+        assert!(m.iter().enumerate().all(|(i, &x)| x == (i as u64).wrapping_mul(0x9E37_79B9)), "map at T={t}");
+        let f = parlay::par_filter(n, |i| i % 7 == 0, |i| i);
+        let expect: Vec<usize> = (0..n).filter(|i| i % 7 == 0).collect();
+        assert_eq!(f, expect, "filter at T={t}");
+        let s = parlay::par_reduce(n, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(s, (n as u64 - 1) * n as u64 / 2, "reduce at T={t}");
+    }
+}
+
+/// The depth bomb: a linear chain of nested joins far deeper than the worker
+/// count. A pool whose joiners *block* instead of helping deadlocks here as
+/// soon as `depth > threads` tasks are simultaneously waiting; a help-first
+/// joiner executes its own forked child (or other pending tasks) and the
+/// chain always advances.
+#[test]
+fn nested_join_depth_bomb_does_not_deadlock() {
+    let _g = lock();
+    fn chain(p: &parcluster::parlay::Pool, depth: u64) -> u64 {
+        if depth == 0 {
+            return 0;
+        }
+        // Fork the deep side as the *stealable* task and keep trivial work
+        // inline, maximizing simultaneously-blocked joins.
+        let (a, b) = p.join(|| depth % 3, || chain(p, depth - 1));
+        a + b
+    }
+    for &t in &[2usize, 7, 16] {
+        parlay::set_threads(t);
+        let p = parcluster::parlay::pool::global();
+        let depth = 600u64;
+        let expect: u64 = (1..=depth).map(|d| d % 3).sum();
+        assert_eq!(chain(&p, depth), expect, "chain at T={t}");
+    }
+    // Bushy variant: exponential fork-out with every frame joining.
+    fn fib(p: &parcluster::parlay::Pool, n: u64) -> u64 {
+        if n < 2 {
+            return n;
+        }
+        let (a, b) = p.join(|| fib(p, n - 1), || fib(p, n - 2));
+        a + b
+    }
+    parlay::set_threads(7);
+    let p = parcluster::parlay::pool::global();
+    assert_eq!(fib(&p, 20), 6765);
+}
+
+/// Acceptance criterion: DPC outputs are byte-identical across thread counts
+/// (ρ, λ, δ, labels, centers), for the two Step-2 algorithms whose inner
+/// loops are fully parallel.
+#[test]
+fn dpc_outputs_byte_identical_across_thread_counts() {
+    let _g = lock();
+    let pts = synthetic::simden(4_000, 2, 42);
+    let params = DpcParams { d_cut: 30.0, rho_min: 2.0, delta_min: 60.0 };
+    for dep_algo in [DepAlgo::Priority, DepAlgo::Fenwick] {
+        parlay::set_threads(1);
+        let seq = Dpc::new(params)
+            .dep_algo(dep_algo)
+            .density_algo(DensityAlgo::TreePruned)
+            .run(&pts)
+            .expect("sequential run");
+        for &t in &THREAD_COUNTS[1..] {
+            parlay::set_threads(t);
+            let par = Dpc::new(params)
+                .dep_algo(dep_algo)
+                .density_algo(DensityAlgo::TreePruned)
+                .run(&pts)
+                .expect("parallel run");
+            assert_eq!(par.rho, seq.rho, "rho {dep_algo:?} T={t}");
+            assert_eq!(par.dep, seq.dep, "dep {dep_algo:?} T={t}");
+            // δ compared bitwise: both sides must make identical FP choices.
+            let seq_delta: Vec<u64> = seq.delta.iter().map(|d| d.to_bits()).collect();
+            let par_delta: Vec<u64> = par.delta.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(par_delta, seq_delta, "delta {dep_algo:?} T={t}");
+            assert_eq!(par.labels, seq.labels, "labels {dep_algo:?} T={t}");
+            assert_eq!(par.centers, seq.centers, "centers {dep_algo:?} T={t}");
+            assert_eq!(par.num_noise, seq.num_noise, "noise {dep_algo:?} T={t}");
+        }
+    }
+}
+
+/// Many small operations back-to-back: exercises parking/unparking churn
+/// (workers go idle between ops) and injector submissions from this external
+/// (non-worker) test thread.
+#[test]
+fn rapid_small_ops_survive_parking_churn() {
+    let _g = lock();
+    parlay::set_threads(8);
+    for round in 0..200usize {
+        let n = 64 + (round % 7) * 100;
+        let v = parlay::par_map(n, |i| i * i);
+        assert_eq!(v.len(), n);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * i), "round {round}");
+        if round % 50 == 0 {
+            // Interleave pool resizes mid-churn: set_threads must be safe
+            // while the previous pool may still be winding down.
+            parlay::set_threads(if round % 100 == 0 { 3 } else { 8 });
+        }
+    }
+    parlay::set_threads(2);
+}
