@@ -14,7 +14,7 @@ fn main() {
         .ok()
         .map(|s| s.split(',').map(|t| t.parse().unwrap()).collect())
         .unwrap_or_else(|| vec![1_000, 4_000, 16_000, 64_000]);
-    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() };
 
     let mut headers: Vec<String> = vec!["algo".into()];
     headers.extend(sizes.iter().map(|n| format!("n={n}")));

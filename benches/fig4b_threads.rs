@@ -28,7 +28,7 @@ fn main() {
         .ok()
         .map(|s| s.split(',').map(|t| t.parse().unwrap()).collect())
         .unwrap_or_else(|| vec![1, 2, 4, 8]);
-    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() };
     let pts = synthetic::simden(n, 2, 42);
 
     let algos = [

@@ -1,0 +1,80 @@
+//! Precision bandwidth study: f32 vs f64 kd-tree build + density
+//! (Step 1) throughput across sizes.
+//!
+//! The density step is memory-bandwidth-bound (leaf scans + bounds checks
+//! stream coordinates), so the f32 store's half-width buffer should
+//! approach a 2x win as n leaves cache — this bench locates the crossover.
+//! Both runs are *exact at their precision*; on integer-coordinate data
+//! they produce identical ρ (asserted here, a live conformance check).
+//!
+//! ```sh
+//! cargo bench --bench precision_bandwidth
+//! ```
+
+use std::time::Instant;
+
+use parcluster::bench::{fmt_secs, Table};
+use parcluster::dpc::{compute_density, DensityAlgo};
+use parcluster::geom::{PointStore, Scalar};
+use parcluster::kdtree::KdTree;
+use parcluster::prng::SplitMix64;
+use parcluster::proputil::gen_grid_points;
+
+/// Median of three timed runs of `f`.
+fn med3<F: FnMut() -> f64>(mut f: F) -> f64 {
+    let mut t = [f(), f(), f()];
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t[1]
+}
+
+fn timed_build_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64) -> (f64, f64, Vec<u32>) {
+    let build_s = med3(|| {
+        let t = Instant::now();
+        std::hint::black_box(KdTree::build(pts));
+        t.elapsed().as_secs_f64()
+    });
+    let mut rho = Vec::new();
+    let density_s = med3(|| {
+        let t = Instant::now();
+        rho = compute_density(pts, d_cut, DensityAlgo::TreePruned);
+        t.elapsed().as_secs_f64()
+    });
+    (build_s, density_s, rho)
+}
+
+fn main() {
+    let d = 2;
+    let d_cut = 3.0; // integer radius: exact at both precisions
+    let mut table = Table::new(&[
+        "n",
+        "build f64",
+        "build f32",
+        "build speedup",
+        "density f64",
+        "density f32",
+        "density speedup",
+    ]);
+    for n in [20_000usize, 80_000, 320_000] {
+        let mut rng = SplitMix64::new(0xBA0D + n as u64);
+        // Integer grid: the f32 cast is lossless, so rho must match exactly.
+        let side = ((n as f64).sqrt() * 2.0) as u64;
+        let pts64 = gen_grid_points(&mut rng, n, d, side.max(8));
+        let pts32 = PointStore::<f32>::try_lossless_from_f64(&pts64).expect("grid coords are f32-lossless");
+
+        let (b64, q64, rho64) = timed_build_density(&pts64, d_cut);
+        let (b32, q32, rho32) = timed_build_density(&pts32, d_cut);
+        assert_eq!(rho64, rho32, "precision conformance violated at n={n}");
+
+        table.row(vec![
+            n.to_string(),
+            fmt_secs(b64),
+            fmt_secs(b32),
+            format!("{:.2}x", b64 / b32.max(1e-12)),
+            fmt_secs(q64),
+            fmt_secs(q32),
+            format!("{:.2}x", q64 / q32.max(1e-12)),
+        ]);
+    }
+    table.print();
+    println!("(speedup > 1 means f32 is faster; expect it to grow with n as the working set leaves cache)");
+}

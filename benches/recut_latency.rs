@@ -31,7 +31,7 @@ fn main() {
     let mut table = Table::new(&["rho_min", "delta_min", "full run", "session cut", "speedup", "identical"]);
     let mut worst_speedup = f64::INFINITY;
     for &(rho_min, delta_min) in sweeps {
-        let params = DpcParams { d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() };
         let full_s = time_median(trials, || {
             std::hint::black_box(Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("cluster"));
         });

@@ -43,7 +43,7 @@ fn main() {
         // Ingest price: base load is untimed per-trial setup.
         let mut samples: Vec<f64> = (0..trials.max(1))
             .map(|_| {
-                let mut s = StreamingSession::new(d, d_cut).expect("open");
+                let mut s = StreamingSession::<f64>::new(d, d_cut).expect("open");
                 s.ingest(&base).expect("base ingest");
                 let t = std::time::Instant::now();
                 s.ingest(&batch).expect("ingest");
@@ -55,7 +55,7 @@ fn main() {
         let ingest_s = samples[samples.len() / 2];
 
         // Exactness spot-check at bench scale.
-        let mut s = StreamingSession::new(d, d_cut).expect("open");
+        let mut s = StreamingSession::<f64>::new(d, d_cut).expect("open");
         s.ingest(&base).expect("base ingest");
         s.ingest(&batch).expect("ingest");
         let mut fresh = ClusterSession::build(&pts).expect("build");

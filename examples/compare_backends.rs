@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("XLA backend unavailable — run `make artifacts` first.");
         std::process::exit(2);
     }
-    let params = DpcParams { d_cut: 6.0, rho_min: 3.0, delta_min: 60.0 };
+    let params = DpcParams { d_cut: 6.0, rho_min: 3.0, delta_min: 60.0, ..DpcParams::default() };
     let n_requests = 24;
     let n_points = 2_000;
     println!("E2E: {n_requests} clustering requests x {n_points} points, both backends\n");

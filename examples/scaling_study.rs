@@ -13,7 +13,7 @@ use parcluster::dpc::{Dpc, DepAlgo, DpcParams};
 fn main() {
     let sizes = [1_000usize, 4_000, 16_000, 64_000];
     let algos = [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Fenwick, DepAlgo::Priority];
-    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+    let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() };
 
     let mut table = Table::new(&["algo", "n=1e3", "n=4e3", "n=1.6e4", "n=6.4e4", "slope"]);
     for algo in algos {

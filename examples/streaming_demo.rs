@@ -17,7 +17,7 @@ fn main() {
     let batches = 10usize;
     let per = n.div_ceil(batches);
 
-    let mut s = StreamingSession::new(d, d_cut).expect("open stream");
+    let mut s = StreamingSession::<f64>::new(d, d_cut).expect("open stream");
     let mut table = Table::new(&["batch", "points", "total", "ingest", "levels", "clusters"]);
     let mut sent = 0usize;
     let mut batch_no = 0usize;
@@ -52,6 +52,14 @@ fn main() {
         st.dep_full_queries,
         st.dep_seeded_races,
         st.dep_changed
+    );
+    // The Arc-backed store contract: rebuilt levels pin the session's
+    // current coordinate buffer by refcount (older levels pin the snapshot
+    // they were built against) — no defensive copies anywhere.
+    println!(
+        "levels sharing the current coordinate buffer: {}/{}",
+        s.levels_sharing_current_buffer(),
+        s.level_sizes().len()
     );
 
     // The exactness contract, checked end to end.

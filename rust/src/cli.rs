@@ -105,10 +105,14 @@ USAGE:
 
 COMMANDS:
   datasets                         print the benchmark dataset inventory (Table 2)
-  generate   --dataset NAME [--n N] [--seed S] --out FILE [--csv]
+  generate   --dataset NAME [--n N] [--seed S] --out FILE [--csv] [--dtype f32|f64]
+             (--dtype tags the v2 binary format; v1 files remain readable)
   cluster    (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--rho-min X]
              [--delta-min X] [--algo A] [--backend B] [--threads T]
-             [--labels-out FILE] [--seed S]
+             [--labels-out FILE] [--seed S] [--dtype f32|f64]
+             (--dtype f32 runs the exact pipeline on single-precision
+             coordinates — identical clusters whenever the data is f32-
+             losslessly representable, e.g. integer coordinates)
   decision   (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--k K]
              [--csv-out FILE] [--seed S]
   stream     (--dataset NAME [--n N] | --input FILE) [--batches K] [--d-cut X]
@@ -128,6 +132,8 @@ COMMANDS:
 
 Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick
 Backends  (--backend): auto | tree | xla
+Dtypes    (--dtype):   f32 | f64 (default: the input's stored dtype — f64 for
+                       datasets/CSV; the xla backend serves f64 jobs only)
 ";
 
 #[cfg(test)]

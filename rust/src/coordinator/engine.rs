@@ -11,9 +11,11 @@ use std::sync::{Arc, Mutex, Weak};
 
 use crate::dpc::{self, DensityAlgo, DepAlgo};
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{Dtype, PointSet, PointStore, Scalar};
 use crate::runtime::engine::D_PAD;
 use crate::runtime::{XlaDpcOutput, XlaService};
+
+use super::job::PointsPayload;
 
 /// Shape and algorithm choices of one clustering job — what an engine needs
 /// for capability checks ([`Engine::supports`]) and per-job overrides.
@@ -22,6 +24,9 @@ pub struct JobSpec {
     pub n: usize,
     pub d: usize,
     pub d_cut: f64,
+    /// Coordinate precision of the payload (the payload is authoritative;
+    /// [`JobSpec::from_payload`] derives this field from it).
+    pub dtype: Dtype,
     /// Step-2 algorithm (tree backend only; brute-force backends ignore it).
     pub dep_algo: DepAlgo,
     /// Step-1 variant (tree backend only).
@@ -29,11 +34,24 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    pub fn new(pts: &PointSet, d_cut: f64) -> Self {
+    pub fn new<S: Scalar>(pts: &PointStore<S>, d_cut: f64) -> Self {
         JobSpec {
             n: pts.len(),
             d: pts.dim(),
             d_cut,
+            dtype: S::DTYPE,
+            dep_algo: DepAlgo::Priority,
+            density_algo: DensityAlgo::TreePruned,
+        }
+    }
+
+    /// Spec for a queued payload (dtype taken from the payload's tag).
+    pub fn from_payload(pts: &PointsPayload, d_cut: f64) -> Self {
+        JobSpec {
+            n: pts.len(),
+            d: pts.dim(),
+            d_cut,
+            dtype: pts.dtype(),
             dep_algo: DepAlgo::Priority,
             density_algo: DensityAlgo::TreePruned,
         }
@@ -45,7 +63,10 @@ impl JobSpec {
     }
 }
 
-/// An execution backend for Steps 1–2 of the DPC pipeline.
+/// An execution backend for Steps 1–2 of the DPC pipeline. Payloads are
+/// precision-tagged; engines advertise which dtypes they take via
+/// [`Engine::supports`] (the router falls back to the tree engine, which
+/// takes both).
 pub trait Engine: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -53,22 +74,22 @@ pub trait Engine: Send + Sync {
     fn supports(&self, job: &JobSpec) -> bool;
 
     /// Step 1: ρ(x) for every point at radius `job.d_cut`.
-    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError>;
+    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError>;
 
     /// Step 2: λ(x) per point — `None` for points below `rho_min` and the
     /// global peak. Candidate sets are threshold-free (pass `rho_min = 0.0`
     /// for the full forest used by cached sessions).
     fn dependents(
         &self,
-        pts: &Arc<PointSet>,
+        pts: &PointsPayload,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
     ) -> Result<Vec<Option<u32>>, DpcError>;
 }
 
-/// The Rust tree engine: the paper's algorithm suite. Exact in f64, any
-/// size and dimension.
+/// The Rust tree engine: the paper's algorithm suite. Exact per precision,
+/// any size, dimension, and dtype.
 pub struct TreeEngine;
 
 impl Engine for TreeEngine {
@@ -80,18 +101,24 @@ impl Engine for TreeEngine {
         true
     }
 
-    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
-        Ok(dpc::compute_density(pts, job.d_cut, job.density_algo))
+    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+        Ok(match pts {
+            PointsPayload::F32(p) => dpc::compute_density(p, job.d_cut, job.density_algo),
+            PointsPayload::F64(p) => dpc::compute_density(p, job.d_cut, job.density_algo),
+        })
     }
 
     fn dependents(
         &self,
-        pts: &Arc<PointSet>,
+        pts: &PointsPayload,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
     ) -> Result<Vec<Option<u32>>, DpcError> {
-        Ok(dpc::dep::compute_dependents(pts, rho, rho_min, job.dep_algo))
+        Ok(match pts {
+            PointsPayload::F32(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
+            PointsPayload::F64(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
+        })
     }
 }
 
@@ -152,27 +179,39 @@ impl XlaEngine {
     }
 }
 
+/// Extract the f64 store an XLA job runs over. The router never sends f32
+/// payloads here (`supports` gates on dtype), so the error is defensive.
+fn xla_f64(pts: &PointsPayload) -> Result<&Arc<PointSet>, DpcError> {
+    match pts {
+        PointsPayload::F64(p) => Ok(p),
+        PointsPayload::F32(_) => Err(DpcError::Backend {
+            engine: "xla".into(),
+            message: "f32 payloads route to the tree engine (the XLA memo keys on f64 stores)".into(),
+        }),
+    }
+}
+
 impl Engine for XlaEngine {
     fn name(&self) -> &'static str {
         "xla"
     }
 
     fn supports(&self, job: &JobSpec) -> bool {
-        job.n <= self.svc.capacity() && job.d <= D_PAD
+        job.n <= self.svc.capacity() && job.d <= D_PAD && job.dtype == Dtype::F64
     }
 
-    fn density(&self, pts: &Arc<PointSet>, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
-        Ok(self.run_memo(pts, job.d_cut)?.rho)
+    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+        Ok(self.run_memo(xla_f64(pts)?, job.d_cut)?.rho)
     }
 
     fn dependents(
         &self,
-        pts: &Arc<PointSet>,
+        pts: &PointsPayload,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
     ) -> Result<Vec<Option<u32>>, DpcError> {
-        let out = self.run_memo(pts, job.d_cut)?;
+        let out = self.run_memo(xla_f64(pts)?, job.d_cut)?;
         // Noise handling mirrors the tree engine: noise points get no λ.
         Ok(rho
             .iter()
@@ -193,13 +232,31 @@ mod tests {
     fn tree_engine_matches_direct_pipeline() {
         let mut rng = SplitMix64::new(77);
         let pts = Arc::new(gen_clustered_points(&mut rng, 300, 2, 3, 80.0, 2.0));
-        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 10.0 };
-        let spec = JobSpec::new(&pts, params.d_cut).dep_algo(DepAlgo::Fenwick);
+        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 10.0, ..DpcParams::default() };
+        let payload = PointsPayload::F64(Arc::clone(&pts));
+        let spec = JobSpec::from_payload(&payload, params.d_cut).dep_algo(DepAlgo::Fenwick);
+        assert_eq!(spec.dtype, Dtype::F64);
         let eng = TreeEngine;
         assert!(eng.supports(&spec));
-        let rho = eng.density(&pts, &spec).unwrap();
+        let rho = eng.density(&payload, &spec).unwrap();
         assert_eq!(rho, dpc::compute_density(&pts, params.d_cut, DensityAlgo::TreePruned));
-        let dep = eng.dependents(&pts, &rho, params.rho_min, &spec).unwrap();
+        let dep = eng.dependents(&payload, &rho, params.rho_min, &spec).unwrap();
         assert_eq!(dep, dpc::dep::compute_dependents(&pts, &rho, params.rho_min, DepAlgo::Fenwick));
+    }
+
+    #[test]
+    fn tree_engine_runs_f32_payloads() {
+        let mut rng = SplitMix64::new(78);
+        let pts64 = gen_clustered_points(&mut rng, 200, 2, 3, 60.0, 2.0);
+        let pts = Arc::new(PointStore::<f32>::cast_from_f64(&pts64));
+        let payload = PointsPayload::F32(Arc::clone(&pts));
+        let spec = JobSpec::from_payload(&payload, 4.0);
+        assert_eq!(spec.dtype, Dtype::F32);
+        let eng = TreeEngine;
+        assert!(eng.supports(&spec));
+        let rho = eng.density(&payload, &spec).unwrap();
+        assert_eq!(rho, dpc::compute_density(&pts, 4.0, DensityAlgo::TreePruned));
+        let dep = eng.dependents(&payload, &rho, 0.0, &spec).unwrap();
+        assert_eq!(dep, dpc::dep::compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority));
     }
 }

@@ -30,12 +30,12 @@ use anyhow::Result;
 
 use crate::dpc::{dep, linkage, session, stream::StreamingSession, DpcParams, DpcResult, StepTimings};
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{PointSet, PointStore, Scalar};
 use crate::runtime::XlaService;
 
 use super::config::CoordinatorConfig;
 use super::engine::JobSpec;
-use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus};
+use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus, PointsPayload};
 use super::metrics::Metrics;
 use super::router::{Backend, Router};
 
@@ -190,15 +190,18 @@ impl Coordinator {
     pub fn open_session(&self, pts: Arc<PointSet>, d_cut: f64) -> Result<SessionId, DpcError> {
         session::validate_points(&pts)?;
         session::validate_d_cut(d_cut)?;
-        let spec = JobSpec::new(&pts, d_cut).dep_algo(self.cfg.dep_algo);
+        // The payload shares the session's Arc (a refcount bump; the
+        // store's own coordinate buffer is shared one level deeper).
+        let payload = PointsPayload::F64(Arc::clone(&pts));
+        let spec = JobSpec::from_payload(&payload, d_cut).dep_algo(self.cfg.dep_algo);
         let backend = self.router.resolve(self.cfg.backend, &spec);
         let engine = self.router.engine(backend);
         let t = Instant::now();
-        let rho = engine.density(&pts, &spec)?;
+        let rho = engine.density(&payload, &spec)?;
         let density_s = t.elapsed().as_secs_f64();
         let t = Instant::now();
         // rho_min = 0: the full forest, so any later threshold is a mask.
-        let dep = engine.dependents(&pts, &rho, 0.0, &spec)?;
+        let dep = engine.dependents(&payload, &rho, 0.0, &spec)?;
         let delta = dep::dependent_distances(&pts, &dep);
         let dep_s = t.elapsed().as_secs_f64();
         let entry = Arc::new(SessionEntry {
@@ -226,7 +229,7 @@ impl Coordinator {
     pub fn submit_recut(&self, id: SessionId, rho_min: f64, delta_min: f64) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         let entry = self.session(id).ok_or(DpcError::UnknownSession(id))?;
-        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min, ..DpcParams::default() };
         let job = ClusterJob::recut(id, params).tag(format!("recut:{id}"));
         self.metrics.inc("recuts_submitted");
         Ok(self.submit(job))
@@ -242,7 +245,7 @@ impl Coordinator {
     /// [`Coordinator::submit_ingest`] jobs grow it batch by batch. Stream
     /// ids share the session id namespace but not the session store.
     pub fn open_stream(&self, dim: usize, d_cut: f64) -> Result<SessionId, DpcError> {
-        let s = StreamingSession::new(dim, d_cut)?;
+        let s = StreamingSession::<f64>::new(dim, d_cut)?;
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         self.shared.streams.lock().unwrap().insert(
             id,
@@ -280,7 +283,7 @@ impl Coordinator {
     ) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
-        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min, ..DpcParams::default() };
         // Issue the ticket and enqueue under the ticket lock, so ticket
         // order always equals queue order for this stream.
         let mut tickets = entry.tickets.lock().unwrap();
@@ -406,7 +409,7 @@ fn run_job(
 ) -> (Result<DpcResult, DpcError>, Backend) {
     match &job.payload {
         JobPayload::Points(pts) => {
-            let spec = JobSpec::new(pts, job.params.d_cut).dep_algo(job.dep_algo.unwrap_or(cfg.dep_algo));
+            let spec = JobSpec::from_payload(pts, job.params.d_cut).dep_algo(job.dep_algo.unwrap_or(cfg.dep_algo));
             let backend = router.resolve(job.backend.unwrap_or(cfg.backend), &spec);
             (run_points_job(pts, &spec, job.params, router, backend), backend)
         }
@@ -422,30 +425,47 @@ fn run_job(
 }
 
 /// The unified Steps 1–3 pipeline over whatever engine the router resolved.
+/// Dispatches on the payload's precision tag, then runs the generic
+/// pipeline — Steps 1–2 through the [`super::engine::Engine`] trait, Step 3
+/// (union-find linkage) always in Rust.
 fn run_points_job(
-    pts: &Arc<PointSet>,
+    pts: &PointsPayload,
     spec: &JobSpec,
     params: DpcParams,
     router: &Router,
     backend: Backend,
 ) -> Result<DpcResult, DpcError> {
-    session::validate_points(pts)?;
+    match pts {
+        PointsPayload::F32(p) => run_points_pipeline(p, pts, spec, params, router, backend),
+        PointsPayload::F64(p) => run_points_pipeline(p, pts, spec, params, router, backend),
+    }
+}
+
+fn run_points_pipeline<S: Scalar>(
+    store: &PointStore<S>,
+    payload: &PointsPayload,
+    spec: &JobSpec,
+    params: DpcParams,
+    router: &Router,
+    backend: Backend,
+) -> Result<DpcResult, DpcError> {
+    session::validate_points(store)?;
     session::validate_params(&params)?;
     let engine = router.engine(backend);
 
     let t0 = Instant::now();
-    let rho = engine.density(pts, spec)?;
+    let rho = engine.density(payload, spec)?;
     let density_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
-    let dep_ids = engine.dependents(pts, &rho, params.rho_min, spec)?;
+    let dep_ids = engine.dependents(payload, &rho, params.rho_min, spec)?;
     let dep_s = t1.elapsed().as_secs_f64();
 
     let t2 = Instant::now();
-    let link = linkage::single_linkage(pts, &rho, &dep_ids, params);
+    let link = linkage::single_linkage(store, &rho, &dep_ids, params);
     let linkage_s = t2.elapsed().as_secs_f64();
 
-    let delta = dep::dependent_distances(pts, &dep_ids);
+    let delta = dep::dependent_distances(store, &dep_ids);
     Ok(DpcResult {
         rho,
         dep: dep_ids,
@@ -545,7 +565,7 @@ mod tests {
     #[test]
     fn submit_wait_roundtrip() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
-        let job = ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 })
+        let job = ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() })
             .tag("two-blobs");
         let out = coord.run_sync(job).unwrap();
         assert_eq!(out.result.num_clusters, 2);
@@ -564,7 +584,7 @@ mod tests {
         let ids: Vec<JobId> = (0..6)
             .map(|i| {
                 coord.submit(
-                    ClusterJob::new(Arc::clone(&pts), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 })
+                    ClusterJob::new(Arc::clone(&pts), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() })
                         .dep_algo(DepAlgo::ALL[i % 5])
                         .tag(format!("job{i}")),
                 )
@@ -578,6 +598,24 @@ mod tests {
     }
 
     #[test]
+    fn f32_jobs_run_through_the_same_queue() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let pts64 = blob_points();
+        let pts32 = Arc::new(PointStore::<f32>::cast_from_f64(&pts64));
+        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, dtype: crate::geom::Dtype::F32 };
+        let out = coord
+            .run_sync(ClusterJob::new_f32(Arc::clone(&pts32), params).tag("two-blobs-f32"))
+            .unwrap();
+        assert_eq!(out.result.num_clusters, 2);
+        assert_eq!(out.backend_used, Backend::TreeExact);
+        // Identical to the direct generic pipeline on the same f32 store.
+        let fresh = Dpc::new(params).run(&*pts32).unwrap();
+        assert_eq!(out.result.rho, fresh.rho);
+        assert_eq!(out.result.dep, fresh.dep);
+        assert_eq!(out.result.labels, fresh.labels);
+    }
+
+    #[test]
     fn unknown_job_is_error() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
         assert!(coord.wait(999).is_err());
@@ -586,7 +624,7 @@ mod tests {
     #[test]
     fn status_transitions_to_done() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
-        let id = coord.submit(ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }));
+        let id = coord.submit(ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }));
         let _ = coord.wait(id);
         assert!(matches!(coord.status(id), Some(JobStatus::Done(_))));
     }
@@ -596,12 +634,12 @@ mod tests {
         let coord = Coordinator::start(tree_only_config()).unwrap();
         let empty = Arc::new(PointSet::empty(2));
         let err = coord
-            .run_sync(ClusterJob::new(empty, DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }))
+            .run_sync(ClusterJob::new(empty, DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }))
             .unwrap_err();
         assert!(err.contains("empty point set"), "{err}");
         let bad = Arc::new(PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2));
         let err = coord
-            .run_sync(ClusterJob::new(bad, DpcParams { d_cut: -1.0, rho_min: 0.0, delta_min: 20.0 }))
+            .run_sync(ClusterJob::new(bad, DpcParams { d_cut: -1.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }))
             .unwrap_err();
         assert!(err.contains("d_cut"), "{err}");
     }
@@ -615,7 +653,7 @@ mod tests {
             let out = coord
                 .wait(coord.submit_recut(sid, rho_min, delta_min).unwrap())
                 .unwrap();
-            let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
+            let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min, ..DpcParams::default() }).run(&pts).unwrap();
             assert_eq!(out.result.labels, fresh.labels);
             assert_eq!(out.result.rho, fresh.rho);
             assert_eq!(out.result.dep, fresh.dep);
@@ -663,7 +701,7 @@ mod tests {
                 .wait(coord.submit_ingest(sid, batch, rho_min, delta_min).unwrap())
                 .unwrap();
             let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
-            let fresh = Dpc::new(DpcParams { d_cut, rho_min, delta_min }).run(&prefix).unwrap();
+            let fresh = Dpc::new(DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() }).run(&prefix).unwrap();
             assert_eq!(out.result.rho, fresh.rho, "rho after {hi}");
             assert_eq!(out.result.dep, fresh.dep, "dep after {hi}");
             assert_eq!(out.result.delta, fresh.delta, "delta after {hi}");
@@ -703,7 +741,7 @@ mod tests {
         for id in ids {
             coord.wait(id).unwrap();
         }
-        let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 }).run(&pts).unwrap();
+        let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }).run(&pts).unwrap();
         let entry = coord.stream(sid).unwrap();
         let s = entry.session.lock().unwrap();
         assert_eq!(s.rho(), &fresh.rho[..]);

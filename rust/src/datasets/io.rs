@@ -1,11 +1,15 @@
 //! Point-set IO: a simple little-endian binary format (`PCLB`) and CSV.
 //!
-//! Binary layout: magic `PCLB`, u32 version, u64 n, u32 d, then n·d f64
-//! little-endian coordinates. Used to cache generated datasets between
-//! bench runs and to hand points to external tools.
+//! Binary layout, **version 2** (precision-tagged):
+//! magic `PCLB`, u32 version = 2, u8 dtype tag (4 = f32, 8 = f64 — the
+//! scalar width, self-describing), u64 n, u32 d, then n·d little-endian
+//! scalars of the tagged width. **Version 1** files (magic, u32 version =
+//! 1, u64 n, u32 d, n·d f64) still round-trip — the reader dispatches on
+//! the version field, so every pre-upgrade cache file keeps working.
 //!
-//! Reads return [`DpcError`]: underlying filesystem failures as
-//! `DpcError::Io`, malformed content (bad magic, ragged rows, non-finite
+//! Reads return [`DpcError`] and never a partially-parsed store:
+//! filesystem failures as `DpcError::Io`, malformed content (bad magic,
+//! unknown dtype tag, truncated payload, ragged rows, non-finite
 //! coordinates) as the matching typed variant — nothing in this module
 //! panics on user files.
 
@@ -14,30 +18,50 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{Dtype, DynPoints, PointSet, PointStore, Scalar};
 
 const MAGIC: &[u8; 4] = b"PCLB";
-const VERSION: u32 = 1;
+/// Current write version. v1 (untagged f64) remains readable.
+const VERSION: u32 = 2;
 
 fn bad_data(msg: String) -> DpcError {
     DpcError::Io(std::io::Error::new(std::io::ErrorKind::InvalidData, msg))
 }
 
-/// Write a point set in the binary format.
-pub fn write_binary(pts: &PointSet, path: &Path) -> std::io::Result<()> {
+/// Write a point store of either precision in the v2 binary format.
+/// Streams through the `BufWriter` with one small reused scratch buffer —
+/// no payload-sized allocation.
+pub fn write_binary_store<S: Scalar>(pts: &PointStore<S>, path: &Path) -> std::io::Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&[S::DTYPE.size_bytes() as u8])?;
     w.write_all(&(pts.len() as u64).to_le_bytes())?;
     w.write_all(&(pts.dim() as u32).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(S::BYTES);
     for &c in pts.coords() {
-        w.write_all(&c.to_le_bytes())?;
+        buf.clear();
+        c.write_le(&mut buf);
+        w.write_all(&buf)?;
     }
     Ok(())
 }
 
-/// Read a point set in the binary format.
-pub fn read_binary(path: &Path) -> Result<PointSet, DpcError> {
+/// Write an f64 point set (the pre-generic signature; emits v2 + f64 tag).
+pub fn write_binary(pts: &PointSet, path: &Path) -> std::io::Result<()> {
+    write_binary_store(pts, path)
+}
+
+/// Write a runtime-tagged store, preserving its precision on disk.
+pub fn write_binary_dyn(pts: &DynPoints, path: &Path) -> std::io::Result<()> {
+    match pts {
+        DynPoints::F32(p) => write_binary_store(p, path),
+        DynPoints::F64(p) => write_binary_store(p, path),
+    }
+}
+
+/// Read a binary point file at its stored precision (v1 and v2).
+pub fn read_binary_dyn(path: &Path) -> Result<DynPoints, DpcError> {
     let mut r = BufReader::new(File::open(path)?);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -47,9 +71,16 @@ pub fn read_binary(path: &Path) -> Result<PointSet, DpcError> {
     let mut u4 = [0u8; 4];
     r.read_exact(&mut u4)?;
     let version = u32::from_le_bytes(u4);
-    if version != VERSION {
-        return Err(bad_data(format!("unsupported version {version}")));
-    }
+    let dtype = match version {
+        // v1 predates the dtype tag: payload is always f64.
+        1 => Dtype::F64,
+        2 => {
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            Dtype::from_tag(tag[0]).ok_or(DpcError::UnsupportedDtype { tag: tag[0] })?
+        }
+        other => return Err(bad_data(format!("unsupported version {other}"))),
+    };
     let mut u8b = [0u8; 8];
     r.read_exact(&mut u8b)?;
     let n = u64::from_le_bytes(u8b) as usize;
@@ -58,14 +89,37 @@ pub fn read_binary(path: &Path) -> Result<PointSet, DpcError> {
     if d == 0 || n.checked_mul(d).is_none() {
         return Err(bad_data("bad header".into()));
     }
-    let mut coords = Vec::with_capacity(n * d);
-    for _ in 0..n * d {
-        r.read_exact(&mut u8b)?;
-        coords.push(f64::from_le_bytes(u8b));
+    match dtype {
+        Dtype::F32 => Ok(DynPoints::F32(read_payload::<f32, _>(&mut r, n, d)?)),
+        Dtype::F64 => Ok(DynPoints::F64(read_payload::<f64, _>(&mut r, n, d)?)),
     }
-    let pts = PointSet::try_new(coords, d)?;
+}
+
+/// Decode `n·d` scalars; a short file surfaces as `DpcError::Io`
+/// (UnexpectedEof) before any store is constructed — no partial parses.
+fn read_payload<S: Scalar, R: Read>(r: &mut R, n: usize, d: usize) -> Result<PointStore<S>, DpcError> {
+    let count = n.checked_mul(d).ok_or_else(|| bad_data("bad header".into()))?;
+    // Cap the trust placed in the header's count: preallocating `count`
+    // outright would let a crafted 17-byte file request petabytes and abort
+    // the process inside the allocator. Growing from a bounded capacity
+    // keeps a truncated/corrupt file on the typed-`DpcError::Io` path (the
+    // read_exact below hits EOF long before the Vec grows past the actual
+    // file size).
+    let mut coords = Vec::with_capacity(count.min(1 << 20));
+    let mut buf = vec![0u8; S::BYTES];
+    for _ in 0..count {
+        r.read_exact(&mut buf)?;
+        coords.push(S::read_le(&buf));
+    }
+    let pts = PointStore::try_new(coords, d)?;
     pts.validate_finite()?;
     Ok(pts)
+}
+
+/// Read a binary point file widened to f64 (the pre-generic signature;
+/// f32 payloads convert exactly).
+pub fn read_binary(path: &Path) -> Result<PointSet, DpcError> {
+    Ok(read_binary_dyn(path)?.into_f64())
 }
 
 /// Write CSV (no header, one point per row).
@@ -115,7 +169,7 @@ pub fn read_csv(path: &Path) -> Result<PointSet, DpcError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::proputil::gen_uniform_points;
+    use crate::proputil::{gen_grid_points, gen_uniform_points};
     use crate::prng::SplitMix64;
 
     fn tmpdir() -> std::path::PathBuf {
@@ -133,12 +187,90 @@ mod tests {
         let back = read_binary(&path).unwrap();
         assert_eq!(back.coords(), pts.coords());
         assert_eq!(back.dim(), 3);
+        // The dyn reader reports the stored precision.
+        let dynp = read_binary_dyn(&path).unwrap();
+        assert_eq!(dynp.dtype(), Dtype::F64);
+    }
+
+    #[test]
+    fn f32_binary_roundtrip_preserves_dtype() {
+        let mut rng = SplitMix64::new(7);
+        let pts64 = gen_grid_points(&mut rng, 200, 2, 64);
+        let pts = PointStore::<f32>::try_lossless_from_f64(&pts64).unwrap();
+        let path = tmpdir().join("rt32.pclb");
+        write_binary_store(&pts, &path).unwrap();
+        match read_binary_dyn(&path).unwrap() {
+            DynPoints::F32(back) => assert_eq!(back.coords(), pts.coords()),
+            other => panic!("expected f32 payload, got {:?}", other.dtype()),
+        }
+        // The widening reader recovers the identical f64 coordinates
+        // (lossless by construction here).
+        let widened = read_binary(&path).unwrap();
+        assert_eq!(widened.coords(), pts64.coords());
+        // And the dyn writer round-trips the tag.
+        let path2 = tmpdir().join("rt32b.pclb");
+        write_binary_dyn(&DynPoints::F32(pts.clone()), &path2).unwrap();
+        assert_eq!(read_binary_dyn(&path2).unwrap().dtype(), Dtype::F32);
+    }
+
+    #[test]
+    fn v1_files_still_read() {
+        let mut rng = SplitMix64::new(3);
+        let pts = gen_uniform_points(&mut rng, 40, 2, 5.0);
+        // Hand-rolled v1 header: magic, version=1, n, d, f64 payload.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(pts.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(pts.dim() as u32).to_le_bytes());
+        for &c in pts.coords() {
+            bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        let path = tmpdir().join("v1.pclb");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_binary(&path).unwrap();
+        assert_eq!(back.coords(), pts.coords());
+        assert_eq!(read_binary_dyn(&path).unwrap().dtype(), Dtype::F64);
     }
 
     #[test]
     fn binary_rejects_garbage() {
         let path = tmpdir().join("garbage.pclb");
         std::fs::write(&path, b"NOTAPOINTSET").unwrap();
+        assert!(read_binary(&path).is_err());
+    }
+
+    #[test]
+    fn binary_rejects_bad_dtype_tag_and_truncation() {
+        // A v2 header with an unknown dtype tag.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.push(3); // not 4 or 8
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        let path = tmpdir().join("badtag.pclb");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(read_binary(&path), Err(DpcError::UnsupportedDtype { tag: 3 })));
+
+        // A v2 file whose payload is cut short: typed Io error, no partial
+        // store.
+        let mut rng = SplitMix64::new(4);
+        let pts = gen_uniform_points(&mut rng, 10, 2, 5.0);
+        let path = tmpdir().join("trunc.pclb");
+        write_binary(&pts, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(matches!(read_binary(&path), Err(DpcError::Io(_))));
+
+        // A file truncated inside the dtype byte itself.
+        std::fs::write(&path, &full[..8]).unwrap();
+        assert!(matches!(read_binary(&path), Err(DpcError::Io(_))));
+
+        // Future versions are rejected, not misparsed.
+        let mut bytes = full.clone();
+        bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
         assert!(read_binary(&path).is_err());
     }
 

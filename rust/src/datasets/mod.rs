@@ -47,7 +47,7 @@ pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "uniform".into(),
                 pts: synthetic::uniform(n, 2, extent, seed),
-                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() },
                 paper_n: 10_000_000,
             }
         }
@@ -56,7 +56,7 @@ pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "simden".into(),
                 pts: synthetic::simden(n, 2, seed),
-                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() },
                 paper_n: 10_000_000,
             }
         }
@@ -65,7 +65,7 @@ pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "varden".into(),
                 pts: synthetic::varden(n, 2, seed),
-                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 },
+                params: DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() },
                 paper_n: 10_000_000,
             }
         }
@@ -74,7 +74,7 @@ pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "geolife".into(),
                 pts: surrogate::geolife_like(n, seed),
-                params: DpcParams { d_cut: 1.0, rho_min: 10.0, delta_min: 10.0 },
+                params: DpcParams { d_cut: 1.0, rho_min: 10.0, delta_min: 10.0, ..DpcParams::default() },
                 paper_n: 24_876_978,
             }
         }
@@ -83,7 +83,7 @@ pub fn by_name(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "pamap2".into(),
                 pts: surrogate::pamap2_like(n, seed),
-                params: DpcParams { d_cut: 0.02, rho_min: 20.0, delta_min: 0.2 },
+                params: DpcParams { d_cut: 0.02, rho_min: 20.0, delta_min: 0.2, ..DpcParams::default() },
                 paper_n: 259_803,
             }
         }
@@ -99,7 +99,7 @@ fn by_name2(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "sensor".into(),
                 pts: surrogate::sensor_like(n, seed),
-                params: DpcParams { d_cut: 0.2, rho_min: 5.0, delta_min: 2.0 },
+                params: DpcParams { d_cut: 0.2, rho_min: 5.0, delta_min: 2.0, ..DpcParams::default() },
                 paper_n: 3_843_160,
             }
         }
@@ -108,7 +108,7 @@ fn by_name2(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "ht".into(),
                 pts: surrogate::ht_like(n, seed),
-                params: DpcParams { d_cut: 0.5, rho_min: 30.0, delta_min: 10.0 },
+                params: DpcParams { d_cut: 0.5, rho_min: 30.0, delta_min: 10.0, ..DpcParams::default() },
                 paper_n: 928_991,
             }
         }
@@ -117,7 +117,7 @@ fn by_name2(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "query".into(),
                 pts: surrogate::query_like(n, seed),
-                params: DpcParams { d_cut: 0.01, rho_min: 0.0, delta_min: 0.05 },
+                params: DpcParams { d_cut: 0.01, rho_min: 0.0, delta_min: 0.05, ..DpcParams::default() },
                 paper_n: 50_000,
             }
         }
@@ -126,7 +126,7 @@ fn by_name2(name: &str, n: Option<usize>, seed: u64) -> Option<Dataset> {
             Dataset {
                 name: "gowalla".into(),
                 pts: surrogate::gowalla_like(n, seed),
-                params: DpcParams { d_cut: 0.03, rho_min: 0.0, delta_min: 40.0 },
+                params: DpcParams { d_cut: 0.03, rho_min: 0.0, delta_min: 40.0, ..DpcParams::default() },
                 paper_n: 1_256_248,
             }
         }

@@ -386,7 +386,7 @@ mod tests {
     fn approx_clusters_well_separated_blobs_like_exact() {
         let mut rng = SplitMix64::new(74);
         let pts = two_blobs(&mut rng);
-        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 };
+        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() };
         let exact = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).unwrap();
         let approx = run_approx(&pts, params);
         assert_eq!(exact.num_clusters, 2);
@@ -399,7 +399,7 @@ mod tests {
     fn approx_density_close_to_exact_on_uniform() {
         let mut rng = SplitMix64::new(75);
         let pts = crate::proputil::gen_uniform_points(&mut rng, 500, 2, 40.0);
-        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: 10.0 };
+        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() };
         let exact_rho = crate::dpc::compute_density(&pts, params.d_cut, crate::dpc::DensityAlgo::TreePruned);
         let grid = Grid::build(&pts, params.d_cut);
         let approx_rho = approx_density(&pts, &grid, params.d_cut);

@@ -127,7 +127,7 @@ mod tests {
     #[test]
     fn top_decision_points_are_the_blob_centers() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         // Top 3 by ρ·δ should each come from a different blob.
         let blob_of = |id: u32| (id / 100) as usize;
@@ -140,18 +140,18 @@ mod tests {
     #[test]
     fn suggested_delta_separates_k_clusters() {
         let pts = blobs();
-        let params0 = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 1.0 };
+        let params0 = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() };
         let out = Dpc::new(params0).run(&pts).unwrap();
         let graph = decision_graph(&out);
         let (rho_min, delta_min) = suggest_params(&graph, 3).unwrap();
-        let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
+        let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min, ..DpcParams::default() }).run(&pts).unwrap();
         assert_eq!(out2.num_clusters, 3);
     }
 
     #[test]
     fn suggest_params_rejects_out_of_range_k() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         assert!(matches!(suggest_params(&graph, 0), Err(DpcError::InvalidParam { name: "k", .. })));
         assert!(matches!(suggest_params(&graph, graph.len() + 1), Err(DpcError::InvalidParam { name: "k", .. })));
@@ -160,7 +160,7 @@ mod tests {
     #[test]
     fn csv_roundtrip_shape() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         let mut buf = Vec::new();
         write_csv(&graph, &mut buf).unwrap();
@@ -172,7 +172,7 @@ mod tests {
     #[test]
     fn ascii_plot_is_well_formed() {
         let pts = blobs();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0 }).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() }).run(&pts).unwrap();
         let graph = decision_graph(&out);
         let plot = ascii_plot(&graph, 40, 10);
         assert_eq!(plot.lines().count(), 12); // header + 10 rows + axis

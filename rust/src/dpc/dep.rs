@@ -12,7 +12,7 @@
 
 use crate::dpc::priority_key;
 use crate::fenwick::FenwickDep;
-use crate::geom::PointSet;
+use crate::geom::{PointStore, Scalar};
 use crate::kdtree::incomplete::IncompleteKdTree;
 use crate::kdtree::incremental::IncrementalKdTree;
 use crate::kdtree::{KdTree, NoStats};
@@ -23,7 +23,7 @@ use super::DepAlgo;
 
 /// Dispatch to the chosen algorithm. Returns `dep[i] = Some(λ(x_i))`, or
 /// `None` for noise points and the global priority peak.
-pub fn compute_dependents(pts: &PointSet, rho: &[u32], rho_min: f64, algo: DepAlgo) -> Vec<Option<u32>> {
+pub fn compute_dependents<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64, algo: DepAlgo) -> Vec<Option<u32>> {
     match algo {
         DepAlgo::Naive => dep_naive(pts, rho, rho_min),
         DepAlgo::ExactBaseline => dep_exact_baseline(pts, rho, rho_min),
@@ -33,10 +33,13 @@ pub fn compute_dependents(pts: &PointSet, rho: &[u32], rho_min: f64, algo: DepAl
     }
 }
 
-/// δ(x_i) = D(x_i, λ(x_i)); ∞ where λ is undefined (Definition 3).
-pub fn dependent_distances(pts: &PointSet, dep: &[Option<u32>]) -> Vec<f64> {
+/// δ(x_i) = D(x_i, λ(x_i)); ∞ where λ is undefined (Definition 3). The
+/// squared distance accumulates in `S`; the single sqrt always runs in f64,
+/// so δ is bit-deterministic per precision (and across precisions whenever
+/// the coordinates are losslessly representable in both).
+pub fn dependent_distances<S: Scalar>(pts: &PointStore<S>, dep: &[Option<u32>]) -> Vec<f64> {
     parlay::par_map(dep.len(), |i| match dep[i] {
-        Some(j) => pts.dist_sq(i, j as usize).sqrt(),
+        Some(j) => pts.dist_sq(i, j as usize).to_f64().sqrt(),
         None => f64::INFINITY,
     })
 }
@@ -47,7 +50,7 @@ fn gammas(rho: &[u32]) -> Vec<u64> {
 
 /// Θ(n²) all-pairs scan ("Original DPC" row of Table 1): parallel over
 /// queries, O(1) span each.
-pub fn dep_naive(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+pub fn dep_naive<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let n = pts.len();
     let gamma = gammas(rho);
     parlay::par_map_grained(n, crate::dpc::QUERY_GRAIN, |i| {
@@ -56,7 +59,7 @@ pub fn dep_naive(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> 
         }
         let gi = gamma[i];
         let q = pts.point(i);
-        let mut best: Option<(u32, f64)> = None;
+        let mut best: Option<(u32, S)> = None;
         for j in 0..n {
             if gamma[j] <= gi {
                 continue;
@@ -81,7 +84,7 @@ fn desc_priority_order(gamma: &[u64]) -> Vec<u32> {
 /// DPC-EXACT-BASELINE (Amagata–Hara [3]): points inserted into an
 /// *incremental* kd-tree in descending priority order; each point queries its
 /// NN among previously-inserted (= higher priority) points, **sequentially**.
-pub fn dep_exact_baseline(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+pub fn dep_exact_baseline<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let order = desc_priority_order(&gamma);
     let mut tree = IncrementalKdTree::new(pts);
@@ -98,7 +101,7 @@ pub fn dep_exact_baseline(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Opti
 /// DPC-INCOMPLETE (§4.1): same sequential loop, but over a balanced
 /// *incomplete* kd-tree — activation replaces insertion, queries prune
 /// inactive subtrees. Faster per query; still O(n log n) span overall.
-pub fn dep_incomplete(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+pub fn dep_incomplete<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let order = desc_priority_order(&gamma);
     let tree = KdTree::build_with_maps(pts);
@@ -117,7 +120,7 @@ pub fn dep_incomplete(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u
 
 /// DPC-PRIORITY (§4.3, Algorithm 1): build a priority search kd-tree once,
 /// then one fully-parallel priority-NN query per non-noise point.
-pub fn dep_priority(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+pub fn dep_priority<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let tree = PriorityKdTree::build(pts, &gamma);
     parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
@@ -130,7 +133,7 @@ pub fn dep_priority(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32
 
 /// DPC-FENWICK (§5, Algorithm 2): Fenwick decomposition over the descending
 /// density order, one kd-tree per block, fully-parallel queries.
-pub fn dep_fenwick(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
+pub fn dep_fenwick<S: Scalar>(pts: &PointStore<S>, rho: &[u32], rho_min: f64) -> Vec<Option<u32>> {
     let gamma = gammas(rho);
     let fen = FenwickDep::build(pts, &gamma);
     parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
@@ -145,6 +148,7 @@ pub fn dep_fenwick(pts: &PointSet, rho: &[u32], rho_min: f64) -> Vec<Option<u32>
 mod tests {
     use super::*;
     use crate::dpc::{compute_density, DensityAlgo};
+    use crate::geom::PointSet;
     use crate::proputil::{gen_clustered_points, gen_degenerate_points, gen_uniform_points};
     use crate::prng::SplitMix64;
 

@@ -9,7 +9,7 @@
 //! entirely and labeled −1.
 
 use crate::dpc::{DpcParams, dep::dependent_distances};
-use crate::geom::PointSet;
+use crate::geom::{PointStore, Scalar};
 use crate::parlay;
 use crate::unionfind::ConcurrentUnionFind;
 
@@ -22,7 +22,7 @@ pub struct LinkageOutput {
 }
 
 /// Algorithm 3 (with the noise handling of Definitions 4-5 made explicit).
-pub fn single_linkage(pts: &PointSet, rho: &[u32], dep: &[Option<u32>], params: DpcParams) -> LinkageOutput {
+pub fn single_linkage<S: Scalar>(pts: &PointStore<S>, rho: &[u32], dep: &[Option<u32>], params: DpcParams) -> LinkageOutput {
     let n = pts.len();
     let delta = dependent_distances(pts, dep);
     let is_noise: Vec<bool> = parlay::par_map(n, |i| (rho[i] as f64) < params.rho_min);
@@ -71,7 +71,7 @@ mod tests {
     fn every_non_noise_point_labeled_with_a_center() {
         let mut rng = SplitMix64::new(61);
         let pts = gen_clustered_points(&mut rng, 500, 2, 4, 200.0, 2.0);
-        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 30.0 };
+        let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 30.0, ..DpcParams::default() };
         let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
         let dep = compute_dependents(&pts, &rho, params.rho_min, DepAlgo::Priority);
         let out = single_linkage(&pts, &rho, &dep, params);
@@ -94,7 +94,7 @@ mod tests {
         // With δ_min = ∞ only the global peak(s) are centers.
         let mut rng = SplitMix64::new(62);
         let pts = gen_clustered_points(&mut rng, 200, 2, 2, 100.0, 2.0);
-        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: f64::INFINITY };
+        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: f64::INFINITY, ..DpcParams::default() };
         let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
         let dep = compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
         let out = single_linkage(&pts, &rho, &dep, params);
@@ -108,7 +108,7 @@ mod tests {
     fn delta_min_zero_means_every_point_is_a_center() {
         let mut rng = SplitMix64::new(63);
         let pts = gen_clustered_points(&mut rng, 100, 2, 2, 50.0, 2.0);
-        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: 0.0 };
+        let params = DpcParams { d_cut: 5.0, rho_min: 0.0, delta_min: 0.0, ..DpcParams::default() };
         let rho = compute_density(&pts, params.d_cut, DensityAlgo::TreePruned);
         let dep = compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority);
         let out = single_linkage(&pts, &rho, &dep, params);

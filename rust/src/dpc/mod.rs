@@ -24,24 +24,33 @@ pub use session::{ClusterSession, DepArtifacts, SessionStats};
 pub use stream::{StreamStats, StreamingSession};
 
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
+
+pub use crate::geom::Dtype;
 
 /// DPC hyper-parameters (Table 2 of the paper lists per-dataset choices).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DpcParams {
     /// Density radius (ρ(x) counts points with D(x,·) ≤ d_cut).
+    /// Interpreted at the store's precision: every layer converts it with
+    /// [`crate::geom::radius_sq`] (round the radius, then square in `S`).
     pub d_cut: f64,
     /// Noise threshold: ρ < ρ_min ⇒ noise point (Definition 4).
     pub rho_min: f64,
     /// Cluster-center threshold: δ ≥ δ_min ⇒ center (Definition 5).
     pub delta_min: f64,
+    /// Requested coordinate precision. The generic pipeline entry points
+    /// ignore it (the store's scalar type is the source of truth); dtype
+    /// boundaries — the CLI, `serve` lines, and the coordinator's ingestion
+    /// of raw f64 data — use it to pick which [`PointStore`] to build.
+    pub dtype: Dtype,
 }
 
 impl Default for DpcParams {
     fn default() -> Self {
-        DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::INFINITY }
+        DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::INFINITY, dtype: Dtype::F64 }
     }
 }
 
@@ -188,7 +197,12 @@ impl Dpc {
     /// compose [`compute_density`] + [`dep::compute_dependents`] +
     /// [`linkage::single_linkage`] directly (the coordinator's per-job
     /// pipeline does).
-    pub fn run(&self, pts: &PointSet) -> Result<DpcResult, DpcError> {
+    ///
+    /// Generic over the store's [`Scalar`]: pass a `PointStore<f32>` to run
+    /// the identical (exact-per-precision) pipeline at half the memory
+    /// bandwidth. `params.dtype` is not consulted here — the store's own
+    /// precision is authoritative.
+    pub fn run<S: Scalar>(&self, pts: &PointStore<S>) -> Result<DpcResult, DpcError> {
         session::validate_params(&self.params)?;
         let mut s = ClusterSession::build(pts)?.with_density_algo(self.density_algo);
         s.run(self.params, self.dep_algo)
@@ -201,9 +215,10 @@ impl Dpc {
 /// something to rebalance.
 pub(crate) const QUERY_GRAIN: usize = 64;
 
-/// Step 1: ρ for every point.
-pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32> {
-    let r_sq = d_cut * d_cut;
+/// Step 1: ρ for every point. Generic over the store's [`Scalar`]; the
+/// radius is interpreted at that precision (see [`radius_sq`]).
+pub fn compute_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, algo: DensityAlgo) -> Vec<u32> {
+    let r_sq: S = radius_sq(d_cut);
     match algo {
         DensityAlgo::Naive => {
             let n = pts.len();
@@ -251,6 +266,7 @@ pub fn compute_density(pts: &PointSet, d_cut: f64, algo: DensityAlgo) -> Vec<u32
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::PointSet;
     use crate::proputil::{gen_clustered_points, gen_uniform_points};
     use crate::prng::SplitMix64;
 
@@ -295,7 +311,7 @@ mod tests {
             coords.push(rng.uniform(100.0, 105.0));
         }
         let pts = PointSet::new(coords, 2);
-        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0 };
+        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() };
         for algo in DepAlgo::ALL {
             let out = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
             assert_eq!(out.num_clusters, 2, "algo {algo:?}");
@@ -313,7 +329,7 @@ mod tests {
     fn all_dep_algos_identical_results() {
         let mut rng = SplitMix64::new(43);
         let pts = gen_clustered_points(&mut rng, 500, 2, 4, 100.0, 3.0);
-        let params = DpcParams { d_cut: 5.0, rho_min: 2.0, delta_min: 10.0 };
+        let params = DpcParams { d_cut: 5.0, rho_min: 2.0, delta_min: 10.0, ..DpcParams::default() };
         let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
         for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
             let out = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
@@ -337,7 +353,7 @@ mod tests {
             coords.push(1000.0);
         }
         let pts = PointSet::new(coords, 2);
-        let params = DpcParams { d_cut: 3.0, rho_min: 5.0, delta_min: 100.0 };
+        let params = DpcParams { d_cut: 3.0, rho_min: 5.0, delta_min: 100.0, ..DpcParams::default() };
         let out = Dpc::new(params).run(&pts).unwrap();
         assert_eq!(out.num_noise, 5);
         for i in 200..205 {

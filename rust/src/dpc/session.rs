@@ -6,8 +6,11 @@
 //! Step 3 (single-linkage) depends on those thresholds. A
 //! [`ClusterSession`] therefore splits the pipeline into cached stages:
 //!
-//! 1. [`ClusterSession::build`] validates the input; the session owns the
-//!    kd-tree, built **once** on the first tree-backed density call;
+//! 1. [`ClusterSession::build`] validates the input and pins the caller's
+//!    [`PointStore`] **by refcount** (the `Arc<[S]>` coordinate buffer is
+//!    shared, never copied — [`SessionStats::tree_shares_store`] is the
+//!    live observable); the session's kd-tree is built **once** on the first
+//!    tree-backed density call and shares the same buffer;
 //! 2. [`ClusterSession::density`] computes ρ for a radius, cached per
 //!    `d_cut`;
 //! 3. [`ClusterSession::dependents`] computes the *full* dependency forest
@@ -20,13 +23,17 @@
 //! (only *queries* are skipped for noise points), so masking the full forest
 //! by a threshold reproduces exactly what a thresholded Step 2 would have
 //! produced. `rust/tests/session.rs` holds the property proof.
+//!
+//! Sessions are generic over the coordinate [`Scalar`]; an f32 session runs
+//! the identical algorithms on half the memory bandwidth, exact at f32
+//! precision (and byte-identical to f64 on losslessly-representable data).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
 
@@ -51,13 +58,20 @@ struct DensityArtifacts {
 }
 
 /// Compute/reuse counters — the observable proof that re-cuts do not redo
-/// Steps 1–2.
+/// Steps 1–2, and that the session never deep-copies its input.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SessionStats {
     pub density_computes: u64,
     pub density_cache_hits: u64,
     pub dep_computes: u64,
     pub dep_cache_hits: u64,
+    /// Does the session's kd-tree alias the session store's coordinate
+    /// buffer? Computed **live** in [`ClusterSession::stats`] by pointer
+    /// comparison (vacuously `true` before the tree exists) — a regression
+    /// that rebuilds the tree over a deep copy shows up here as `false`,
+    /// with no counter anyone has to remember to bump. Caller-side
+    /// aliasing is checked via [`ClusterSession::shares_storage_with`].
+    pub tree_shares_store: bool,
 }
 
 /// A staged, artifact-caching clustering session over one point set.
@@ -75,13 +89,14 @@ pub struct SessionStats {
 /// assert_eq!(first.rho, recut.rho);
 /// # Ok::<(), parcluster::error::DpcError>(())
 /// ```
-pub struct ClusterSession<'p> {
-    pts: &'p PointSet,
+pub struct ClusterSession<S: Scalar = f64> {
+    /// Refcount share of the caller's store (no coordinate copy).
+    pts: PointStore<S>,
     /// The session's amortized index: built on the first tree-backed
     /// density call, then reused by every later radius. Lazy so the
     /// baseline/naive density ablations never pay for a tree they don't
-    /// traverse.
-    tree: Option<KdTree<'p>>,
+    /// traverse. Shares the store's buffer by refcount.
+    tree: Option<KdTree<S>>,
     density_algo: DensityAlgo,
     rho_cache: HashMap<u64, DensityArtifacts>,
     dep_cache: HashMap<(u64, DepAlgo), Arc<DepArtifacts>>,
@@ -92,17 +107,18 @@ pub struct ClusterSession<'p> {
     stats: SessionStats,
 }
 
-impl<'p> ClusterSession<'p> {
+impl<S: Scalar> ClusterSession<S> {
     /// Validate the input (non-empty, finite coordinates) and open the
-    /// session. The owned kd-tree is built on the first tree-backed
-    /// `density` call and amortized across every radius after that.
-    pub fn build(pts: &'p PointSet) -> Result<Self, DpcError> {
+    /// session over a refcount share of `pts`. The owned kd-tree is built
+    /// on the first tree-backed `density` call and amortized across every
+    /// radius after that.
+    pub fn build(pts: &PointStore<S>) -> Result<Self, DpcError> {
         if pts.is_empty() {
             return Err(DpcError::EmptyInput);
         }
         pts.validate_finite()?;
         Ok(ClusterSession {
-            pts,
+            pts: pts.clone(),
             tree: None,
             density_algo: DensityAlgo::TreePruned,
             rho_cache: HashMap::new(),
@@ -121,12 +137,24 @@ impl<'p> ClusterSession<'p> {
         self
     }
 
-    pub fn points(&self) -> &PointSet {
-        self.pts
+    pub fn points(&self) -> &PointStore<S> {
+        &self.pts
+    }
+
+    /// Does the session (and, once built, its kd-tree) still share the
+    /// caller's coordinate allocation? Diagnostic for the no-clone
+    /// contract; `true` whenever `other` is the store the session was built
+    /// from (or any refcount sibling of it).
+    pub fn shares_storage_with(&self, other: &PointStore<S>) -> bool {
+        let tree_shares = self.tree.as_ref().map(|t| t.points().shares_storage(other)).unwrap_or(true);
+        self.pts.shares_storage(other) && tree_shares
     }
 
     pub fn stats(&self) -> SessionStats {
-        self.stats
+        let mut s = self.stats;
+        s.tree_shares_store =
+            self.tree.as_ref().map(|t| t.points().shares_storage(&self.pts)).unwrap_or(true);
+        s
     }
 
     /// Radius of the currently active density stage, if any.
@@ -146,9 +174,9 @@ impl<'p> ClusterSession<'p> {
             let t = Instant::now();
             let rho = match self.density_algo {
                 DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune => {
-                    let pts = self.pts;
+                    let pts = &self.pts;
                     let tree = &*self.tree.get_or_insert_with(|| KdTree::build(pts));
-                    let r_sq = d_cut * d_cut;
+                    let r_sq: S = radius_sq(d_cut);
                     let prune = self.density_algo == DensityAlgo::TreePruned;
                     parlay::par_map_grained(pts.len(), crate::dpc::QUERY_GRAIN, |i| {
                         let q = pts.point(i);
@@ -160,7 +188,7 @@ impl<'p> ClusterSession<'p> {
                         c as u32
                     })
                 }
-                other => compute_density(self.pts, d_cut, other),
+                other => compute_density(&self.pts, d_cut, other),
             };
             let secs = t.elapsed().as_secs_f64();
             self.rho_cache.insert(key, DensityArtifacts { rho: Arc::new(rho), secs });
@@ -190,8 +218,8 @@ impl<'p> ClusterSession<'p> {
         let t = Instant::now();
         // rho_min = 0: compute every point's dependent so any later noise
         // threshold is a pure mask (candidate sets are threshold-free).
-        let dep = dep::compute_dependents(self.pts, &rho, 0.0, algo);
-        let delta = dep::dependent_distances(self.pts, &dep);
+        let dep = dep::compute_dependents(&self.pts, &rho, 0.0, algo);
+        let delta = dep::dependent_distances(&self.pts, &dep);
         let secs = t.elapsed().as_secs_f64();
         let art = Arc::new(DepArtifacts { dep, delta, secs });
         self.dep_cache.insert(key, Arc::clone(&art));
@@ -207,10 +235,10 @@ impl<'p> ClusterSession<'p> {
         let d_cut = self.active_d_cut.ok_or(DpcError::MissingStage { need: "density", call: "cut" })?;
         let algo = self.active_algo.ok_or(DpcError::MissingStage { need: "dependents", call: "cut" })?;
         validate_thresholds(rho_min, delta_min)?;
-        let params = DpcParams { d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut, rho_min, delta_min, dtype: S::DTYPE };
         let density = &self.rho_cache[&d_cut.to_bits()];
         let art = &self.dep_cache[&(d_cut.to_bits(), algo)];
-        let mut out = cut_cached(self.pts, &density.rho, &art.dep, &art.delta, params);
+        let mut out = cut_cached(&self.pts, &density.rho, &art.dep, &art.delta, params);
         out.timings.density_s = density.secs;
         out.timings.dep_s = art.secs;
         Ok(out)
@@ -229,8 +257,8 @@ impl<'p> ClusterSession<'p> {
 /// forest by `rho_min`, union non-center non-noise points with their
 /// dependents, and assemble a [`DpcResult`]. Shared by
 /// [`ClusterSession::cut`] and the coordinator's session-scoped recut jobs.
-pub fn cut_cached(
-    pts: &PointSet,
+pub fn cut_cached<S: Scalar>(
+    pts: &PointStore<S>,
     rho: &[u32],
     dep_full: &[Option<u32>],
     delta_full: &[f64],
@@ -261,7 +289,7 @@ pub fn cut_cached(
 
 /// Validate the input for one-shot entry points that skip session
 /// construction (the coordinator's engine pipeline).
-pub fn validate_points(pts: &PointSet) -> Result<(), DpcError> {
+pub fn validate_points<S: Scalar>(pts: &PointStore<S>) -> Result<(), DpcError> {
     if pts.is_empty() {
         return Err(DpcError::EmptyInput);
     }
@@ -302,6 +330,7 @@ pub fn validate_params(params: &DpcParams) -> Result<(), DpcError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::{Dtype, PointSet};
     use crate::prng::SplitMix64;
     use crate::proputil::gen_clustered_points;
 
@@ -350,6 +379,40 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.density_computes, 1);
         assert_eq!(st.dep_computes, 1);
+    }
+
+    #[test]
+    fn session_shares_callers_buffer_without_copies() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        // Before the tree exists and after: always the caller's allocation.
+        assert!(s.shares_storage_with(&pts));
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        s.cut(0.0, 10.0).unwrap();
+        s.cut(2.0, 5.0).unwrap();
+        assert!(s.shares_storage_with(&pts));
+        assert!(s.stats().tree_shares_store);
+        // A refcount sibling of the caller's store counts as sharing too.
+        let sibling = pts.clone();
+        assert!(s.shares_storage_with(&sibling));
+    }
+
+    #[test]
+    fn f32_session_matches_oneshot_f32_run() {
+        let pts64 = blobs();
+        let pts = crate::geom::PointStore::<f32>::cast_from_f64(&pts64);
+        let mut s = ClusterSession::build(&pts).unwrap();
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Fenwick).unwrap();
+        let recut = s.cut(1.0, 8.0).unwrap();
+        let params = DpcParams { d_cut: 4.0, rho_min: 1.0, delta_min: 8.0, dtype: Dtype::F32 };
+        let fresh = crate::dpc::Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(&pts).unwrap();
+        assert_eq!(recut.rho, fresh.rho);
+        assert_eq!(recut.dep, fresh.dep);
+        assert_eq!(recut.delta, fresh.delta);
+        assert_eq!(recut.labels, fresh.labels);
+        assert!(s.shares_storage_with(&pts));
     }
 
     #[test]

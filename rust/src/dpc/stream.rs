@@ -30,56 +30,52 @@
 //! [`super::ClusterSession`] built on the concatenated point set, for all
 //! five [`super::DepAlgo`]s (they agree with each other by the paper's
 //! exactness invariant, so the streaming path is algorithm-independent).
-//! `rust/tests/conformance.rs` enforces it; `benches/stream_ingest.rs`
-//! measures the ingest-vs-rebuild win.
+//! `rust/tests/conformance.rs` enforces it — at both precisions;
+//! `benches/stream_ingest.rs` measures the ingest-vs-rebuild win.
 //!
-//! Trade-offs: rebuilt levels snapshot the full coordinate buffer (an
-//! `Arc` per level) so older trees stay valid while the set grows —
-//! worst-case snapshot memory is O(n log n) coordinates, the same bound as
-//! the Fenwick structure's block trees. And while the *heavy* work (tree
-//! rebuilds, range counts, full priority-NN queries) is confined to the
-//! batch and its neighborhood, each ingest still makes O(n) cheap passes
-//! (the bump array and one pruned seeded race per retained point), so the
-//! win over a full rebuild is the constant-factor gap between a pruned
-//! race and a full pipeline — large (see `benches/stream_ingest.rs`), but
-//! tiny per-point batches over huge sessions should be coalesced by the
-//! caller.
+//! Storage: every level tree pins the [`PointStore`] snapshot it was built
+//! against **by refcount** (the store's `Arc<[S]>` buffer). An ingest
+//! allocates one new concatenated buffer (unavoidable growth); the repair
+//! passes and all rebuilt trees then share it — no defensive snapshot
+//! copies, and no `unsafe` lifetime extension (the pre-generic code
+//! transmuted a borrowed tree to `'static`; an owning tree makes that
+//! machinery vanish). Worst-case pinned memory is O(n log n) coordinates,
+//! the same bound as the Fenwick structure's block trees. And while the
+//! *heavy* work (tree rebuilds, range counts, full priority-NN queries) is
+//! confined to the batch and its neighborhood, each ingest still makes O(n)
+//! cheap passes (the bump array and one pruned seeded race per retained
+//! point), so the win over a full rebuild is the constant-factor gap
+//! between a pruned race and a full pipeline — large (see
+//! `benches/stream_ingest.rs`), but tiny per-point batches over huge
+//! sessions should be coalesced by the caller.
 
 use std::sync::atomic::{AtomicU32, Ordering as AtomicOrdering};
-use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::DpcError;
-use crate::geom::PointSet;
+use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
 
 use super::{priority_key, session, DpcParams, DpcResult};
 
 /// One forest level: a static kd-tree over exactly 2^k of the session's
-/// points, pinned to the coordinate snapshot it was built against.
-struct OwnedLevel {
+/// points. The tree owns a refcount share of the coordinate snapshot it was
+/// built against, so the session's store may grow (allocate a new buffer)
+/// without invalidating preserved levels.
+struct OwnedLevel<S: Scalar> {
     k: u32,
     /// Global point ids this level owns (also in the tree's permutation;
     /// kept separately so merges can reclaim them without tree accessors).
     ids: Vec<u32>,
-    tree: KdTree<'static>,
-    /// Keeps the snapshot behind `tree` alive; the session's own point set
-    /// may grow (and reallocate) after this level is built.
-    _snapshot: Arc<PointSet>,
+    tree: KdTree<S>,
 }
 
-impl OwnedLevel {
-    fn build(snapshot: Arc<PointSet>, k: u32, ids: Vec<u32>) -> Self {
+impl<S: Scalar> OwnedLevel<S> {
+    fn build(snapshot: &PointStore<S>, k: u32, ids: Vec<u32>) -> Self {
         debug_assert_eq!(ids.len(), 1usize << k);
-        let tree = KdTree::build_from_ids(&snapshot, ids.clone());
-        // SAFETY: `tree` borrows the PointSet owned by `_snapshot`. The Arc
-        // is immutable, heap-pinned, and held for the level's whole life
-        // (declared after `tree`, so it also outlives it on drop), and the
-        // extended-lifetime tree is never handed out — accessors reborrow at
-        // `&self`.
-        let tree = unsafe { std::mem::transmute::<KdTree<'_>, KdTree<'static>>(tree) };
-        OwnedLevel { k, ids, tree, _snapshot: snapshot }
+        let tree = KdTree::build_from_ids(snapshot, ids.clone());
+        OwnedLevel { k, ids, tree }
     }
 }
 
@@ -109,25 +105,28 @@ pub struct StreamStats {
 }
 
 /// An incremental, exact clustering session over a growing point set.
+/// Generic over the coordinate [`Scalar`] — the constructor has no
+/// store-typed argument, so name the precision at the call site
+/// (`StreamingSession::<f32>::new(..)`).
 ///
 /// ```no_run
 /// use parcluster::dpc::stream::StreamingSession;
 /// use parcluster::datasets::synthetic;
 ///
 /// let pts = synthetic::uniform(10_000, 2, 1000.0, 42);
-/// let mut s = StreamingSession::new(2, 30.0)?;
+/// let mut s = StreamingSession::<f64>::new(2, 30.0)?;
 /// s.ingest(&pts)?;                  // first batch: builds the forest
 /// s.ingest(&pts)?;                  // later batches: amortized repair
 /// let out = s.cut(0.0, 100.0)?;     // identical to a from-scratch session
 /// println!("{} clusters", out.num_clusters);
 /// # Ok::<(), parcluster::error::DpcError>(())
 /// ```
-pub struct StreamingSession {
+pub struct StreamingSession<S: Scalar = f64> {
     d_cut: f64,
-    pts: Arc<PointSet>,
+    pts: PointStore<S>,
     /// Invariant: distinct `k`s, descending — the binary representation of
     /// `pts.len()`.
-    levels: Vec<OwnedLevel>,
+    levels: Vec<OwnedLevel<S>>,
     rho: Vec<u32>,
     /// `priority_key(rho[i], i)` per point, maintained in place: an ingest
     /// rewrites only the raised entries instead of rebuilding the array.
@@ -139,7 +138,7 @@ pub struct StreamingSession {
     stats: StreamStats,
 }
 
-impl StreamingSession {
+impl<S: Scalar> StreamingSession<S> {
     /// Open an empty session at a fixed density radius. The radius is part
     /// of the maintained state (ρ is relative to it), so it cannot change
     /// mid-stream — open a new session for a new radius.
@@ -150,7 +149,7 @@ impl StreamingSession {
         session::validate_d_cut(d_cut)?;
         Ok(StreamingSession {
             d_cut,
-            pts: Arc::new(PointSet::empty(dim)),
+            pts: PointStore::empty(dim),
             levels: Vec::new(),
             rho: Vec::new(),
             gamma: Vec::new(),
@@ -177,7 +176,7 @@ impl StreamingSession {
     }
 
     /// All points ingested so far, in ingest order (ids are stable).
-    pub fn points(&self) -> &PointSet {
+    pub fn points(&self) -> &PointStore<S> {
         &self.pts
     }
 
@@ -205,12 +204,20 @@ impl StreamingSession {
         self.levels.iter().map(|lv| 1usize << lv.k).collect()
     }
 
+    /// How many forest levels pin the *current* coordinate buffer by
+    /// refcount (the rest pin older snapshots). Diagnostic for the
+    /// no-defensive-copy contract: levels rebuilt by the latest merge
+    /// always share the latest buffer.
+    pub fn levels_sharing_current_buffer(&self) -> usize {
+        self.levels.iter().filter(|lv| lv.tree.points().shares_storage(&self.pts)).count()
+    }
+
     /// Absorb a batch of points, repairing ρ and the (λ, δ) forest so the
     /// session state equals a from-scratch build on the concatenated set.
     /// An empty batch is a no-op; a batch of the wrong dimension or with
     /// non-finite coordinates is rejected (positions in [`DpcError`] are
     /// batch-local) and leaves the session untouched.
-    pub fn ingest(&mut self, batch: &PointSet) -> Result<(), DpcError> {
+    pub fn ingest(&mut self, batch: &PointStore<S>) -> Result<(), DpcError> {
         if batch.dim() != self.pts.dim() {
             return Err(DpcError::DimensionMismatch { expected: self.pts.dim(), got: batch.dim() });
         }
@@ -221,14 +228,18 @@ impl StreamingSession {
         let old_n = self.pts.len();
         let b = batch.len();
         let total = old_n + b;
-        let r_sq = self.d_cut * self.d_cut;
+        let r_sq: S = radius_sq(self.d_cut);
 
-        // The grown coordinate buffer. Existing levels keep their own
-        // snapshots, so this never invalidates a preserved tree.
+        // The grown coordinate buffer. (`PointStore::new`'s Vec→`Arc<[S]>`
+        // conversion copies once more — see the note on
+        // [`crate::geom::PointStore::try_new`]; everything downstream of
+        // this point shares by refcount.) Existing levels keep refcount
+        // pins on their own snapshots, so this never invalidates a
+        // preserved tree.
         let mut coords = Vec::with_capacity(total * self.pts.dim());
         coords.extend_from_slice(self.pts.coords());
         coords.extend_from_slice(batch.coords());
-        let new_pts = Arc::new(PointSet::new(coords, batch.dim()));
+        let new_pts = PointStore::new(coords, batch.dim());
         let new_ids: Vec<u32> = (old_n as u32..total as u32).collect();
 
         // ---- Step-1 repair (against the PRE-merge forest) ----
@@ -310,7 +321,7 @@ impl StreamingSession {
                         Some(j) if g[j as usize] > gi => Some((j, pts.dist_sq(i, j as usize))),
                         Some(_) => None,
                         // The old peak never had candidates to lose.
-                        None => Some((u32::MAX, f64::INFINITY)),
+                        None => Some((u32::MAX, S::INFINITY)),
                     }
                 } else {
                     None
@@ -321,7 +332,7 @@ impl StreamingSession {
                         (if best.0 == u32::MAX { None } else { Some(best.0) }, false)
                     }
                     None => {
-                        let mut best = (u32::MAX, f64::INFINITY);
+                        let mut best = (u32::MAX, S::INFINITY);
                         for lv in levels {
                             lv.tree.nn_filtered(q, |j| g[j as usize] > gi, &mut best, &mut NoStats);
                         }
@@ -345,7 +356,7 @@ impl StreamingSession {
                 // Same formula as `dep::dependent_distances`, so reused and
                 // repaired entries are bitwise indistinguishable.
                 self.delta[i] = match nd {
-                    Some(j) => self.pts.dist_sq(i, j as usize).sqrt(),
+                    Some(j) => self.pts.dist_sq(i, j as usize).to_f64().sqrt(),
                     None => f64::INFINITY,
                 };
             }
@@ -360,10 +371,10 @@ impl StreamingSession {
     /// size still matches a set bit survive untouched; everything else
     /// (dropped levels + the batch) pools into freshly built trees for the
     /// gained bits.
-    fn merge_levels(&mut self, new_pts: &Arc<PointSet>, new_ids: Vec<u32>) {
+    fn merge_levels(&mut self, new_pts: &PointStore<S>, new_ids: Vec<u32>) {
         let total = new_pts.len();
         let mut pool: Vec<u32> = Vec::new();
-        let mut kept: Vec<OwnedLevel> = Vec::with_capacity(self.levels.len() + 1);
+        let mut kept: Vec<OwnedLevel<S>> = Vec::with_capacity(self.levels.len() + 1);
         // Old levels are stored largest-first, which keeps the pool order
         // (and thus the rebuilt trees) deterministic.
         for lv in self.levels.drain(..) {
@@ -381,7 +392,7 @@ impl StreamingSession {
                 let ids: Vec<u32> = pool.drain(..size).collect();
                 self.stats.trees_built += 1;
                 self.stats.tree_points_built += size as u64;
-                kept.push(OwnedLevel::build(Arc::clone(new_pts), k, ids));
+                kept.push(OwnedLevel::build(new_pts, k, ids));
             }
         }
         debug_assert!(pool.is_empty(), "merge pool must be fully consumed");
@@ -398,7 +409,7 @@ impl StreamingSession {
             return Err(DpcError::EmptyInput);
         }
         session::validate_thresholds(rho_min, delta_min)?;
-        let params = DpcParams { d_cut: self.d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut: self.d_cut, rho_min, delta_min, dtype: S::DTYPE };
         let mut out = session::cut_cached(&self.pts, &self.rho, &self.dep, &self.delta, params);
         out.timings.density_s = self.stats.rho_secs;
         out.timings.dep_s = self.stats.dep_secs;
@@ -410,6 +421,7 @@ impl StreamingSession {
 mod tests {
     use super::*;
     use crate::dpc::{ClusterSession, DepAlgo};
+    use crate::geom::PointSet;
     use crate::proputil::{gen_clustered_points, gen_degenerate_points, gen_uniform_points};
     use crate::prng::SplitMix64;
 
@@ -420,7 +432,7 @@ mod tests {
     /// After every batch the streaming artifacts must equal a fresh staged
     /// session on the same prefix.
     fn check_stream_matches_fresh(pts: &PointSet, d_cut: f64, batch_sizes: &[usize]) {
-        let mut s = StreamingSession::new(pts.dim(), d_cut).unwrap();
+        let mut s = StreamingSession::<f64>::new(pts.dim(), d_cut).unwrap();
         let mut sent = 0usize;
         for &bsz in batch_sizes {
             let hi = (sent + bsz).min(pts.len());
@@ -470,7 +482,7 @@ mod tests {
     fn forest_levels_follow_binary_representation() {
         let mut rng = SplitMix64::new(304);
         let pts = gen_uniform_points(&mut rng, 100, 2, 30.0);
-        let mut s = StreamingSession::new(2, 3.0).unwrap();
+        let mut s = StreamingSession::<f64>::new(2, 3.0).unwrap();
         let mut sent = 0;
         for bsz in [5usize, 3, 8, 16, 1, 67] {
             let batch = PointSet::new(pts.coords()[sent * 2..(sent + bsz) * 2].to_vec(), 2);
@@ -490,7 +502,7 @@ mod tests {
         let mut rng = SplitMix64::new(305);
         let n = 256usize;
         let pts = gen_uniform_points(&mut rng, n, 2, 50.0);
-        let mut s = StreamingSession::new(2, 4.0).unwrap();
+        let mut s = StreamingSession::<f64>::new(2, 4.0).unwrap();
         for i in 0..n {
             let batch = PointSet::new(pts.point(i).to_vec(), 2);
             s.ingest(&batch).unwrap();
@@ -504,8 +516,26 @@ mod tests {
     }
 
     #[test]
+    fn rebuilt_levels_pin_the_current_buffer_by_refcount() {
+        let mut rng = SplitMix64::new(306);
+        let pts = gen_uniform_points(&mut rng, 64, 2, 30.0);
+        let mut s = StreamingSession::<f64>::new(2, 3.0).unwrap();
+        // First ingest: every level was just built against the new buffer.
+        s.ingest(&prefix(&pts, 48)).unwrap();
+        assert_eq!(s.level_sizes(), vec![32, 16]);
+        assert_eq!(s.levels_sharing_current_buffer(), 2);
+        // 48 = 0b110000; +1 gains only the 1-bit — the 32- and 16-levels
+        // survive on their older (still refcount-pinned) snapshot, the new
+        // 1-level shares the grown buffer.
+        let one = PointSet::new(pts.coords()[48 * 2..49 * 2].to_vec(), 2);
+        s.ingest(&one).unwrap();
+        assert_eq!(s.level_sizes(), vec![32, 16, 1]);
+        assert_eq!(s.levels_sharing_current_buffer(), 1);
+    }
+
+    #[test]
     fn ingest_validates_input_and_leaves_state_intact() {
-        let mut s = StreamingSession::new(2, 1.0).unwrap();
+        let mut s = StreamingSession::<f64>::new(2, 1.0).unwrap();
         s.ingest(&PointSet::new(vec![0.0, 0.0, 5.0, 5.0], 2)).unwrap();
         // Wrong dimension.
         assert!(matches!(
@@ -525,15 +555,18 @@ mod tests {
 
     #[test]
     fn session_construction_rejects_bad_params() {
-        assert!(matches!(StreamingSession::new(0, 1.0), Err(DpcError::InvalidParam { name: "dim", .. })));
+        assert!(matches!(StreamingSession::<f64>::new(0, 1.0), Err(DpcError::InvalidParam { name: "dim", .. })));
         for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
-            assert!(matches!(StreamingSession::new(2, bad), Err(DpcError::InvalidParam { name: "d_cut", .. })));
+            assert!(matches!(
+                StreamingSession::<f64>::new(2, bad),
+                Err(DpcError::InvalidParam { name: "d_cut", .. })
+            ));
         }
     }
 
     #[test]
     fn cut_on_empty_stream_is_typed_error() {
-        let s = StreamingSession::new(2, 1.0).unwrap();
+        let s = StreamingSession::<f64>::new(2, 1.0).unwrap();
         assert!(matches!(s.cut(0.0, 1.0), Err(DpcError::EmptyInput)));
     }
 }

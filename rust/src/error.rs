@@ -21,6 +21,11 @@ pub enum DpcError {
     RaggedCoords { len: usize, dim: usize },
     /// A coordinate is NaN or infinite.
     NonFinite { point: usize, dim: usize },
+    /// A requested *lossless* precision conversion would round the given
+    /// coordinate (e.g. `0.1` into an `f32` store).
+    LossyCast { point: usize, dim: usize, value: f64, dtype: &'static str },
+    /// A binary point file carries a dtype tag this build does not know.
+    UnsupportedDtype { tag: u8 },
     /// A hyper-parameter violates its documented requirement.
     InvalidParam { name: &'static str, value: f64, requirement: &'static str },
     /// A staged-session call arrived before its prerequisite stage.
@@ -45,6 +50,12 @@ impl fmt::Display for DpcError {
             }
             DpcError::NonFinite { point, dim } => {
                 write!(f, "non-finite coordinate at point {point}, dimension {dim}")
+            }
+            DpcError::LossyCast { point, dim, value, dtype } => {
+                write!(f, "coordinate {value} at point {point}, dimension {dim} is not exactly representable as {dtype}")
+            }
+            DpcError::UnsupportedDtype { tag } => {
+                write!(f, "unsupported dtype tag {tag} (expected 4 = f32 or 8 = f64)")
             }
             DpcError::InvalidParam { name, value, requirement } => {
                 write!(f, "invalid parameter {name} = {value}: {requirement}")
@@ -85,6 +96,8 @@ mod tests {
             (DpcError::DimensionMismatch { expected: 3, got: 2 }, "expected 3-d"),
             (DpcError::RaggedCoords { len: 7, dim: 2 }, "not divisible"),
             (DpcError::NonFinite { point: 4, dim: 1 }, "non-finite"),
+            (DpcError::LossyCast { point: 2, dim: 0, value: 0.1, dtype: "f32" }, "not exactly representable"),
+            (DpcError::UnsupportedDtype { tag: 3 }, "dtype tag 3"),
             (
                 DpcError::InvalidParam { name: "d_cut", value: -1.0, requirement: "must be positive and finite" },
                 "d_cut",

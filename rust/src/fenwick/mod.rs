@@ -14,7 +14,7 @@
 //! uniformity of the *whole* point set, not of every priority-suffix
 //! (§5 intro) — and it is faster on some real distributions (paper: PAMAP2).
 
-use crate::geom::PointSet;
+use crate::geom::{PointStore, Scalar};
 use crate::kdtree::{KdTree, StatSink};
 use crate::parlay;
 
@@ -36,21 +36,22 @@ fn lsb(i: usize) -> usize {
     i & i.wrapping_neg()
 }
 
-/// The Fenwick dependent-point structure.
-pub struct FenwickDep<'p> {
-    pts: &'p PointSet,
+/// The Fenwick dependent-point structure. Generic over the coordinate
+/// [`Scalar`]; every block tree pins the one shared store by refcount.
+pub struct FenwickDep<S: Scalar = f64> {
+    pts: PointStore<S>,
     /// `sorted[r]` = point id with rank `r` (0-based, descending priority).
     sorted: Vec<u32>,
     /// `rank_of[id]` = 0-based rank.
     rank_of: Vec<u32>,
     /// `trees[i]` (1-based, `trees[0]` unused) = kd-tree over block `B[i]`.
-    trees: Vec<Option<KdTree<'p>>>,
+    trees: Vec<Option<KdTree<S>>>,
 }
 
-impl<'p> FenwickDep<'p> {
+impl<S: Scalar> FenwickDep<S> {
     /// Lines 9-13 of Algorithm 2: radix-sort by descending priority and
     /// build all block kd-trees in parallel.
-    pub fn build(pts: &'p PointSet, gamma: &[u64]) -> Self {
+    pub fn build(pts: &PointStore<S>, gamma: &[u64]) -> Self {
         let n = pts.len();
         assert_eq!(gamma.len(), n);
         assert!(n > 0);
@@ -65,7 +66,7 @@ impl<'p> FenwickDep<'p> {
         // Build B[i] over sorted[i-LSB(i) .. i] (0-based slice of the
         // 1-based range [i-LSB(i)+1, i]).
         let sorted_ref = &sorted;
-        let mut trees: Vec<Option<KdTree<'p>>> = parlay::par_map(n + 1, |i| {
+        let mut trees: Vec<Option<KdTree<S>>> = parlay::par_map(n + 1, |i| {
             if i == 0 {
                 return None;
             }
@@ -74,7 +75,7 @@ impl<'p> FenwickDep<'p> {
         });
         // Slot 0 is a placeholder.
         trees[0] = None;
-        FenwickDep { pts, sorted, rank_of, trees }
+        FenwickDep { pts: pts.clone(), sorted, rank_of, trees }
     }
 
     /// FENWICK-QUERY (Algorithm 2 lines 1-6) for the point with id `id`:
@@ -85,13 +86,13 @@ impl<'p> FenwickDep<'p> {
     /// *outer* per-point loop (Algorithm 2 line 14) is already fully
     /// parallel, so inner parallelism would only add task overhead; the
     /// aggregation of line 6 becomes an exact sequential `(dist, id)` min.
-    pub fn query<S: StatSink>(&self, id: u32, stats: &mut S) -> Option<(u32, f64)> {
+    pub fn query<T: StatSink>(&self, id: u32, stats: &mut T) -> Option<(u32, S)> {
         let r = self.rank_of[id as usize] as usize;
         if r == 0 {
             return None;
         }
         let q = self.pts.point(id as usize);
-        let mut best = (u32::MAX, f64::INFINITY);
+        let mut best = (u32::MAX, S::INFINITY);
         let mut j = r; // 1-based prefix [1, r] = 0-based ranks [0, r-1]
         while j > 0 {
             let tree = self.trees[j].as_ref().expect("block tree exists");

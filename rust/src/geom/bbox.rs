@@ -6,20 +6,24 @@
 //! - `inside_ball(c, r²)`: whether the **farthest corner** of the cell is
 //!   within the ball — the §6.1 density-computation optimization (a cell
 //!   fully inside the query ball contributes its point count wholesale).
+//!
+//! Generic over the coordinate [`Scalar`]; all predicates compute in `S`.
+
+use super::scalar::Scalar;
 
 #[derive(Clone, Debug, PartialEq)]
-pub struct Bbox {
-    min: Vec<f64>,
-    max: Vec<f64>,
+pub struct Bbox<S: Scalar = f64> {
+    min: Vec<S>,
+    max: Vec<S>,
 }
 
-impl Bbox {
+impl<S: Scalar> Bbox<S> {
     /// An empty (inverted) box; `expand` fixes it up.
     pub fn empty(d: usize) -> Self {
-        Bbox { min: vec![f64::INFINITY; d], max: vec![f64::NEG_INFINITY; d] }
+        Bbox { min: vec![S::INFINITY; d], max: vec![S::NEG_INFINITY; d] }
     }
 
-    pub fn new(min: Vec<f64>, max: Vec<f64>) -> Self {
+    pub fn new(min: Vec<S>, max: Vec<S>) -> Self {
         assert_eq!(min.len(), max.len());
         Bbox { min, max }
     }
@@ -29,16 +33,16 @@ impl Bbox {
         self.min.len()
     }
 
-    pub fn min(&self) -> &[f64] {
+    pub fn min(&self) -> &[S] {
         &self.min
     }
 
-    pub fn max(&self) -> &[f64] {
+    pub fn max(&self) -> &[S] {
         &self.max
     }
 
     #[inline]
-    pub fn expand(&mut self, p: &[f64]) {
+    pub fn expand(&mut self, p: &[S]) {
         for k in 0..self.min.len() {
             if p[k] < self.min[k] {
                 self.min[k] = p[k];
@@ -49,10 +53,10 @@ impl Bbox {
         }
     }
 
-    pub fn merge(&mut self, other: &Bbox) {
+    pub fn merge(&mut self, other: &Bbox<S>) {
         for k in 0..self.min.len() {
-            self.min[k] = self.min[k].min(other.min[k]);
-            self.max[k] = self.max[k].max(other.max[k]);
+            self.min[k] = self.min[k].smin(other.min[k]);
+            self.max[k] = self.max[k].smax(other.max[k]);
         }
     }
 
@@ -60,7 +64,7 @@ impl Bbox {
     /// longest side).
     pub fn widest_dim(&self) -> usize {
         let mut best = 0;
-        let mut best_w = f64::NEG_INFINITY;
+        let mut best_w = S::NEG_INFINITY;
         for k in 0..self.min.len() {
             let w = self.max[k] - self.min[k];
             if w > best_w {
@@ -74,8 +78,8 @@ impl Bbox {
     /// Minimum squared distance from `q` to any point of the box (0 if `q`
     /// is inside).
     #[inline]
-    pub fn dist_sq_to(&self, q: &[f64]) -> f64 {
-        let mut s = 0.0;
+    pub fn dist_sq_to(&self, q: &[S]) -> S {
+        let mut s = S::ZERO;
         for k in 0..self.min.len() {
             let v = q[k];
             let t = if v < self.min[k] {
@@ -83,7 +87,7 @@ impl Bbox {
             } else if v > self.max[k] {
                 v - self.max[k]
             } else {
-                0.0
+                S::ZERO
             };
             s += t * t;
         }
@@ -91,13 +95,15 @@ impl Bbox {
     }
 
     /// Squared distance from `q` to the **farthest corner** of the box.
+    ///
+    /// Per dimension the farthest side is `max(q − min, max − q)` — with
+    /// `min ≤ max` this equals `max(|q − min|, |q − max|)` for every `q`
+    /// position (below, inside, above), so no `abs` is needed.
     #[inline]
-    pub fn far_corner_dist_sq(&self, q: &[f64]) -> f64 {
-        let mut s = 0.0;
+    pub fn far_corner_dist_sq(&self, q: &[S]) -> S {
+        let mut s = S::ZERO;
         for k in 0..self.min.len() {
-            let lo = (q[k] - self.min[k]).abs();
-            let hi = (q[k] - self.max[k]).abs();
-            let t = lo.max(hi);
+            let t = (q[k] - self.min[k]).smax(self.max[k] - q[k]);
             s += t * t;
         }
         s
@@ -106,17 +112,17 @@ impl Bbox {
     /// §6.1 containment test: is the whole cell inside the ball
     /// `{x : |x-c|² ≤ r_sq}`?
     #[inline]
-    pub fn inside_ball(&self, c: &[f64], r_sq: f64) -> bool {
+    pub fn inside_ball(&self, c: &[S], r_sq: S) -> bool {
         self.far_corner_dist_sq(c) <= r_sq
     }
 
     /// Does the cell intersect the ball `{x : |x-c|² ≤ r_sq}`?
     #[inline]
-    pub fn intersects_ball(&self, c: &[f64], r_sq: f64) -> bool {
+    pub fn intersects_ball(&self, c: &[S], r_sq: S) -> bool {
         self.dist_sq_to(c) <= r_sq
     }
 
-    pub fn contains(&self, p: &[f64]) -> bool {
+    pub fn contains(&self, p: &[S]) -> bool {
         (0..self.min.len()).all(|k| self.min[k] <= p[k] && p[k] <= self.max[k])
     }
 }
@@ -131,7 +137,7 @@ mod tests {
 
     #[test]
     fn expand_from_empty() {
-        let mut bb = Bbox::empty(2);
+        let mut bb = Bbox::<f64>::empty(2);
         bb.expand(&[1.0, 2.0]);
         bb.expand(&[-1.0, 0.5]);
         assert_eq!(bb.min(), &[-1.0, 0.5]);
@@ -155,6 +161,9 @@ mod tests {
         assert_eq!(unit_box().far_corner_dist_sq(&[0.0, 0.0]), 2.0);
         // From the center all corners are at distance sqrt(0.5).
         assert!((unit_box().far_corner_dist_sq(&[0.5, 0.5]) - 0.5).abs() < 1e-12);
+        // Query outside the box on both sides of a dimension.
+        assert_eq!(unit_box().far_corner_dist_sq(&[2.0, 0.5]), 4.0 + 0.25);
+        assert_eq!(unit_box().far_corner_dist_sq(&[-1.0, 0.5]), 4.0 + 0.25);
     }
 
     #[test]
@@ -183,5 +192,15 @@ mod tests {
         a.merge(&Bbox::new(vec![-2.0], vec![0.5]));
         assert_eq!(a.min(), &[-2.0]);
         assert_eq!(a.max(), &[1.0]);
+    }
+
+    #[test]
+    fn f32_boxes_work() {
+        let mut bb = Bbox::<f32>::empty(2);
+        bb.expand(&[1.0, 2.0]);
+        bb.expand(&[3.0, -1.0]);
+        assert_eq!(bb.dist_sq_to(&[0.0, 0.0]), 1.0);
+        assert_eq!(bb.far_corner_dist_sq(&[0.0, 0.0]), 9.0 + 4.0);
+        assert!(bb.contains(&[2.0, 0.0]));
     }
 }

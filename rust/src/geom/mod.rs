@@ -1,32 +1,69 @@
-//! Geometric primitives: flat point sets, axis-aligned bounding boxes, and
-//! squared-Euclidean distance kernels.
+//! Geometric primitives: precision-generic, refcount-shared point stores,
+//! zero-copy views, axis-aligned bounding boxes, and squared-Euclidean
+//! distance kernels.
 //!
-//! Points are stored row-major (`coords[i*d + k]`), which keeps each point's
-//! coordinates on one cache line during tree traversals — the dominant access
-//! pattern in this crate. Distances are computed and compared **squared**
-//! everywhere (monotone for Euclidean metrics), taking a single `sqrt` only
-//! at user-facing boundaries.
+//! The data layer is generic over a [`Scalar`] (`f32` or `f64`, sealed):
+//!
+//! - [`PointStore<S>`] owns its coordinates in one `Arc<[S]>` row-major
+//!   buffer (`coords[i*d + k]`), so cloning a store — what the staged
+//!   session, the Bentley–Saxe stream forest, and every kd-tree do to pin
+//!   their input — is a refcount bump, never a coordinate copy.
+//! - [`PointsView<'_, S>`] is the `Copy` borrowed form handed to the tree
+//!   builders and distance kernels.
+//! - [`DynPoints`] is the runtime-tagged union used at dtype boundaries
+//!   (binary files, CLI flags, coordinator payloads).
+//!
+//! `type PointSet = PointStore<f64>` keeps the pre-generic name working:
+//! existing call sites migrate mechanically.
+//!
+//! Distances are computed and compared **squared**, *in `S`*, everywhere
+//! (monotone for Euclidean metrics); a single `sqrt` — always in f64 — runs
+//! at user-facing boundaries. Exactness is therefore per scalar type, and
+//! byte-identical across types whenever the coordinates and radius are
+//! losslessly representable in both (see [`Scalar::lossless_from_f64`]).
 
 pub mod bbox;
+pub mod scalar;
 
 pub use bbox::Bbox;
+pub use scalar::{radius_sq, Dtype, Scalar};
+
+use std::sync::Arc;
 
 use crate::error::DpcError;
 
-/// A set of `n` points in `d`-dimensional space, row-major.
+/// A set of `n` points in `d`-dimensional space, row-major, with the
+/// coordinate buffer behind an `Arc`: `clone` is O(1) and shares storage.
 #[derive(Clone, Debug)]
-pub struct PointSet {
-    coords: Vec<f64>,
+pub struct PointStore<S: Scalar = f64> {
+    coords: Arc<[S]>,
     n: usize,
     d: usize,
 }
 
-impl PointSet {
+/// The pre-generic name: a double-precision point store.
+pub type PointSet = PointStore<f64>;
+
+impl<S: Scalar> PointStore<S> {
     /// Fallible constructor: rejects `d == 0` and coordinate buffers whose
     /// length is not a multiple of `d`. This is the entry point for
-    /// user-supplied data; [`PointSet::new`] is the panicking convenience
+    /// user-supplied data; [`PointStore::new`] is the panicking convenience
     /// for generators and tests whose inputs are correct by construction.
-    pub fn try_new(coords: Vec<f64>, d: usize) -> Result<Self, DpcError> {
+    ///
+    /// Note the `Vec → Arc<[S]>` conversion copies the buffer once (the
+    /// `Arc` header precludes reusing the `Vec` allocation) — a one-time
+    /// construction cost; every share after that (sessions, trees, stream
+    /// levels, job payloads) is a refcount bump. Callers that already hold
+    /// a shared buffer should use [`PointStore::try_from_shared`].
+    /// (Known follow-up: build generators/readers directly into
+    /// `Arc::new_uninit_slice` to drop this copy.)
+    pub fn try_new(coords: Vec<S>, d: usize) -> Result<Self, DpcError> {
+        Self::try_from_shared(Arc::from(coords), d)
+    }
+
+    /// Zero-copy constructor over an already-shared buffer (the `Arc` is
+    /// kept, not copied): same shape checks as [`PointStore::try_new`].
+    pub fn try_from_shared(coords: Arc<[S]>, d: usize) -> Result<Self, DpcError> {
         if d == 0 {
             return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
         }
@@ -34,19 +71,19 @@ impl PointSet {
             return Err(DpcError::RaggedCoords { len: coords.len(), dim: d });
         }
         let n = coords.len() / d;
-        Ok(PointSet { coords, n, d })
+        Ok(PointStore { coords, n, d })
     }
 
-    pub fn new(coords: Vec<f64>, d: usize) -> Self {
+    pub fn new(coords: Vec<S>, d: usize) -> Self {
         Self::try_new(coords, d).expect("well-formed coordinate buffer")
     }
 
     pub fn empty(d: usize) -> Self {
-        PointSet { coords: Vec::new(), n: 0, d }
+        PointStore { coords: Arc::from(Vec::new()), n: 0, d }
     }
 
     /// Fallible row-wise constructor: rejects empty input and ragged rows.
-    pub fn try_from_rows(rows: &[Vec<f64>]) -> Result<Self, DpcError> {
+    pub fn try_from_rows(rows: &[Vec<S>]) -> Result<Self, DpcError> {
         if rows.is_empty() {
             return Err(DpcError::EmptyInput);
         }
@@ -61,8 +98,50 @@ impl PointSet {
         Self::try_new(coords, d)
     }
 
-    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+    pub fn from_rows(rows: &[Vec<S>]) -> Self {
         Self::try_from_rows(rows).expect("non-empty, non-ragged rows")
+    }
+
+    /// The runtime precision tag of this store.
+    pub fn dtype(&self) -> Dtype {
+        S::DTYPE
+    }
+
+    /// The borrowed, `Copy` form of this store — what tree builders and
+    /// distance kernels take.
+    #[inline]
+    pub fn view(&self) -> PointsView<'_, S> {
+        PointsView { coords: &self.coords, n: self.n, d: self.d }
+    }
+
+    /// Do two stores share one coordinate allocation? (The observable
+    /// behind "sessions/streams/trees pin by refcount, not by copy".)
+    pub fn shares_storage(&self, other: &PointStore<S>) -> bool {
+        Arc::ptr_eq(&self.coords, &other.coords)
+    }
+
+    /// Rounding precision conversion from an f64 store (a genuine buffer
+    /// copy — precision boundaries are the one place the data layer copies).
+    pub fn cast_from_f64(src: &PointStore<f64>) -> PointStore<S> {
+        let coords: Vec<S> = src.coords.iter().map(|&c| S::from_f64(c)).collect();
+        PointStore { coords: Arc::from(coords), n: src.n, d: src.d }
+    }
+
+    /// Lossless-or-error precision conversion from an f64 store: the first
+    /// coordinate that would round surfaces as [`DpcError::LossyCast`].
+    pub fn try_lossless_from_f64(src: &PointStore<f64>) -> Result<PointStore<S>, DpcError> {
+        if let Some((point, dim)) = scalar::first_lossy_coord::<S>(&src.coords, src.d) {
+            return Err(scalar::lossy_cast_error::<S>(point, dim, src.coord(point, dim)));
+        }
+        Ok(Self::cast_from_f64(src))
+    }
+
+    /// Widening conversion (exact, but a buffer copy — use `clone()` when
+    /// `S` is already f64, or [`DynPoints::into_f64`] which shares in that
+    /// case).
+    pub fn to_f64(&self) -> PointStore<f64> {
+        let coords: Vec<f64> = self.coords.iter().map(|&c| c.to_f64()).collect();
+        PointStore { coords: Arc::from(coords), n: self.n, d: self.d }
     }
 
     /// Scan for NaN/∞ coordinates, reporting the first offender's (point,
@@ -71,7 +150,7 @@ impl PointSet {
     /// this once up front.
     pub fn validate_finite(&self) -> Result<(), DpcError> {
         for (idx, &c) in self.coords.iter().enumerate() {
-            if !c.is_finite() {
+            if !c.finite() {
                 return Err(DpcError::NonFinite { point: idx / self.d, dim: idx % self.d });
             }
         }
@@ -94,39 +173,110 @@ impl PointSet {
     }
 
     #[inline]
-    pub fn point(&self, i: usize) -> &[f64] {
+    pub fn point(&self, i: usize) -> &[S] {
         &self.coords[i * self.d..(i + 1) * self.d]
     }
 
     #[inline]
-    pub fn coord(&self, i: usize, k: usize) -> f64 {
+    pub fn coord(&self, i: usize, k: usize) -> S {
         self.coords[i * self.d + k]
     }
 
-    pub fn coords(&self) -> &[f64] {
+    pub fn coords(&self) -> &[S] {
         &self.coords
     }
 
-    pub fn push(&mut self, p: &[f64]) {
-        assert_eq!(p.len(), self.d);
-        self.coords.extend_from_slice(p);
-        self.n += 1;
+    /// The shared coordinate buffer itself (refcount clone, never a copy).
+    pub fn shared_coords(&self) -> Arc<[S]> {
+        Arc::clone(&self.coords)
     }
 
     /// Squared Euclidean distance between stored points `i` and `j`.
     #[inline]
-    pub fn dist_sq(&self, i: usize, j: usize) -> f64 {
-        dist_sq(self.point(i), self.point(j))
+    pub fn dist_sq(&self, i: usize, j: usize) -> S {
+        S::dist_sq(self.point(i), self.point(j))
     }
 
     /// Squared Euclidean distance from stored point `i` to an arbitrary `q`.
     #[inline]
-    pub fn dist_sq_to(&self, i: usize, q: &[f64]) -> f64 {
-        dist_sq(self.point(i), q)
+    pub fn dist_sq_to(&self, i: usize, q: &[S]) -> S {
+        S::dist_sq(self.point(i), q)
     }
 
     /// Bounding box over a subset of point ids.
-    pub fn bbox_of(&self, ids: &[u32]) -> Bbox {
+    pub fn bbox_of(&self, ids: &[u32]) -> Bbox<S> {
+        self.view().bbox_of(ids)
+    }
+
+    /// Bounding box over all points.
+    pub fn bbox(&self) -> Bbox<S> {
+        self.view().bbox()
+    }
+}
+
+/// A cheap borrowed view of a [`PointStore`]'s points: one slice reference
+/// plus the shape. `Copy`, so traversal code passes it by value.
+#[derive(Clone, Copy, Debug)]
+pub struct PointsView<'a, S: Scalar = f64> {
+    coords: &'a [S],
+    n: usize,
+    d: usize,
+}
+
+impl<'a, S: Scalar> PointsView<'a, S> {
+    /// View over a raw flat buffer (shape-checked like
+    /// [`PointStore::try_new`], but borrowing).
+    pub fn try_new(coords: &'a [S], d: usize) -> Result<Self, DpcError> {
+        if d == 0 {
+            return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
+        }
+        if coords.len() % d != 0 {
+            return Err(DpcError::RaggedCoords { len: coords.len(), dim: d });
+        }
+        Ok(PointsView { coords, n: coords.len() / d, d })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &'a [S] {
+        &self.coords[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn coord(&self, i: usize, k: usize) -> S {
+        self.coords[i * self.d + k]
+    }
+
+    pub fn coords(&self) -> &'a [S] {
+        self.coords
+    }
+
+    #[inline]
+    pub fn dist_sq(&self, i: usize, j: usize) -> S {
+        S::dist_sq(self.point(i), self.point(j))
+    }
+
+    #[inline]
+    pub fn dist_sq_to(&self, i: usize, q: &[S]) -> S {
+        S::dist_sq(self.point(i), q)
+    }
+
+    /// Bounding box over a subset of point ids.
+    pub fn bbox_of(&self, ids: &[u32]) -> Bbox<S> {
         let mut bb = Bbox::empty(self.d);
         for &i in ids {
             bb.expand(self.point(i as usize));
@@ -135,7 +285,7 @@ impl PointSet {
     }
 
     /// Bounding box over all points.
-    pub fn bbox(&self) -> Bbox {
+    pub fn bbox(&self) -> Bbox<S> {
         let mut bb = Bbox::empty(self.d);
         for i in 0..self.n {
             bb.expand(self.point(i));
@@ -144,22 +294,76 @@ impl PointSet {
     }
 }
 
-/// Squared Euclidean distance between two coordinate slices.
-#[inline]
-pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for k in 0..a.len() {
-        let t = a[k] - b[k];
-        s += t * t;
+impl<'a, S: Scalar> From<&'a PointStore<S>> for PointsView<'a, S> {
+    fn from(ps: &'a PointStore<S>) -> Self {
+        ps.view()
     }
-    s
 }
 
-/// Euclidean distance (single sqrt; use [`dist_sq`] in hot paths).
+/// A runtime-tagged point store: what dtype boundaries (binary files, CLI
+/// flags, coordinator payloads) traffic in before monomorphizing.
+#[derive(Clone, Debug)]
+pub enum DynPoints {
+    F32(PointStore<f32>),
+    F64(PointStore<f64>),
+}
+
+impl DynPoints {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            DynPoints::F32(_) => Dtype::F32,
+            DynPoints::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DynPoints::F32(p) => p.len(),
+            DynPoints::F64(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            DynPoints::F32(p) => p.dim(),
+            DynPoints::F64(p) => p.dim(),
+        }
+    }
+
+    /// Widen to f64 (refcount share when already f64).
+    pub fn into_f64(self) -> PointStore<f64> {
+        match self {
+            DynPoints::F32(p) => p.to_f64(),
+            DynPoints::F64(p) => p,
+        }
+    }
+
+    /// Convert to the requested precision by rounding cast; the matching-
+    /// precision case shares storage instead of copying.
+    pub fn cast(&self, dtype: Dtype) -> DynPoints {
+        match (self, dtype) {
+            (DynPoints::F32(p), Dtype::F32) => DynPoints::F32(p.clone()),
+            (DynPoints::F64(p), Dtype::F64) => DynPoints::F64(p.clone()),
+            (DynPoints::F32(p), Dtype::F64) => DynPoints::F64(p.to_f64()),
+            (DynPoints::F64(p), Dtype::F32) => DynPoints::F32(PointStore::<f32>::cast_from_f64(p)),
+        }
+    }
+}
+
+/// Squared Euclidean distance between two coordinate slices.
 #[inline]
-pub fn dist(a: &[f64], b: &[f64]) -> f64 {
-    dist_sq(a, b).sqrt()
+pub fn dist_sq<S: Scalar>(a: &[S], b: &[S]) -> S {
+    S::dist_sq(a, b)
+}
+
+/// Euclidean distance in f64 (single sqrt; use [`dist_sq`] in hot paths).
+#[inline]
+pub fn dist<S: Scalar>(a: &[S], b: &[S]) -> f64 {
+    S::dist_sq(a, b).to_f64().sqrt()
 }
 
 #[cfg(test)]
@@ -171,9 +375,18 @@ mod tests {
         let ps = PointSet::new(vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0], 2);
         assert_eq!(ps.len(), 3);
         assert_eq!(ps.dim(), 2);
+        assert_eq!(ps.dtype(), Dtype::F64);
         assert_eq!(ps.point(1), &[3.0, 4.0]);
         assert_eq!(ps.dist_sq(0, 1), 25.0);
         assert_eq!(ps.dist_sq_to(0, &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn f32_store_roundtrip() {
+        let ps = PointStore::<f32>::new(vec![0.0, 0.0, 3.0, 4.0], 2);
+        assert_eq!((ps.len(), ps.dim()), (2, 2));
+        assert_eq!(ps.dtype(), Dtype::F32);
+        assert_eq!(ps.dist_sq(0, 1), 25.0f32);
     }
 
     #[test]
@@ -184,12 +397,51 @@ mod tests {
     }
 
     #[test]
-    fn push_extends() {
-        let mut ps = PointSet::empty(2);
-        ps.push(&[1.0, 2.0]);
-        ps.push(&[3.0, 4.0]);
-        assert_eq!(ps.len(), 2);
-        assert_eq!(ps.point(1), &[3.0, 4.0]);
+    fn clone_and_view_share_storage() {
+        let ps = PointSet::new(vec![1.0, 2.0, 3.0, 4.0], 2);
+        let ps2 = ps.clone();
+        assert!(ps.shares_storage(&ps2));
+        let v = ps.view();
+        assert_eq!(v.point(1), ps.point(1));
+        assert_eq!(v.dist_sq(0, 1), ps.dist_sq(0, 1));
+        // A rebuilt store with equal contents does NOT share.
+        let ps3 = PointSet::new(ps.coords().to_vec(), 2);
+        assert!(!ps.shares_storage(&ps3));
+        // Zero-copy re-wrap of the shared buffer does.
+        let ps4 = PointSet::try_from_shared(ps.shared_coords(), 2).unwrap();
+        assert!(ps.shares_storage(&ps4));
+    }
+
+    #[test]
+    fn casts_between_precisions() {
+        let ps = PointSet::new(vec![1.0, 2.0, 3.0, 4.0], 2);
+        let ps32 = PointStore::<f32>::try_lossless_from_f64(&ps).unwrap();
+        assert_eq!(ps32.point(1), &[3.0f32, 4.0]);
+        let back = ps32.to_f64();
+        assert_eq!(back.coords(), ps.coords());
+        // A lossy value is rejected with its position.
+        let lossy = PointSet::new(vec![1.0, 0.1], 2);
+        assert!(matches!(
+            PointStore::<f32>::try_lossless_from_f64(&lossy),
+            Err(DpcError::LossyCast { point: 0, dim: 1, .. })
+        ));
+        // ...but the rounding cast accepts it.
+        let rounded = PointStore::<f32>::cast_from_f64(&lossy);
+        assert_eq!(rounded.coord(0, 1), 0.1f32);
+    }
+
+    #[test]
+    fn dyn_points_casts() {
+        let dp = DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2));
+        assert_eq!((dp.dtype(), dp.len(), dp.dim()), (Dtype::F64, 1, 2));
+        let dp32 = dp.cast(Dtype::F32);
+        assert_eq!(dp32.dtype(), Dtype::F32);
+        let widened = dp32.into_f64();
+        assert_eq!(widened.coords(), &[1.0, 2.0]);
+        // Same-precision cast shares storage.
+        let DynPoints::F64(orig) = &dp else { unreachable!() };
+        let DynPoints::F64(same) = dp.cast(Dtype::F64) else { unreachable!() };
+        assert!(orig.shares_storage(&same));
     }
 
     #[test]
@@ -203,6 +455,7 @@ mod tests {
         assert!(matches!(PointSet::try_new(vec![1.0, 2.0, 3.0], 2), Err(DpcError::RaggedCoords { len: 3, dim: 2 })));
         assert!(matches!(PointSet::try_new(vec![1.0], 0), Err(DpcError::InvalidParam { .. })));
         assert!(PointSet::try_new(vec![1.0, 2.0], 2).is_ok());
+        assert!(matches!(PointsView::try_new(&[1.0, 2.0, 3.0][..], 2), Err(DpcError::RaggedCoords { .. })));
     }
 
     #[test]
@@ -219,10 +472,13 @@ mod tests {
         let ps = PointSet::new(vec![0.0, f64::INFINITY], 2);
         assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 0, dim: 1 })));
         assert!(PointSet::new(vec![1.0, 2.0], 2).validate_finite().is_ok());
+        let ps = PointStore::<f32>::new(vec![0.0, f32::NAN], 2);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 0, dim: 1 })));
     }
 
     #[test]
     fn dist_matches_dist_sq() {
-        assert!((dist(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dist(&[0.0f64, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dist(&[0.0f32, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-6);
     }
 }

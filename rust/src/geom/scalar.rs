@@ -1,0 +1,340 @@
+//! The coordinate scalar abstraction: a **sealed** trait over `f32`/`f64`
+//! that the whole data path ([`super::PointStore`], the kd-tree family, the
+//! DPC kernels) is generic over.
+//!
+//! Why f32 matters here: the paper's traversals are memory-bandwidth-bound,
+//! and half-width coordinates halve the bytes every leaf scan and bounds
+//! check moves (PECANN and the MPI matrix-DPC systems both run their hot
+//! paths in single precision). Exactness is *per scalar type*: priorities
+//! and ρ stay integer, distance comparisons happen in `S`, and the paper's
+//! tie-break rules are precision-independent — so an f32 pipeline is the
+//! exact DPC of the f32 point set. On datasets whose coordinates are exactly
+//! representable in f32 (integer grids, sensor codes, quantized features,
+//! see [`Scalar::lossless_from_f64`]), the f32 and f64 pipelines produce
+//! byte-identical results; `rust/tests/conformance.rs` enforces that.
+
+use std::fmt;
+
+use crate::error::DpcError;
+
+mod sealed {
+    /// Seals [`super::Scalar`]: the unsafe traversal code (raw-pointer arena
+    /// builders, `get_unchecked` leaf scans) is audited for exactly these
+    /// two layouts.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// Runtime tag for a coordinate precision — what flows through
+/// [`crate::dpc::DpcParams`], `JobSpec`, the CLI `--dtype` flag, and the
+/// `datasets::io` v2 header byte.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    #[default]
+    F64,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Bytes per coordinate — also the self-describing tag byte of the
+    /// `datasets::io` v2 binary header.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    /// Inverse of [`Dtype::size_bytes`], for header decoding.
+    pub fn from_tag(tag: u8) -> Option<Dtype> {
+        match tag {
+            4 => Some(Dtype::F32),
+            8 => Some(Dtype::F64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f64" => Ok(Dtype::F64),
+            other => Err(format!("unknown dtype {other:?} (expected f32 or f64)")),
+        }
+    }
+}
+
+/// A coordinate scalar: `f32` or `f64` (sealed).
+///
+/// The trait carries exactly what the data path needs — a squared-distance
+/// kernel, comparisons/extrema, a little-endian byte codec for the on-disk
+/// format, and the f64 bridge (`from_f64`/`to_f64`/`lossless_from_f64`)
+/// used at precision-conversion boundaries.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + PartialOrd
+    + Default
+    + fmt::Debug
+    + fmt::Display
+    + Send
+    + Sync
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const DTYPE: Dtype;
+    const ZERO: Self;
+    const INFINITY: Self;
+    const NEG_INFINITY: Self;
+    /// Size of the little-endian encoding (4 or 8).
+    const BYTES: usize;
+
+    /// Narrowing (for `f32`) conversion from `f64`, rounding to nearest.
+    fn from_f64(v: f64) -> Self;
+
+    /// Widening (exact for both types) conversion to `f64`.
+    fn to_f64(self) -> f64;
+
+    /// Does `v` survive a `f64 → Self → f64` round trip bit-exactly?
+    /// (`true` for every value when `Self = f64`.) This is the predicate
+    /// behind "f32 preserves exactness on integer-coordinate data".
+    fn lossless_from_f64(v: f64) -> bool;
+
+    /// Neither NaN nor ±∞.
+    fn finite(self) -> bool;
+
+    /// `min`/`max` with the IEEE "other operand on NaN" semantics of the
+    /// inherent float methods (inputs are validated finite upstream).
+    fn smin(self, other: Self) -> Self;
+    fn smax(self, other: Self) -> Self;
+
+    /// Squared Euclidean distance between two coordinate slices of equal
+    /// length, accumulated in `Self`.
+    #[inline]
+    fn dist_sq(a: &[Self], b: &[Self]) -> Self {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = Self::ZERO;
+        for k in 0..a.len() {
+            let t = a[k] - b[k];
+            s += t * t;
+        }
+        s
+    }
+
+    /// Append the little-endian encoding to `out`.
+    fn write_le(self, out: &mut Vec<u8>);
+
+    /// Decode from the first [`Scalar::BYTES`] bytes of `bytes`.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl Scalar for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    const ZERO: f32 = 0.0;
+    const INFINITY: f32 = f32::INFINITY;
+    const NEG_INFINITY: f32 = f32::NEG_INFINITY;
+    const BYTES: usize = 4;
+
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline]
+    fn lossless_from_f64(v: f64) -> bool {
+        // NaN is not lossless (payload aside, NaN coordinates are rejected
+        // upstream anyway); ±∞ round-trips but is equally rejected later.
+        (v as f32) as f64 == v
+    }
+
+    #[inline]
+    fn finite(self) -> bool {
+        self.is_finite()
+    }
+
+    #[inline]
+    fn smin(self, other: f32) -> f32 {
+        self.min(other)
+    }
+
+    #[inline]
+    fn smax(self, other: f32) -> f32 {
+        self.max(other)
+    }
+
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    #[inline]
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl Scalar for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+    const ZERO: f64 = 0.0;
+    const INFINITY: f64 = f64::INFINITY;
+    const NEG_INFINITY: f64 = f64::NEG_INFINITY;
+    const BYTES: usize = 8;
+
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline]
+    fn lossless_from_f64(_v: f64) -> bool {
+        true
+    }
+
+    #[inline]
+    fn finite(self) -> bool {
+        self.is_finite()
+    }
+
+    #[inline]
+    fn smin(self, other: f64) -> f64 {
+        self.min(other)
+    }
+
+    #[inline]
+    fn smax(self, other: f64) -> f64 {
+        self.max(other)
+    }
+
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    #[inline]
+    fn read_le(bytes: &[u8]) -> f64 {
+        f64::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3], bytes[4], bytes[5], bytes[6], bytes[7]])
+    }
+}
+
+/// The squared query radius at precision `S`: convert the user-facing
+/// `d_cut` first, square second, so "the radius of an f32 pipeline" is a
+/// representable f32 — every layer (density, sessions, streams, engines)
+/// must use this one definition or f32/f64 conformance on lossless data
+/// breaks at ball boundaries.
+#[inline]
+pub fn radius_sq<S: Scalar>(d_cut: f64) -> S {
+    let r = S::from_f64(d_cut);
+    r * r
+}
+
+/// First coordinate of `coords` (flat, row-major over dimension `d`) that is
+/// not losslessly representable at precision `S`, as `(point, dim)`.
+pub fn first_lossy_coord<S: Scalar>(coords: &[f64], d: usize) -> Option<(usize, usize)> {
+    coords
+        .iter()
+        .position(|&c| !S::lossless_from_f64(c))
+        .map(|idx| (idx / d, idx % d))
+}
+
+/// Typed error for a requested lossless conversion that would round.
+pub fn lossy_cast_error<S: Scalar>(point: usize, dim: usize, value: f64) -> DpcError {
+    DpcError::LossyCast { point, dim, value, dtype: S::DTYPE.name() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tags_round_trip() {
+        for dt in [Dtype::F32, Dtype::F64] {
+            assert_eq!(Dtype::from_tag(dt.size_bytes() as u8), Some(dt));
+            assert_eq!(dt.name().parse::<Dtype>().unwrap(), dt);
+        }
+        assert_eq!(Dtype::from_tag(0), None);
+        assert_eq!(Dtype::from_tag(16), None);
+        assert!("f16".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::default(), Dtype::F64);
+    }
+
+    #[test]
+    fn lossless_predicate() {
+        // Small integers and power-of-two fractions survive f32.
+        for v in [0.0, 1.0, -7.0, 1024.0, 0.5, 0.25, 16777216.0] {
+            assert!(f32::lossless_from_f64(v), "{v}");
+        }
+        // 2^24 + 1 and typical decimals do not.
+        for v in [16777217.0, 0.1, 1e300] {
+            assert!(!f32::lossless_from_f64(v), "{v}");
+        }
+        assert!(f64::lossless_from_f64(0.1));
+    }
+
+    #[test]
+    fn byte_codec_round_trips() {
+        let mut buf = Vec::new();
+        1.5f32.write_le(&mut buf);
+        (-3.25f64).write_le(&mut buf);
+        assert_eq!(buf.len(), f32::BYTES + f64::BYTES);
+        assert_eq!(f32::read_le(&buf[..4]), 1.5);
+        assert_eq!(f64::read_le(&buf[4..]), -3.25);
+    }
+
+    #[test]
+    fn dist_sq_kernel_matches_both_precisions() {
+        let a64 = [0.0f64, 0.0, 3.0];
+        let b64 = [4.0f64, 0.0, 0.0];
+        assert_eq!(f64::dist_sq(&a64, &b64), 25.0);
+        let a32 = [0.0f32, 0.0, 3.0];
+        let b32 = [4.0f32, 0.0, 0.0];
+        assert_eq!(f32::dist_sq(&a32, &b32), 25.0);
+    }
+
+    #[test]
+    fn radius_sq_converts_before_squaring() {
+        // 0.1 is lossy in f32: the f32 radius is round(0.1)² computed in
+        // f32, not round(0.01).
+        let r32: f32 = radius_sq(0.1);
+        assert_eq!(r32, 0.1f32 * 0.1f32);
+        let r64: f64 = radius_sq(0.1);
+        assert_eq!(r64, 0.1f64 * 0.1f64);
+    }
+
+    #[test]
+    fn first_lossy_coord_reports_position() {
+        let coords = [1.0, 2.0, 0.1, 4.0];
+        assert_eq!(first_lossy_coord::<f32>(&coords, 2), Some((1, 0)));
+        assert_eq!(first_lossy_coord::<f64>(&coords, 2), None);
+        assert_eq!(first_lossy_coord::<f32>(&[1.0, 2.0], 2), None);
+    }
+}

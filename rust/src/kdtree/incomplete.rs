@@ -11,16 +11,18 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use crate::geom::Scalar;
+
 use super::{KdTree, StatSink};
 
-pub struct IncompleteKdTree<'t, 'p> {
-    tree: &'t KdTree<'p>,
+pub struct IncompleteKdTree<'t, S: Scalar = f64> {
+    tree: &'t KdTree<S>,
     node_active: Vec<AtomicBool>,
     point_active: Vec<AtomicBool>,
 }
 
-impl<'t, 'p> IncompleteKdTree<'t, 'p> {
-    pub fn new(tree: &'t KdTree<'p>) -> Self {
+impl<'t, S: Scalar> IncompleteKdTree<'t, S> {
+    pub fn new(tree: &'t KdTree<S>) -> Self {
         IncompleteKdTree {
             node_active: (0..tree.num_slots()).map(|_| AtomicBool::new(false)).collect(),
             point_active: (0..tree.points().len()).map(|_| AtomicBool::new(false)).collect(),
@@ -54,12 +56,12 @@ impl<'t, 'p> IncompleteKdTree<'t, 'p> {
     /// Nearest *active* neighbor of `q`, excluding id `exclude`; ties by
     /// smaller id. Subtrees with no active point are pruned (grey subtree in
     /// Figure 1).
-    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
+    pub fn nn<T: StatSink>(&self, q: &[S], exclude: u32, stats: &mut T) -> Option<(u32, S)> {
         let root = self.tree.root_idx();
         if !self.node_active[root as usize].load(Ordering::Acquire) {
             return None;
         }
-        let mut best = (u32::MAX, f64::INFINITY);
+        let mut best = (u32::MAX, S::INFINITY);
         self.nn_rec(root, q, exclude, &mut best, stats, 1);
         if best.0 == u32::MAX {
             None
@@ -68,7 +70,7 @@ impl<'t, 'p> IncompleteKdTree<'t, 'p> {
         }
     }
 
-    fn nn_rec<S: StatSink>(&self, i: u32, q: &[f64], exclude: u32, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+    fn nn_rec<T: StatSink>(&self, i: u32, q: &[S], exclude: u32, best: &mut (u32, S), stats: &mut T, depth: usize) {
         stats.visit_node();
         stats.depth(depth);
         if self.tree.is_leaf_idx(i) {
@@ -87,13 +89,13 @@ impl<'t, 'p> IncompleteKdTree<'t, 'p> {
         let (l, r) = self.tree.children(i);
         let la = self.node_active[l as usize].load(Ordering::Acquire);
         let ra = self.node_active[r as usize].load(Ordering::Acquire);
-        let dl = if la { self.tree.bbox_dist(l, q) } else { f64::INFINITY };
-        let dr = if ra { self.tree.bbox_dist(r, q) } else { f64::INFINITY };
+        let dl = if la { self.tree.bbox_dist(l, q) } else { S::INFINITY };
+        let dr = if ra { self.tree.bbox_dist(r, q) } else { S::INFINITY };
         let (first, d1, second, d2) = if dl <= dr { (l, dl, r, dr) } else { (r, dr, l, dl) };
-        if d1 <= best.1 && d1.is_finite() {
+        if d1 <= best.1 && d1.finite() {
             self.nn_rec(first, q, exclude, best, stats, depth + 1);
         }
-        if d2 <= best.1 && d2.is_finite() {
+        if d2 <= best.1 && d2.finite() {
             self.nn_rec(second, q, exclude, best, stats, depth + 1);
         }
     }

@@ -7,9 +7,10 @@
 //!
 //! This exists purely as the *baseline* under benchmark; the paper's
 //! improvements (incomplete kd-tree, priority search kd-tree, Fenwick tree)
-//! live in sibling modules.
+//! live in sibling modules. Generic over the coordinate [`Scalar`] like the
+//! rest of the tree family; pins its input store by refcount.
 
-use crate::geom::PointSet;
+use crate::geom::{PointStore, Scalar};
 
 use super::StatSink;
 
@@ -19,15 +20,15 @@ struct Node {
     right: Option<Box<Node>>,
 }
 
-pub struct IncrementalKdTree<'p> {
-    pts: &'p PointSet,
+pub struct IncrementalKdTree<S: Scalar = f64> {
+    pts: PointStore<S>,
     root: Option<Box<Node>>,
     len: usize,
 }
 
-impl<'p> IncrementalKdTree<'p> {
-    pub fn new(pts: &'p PointSet) -> Self {
-        IncrementalKdTree { pts, root: None, len: 0 }
+impl<S: Scalar> IncrementalKdTree<S> {
+    pub fn new(pts: &PointStore<S>) -> Self {
+        IncrementalKdTree { pts: pts.clone(), root: None, len: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -41,7 +42,7 @@ impl<'p> IncrementalKdTree<'p> {
     /// Insert point id `p` (top-down traversal, cyclic split dimension).
     pub fn insert(&mut self, p: u32) {
         let d = self.pts.dim();
-        let pts = self.pts;
+        let pts = &self.pts;
         let mut cur = &mut self.root;
         let mut depth = 0usize;
         loop {
@@ -67,20 +68,20 @@ impl<'p> IncrementalKdTree<'p> {
     /// the splitting hyperplane. This is the DPC-EXACT-BASELINE density
     /// step: pointer-chasing over individually heap-allocated nodes, no
     /// §6.1 containment shortcut.
-    pub fn range_count<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+    pub fn range_count<T: StatSink>(&self, q: &[S], r_sq: S, stats: &mut T) -> usize {
         match &self.root {
-            Some(root) => Self::count_rec(self.pts, root, q, r_sq, 0, stats),
+            Some(root) => Self::count_rec(&self.pts, root, q, r_sq, 0, stats),
             None => 0,
         }
     }
 
-    fn count_rec<S: StatSink>(pts: &PointSet, node: &Node, q: &[f64], r_sq: f64, depth: usize, stats: &mut S) -> usize {
+    fn count_rec<T: StatSink>(pts: &PointStore<S>, node: &Node, q: &[S], r_sq: S, depth: usize, stats: &mut T) -> usize {
         stats.visit_node();
         stats.scan_point();
         let mut c = usize::from(pts.dist_sq_to(node.point as usize, q) <= r_sq);
         let dim = depth % pts.dim();
         let diff = q[dim] - pts.coord(node.point as usize, dim);
-        let (near, far) = if diff < 0.0 { (&node.left, &node.right) } else { (&node.right, &node.left) };
+        let (near, far) = if diff < S::ZERO { (&node.left, &node.right) } else { (&node.right, &node.left) };
         if let Some(n) = near {
             c += Self::count_rec(pts, n, q, r_sq, depth + 1, stats);
         }
@@ -94,10 +95,10 @@ impl<'p> IncrementalKdTree<'p> {
 
     /// Nearest neighbor among inserted points, excluding `exclude`; ties by
     /// smaller id.
-    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
-        let mut best = (u32::MAX, f64::INFINITY);
+    pub fn nn<T: StatSink>(&self, q: &[S], exclude: u32, stats: &mut T) -> Option<(u32, S)> {
+        let mut best = (u32::MAX, S::INFINITY);
         if let Some(root) = &self.root {
-            Self::nn_rec(self.pts, root, q, 0, exclude, &mut best, stats, 1);
+            Self::nn_rec(&self.pts, root, q, 0, exclude, &mut best, stats, 1);
         }
         if best.0 == u32::MAX {
             None
@@ -107,14 +108,14 @@ impl<'p> IncrementalKdTree<'p> {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn nn_rec<S: StatSink>(
-        pts: &PointSet,
+    fn nn_rec<T: StatSink>(
+        pts: &PointStore<S>,
         node: &Node,
-        q: &[f64],
+        q: &[S],
         depth: usize,
         exclude: u32,
-        best: &mut (u32, f64),
-        stats: &mut S,
+        best: &mut (u32, S),
+        stats: &mut T,
         level: usize,
     ) {
         stats.visit_node();
@@ -128,7 +129,7 @@ impl<'p> IncrementalKdTree<'p> {
         }
         let dim = depth % pts.dim();
         let diff = q[dim] - pts.coord(node.point as usize, dim);
-        let (near, far) = if diff < 0.0 { (&node.left, &node.right) } else { (&node.right, &node.left) };
+        let (near, far) = if diff < S::ZERO { (&node.left, &node.right) } else { (&node.right, &node.left) };
         if let Some(n) = near {
             Self::nn_rec(pts, n, q, depth + 1, exclude, best, stats, level + 1);
         }
@@ -143,6 +144,7 @@ impl<'p> IncrementalKdTree<'p> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::PointSet;
     use crate::kdtree::{brute_nn, NoStats};
     use crate::proputil::gen_uniform_points;
     use crate::prng::SplitMix64;

@@ -1,4 +1,5 @@
-//! Parallel balanced kd-tree (the paper's §3.2 workhorse).
+//! Parallel balanced kd-tree (the paper's §3.2 workhorse), generic over the
+//! coordinate [`Scalar`] (`f32`/`f64`).
 //!
 //! - **Arena layout, preallocated**: all nodes live in one flat `Vec`,
 //!   allocated up front (the paper credits preallocation for part of its
@@ -6,12 +7,17 @@
 //!   §7.2). A subtree over `m` points occupies a contiguous slot range of
 //!   size `2m-1`, so parallel recursive construction writes disjoint slots
 //!   without locks.
+//! - **Ownership**: a tree pins its input by cloning the [`PointStore`] — a
+//!   refcount bump on the shared `Arc<[S]>` buffer, never a coordinate
+//!   copy. That removes the old borrow lifetime, so sessions and the
+//!   Bentley–Saxe stream forest hold trees without self-reference tricks.
 //! - **Split rule**: median along the widest dimension of the node's cell
 //!   (the bounding box of its points), leaves hold ≤ `LEAF_SIZE` points.
 //! - **Queries**: nearest-neighbor / K-NN with cell-distance pruning, range
 //!   **count** with the §6.1 optimization (cells fully inside the query ball
 //!   contribute `count` without traversal) plus an unoptimized variant used
-//!   by the DPC-EXACT-BASELINE reproduction, and range report.
+//!   by the DPC-EXACT-BASELINE reproduction, and range report. All distance
+//!   math runs in `S`.
 //! - **Instrumentation**: every traversal can feed a [`StatSink`] so the
 //!   Table-1 bench can measure empirical work (nodes visited) and span
 //!   (traversal depth) — machine-independent evidence for the complexity
@@ -20,7 +26,7 @@
 pub mod incomplete;
 pub mod incremental;
 
-use crate::geom::{dist_sq, Bbox, PointSet};
+use crate::geom::{Bbox, PointStore, PointsView, Scalar};
 use crate::parlay;
 
 pub const LEAF_SIZE: usize = 16;
@@ -77,18 +83,18 @@ struct Node {
     hi: u32,
 }
 
-/// Balanced kd-tree over a borrowed [`PointSet`].
-pub struct KdTree<'p> {
-    pts: &'p PointSet,
+/// Balanced kd-tree over a refcount-shared [`PointStore`].
+pub struct KdTree<S: Scalar = f64> {
+    pts: PointStore<S>,
     nodes: Vec<Node>,
     /// Flat bounds arena: `[node * 2d .. node * 2d + d)` = min,
     /// `[.. + d ..)` = max.
-    bounds: Vec<f64>,
+    bounds: Vec<S>,
     /// Permutation of point ids; leaves own contiguous ranges of it.
     perm: Vec<u32>,
     /// Coordinates in `perm` order (leaf scans read contiguously — §Perf:
-    /// removes the scattered per-point indirection into the PointSet).
-    pcoords: Vec<f64>,
+    /// removes the scattered per-point indirection into the PointStore).
+    pcoords: Vec<S>,
     root: u32,
     /// parent[node] (NONE for root). Needed by the incomplete-tree wrapper.
     parent: Vec<u32>,
@@ -96,9 +102,10 @@ pub struct KdTree<'p> {
     leaf_of_point: Vec<u32>,
 }
 
-impl<'p> KdTree<'p> {
-    /// Build over all points of `pts` (parallel recursion).
-    pub fn build(pts: &'p PointSet) -> Self {
+impl<S: Scalar> KdTree<S> {
+    /// Build over all points of `pts` (parallel recursion). The store is
+    /// pinned by refcount.
+    pub fn build(pts: &PointStore<S>) -> Self {
         let ids: Vec<u32> = (0..pts.len() as u32).collect();
         Self::build_impl(pts, ids, false)
     }
@@ -107,38 +114,33 @@ impl<'p> KdTree<'p> {
     /// by [`incomplete::IncompleteKdTree`]. (Opt-in because the leaf map is
     /// O(|P|) per tree, which would make the Fenwick structure's n block
     /// trees quadratic in memory.)
-    pub fn build_with_maps(pts: &'p PointSet) -> Self {
+    pub fn build_with_maps(pts: &PointStore<S>) -> Self {
         let ids: Vec<u32> = (0..pts.len() as u32).collect();
         Self::build_impl(pts, ids, true)
     }
 
-    /// Build over a subset of point ids (used by the Fenwick structure).
-    pub fn build_from_ids(pts: &'p PointSet, ids: Vec<u32>) -> Self {
+    /// Build over a subset of point ids (used by the Fenwick structure and
+    /// the stream forest).
+    pub fn build_from_ids(pts: &PointStore<S>, ids: Vec<u32>) -> Self {
         Self::build_impl(pts, ids, false)
     }
 
-    fn build_impl(pts: &'p PointSet, mut ids: Vec<u32>, with_maps: bool) -> Self {
+    fn build_impl(pts: &PointStore<S>, mut ids: Vec<u32>, with_maps: bool) -> Self {
         let n = ids.len();
         let d = pts.dim();
         assert!(n > 0, "cannot build kd-tree over zero points");
         let slots = 2 * n - 1;
-        let mut tree = KdTree {
-            pts,
-            nodes: vec![Node { left: NONE, right: NONE, lo: 0, hi: 0 }; slots],
-            bounds: vec![0.0; slots * 2 * d],
-            perm: Vec::new(),
-            pcoords: Vec::new(),
-            root: 0,
-            parent: if with_maps { vec![NONE; slots] } else { Vec::new() },
-            leaf_of_point: if with_maps { vec![NONE; pts.len()] } else { Vec::new() },
-        };
+        let mut nodes = vec![Node { left: NONE, right: NONE, lo: 0, hi: 0 }; slots];
+        let mut bounds = vec![S::ZERO; slots * 2 * d];
+        let mut parent = if with_maps { vec![NONE; slots] } else { Vec::new() };
+        let mut leaf_of_point = if with_maps { vec![NONE; pts.len()] } else { Vec::new() };
         {
             let b = Builder {
-                pts,
-                nodes_ptr: tree.nodes.as_mut_ptr() as usize,
-                bounds_ptr: tree.bounds.as_mut_ptr() as usize,
-                parent_ptr: if with_maps { tree.parent.as_mut_ptr() as usize } else { 0 },
-                leaf_ptr: if with_maps { tree.leaf_of_point.as_mut_ptr() as usize } else { 0 },
+                pts: pts.view(),
+                nodes_ptr: nodes.as_mut_ptr() as usize,
+                bounds_ptr: bounds.as_mut_ptr() as usize,
+                parent_ptr: if with_maps { parent.as_mut_ptr() as usize } else { 0 },
+                leaf_ptr: if with_maps { leaf_of_point.as_mut_ptr() as usize } else { 0 },
                 d,
                 // Resolved once: the recursion forks on every node above
                 // BUILD_GRAIN, and re-reading the global costs an RwLock
@@ -148,18 +150,25 @@ impl<'p> KdTree<'p> {
             b.build_rec(&mut ids, 0, 0, NONE);
         }
         // Perm-ordered coordinate copy for contiguous leaf scans.
-        let mut pcoords = vec![0.0f64; ids.len() * d];
+        let mut pcoords = vec![S::ZERO; ids.len() * d];
         for (j, &p) in ids.iter().enumerate() {
             pcoords[j * d..(j + 1) * d].copy_from_slice(pts.point(p as usize));
         }
-        tree.pcoords = pcoords;
-        tree.perm = ids;
-        tree
+        KdTree {
+            pts: pts.clone(),
+            nodes,
+            bounds,
+            perm: ids,
+            pcoords,
+            root: 0,
+            parent,
+            leaf_of_point,
+        }
     }
 
     #[inline]
-    pub fn points(&self) -> &PointSet {
-        self.pts
+    pub fn points(&self) -> &PointStore<S> {
+        &self.pts
     }
 
     #[inline]
@@ -173,34 +182,35 @@ impl<'p> KdTree<'p> {
     }
 
     #[inline]
-    fn bbox_dist_sq(&self, i: u32, q: &[f64]) -> f64 {
+    fn bbox_dist_sq(&self, i: u32, q: &[S]) -> S {
         let d = self.pts.dim();
         let base = i as usize * 2 * d;
         let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
-        let mut s = 0.0;
+        let mut s = S::ZERO;
         for k in 0..d {
             let v = q[k];
-            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { 0.0 };
+            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { S::ZERO };
             s += t * t;
         }
         s
     }
 
     #[inline]
-    fn bbox_far_corner_sq(&self, i: u32, q: &[f64]) -> f64 {
+    fn bbox_far_corner_sq(&self, i: u32, q: &[S]) -> S {
         let d = self.pts.dim();
         let base = i as usize * 2 * d;
         let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
-        let mut s = 0.0;
+        let mut s = S::ZERO;
         for k in 0..d {
-            let t = (q[k] - min[k]).abs().max((q[k] - max[k]).abs());
+            // max(q-min, max-q) == max(|q-min|, |q-max|) whenever min ≤ max.
+            let t = (q[k] - min[k]).smax(max[k] - q[k]);
             s += t * t;
         }
         s
     }
 
     /// Bounding box of a node (copies; for tests/debug).
-    pub fn node_bbox(&self, i: u32) -> Bbox {
+    pub fn node_bbox(&self, i: u32) -> Bbox<S> {
         let d = self.pts.dim();
         let base = i as usize * 2 * d;
         Bbox::new(self.bounds[base..base + d].to_vec(), self.bounds[base + d..base + 2 * d].to_vec())
@@ -223,18 +233,18 @@ impl<'p> KdTree<'p> {
 
     /// Count points within squared radius `r_sq` of `q`, **with** the §6.1
     /// subtree-count pruning.
-    pub fn range_count<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+    pub fn range_count<T: StatSink>(&self, q: &[S], r_sq: S, stats: &mut T) -> usize {
         self.range_count_rec(self.root, q, r_sq, true, stats, 1)
     }
 
     /// Unoptimized variant (no cell-containment shortcut) — models the
     /// DPC-EXACT-BASELINE density step, which iterates over every point in
     /// range.
-    pub fn range_count_noprune<S: StatSink>(&self, q: &[f64], r_sq: f64, stats: &mut S) -> usize {
+    pub fn range_count_noprune<T: StatSink>(&self, q: &[S], r_sq: S, stats: &mut T) -> usize {
         self.range_count_rec(self.root, q, r_sq, false, stats, 1)
     }
 
-    fn range_count_rec<S: StatSink>(&self, i: u32, q: &[f64], r_sq: f64, prune: bool, stats: &mut S, depth: usize) -> usize {
+    fn range_count_rec<T: StatSink>(&self, i: u32, q: &[S], r_sq: S, prune: bool, stats: &mut T, depth: usize) -> usize {
         stats.visit_node();
         stats.depth(depth);
         if self.bbox_dist_sq(i, q) > r_sq {
@@ -260,11 +270,11 @@ impl<'p> KdTree<'p> {
     }
 
     /// Report ids of points within squared radius `r_sq` of `q`.
-    pub fn range_report(&self, q: &[f64], r_sq: f64, out: &mut Vec<u32>) {
+    pub fn range_report(&self, q: &[S], r_sq: S, out: &mut Vec<u32>) {
         self.range_report_rec(self.root, q, r_sq, out);
     }
 
-    fn range_report_rec(&self, i: u32, q: &[f64], r_sq: f64, out: &mut Vec<u32>) {
+    fn range_report_rec(&self, i: u32, q: &[S], r_sq: S, out: &mut Vec<u32>) {
         if self.bbox_dist_sq(i, q) > r_sq {
             return;
         }
@@ -292,8 +302,8 @@ impl<'p> KdTree<'p> {
     /// Nearest neighbor of `q`, excluding point id `exclude` (pass
     /// `u32::MAX` to exclude nothing). Ties broken by smaller id.
     /// Returns `(id, dist_sq)` or `None` if the tree holds only `exclude`.
-    pub fn nn<S: StatSink>(&self, q: &[f64], exclude: u32, stats: &mut S) -> Option<(u32, f64)> {
-        let mut best = (NONE, f64::INFINITY);
+    pub fn nn<T: StatSink>(&self, q: &[S], exclude: u32, stats: &mut T) -> Option<(u32, S)> {
+        let mut best = (NONE, S::INFINITY);
         self.nn_rec(self.root, q, exclude, &mut best, stats, 1);
         if best.0 == NONE {
             None
@@ -302,7 +312,7 @@ impl<'p> KdTree<'p> {
         }
     }
 
-    fn nn_rec<S: StatSink>(&self, i: u32, q: &[f64], exclude: u32, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+    fn nn_rec<T: StatSink>(&self, i: u32, q: &[S], exclude: u32, best: &mut (u32, S), stats: &mut T, depth: usize) {
         stats.visit_node();
         stats.depth(depth);
         let n = self.node(i);
@@ -335,17 +345,17 @@ impl<'p> KdTree<'p> {
     }
 
     /// Nearest neighbor of `q` among points accepted by `keep`, folded into
-    /// a running `best = (id, dist_sq)`. Pass `(u32::MAX, f64::INFINITY)` to
+    /// a running `best = (id, dist_sq)`. Pass `(u32::MAX, S::INFINITY)` to
     /// start fresh, or a previous winner to race it against this tree's
     /// points — the streaming forest threads one best through every level
     /// tree, and seeds it with a cached dependent so the traversal prunes at
     /// the old δ. Ordering matches [`KdTree::nn`]: min by `(dist_sq, id)`.
-    pub fn nn_filtered<S: StatSink, F: Fn(u32) -> bool>(
+    pub fn nn_filtered<T: StatSink, F: Fn(u32) -> bool>(
         &self,
-        q: &[f64],
+        q: &[S],
         keep: F,
-        best: &mut (u32, f64),
-        stats: &mut S,
+        best: &mut (u32, S),
+        stats: &mut T,
     ) {
         if self.bbox_dist_sq(self.root, q) > best.1 {
             return;
@@ -353,13 +363,13 @@ impl<'p> KdTree<'p> {
         self.nn_filtered_rec(self.root, q, &keep, best, stats, 1);
     }
 
-    fn nn_filtered_rec<S: StatSink, F: Fn(u32) -> bool>(
+    fn nn_filtered_rec<T: StatSink, F: Fn(u32) -> bool>(
         &self,
         i: u32,
-        q: &[f64],
+        q: &[S],
         keep: &F,
-        best: &mut (u32, f64),
-        stats: &mut S,
+        best: &mut (u32, S),
+        stats: &mut T,
         depth: usize,
     ) {
         stats.visit_node();
@@ -392,19 +402,19 @@ impl<'p> KdTree<'p> {
 
     /// K nearest neighbors of `q` (excluding `exclude`), ascending by
     /// `(dist_sq, id)`.
-    pub fn knn(&self, q: &[f64], k: usize, exclude: u32) -> Vec<(u32, f64)> {
+    pub fn knn(&self, q: &[S], k: usize, exclude: u32) -> Vec<(u32, S)> {
         if k == 0 {
             return Vec::new();
         }
-        let mut heap: Vec<(f64, u32)> = Vec::with_capacity(k + 1); // max-heap by (dist, id)
+        let mut heap: Vec<(S, u32)> = Vec::with_capacity(k + 1); // max-heap by (dist, id)
         self.knn_rec(self.root, q, k, exclude, &mut heap);
-        let mut out: Vec<(u32, f64)> = heap.into_iter().map(|(d, p)| (p, d)).collect();
+        let mut out: Vec<(u32, S)> = heap.into_iter().map(|(d, p)| (p, d)).collect();
         out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
         out
     }
 
-    fn knn_rec(&self, i: u32, q: &[f64], k: usize, exclude: u32, heap: &mut Vec<(f64, u32)>) {
-        let bound = if heap.len() == k { heap[0].0 } else { f64::INFINITY };
+    fn knn_rec(&self, i: u32, q: &[S], k: usize, exclude: u32, heap: &mut Vec<(S, u32)>) {
+        let bound = if heap.len() == k { heap[0].0 } else { S::INFINITY };
         if self.bbox_dist_sq(i, q) > bound {
             return;
         }
@@ -453,7 +463,7 @@ impl<'p> KdTree<'p> {
         let n = self.node(i);
         (n.left, n.right)
     }
-    pub(crate) fn bbox_dist(&self, i: u32, q: &[f64]) -> f64 {
+    pub(crate) fn bbox_dist(&self, i: u32, q: &[S]) -> S {
         self.bbox_dist_sq(i, q)
     }
     pub(crate) fn leaf_pts(&self, i: u32) -> &[u32] {
@@ -467,9 +477,10 @@ impl<'p> KdTree<'p> {
 
 /// Shared-nothing builder: subtree over `m` ids occupies exactly `2m-1`
 /// contiguous node slots, so recursive halves write disjoint regions (raw
-/// pointer writes, no locks).
-struct Builder<'p> {
-    pts: &'p PointSet,
+/// pointer writes, no locks). Works against a borrowed [`PointsView`] — the
+/// finished tree pins the store separately.
+struct Builder<'p, S: Scalar> {
+    pts: PointsView<'p, S>,
     nodes_ptr: usize,
     bounds_ptr: usize,
     parent_ptr: usize,
@@ -478,9 +489,9 @@ struct Builder<'p> {
     pool: std::sync::Arc<parlay::Pool>,
 }
 
-unsafe impl Sync for Builder<'_> {}
+unsafe impl<S: Scalar> Sync for Builder<'_, S> {}
 
-impl Builder<'_> {
+impl<S: Scalar> Builder<'_, S> {
     /// `ids` is the subrange of the permutation this subtree owns;
     /// `perm_off` its absolute offset; `slot` this node's arena index.
     fn build_rec(&self, ids: &mut [u32], perm_off: usize, slot: usize, parent: u32) {
@@ -490,7 +501,7 @@ impl Builder<'_> {
         // Compute the cell (bbox of the subtree's points).
         let bb = self.compute_bbox(ids);
         unsafe {
-            let bptr = (self.bounds_ptr as *mut f64).add(slot * 2 * d);
+            let bptr = (self.bounds_ptr as *mut S).add(slot * 2 * d);
             for k in 0..d {
                 *bptr.add(k) = bb.min()[k];
                 *bptr.add(d + k) = bb.max()[k];
@@ -547,7 +558,7 @@ impl Builder<'_> {
         }
     }
 
-    fn compute_bbox(&self, ids: &[u32]) -> Bbox {
+    fn compute_bbox(&self, ids: &[u32]) -> Bbox<S> {
         let m = ids.len();
         if m < 65_536 {
             return self.pts.bbox_of(ids);
@@ -556,7 +567,7 @@ impl Builder<'_> {
         // chunks would collapse to one sequential task under the auto grain.
         let nchunks = 16;
         let chunk = m.div_ceil(nchunks);
-        let boxes: Vec<Bbox> = parlay::par_map_grained(nchunks, 1, |c| {
+        let boxes: Vec<Bbox<S>> = parlay::par_map_grained(nchunks, 1, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             self.pts.bbox_of(&ids[lo..hi.max(lo)])
@@ -570,9 +581,11 @@ impl Builder<'_> {
 }
 
 /// Squared distance between `q` and the `j`-th perm-ordered point,
-/// specialized by dimension so the compiler fully unrolls the common cases.
+/// specialized by dimension so the compiler fully unrolls the common cases
+/// (`d` is a runtime value, so the generic loop alone would pay
+/// loop-control overhead in the innermost leaf-scan kernel).
 #[inline(always)]
-fn dist_sq_at(pcoords: &[f64], d: usize, j: usize, q: &[f64]) -> f64 {
+fn dist_sq_at<S: Scalar>(pcoords: &[S], d: usize, j: usize, q: &[S]) -> S {
     let base = j * d;
     // SAFETY: j < perm.len(), q.len() == d — callers pass tree-owned values.
     unsafe {
@@ -599,9 +612,9 @@ fn dist_sq_at(pcoords: &[f64], d: usize, j: usize, q: &[f64]) -> f64 {
                 a * a + b * b + c * c + e * e + f * f
             }
             _ => {
-                let mut s = 0.0;
+                let mut s = S::ZERO;
                 for k in 0..d {
-                    let t = p[k] - *q.get_unchecked(k);
+                    let t = *p.get_unchecked(k) - *q.get_unchecked(k);
                     s += t * t;
                 }
                 s
@@ -610,8 +623,8 @@ fn dist_sq_at(pcoords: &[f64], d: usize, j: usize, q: &[f64]) -> f64 {
     }
 }
 
-// Small binary-heap helpers on a Vec<(f64, u32)> max-heap (root = max).
-fn heap_up(h: &mut [(f64, u32)]) {
+// Small binary-heap helpers on a Vec<(S, u32)> max-heap (root = max).
+fn heap_up<S: Scalar>(h: &mut [(S, u32)]) {
     let mut i = h.len() - 1;
     while i > 0 {
         let p = (i - 1) / 2;
@@ -624,7 +637,7 @@ fn heap_up(h: &mut [(f64, u32)]) {
     }
 }
 
-fn heap_down(h: &mut [(f64, u32)]) {
+fn heap_down<S: Scalar>(h: &mut [(S, u32)]) {
     let n = h.len();
     let mut i = 0;
     loop {
@@ -649,13 +662,13 @@ fn heap_down(h: &mut [(f64, u32)]) {
 // ---------------------------------------------------------------------------
 
 /// O(n) reference NN: min (dist_sq, id), excluding `exclude`.
-pub fn brute_nn(pts: &PointSet, q: &[f64], exclude: u32) -> Option<(u32, f64)> {
-    let mut best: Option<(u32, f64)> = None;
+pub fn brute_nn<S: Scalar>(pts: &PointStore<S>, q: &[S], exclude: u32) -> Option<(u32, S)> {
+    let mut best: Option<(u32, S)> = None;
     for i in 0..pts.len() {
         if i as u32 == exclude {
             continue;
         }
-        let ds = dist_sq(pts.point(i), q);
+        let ds = pts.dist_sq_to(i, q);
         match best {
             Some((bi, bd)) if ds > bd || (ds == bd && i as u32 > bi) => {}
             _ => best = Some((i as u32, ds)),
@@ -667,7 +680,7 @@ pub fn brute_nn(pts: &PointSet, q: &[f64], exclude: u32) -> Option<(u32, f64)> {
 /// O(n) reference filtered NN: min `(dist_sq, id)` over points accepted by
 /// `keep`, folded into `best` with the same comparator as
 /// [`KdTree::nn_filtered`].
-pub fn brute_nn_filtered<F: Fn(u32) -> bool>(pts: &PointSet, q: &[f64], keep: F, best: &mut (u32, f64)) {
+pub fn brute_nn_filtered<S: Scalar, F: Fn(u32) -> bool>(pts: &PointStore<S>, q: &[S], keep: F, best: &mut (u32, S)) {
     for i in 0..pts.len() as u32 {
         if !keep(i) {
             continue;
@@ -680,13 +693,14 @@ pub fn brute_nn_filtered<F: Fn(u32) -> bool>(pts: &PointSet, q: &[f64], keep: F,
 }
 
 /// O(n) reference range count.
-pub fn brute_range_count(pts: &PointSet, q: &[f64], r_sq: f64) -> usize {
-    (0..pts.len()).filter(|&i| dist_sq(pts.point(i), q) <= r_sq).count()
+pub fn brute_range_count<S: Scalar>(pts: &PointStore<S>, q: &[S], r_sq: S) -> usize {
+    (0..pts.len()).filter(|&i| pts.dist_sq_to(i, q) <= r_sq).count()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::{PointSet, PointStore};
     use crate::proputil::{gen_degenerate_points, gen_uniform_points};
     use crate::prng::SplitMix64;
 
@@ -718,6 +732,33 @@ mod tests {
                 assert_eq!(got, want, "d={d} query {i}");
             }
         }
+    }
+
+    #[test]
+    fn f32_tree_matches_f32_brute_force() {
+        let pts64 = sample_points(31, 800, 3);
+        let pts = PointStore::<f32>::cast_from_f64(&pts64);
+        let tree = KdTree::build(&pts);
+        assert!(tree.points().shares_storage(&pts));
+        for i in (0..pts.len()).step_by(19) {
+            let q = pts.point(i);
+            let got = tree.nn(q, i as u32, &mut NoStats).unwrap();
+            let want = brute_nn(&pts, q, i as u32).unwrap();
+            assert_eq!(got, want, "query {i}");
+            let r_sq = 25.0f32;
+            assert_eq!(tree.range_count(q, r_sq, &mut NoStats), brute_range_count(&pts, q, r_sq), "count {i}");
+        }
+    }
+
+    #[test]
+    fn tree_pins_store_by_refcount() {
+        let pts = sample_points(32, 100, 2);
+        let tree = KdTree::build(&pts);
+        assert!(tree.points().shares_storage(&pts));
+        // The original handle can drop; the tree keeps the buffer alive.
+        let q = pts.point(0).to_vec();
+        drop(pts);
+        assert!(tree.nn(&q, u32::MAX, &mut NoStats).is_some());
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! use parcluster::datasets::synthetic;
 //!
 //! let pts = synthetic::uniform(10_000, 2, 1000.0, 42);
-//! let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0 };
+//! let params = DpcParams { d_cut: 30.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() };
 //! let out = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).expect("cluster");
 //! println!("{} clusters, {} noise", out.num_clusters, out.num_noise);
 //! ```
@@ -37,6 +37,14 @@
 //! from-scratch build on the concatenated points — then `cut` at any
 //! thresholds. Malformed input surfaces as [`error::DpcError`], never a
 //! panic.
+//!
+//! The data layer is **precision-generic**: [`geom::PointStore<S>`] holds
+//! coordinates in one shared `Arc<[S]>` buffer (`S` = `f32` or `f64`, the
+//! sealed [`geom::Scalar`] trait; `geom::PointSet` is the `f64` alias), and
+//! the whole pipeline — trees, sessions, streams, engines — runs at either
+//! precision. An f32 store halves coordinate bandwidth on the
+//! memory-bound traversals and produces byte-identical results whenever
+//! the data is f32-losslessly representable (see DESIGN.md §2b).
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

@@ -9,10 +9,10 @@ use anyhow::{bail, Context, Result};
 use parcluster::bench::{fmt_secs, Table};
 use parcluster::cli::{Args, USAGE};
 use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
-use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig, PointsPayload};
 use parcluster::datasets::{self, io};
 use parcluster::dpc::{decision, ClusterSession, DepAlgo, DpcParams};
-use parcluster::geom::PointSet;
+use parcluster::geom::{Dtype, DynPoints, PointSet};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -68,39 +68,62 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 42u64)?;
     let out = args.require("out")?.to_string();
     let csv = args.switch("csv");
+    let dtype = args.get_parse::<Dtype>("dtype")?.unwrap_or(Dtype::F64);
     args.reject_unknown()?;
     let ds = datasets::by_name(&name, n, seed).with_context(|| format!("unknown dataset {name:?}"))?;
+    let (count, dim) = (ds.pts.len(), ds.pts.dim());
     let path = Path::new(&out);
     if csv {
+        if dtype != Dtype::F64 {
+            bail!("--dtype applies to the binary format only (CSV is decimal text)");
+        }
         io::write_csv(&ds.pts, path)?;
     } else {
-        io::write_binary(&ds.pts, path)?;
+        // The v2 binary format stores the requested precision; a same-dtype
+        // cast shares the generator's buffer instead of copying.
+        io::write_binary_dyn(&DynPoints::F64(ds.pts).cast(dtype), path)?;
     }
-    println!("wrote {} points (d={}) to {}", ds.pts.len(), ds.pts.dim(), out);
+    println!("wrote {count} points (d={dim}, dtype={dtype}) to {out}");
     Ok(())
 }
 
-/// Load points from --dataset/--input and default params.
-fn load_input(args: &Args) -> Result<(PointSet, DpcParams, String)> {
+/// Load points from --dataset/--input at their stored precision, plus
+/// default params. Binary files keep their on-disk dtype (no widening
+/// round trip); datasets and CSV are f64 sources.
+fn load_input_dyn(args: &Args) -> Result<(DynPoints, DpcParams, String)> {
     if let Some(name) = args.get("dataset") {
         let n = args.get_parse::<usize>("n")?;
         let seed = args.get_or("seed", 42u64)?;
         let ds = datasets::by_name(name, n, seed).with_context(|| format!("unknown dataset {name:?}"))?;
-        return Ok((ds.pts, ds.params, ds.name));
+        return Ok((DynPoints::F64(ds.pts), ds.params, ds.name));
     }
     if let Some(path) = args.get("input") {
         let p = Path::new(path);
-        let pts = if path.ends_with(".csv") { io::read_csv(p)? } else { io::read_binary(p)? };
+        let pts = if path.ends_with(".csv") {
+            DynPoints::F64(io::read_csv(p)?)
+        } else {
+            io::read_binary_dyn(p)?
+        };
         return Ok((pts, DpcParams::default(), path.to_string()));
     }
     bail!("need --dataset NAME or --input FILE")
 }
 
+/// f64 view of [`load_input_dyn`] for the commands that stay
+/// double-precision (decision graphs, streaming).
+fn load_input(args: &Args) -> Result<(PointSet, DpcParams, String)> {
+    let (pts, params, tag) = load_input_dyn(args)?;
+    Ok((pts.into_f64(), params, tag))
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
-    let (pts, mut params, tag) = load_input(args)?;
+    let (pts, mut params, tag) = load_input_dyn(args)?;
     params.d_cut = args.get_or("d-cut", params.d_cut)?;
     params.rho_min = args.get_or("rho-min", params.rho_min)?;
     params.delta_min = args.get_or("delta-min", params.delta_min)?;
+    // Default to the input's stored precision (f64 for datasets/CSV; an
+    // f32 binary file stays f32 unless --dtype says otherwise).
+    params.dtype = args.get_parse::<Dtype>("dtype")?.unwrap_or(pts.dtype());
     let mut cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() }.with_env_overrides()?;
     if let Some(b) = args.get("backend") {
         cfg.backend = parse_backend(b)?;
@@ -112,13 +135,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let labels_out = args.get("labels-out").map(|s| s.to_string());
     args.reject_unknown()?;
 
+    // The requested dtype picks the store the whole pipeline runs on.
+    // `cast` refcount-shares when the input is already at that precision
+    // (an f32 file stays one buffer end to end) and rounds otherwise (use
+    // integer-coordinate data for bit-exact f32/f64 parity — see
+    // DESIGN.md §2b).
+    let payload = match pts.cast(params.dtype) {
+        DynPoints::F64(p) => PointsPayload::F64(Arc::new(p)),
+        DynPoints::F32(p) => PointsPayload::F32(Arc::new(p)),
+    };
     let coord = Coordinator::start(cfg)?;
     let out = coord
-        .run_sync(ClusterJob::new(Arc::new(pts), params).tag(&tag))
+        .run_sync(ClusterJob::new_points(payload, params).tag(&tag))
         .map_err(|e| anyhow::anyhow!(e))?;
     let r = &out.result;
     println!("dataset    : {tag}");
     println!("backend    : {}", out.backend_used.name());
+    println!("dtype      : {}", params.dtype);
     println!("points     : {}", r.labels.len());
     println!("clusters   : {}", r.num_clusters);
     println!("noise      : {}", r.num_noise);
@@ -201,11 +234,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let mut all_exact = true;
     while sent < n {
         let hi = (sent + per).min(n);
-        let batch = PointSet::new(pts.coords()[sent * d..hi * d].to_vec(), d);
+        let batch = PointSet::try_new(pts.coords()[sent * d..hi * d].to_vec(), d)?;
         let id = coord.submit_ingest(sid, Arc::new(batch), params.rho_min, params.delta_min)?;
         let out = coord.wait(id).map_err(|e| anyhow::anyhow!(e))?;
         let exact = if verify {
-            let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
+            let prefix = PointSet::try_new(pts.coords()[..hi * d].to_vec(), d)?;
             let fresh = parcluster::dpc::Dpc::new(params).run(&prefix)?;
             let same = out.result.rho == fresh.rho
                 && out.result.dep == fresh.dep
@@ -408,7 +441,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     continue;
                 };
                 let mut job =
-                    ClusterJob::new(Arc::new(ds.pts), DpcParams { d_cut, rho_min, delta_min }).tag(parts[0]);
+                    ClusterJob::new(Arc::new(ds.pts), DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() }).tag(parts[0]);
                 if let Some(a) = parts.get(5) {
                     match parse_dep_algo(a) {
                         Ok(algo) => job = job.dep_algo(algo),

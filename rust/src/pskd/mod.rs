@@ -25,77 +25,82 @@
 //! writes disjoint regions lock-free. Construction: O(n log n) work,
 //! O(log n log log n) span (theoretical; the per-node median select is
 //! sequential in this implementation — see DESIGN.md §Perf).
+//!
+//! Generic over the coordinate [`Scalar`] (priorities stay `u64`, so the
+//! heap/tie-break structure — and thus exactness — is precision-
+//! independent); pins its input [`PointStore`] by refcount.
 
-use crate::geom::{Bbox, PointSet};
+use crate::geom::{Bbox, PointStore, PointsView, Scalar};
 use crate::kdtree::StatSink;
 use crate::parlay;
 
 const NONE: u32 = u32::MAX;
 const BUILD_GRAIN: usize = 2048;
 
-/// Priority search kd-tree over a borrowed point set with one `u64` priority
-/// per point. Priorities must be **unique** (callers pack a tiebreaker into
-/// the low bits; see `dpc::priority_key`).
-pub struct PriorityKdTree<'p> {
-    pts: &'p PointSet,
+/// Priority search kd-tree over a refcount-shared point store with one
+/// `u64` priority per point. Priorities must be **unique** (callers pack a
+/// tiebreaker into the low bits; see `dpc::priority_key`).
+pub struct PriorityKdTree<S: Scalar = f64> {
+    pts: PointStore<S>,
     node_point: Vec<u32>,
     node_gamma: Vec<u64>,
     /// Node points' coordinates, slot-ordered (§Perf: the candidate-distance
     /// computation at every visited node reads these contiguously instead of
-    /// chasing into the PointSet).
-    node_coords: Vec<f64>,
+    /// chasing into the point store).
+    node_coords: Vec<S>,
     left: Vec<u32>,
     right: Vec<u32>,
-    bounds: Vec<f64>,
+    bounds: Vec<S>,
     root: u32,
 }
 
-impl<'p> PriorityKdTree<'p> {
+impl<S: Scalar> PriorityKdTree<S> {
     /// BUILD-PRIORITY-SEARCH-KD-TREE(P, γ).
-    pub fn build(pts: &'p PointSet, gamma: &[u64]) -> Self {
+    pub fn build(pts: &PointStore<S>, gamma: &[u64]) -> Self {
         assert_eq!(gamma.len(), pts.len());
         assert!(!pts.is_empty());
         let n = pts.len();
         let d = pts.dim();
         let mut ids: Vec<u32> = (0..n as u32).collect();
-        let mut t = PriorityKdTree {
-            pts,
-            node_point: vec![NONE; n],
-            node_gamma: vec![0; n],
-            node_coords: vec![0.0; n * d],
-            left: vec![NONE; n],
-            right: vec![NONE; n],
-            bounds: vec![0.0; n * 2 * d],
-            root: 0,
-        };
+        let mut node_point = vec![NONE; n];
+        let mut node_gamma = vec![0u64; n];
+        let mut node_coords = vec![S::ZERO; n * d];
+        let mut left = vec![NONE; n];
+        let mut right = vec![NONE; n];
+        let mut bounds = vec![S::ZERO; n * 2 * d];
         {
             let b = PskdBuilder {
-                pts,
+                pts: pts.view(),
                 gamma,
                 d,
-                node_point: t.node_point.as_mut_ptr() as usize,
-                node_gamma: t.node_gamma.as_mut_ptr() as usize,
-                node_coords: t.node_coords.as_mut_ptr() as usize,
-                left: t.left.as_mut_ptr() as usize,
-                right: t.right.as_mut_ptr() as usize,
-                bounds: t.bounds.as_mut_ptr() as usize,
+                node_point: node_point.as_mut_ptr() as usize,
+                node_gamma: node_gamma.as_mut_ptr() as usize,
+                node_coords: node_coords.as_mut_ptr() as usize,
+                left: left.as_mut_ptr() as usize,
+                right: right.as_mut_ptr() as usize,
+                bounds: bounds.as_mut_ptr() as usize,
                 // Resolved once; the fork path below runs per node.
                 pool: parlay::pool::global(),
             };
             b.build_rec(&mut ids, 0);
         }
-        t
+        PriorityKdTree { pts: pts.clone(), node_point, node_gamma, node_coords, left, right, bounds, root: 0 }
     }
 
     #[inline]
-    fn bbox_dist_sq(&self, i: u32, q: &[f64]) -> f64 {
+    pub fn points(&self) -> &PointStore<S> {
+        &self.pts
+    }
+
+    #[inline]
+    fn bbox_dist_sq(&self, i: u32, q: &[S]) -> S {
         let d = self.pts.dim();
         let base = i as usize * 2 * d;
         let (min, max) = (&self.bounds[base..base + d], &self.bounds[base + d..base + 2 * d]);
-        let mut s = 0.0;
+        let mut s = S::ZERO;
         for k in 0..d {
             let v = q[k];
-            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { 0.0 };
+            let t = if v < min[k] { min[k] - v } else if v > max[k] { v - max[k] } else { S::ZERO };
             s += t * t;
         }
         s
@@ -105,8 +110,8 @@ impl<'p> PriorityKdTree<'p> {
     /// `gamma_q`. Ties in distance broken by smaller point id. Returns
     /// `(id, dist_sq)`; `None` iff no point has priority > `gamma_q` (i.e.
     /// the query is the global density peak).
-    pub fn priority_nn<S: StatSink>(&self, q: &[f64], gamma_q: u64, stats: &mut S) -> Option<(u32, f64)> {
-        let mut best = (NONE, f64::INFINITY);
+    pub fn priority_nn<T: StatSink>(&self, q: &[S], gamma_q: u64, stats: &mut T) -> Option<(u32, S)> {
+        let mut best = (NONE, S::INFINITY);
         self.pnn_rec(self.root, q, gamma_q, &mut best, stats, 1);
         if best.0 == NONE {
             None
@@ -115,7 +120,7 @@ impl<'p> PriorityKdTree<'p> {
         }
     }
 
-    fn pnn_rec<S: StatSink>(&self, i: u32, q: &[f64], gamma_q: u64, best: &mut (u32, f64), stats: &mut S, depth: usize) {
+    fn pnn_rec<T: StatSink>(&self, i: u32, q: &[S], gamma_q: u64, best: &mut (u32, S), stats: &mut T, depth: usize) {
         // Heap-property prune: γ of node = max γ of subtree.
         if self.node_gamma[i as usize] <= gamma_q {
             return;
@@ -126,7 +131,7 @@ impl<'p> PriorityKdTree<'p> {
         stats.scan_point();
         let d = self.pts.dim();
         let base = i as usize * d;
-        let mut ds = 0.0;
+        let mut ds = S::ZERO;
         for k in 0..d {
             let t = self.node_coords[base + k] - q[k];
             ds += t * t;
@@ -138,8 +143,8 @@ impl<'p> PriorityKdTree<'p> {
             }
         }
         let (l, r) = (self.left[i as usize], self.right[i as usize]);
-        let dl = if l != NONE { self.bbox_dist_sq(l, q) } else { f64::INFINITY };
-        let dr = if r != NONE { self.bbox_dist_sq(r, q) } else { f64::INFINITY };
+        let dl = if l != NONE { self.bbox_dist_sq(l, q) } else { S::INFINITY };
+        let dr = if r != NONE { self.bbox_dist_sq(r, q) } else { S::INFINITY };
         let (first, d1, second, d2) = if dl <= dr { (l, dl, r, dr) } else { (r, dr, l, dl) };
         if first != NONE && d1 <= best.1 {
             self.pnn_rec(first, q, gamma_q, best, stats, depth + 1);
@@ -151,11 +156,11 @@ impl<'p> PriorityKdTree<'p> {
 
     /// Priority range query (Appendix A): all points inside the ball
     /// `|x-q|² ≤ r_sq` with priority > `gamma_q`.
-    pub fn priority_range(&self, q: &[f64], r_sq: f64, gamma_q: u64, out: &mut Vec<u32>) {
+    pub fn priority_range(&self, q: &[S], r_sq: S, gamma_q: u64, out: &mut Vec<u32>) {
         self.prange_rec(self.root, q, r_sq, gamma_q, out);
     }
 
-    fn prange_rec(&self, i: u32, q: &[f64], r_sq: f64, gamma_q: u64, out: &mut Vec<u32>) {
+    fn prange_rec(&self, i: u32, q: &[S], r_sq: S, gamma_q: u64, out: &mut Vec<u32>) {
         if self.node_gamma[i as usize] <= gamma_q || self.bbox_dist_sq(i, q) > r_sq {
             return;
         }
@@ -174,7 +179,7 @@ impl<'p> PriorityKdTree<'p> {
 
     /// Max depth of the tree (test/diagnostic; O(n)).
     pub fn depth(&self) -> usize {
-        fn rec(t: &PriorityKdTree, i: u32) -> usize {
+        fn rec<S: Scalar>(t: &PriorityKdTree<S>, i: u32) -> usize {
             let (l, r) = (t.left[i as usize], t.right[i as usize]);
             let dl = if l != NONE { rec(t, l) } else { 0 };
             let dr = if r != NONE { rec(t, r) } else { 0 };
@@ -185,7 +190,7 @@ impl<'p> PriorityKdTree<'p> {
 
     /// Verify the heap property (test/diagnostic).
     pub fn check_heap_property(&self) -> bool {
-        fn rec(t: &PriorityKdTree, i: u32) -> bool {
+        fn rec<S: Scalar>(t: &PriorityKdTree<S>, i: u32) -> bool {
             let g = t.node_gamma[i as usize];
             for c in [t.left[i as usize], t.right[i as usize]] {
                 if c != NONE && (t.node_gamma[c as usize] > g || !rec(t, c)) {
@@ -198,8 +203,8 @@ impl<'p> PriorityKdTree<'p> {
     }
 }
 
-struct PskdBuilder<'a> {
-    pts: &'a PointSet,
+struct PskdBuilder<'a, S: Scalar> {
+    pts: PointsView<'a, S>,
     gamma: &'a [u64],
     d: usize,
     node_point: usize,
@@ -211,9 +216,9 @@ struct PskdBuilder<'a> {
     pool: std::sync::Arc<parlay::Pool>,
 }
 
-unsafe impl Sync for PskdBuilder<'_> {}
+unsafe impl<S: Scalar> Sync for PskdBuilder<'_, S> {}
 
-impl PskdBuilder<'_> {
+impl<S: Scalar> PskdBuilder<'_, S> {
     /// Subtree over `ids` occupies slots `[slot, slot + ids.len())`.
     fn build_rec(&self, ids: &mut [u32], slot: usize) {
         let m = ids.len();
@@ -222,7 +227,7 @@ impl PskdBuilder<'_> {
         // Cell = bbox over ALL points of the subtree (incl. the hoisted max).
         let bb = self.compute_bbox(ids);
         unsafe {
-            let bptr = (self.bounds as *mut f64).add(slot * 2 * d);
+            let bptr = (self.bounds as *mut S).add(slot * 2 * d);
             for k in 0..d {
                 *bptr.add(k) = bb.min()[k];
                 *bptr.add(d + k) = bb.max()[k];
@@ -241,7 +246,7 @@ impl PskdBuilder<'_> {
         unsafe {
             *(self.node_point as *mut u32).add(slot) = p;
             *(self.node_gamma as *mut u64).add(slot) = self.gamma[p as usize];
-            let cptr = (self.node_coords as *mut f64).add(slot * d);
+            let cptr = (self.node_coords as *mut S).add(slot * d);
             let src = self.pts.point(p as usize);
             std::ptr::copy_nonoverlapping(src.as_ptr(), cptr, d);
         }
@@ -285,7 +290,7 @@ impl PskdBuilder<'_> {
         }
     }
 
-    fn compute_bbox(&self, ids: &[u32]) -> Bbox {
+    fn compute_bbox(&self, ids: &[u32]) -> Bbox<S> {
         let m = ids.len();
         if m < 65_536 {
             return self.pts.bbox_of(ids);
@@ -294,7 +299,7 @@ impl PskdBuilder<'_> {
         // under the auto grain.
         let nchunks = 16;
         let chunk = m.div_ceil(nchunks);
-        let boxes: Vec<Bbox> = parlay::par_map_grained(nchunks, 1, |c| {
+        let boxes: Vec<Bbox<S>> = parlay::par_map_grained(nchunks, 1, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             self.pts.bbox_of(&ids[lo..hi.max(lo)])
@@ -309,8 +314,8 @@ impl PskdBuilder<'_> {
 
 /// Brute-force priority-NN oracle: nearest point with priority > `gamma_q`,
 /// ties by id.
-pub fn brute_priority_nn(pts: &PointSet, gamma: &[u64], q: &[f64], gamma_q: u64) -> Option<(u32, f64)> {
-    let mut best: Option<(u32, f64)> = None;
+pub fn brute_priority_nn<S: Scalar>(pts: &PointStore<S>, gamma: &[u64], q: &[S], gamma_q: u64) -> Option<(u32, S)> {
+    let mut best: Option<(u32, S)> = None;
     for i in 0..pts.len() {
         if gamma[i] <= gamma_q {
             continue;
@@ -327,6 +332,7 @@ pub fn brute_priority_nn(pts: &PointSet, gamma: &[u64], q: &[f64], gamma_q: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::PointStore;
     use crate::kdtree::NoStats;
     use crate::proputil::{gen_clustered_points, gen_uniform_points};
     use crate::prng::SplitMix64;
@@ -382,6 +388,21 @@ mod tests {
         let gamma = random_gamma(&mut rng, 1200);
         let t = PriorityKdTree::build(&pts, &gamma);
         for i in (0..1200).step_by(11) {
+            let got = t.priority_nn(pts.point(i), gamma[i], &mut NoStats);
+            let want = brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]);
+            assert_eq!(got, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn f32_priority_nn_matches_brute_force() {
+        let mut rng = SplitMix64::new(14);
+        let pts64 = gen_uniform_points(&mut rng, 900, 2, 80.0);
+        let pts = PointStore::<f32>::cast_from_f64(&pts64);
+        let gamma = random_gamma(&mut rng, 900);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        assert!(t.points().shares_storage(&pts));
+        for i in (0..900).step_by(17) {
             let got = t.priority_nn(pts.point(i), gamma[i], &mut NoStats);
             let want = brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]);
             assert_eq!(got, want, "query {i}");

@@ -9,13 +9,15 @@
 //! 3. **Golden snapshot**: a committed dataset + expected labels/centers
 //!    under `rust/tests/data/`, so an exactness regression shows as a
 //!    readable per-point diff instead of a property-test shrink.
-//! 4. **Edge cases** for the session/validation layer.
+//! 4. **Precision**: on integer-coordinate (f32-lossless) data the f32 and
+//!    f64 pipelines — one-shot and streaming — are byte-identical.
+//! 5. **Edge cases** for the session/validation layer.
 
 use parcluster::dpc::{ClusterSession, DensityAlgo, DepAlgo, Dpc, DpcParams, DpcResult, StreamingSession};
 use parcluster::error::DpcError;
-use parcluster::geom::PointSet;
+use parcluster::geom::{Dtype, PointSet, PointStore};
 use parcluster::prng::SplitMix64;
-use parcluster::proputil::{gen_clustered_points, gen_uniform_points};
+use parcluster::proputil::{gen_clustered_points, gen_grid_points, gen_uniform_points};
 
 // ---------------------------------------------------------------------------
 // Input families
@@ -86,7 +88,7 @@ fn all_dep_density_combinations_identical_across_families() {
         for family in FAMILIES {
             let n = 80 + (seed as usize % 3) * 40;
             let pts = gen_family(family, seed, n);
-            let params = DpcParams { d_cut: family_d_cut(family), rho_min: 2.0, delta_min: 6.0 };
+            let params = DpcParams { d_cut: family_d_cut(family), rho_min: 2.0, delta_min: 6.0, ..DpcParams::default() };
             let reference = Dpc::new(params)
                 .dep_algo(DepAlgo::Naive)
                 .density_algo(DensityAlgo::Naive)
@@ -116,7 +118,7 @@ fn streaming_state_matches_fresh_session_for_all_dep_algos() {
         let pts = gen_family(family, 77, 140);
         let d = pts.dim();
         let d_cut = family_d_cut(family);
-        let mut stream = StreamingSession::new(d, d_cut).unwrap();
+        let mut stream = StreamingSession::<f64>::new(d, d_cut).unwrap();
         let mut sent = 0usize;
         for bsz in [33usize, 1, 60, 46] {
             let hi = (sent + bsz).min(pts.len());
@@ -148,7 +150,8 @@ fn streaming_state_matches_fresh_session_for_all_dep_algos() {
 
 const GOLDEN_INPUT: &str = include_str!("data/golden_input.csv");
 const GOLDEN_EXPECTED: &str = include_str!("data/golden_expected.csv");
-const GOLDEN_PARAMS: DpcParams = DpcParams { d_cut: 2.0, rho_min: 3.0, delta_min: 5.0 };
+const GOLDEN_PARAMS: DpcParams =
+    DpcParams { d_cut: 2.0, rho_min: 3.0, delta_min: 5.0, dtype: Dtype::F64 };
 
 struct Golden {
     rho: Vec<u32>,
@@ -225,7 +228,7 @@ fn golden_snapshot_matches_for_every_dep_algo() {
 fn golden_snapshot_matches_streaming_ingest() {
     let (pts, golden) = parse_golden();
     let d = pts.dim();
-    let mut stream = StreamingSession::new(d, GOLDEN_PARAMS.d_cut).unwrap();
+    let mut stream = StreamingSession::<f64>::new(d, GOLDEN_PARAMS.d_cut).unwrap();
     // One blob per batch, then the stragglers — exercises cross-batch ρ bumps.
     for (lo, hi) in [(0usize, 5usize), (5, 11), (11, 13)] {
         stream.ingest(&PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d)).unwrap();
@@ -236,14 +239,81 @@ fn golden_snapshot_matches_streaming_ingest() {
 }
 
 // ---------------------------------------------------------------------------
-// 4. Session/validation edge cases
+// 4. Precision conformance: on integer-coordinate data (losslessly
+//    representable in f32) the f32 and f64 pipelines must produce
+//    byte-identical DpcResults — every field, every algorithm.
+// ---------------------------------------------------------------------------
+
+/// Integer grid points + integer radius: every coordinate, squared
+/// distance, and radius is exactly representable at both precisions, so
+/// precision cannot perturb a single comparison or tie-break.
+fn integer_points(seed: u64, n: usize, d: usize) -> (PointSet, PointStore<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let pts64 = gen_grid_points(&mut rng, n, d, 12);
+    let pts32 = PointStore::<f32>::try_lossless_from_f64(&pts64).expect("grid coords are f32-lossless");
+    (pts64, pts32)
+}
+
+#[test]
+fn f32_and_f64_pipelines_byte_identical_on_integer_coords() {
+    for (seed, n, d) in [(401u64, 150usize, 2usize), (402, 220, 3)] {
+        let (pts64, pts32) = integer_points(seed, n, d);
+        let params = DpcParams { d_cut: 3.0, rho_min: 2.0, delta_min: 4.0, dtype: Dtype::F64 };
+        let params32 = DpcParams { dtype: Dtype::F32, ..params };
+        for dep_algo in DepAlgo::ALL {
+            for density_algo in DensityAlgo::ALL {
+                let a = Dpc::new(params).dep_algo(dep_algo).density_algo(density_algo).run(&pts64).unwrap();
+                let b = Dpc::new(params32).dep_algo(dep_algo).density_algo(density_algo).run(&pts32).unwrap();
+                assert_identical(&a, &b, &format!("f32 vs f64 seed={seed} {dep_algo:?}×{density_algo:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_stream_ingest_matches_f32_fresh_and_f64_stream() {
+    let (pts64, pts32) = integer_points(403, 180, 2);
+    let d = pts64.dim();
+    let d_cut = 2.0;
+    let mut s64 = StreamingSession::<f64>::new(d, d_cut).unwrap();
+    let mut s32 = StreamingSession::<f32>::new(d, d_cut).unwrap();
+    let mut sent = 0usize;
+    for bsz in [40usize, 1, 75, 64] {
+        let hi = (sent + bsz).min(pts64.len());
+        let b64 = PointSet::try_new(pts64.coords()[sent * d..hi * d].to_vec(), d).unwrap();
+        let b32 = PointStore::<f32>::try_new(pts32.coords()[sent * d..hi * d].to_vec(), d).unwrap();
+        s64.ingest(&b64).unwrap();
+        s32.ingest(&b32).unwrap();
+        sent = hi;
+        // Stream-vs-fresh parity at f32 (the satellite's second leg).
+        let prefix32 = PointStore::<f32>::try_new(pts32.coords()[..hi * d].to_vec(), d).unwrap();
+        let mut fresh32 = ClusterSession::build(&prefix32).unwrap();
+        let rho = fresh32.density(d_cut).unwrap();
+        assert_eq!(s32.rho(), &rho[..], "f32 stream rho at {hi}");
+        let art = fresh32.dependents(DepAlgo::Priority).unwrap();
+        assert_eq!(s32.dep(), &art.dep[..], "f32 stream dep at {hi}");
+        assert_eq!(s32.delta(), &art.delta[..], "f32 stream delta at {hi}");
+        // Cross-precision parity on lossless data: the two streams agree
+        // bit for bit after every batch.
+        assert_eq!(s32.rho(), s64.rho(), "f32 vs f64 stream rho at {hi}");
+        assert_eq!(s32.dep(), s64.dep(), "f32 vs f64 stream dep at {hi}");
+        assert_eq!(s32.delta(), s64.delta(), "f32 vs f64 stream delta at {hi}");
+        let a = s32.cut(2.0, 3.0).unwrap();
+        let b = s64.cut(2.0, 3.0).unwrap();
+        assert_identical(&a, &b, &format!("f32 vs f64 stream cut at {hi}"));
+    }
+    assert_eq!(sent, pts64.len());
+}
+
+// ---------------------------------------------------------------------------
+// 5. Session/validation edge cases
 // ---------------------------------------------------------------------------
 
 #[test]
 fn single_point_is_its_own_cluster() {
     let pts = PointSet::new(vec![3.0, 4.0], 2);
     for algo in DepAlgo::ALL {
-        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 10.0 }).dep_algo(algo).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 10.0, ..DpcParams::default() }).dep_algo(algo).run(&pts).unwrap();
         assert_eq!(out.rho, vec![1], "{algo:?}");
         assert_eq!(out.dep, vec![None]);
         assert!(out.delta[0].is_infinite());
@@ -257,7 +327,7 @@ fn all_duplicate_points_collapse_to_one_cluster() {
     let n = 40;
     let pts = PointSet::new(vec![7.0; n * 2], 2);
     for algo in DepAlgo::ALL {
-        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0 }).dep_algo(algo).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() }).dep_algo(algo).run(&pts).unwrap();
         assert!(out.rho.iter().all(|&r| r == n as u32), "{algo:?}");
         // Id tiebreak: point 0 is the unique peak; everyone else depends on
         // it at distance zero.
@@ -275,10 +345,10 @@ fn zero_d_cut_is_rejected_everywhere() {
     let mut s = ClusterSession::build(&pts).unwrap();
     assert!(matches!(s.density(0.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
     assert!(matches!(
-        Dpc::new(DpcParams { d_cut: 0.0, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+        Dpc::new(DpcParams { d_cut: 0.0, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() }).run(&pts),
         Err(DpcError::InvalidParam { name: "d_cut", .. })
     ));
-    assert!(matches!(StreamingSession::new(2, 0.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
+    assert!(matches!(StreamingSession::<f64>::new(2, 0.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
 }
 
 #[test]
@@ -311,7 +381,7 @@ fn second_radius_invalidates_cached_dep_artifacts() {
     assert!(matches!(s.cut(0.0, 5.0), Err(DpcError::MissingStage { need: "dependents", .. })));
     s.dependents(DepAlgo::Fenwick).unwrap();
     let recut = s.cut(0.0, 5.0).unwrap();
-    let fresh = Dpc::new(DpcParams { d_cut: 6.0, rho_min: 0.0, delta_min: 5.0 })
+    let fresh = Dpc::new(DpcParams { d_cut: 6.0, rho_min: 0.0, delta_min: 5.0, ..DpcParams::default() })
         .dep_algo(DepAlgo::Fenwick)
         .run(&pts)
         .unwrap();

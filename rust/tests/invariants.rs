@@ -163,7 +163,7 @@ fn prop_pipeline_labels_identical_across_algorithms() {
     proputil::check("pipeline-labels", Config::cases(15), |rng| gen_case(rng, 200, 3), |c| {
         for flavor in 0..4 {
             let pts = gen_points(c, flavor);
-            let params = DpcParams { d_cut: 3.0, rho_min: (c.seed % 3) as f64, delta_min: 5.0 };
+            let params = DpcParams { d_cut: 3.0, rho_min: (c.seed % 3) as f64, delta_min: 5.0, ..DpcParams::default() };
             let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
             for algo in [DepAlgo::ExactBaseline, DepAlgo::Incomplete, DepAlgo::Priority, DepAlgo::Fenwick] {
                 let got = Dpc::new(params).dep_algo(algo).run(&pts).unwrap();
@@ -263,10 +263,10 @@ fn prop_decision_graph_suggestion_recovers_k() {
             }
         }
         let pts = PointSet::new(coords, 2);
-        let scan = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: f64::INFINITY }).run(&pts).unwrap();
+        let scan = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: f64::INFINITY, ..DpcParams::default() }).run(&pts).unwrap();
         let graph = dpc::decision::decision_graph(&scan);
         let (rho_min, delta_min) = dpc::decision::suggest_params(&graph, k).unwrap();
-        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min }).run(&pts).unwrap();
+        let out = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min, ..DpcParams::default() }).run(&pts).unwrap();
         if out.num_clusters != k {
             return Err(format!("expected {k} clusters, got {}", out.num_clusters));
         }

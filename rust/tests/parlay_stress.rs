@@ -150,7 +150,7 @@ fn nested_join_depth_bomb_does_not_deadlock() {
 fn dpc_outputs_byte_identical_across_thread_counts() {
     let _g = lock();
     let pts = synthetic::simden(4_000, 2, 42);
-    let params = DpcParams { d_cut: 30.0, rho_min: 2.0, delta_min: 60.0 };
+    let params = DpcParams { d_cut: 30.0, rho_min: 2.0, delta_min: 60.0, ..DpcParams::default() };
     for dep_algo in [DepAlgo::Priority, DepAlgo::Fenwick] {
         parlay::set_threads(1);
         let seq = Dpc::new(params)

@@ -45,7 +45,7 @@ fn prop_recut_is_byte_identical_to_fresh_run() {
                 session.dependents(algo).map_err(|e| e.to_string())?;
                 for (rho_min, delta_min) in [(0.0, 5.0), (2.0, 3.0), (1.0, f64::INFINITY), (3.0, 0.0)] {
                     let recut = session.cut(rho_min, delta_min).map_err(|e| e.to_string())?;
-                    let fresh = Dpc::new(DpcParams { d_cut, rho_min, delta_min })
+                    let fresh = Dpc::new(DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() })
                         .dep_algo(algo)
                         .run(&pts)
                         .map_err(|e| e.to_string())?;
@@ -110,7 +110,7 @@ fn prop_malformed_inputs_are_typed_errors() {
                 // Same through the one-shot wrapper.
                 let pts = PointSet::new(vec![0.0, bad], 2);
                 if !matches!(
-                    Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+                    Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() }).run(&pts),
                     Err(DpcError::NonFinite { .. })
                 ) {
                     return Err("Dpc::run nonfinite: wrong error".into());
@@ -120,7 +120,7 @@ fn prop_malformed_inputs_are_typed_errors() {
             let pts = proputil::gen_uniform_points(&mut rng, n.max(2), 2, 5.0);
             for bad in [0.0, -1.0 - rng.next_f64(), f64::NAN] {
                 if !matches!(
-                    Dpc::new(DpcParams { d_cut: bad, rho_min: 0.0, delta_min: 1.0 }).run(&pts),
+                    Dpc::new(DpcParams { d_cut: bad, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() }).run(&pts),
                     Err(DpcError::InvalidParam { name: "d_cut", .. })
                 ) {
                     return Err(format!("d_cut={bad}: wrong error"));
@@ -128,13 +128,13 @@ fn prop_malformed_inputs_are_typed_errors() {
             }
             // NaN thresholds.
             if !matches!(
-                Dpc::new(DpcParams { d_cut: 1.0, rho_min: f64::NAN, delta_min: 1.0 }).run(&pts),
+                Dpc::new(DpcParams { d_cut: 1.0, rho_min: f64::NAN, delta_min: 1.0, ..DpcParams::default() }).run(&pts),
                 Err(DpcError::InvalidParam { name: "rho_min", .. })
             ) {
                 return Err("rho_min NaN: wrong error".into());
             }
             if !matches!(
-                Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::NAN }).run(&pts),
+                Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::NAN, ..DpcParams::default() }).run(&pts),
                 Err(DpcError::InvalidParam { name: "delta_min", .. })
             ) {
                 return Err("delta_min NaN: wrong error".into());
@@ -181,7 +181,7 @@ fn coordinator_session_recuts_match_fresh_runs() {
     let ids: Vec<_> = sweeps.iter().map(|&(r, d)| coord.submit_recut(sid, r, d).unwrap()).collect();
     for (id, &(rho_min, delta_min)) in ids.into_iter().zip(&sweeps) {
         let out = coord.wait(id).unwrap();
-        let params = DpcParams { d_cut, rho_min, delta_min };
+        let params = DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() };
         let fresh = Dpc::new(params).run(&pts).unwrap();
         assert_same_result(&out.result, &fresh, &format!("rho_min={rho_min} delta_min={delta_min}"));
         // The coordinator's direct (non-session) pipeline — Step 2 computed
@@ -209,7 +209,7 @@ fn multi_radius_session_stays_exact() {
         s.density(d_cut).unwrap();
         s.dependents(DepAlgo::Fenwick).unwrap();
         let recut = s.cut(1.0, 8.0).unwrap();
-        let fresh = Dpc::new(DpcParams { d_cut, rho_min: 1.0, delta_min: 8.0 })
+        let fresh = Dpc::new(DpcParams { d_cut, rho_min: 1.0, delta_min: 8.0, ..DpcParams::default() })
             .dep_algo(DepAlgo::Fenwick)
             .run(&pts)
             .unwrap();

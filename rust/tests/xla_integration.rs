@@ -82,7 +82,7 @@ fn coordinator_routes_small_jobs_to_xla_and_matches_tree_labels() {
     let coord = Coordinator::start(cfg).expect("coordinator");
     assert!(coord.has_xla(), "artifacts exist but XLA engine failed to start");
     let pts = Arc::new(grid_points(7, 600, 2, 50));
-    let params = DpcParams { d_cut: 6.0, rho_min: 2.0, delta_min: 15.0 };
+    let params = DpcParams { d_cut: 6.0, rho_min: 2.0, delta_min: 15.0, ..DpcParams::default() };
 
     let out_xla = coord
         .run_sync(ClusterJob::new(Arc::clone(&pts), params).backend(Backend::XlaBruteForce))
@@ -124,7 +124,7 @@ fn full_pipeline_agreement_on_clustered_grid_data() {
         }
     }
     let pts = Arc::new(PointSet::new(coords, 2));
-    let params = DpcParams { d_cut: 8.0, rho_min: 0.0, delta_min: 100.0 };
+    let params = DpcParams { d_cut: 8.0, rho_min: 0.0, delta_min: 100.0, ..DpcParams::default() };
     let reference = Dpc::new(params).dep_algo(DepAlgo::Naive).run(&pts).unwrap();
     assert_eq!(reference.num_clusters, 2);
 
