@@ -110,18 +110,21 @@ COMMANDS:
   cluster    (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--rho-min X]
              [--delta-min X] [--algo A] [--backend B] [--threads T]
              [--labels-out FILE] [--seed S] [--dtype f32|f64]
+             [--density cutoff|knn:<k>|gauss]
              (--dtype f32 runs the exact pipeline on single-precision
              coordinates — identical clusters whenever the data is f32-
-             losslessly representable, e.g. integer coordinates)
+             losslessly representable, e.g. integer coordinates;
+             --density picks the exact density definition — rho_min is in
+             the model's units: a count, a rank, or kernel mass/4096)
   decision   (--dataset NAME [--n N] | --input FILE) [--d-cut X] [--k K]
              [--csv-out FILE] [--seed S]
   stream     (--dataset NAME [--n N] | --input FILE) [--batches K] [--d-cut X]
-             [--rho-min X] [--delta-min X] [--verify] [--seed S]
+             [--rho-min X] [--delta-min X] [--density M] [--verify] [--seed S]
              ingest the input in K batches through a streaming session,
              reporting per-batch latency (--verify re-checks exactness
              against a from-scratch run after every batch)
   serve      [--config FILE] [--workers N]    read jobs from stdin, one per line:
-             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`  full pipeline job
+             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`  full pipeline job
              `open <dataset> <n> <d_cut>`                          open a cached session
              `recut <session> <rho_min> <delta_min>`               linkage-only re-cut
              `close <session>`                                     drop a session's cache
@@ -134,6 +137,10 @@ Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick
 Backends  (--backend): auto | tree | xla
 Dtypes    (--dtype):   f32 | f64 (default: the input's stored dtype — f64 for
                        datasets/CSV; the xla backend serves f64 jobs only)
+Densities (--density): cutoff (the paper's count-within-d_cut, default)
+                     | knn:<k> (rank of the k-th-NN distance, e.g. knn:8)
+                     | gauss (fixed-point Gaussian kernel truncated at d_cut)
+                       (the xla backend serves cutoff jobs only)
 ";
 
 #[cfg(test)]

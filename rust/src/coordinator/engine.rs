@@ -9,13 +9,11 @@
 
 use std::sync::{Arc, Mutex, Weak};
 
-use crate::dpc::{self, DensityAlgo, DepAlgo};
+use crate::dpc::{self, DensityAlgo, DensityModel, DepAlgo};
 use crate::error::DpcError;
-use crate::geom::{Dtype, PointSet, PointStore, Scalar};
+use crate::geom::{Dtype, DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::engine::D_PAD;
 use crate::runtime::{XlaDpcOutput, XlaService};
-
-use super::job::PointsPayload;
 
 /// Shape and algorithm choices of one clustering job — what an engine needs
 /// for capability checks ([`Engine::supports`]) and per-job overrides.
@@ -31,6 +29,9 @@ pub struct JobSpec {
     pub dep_algo: DepAlgo,
     /// Step-1 variant (tree backend only).
     pub density_algo: DensityAlgo,
+    /// Density definition (capability-gated: the XLA artifacts hard-code
+    /// the cutoff count, so other models route to the tree engine).
+    pub density: DensityModel,
 }
 
 impl JobSpec {
@@ -42,11 +43,12 @@ impl JobSpec {
             dtype: S::DTYPE,
             dep_algo: DepAlgo::Priority,
             density_algo: DensityAlgo::TreePruned,
+            density: DensityModel::CutoffCount,
         }
     }
 
     /// Spec for a queued payload (dtype taken from the payload's tag).
-    pub fn from_payload(pts: &PointsPayload, d_cut: f64) -> Self {
+    pub fn from_payload(pts: &DynPoints, d_cut: f64) -> Self {
         JobSpec {
             n: pts.len(),
             d: pts.dim(),
@@ -54,11 +56,17 @@ impl JobSpec {
             dtype: pts.dtype(),
             dep_algo: DepAlgo::Priority,
             density_algo: DensityAlgo::TreePruned,
+            density: DensityModel::CutoffCount,
         }
     }
 
     pub fn dep_algo(mut self, a: DepAlgo) -> Self {
         self.dep_algo = a;
+        self
+    }
+
+    pub fn density_model(mut self, m: DensityModel) -> Self {
+        self.density = m;
         self
     }
 }
@@ -73,15 +81,16 @@ pub trait Engine: Send + Sync {
     /// Can this engine execute a job of the given shape?
     fn supports(&self, job: &JobSpec) -> bool;
 
-    /// Step 1: ρ(x) for every point at radius `job.d_cut`.
-    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError>;
+    /// Step 1: ρ(x) for every point at radius `job.d_cut`, under the
+    /// job's [`DensityModel`].
+    fn density(&self, pts: &DynPoints, job: &JobSpec) -> Result<Vec<u32>, DpcError>;
 
     /// Step 2: λ(x) per point — `None` for points below `rho_min` and the
     /// global peak. Candidate sets are threshold-free (pass `rho_min = 0.0`
     /// for the full forest used by cached sessions).
     fn dependents(
         &self,
-        pts: &PointsPayload,
+        pts: &DynPoints,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
@@ -89,7 +98,7 @@ pub trait Engine: Send + Sync {
 }
 
 /// The Rust tree engine: the paper's algorithm suite. Exact per precision,
-/// any size, dimension, and dtype.
+/// any size, dimension, dtype, and density model.
 pub struct TreeEngine;
 
 impl Engine for TreeEngine {
@@ -101,23 +110,23 @@ impl Engine for TreeEngine {
         true
     }
 
-    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+    fn density(&self, pts: &DynPoints, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
         Ok(match pts {
-            PointsPayload::F32(p) => dpc::compute_density(p, job.d_cut, job.density_algo),
-            PointsPayload::F64(p) => dpc::compute_density(p, job.d_cut, job.density_algo),
+            DynPoints::F32(p) => dpc::compute_density_model(p, job.d_cut, job.density, job.density_algo),
+            DynPoints::F64(p) => dpc::compute_density_model(p, job.d_cut, job.density, job.density_algo),
         })
     }
 
     fn dependents(
         &self,
-        pts: &PointsPayload,
+        pts: &DynPoints,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
     ) -> Result<Vec<Option<u32>>, DpcError> {
         Ok(match pts {
-            PointsPayload::F32(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
-            PointsPayload::F64(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
+            DynPoints::F32(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
+            DynPoints::F64(p) => dpc::dep::compute_dependents(p, rho, rho_min, job.dep_algo),
         })
     }
 }
@@ -128,9 +137,11 @@ impl Engine for TreeEngine {
 /// steps, the adapter memoizes recent (point set, radius) outputs so each
 /// job's `density` → `dependents` sequence executes once — including when
 /// several workers interleave jobs (one slot per in-flight point set, not a
-/// single global slot). Each memo holds a `Weak` to its point set: the weak
-/// count pins the allocation, so a pointer match can never be a recycled
-/// address from a dropped job, and dead entries are pruned on insert.
+/// single global slot). Each memo keys on the store's **shared coordinate
+/// buffer** (`Arc<[f64]>`) — the allocation every refcount sibling of a
+/// store agrees on — via a `Weak`: the weak count pins the allocation, so
+/// a pointer match can never be a recycled address from a dropped job, and
+/// dead entries are pruned on insert.
 pub struct XlaEngine {
     svc: Arc<XlaService>,
     memo: Mutex<Vec<Memo>>,
@@ -140,7 +151,13 @@ pub struct XlaEngine {
 const MEMO_CAP: usize = 16;
 
 struct Memo {
-    pts: Weak<PointSet>,
+    buf: Weak<[f64]>,
+    /// Shape of the store the output was computed for: one buffer can back
+    /// stores of different shapes (`PointStore::try_from_shared` re-views
+    /// the same `Arc<[f64]>` under another dimension), so buffer identity
+    /// alone would serve a wrong-length ρ to a reshaped sibling.
+    n: usize,
+    d: usize,
     d_cut_bits: u64,
     out: XlaDpcOutput,
 }
@@ -154,39 +171,50 @@ impl XlaEngine {
         self.svc.capacity()
     }
 
-    fn run_memo(&self, pts: &Arc<PointSet>, d_cut: f64) -> Result<XlaDpcOutput, DpcError> {
+    fn run_memo(&self, pts: &PointSet, d_cut: f64) -> Result<XlaDpcOutput, DpcError> {
         let bits = d_cut.to_bits();
+        let buf = pts.shared_coords();
         {
             let memo = self.memo.lock().unwrap();
-            if let Some(m) = memo
-                .iter()
-                .find(|m| std::ptr::eq(m.pts.as_ptr(), Arc::as_ptr(pts)) && m.d_cut_bits == bits)
-            {
+            if let Some(m) = memo.iter().find(|m| {
+                std::ptr::eq(m.buf.as_ptr(), Arc::as_ptr(&buf))
+                    && m.n == pts.len()
+                    && m.d == pts.dim()
+                    && m.d_cut_bits == bits
+            }) {
                 return Ok(m.out.clone());
             }
         }
+        // The service takes `Arc<PointSet>`; wrapping a store clone is a
+        // refcount bump on `buf`, never a coordinate copy.
         let out = self
             .svc
-            .run(Arc::clone(pts), d_cut)
+            .run(Arc::new(pts.clone()), d_cut)
             .map_err(|e| DpcError::Backend { engine: "xla".into(), message: e.to_string() })?;
         let mut memo = self.memo.lock().unwrap();
-        memo.retain(|m| m.pts.strong_count() > 0);
+        memo.retain(|m| m.buf.strong_count() > 0);
         if memo.len() >= MEMO_CAP {
             memo.remove(0);
         }
-        memo.push(Memo { pts: Arc::downgrade(pts), d_cut_bits: bits, out: out.clone() });
+        memo.push(Memo {
+            buf: Arc::downgrade(&buf),
+            n: pts.len(),
+            d: pts.dim(),
+            d_cut_bits: bits,
+            out: out.clone(),
+        });
         Ok(out)
     }
 }
 
 /// Extract the f64 store an XLA job runs over. The router never sends f32
 /// payloads here (`supports` gates on dtype), so the error is defensive.
-fn xla_f64(pts: &PointsPayload) -> Result<&Arc<PointSet>, DpcError> {
+fn xla_f64(pts: &DynPoints) -> Result<&PointSet, DpcError> {
     match pts {
-        PointsPayload::F64(p) => Ok(p),
-        PointsPayload::F32(_) => Err(DpcError::Backend {
+        DynPoints::F64(p) => Ok(p),
+        DynPoints::F32(_) => Err(DpcError::Backend {
             engine: "xla".into(),
-            message: "f32 payloads route to the tree engine (the XLA memo keys on f64 stores)".into(),
+            message: "f32 payloads route to the tree engine (the XLA artifacts are compiled for f64 inputs)".into(),
         }),
     }
 }
@@ -197,16 +225,21 @@ impl Engine for XlaEngine {
     }
 
     fn supports(&self, job: &JobSpec) -> bool {
-        job.n <= self.svc.capacity() && job.d <= D_PAD && job.dtype == Dtype::F64
+        job.n <= self.svc.capacity()
+            && job.d <= D_PAD
+            && job.dtype == Dtype::F64
+            // The AOT artifacts hard-code the cutoff count; other density
+            // models fall back to the tree engine via the router.
+            && job.density == DensityModel::CutoffCount
     }
 
-    fn density(&self, pts: &PointsPayload, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
+    fn density(&self, pts: &DynPoints, job: &JobSpec) -> Result<Vec<u32>, DpcError> {
         Ok(self.run_memo(xla_f64(pts)?, job.d_cut)?.rho)
     }
 
     fn dependents(
         &self,
-        pts: &PointsPayload,
+        pts: &DynPoints,
         rho: &[u32],
         rho_min: f64,
         job: &JobSpec,
@@ -231,9 +264,9 @@ mod tests {
     #[test]
     fn tree_engine_matches_direct_pipeline() {
         let mut rng = SplitMix64::new(77);
-        let pts = Arc::new(gen_clustered_points(&mut rng, 300, 2, 3, 80.0, 2.0));
+        let pts = gen_clustered_points(&mut rng, 300, 2, 3, 80.0, 2.0);
         let params = DpcParams { d_cut: 4.0, rho_min: 2.0, delta_min: 10.0, ..DpcParams::default() };
-        let payload = PointsPayload::F64(Arc::clone(&pts));
+        let payload = DynPoints::F64(pts.clone());
         let spec = JobSpec::from_payload(&payload, params.d_cut).dep_algo(DepAlgo::Fenwick);
         assert_eq!(spec.dtype, Dtype::F64);
         let eng = TreeEngine;
@@ -248,8 +281,8 @@ mod tests {
     fn tree_engine_runs_f32_payloads() {
         let mut rng = SplitMix64::new(78);
         let pts64 = gen_clustered_points(&mut rng, 200, 2, 3, 60.0, 2.0);
-        let pts = Arc::new(PointStore::<f32>::cast_from_f64(&pts64));
-        let payload = PointsPayload::F32(Arc::clone(&pts));
+        let pts = PointStore::<f32>::cast_from_f64(&pts64);
+        let payload = DynPoints::F32(pts.clone());
         let spec = JobSpec::from_payload(&payload, 4.0);
         assert_eq!(spec.dtype, Dtype::F32);
         let eng = TreeEngine;
@@ -258,5 +291,21 @@ mod tests {
         assert_eq!(rho, dpc::compute_density(&pts, 4.0, DensityAlgo::TreePruned));
         let dep = eng.dependents(&payload, &rho, 0.0, &spec).unwrap();
         assert_eq!(dep, dpc::dep::compute_dependents(&pts, &rho, 0.0, DepAlgo::Priority));
+    }
+
+    #[test]
+    fn tree_engine_dispatches_density_models() {
+        let mut rng = SplitMix64::new(79);
+        let pts = gen_clustered_points(&mut rng, 180, 2, 3, 60.0, 2.0);
+        let payload = DynPoints::F64(pts.clone());
+        for model in DensityModel::REPRESENTATIVE {
+            let spec = JobSpec::from_payload(&payload, 4.0).density_model(model);
+            let rho = TreeEngine.density(&payload, &spec).unwrap();
+            assert_eq!(
+                rho,
+                dpc::compute_density_model(&pts, 4.0, model, DensityAlgo::TreePruned),
+                "{model}"
+            );
+        }
     }
 }

@@ -3,62 +3,23 @@
 use std::sync::Arc;
 
 use crate::dpc::{DpcParams, DpcResult, DepAlgo};
-use crate::geom::{Dtype, PointSet, PointStore};
+use crate::geom::{DynPoints, PointSet, PointStore};
 
 use super::router::Backend;
 use super::service::SessionId;
 
-/// A precision-tagged, refcount-shared point payload: the coordinator and
-/// the [`super::engine::Engine`] trait dispatch on this instead of a fixed
-/// `Arc<PointSet>`, so f32 jobs flow through the same queue/router/worker
-/// machinery as f64 ones. Cloning shares (double-refcounted: the `Arc` here
-/// plus the store's own `Arc<[S]>` buffer) — never copies coordinates.
-///
-/// This deliberately mirrors [`crate::geom::DynPoints`] with an `Arc`
-/// layer: the outer `Arc<PointSet>`'s allocation identity is what the XLA
-/// engine's memo keys on (via `Weak`), and `ClusterJob::new`'s public
-/// `Arc<PointSet>` signature predates the generic store. Collapsing onto
-/// `DynPoints` (re-keying the memo on the store's shared buffer) is a
-/// known follow-up.
-#[derive(Clone)]
-pub enum PointsPayload {
-    F32(Arc<PointStore<f32>>),
-    F64(Arc<PointStore<f64>>),
-}
-
-impl PointsPayload {
-    pub fn dtype(&self) -> Dtype {
-        match self {
-            PointsPayload::F32(_) => Dtype::F32,
-            PointsPayload::F64(_) => Dtype::F64,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        match self {
-            PointsPayload::F32(p) => p.len(),
-            PointsPayload::F64(p) => p.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn dim(&self) -> usize {
-        match self {
-            PointsPayload::F32(p) => p.dim(),
-            PointsPayload::F64(p) => p.dim(),
-        }
-    }
-}
-
-/// What a job executes against.
+/// What a job executes against. Point payloads are
+/// [`crate::geom::DynPoints`] — the same runtime-tagged, refcount-shared
+/// store every other dtype boundary traffics in. (The old `PointsPayload`
+/// wrapper added an `Arc` layer solely so the XLA memo could key on its
+/// allocation; the memo now keys on the store's own shared coordinate
+/// buffer, so the wrapper is gone.)
 #[derive(Clone)]
 pub enum JobPayload {
     /// A full three-step pipeline over a point set (either precision).
-    /// Shared so large point sets are not copied per worker.
-    Points(PointsPayload),
+    /// Cloning shares the store's `Arc<[S]>` buffer — large point sets are
+    /// never copied per worker.
+    Points(DynPoints),
     /// A linkage-only re-cut against an open session's cached artifacts
     /// (Steps 1–2 are served from the session).
     Recut(SessionId),
@@ -84,19 +45,21 @@ pub struct ClusterJob {
 }
 
 impl ClusterJob {
-    /// A double-precision pipeline job (the pre-generic signature).
+    /// A double-precision pipeline job (the pre-generic signature — the
+    /// `Arc` wrapper is unwrapped to a plain store clone, which shares the
+    /// coordinate buffer by refcount).
     pub fn new(pts: Arc<PointSet>, params: DpcParams) -> Self {
-        Self::new_points(PointsPayload::F64(pts), params)
+        Self::new_points(DynPoints::F64((*pts).clone()), params)
     }
 
     /// A single-precision pipeline job.
     pub fn new_f32(pts: Arc<PointStore<f32>>, params: DpcParams) -> Self {
-        Self::new_points(PointsPayload::F32(pts), params)
+        Self::new_points(DynPoints::F32((*pts).clone()), params)
     }
 
     /// A pipeline job over an already-tagged payload (what the CLI's
     /// `--dtype` path builds).
-    pub fn new_points(pts: PointsPayload, params: DpcParams) -> Self {
+    pub fn new_points(pts: DynPoints, params: DpcParams) -> Self {
         ClusterJob { payload: JobPayload::Points(pts), params, backend: None, dep_algo: None, tag: String::new() }
     }
 

@@ -31,6 +31,6 @@ pub mod metrics;
 
 pub use config::CoordinatorConfig;
 pub use engine::{Engine, JobSpec, TreeEngine, XlaEngine};
-pub use job::{ClusterJob, JobOutput, JobPayload, JobStatus, PointsPayload};
+pub use job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 pub use router::{Backend, Router};
 pub use service::{Coordinator, SessionEntry, SessionId, StreamEntry};

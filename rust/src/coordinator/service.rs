@@ -28,14 +28,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::dpc::{dep, linkage, session, stream::StreamingSession, DpcParams, DpcResult, StepTimings};
+use crate::dpc::{dep, linkage, session, stream::StreamingSession, DensityModel, DpcParams, DpcResult, StepTimings};
 use crate::error::DpcError;
-use crate::geom::{PointSet, PointStore, Scalar};
+use crate::geom::{DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::XlaService;
 
 use super::config::CoordinatorConfig;
 use super::engine::JobSpec;
-use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus, PointsPayload};
+use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 use super::metrics::Metrics;
 use super::router::{Backend, Router};
 
@@ -47,6 +47,10 @@ pub type SessionId = u64;
 pub struct SessionEntry {
     pub pts: Arc<PointSet>,
     pub d_cut: f64,
+    /// The density model the cached ρ was computed under (re-cuts inherit
+    /// it — a threshold sweep never silently changes the density
+    /// definition).
+    pub density: DensityModel,
     /// ρ per point at `d_cut`.
     pub rho: Vec<u32>,
     /// Full (unthresholded) dependency forest.
@@ -73,6 +77,9 @@ impl SessionEntry {
 /// ingest).
 pub struct StreamEntry {
     pub d_cut: f64,
+    /// The stream's density model (immutable, like the radius — readable
+    /// without the session lock).
+    pub density: DensityModel,
     pub session: Mutex<StreamingSession>,
     /// FIFO ingest tickets, issued under this lock *around* the queue push
     /// so ticket order equals queue order; workers wait for their ticket
@@ -186,14 +193,28 @@ impl Coordinator {
     /// Open a session: validate the input, run Steps 1–2 once through the
     /// routed engine, and cache the artifacts for threshold-only re-cuts.
     /// Synchronous — the build is the expensive part the session exists to
-    /// amortize, so callers should see its cost exactly once.
+    /// amortize, so callers should see its cost exactly once. Runs the
+    /// paper's cutoff-count density; see
+    /// [`Coordinator::open_session_with_model`].
     pub fn open_session(&self, pts: Arc<PointSet>, d_cut: f64) -> Result<SessionId, DpcError> {
+        self.open_session_with_model(pts, d_cut, DensityModel::CutoffCount)
+    }
+
+    /// [`Coordinator::open_session`] under any [`DensityModel`]; every
+    /// re-cut of the session inherits the model.
+    pub fn open_session_with_model(
+        &self,
+        pts: Arc<PointSet>,
+        d_cut: f64,
+        density: DensityModel,
+    ) -> Result<SessionId, DpcError> {
         session::validate_points(&pts)?;
         session::validate_d_cut(d_cut)?;
-        // The payload shares the session's Arc (a refcount bump; the
-        // store's own coordinate buffer is shared one level deeper).
-        let payload = PointsPayload::F64(Arc::clone(&pts));
-        let spec = JobSpec::from_payload(&payload, d_cut).dep_algo(self.cfg.dep_algo);
+        density.validate()?;
+        // The payload shares the session store's coordinate buffer (a
+        // refcount bump, no copy).
+        let payload = DynPoints::F64((*pts).clone());
+        let spec = JobSpec::from_payload(&payload, d_cut).dep_algo(self.cfg.dep_algo).density_model(density);
         let backend = self.router.resolve(self.cfg.backend, &spec);
         let engine = self.router.engine(backend);
         let t = Instant::now();
@@ -207,6 +228,7 @@ impl Coordinator {
         let entry = Arc::new(SessionEntry {
             pts,
             d_cut,
+            density,
             rho,
             dep,
             delta,
@@ -229,7 +251,8 @@ impl Coordinator {
     pub fn submit_recut(&self, id: SessionId, rho_min: f64, delta_min: f64) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         let entry = self.session(id).ok_or(DpcError::UnknownSession(id))?;
-        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min, ..DpcParams::default() };
+        let params =
+            DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
         let job = ClusterJob::recut(id, params).tag(format!("recut:{id}"));
         self.metrics.inc("recuts_submitted");
         Ok(self.submit(job))
@@ -241,16 +264,29 @@ impl Coordinator {
         self.shared.sessions.lock().unwrap().remove(&id).is_some()
     }
 
-    /// Open a streaming session at a fixed radius: subsequent
-    /// [`Coordinator::submit_ingest`] jobs grow it batch by batch. Stream
-    /// ids share the session id namespace but not the session store.
+    /// Open a streaming session at a fixed radius under the cutoff-count
+    /// density: subsequent [`Coordinator::submit_ingest`] jobs grow it
+    /// batch by batch. Stream ids share the session id namespace but not
+    /// the session store.
     pub fn open_stream(&self, dim: usize, d_cut: f64) -> Result<SessionId, DpcError> {
-        let s = StreamingSession::<f64>::new(dim, d_cut)?;
+        self.open_stream_with_model(dim, d_cut, DensityModel::CutoffCount)
+    }
+
+    /// [`Coordinator::open_stream`] under any [`DensityModel`] (fixed for
+    /// the stream's lifetime, like the radius).
+    pub fn open_stream_with_model(
+        &self,
+        dim: usize,
+        d_cut: f64,
+        density: DensityModel,
+    ) -> Result<SessionId, DpcError> {
+        let s = StreamingSession::<f64>::new_with_model(dim, d_cut, density)?;
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         self.shared.streams.lock().unwrap().insert(
             id,
             Arc::new(StreamEntry {
                 d_cut,
+                density,
                 session: Mutex::new(s),
                 tickets: Mutex::new(TicketState::default()),
                 turn: Condvar::new(),
@@ -283,7 +319,8 @@ impl Coordinator {
     ) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
-        let params = DpcParams { d_cut: entry.d_cut, rho_min, delta_min, ..DpcParams::default() };
+        let params =
+            DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
         // Issue the ticket and enqueue under the ticket lock, so ticket
         // order always equals queue order for this stream.
         let mut tickets = entry.tickets.lock().unwrap();
@@ -409,7 +446,9 @@ fn run_job(
 ) -> (Result<DpcResult, DpcError>, Backend) {
     match &job.payload {
         JobPayload::Points(pts) => {
-            let spec = JobSpec::from_payload(pts, job.params.d_cut).dep_algo(job.dep_algo.unwrap_or(cfg.dep_algo));
+            let spec = JobSpec::from_payload(pts, job.params.d_cut)
+                .dep_algo(job.dep_algo.unwrap_or(cfg.dep_algo))
+                .density_model(job.params.density);
             let backend = router.resolve(job.backend.unwrap_or(cfg.backend), &spec);
             (run_points_job(pts, &spec, job.params, router, backend), backend)
         }
@@ -429,21 +468,21 @@ fn run_job(
 /// pipeline — Steps 1–2 through the [`super::engine::Engine`] trait, Step 3
 /// (union-find linkage) always in Rust.
 fn run_points_job(
-    pts: &PointsPayload,
+    pts: &DynPoints,
     spec: &JobSpec,
     params: DpcParams,
     router: &Router,
     backend: Backend,
 ) -> Result<DpcResult, DpcError> {
     match pts {
-        PointsPayload::F32(p) => run_points_pipeline(p, pts, spec, params, router, backend),
-        PointsPayload::F64(p) => run_points_pipeline(p, pts, spec, params, router, backend),
+        DynPoints::F32(p) => run_points_pipeline(p, pts, spec, params, router, backend),
+        DynPoints::F64(p) => run_points_pipeline(p, pts, spec, params, router, backend),
     }
 }
 
 fn run_points_pipeline<S: Scalar>(
     store: &PointStore<S>,
-    payload: &PointsPayload,
+    payload: &DynPoints,
     spec: &JobSpec,
     params: DpcParams,
     router: &Router,
@@ -602,7 +641,13 @@ mod tests {
         let coord = Coordinator::start(tree_only_config()).unwrap();
         let pts64 = blob_points();
         let pts32 = Arc::new(PointStore::<f32>::cast_from_f64(&pts64));
-        let params = DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, dtype: crate::geom::Dtype::F32 };
+        let params = DpcParams {
+            d_cut: 3.0,
+            rho_min: 0.0,
+            delta_min: 20.0,
+            dtype: crate::geom::Dtype::F32,
+            ..DpcParams::default()
+        };
         let out = coord
             .run_sync(ClusterJob::new_f32(Arc::clone(&pts32), params).tag("two-blobs-f32"))
             .unwrap();
@@ -663,6 +708,54 @@ mod tests {
         assert_eq!(coord.metrics.counter("sessions_opened"), 1);
         assert_eq!(coord.metrics.counter("recuts_submitted"), 3);
         assert!(coord.close_session(sid));
+    }
+
+    #[test]
+    fn density_model_jobs_and_sessions_match_direct_pipeline() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let pts = blob_points();
+        for model in DensityModel::REPRESENTATIVE {
+            let params =
+                DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, density: model, ..DpcParams::default() };
+            let out = coord.run_sync(ClusterJob::new(Arc::clone(&pts), params)).unwrap();
+            let fresh = Dpc::new(params).run(&pts).unwrap();
+            assert_eq!(out.result.rho, fresh.rho, "{model}: job rho");
+            assert_eq!(out.result.labels, fresh.labels, "{model}: job labels");
+            // Session re-cuts inherit the model.
+            let sid = coord.open_session_with_model(Arc::clone(&pts), 3.0, model).unwrap();
+            let recut = coord.wait(coord.submit_recut(sid, 0.0, 20.0).unwrap()).unwrap();
+            assert_eq!(recut.result.rho, fresh.rho, "{model}: recut rho");
+            assert_eq!(recut.result.dep, fresh.dep, "{model}: recut dep");
+            assert_eq!(recut.result.labels, fresh.labels, "{model}: recut labels");
+            assert!(coord.close_session(sid));
+        }
+    }
+
+    #[test]
+    fn density_model_streams_match_fresh_runs() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let pts = blob_points();
+        let d = pts.dim();
+        for model in [DensityModel::KnnRadius { k: 3 }, DensityModel::GaussianKernel] {
+            let sid = coord.open_stream_with_model(d, 3.0, model).unwrap();
+            for (lo, hi) in [(0usize, 70usize), (70, 160)] {
+                let batch = Arc::new(PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d));
+                let out = coord.wait(coord.submit_ingest(sid, batch, 0.0, 20.0).unwrap()).unwrap();
+                let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
+                let params = DpcParams {
+                    d_cut: 3.0,
+                    rho_min: 0.0,
+                    delta_min: 20.0,
+                    density: model,
+                    ..DpcParams::default()
+                };
+                let fresh = Dpc::new(params).run(&prefix).unwrap();
+                assert_eq!(out.result.rho, fresh.rho, "{model}: rho after {hi}");
+                assert_eq!(out.result.dep, fresh.dep, "{model}: dep after {hi}");
+                assert_eq!(out.result.labels, fresh.labels, "{model}: labels after {hi}");
+            }
+            assert!(coord.close_stream(sid));
+        }
     }
 
     #[test]

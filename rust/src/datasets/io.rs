@@ -62,7 +62,9 @@ pub fn write_binary_dyn(pts: &DynPoints, path: &Path) -> std::io::Result<()> {
 
 /// Read a binary point file at its stored precision (v1 and v2).
 pub fn read_binary_dyn(path: &Path) -> Result<DynPoints, DpcError> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -71,13 +73,14 @@ pub fn read_binary_dyn(path: &Path) -> Result<DynPoints, DpcError> {
     let mut u4 = [0u8; 4];
     r.read_exact(&mut u4)?;
     let version = u32::from_le_bytes(u4);
-    let dtype = match version {
+    let (dtype, header_len) = match version {
         // v1 predates the dtype tag: payload is always f64.
-        1 => Dtype::F64,
+        1 => (Dtype::F64, 4 + 4 + 8 + 4),
         2 => {
             let mut tag = [0u8; 1];
             r.read_exact(&mut tag)?;
-            Dtype::from_tag(tag[0]).ok_or(DpcError::UnsupportedDtype { tag: tag[0] })?
+            let dt = Dtype::from_tag(tag[0]).ok_or(DpcError::UnsupportedDtype { tag: tag[0] })?;
+            (dt, 4 + 4 + 1 + 8 + 4)
         }
         other => return Err(bad_data(format!("unsupported version {other}"))),
     };
@@ -89,29 +92,35 @@ pub fn read_binary_dyn(path: &Path) -> Result<DynPoints, DpcError> {
     if d == 0 || n.checked_mul(d).is_none() {
         return Err(bad_data("bad header".into()));
     }
+    let avail = file_len.saturating_sub(header_len);
     match dtype {
-        Dtype::F32 => Ok(DynPoints::F32(read_payload::<f32, _>(&mut r, n, d)?)),
-        Dtype::F64 => Ok(DynPoints::F64(read_payload::<f64, _>(&mut r, n, d)?)),
+        Dtype::F32 => Ok(DynPoints::F32(read_payload::<f32, _>(&mut r, n, d, avail)?)),
+        Dtype::F64 => Ok(DynPoints::F64(read_payload::<f64, _>(&mut r, n, d, avail)?)),
     }
 }
 
-/// Decode `n·d` scalars; a short file surfaces as `DpcError::Io`
-/// (UnexpectedEof) before any store is constructed — no partial parses.
-fn read_payload<S: Scalar, R: Read>(r: &mut R, n: usize, d: usize) -> Result<PointStore<S>, DpcError> {
+/// Decode `n·d` scalars straight into the store's shared allocation (no
+/// intermediate `Vec` and no `Vec → Arc` copy). The header's count is
+/// checked against `avail` — the file's actual payload size — *before*
+/// allocating, so a crafted 17-byte header cannot request petabytes, and a
+/// truncated file surfaces as a typed `DpcError::Io` (UnexpectedEof) before
+/// any store is constructed — no partial parses.
+fn read_payload<S: Scalar, R: Read>(r: &mut R, n: usize, d: usize, avail: u64) -> Result<PointStore<S>, DpcError> {
     let count = n.checked_mul(d).ok_or_else(|| bad_data("bad header".into()))?;
-    // Cap the trust placed in the header's count: preallocating `count`
-    // outright would let a crafted 17-byte file request petabytes and abort
-    // the process inside the allocator. Growing from a bounded capacity
-    // keeps a truncated/corrupt file on the typed-`DpcError::Io` path (the
-    // read_exact below hits EOF long before the Vec grows past the actual
-    // file size).
-    let mut coords = Vec::with_capacity(count.min(1 << 20));
-    let mut buf = vec![0u8; S::BYTES];
-    for _ in 0..count {
-        r.read_exact(&mut buf)?;
-        coords.push(S::read_le(&buf));
+    let need = (count as u64)
+        .checked_mul(S::BYTES as u64)
+        .ok_or_else(|| bad_data("bad header".into()))?;
+    if avail < need {
+        return Err(DpcError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("payload truncated: header promises {need} bytes, file holds {avail}"),
+        )));
     }
-    let pts = PointStore::try_new(coords, d)?;
+    let mut buf = [0u8; 8];
+    let pts = PointStore::try_from_flat_fn(n, d, |_| {
+        r.read_exact(&mut buf[..S::BYTES])?;
+        Ok(S::read_le(&buf))
+    })?;
     pts.validate_finite()?;
     Ok(pts)
 }

@@ -7,11 +7,11 @@
 use crate::geom::PointSet;
 use crate::prng::SplitMix64;
 
-/// Uniform points in `[0, extent)^d`.
+/// Uniform points in `[0, extent)^d`, generated straight into the store's
+/// shared allocation (no `Vec → Arc` copy; see `PointStore::from_flat_fn`).
 pub fn uniform(n: usize, d: usize, extent: f64, seed: u64) -> PointSet {
     let mut rng = SplitMix64::new(seed ^ 0x556E_1F0A); // stream-split
-    let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(0.0, extent)).collect();
-    PointSet::new(coords, d)
+    PointSet::from_flat_fn(n, d, |_| rng.uniform(0.0, extent))
 }
 
 /// Shared random-walk engine. Each of `n_clusters` clusters walks
@@ -27,14 +27,25 @@ fn random_walk_clusters<F: Fn(usize) -> f64>(
     seed: u64,
 ) -> PointSet {
     let mut rng = SplitMix64::new(seed);
-    let mut coords = Vec::with_capacity(n * d);
     let per = n / n_clusters;
-    let mut emitted = 0usize;
-    for c in 0..n_clusters {
-        let step = step_of(c);
-        let mut pos: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, extent)).collect();
-        let count = if c == n_clusters - 1 { n - emitted } else { per };
-        for _ in 0..count {
+    // Flat-index-driven fill into the store's shared allocation: cluster
+    // restarts and walk steps fire at each point's first dimension, so the
+    // RNG draw sequence (restart coords, then one step per emitted point)
+    // is identical to the old push-loop generator.
+    let mut pos: Vec<f64> = Vec::new();
+    let mut cluster = 0usize;
+    let mut left = 0usize; // points still owed by the current cluster
+    let mut step = 0.0f64;
+    PointSet::from_flat_fn(n, d, |idx| {
+        if idx % d == 0 {
+            // Empty clusters (n < n_clusters) still draw their restart,
+            // matching the old generator's stream position.
+            while left == 0 && cluster < n_clusters {
+                step = step_of(cluster);
+                pos = (0..d).map(|_| rng.uniform(0.0, extent)).collect();
+                left = if cluster == n_clusters - 1 { n - cluster * per } else { per };
+                cluster += 1;
+            }
             for x in pos.iter_mut() {
                 *x += rng.uniform(-step, step);
                 // Reflect into the domain.
@@ -45,11 +56,10 @@ fn random_walk_clusters<F: Fn(usize) -> f64>(
                     *x = 2.0 * extent - *x;
                 }
             }
-            coords.extend_from_slice(&pos);
+            left -= 1;
         }
-        emitted += count;
-    }
-    PointSet::new(coords, d)
+        pos[idx % d]
+    })
 }
 
 /// `simden`: 10 clusters of similar density (equal step length). The extent

@@ -17,25 +17,33 @@ pub struct DecisionPoint {
 }
 
 /// Extract the decision graph, sorted by descending γ = ρ·δ (the usual
-/// center-scoring heuristic; ∞ deltas sort first by ρ).
+/// center-scoring heuristic). ∞-δ points sort first, *among themselves by
+/// descending ρ* — a masked cut can hold many of them (every noise point
+/// whose dependent was masked gets δ = ∞, alongside the global peak), and
+/// ρ·∞ collapses them into one tie, so the ρ order is the only useful
+/// signal there. All remaining ties break by ascending id, keeping the
+/// ordering total and deterministic.
 pub fn decision_graph(result: &DpcResult) -> Vec<DecisionPoint> {
     let mut pts: Vec<DecisionPoint> = (0..result.rho.len())
         .map(|i| DecisionPoint { id: i as u32, rho: result.rho[i], delta: result.delta[i] })
         .collect();
-    pts.sort_by(|a, b| {
-        let ka = score(a);
-        let kb = score(b);
-        kb.partial_cmp(&ka).unwrap().then(a.id.cmp(&b.id))
+    pts.sort_by(|a, b| match (a.delta.is_infinite(), b.delta.is_infinite()) {
+        (true, true) => b.rho.cmp(&a.rho).then(a.id.cmp(&b.id)),
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => {
+            let (ka, kb) = (score(a), score(b));
+            kb.partial_cmp(&ka).unwrap().then(a.id.cmp(&b.id))
+        }
     });
     pts
 }
 
+/// γ = ρ·δ. Callers handle ∞ δ before scoring (the comparator above and
+/// [`finite`] below), so this is only ever evaluated on finite deltas.
 fn score(p: &DecisionPoint) -> f64 {
-    if p.delta.is_infinite() {
-        f64::MAX
-    } else {
-        p.rho as f64 * p.delta
-    }
+    debug_assert!(p.delta.is_finite());
+    p.rho as f64 * p.delta
 }
 
 /// Suggest (ρ_min, δ_min) for a target number of clusters `k`: pick the k-th
@@ -146,6 +154,65 @@ mod tests {
         let (rho_min, delta_min) = suggest_params(&graph, 3).unwrap();
         let out2 = Dpc::new(DpcParams { d_cut: 3.0, rho_min, delta_min, ..DpcParams::default() }).run(&pts).unwrap();
         assert_eq!(out2.num_clusters, 3);
+    }
+
+    /// Hand-built result (no pipeline): the γ-ordering is fully specified —
+    /// ∞ δ first (by ρ desc, then id), then ρ·δ desc, then id.
+    fn synthetic_result(rho: Vec<u32>, delta: Vec<f64>) -> crate::dpc::DpcResult {
+        let n = rho.len();
+        crate::dpc::DpcResult {
+            rho,
+            delta,
+            dep: vec![None; n],
+            labels: vec![0; n],
+            centers: vec![],
+            num_clusters: 0,
+            num_noise: 0,
+            timings: Default::default(),
+        }
+    }
+
+    #[test]
+    fn gamma_ordering_is_exactly_specified() {
+        let out = synthetic_result(
+            //        id: 0     1    2    3     4    5
+            vec![5, 2, 9, 4, 4, 7],
+            vec![2.0, f64::INFINITY, 1.0, 3.0, 3.0, f64::INFINITY],
+        );
+        let graph = decision_graph(&out);
+        let ids: Vec<u32> = graph.iter().map(|p| p.id).collect();
+        // ∞ δ first, by ρ desc: id5 (ρ=7) then id1 (ρ=2). Finite by ρ·δ:
+        // id3/id4 tie at 12 (id asc), id0 at 10, id2 at 9.
+        assert_eq!(ids, vec![5, 1, 3, 4, 0, 2]);
+    }
+
+    #[test]
+    fn equal_scores_break_by_ascending_id() {
+        let out = synthetic_result(vec![4, 2, 4], vec![3.0, 6.0, 3.0]);
+        let ids: Vec<u32> = decision_graph(&out).iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]); // all score 12, id order
+    }
+
+    #[test]
+    fn all_infinite_deltas_order_by_rho() {
+        // Degenerate single-cluster-per-point cut: every δ is ∞.
+        let out = synthetic_result(vec![1, 9, 5], vec![f64::INFINITY; 3]);
+        let ids: Vec<u32> = decision_graph(&out).iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+        // suggest_params still works: the ∞ substitute is 2× the largest
+        // finite δ, which here (none finite) is 0 ⇒ δ_min = 0.
+        let (rho_min, delta_min) = suggest_params(&decision_graph(&out), 1).unwrap();
+        assert_eq!(rho_min, 0.0);
+        assert_eq!(delta_min, 0.0);
+    }
+
+    #[test]
+    fn single_point_graph_suggestion() {
+        let out = synthetic_result(vec![1], vec![f64::INFINITY]);
+        let graph = decision_graph(&out);
+        assert_eq!(graph.len(), 1);
+        assert!(suggest_params(&graph, 1).is_ok());
+        assert!(suggest_params(&graph, 2).is_err());
     }
 
     #[test]

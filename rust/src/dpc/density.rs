@@ -1,0 +1,360 @@
+//! Pluggable **exact density models** for Step 1.
+//!
+//! The paper fixes ρ to the count-within-`d_cut` model, but everything
+//! downstream of Step 1 — the priority key, all five dependent-point
+//! algorithms, the linkage cut, the streaming repair — only consumes an
+//! integer ρ per point. [`DensityModel`] exploits that seam: three exact
+//! density definitions share one pipeline.
+//!
+//! - [`DensityModel::CutoffCount`] — ρ(x) = |{y : D(x,y) ≤ d_cut}|, the
+//!   paper's model and the default. Bit-for-bit identical to the pre-model
+//!   pipeline (it *is* the pre-model pipeline).
+//! - [`DensityModel::KnnRadius`] — ρ(x) = the competition rank of x's
+//!   k-th-nearest-neighbor distance: `#{y : d_k(y) > d_k(x)}` (PECANN-style
+//!   kNN density). Smaller k-NN radius ⇒ denser ⇒ larger rank. The rank is
+//!   a *rank-invertible* image of d_k — it preserves exactly the order
+//!   information the priority key consumes — so ρ stays a small integer and
+//!   tie-breaks remain the lexicographic id rule.
+//! - [`DensityModel::GaussianKernel`] — ρ(x) = Σ_{D(x,y) ≤ d_cut}
+//!   round(2¹² · exp(−D(x,y)²/d_cut²)), a truncated Gaussian kernel density
+//!   accumulated in **fixed point**. Integer addition commutes and
+//!   associates, so the sum is independent of traversal order, of how the
+//!   streaming forest partitions the points, and of thread count — the
+//!   property the paper's exactness (and PR 4's precision-independent
+//!   tie-break invariant) rests on. Floating-point accumulation would
+//!   surrender all three.
+//!
+//! ## Exactness per model
+//!
+//! *CutoffCount* and *GaussianKernel* are **pairwise-additive**: ρ(x) is a
+//! commutative integer sum of per-pair contributions, so an inserted batch
+//! changes old densities by exactly the contribution of the new pairs —
+//! the streaming session repairs them incrementally and stays byte-exact.
+//! They are also **monotone under insertion** (contributions are ≥ 1 inside
+//! the ball), which the streaming λ/δ repair's seeded-race shortcut
+//! requires. *KnnRadius* is neither — adding points can *shrink* another
+//! point's d_k and thus demote third parties' ranks — so the streaming
+//! session recomputes (ρ, λ, δ) over its forest per ingest instead of
+//! repairing (exact, just not incremental; see `dpc::stream`).
+//!
+//! The Gaussian weights quantize `exp` evaluated in f64 on the exactly
+//! widened squared distance. Within one platform that is fully
+//! deterministic (the oracle and every engine share [`gaussian_weight`]);
+//! across platforms `exp` may differ in the last ulp, which is why the
+//! golden conformance snapshots pin the cutoff model only.
+
+use std::fmt;
+
+use crate::error::DpcError;
+use crate::geom::{radius_sq, PointStore, Scalar};
+use crate::kdtree::{KdTree, NoStats};
+use crate::parlay;
+
+use super::{DensityAlgo, QUERY_GRAIN};
+
+/// What Step 1 computes — the density *definition*. [`DensityAlgo`] remains
+/// the orthogonal execution-strategy axis (its baseline/no-prune ablations
+/// are specific to the cutoff model; the other models execute on the arena
+/// kd-tree, or all-pairs under [`DensityAlgo::Naive`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DensityModel {
+    /// ρ(x) = #points within `d_cut` of x (self-inclusive) — the paper's
+    /// model, today's behavior, unchanged.
+    #[default]
+    CutoffCount,
+    /// ρ(x) = #{y : d_k(y) > d_k(x)} where d_k is the distance to the k-th
+    /// nearest neighbor (excluding self; ∞ when fewer than k others exist).
+    /// Equal d_k ⇒ equal ρ, so the id tie-break stays in charge of order.
+    KnnRadius { k: u32 },
+    /// ρ(x) = Σ over the `d_cut` ball of fixed-point Gaussian weights
+    /// ([`gaussian_weight`]), saturating at `u32::MAX`.
+    GaussianKernel,
+}
+
+impl DensityModel {
+    /// One representative of each model — what conformance/differential
+    /// suites iterate (mirrors `DepAlgo::ALL`).
+    pub const REPRESENTATIVE: [DensityModel; 3] =
+        [DensityModel::CutoffCount, DensityModel::KnnRadius { k: 4 }, DensityModel::GaussianKernel];
+
+    /// Is ρ a commutative per-pair sum that can only grow when points are
+    /// inserted? Decides whether the streaming session may repair (ρ, λ, δ)
+    /// incrementally or must recompute them over its forest (both exact).
+    pub fn monotone_under_insertion(&self) -> bool {
+        !matches!(self, DensityModel::KnnRadius { .. })
+    }
+
+    /// Validate model-specific hyper-parameters (the `k` of `knn:<k>`).
+    pub fn validate(&self) -> Result<(), DpcError> {
+        if let DensityModel::KnnRadius { k: 0 } = self {
+            return Err(DpcError::InvalidParam {
+                name: "k",
+                value: 0.0,
+                requirement: "knn density needs k >= 1",
+            });
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for DensityModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DensityModel::CutoffCount => f.write_str("cutoff"),
+            DensityModel::KnnRadius { k } => write!(f, "knn:{k}"),
+            DensityModel::GaussianKernel => f.write_str("gauss"),
+        }
+    }
+}
+
+impl std::str::FromStr for DensityModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cutoff" | "cutoff-count" => Ok(DensityModel::CutoffCount),
+            "gauss" | "gaussian" => Ok(DensityModel::GaussianKernel),
+            other => match other.strip_prefix("knn:").map(str::parse::<u32>) {
+                Some(Ok(k)) if k >= 1 => Ok(DensityModel::KnnRadius { k }),
+                Some(_) => Err(format!("bad k in density model {other:?} (want knn:<k>, k >= 1)")),
+                None => Err(format!("unknown density model {other:?} (cutoff | knn:<k> | gauss)")),
+            },
+        }
+    }
+}
+
+/// Fixed-point scale of the Gaussian kernel: weights live in
+/// `[round(e⁻¹·4096), 4096] = [1507, 4096]`, so every in-ball neighbor
+/// contributes a *positive* integer (monotonicity) with ~3.6 decimal digits
+/// of kernel resolution.
+pub const GAUSS_SCALE: f64 = 4096.0;
+
+/// The canonical quantized Gaussian weight of a pair at squared distance
+/// `dist_sq` (already widened to f64 — exact for both scalar types), with
+/// `inv_d_cut_sq = 1/d_cut²` computed in f64. Every implementation — tree
+/// engines, naive scans, the O(n²) oracle, the streaming repair — must call
+/// this one function: the model is *defined* by it.
+#[inline]
+pub fn gaussian_weight(dist_sq: f64, inv_d_cut_sq: f64) -> u64 {
+    ((-dist_sq * inv_d_cut_sq).exp() * GAUSS_SCALE).round() as u64
+}
+
+/// Saturate a fixed-point weight sum into the pipeline's `u32` ρ slot.
+/// Saturation commutes with addition (`min(a+b, M)` chains associate), so
+/// incremental repair of a saturated ρ still matches a fresh computation.
+#[inline]
+pub fn saturate_rho(sum: u64) -> u32 {
+    sum.min(u32::MAX as u64) as u32
+}
+
+/// Step 1 under any model. For [`DensityModel::CutoffCount`] this is
+/// byte-for-byte [`super::compute_density`]; the other models honor
+/// [`DensityAlgo::Naive`] as the all-pairs reference and run every
+/// tree-flavored algo on the arena kd-tree (the baseline/no-prune ablations
+/// are cutoff-specific).
+pub fn compute_density_model<S: Scalar>(
+    pts: &PointStore<S>,
+    d_cut: f64,
+    model: DensityModel,
+    algo: DensityAlgo,
+) -> Vec<u32> {
+    match model {
+        DensityModel::CutoffCount => super::compute_density(pts, d_cut, algo),
+        _ if algo == DensityAlgo::Naive => naive_model_density(pts, d_cut, model),
+        _ => {
+            let tree = KdTree::build(pts);
+            tree_model_density(pts, &tree, d_cut, model)
+        }
+    }
+}
+
+/// Tree-backed kNN/Gaussian density over a caller-provided kd-tree (the
+/// staged session passes its cached tree; [`compute_density_model`] builds a
+/// throwaway). Must agree bit-for-bit with [`naive_model_density`].
+pub(crate) fn tree_model_density<S: Scalar>(
+    pts: &PointStore<S>,
+    tree: &KdTree<S>,
+    d_cut: f64,
+    model: DensityModel,
+) -> Vec<u32> {
+    match model {
+        DensityModel::CutoffCount => {
+            unreachable!("cutoff density runs through compute_density / the session's pruned path")
+        }
+        DensityModel::KnnRadius { k } => {
+            let dk: Vec<S> = parlay::par_map_grained(pts.len(), QUERY_GRAIN, |i| {
+                tree.kth_nn_dist_sq(pts.point(i), k as usize, i as u32)
+            });
+            knn_rank_densities(&dk)
+        }
+        DensityModel::GaussianKernel => {
+            let r_sq: S = radius_sq(d_cut);
+            let inv = 1.0 / (d_cut * d_cut);
+            let weight = |ds: S| gaussian_weight(ds.to_f64(), inv);
+            parlay::par_map_grained(pts.len(), QUERY_GRAIN, |i| {
+                saturate_rho(tree.range_weight_sum(pts.point(i), r_sq, &weight, &mut NoStats))
+            })
+        }
+    }
+}
+
+/// All-pairs kNN/Gaussian density — the `DensityAlgo::Naive` leg and the
+/// cross-check the conformance suite holds the tree path against.
+fn naive_model_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: DensityModel) -> Vec<u32> {
+    let n = pts.len();
+    match model {
+        DensityModel::CutoffCount => unreachable!("cutoff density runs through compute_density"),
+        DensityModel::KnnRadius { k } => {
+            let k = k as usize;
+            let dk: Vec<S> = parlay::par_map_grained(n, QUERY_GRAIN, |i| {
+                let q = pts.point(i);
+                let mut ds: Vec<S> = (0..n).filter(|&j| j != i).map(|j| pts.dist_sq_to(j, q)).collect();
+                if ds.len() < k {
+                    return S::INFINITY;
+                }
+                // Only the k-th smallest *value* matters; ties among equal
+                // distances cannot change it.
+                ds.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+                ds[k - 1]
+            });
+            knn_rank_densities(&dk)
+        }
+        DensityModel::GaussianKernel => {
+            let r_sq: S = radius_sq(d_cut);
+            let inv = 1.0 / (d_cut * d_cut);
+            parlay::par_map_grained(n, QUERY_GRAIN, |i| {
+                let q = pts.point(i);
+                let mut sum = 0u64;
+                for j in 0..n {
+                    let ds = pts.dist_sq_to(j, q);
+                    if ds <= r_sq {
+                        sum += gaussian_weight(ds.to_f64(), inv);
+                    }
+                }
+                saturate_rho(sum)
+            })
+        }
+    }
+}
+
+/// Competition ranks of k-NN distances, descending: ρ(x) = #{y : d_k(y) >
+/// d_k(x)}. Ties share a rank (so the priority key's id rule — not the
+/// partition of equal distances across a sort — decides their order), and
+/// the densest point gets the largest ρ. Values are exact `S` comparisons;
+/// ∞ entries (fewer than k neighbors) tie at rank 0.
+pub(crate) fn knn_rank_densities<S: Scalar>(dk: &[S]) -> Vec<u32> {
+    let n = dk.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by(|&a, &b| {
+        dk[b as usize].partial_cmp(&dk[a as usize]).unwrap().then(a.cmp(&b))
+    });
+    let mut rho = vec![0u32; n];
+    let mut rank = 0u32;
+    for (pos, &i) in order.iter().enumerate() {
+        if pos > 0 && dk[i as usize] != dk[order[pos - 1] as usize] {
+            rank = pos as u32;
+        }
+        rho[i as usize] = rank;
+    }
+    rho
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{gen_degenerate_points, gen_uniform_points};
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for (s, m) in [
+            ("cutoff", DensityModel::CutoffCount),
+            ("knn:3", DensityModel::KnnRadius { k: 3 }),
+            ("gauss", DensityModel::GaussianKernel),
+        ] {
+            assert_eq!(s.parse::<DensityModel>().unwrap(), m);
+            assert_eq!(m.to_string().parse::<DensityModel>().unwrap(), m);
+        }
+        assert_eq!("cutoff-count".parse::<DensityModel>().unwrap(), DensityModel::CutoffCount);
+        assert_eq!("gaussian".parse::<DensityModel>().unwrap(), DensityModel::GaussianKernel);
+        for bad in ["knn", "knn:", "knn:0", "knn:-1", "epanechnikov"] {
+            assert!(bad.parse::<DensityModel>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_k() {
+        assert!(DensityModel::KnnRadius { k: 0 }.validate().is_err());
+        assert!(DensityModel::KnnRadius { k: 1 }.validate().is_ok());
+        assert!(DensityModel::CutoffCount.validate().is_ok());
+        assert!(DensityModel::GaussianKernel.validate().is_ok());
+    }
+
+    #[test]
+    fn monotonicity_classification() {
+        assert!(DensityModel::CutoffCount.monotone_under_insertion());
+        assert!(DensityModel::GaussianKernel.monotone_under_insertion());
+        assert!(!DensityModel::KnnRadius { k: 2 }.monotone_under_insertion());
+    }
+
+    #[test]
+    fn gaussian_weight_bounds_and_monotonicity() {
+        let inv = 1.0 / 9.0; // d_cut = 3
+        assert_eq!(gaussian_weight(0.0, inv), GAUSS_SCALE as u64);
+        let at_edge = gaussian_weight(9.0, inv);
+        assert_eq!(at_edge, (GAUSS_SCALE / std::f64::consts::E).round() as u64);
+        assert!(at_edge >= 1, "in-ball weights must stay positive (monotonicity)");
+        assert!(gaussian_weight(1.0, inv) > gaussian_weight(4.0, inv));
+    }
+
+    #[test]
+    fn saturate_rho_is_a_min() {
+        assert_eq!(saturate_rho(0), 0);
+        assert_eq!(saturate_rho(u32::MAX as u64), u32::MAX);
+        assert_eq!(saturate_rho(u32::MAX as u64 + 1), u32::MAX);
+    }
+
+    #[test]
+    fn knn_ranks_share_on_ties_and_invert_distance_order() {
+        // d_k values: 5.0 (sparse), 1.0, 1.0 (tied), 0.5 (densest).
+        let rho = knn_rank_densities(&[5.0f64, 1.0, 1.0, 0.5]);
+        assert_eq!(rho, vec![0, 1, 1, 3]);
+        // Infinity (fewer than k neighbors) ranks sparsest.
+        let rho = knn_rank_densities(&[f64::INFINITY, 2.0, f64::INFINITY]);
+        assert_eq!(rho, vec![0, 2, 0]);
+    }
+
+    #[test]
+    fn tree_and_naive_agree_for_knn_and_gauss() {
+        let mut rng = SplitMix64::new(141);
+        let pts = gen_uniform_points(&mut rng, 400, 2, 40.0);
+        for model in [DensityModel::KnnRadius { k: 5 }, DensityModel::GaussianKernel] {
+            let a = compute_density_model(&pts, 4.0, model, DensityAlgo::Naive);
+            for algo in [DensityAlgo::TreePruned, DensityAlgo::TreeNoPrune, DensityAlgo::BaselineIncremental] {
+                let b = compute_density_model(&pts, 4.0, model, algo);
+                assert_eq!(a, b, "{model} under {algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_model_is_verbatim_compute_density() {
+        let mut rng = SplitMix64::new(142);
+        let pts = gen_degenerate_points(&mut rng, 120, 2);
+        for algo in DensityAlgo::ALL {
+            assert_eq!(
+                compute_density_model(&pts, 2.0, DensityModel::CutoffCount, algo),
+                super::super::compute_density(&pts, 2.0, algo),
+                "{algo:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn knn_with_k_past_n_ranks_everything_equal() {
+        let mut rng = SplitMix64::new(143);
+        let pts = gen_uniform_points(&mut rng, 10, 2, 10.0);
+        let rho = compute_density_model(&pts, 1.0, DensityModel::KnnRadius { k: 64 }, DensityAlgo::TreePruned);
+        assert!(rho.iter().all(|&r| r == 0), "{rho:?}");
+    }
+}

@@ -1,7 +1,10 @@
 //! Density Peaks Clustering: the paper's three-step pipeline.
 //!
-//! 1. **Density** (§6.1): ρ(x) = #points within `d_cut` of x — parallel
-//!    kd-tree range counts with the subtree-count pruning optimization.
+//! 1. **Density** (§6.1): by default ρ(x) = #points within `d_cut` of x —
+//!    parallel kd-tree range counts with the subtree-count pruning
+//!    optimization. The density *definition* is pluggable ([`DensityModel`]):
+//!    a kNN-rank density and a fixed-point truncated Gaussian kernel run
+//!    through the same integer-ρ pipeline, exactly.
 //! 2. **Dependent points** (§4, §5): λ(x) = nearest strictly-higher-priority
 //!    neighbor, where priority = (ρ, lexicographic id tiebreak). Five
 //!    interchangeable algorithms, all *exact* (see [`DepAlgo`]).
@@ -14,12 +17,15 @@
 //! claim vs. approximate DPC).
 
 pub mod dep;
+pub mod density;
 pub mod linkage;
 pub mod approx;
 pub mod decision;
+pub mod oracle;
 pub mod session;
 pub mod stream;
 
+pub use density::{compute_density_model, gaussian_weight, DensityModel, GAUSS_SCALE};
 pub use session::{ClusterSession, DepArtifacts, SessionStats};
 pub use stream::{StreamStats, StreamingSession};
 
@@ -46,11 +52,23 @@ pub struct DpcParams {
     /// boundaries — the CLI, `serve` lines, and the coordinator's ingestion
     /// of raw f64 data — use it to pick which [`PointStore`] to build.
     pub dtype: Dtype,
+    /// The density *definition* Step 1 computes (cutoff count by default —
+    /// the paper's model; see [`DensityModel`] for the kNN-rank and
+    /// fixed-point Gaussian alternatives). ρ_min is interpreted in the
+    /// model's own units: a neighbor count, a rank in `0..n`, or a
+    /// fixed-point kernel mass (multiples of [`density::GAUSS_SCALE`]).
+    pub density: DensityModel,
 }
 
 impl Default for DpcParams {
     fn default() -> Self {
-        DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: f64::INFINITY, dtype: Dtype::F64 }
+        DpcParams {
+            d_cut: 1.0,
+            rho_min: 0.0,
+            delta_min: f64::INFINITY,
+            dtype: Dtype::F64,
+            density: DensityModel::CutoffCount,
+        }
     }
 }
 

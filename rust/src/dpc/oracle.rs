@@ -1,0 +1,190 @@
+//! Sequential O(n²) brute-force DPC oracle — the independent reference the
+//! differential suite (`rust/tests/oracle_differential.rs`) holds every
+//! (DensityModel × DepAlgo) pipeline against, byte for byte.
+//!
+//! Everything here is deliberately the *dumbest correct implementation*:
+//! all-pairs scans, no trees, no parallelism, no caches. Where the pipeline
+//! sorts/ranks/prunes, the oracle counts; where the pipeline unions in
+//! parallel, the oracle follows dependency chains one hop at a time. The
+//! only shared code is [`super::gaussian_weight`] and
+//! [`crate::geom::radius_sq`] — those two functions *define* the Gaussian
+//! model and "the radius at precision S", so an oracle that reimplemented
+//! them would be testing a different specification, not the same one.
+//!
+//! Used only by tests and benches; nothing in the serving path calls it.
+
+use crate::geom::{radius_sq, PointStore, Scalar};
+
+use super::density::{gaussian_weight, saturate_rho};
+use super::{priority_key, DensityModel, DpcParams, DpcResult, StepTimings};
+
+/// Brute-force Step 1 under any [`DensityModel`].
+pub fn oracle_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: DensityModel) -> Vec<u32> {
+    let n = pts.len();
+    let r_sq: S = radius_sq(d_cut);
+    match model {
+        DensityModel::CutoffCount => (0..n)
+            .map(|i| (0..n).filter(|&j| pts.dist_sq(i, j) <= r_sq).count() as u32)
+            .collect(),
+        DensityModel::KnnRadius { k } => {
+            // d_k by full sort per point (the pipeline selects; the oracle
+            // sorts — different code, same value), then the rank by direct
+            // counting (the pipeline ranks via one global sort).
+            let k = k as usize;
+            let dk: Vec<S> = (0..n)
+                .map(|i| {
+                    let mut ds: Vec<S> =
+                        (0..n).filter(|&j| j != i).map(|j| pts.dist_sq(i, j)).collect();
+                    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    if ds.len() < k {
+                        S::INFINITY
+                    } else {
+                        ds[k - 1]
+                    }
+                })
+                .collect();
+            (0..n)
+                .map(|i| (0..n).filter(|&j| dk[j] > dk[i]).count() as u32)
+                .collect()
+        }
+        DensityModel::GaussianKernel => {
+            let inv = 1.0 / (d_cut * d_cut);
+            (0..n)
+                .map(|i| {
+                    let sum: u64 = (0..n)
+                        .map(|j| pts.dist_sq(i, j))
+                        .filter(|&ds| ds <= r_sq)
+                        .map(|ds| gaussian_weight(ds.to_f64(), inv))
+                        .sum();
+                    saturate_rho(sum)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Brute-force Steps 2–3 on a given ρ, mirroring the masked-forest
+/// semantics every pipeline entry point produces: noise points get no λ and
+/// an ∞ δ; everyone else takes the nearest strictly-higher-priority point
+/// (ties by smaller id).
+fn oracle_dependents<S: Scalar>(
+    pts: &PointStore<S>,
+    rho: &[u32],
+    rho_min: f64,
+) -> (Vec<Option<u32>>, Vec<f64>) {
+    let n = pts.len();
+    let gamma: Vec<u64> = rho.iter().enumerate().map(|(i, &r)| priority_key(r, i as u32)).collect();
+    let mut dep = vec![None; n];
+    let mut delta = vec![f64::INFINITY; n];
+    for i in 0..n {
+        if (rho[i] as f64) < rho_min {
+            continue;
+        }
+        let mut best: Option<(u32, S)> = None;
+        for j in 0..n {
+            if gamma[j] <= gamma[i] {
+                continue;
+            }
+            let ds = pts.dist_sq(i, j);
+            match best {
+                Some((bj, bd)) if ds > bd || (ds == bd && j as u32 > bj) => {}
+                _ => best = Some((j as u32, ds)),
+            }
+        }
+        if let Some((j, ds)) = best {
+            dep[i] = Some(j);
+            // The one widening sqrt, same formula as `dep::dependent_distances`.
+            delta[i] = ds.to_f64().sqrt();
+        }
+    }
+    (dep, delta)
+}
+
+/// The full sequential reference pipeline: Steps 1–3 under
+/// `params.density`, producing a [`DpcResult`] field-compatible with every
+/// parallel pipeline (timings zeroed — the oracle measures correctness).
+pub fn oracle_pipeline<S: Scalar>(pts: &PointStore<S>, params: DpcParams) -> DpcResult {
+    let n = pts.len();
+    let rho = oracle_density(pts, params.d_cut, params.density);
+    let (dep, delta) = oracle_dependents(pts, &rho, params.rho_min);
+
+    let is_noise: Vec<bool> = (0..n).map(|i| (rho[i] as f64) < params.rho_min).collect();
+    let is_center: Vec<bool> =
+        (0..n).map(|i| !is_noise[i] && delta[i] >= params.delta_min).collect();
+    // Label by walking the dependency chain to its first center. Chains
+    // ascend strictly in priority, so they terminate; the global peak
+    // (λ = None) has δ = ∞ and is always a center, so every non-noise
+    // chain ends on one.
+    let labels: Vec<i64> = (0..n)
+        .map(|i| {
+            if is_noise[i] {
+                return -1;
+            }
+            let mut cur = i;
+            while !is_center[cur] {
+                cur = dep[cur].expect("non-center non-noise point must have a dependent") as usize;
+            }
+            cur as i64
+        })
+        .collect();
+    let centers: Vec<u32> = (0..n as u32).filter(|&i| is_center[i as usize]).collect();
+    let num_noise = is_noise.iter().filter(|&&x| x).count();
+    DpcResult {
+        rho,
+        dep,
+        delta,
+        num_clusters: centers.len(),
+        centers,
+        labels,
+        num_noise,
+        timings: StepTimings::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::{DepAlgo, Dpc};
+    use crate::geom::PointSet;
+    use crate::proputil::gen_clustered_points;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn oracle_matches_pipeline_on_a_smoke_case() {
+        let mut rng = SplitMix64::new(151);
+        let pts = gen_clustered_points(&mut rng, 120, 2, 3, 60.0, 2.0);
+        for model in DensityModel::REPRESENTATIVE {
+            let params = DpcParams {
+                d_cut: 4.0,
+                rho_min: 2.0,
+                delta_min: 8.0,
+                density: model,
+                ..DpcParams::default()
+            };
+            let want = oracle_pipeline(&pts, params);
+            let got = Dpc::new(params).dep_algo(DepAlgo::Priority).run(&pts).unwrap();
+            assert_eq!(got.rho, want.rho, "{model}: rho");
+            assert_eq!(got.dep, want.dep, "{model}: dep");
+            assert_eq!(got.delta, want.delta, "{model}: delta");
+            assert_eq!(got.labels, want.labels, "{model}: labels");
+            assert_eq!(got.centers, want.centers, "{model}: centers");
+        }
+    }
+
+    #[test]
+    fn oracle_handles_single_point_and_all_noise() {
+        let pts = PointSet::new(vec![1.0, 2.0], 2);
+        let out = oracle_pipeline(&pts, DpcParams { d_cut: 1.0, delta_min: 5.0, ..DpcParams::default() });
+        assert_eq!(out.rho, vec![1]);
+        assert_eq!(out.dep, vec![None]);
+        assert_eq!(out.labels, vec![0]);
+        assert_eq!((out.num_clusters, out.num_noise), (1, 0));
+
+        let out = oracle_pipeline(
+            &pts,
+            DpcParams { d_cut: 1.0, rho_min: 10.0, delta_min: 5.0, ..DpcParams::default() },
+        );
+        assert_eq!(out.labels, vec![-1]);
+        assert_eq!((out.num_clusters, out.num_noise), (0, 1));
+    }
+}

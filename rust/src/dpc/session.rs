@@ -37,7 +37,7 @@ use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
 
-use super::{compute_density, dep, linkage, DensityAlgo, DepAlgo, DpcParams, DpcResult, StepTimings};
+use super::{compute_density, density, dep, linkage, DensityAlgo, DensityModel, DepAlgo, DpcParams, DpcResult, StepTimings};
 
 /// Cached Step-2 output: the full (unthresholded) dependency forest.
 #[derive(Clone, Debug)]
@@ -98,11 +98,15 @@ pub struct ClusterSession<S: Scalar = f64> {
     /// traverse. Shares the store's buffer by refcount.
     tree: Option<KdTree<S>>,
     density_algo: DensityAlgo,
-    rho_cache: HashMap<u64, DensityArtifacts>,
-    dep_cache: HashMap<(u64, DepAlgo), Arc<DepArtifacts>>,
-    /// Radius of the most recent `density` call (cache key is the f64 bits).
-    active_d_cut: Option<f64>,
-    /// Algorithm of the most recent `dependents` call for the active radius.
+    /// The density definition `density()` computes (cache keys carry it, so
+    /// switching models — like switching radii — re-stages cheaply).
+    density_model: DensityModel,
+    rho_cache: HashMap<(u64, DensityModel), DensityArtifacts>,
+    dep_cache: HashMap<(u64, DensityModel, DepAlgo), Arc<DepArtifacts>>,
+    /// (radius, model) of the most recent `density` call (the radius keys
+    /// by its f64 bits).
+    active_stage: Option<(f64, DensityModel)>,
+    /// Algorithm of the most recent `dependents` call for the active stage.
     active_algo: Option<DepAlgo>,
     stats: SessionStats,
 }
@@ -121,9 +125,10 @@ impl<S: Scalar> ClusterSession<S> {
             pts: pts.clone(),
             tree: None,
             density_algo: DensityAlgo::TreePruned,
+            density_model: DensityModel::CutoffCount,
             rho_cache: HashMap::new(),
             dep_cache: HashMap::new(),
-            active_d_cut: None,
+            active_stage: None,
             active_algo: None,
             stats: SessionStats::default(),
         })
@@ -135,6 +140,25 @@ impl<S: Scalar> ClusterSession<S> {
     pub fn with_density_algo(mut self, a: DensityAlgo) -> Self {
         self.density_algo = a;
         self
+    }
+
+    /// Select the density definition (builder form of
+    /// [`ClusterSession::set_density_model`]).
+    pub fn with_density_model(mut self, m: DensityModel) -> Self {
+        self.density_model = m;
+        self
+    }
+
+    /// Switch the density definition for subsequent `density()` calls. The
+    /// per-(radius, model) artifact caches survive, so toggling between
+    /// models re-stages at cache-hit price — the workflow behind
+    /// EXPERIMENTS.md's cutoff-vs-knn-vs-kernel quality table.
+    pub fn set_density_model(&mut self, m: DensityModel) {
+        self.density_model = m;
+    }
+
+    pub fn density_model(&self) -> DensityModel {
+        self.density_model
     }
 
     pub fn points(&self) -> &PointStore<S> {
@@ -159,21 +183,36 @@ impl<S: Scalar> ClusterSession<S> {
 
     /// Radius of the currently active density stage, if any.
     pub fn active_d_cut(&self) -> Option<f64> {
-        self.active_d_cut
+        self.active_stage.map(|(d, _)| d)
     }
 
-    /// Step 1: ρ for every point at radius `d_cut`, cached per radius.
-    /// Switching the radius invalidates the active dependents stage (the
-    /// per-radius artifact cache keeps a later switch back cheap).
+    /// Artifact-cache key for a (radius, model) stage. `KnnRadius` densities
+    /// do not depend on `d_cut` at all (d_k is ranked, not thresholded), so
+    /// its radius component canonicalizes to zero — a radius sweep under the
+    /// kNN model is all cache hits after the first computation, which is the
+    /// whole point of the staged session.
+    fn stage_key(d_cut: f64, model: DensityModel) -> (u64, DensityModel) {
+        match model {
+            DensityModel::KnnRadius { .. } => (0, model),
+            _ => (d_cut.to_bits(), model),
+        }
+    }
+
+    /// Step 1: ρ for every point at radius `d_cut` under the session's
+    /// [`DensityModel`], cached per (radius, model). Switching either
+    /// invalidates the active dependents stage (the per-key artifact cache
+    /// keeps a later switch back cheap).
     pub fn density(&mut self, d_cut: f64) -> Result<Arc<Vec<u32>>, DpcError> {
         validate_d_cut(d_cut)?;
-        let key = d_cut.to_bits();
+        let model = self.density_model;
+        model.validate()?;
+        let key = Self::stage_key(d_cut, model);
         if self.rho_cache.contains_key(&key) {
             self.stats.density_cache_hits += 1;
         } else {
             let t = Instant::now();
-            let rho = match self.density_algo {
-                DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune => {
+            let rho = match (model, self.density_algo) {
+                (DensityModel::CutoffCount, DensityAlgo::TreePruned | DensityAlgo::TreeNoPrune) => {
                     let pts = &self.pts;
                     let tree = &*self.tree.get_or_insert_with(|| KdTree::build(pts));
                     let r_sq: S = radius_sq(d_cut);
@@ -188,33 +227,46 @@ impl<S: Scalar> ClusterSession<S> {
                         c as u32
                     })
                 }
-                other => compute_density(&self.pts, d_cut, other),
+                (DensityModel::CutoffCount, other) => compute_density(&self.pts, d_cut, other),
+                (_, DensityAlgo::Naive) => {
+                    density::compute_density_model(&self.pts, d_cut, model, DensityAlgo::Naive)
+                }
+                // kNN/Gaussian on any tree-flavored algo: the session's
+                // amortized tree (the ablation axes are cutoff-specific).
+                _ => {
+                    let pts = &self.pts;
+                    let tree = &*self.tree.get_or_insert_with(|| KdTree::build(pts));
+                    density::tree_model_density(pts, tree, d_cut, model)
+                }
             };
             let secs = t.elapsed().as_secs_f64();
             self.rho_cache.insert(key, DensityArtifacts { rho: Arc::new(rho), secs });
             self.stats.density_computes += 1;
         }
-        if self.active_d_cut.map(f64::to_bits) != Some(key) {
-            self.active_d_cut = Some(d_cut);
+        if self.active_stage.map(|(d, m)| Self::stage_key(d, m)) != Some(key) {
+            // A genuinely different stage: the active dependents are stale.
             self.active_algo = None;
         }
+        self.active_stage = Some((d_cut, model));
         let cached = self.rho_cache.get(&key).expect("just ensured");
         Ok(Arc::clone(&cached.rho))
     }
 
     /// Step 2: the full (λ, δ) forest on top of the active density, cached
-    /// per (radius, algorithm). Requires [`ClusterSession::density`] first.
+    /// per (radius, model, algorithm). Requires [`ClusterSession::density`]
+    /// first.
     pub fn dependents(&mut self, algo: DepAlgo) -> Result<Arc<DepArtifacts>, DpcError> {
-        let d_cut = self
-            .active_d_cut
+        let (d_cut, model) = self
+            .active_stage
             .ok_or(DpcError::MissingStage { need: "density", call: "dependents" })?;
-        let key = (d_cut.to_bits(), algo);
+        let (stage_bits, _) = Self::stage_key(d_cut, model);
+        let key = (stage_bits, model, algo);
         if let Some(art) = self.dep_cache.get(&key) {
             self.stats.dep_cache_hits += 1;
             self.active_algo = Some(algo);
             return Ok(Arc::clone(art));
         }
-        let rho = Arc::clone(&self.rho_cache[&d_cut.to_bits()].rho);
+        let rho = Arc::clone(&self.rho_cache[&(stage_bits, model)].rho);
         let t = Instant::now();
         // rho_min = 0: compute every point's dependent so any later noise
         // threshold is a pure mask (candidate sets are threshold-free).
@@ -232,12 +284,14 @@ impl<S: Scalar> ClusterSession<S> {
     /// union-find linkage. Requires both prior stages; byte-identical to a
     /// fresh full run at (active `d_cut`, `rho_min`, `delta_min`).
     pub fn cut(&self, rho_min: f64, delta_min: f64) -> Result<DpcResult, DpcError> {
-        let d_cut = self.active_d_cut.ok_or(DpcError::MissingStage { need: "density", call: "cut" })?;
+        let (d_cut, model) =
+            self.active_stage.ok_or(DpcError::MissingStage { need: "density", call: "cut" })?;
         let algo = self.active_algo.ok_or(DpcError::MissingStage { need: "dependents", call: "cut" })?;
         validate_thresholds(rho_min, delta_min)?;
-        let params = DpcParams { d_cut, rho_min, delta_min, dtype: S::DTYPE };
-        let density = &self.rho_cache[&d_cut.to_bits()];
-        let art = &self.dep_cache[&(d_cut.to_bits(), algo)];
+        let params = DpcParams { d_cut, rho_min, delta_min, dtype: S::DTYPE, density: model };
+        let (stage_bits, _) = Self::stage_key(d_cut, model);
+        let density = &self.rho_cache[&(stage_bits, model)];
+        let art = &self.dep_cache[&(stage_bits, model, algo)];
         let mut out = cut_cached(&self.pts, &density.rho, &art.dep, &art.delta, params);
         out.timings.density_s = density.secs;
         out.timings.dep_s = art.secs;
@@ -245,8 +299,10 @@ impl<S: Scalar> ClusterSession<S> {
     }
 
     /// Convenience: run all three stages (hitting caches where possible) —
-    /// the one-shot path that [`super::Dpc::run`] wraps.
+    /// the one-shot path that [`super::Dpc::run`] wraps. Adopts the params'
+    /// density model.
     pub fn run(&mut self, params: DpcParams, algo: DepAlgo) -> Result<DpcResult, DpcError> {
+        self.density_model = params.density;
         self.density(params.d_cut)?;
         self.dependents(algo)?;
         self.cut(params.rho_min, params.delta_min)
@@ -324,6 +380,7 @@ pub fn validate_thresholds(rho_min: f64, delta_min: f64) -> Result<(), DpcError>
 /// Validate a full parameter set (used by `Dpc::run` and the coordinator).
 pub fn validate_params(params: &DpcParams) -> Result<(), DpcError> {
     validate_d_cut(params.d_cut)?;
+    params.density.validate()?;
     validate_thresholds(params.rho_min, params.delta_min)
 }
 
@@ -406,7 +463,7 @@ mod tests {
         s.density(4.0).unwrap();
         s.dependents(DepAlgo::Fenwick).unwrap();
         let recut = s.cut(1.0, 8.0).unwrap();
-        let params = DpcParams { d_cut: 4.0, rho_min: 1.0, delta_min: 8.0, dtype: Dtype::F32 };
+        let params = DpcParams { d_cut: 4.0, rho_min: 1.0, delta_min: 8.0, dtype: Dtype::F32, ..DpcParams::default() };
         let fresh = crate::dpc::Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(&pts).unwrap();
         assert_eq!(recut.rho, fresh.rho);
         assert_eq!(recut.dep, fresh.dep);
@@ -434,6 +491,77 @@ mod tests {
         assert_eq!(st.density_cache_hits, 1);
         assert_eq!(st.dep_computes, 2);
         assert_eq!(st.dep_cache_hits, 1);
+    }
+
+    #[test]
+    fn model_switch_invalidates_stage_but_caches_per_model() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap();
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        s.set_density_model(DensityModel::KnnRadius { k: 3 });
+        s.density(4.0).unwrap();
+        // Same radius, new model: the dependents stage must be re-staged.
+        assert!(matches!(s.cut(0.0, 10.0), Err(DpcError::MissingStage { need: "dependents", .. })));
+        s.dependents(DepAlgo::Priority).unwrap();
+        s.cut(0.0, 10.0).unwrap();
+        // Back to cutoff: both stages served from cache.
+        s.set_density_model(DensityModel::CutoffCount);
+        s.density(4.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        let st = s.stats();
+        assert_eq!(st.density_computes, 2);
+        assert_eq!(st.density_cache_hits, 1);
+        assert_eq!(st.dep_computes, 2);
+        assert_eq!(st.dep_cache_hits, 1);
+    }
+
+    #[test]
+    fn staged_model_runs_match_oneshot_runs() {
+        let pts = blobs();
+        for model in DensityModel::REPRESENTATIVE {
+            let mut s = ClusterSession::build(&pts).unwrap().with_density_model(model);
+            s.density(4.0).unwrap();
+            s.dependents(DepAlgo::Fenwick).unwrap();
+            let staged = s.cut(1.0, 8.0).unwrap();
+            let params =
+                DpcParams { d_cut: 4.0, rho_min: 1.0, delta_min: 8.0, density: model, ..DpcParams::default() };
+            let fresh = crate::dpc::Dpc::new(params).dep_algo(DepAlgo::Fenwick).run(&pts).unwrap();
+            assert_eq!(staged.rho, fresh.rho, "{model}");
+            assert_eq!(staged.dep, fresh.dep, "{model}");
+            assert_eq!(staged.delta, fresh.delta, "{model}");
+            assert_eq!(staged.labels, fresh.labels, "{model}");
+        }
+    }
+
+    #[test]
+    fn knn_radius_sweep_is_all_cache_hits() {
+        // d_k ranks do not depend on d_cut, so a radius sweep under the kNN
+        // model computes each stage once and serves every later radius from
+        // cache — without dropping the active dependents stage.
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap().with_density_model(DensityModel::KnnRadius { k: 4 });
+        s.density(2.0).unwrap();
+        s.dependents(DepAlgo::Priority).unwrap();
+        let first = s.cut(1.0, 8.0).unwrap();
+        for d_cut in [3.0, 7.5, 2.0] {
+            let rho = s.density(d_cut).unwrap();
+            assert_eq!(*rho, first.rho, "knn rho is radius-independent");
+            // The dependents stage survived the radius switch.
+            let again = s.cut(1.0, 8.0).unwrap();
+            assert_eq!(again.labels, first.labels);
+        }
+        let st = s.stats();
+        assert_eq!(st.density_computes, 1);
+        assert_eq!(st.density_cache_hits, 3);
+        assert_eq!(st.dep_computes, 1);
+    }
+
+    #[test]
+    fn knn_density_rejects_zero_k() {
+        let pts = blobs();
+        let mut s = ClusterSession::build(&pts).unwrap().with_density_model(DensityModel::KnnRadius { k: 0 });
+        assert!(matches!(s.density(4.0), Err(DpcError::InvalidParam { name: "k", .. })));
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //! - **ρ repair** (exact, both directions): each batch point range-counts
 //!   the pre-merge forest plus a throwaway batch tree for its own ρ, and
 //!   range-*reports* the old forest so every old point within `d_cut` of an
-//!   inserted point gets its integer count bumped.
+//!   inserted point gets its integer count bumped. Under the fixed-point
+//!   Gaussian model the "count" generalizes to a commutative integer weight
+//!   sum — same repair, same exactness. The non-monotone kNN-rank model
+//!   instead recomputes its queries over the merged forest (exact, with the
+//!   index still amortized; see [`super::DensityModel`]).
 //! - **λ/δ repair** (exact): priorities (ρ with the id tiebreak) only ever
 //!   increase, so a point's dependent can change in just two ways. If its
 //!   cached dependent still outranks it, the candidate set kept its old
@@ -49,7 +53,7 @@
 //! `benches/stream_ingest.rs`), but tiny per-point batches over huge
 //! sessions should be coalesced by the caller.
 
-use std::sync::atomic::{AtomicU32, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::time::Instant;
 
 use crate::error::DpcError;
@@ -57,7 +61,8 @@ use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
 
-use super::{priority_key, session, DpcParams, DpcResult};
+use super::density::{gaussian_weight, knn_rank_densities, saturate_rho};
+use super::{priority_key, session, DensityModel, DpcParams, DpcResult};
 
 /// One forest level: a static kd-tree over exactly 2^k of the session's
 /// points. The tree owns a refcount share of the coordinate snapshot it was
@@ -123,6 +128,12 @@ pub struct StreamStats {
 /// ```
 pub struct StreamingSession<S: Scalar = f64> {
     d_cut: f64,
+    /// The density definition the session maintains ρ under. Monotone
+    /// models (cutoff, Gaussian) take the incremental repair path; the
+    /// kNN-rank model — whose ρ can *decrease* for third parties when a
+    /// batch shrinks someone's k-NN radius — recomputes (ρ, λ, δ) over the
+    /// forest per ingest instead (exact either way; see `dpc::density`).
+    model: DensityModel,
     pts: PointStore<S>,
     /// Invariant: distinct `k`s, descending — the binary representation of
     /// `pts.len()`.
@@ -139,16 +150,26 @@ pub struct StreamingSession<S: Scalar = f64> {
 }
 
 impl<S: Scalar> StreamingSession<S> {
-    /// Open an empty session at a fixed density radius. The radius is part
-    /// of the maintained state (ρ is relative to it), so it cannot change
-    /// mid-stream — open a new session for a new radius.
+    /// Open an empty session at a fixed density radius, under the paper's
+    /// cutoff-count density. The radius is part of the maintained state
+    /// (ρ is relative to it), so it cannot change mid-stream — open a new
+    /// session for a new radius.
     pub fn new(dim: usize, d_cut: f64) -> Result<Self, DpcError> {
+        Self::new_with_model(dim, d_cut, DensityModel::CutoffCount)
+    }
+
+    /// Open an empty session under any [`DensityModel`]. Like the radius,
+    /// the model is part of the maintained state and fixed for the
+    /// session's lifetime.
+    pub fn new_with_model(dim: usize, d_cut: f64, model: DensityModel) -> Result<Self, DpcError> {
         if dim == 0 {
             return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
         }
         session::validate_d_cut(d_cut)?;
+        model.validate()?;
         Ok(StreamingSession {
             d_cut,
+            model,
             pts: PointStore::empty(dim),
             levels: Vec::new(),
             rho: Vec::new(),
@@ -161,6 +182,10 @@ impl<S: Scalar> StreamingSession<S> {
 
     pub fn d_cut(&self) -> f64 {
         self.d_cut
+    }
+
+    pub fn density_model(&self) -> DensityModel {
+        self.model
     }
 
     pub fn len(&self) -> usize {
@@ -212,11 +237,14 @@ impl<S: Scalar> StreamingSession<S> {
         self.levels.iter().filter(|lv| lv.tree.points().shares_storage(&self.pts)).count()
     }
 
-    /// Absorb a batch of points, repairing ρ and the (λ, δ) forest so the
-    /// session state equals a from-scratch build on the concatenated set.
-    /// An empty batch is a no-op; a batch of the wrong dimension or with
-    /// non-finite coordinates is rejected (positions in [`DpcError`] are
-    /// batch-local) and leaves the session untouched.
+    /// Absorb a batch of points, bringing ρ and the (λ, δ) forest to the
+    /// state a from-scratch build on the concatenated set would produce.
+    /// Monotone models (cutoff, Gaussian) repair incrementally; the
+    /// kNN-rank model recomputes over the merged forest (see the field doc
+    /// on [`StreamingSession`]). An empty batch is a no-op; a batch of the
+    /// wrong dimension or with non-finite coordinates is rejected
+    /// (positions in [`DpcError`] are batch-local) and leaves the session
+    /// untouched.
     pub fn ingest(&mut self, batch: &PointStore<S>) -> Result<(), DpcError> {
         if batch.dim() != self.pts.dim() {
             return Err(DpcError::DimensionMismatch { expected: self.pts.dim(), got: batch.dim() });
@@ -228,41 +256,83 @@ impl<S: Scalar> StreamingSession<S> {
         let old_n = self.pts.len();
         let b = batch.len();
         let total = old_n + b;
-        let r_sq: S = radius_sq(self.d_cut);
 
-        // The grown coordinate buffer. (`PointStore::new`'s Vec→`Arc<[S]>`
-        // conversion copies once more — see the note on
-        // [`crate::geom::PointStore::try_new`]; everything downstream of
-        // this point shares by refcount.) Existing levels keep refcount
-        // pins on their own snapshots, so this never invalidates a
-        // preserved tree.
-        let mut coords = Vec::with_capacity(total * self.pts.dim());
-        coords.extend_from_slice(self.pts.coords());
-        coords.extend_from_slice(batch.coords());
-        let new_pts = PointStore::new(coords, batch.dim());
+        // The grown coordinate buffer: one allocation, filled in place
+        // (`from_flat_fn` writes straight into the shared `Arc`, so growth
+        // costs exactly one pass over old + batch coordinates). Existing
+        // levels keep refcount pins on their own snapshots, so this never
+        // invalidates a preserved tree.
+        let (old_c, bat_c) = (self.pts.coords(), batch.coords());
+        let split = old_c.len();
+        let new_pts = PointStore::from_flat_fn(total, batch.dim(), |i| {
+            if i < split {
+                old_c[i]
+            } else {
+                bat_c[i - split]
+            }
+        });
         let new_ids: Vec<u32> = (old_n as u32..total as u32).collect();
+
+        match self.model {
+            DensityModel::KnnRadius { k } => {
+                // Merge first: the recompute wants the post-merge forest.
+                self.merge_levels(&new_pts, new_ids);
+                self.pts = new_pts;
+                self.reingest_knn(k as usize, old_n);
+            }
+            DensityModel::CutoffCount | DensityModel::GaussianKernel => {
+                self.repair_monotone(&new_pts, new_ids, old_n, b);
+            }
+        }
+        self.stats.ingests += 1;
+        self.stats.points_ingested += b as u64;
+        Ok(())
+    }
+
+    /// Incremental repair for pairwise-additive monotone models: each new
+    /// pair contributes a fixed positive integer (1 for cutoff, a
+    /// fixed-point kernel weight for Gaussian) to both endpoints, so the
+    /// batch's effect on ρ is exactly the sum of its pair contributions —
+    /// and the λ/δ repair can race cached dependents against only the
+    /// priority-raised set.
+    fn repair_monotone(&mut self, new_pts: &PointStore<S>, new_ids: Vec<u32>, old_n: usize, b: usize) {
+        let total = old_n + b;
+        let r_sq: S = radius_sq(self.d_cut);
+        let inv_d_cut_sq = 1.0 / (self.d_cut * self.d_cut);
+        let gauss = self.model == DensityModel::GaussianKernel;
 
         // ---- Step-1 repair (against the PRE-merge forest) ----
         let t_rho = Instant::now();
-        let batch_tree = KdTree::build_from_ids(&new_pts, new_ids.clone());
+        let batch_tree = KdTree::build_from_ids(new_pts, new_ids.clone());
         let (new_rho, changed_old) = {
             let levels = &self.levels;
-            let np = &new_pts;
-            // Each new point's ρ = count over the old forest + count over
-            // the batch (self-inclusive via the batch tree).
+            let np = new_pts;
+            let weight = |ds: S| gaussian_weight(ds.to_f64(), inv_d_cut_sq);
+            // Each new point's ρ = its contribution sum over the old forest
+            // plus the batch (self-inclusive via the batch tree). The
+            // per-tree sums are commutative integer adds, so the partition
+            // into levels cannot perturb the total.
             let new_rho: Vec<u32> = parlay::par_map_grained(b, crate::dpc::QUERY_GRAIN, |t| {
                 let q = np.point(old_n + t);
-                let mut c = batch_tree.range_count(q, r_sq, &mut NoStats);
-                for lv in levels {
-                    c += lv.tree.range_count(q, r_sq, &mut NoStats);
+                if gauss {
+                    let mut s = batch_tree.range_weight_sum(q, r_sq, &weight, &mut NoStats);
+                    for lv in levels {
+                        s += lv.tree.range_weight_sum(q, r_sq, &weight, &mut NoStats);
+                    }
+                    saturate_rho(s)
+                } else {
+                    let mut c = batch_tree.range_count(q, r_sq, &mut NoStats);
+                    for lv in levels {
+                        c += lv.tree.range_count(q, r_sq, &mut NoStats);
+                    }
+                    c as u32
                 }
-                c as u32
             });
             // The reverse direction: old points inside a batch point's ball
-            // gain exactly one count per such batch point. Relaxed atomic
-            // adds commute, so the counts are exact and deterministic
-            // without materializing every (batch, old) close pair at once.
-            let bumped: Vec<AtomicU32> = (0..old_n).map(|_| AtomicU32::new(0)).collect();
+            // gain exactly that pair's contribution. Relaxed atomic adds
+            // commute, so the sums are exact and deterministic without
+            // materializing every (batch, old) close pair at once.
+            let bumped: Vec<AtomicU64> = (0..old_n).map(|_| AtomicU64::new(0)).collect();
             parlay::par_for_grained(b, crate::dpc::QUERY_GRAIN, |t| {
                 let q = np.point(old_n + t);
                 let mut hits = Vec::new();
@@ -270,14 +340,20 @@ impl<S: Scalar> StreamingSession<S> {
                     lv.tree.range_report(q, r_sq, &mut hits);
                 }
                 for &i in &hits {
-                    bumped[i as usize].fetch_add(1, AtomicOrdering::Relaxed);
+                    let w = if gauss { weight(np.dist_sq(old_n + t, i as usize)) } else { 1 };
+                    bumped[i as usize].fetch_add(w, AtomicOrdering::Relaxed);
                 }
             });
             let mut changed_old: Vec<u32> = Vec::new();
             for (i, c) in bumped.iter().enumerate() {
-                let d = c.load(AtomicOrdering::Relaxed);
-                if d > 0 {
-                    self.rho[i] += d;
+                let add = c.load(AtomicOrdering::Relaxed);
+                // Saturating accumulate: `min(·, u32::MAX)` chains compose,
+                // so a repaired ρ equals the fresh saturated sum even when
+                // either side clipped (in-ball weights are ≥ 1, so any hit
+                // below the clip raises ρ — priorities stay monotone).
+                let nv = ((self.rho[i] as u64) + add).min(u32::MAX as u64) as u32;
+                if nv != self.rho[i] {
+                    self.rho[i] = nv;
                     changed_old.push(i as u32);
                 }
             }
@@ -288,8 +364,8 @@ impl<S: Scalar> StreamingSession<S> {
         self.stats.rho_secs += t_rho.elapsed().as_secs_f64();
 
         // ---- Forest merge (binary counter over the new total) ----
-        self.merge_levels(&new_pts, new_ids);
-        self.pts = new_pts;
+        self.merge_levels(new_pts, new_ids);
+        self.pts = new_pts.clone();
 
         // ---- Step-2 repair ----
         let t_dep = Instant::now();
@@ -362,9 +438,77 @@ impl<S: Scalar> StreamingSession<S> {
             }
         }
         self.stats.dep_secs += t_dep.elapsed().as_secs_f64();
-        self.stats.ingests += 1;
-        self.stats.points_ingested += b as u64;
-        Ok(())
+    }
+
+    /// Full recompute for the non-monotone kNN-rank model, against the
+    /// already-merged forest. Ranks are global — one shrunken k-NN radius
+    /// can demote every point ranked between the mover's old and new
+    /// position — so no cached (ρ, λ, δ) entry is trustworthy after an
+    /// ingest. The forest still amortizes the *index* (logarithmic rebuild
+    /// work); only the queries rerun, exactly as a fresh session would run
+    /// them.
+    fn reingest_knn(&mut self, k: usize, old_n: usize) {
+        let total = self.pts.len();
+        let t_rho = Instant::now();
+        let dk: Vec<S> = {
+            let pts = &self.pts;
+            let levels = &self.levels;
+            parlay::par_map_grained(total, crate::dpc::QUERY_GRAIN, |i| {
+                // One bounded heap threaded through every level: selection
+                // of the k global minima is partition-independent, so this
+                // equals the single-tree k-NN distance bit for bit.
+                let mut heap: Vec<(S, u32)> = Vec::with_capacity(k + 1);
+                for lv in levels {
+                    lv.tree.knn_fold(pts.point(i), k, i as u32, &mut heap);
+                }
+                if heap.len() < k {
+                    S::INFINITY
+                } else {
+                    heap[0].0
+                }
+            })
+        };
+        let new_rho = knn_rank_densities(&dk);
+        let moved = (0..old_n).filter(|&i| new_rho[i] != self.rho[i]).count();
+        self.stats.rho_bumped += moved as u64;
+        self.rho = new_rho;
+        self.stats.rho_secs += t_rho.elapsed().as_secs_f64();
+
+        let t_dep = Instant::now();
+        self.gamma = self.rho.iter().enumerate().map(|(i, &r)| priority_key(r, i as u32)).collect();
+        let results: Vec<Option<u32>> = {
+            let pts = &self.pts;
+            let levels = &self.levels;
+            let g = &self.gamma;
+            parlay::par_map_grained(total, crate::dpc::QUERY_GRAIN, |i| {
+                let q = pts.point(i);
+                let gi = g[i];
+                let mut best = (u32::MAX, S::INFINITY);
+                for lv in levels {
+                    lv.tree.nn_filtered(q, |j| g[j as usize] > gi, &mut best, &mut NoStats);
+                }
+                if best.0 == u32::MAX {
+                    None
+                } else {
+                    Some(best.0)
+                }
+            })
+        };
+        self.stats.dep_full_queries += total as u64;
+        self.dep.resize(total, None);
+        self.delta.resize(total, f64::INFINITY);
+        for (i, &nd) in results.iter().enumerate() {
+            if i >= old_n || nd != self.dep[i] {
+                self.stats.dep_changed += 1;
+                self.dep[i] = nd;
+                // Same formula as `dep::dependent_distances`.
+                self.delta[i] = match nd {
+                    Some(j) => self.pts.dist_sq(i, j as usize).to_f64().sqrt(),
+                    None => f64::INFINITY,
+                };
+            }
+        }
+        self.stats.dep_secs += t_dep.elapsed().as_secs_f64();
     }
 
     /// Rebuild the forest for the grown total: levels whose power-of-two
@@ -409,7 +553,8 @@ impl<S: Scalar> StreamingSession<S> {
             return Err(DpcError::EmptyInput);
         }
         session::validate_thresholds(rho_min, delta_min)?;
-        let params = DpcParams { d_cut: self.d_cut, rho_min, delta_min, dtype: S::DTYPE };
+        let params =
+            DpcParams { d_cut: self.d_cut, rho_min, delta_min, dtype: S::DTYPE, density: self.model };
         let mut out = session::cut_cached(&self.pts, &self.rho, &self.dep, &self.delta, params);
         out.timings.density_s = self.stats.rho_secs;
         out.timings.dep_s = self.stats.dep_secs;
@@ -476,6 +621,74 @@ mod tests {
         let mut rng = SplitMix64::new(303);
         let pts = gen_degenerate_points(&mut rng, 150, 2);
         check_stream_matches_fresh(&pts, 2.0, &[10, 50, 90]);
+    }
+
+    /// Stream-vs-fresh parity under every density model: the repair path
+    /// (cutoff, Gaussian) and the recompute path (kNN) must both land on
+    /// the fresh session's bytes after every batch.
+    fn check_stream_matches_fresh_model(pts: &PointSet, d_cut: f64, model: DensityModel, batches: &[usize]) {
+        let mut s = StreamingSession::<f64>::new_with_model(pts.dim(), d_cut, model).unwrap();
+        assert_eq!(s.density_model(), model);
+        let mut sent = 0usize;
+        for &bsz in batches {
+            let hi = (sent + bsz).min(pts.len());
+            if hi == sent {
+                break;
+            }
+            let batch = PointSet::new(pts.coords()[sent * pts.dim()..hi * pts.dim()].to_vec(), pts.dim());
+            s.ingest(&batch).unwrap();
+            sent = hi;
+            let mut fresh = ClusterSession::build(&prefix(pts, hi)).unwrap().with_density_model(model);
+            let rho = fresh.density(d_cut).unwrap();
+            assert_eq!(s.rho(), &rho[..], "{model}: rho after {hi} points");
+            let art = fresh.dependents(DepAlgo::Priority).unwrap();
+            assert_eq!(s.dep(), &art.dep[..], "{model}: dep after {hi} points");
+            assert_eq!(s.delta(), &art.delta[..], "{model}: delta after {hi} points");
+        }
+        assert_eq!(sent, pts.len());
+    }
+
+    #[test]
+    fn stream_matches_fresh_gaussian_kernel() {
+        let mut rng = SplitMix64::new(311);
+        let pts = gen_clustered_points(&mut rng, 170, 2, 3, 50.0, 2.0);
+        check_stream_matches_fresh_model(&pts, 3.0, DensityModel::GaussianKernel, &[40, 1, 70, 59]);
+    }
+
+    #[test]
+    fn stream_matches_fresh_knn_rank() {
+        let mut rng = SplitMix64::new(312);
+        let pts = gen_uniform_points(&mut rng, 150, 2, 30.0);
+        check_stream_matches_fresh_model(&pts, 3.0, DensityModel::KnnRadius { k: 3 }, &[33, 2, 80, 35]);
+    }
+
+    #[test]
+    fn stream_matches_fresh_models_on_degenerate_ties() {
+        let mut rng = SplitMix64::new(313);
+        let pts = gen_degenerate_points(&mut rng, 120, 2);
+        for model in DensityModel::REPRESENTATIVE {
+            check_stream_matches_fresh_model(&pts, 2.0, model, &[30, 50, 40]);
+        }
+    }
+
+    #[test]
+    fn knn_stream_counts_full_queries_not_races() {
+        let mut rng = SplitMix64::new(314);
+        let pts = gen_uniform_points(&mut rng, 96, 2, 20.0);
+        let mut s = StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::KnnRadius { k: 2 }).unwrap();
+        s.ingest(&prefix(&pts, 64)).unwrap();
+        s.ingest(&PointSet::new(pts.coords()[64 * 2..96 * 2].to_vec(), 2)).unwrap();
+        let st = s.stats();
+        assert_eq!(st.dep_seeded_races, 0, "knn never trusts a cached dependent");
+        assert_eq!(st.dep_full_queries, 64 + 96);
+    }
+
+    #[test]
+    fn new_with_model_validates_k() {
+        assert!(matches!(
+            StreamingSession::<f64>::new_with_model(2, 1.0, DensityModel::KnnRadius { k: 0 }),
+            Err(DpcError::InvalidParam { name: "k", .. })
+        ));
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! (O(n log² n) average) but its average-case analysis only assumes local
 //! uniformity of the *whole* point set, not of every priority-suffix
 //! (§5 intro) — and it is faster on some real distributions (paper: PAMAP2).
+//!
+//! Like the priority search kd-tree, this structure consumes only the
+//! integer γ ordering: every [`crate::dpc::DensityModel`] (cutoff count,
+//! kNN rank, fixed-point Gaussian mass) flows through it unchanged.
 
 use crate::geom::{PointStore, Scalar};
 use crate::kdtree::{KdTree, StatSink};

@@ -54,11 +54,53 @@ impl<S: Scalar> PointStore<S> {
     /// `Arc` header precludes reusing the `Vec` allocation) — a one-time
     /// construction cost; every share after that (sessions, trees, stream
     /// levels, job payloads) is a refcount bump. Callers that already hold
-    /// a shared buffer should use [`PointStore::try_from_shared`].
-    /// (Known follow-up: build generators/readers directly into
-    /// `Arc::new_uninit_slice` to drop this copy.)
+    /// a shared buffer should use [`PointStore::try_from_shared`]; code
+    /// that *produces* coordinates (generators, file readers, the stream's
+    /// growth path) should fill the shared allocation directly via
+    /// [`PointStore::from_flat_fn`] / [`PointStore::try_from_flat_fn`] and
+    /// skip the copy entirely.
     pub fn try_new(coords: Vec<S>, d: usize) -> Result<Self, DpcError> {
         Self::try_from_shared(Arc::from(coords), d)
+    }
+
+    /// Build a store by writing coordinates straight into one shared
+    /// allocation — no intermediate `Vec` and no `Vec → Arc` copy. `f` is
+    /// called once per flat index `i*d + k`, **in order**, so stateful
+    /// generators (RNGs, random walks) observe the same draw sequence as a
+    /// push loop.
+    pub fn from_flat_fn(n: usize, d: usize, mut f: impl FnMut(usize) -> S) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        let mut buf = Arc::new_uninit_slice(n * d);
+        let slots = Arc::get_mut(&mut buf).expect("freshly allocated Arc is unique");
+        for (i, slot) in slots.iter_mut().enumerate() {
+            slot.write(f(i));
+        }
+        // SAFETY: the loop above wrote every slot exactly once.
+        let coords = unsafe { buf.assume_init() };
+        PointStore { coords, n, d }
+    }
+
+    /// Fallible [`PointStore::from_flat_fn`]: the first `Err` aborts the
+    /// fill and surfaces unchanged (the partially-written allocation is
+    /// dropped — scalars are `Copy`, so nothing needs finalizing). This is
+    /// the binary reader's path: decode straight into the shared buffer.
+    pub fn try_from_flat_fn(
+        n: usize,
+        d: usize,
+        mut f: impl FnMut(usize) -> Result<S, DpcError>,
+    ) -> Result<Self, DpcError> {
+        if d == 0 {
+            return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
+        }
+        let mut buf = Arc::new_uninit_slice(n * d);
+        let slots = Arc::get_mut(&mut buf).expect("freshly allocated Arc is unique");
+        for (i, slot) in slots.iter_mut().enumerate() {
+            slot.write(f(i)?);
+        }
+        // SAFETY: the loop above wrote every slot exactly once (an early
+        // `Err` returns before this line).
+        let coords = unsafe { buf.assume_init() };
+        Ok(PointStore { coords, n, d })
     }
 
     /// Zero-copy constructor over an already-shared buffer (the `Arc` is
@@ -121,10 +163,12 @@ impl<S: Scalar> PointStore<S> {
     }
 
     /// Rounding precision conversion from an f64 store (a genuine buffer
-    /// copy — precision boundaries are the one place the data layer copies).
+    /// copy — precision boundaries are the one place the data layer
+    /// copies). Collects straight into the `Arc`: slice iterators are
+    /// `TrustedLen`, so the conversion is one allocation, not Vec-then-Arc.
     pub fn cast_from_f64(src: &PointStore<f64>) -> PointStore<S> {
-        let coords: Vec<S> = src.coords.iter().map(|&c| S::from_f64(c)).collect();
-        PointStore { coords: Arc::from(coords), n: src.n, d: src.d }
+        let coords: Arc<[S]> = src.coords.iter().map(|&c| S::from_f64(c)).collect();
+        PointStore { coords, n: src.n, d: src.d }
     }
 
     /// Lossless-or-error precision conversion from an f64 store: the first
@@ -140,8 +184,8 @@ impl<S: Scalar> PointStore<S> {
     /// `S` is already f64, or [`DynPoints::into_f64`] which shares in that
     /// case).
     pub fn to_f64(&self) -> PointStore<f64> {
-        let coords: Vec<f64> = self.coords.iter().map(|&c| c.to_f64()).collect();
-        PointStore { coords: Arc::from(coords), n: self.n, d: self.d }
+        let coords: Arc<[f64]> = self.coords.iter().map(|&c| c.to_f64()).collect();
+        PointStore { coords, n: self.n, d: self.d }
     }
 
     /// Scan for NaN/∞ coordinates, reporting the first offender's (point,
@@ -410,6 +454,39 @@ mod tests {
         // Zero-copy re-wrap of the shared buffer does.
         let ps4 = PointSet::try_from_shared(ps.shared_coords(), 2).unwrap();
         assert!(ps.shares_storage(&ps4));
+    }
+
+    #[test]
+    fn from_flat_fn_fills_in_order() {
+        let mut calls = Vec::new();
+        let ps = PointSet::from_flat_fn(3, 2, |i| {
+            calls.push(i);
+            i as f64 * 10.0
+        });
+        assert_eq!(calls, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!((ps.len(), ps.dim()), (3, 2));
+        assert_eq!(ps.point(1), &[20.0, 30.0]);
+        // Zero points is a valid (empty) store.
+        let empty = PointSet::from_flat_fn(0, 2, |_| unreachable!("no slots to fill"));
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn try_from_flat_fn_propagates_the_first_error() {
+        let got = PointSet::try_from_flat_fn(2, 2, |i| {
+            if i < 3 {
+                Ok(i as f64)
+            } else {
+                Err(DpcError::NonFinite { point: i / 2, dim: i % 2 })
+            }
+        });
+        assert!(matches!(got, Err(DpcError::NonFinite { point: 1, dim: 1 })));
+        assert!(matches!(
+            PointSet::try_from_flat_fn(1, 0, |_| Ok(0.0)),
+            Err(DpcError::InvalidParam { .. })
+        ));
+        let ok = PointSet::try_from_flat_fn(2, 1, |i| Ok(i as f64)).unwrap();
+        assert_eq!(ok.coords(), &[0.0, 1.0]);
     }
 
     #[test]

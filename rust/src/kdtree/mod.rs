@@ -274,6 +274,47 @@ impl<S: Scalar> KdTree<S> {
         self.range_report_rec(self.root, q, r_sq, out);
     }
 
+    /// Sum `weight(dist_sq)` over every point within squared radius `r_sq`
+    /// of `q` — the traversal behind the fixed-point Gaussian density model.
+    /// `u64` addition commutes and associates, so the sum is independent of
+    /// traversal order and of how points are partitioned across trees (the
+    /// streaming forest aggregates one sum over all its levels). No §6.1
+    /// containment shortcut: per-point weights need per-point distances.
+    pub fn range_weight_sum<T: StatSink, F: Fn(S) -> u64>(&self, q: &[S], r_sq: S, weight: &F, stats: &mut T) -> u64 {
+        self.range_weight_sum_rec(self.root, q, r_sq, weight, stats, 1)
+    }
+
+    fn range_weight_sum_rec<T: StatSink, F: Fn(S) -> u64>(
+        &self,
+        i: u32,
+        q: &[S],
+        r_sq: S,
+        weight: &F,
+        stats: &mut T,
+        depth: usize,
+    ) -> u64 {
+        stats.visit_node();
+        stats.depth(depth);
+        if self.bbox_dist_sq(i, q) > r_sq {
+            return 0;
+        }
+        let n = self.node(i);
+        if self.is_leaf(i) {
+            let d = self.pts.dim();
+            let mut s = 0u64;
+            for j in n.lo as usize..n.hi as usize {
+                stats.scan_point();
+                let ds = dist_sq_at(&self.pcoords, d, j, q);
+                if ds <= r_sq {
+                    s += weight(ds);
+                }
+            }
+            return s;
+        }
+        self.range_weight_sum_rec(n.left, q, r_sq, weight, stats, depth + 1)
+            + self.range_weight_sum_rec(n.right, q, r_sq, weight, stats, depth + 1)
+    }
+
     fn range_report_rec(&self, i: u32, q: &[S], r_sq: S, out: &mut Vec<u32>) {
         if self.bbox_dist_sq(i, q) > r_sq {
             return;
@@ -411,6 +452,37 @@ impl<S: Scalar> KdTree<S> {
         let mut out: Vec<(u32, S)> = heap.into_iter().map(|(d, p)| (p, d)).collect();
         out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
         out
+    }
+
+    /// The *k-th*-nearest-neighbor squared distance of `q` (excluding point
+    /// id `exclude`): the largest distance among the k nearest by
+    /// `(dist_sq, id)`, or `S::INFINITY` when fewer than `k` candidates
+    /// exist — the exact quantity the `knn:<k>` density model ranks. Shares
+    /// [`KdTree::knn`]'s bounded-heap traversal without materializing the
+    /// sorted result.
+    pub fn kth_nn_dist_sq(&self, q: &[S], k: usize, exclude: u32) -> S {
+        debug_assert!(k >= 1, "k-NN radius needs k >= 1");
+        let mut heap: Vec<(S, u32)> = Vec::with_capacity(k + 1);
+        self.knn_rec(self.root, q, k, exclude, &mut heap);
+        if heap.len() < k {
+            S::INFINITY
+        } else {
+            heap[0].0
+        }
+    }
+
+    /// Fold this tree's points into a caller-owned bounded kNN max-heap
+    /// (ordered by `(dist_sq, id)`, capacity `k`). Threading one heap
+    /// through several trees selects the k global minima of their union —
+    /// selection under a total order is partition-independent — so the
+    /// streaming forest's multi-tree k-NN equals the single-tree answer
+    /// bit for bit. `heap[0].0` is the running k-th distance once the heap
+    /// is full.
+    pub fn knn_fold(&self, q: &[S], k: usize, exclude: u32, heap: &mut Vec<(S, u32)>) {
+        if k == 0 {
+            return;
+        }
+        self.knn_rec(self.root, q, k, exclude, heap);
     }
 
     fn knn_rec(&self, i: u32, q: &[S], k: usize, exclude: u32, heap: &mut Vec<(S, u32)>) {
@@ -861,6 +933,73 @@ mod tests {
             all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
             all.truncate(k);
             assert_eq!(got, all, "k={k}");
+        }
+    }
+
+    #[test]
+    fn kth_nn_dist_matches_brute_force() {
+        let pts = sample_points(12, 700, 3);
+        let tree = KdTree::build(&pts);
+        for i in (0..pts.len()).step_by(31) {
+            let q = pts.point(i);
+            let mut ds: Vec<f64> =
+                (0..pts.len()).filter(|&j| j != i).map(|j| pts.dist_sq_to(j, q)).collect();
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in [1usize, 4, 13] {
+                assert_eq!(tree.kth_nn_dist_sq(q, k, i as u32), ds[k - 1], "i={i} k={k}");
+            }
+        }
+        // Fewer than k candidates => infinity.
+        let tiny = PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2);
+        let t = KdTree::build(&tiny);
+        assert_eq!(t.kth_nn_dist_sq(tiny.point(0), 1, 0), 2.0);
+        assert_eq!(t.kth_nn_dist_sq(tiny.point(0), 2, 0), f64::INFINITY);
+    }
+
+    #[test]
+    fn knn_fold_over_a_partition_matches_one_tree() {
+        let pts = sample_points(13, 900, 2);
+        let whole = KdTree::build(&pts);
+        // Partition ids into three arbitrary trees (a mini Bentley–Saxe
+        // forest) and fold one heap through all of them.
+        let parts: Vec<Vec<u32>> = (0..3)
+            .map(|r| (0..pts.len() as u32).filter(|i| i % 3 == r).collect())
+            .collect();
+        let trees: Vec<KdTree> = parts.into_iter().map(|ids| KdTree::build_from_ids(&pts, ids)).collect();
+        for i in (0..pts.len()).step_by(41) {
+            let q = pts.point(i);
+            for k in [1usize, 5] {
+                let mut heap = Vec::with_capacity(k + 1);
+                for t in &trees {
+                    t.knn_fold(q, k, i as u32, &mut heap);
+                }
+                assert_eq!(heap.len(), k);
+                assert_eq!(heap[0].0, whole.kth_nn_dist_sq(q, k, i as u32), "i={i} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_weight_sum_matches_brute_force_and_partitions() {
+        let mut rng = SplitMix64::new(14);
+        let pts = gen_degenerate_points(&mut rng, 300, 2);
+        let tree = KdTree::build(&pts);
+        let r_sq = 9.0f64;
+        // An arbitrary deterministic integer weight of the distance.
+        let weight = |ds: f64| (ds * 100.0).round() as u64 + 1;
+        for i in (0..pts.len()).step_by(17) {
+            let q = pts.point(i);
+            let want: u64 =
+                (0..pts.len()).map(|j| pts.dist_sq_to(j, q)).filter(|&ds| ds <= r_sq).map(weight).sum();
+            assert_eq!(tree.range_weight_sum(q, r_sq, &weight, &mut NoStats), want, "query {i}");
+            // Partition independence: two half-trees sum to the same value.
+            let evens: Vec<u32> = (0..pts.len() as u32).filter(|i| i % 2 == 0).collect();
+            let odds: Vec<u32> = (0..pts.len() as u32).filter(|i| i % 2 == 1).collect();
+            let a = KdTree::build_from_ids(&pts, evens);
+            let b = KdTree::build_from_ids(&pts, odds);
+            let split = a.range_weight_sum(q, r_sq, &weight, &mut NoStats)
+                + b.range_weight_sum(q, r_sq, &weight, &mut NoStats);
+            assert_eq!(split, want, "partitioned query {i}");
         }
     }
 

@@ -9,9 +9,9 @@ use anyhow::{bail, Context, Result};
 use parcluster::bench::{fmt_secs, Table};
 use parcluster::cli::{Args, USAGE};
 use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
-use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig, PointsPayload};
+use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
 use parcluster::datasets::{self, io};
-use parcluster::dpc::{decision, ClusterSession, DepAlgo, DpcParams};
+use parcluster::dpc::{decision, ClusterSession, DensityModel, DepAlgo, DpcParams};
 use parcluster::geom::{Dtype, DynPoints, PointSet};
 
 fn main() {
@@ -124,6 +124,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // Default to the input's stored precision (f64 for datasets/CSV; an
     // f32 binary file stays f32 unless --dtype says otherwise).
     params.dtype = args.get_parse::<Dtype>("dtype")?.unwrap_or(pts.dtype());
+    params.density = args.get_parse::<DensityModel>("density")?.unwrap_or(params.density);
     let mut cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() }.with_env_overrides()?;
     if let Some(b) = args.get("backend") {
         cfg.backend = parse_backend(b)?;
@@ -139,11 +140,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // `cast` refcount-shares when the input is already at that precision
     // (an f32 file stays one buffer end to end) and rounds otherwise (use
     // integer-coordinate data for bit-exact f32/f64 parity — see
-    // DESIGN.md §2b).
-    let payload = match pts.cast(params.dtype) {
-        DynPoints::F64(p) => PointsPayload::F64(Arc::new(p)),
-        DynPoints::F32(p) => PointsPayload::F32(Arc::new(p)),
-    };
+    // DESIGN.md §2b). The cast result is already the job payload type.
+    let payload = pts.cast(params.dtype);
     let coord = Coordinator::start(cfg)?;
     let out = coord
         .run_sync(ClusterJob::new_points(payload, params).tag(&tag))
@@ -152,6 +150,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("dataset    : {tag}");
     println!("backend    : {}", out.backend_used.name());
     println!("dtype      : {}", params.dtype);
+    println!("density    : {}", params.density);
     println!("points     : {}", r.labels.len());
     println!("clusters   : {}", r.num_clusters);
     println!("noise      : {}", r.num_noise);
@@ -213,6 +212,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     params.d_cut = args.get_or("d-cut", params.d_cut)?;
     params.rho_min = args.get_or("rho-min", params.rho_min)?;
     params.delta_min = args.get_or("delta-min", params.delta_min)?;
+    params.density = args.get_parse::<DensityModel>("density")?.unwrap_or(params.density);
     let batches = args.get_or("batches", 10usize)?.max(1);
     let verify = args.switch("verify");
     args.reject_unknown()?;
@@ -222,10 +222,10 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let d = pts.dim();
     let n = pts.len();
     let per = n.div_ceil(batches);
-    let sid = coord.open_stream(d, params.d_cut)?;
+    let sid = coord.open_stream_with_model(d, params.d_cut, params.density)?;
     println!(
-        "stream {sid}: {tag} (n={n}, d={d}) in {batches} batches, d_cut={}, rho_min={}, delta_min={}",
-        params.d_cut, params.rho_min, params.delta_min
+        "stream {sid}: {tag} (n={n}, d={d}) in {batches} batches, d_cut={}, rho_min={}, delta_min={}, density={}",
+        params.d_cut, params.rho_min, params.delta_min, params.density
     );
     let mut table =
         Table::new(&["batch", "points", "total", "ingest+cut", "clusters", "noise", if verify { "exact" } else { "-" }]);
@@ -293,7 +293,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`",
+        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`",
         coord.config().workers,
         coord.has_xla()
     );
@@ -440,8 +440,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     eprintln!("unknown dataset {:?}", parts[0]);
                     continue;
                 };
-                let mut job =
-                    ClusterJob::new(Arc::new(ds.pts), DpcParams { d_cut, rho_min, delta_min, ..DpcParams::default() }).tag(parts[0]);
+                let density = match parts.get(6).map(|m| m.parse::<DensityModel>()) {
+                    None => DensityModel::CutoffCount,
+                    Some(Ok(m)) => m,
+                    Some(Err(e)) => {
+                        eprintln!("skipping job line: {e}");
+                        continue;
+                    }
+                };
+                let mut job = ClusterJob::new(
+                    Arc::new(ds.pts),
+                    DpcParams { d_cut, rho_min, delta_min, density, ..DpcParams::default() },
+                )
+                .tag(parts[0]);
                 if let Some(a) = parts.get(5) {
                     match parse_dep_algo(a) {
                         Ok(algo) => job = job.dep_algo(algo),

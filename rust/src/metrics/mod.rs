@@ -105,6 +105,70 @@ mod tests {
         assert!(nmi > 0.0 && nmi < 1.0, "nmi={nmi}");
     }
 
+    /// ARI against a fully hand-computed contingency table.
+    ///
+    /// a = [0,0,0,1,1,1], b = [0,0,1,1,1,1]:
+    /// joint counts (0,0)=2, (0,1)=1, (1,1)=3 ⇒ Σᵢⱼ C(nᵢⱼ,2) = 1+0+3 = 4;
+    /// row sums 3,3 ⇒ Σᵢ C(3,2) = 6; col sums 2,4 ⇒ Σⱼ = 1+6 = 7;
+    /// expected = 6·7/C(6,2) = 42/15 = 2.8; max = (6+7)/2 = 6.5;
+    /// ARI = (4 − 2.8)/(6.5 − 2.8) = 1.2/3.7.
+    #[test]
+    fn ari_matches_hand_computed_value() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.2 / 3.7).abs() < 1e-12);
+    }
+
+    /// The canonical worst case: a perfect 2×2 "checkerboard" has every
+    /// joint cell = 1, so Σᵢⱼ C(1,2) = 0, expected = 2·2/6 = 2/3, max = 2,
+    /// ARI = (0 − 2/3)/(2 − 2/3) = −1/2 — and MI is exactly 0 (pxy = px·py
+    /// everywhere), so NMI = 0.
+    #[test]
+    fn checkerboard_partitions_hand_computed() {
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 1, 0, 1];
+        assert!((adjusted_rand_index(&a, &b) + 0.5).abs() < 1e-12);
+        assert!(normalized_mutual_info(&a, &b).abs() < 1e-12);
+    }
+
+    /// NMI against hand-computed entropies: a = [0,0,1,1] vs
+    /// b = [0,0,0,1]. H(a) = ln 2; H(b) = −(¾ ln ¾ + ¼ ln ¼);
+    /// MI = ½ ln(½ / (½·¾)) + ¼ ln(¼ / (½·¾)) + ¼ ln(¼ / (½·¼)).
+    #[test]
+    fn nmi_matches_hand_computed_value() {
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 0, 0, 1];
+        let ha = 2.0f64.ln();
+        let hb = -(0.75f64 * 0.75f64.ln() + 0.25 * 0.25f64.ln());
+        let mi = 0.5 * (0.5f64 / (0.5 * 0.75)).ln()
+            + 0.25 * (0.25f64 / (0.5 * 0.75)).ln()
+            + 0.25 * (0.25f64 / (0.5 * 0.25)).ln();
+        let want = mi / (0.5 * (ha + hb));
+        assert!((normalized_mutual_info(&a, &b) - want).abs() < 1e-12);
+    }
+
+    /// One partition lumping everything is independent of any other: MI = 0
+    /// (NMI 0), and ARI's expected index equals the achieved index (ARI 0).
+    #[test]
+    fn trivial_vs_split_partition_scores_zero() {
+        let a = vec![0, 0, 1, 1];
+        let b = vec![7, 7, 7, 7];
+        assert!(adjusted_rand_index(&a, &b).abs() < 1e-12);
+        assert!(normalized_mutual_info(&a, &b).abs() < 1e-12);
+    }
+
+    /// Noise (−1) is a label like any other: relabeling it preserves 1.0,
+    /// and moving one point out of noise costs agreement.
+    #[test]
+    fn noise_labels_participate_as_a_cluster() {
+        let a = vec![-1, -1, 0, 0, 1];
+        let b = vec![5, 5, 9, 9, 3];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((normalized_mutual_info(&a, &b) - 1.0).abs() < 1e-12);
+        let c = vec![-1, 0, 0, 0, 1];
+        assert!(adjusted_rand_index(&a, &c) < 1.0);
+    }
+
     #[test]
     fn single_cluster_degenerate_cases() {
         let a = vec![0; 10];

@@ -6,6 +6,7 @@
 //! Used by the invariant suites in `rust/tests/` (see DESIGN.md §6 for the
 //! invariant list).
 
+use crate::dpc::{DensityModel, DpcParams};
 use crate::geom::PointSet;
 use crate::prng::SplitMix64;
 
@@ -62,31 +63,30 @@ pub fn gen_size(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
     lo + rng.next_below((hi - lo + 1) as u64) as usize
 }
 
-/// Uniform points in `[0, extent)^d`.
+/// Uniform points in `[0, extent)^d` (filled straight into the store's
+/// shared allocation — no `Vec → Arc` copy).
 pub fn gen_uniform_points(rng: &mut SplitMix64, n: usize, d: usize, extent: f64) -> PointSet {
-    let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(0.0, extent)).collect();
-    PointSet::new(coords, d)
+    PointSet::from_flat_fn(n, d, |_| rng.uniform(0.0, extent))
 }
 
 /// Points on an integer grid in `[0, side)^d` — distances are exactly
 /// representable, which removes floating-point boundary ambiguity when
 /// comparing two different distance formulas (e.g. Rust engine vs XLA).
 pub fn gen_grid_points(rng: &mut SplitMix64, n: usize, d: usize, side: u64) -> PointSet {
-    let coords: Vec<f64> = (0..n * d).map(|_| rng.next_below(side) as f64).collect();
-    PointSet::new(coords, d)
+    PointSet::from_flat_fn(n, d, |_| rng.next_below(side) as f64)
 }
 
 /// Clustered points: `k` Gaussian blobs with uniform centers.
 pub fn gen_clustered_points(rng: &mut SplitMix64, n: usize, d: usize, k: usize, extent: f64, sigma: f64) -> PointSet {
     let centers: Vec<f64> = (0..k * d).map(|_| rng.uniform(0.0, extent)).collect();
-    let mut coords = Vec::with_capacity(n * d);
-    for _ in 0..n {
-        let c = rng.next_below(k as u64) as usize;
-        for kdim in 0..d {
-            coords.push(centers[c * d + kdim] + sigma * rng.normal());
+    let mut c = 0usize;
+    PointSet::from_flat_fn(n, d, |idx| {
+        let kdim = idx % d;
+        if kdim == 0 {
+            c = rng.next_below(k as u64) as usize;
         }
-    }
-    PointSet::new(coords, d)
+        centers[c * d + kdim] + sigma * rng.normal()
+    })
 }
 
 /// Degenerate sets that stress tie-breaking: many duplicate points plus
@@ -111,6 +111,33 @@ pub fn gen_degenerate_points(rng: &mut SplitMix64, n: usize, d: usize) -> PointS
         }
     }
     PointSet::new(coords, d)
+}
+
+/// A random density model: the three definitions are equally likely, with
+/// `k` drawn small enough (1..=8) that k-NN radii stay meaningful on
+/// property-test-sized inputs.
+pub fn gen_density_model(rng: &mut SplitMix64) -> DensityModel {
+    match rng.next_below(3) {
+        0 => DensityModel::CutoffCount,
+        1 => DensityModel::KnnRadius { k: 1 + rng.next_below(8) as u32 },
+        _ => DensityModel::GaussianKernel,
+    }
+}
+
+/// Random DPC hyper-parameters for the oracle-differential suite. ρ_min is
+/// drawn in the chosen model's own units (neighbor counts, ranks in `0..n`,
+/// or fixed-point kernel mass — see `DpcParams::density`), so noise
+/// thresholds actually bite under every model.
+pub fn gen_dpc_params(rng: &mut SplitMix64) -> DpcParams {
+    let density = gen_density_model(rng);
+    let d_cut = [1.0, 2.0, 3.0, 5.0][rng.next_below(4) as usize];
+    let rho_min = match density {
+        DensityModel::CutoffCount => rng.next_below(5) as f64,
+        DensityModel::KnnRadius { .. } => rng.next_below(12) as f64,
+        DensityModel::GaussianKernel => (rng.next_below(5) * 3000) as f64,
+    };
+    let delta_min = [0.0, 2.0, 4.0, 8.0, f64::INFINITY][rng.next_below(5) as usize];
+    DpcParams { d_cut, rho_min, delta_min, density, ..DpcParams::default() }
 }
 
 #[cfg(test)]
@@ -151,6 +178,21 @@ mod tests {
         assert_eq!(ps.len(), 60);
         let ps = gen_degenerate_points(&mut rng, 30, 2);
         assert_eq!(ps.len(), 30);
+    }
+
+    #[test]
+    fn param_generator_spans_all_models_and_stays_valid() {
+        let mut rng = SplitMix64::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let p = gen_dpc_params(&mut rng);
+            assert!(p.density.validate().is_ok());
+            assert!(p.d_cut > 0.0 && p.d_cut.is_finite());
+            assert!(!p.rho_min.is_nan() && p.rho_min.is_finite());
+            assert!(!p.delta_min.is_nan());
+            seen.insert(std::mem::discriminant(&p.density));
+        }
+        assert_eq!(seen.len(), 3, "all three models must be generated");
     }
 
     #[test]

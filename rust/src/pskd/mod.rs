@@ -18,7 +18,11 @@
 //!
 //! With γ = DPC density (ties broken by id, packed into the key — see
 //! [`crate::dpc::priority_key`]), one priority-NN query per point computes
-//! all dependent points fully in parallel (Algorithm 1).
+//! all dependent points fully in parallel (Algorithm 1). The structure is
+//! agnostic to *which* density produced γ: the pluggable density models
+//! ([`crate::dpc::DensityModel`] — cutoff count, kNN rank, fixed-point
+//! Gaussian mass) all feed integer ρ into the same key, so every model
+//! reuses this tree and its exactness argument unchanged.
 //!
 //! Layout: a subtree over `m` points occupies exactly `m` contiguous arena
 //! slots (each node consumes one point), so the parallel recursive build

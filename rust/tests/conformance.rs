@@ -13,7 +13,9 @@
 //!    f64 pipelines — one-shot and streaming — are byte-identical.
 //! 5. **Edge cases** for the session/validation layer.
 
-use parcluster::dpc::{ClusterSession, DensityAlgo, DepAlgo, Dpc, DpcParams, DpcResult, StreamingSession};
+use parcluster::dpc::{
+    ClusterSession, DensityAlgo, DensityModel, DepAlgo, Dpc, DpcParams, DpcResult, StreamingSession,
+};
 use parcluster::error::DpcError;
 use parcluster::geom::{Dtype, PointSet, PointStore};
 use parcluster::prng::SplitMix64;
@@ -145,13 +147,109 @@ fn streaming_state_matches_fresh_session_for_all_dep_algos() {
 }
 
 // ---------------------------------------------------------------------------
+// 2b. Density-model leg: cross-algorithm and streaming-vs-fresh parity per
+//     model (the tentpole's conformance contract).
+// ---------------------------------------------------------------------------
+
+/// Every DepAlgo (and the naive-vs-tree density strategies) must agree under
+/// every density model — the paper's exactness invariant generalized.
+#[test]
+fn density_models_conform_across_dep_algos_and_strategies() {
+    for family in FAMILIES {
+        let pts = gen_family(family, 21, 110);
+        for model in DensityModel::REPRESENTATIVE {
+            let params = DpcParams {
+                d_cut: family_d_cut(family),
+                rho_min: if model == DensityModel::GaussianKernel { 8000.0 } else { 2.0 },
+                delta_min: 6.0,
+                density: model,
+                ..DpcParams::default()
+            };
+            let reference = Dpc::new(params)
+                .dep_algo(DepAlgo::Naive)
+                .density_algo(DensityAlgo::Naive)
+                .run(&pts)
+                .unwrap();
+            for dep_algo in DepAlgo::ALL {
+                let out = Dpc::new(params).dep_algo(dep_algo).run(&pts).unwrap();
+                assert_identical(&out, &reference, &format!("{family} {model} {dep_algo:?}"));
+            }
+        }
+    }
+}
+
+/// Streaming-vs-fresh parity per batch for each density model: the repair
+/// path (cutoff, Gaussian) and the recompute path (kNN) both land on the
+/// fresh session's bytes.
+#[test]
+fn streaming_matches_fresh_for_every_density_model() {
+    for family in FAMILIES {
+        let pts = gen_family(family, 78, 120);
+        let d = pts.dim();
+        let d_cut = family_d_cut(family);
+        for model in DensityModel::REPRESENTATIVE {
+            let mut stream = StreamingSession::<f64>::new_with_model(d, d_cut, model).unwrap();
+            let mut sent = 0usize;
+            for bsz in [31usize, 1, 55, 33] {
+                let hi = (sent + bsz).min(pts.len());
+                let batch = PointSet::new(pts.coords()[sent * d..hi * d].to_vec(), d);
+                stream.ingest(&batch).unwrap();
+                sent = hi;
+                let prefix = PointSet::new(pts.coords()[..hi * d].to_vec(), d);
+                let mut fresh = ClusterSession::build(&prefix).unwrap().with_density_model(model);
+                let rho = fresh.density(d_cut).unwrap();
+                assert_eq!(stream.rho(), &rho[..], "{family} {model}: rho at {hi}");
+                let art = fresh.dependents(DepAlgo::Priority).unwrap();
+                assert_eq!(stream.dep(), &art.dep[..], "{family} {model}: dep at {hi}");
+                assert_eq!(stream.delta(), &art.delta[..], "{family} {model}: delta at {hi}");
+                let (rho_min, delta_min) =
+                    if model == DensityModel::GaussianKernel { (8000.0, 4.0) } else { (2.0, 4.0) };
+                let a = stream.cut(rho_min, delta_min).unwrap();
+                let b = fresh.cut(rho_min, delta_min).unwrap();
+                assert_identical(&a, &b, &format!("{family} {model}: cut at {hi}"));
+            }
+            assert_eq!(sent, pts.len());
+        }
+    }
+}
+
+/// f32 ≡ f64 on integer-coordinate data holds for the new models too: the
+/// kNN ranks compare exact integer squared distances and the Gaussian
+/// weights hash the (identical) widened f64 distance, so precision cannot
+/// perturb either.
+#[test]
+fn f32_and_f64_byte_identical_for_every_density_model() {
+    let (pts64, pts32) = integer_points(404, 160, 2);
+    for model in DensityModel::REPRESENTATIVE {
+        let params = DpcParams {
+            d_cut: 3.0,
+            rho_min: if model == DensityModel::GaussianKernel { 8000.0 } else { 2.0 },
+            delta_min: 4.0,
+            dtype: Dtype::F64,
+            density: model,
+        };
+        let params32 = DpcParams { dtype: Dtype::F32, ..params };
+        let a = Dpc::new(params).run(&pts64).unwrap();
+        let b = Dpc::new(params32).run(&pts32).unwrap();
+        assert_identical(&a, &b, &format!("f32 vs f64 under {model}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
 // 3. Golden snapshot
 // ---------------------------------------------------------------------------
 
 const GOLDEN_INPUT: &str = include_str!("data/golden_input.csv");
 const GOLDEN_EXPECTED: &str = include_str!("data/golden_expected.csv");
-const GOLDEN_PARAMS: DpcParams =
-    DpcParams { d_cut: 2.0, rho_min: 3.0, delta_min: 5.0, dtype: Dtype::F64 };
+// `--density cutoff` must stay bit-for-bit identical to the pre-model
+// pipeline: the golden snapshot pins the default (cutoff) model explicitly.
+const GOLDEN_PARAMS: DpcParams = DpcParams {
+    d_cut: 2.0,
+    rho_min: 3.0,
+    delta_min: 5.0,
+    dtype: Dtype::F64,
+    density: DensityModel::CutoffCount,
+};
 
 struct Golden {
     rho: Vec<u32>,
@@ -258,7 +356,7 @@ fn integer_points(seed: u64, n: usize, d: usize) -> (PointSet, PointStore<f32>) 
 fn f32_and_f64_pipelines_byte_identical_on_integer_coords() {
     for (seed, n, d) in [(401u64, 150usize, 2usize), (402, 220, 3)] {
         let (pts64, pts32) = integer_points(seed, n, d);
-        let params = DpcParams { d_cut: 3.0, rho_min: 2.0, delta_min: 4.0, dtype: Dtype::F64 };
+        let params = DpcParams { d_cut: 3.0, rho_min: 2.0, delta_min: 4.0, dtype: Dtype::F64, ..DpcParams::default() };
         let params32 = DpcParams { dtype: Dtype::F32, ..params };
         for dep_algo in DepAlgo::ALL {
             for density_algo in DensityAlgo::ALL {
