@@ -1,0 +1,178 @@
+//! Durability overhead bench: what the write-ahead journal costs on the
+//! ingest path, how fast recovery replays, and what a checkpoint buys.
+//!
+//!   cargo bench --bench journal_replay
+//!   PARBENCH_N=200000 cargo bench --bench journal_replay
+//!
+//! Three questions, one table each:
+//!
+//! 1. **Append cost** — journaling an ingest batch under each fsync
+//!    policy (1 = per-append, 64 = group commit, 0 = never). The fsync-1
+//!    row is the durability ceiling: it bounds acknowledged-command
+//!    latency, and group commit should close most of the gap to fsync-0.
+//! 2. **Replay throughput** — `recover` on a journal-only history vs the
+//!    live ingests that produced it. Replay runs the same deterministic
+//!    ingest path, so it should land near live speed (the journal adds
+//!    decode + no fsync).
+//! 3. **Checkpoint leverage** — snapshot size and write time, and the
+//!    recovery speedup of checkpoint+suffix over full replay.
+
+use parcluster::bench::{fmt_secs, time_median, Table};
+use parcluster::datasets::synthetic;
+use parcluster::dpc::{DensityModel, StreamingSession};
+use parcluster::durability::{
+    checkpoint::{self, CheckpointData, DynStreamState},
+    journal::{JournalEntry, JOURNAL_FILE},
+    recovery::recover,
+};
+use parcluster::geom::{DynPoints, PointSet};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parcluster-bench-journal-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn batches(pts: &PointSet, count: usize) -> Vec<PointSet> {
+    let (n, d) = (pts.len(), pts.dim());
+    let per = n.div_ceil(count);
+    let mut out = Vec::new();
+    let mut at = 0;
+    while at < n {
+        let hi = (at + per).min(n);
+        out.push(PointSet::new(pts.coords()[at * d..hi * d].to_vec(), d));
+        at = hi;
+    }
+    out
+}
+
+fn main() {
+    let n: usize = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50_000);
+    let trials: usize = std::env::var("PARBENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let d_cut = 30.0;
+    let pts = synthetic::simden(n, 2, 42);
+    let all = batches(&pts, 10);
+
+    // 1. Append cost per fsync policy (journal only, no compute).
+    println!("# Journal append cost on simden n={n}, 10 batches (median of {trials})");
+    let mut table = Table::new(&["fsync_every", "journal 10 batches", "per batch", "bytes"]);
+    for fsync_every in [1u64, 64, 0] {
+        let dir = tmpdir(&format!("append-{fsync_every}"));
+        let mut bytes = 0u64;
+        let secs = time_median(trials, || {
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut rec = recover(&dir, fsync_every).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: parcluster::geom::Dtype::F64,
+                    d_cut,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            for b in &all {
+                rec.writer
+                    .append(&JournalEntry::Ingest {
+                        stream: 1,
+                        rho_min: 0.0,
+                        delta_min: f64::INFINITY,
+                        batch: DynPoints::F64(b.clone()),
+                    })
+                    .unwrap();
+            }
+            rec.writer.sync().unwrap();
+            bytes = rec.writer.len();
+        });
+        table.row(vec![
+            fsync_every.to_string(),
+            fmt_secs(secs),
+            fmt_secs(secs / all.len() as f64),
+            bytes.to_string(),
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    table.print();
+
+    // 2. Live ingest vs recovery replay of the same history.
+    println!("\n# Ingest vs replay on simden n={n} (median of {trials})");
+    let live_s = time_median(trials, || {
+        let mut s = StreamingSession::<f64>::new(2, d_cut).unwrap();
+        for b in &all {
+            s.ingest(b).unwrap();
+        }
+        std::hint::black_box(s.len());
+    });
+    let dir = tmpdir("replay");
+    {
+        let mut rec = recover(&dir, 0).unwrap();
+        rec.writer
+            .append(&JournalEntry::OpenStream {
+                stream: 1,
+                dim: 2,
+                dtype: parcluster::geom::Dtype::F64,
+                d_cut,
+                density: DensityModel::CutoffCount,
+            })
+            .unwrap();
+        for b in &all {
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 1,
+                    rho_min: 0.0,
+                    delta_min: f64::INFINITY,
+                    batch: DynPoints::F64(b.clone()),
+                })
+                .unwrap();
+        }
+        rec.writer.sync().unwrap();
+    }
+    let replay_s = time_median(trials, || {
+        let rec = recover(&dir, 0).unwrap();
+        std::hint::black_box(rec.streams.len());
+    });
+    let mut table = Table::new(&["path", "time", "points/s"]);
+    table.row(vec!["live ingest".into(), fmt_secs(live_s), format!("{:.0}", n as f64 / live_s)]);
+    table.row(vec!["full replay".into(), fmt_secs(replay_s), format!("{:.0}", n as f64 / replay_s)]);
+
+    // 3. Checkpoint: write cost, size, and the recovery it buys.
+    {
+        let mut rec = recover(&dir, 0).unwrap();
+        let (_, stream) = rec.streams.pop().expect("stream recovered");
+        let state = match stream {
+            parcluster::durability::DynStream::F64(s) => DynStreamState::F64(s.export_state()),
+            parcluster::durability::DynStream::F32(s) => DynStreamState::F32(s.export_state()),
+        };
+        let data = CheckpointData { streams: vec![(1, state)], sessions: Vec::new() };
+        let ckpt_s = time_median(trials, || {
+            // Rewrites the checkpoint file each trial; the manifest flip
+            // keeps exactly one live.
+            std::hint::black_box(checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap());
+        });
+        let m = checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap();
+        let size = std::fs::metadata(dir.join(format!("checkpoint-{}.pclc", m.checkpoint_seq)))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        table.row(vec!["checkpoint write".into(), fmt_secs(ckpt_s), format!("{size} bytes")]);
+    }
+    let ckpt_replay_s = time_median(trials, || {
+        let rec = recover(&dir, 0).unwrap();
+        assert!(rec.report.checkpoint_seq > 0);
+        std::hint::black_box(rec.streams.len());
+    });
+    table.row(vec![
+        "checkpoint restore".into(),
+        fmt_secs(ckpt_replay_s),
+        format!("{:.0}", n as f64 / ckpt_replay_s),
+    ]);
+    table.print();
+
+    let jlen = std::fs::metadata(dir.join(JOURNAL_FILE)).map(|m| m.len()).unwrap_or(0);
+    println!("\njournal size: {jlen} bytes for {n} points in {} batches", all.len());
+    println!(
+        "checkpoint restore vs full replay: {:.1}x",
+        replay_s / ckpt_replay_s.max(1e-9)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -123,7 +123,8 @@ COMMANDS:
              ingest the input in K batches through a streaming session,
              reporting per-batch latency (--verify re-checks exactness
              against a from-scratch run after every batch)
-  serve      [--config FILE] [--workers N]    read jobs from stdin, one per line:
+  serve      [--config FILE] [--workers N] [--durable DIR] [--fsync-every N]
+             read jobs from stdin, one per line:
              `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`  full pipeline job
              `open <dataset> <n> <d_cut>`                          open a cached session
              `recut <session> <rho_min> <delta_min>`               linkage-only re-cut
@@ -131,15 +132,23 @@ COMMANDS:
              `stream <dim> <d_cut>`                                open a streaming session
              `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`  batch + cut
              `closestream <stream>`                                drop a streaming session
+             `checkpoint`                                          snapshot durable state now
+             (--durable write-ahead-journals every command into DIR and
+             restores streams/sessions from DIR on startup; --fsync-every
+             sets group commit: 1 = every append (default), N = every N, 0 = never)
+  journal    inspect --dir DIR    print the manifest, checkpoints, and every
+             journal frame (offset, LSN, kind) of a durable directory, plus
+             whether the tail is clean or torn — read-only
   help
 
 Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick
 Backends  (--backend): auto | tree | xla
 Dtypes    (--dtype):   f32 | f64 (default: the input's stored dtype — f64 for
                        datasets/CSV; the xla backend serves f64 jobs only)
-Densities (--density): cutoff (the paper's count-within-d_cut, default)
+Densities (--density): cutoff (alias tophat; the paper's count-within-d_cut, default)
                      | knn:<k> (rank of the k-th-NN distance, e.g. knn:8)
                      | gauss (fixed-point Gaussian kernel truncated at d_cut)
+                     | epan (fixed-point Epanechnikov kernel, 1 - (d/d_cut)^2)
                        (the xla backend serves cutoff jobs only)
 ";
 

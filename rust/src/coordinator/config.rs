@@ -11,6 +11,8 @@
 //! xla_threshold = 4096
 //! artifacts_dir = artifacts
 //! workers = 2
+//! durable_dir = /var/lib/dpc    # enable the write-ahead journal
+//! fsync_every = 1               # 1 = every append, N = group commit, 0 = never
 //! ```
 
 use std::collections::HashMap;
@@ -36,6 +38,13 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
     /// Coordinator worker threads (job-level concurrency).
     pub workers: usize,
+    /// Durable-serve directory: when set, every state-changing command is
+    /// write-ahead-journaled there and `checkpoint` snapshots live state
+    /// (see `durability`). `None` = in-memory serve (the default).
+    pub durable_dir: Option<PathBuf>,
+    /// Journal fsync policy: 1 = fsync every append (default), N = group
+    /// commit every N appends, 0 = never (the OS flushes).
+    pub fsync_every: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,6 +56,8 @@ impl Default for CoordinatorConfig {
             xla_threshold: 2048,
             artifacts_dir: crate::runtime::artifacts_dir(),
             workers: 1,
+            durable_dir: None,
+            fsync_every: 1,
         }
     }
 }
@@ -83,6 +94,8 @@ impl CoordinatorConfig {
                 "xla_threshold" => cfg.xla_threshold = v.parse().context("xla_threshold")?,
                 "artifacts_dir" => cfg.artifacts_dir = PathBuf::from(v),
                 "workers" => cfg.workers = v.parse::<usize>().context("workers")?.max(1),
+                "durable_dir" => cfg.durable_dir = Some(PathBuf::from(v)),
+                "fsync_every" => cfg.fsync_every = v.parse().context("fsync_every")?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -106,6 +119,12 @@ impl CoordinatorConfig {
         }
         if let Ok(v) = std::env::var("PARCLUSTER_XLA_THRESHOLD") {
             self.xla_threshold = v.parse().context("PARCLUSTER_XLA_THRESHOLD")?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_DURABLE_DIR") {
+            self.durable_dir = Some(PathBuf::from(v));
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_FSYNC_EVERY") {
+            self.fsync_every = v.parse().context("PARCLUSTER_FSYNC_EVERY")?;
         }
         Ok(self)
     }
@@ -136,7 +155,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let cfg = CoordinatorConfig::parse(
-            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\n",
+            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\ndurable_dir = /tmp/dpc-wal\nfsync_every = 16\n",
         )
         .unwrap();
         assert_eq!(cfg.threads, 4);
@@ -144,6 +163,16 @@ mod tests {
         assert_eq!(cfg.dep_algo, DepAlgo::Fenwick);
         assert_eq!(cfg.xla_threshold, 999);
         assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.durable_dir, Some(PathBuf::from("/tmp/dpc-wal")));
+        assert_eq!(cfg.fsync_every, 16);
+    }
+
+    #[test]
+    fn durability_defaults_off_and_synchronous() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.durable_dir, None);
+        assert_eq!(cfg.fsync_every, 1, "default policy is fsync-per-append");
+        assert!(CoordinatorConfig::parse("fsync_every = banana\n").is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! batch first); different streams proceed in parallel across workers.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -29,6 +30,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::dpc::{dep, linkage, session, stream::StreamingSession, DensityModel, DpcParams, DpcResult, StepTimings};
+use crate::durability::{
+    checkpoint::{self, CheckpointData, DynStreamState, SessionState},
+    journal::JournalEntry,
+    recovery, DynStream, JournalWriter, Manifest,
+};
 use crate::error::DpcError;
 use crate::geom::{DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::XlaService;
@@ -107,6 +113,17 @@ struct Shared {
     streams: Mutex<HashMap<SessionId, Arc<StreamEntry>>>,
 }
 
+/// The write-ahead half of `--durable` serve mode. Lock ordering: the
+/// journal lock is the OUTERMOST state lock — taken before any ticket,
+/// stream-map, or session-map lock and never after them — so journal
+/// order always equals ticket/application order, and
+/// [`Coordinator::checkpoint_now`] can freeze the command stream by
+/// holding it alone.
+struct DurableLog {
+    dir: PathBuf,
+    journal: Mutex<JournalWriter>,
+}
+
 /// The clustering service. Create with [`Coordinator::start`], submit jobs,
 /// `wait` for results, and `shutdown` (also done on drop).
 pub struct Coordinator {
@@ -116,6 +133,7 @@ pub struct Coordinator {
     workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
     next_session_id: AtomicU64,
+    durable: Option<DurableLog>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -139,14 +157,79 @@ impl Coordinator {
             None
         };
         let router = Arc::new(Router::new(xla, cfg.xla_threshold));
+
+        // Durable serve: recover (or initialize) the journal + checkpoint
+        // directory and seed the session/stream maps with the restored
+        // state before any worker can observe them.
+        let mut sessions: HashMap<SessionId, Arc<SessionEntry>> = HashMap::new();
+        let mut streams: HashMap<SessionId, Arc<StreamEntry>> = HashMap::new();
+        let mut first_session_id = 1u64;
+        let durable = match &cfg.durable_dir {
+            None => None,
+            Some(dir) => {
+                let rec = recovery::recover(dir, cfg.fsync_every)?;
+                if rec.report.replayed > 0 || rec.report.torn_bytes > 0 || rec.report.checkpoint_seq > 0 {
+                    eprintln!(
+                        "durable recovery: checkpoint {} + {} journal entries replayed ({} skipped), {} torn bytes truncated",
+                        rec.report.checkpoint_seq, rec.report.replayed, rec.report.skipped, rec.report.torn_bytes
+                    );
+                }
+                for (id, ds) in rec.streams {
+                    match ds {
+                        DynStream::F64(s) => {
+                            streams.insert(
+                                id,
+                                Arc::new(StreamEntry {
+                                    d_cut: s.d_cut(),
+                                    density: s.density_model(),
+                                    session: Mutex::new(s),
+                                    tickets: Mutex::new(TicketState::default()),
+                                    turn: Condvar::new(),
+                                }),
+                            );
+                        }
+                        // The coordinator's serve surface is f64-only; an
+                        // f32 stream can only come from an out-of-band
+                        // journal and is surfaced, not silently dropped.
+                        DynStream::F32(_) => {
+                            eprintln!("warning: skipping recovered f32 stream {id} (serve surface is f64)")
+                        }
+                    }
+                }
+                for s in rec.sessions {
+                    sessions.insert(
+                        s.id,
+                        Arc::new(SessionEntry {
+                            pts: Arc::new(s.pts),
+                            d_cut: s.d_cut,
+                            density: s.density,
+                            rho: s.rho,
+                            dep: s.dep,
+                            delta: s.delta,
+                            built_by: match s.built_by.as_str() {
+                                "tree" => "tree",
+                                "xla" => "xla",
+                                "replay" => "replay",
+                                _ => "recovered",
+                            },
+                            density_s: s.density_secs,
+                            dep_s: s.dep_secs,
+                        }),
+                    );
+                }
+                first_session_id = rec.next_session_id;
+                Some(DurableLog { dir: dir.clone(), journal: Mutex::new(rec.writer) })
+            }
+        };
+
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             status: Mutex::new(HashMap::new()),
             status_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            sessions: Mutex::new(HashMap::new()),
-            streams: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(sessions),
+            streams: Mutex::new(streams),
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers)
@@ -167,7 +250,8 @@ impl Coordinator {
             shared,
             workers,
             next_id: AtomicU64::new(1),
-            next_session_id: AtomicU64::new(1),
+            next_session_id: AtomicU64::new(first_session_id),
+            durable,
             metrics,
         })
     }
@@ -178,6 +262,21 @@ impl Coordinator {
 
     pub fn has_xla(&self) -> bool {
         self.router.has_xla()
+    }
+
+    /// Whether this coordinator write-ahead-journals its commands.
+    pub fn is_durable(&self) -> bool {
+        self.durable.is_some()
+    }
+
+    /// Append to the write-ahead journal (no-op when not durable). Called
+    /// BEFORE the in-memory state change is published, so a command is
+    /// never acknowledged without a durable record.
+    fn journal_append(&self, entry: &JournalEntry) -> Result<(), DpcError> {
+        if let Some(d) = &self.durable {
+            d.journal.lock().unwrap().append(entry)?;
+        }
+        Ok(())
     }
 
     /// Submit a job; returns immediately.
@@ -237,6 +336,9 @@ impl Coordinator {
             dep_s,
         });
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
+        // WAL before publish: replay recomputes the same artifacts from
+        // the logged inputs (the pipeline is deterministic).
+        self.journal_append(&JournalEntry::OpenSession { session: id, d_cut, density, pts: payload })?;
         self.shared.sessions.lock().unwrap().insert(id, entry);
         self.metrics.inc("sessions_opened");
         Ok(id)
@@ -253,6 +355,9 @@ impl Coordinator {
         let entry = self.session(id).ok_or(DpcError::UnknownSession(id))?;
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
+        // Audit-only entry: replay rebuilds the same cached artifacts from
+        // the session's OpenSession record, so a recut has nothing to redo.
+        self.journal_append(&JournalEntry::Recut { session: id, rho_min, delta_min })?;
         let job = ClusterJob::recut(id, params).tag(format!("recut:{id}"));
         self.metrics.inc("recuts_submitted");
         Ok(self.submit(job))
@@ -261,7 +366,23 @@ impl Coordinator {
     /// Drop a session's cached artifacts. Returns whether it existed;
     /// re-cuts already dequeued keep their `Arc` and complete.
     pub fn close_session(&self, id: SessionId) -> bool {
-        self.shared.sessions.lock().unwrap().remove(&id).is_some()
+        // Journal lock (outermost) before the map lock; the entry is
+        // logged only for a session that actually existed.
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
+        let mut sessions = self.shared.sessions.lock().unwrap();
+        if !sessions.contains_key(&id) {
+            return false;
+        }
+        if let Some(j) = journal.as_deref_mut() {
+            if let Err(e) = j.append(&JournalEntry::CloseSession { session: id }) {
+                // Degrade durability, not availability: the close applies
+                // in memory; a crash before the next checkpoint resurrects
+                // the session, which a client can simply re-close.
+                eprintln!("warning: journaling close-session {id} failed: {e}");
+            }
+        }
+        sessions.remove(&id);
+        true
     }
 
     /// Open a streaming session at a fixed radius under the cutoff-count
@@ -282,6 +403,13 @@ impl Coordinator {
     ) -> Result<SessionId, DpcError> {
         let s = StreamingSession::<f64>::new_with_model(dim, d_cut, density)?;
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
+        self.journal_append(&JournalEntry::OpenStream {
+            stream: id,
+            dim: dim as u32,
+            dtype: crate::geom::Dtype::F64,
+            d_cut,
+            density,
+        })?;
         self.shared.streams.lock().unwrap().insert(
             id,
             Arc::new(StreamEntry {
@@ -321,6 +449,19 @@ impl Coordinator {
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
+        // WAL first, and hold the journal lock (outermost) across ticket
+        // issuance and the queue push: journal order == ticket order ==
+        // application order for every stream, which is exactly what replay
+        // reproduces. The batch share is a refcount bump, not a copy.
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
+        if let Some(j) = journal.as_deref_mut() {
+            j.append(&JournalEntry::Ingest {
+                stream: id,
+                rho_min,
+                delta_min,
+                batch: DynPoints::F64((*batch).clone()),
+            })?;
+        }
         // Issue the ticket and enqueue under the ticket lock, so ticket
         // order always equals queue order for this stream.
         let mut tickets = entry.tickets.lock().unwrap();
@@ -330,6 +471,7 @@ impl Coordinator {
         self.metrics.inc("ingests_submitted");
         let job_id = self.submit(job);
         drop(tickets);
+        drop(journal);
         Ok(job_id)
     }
 
@@ -340,9 +482,16 @@ impl Coordinator {
     /// a job stranded behind such a failed predecessor bails out instead of
     /// deadlocking the worker pool.
     pub fn close_stream(&self, id: SessionId) -> bool {
+        // Journal lock (outermost) before the map and ticket locks.
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
         let removed = self.shared.streams.lock().unwrap().remove(&id);
         match removed {
             Some(entry) => {
+                if let Some(j) = journal.as_deref_mut() {
+                    if let Err(e) = j.append(&JournalEntry::CloseStream { stream: id }) {
+                        eprintln!("warning: journaling close-stream {id} failed: {e}");
+                    }
+                }
                 let mut tickets = entry.tickets.lock().unwrap();
                 tickets.closed = true;
                 entry.turn.notify_all();
@@ -351,6 +500,56 @@ impl Coordinator {
             }
             None => false,
         }
+    }
+
+    /// Take a checkpoint NOW: freeze the command stream (journal lock),
+    /// wait for every issued ingest ticket to apply, export all stream and
+    /// session state, and atomically flip the manifest to the new
+    /// snapshot. Returns the new manifest. Requires `--durable`.
+    ///
+    /// Quiescing terminates because the journal lock blocks new ticket
+    /// issuance while workers (which never take the journal lock) drain
+    /// the already-queued ingests.
+    pub fn checkpoint_now(&self) -> Result<Manifest, DpcError> {
+        let Some(d) = &self.durable else {
+            return Err(DpcError::MissingStage { need: "durable serve (--durable)", call: "checkpoint" });
+        };
+        let mut journal = d.journal.lock().unwrap();
+        let streams: Vec<(SessionId, Arc<StreamEntry>)> =
+            self.shared.streams.lock().unwrap().iter().map(|(k, v)| (*k, Arc::clone(v))).collect();
+        let mut stream_states = Vec::with_capacity(streams.len());
+        for (sid, entry) in &streams {
+            let mut tickets = entry.tickets.lock().unwrap();
+            while tickets.applied != tickets.next {
+                tickets = entry.turn.wait(tickets).unwrap();
+            }
+            drop(tickets);
+            let state = entry.session.lock().unwrap().export_state();
+            stream_states.push((*sid, DynStreamState::F64(state)));
+        }
+        let sessions: Vec<SessionState> = self
+            .shared
+            .sessions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, e)| SessionState {
+                id: *id,
+                d_cut: e.d_cut,
+                density: e.density,
+                pts: (*e.pts).clone(),
+                rho: e.rho.clone(),
+                dep: e.dep.clone(),
+                delta: e.delta.clone(),
+                built_by: e.built_by.to_string(),
+                density_secs: e.density_s,
+                dep_secs: e.dep_s,
+            })
+            .collect();
+        let data = CheckpointData { streams: stream_states, sessions };
+        let m = checkpoint::write(&d.dir, &mut journal, &data, self.next_session_id.load(Ordering::Relaxed))?;
+        self.metrics.inc("checkpoints_taken");
+        Ok(m)
     }
 
     /// Current status (non-blocking).
@@ -891,5 +1090,82 @@ mod tests {
             coord.open_session(blob_points(), f64::NAN),
             Err(DpcError::InvalidParam { name: "d_cut", .. })
         ));
+    }
+
+    fn durable_config(tag: &str) -> (CoordinatorConfig, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("parcluster-serve-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tree_only_config();
+        cfg.durable_dir = Some(dir.clone());
+        (cfg, dir)
+    }
+
+    #[test]
+    fn checkpoint_requires_durable_mode() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert!(!coord.is_durable());
+        assert!(matches!(coord.checkpoint_now(), Err(DpcError::MissingStage { call: "checkpoint", .. })));
+    }
+
+    #[test]
+    fn durable_restart_restores_streams_and_sessions() {
+        let (cfg, dir) = durable_config("restart");
+        let pts = blob_points();
+        let d = pts.dim();
+        let (sid_stream, sid_session);
+        {
+            let coord = Coordinator::start(cfg.clone()).unwrap();
+            assert!(coord.is_durable());
+            sid_stream = coord.open_stream(d, 3.0).unwrap();
+            for (lo, hi) in [(0usize, 60usize), (60, 100)] {
+                let batch = Arc::new(PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d));
+                coord.wait(coord.submit_ingest(sid_stream, batch, 0.0, 20.0).unwrap()).unwrap();
+            }
+            sid_session = coord.open_session(Arc::clone(&pts), 3.0).unwrap();
+            // Checkpoint mid-history, then keep going: recovery must stack
+            // the snapshot with the journal suffix.
+            let m = coord.checkpoint_now().unwrap();
+            assert_eq!(m.checkpoint_seq, 1);
+            let batch = Arc::new(PointSet::new(pts.coords()[100 * d..160 * d].to_vec(), d));
+            coord.wait(coord.submit_ingest(sid_stream, batch, 0.0, 20.0).unwrap()).unwrap();
+            // Simulated crash: drop without closing anything.
+        }
+        let coord = Coordinator::start(cfg).unwrap();
+        let entry = coord.stream(sid_stream).expect("stream survives restart");
+        {
+            let s = entry.session.lock().unwrap();
+            let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() })
+                .run(&pts)
+                .unwrap();
+            assert_eq!(s.rho(), &fresh.rho[..], "recovered rho == fresh build");
+            assert_eq!(s.dep(), &fresh.dep[..], "recovered dep == fresh build");
+            assert_eq!(s.delta(), &fresh.delta[..], "recovered delta == fresh build");
+        }
+        let sess = coord.session(sid_session).expect("session survives restart");
+        assert_eq!(sess.rho.len(), pts.len());
+        // The restored server keeps serving: recut + further ingest work,
+        // and new ids never collide with recovered ones.
+        let out = coord.wait(coord.submit_recut(sid_session, 0.0, 20.0).unwrap()).unwrap();
+        assert_eq!(out.result.num_clusters, 2);
+        let new_id = coord.open_stream(d, 3.0).unwrap();
+        assert!(new_id > sid_stream.max(sid_session), "id allocator resumes past recovered ids");
+        assert!(coord.close_stream(sid_stream));
+        assert!(coord.close_session(sid_session));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn durable_close_is_durable_too() {
+        let (cfg, dir) = durable_config("close");
+        {
+            let coord = Coordinator::start(cfg.clone()).unwrap();
+            let sid = coord.open_stream(2, 3.0).unwrap();
+            let batch = Arc::new(PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2));
+            coord.wait(coord.submit_ingest(sid, batch, 0.0, 1.0).unwrap()).unwrap();
+            assert!(coord.close_stream(sid));
+        }
+        let coord = Coordinator::start(cfg).unwrap();
+        assert!(coord.shared.streams.lock().unwrap().is_empty(), "closed stream stays closed");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -23,6 +23,13 @@
 //!   property the paper's exactness (and PR 4's precision-independent
 //!   tie-break invariant) rests on. Floating-point accumulation would
 //!   surrender all three.
+//! - [`DensityModel::Epanechnikov`] — ρ(x) = Σ_{D(x,y) ≤ d_cut}
+//!   round(2¹² · (1 − D(x,y)²/d_cut²)), the parabolic (Epanechnikov)
+//!   kernel in the same fixed-point scheme. Unlike the Gaussian it needs
+//!   no `exp`, so its weights are platform-exact arithmetic end to end.
+//!   The *tophat* (uniform) kernel needs no variant of its own: a constant
+//!   in-ball weight is the cutoff count up to scale, so `"tophat"` parses
+//!   as an alias of [`DensityModel::CutoffCount`].
 //!
 //! ## Exactness per model
 //!
@@ -69,13 +76,23 @@ pub enum DensityModel {
     /// ρ(x) = Σ over the `d_cut` ball of fixed-point Gaussian weights
     /// ([`gaussian_weight`]), saturating at `u32::MAX`.
     GaussianKernel,
+    /// ρ(x) = Σ over the `d_cut` ball of fixed-point parabolic weights
+    /// ([`epanechnikov_weight`]), saturating at `u32::MAX`. A boundary
+    /// pair (D = d_cut exactly) contributes weight 0 — harmless for
+    /// monotonicity (ρ never decreases) and for saturation (the min-chain
+    /// still composes).
+    Epanechnikov,
 }
 
 impl DensityModel {
     /// One representative of each model — what conformance/differential
     /// suites iterate (mirrors `DepAlgo::ALL`).
-    pub const REPRESENTATIVE: [DensityModel; 3] =
-        [DensityModel::CutoffCount, DensityModel::KnnRadius { k: 4 }, DensityModel::GaussianKernel];
+    pub const REPRESENTATIVE: [DensityModel; 4] = [
+        DensityModel::CutoffCount,
+        DensityModel::KnnRadius { k: 4 },
+        DensityModel::GaussianKernel,
+        DensityModel::Epanechnikov,
+    ];
 
     /// Is ρ a commutative per-pair sum that can only grow when points are
     /// inserted? Decides whether the streaming session may repair (ρ, λ, δ)
@@ -103,6 +120,7 @@ impl fmt::Display for DensityModel {
             DensityModel::CutoffCount => f.write_str("cutoff"),
             DensityModel::KnnRadius { k } => write!(f, "knn:{k}"),
             DensityModel::GaussianKernel => f.write_str("gauss"),
+            DensityModel::Epanechnikov => f.write_str("epan"),
         }
     }
 }
@@ -112,12 +130,17 @@ impl std::str::FromStr for DensityModel {
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
-            "cutoff" | "cutoff-count" => Ok(DensityModel::CutoffCount),
+            // "tophat" is the uniform in-ball kernel — the cutoff count up
+            // to a constant scale, so it shares the variant.
+            "cutoff" | "cutoff-count" | "tophat" => Ok(DensityModel::CutoffCount),
             "gauss" | "gaussian" => Ok(DensityModel::GaussianKernel),
+            "epan" | "epanechnikov" => Ok(DensityModel::Epanechnikov),
             other => match other.strip_prefix("knn:").map(str::parse::<u32>) {
                 Some(Ok(k)) if k >= 1 => Ok(DensityModel::KnnRadius { k }),
                 Some(_) => Err(format!("bad k in density model {other:?} (want knn:<k>, k >= 1)")),
-                None => Err(format!("unknown density model {other:?} (cutoff | knn:<k> | gauss)")),
+                None => {
+                    Err(format!("unknown density model {other:?} (cutoff | knn:<k> | gauss | epan)"))
+                }
             },
         }
     }
@@ -137,6 +160,31 @@ pub const GAUSS_SCALE: f64 = 4096.0;
 #[inline]
 pub fn gaussian_weight(dist_sq: f64, inv_d_cut_sq: f64) -> u64 {
     ((-dist_sq * inv_d_cut_sq).exp() * GAUSS_SCALE).round() as u64
+}
+
+/// The canonical quantized Epanechnikov (parabolic) weight of a pair at
+/// squared distance `dist_sq`: round(4096 · (1 − dist_sq/d_cut²)), clamped
+/// at 0. Weights live in `[0, 4096]` — zero exactly at the ball boundary.
+/// Pure arithmetic (no transcendentals), so unlike [`gaussian_weight`] it
+/// is bit-identical across platforms. Like the Gaussian, every
+/// implementation must call this one function: the model is defined by it.
+#[inline]
+pub fn epanechnikov_weight(dist_sq: f64, inv_d_cut_sq: f64) -> u64 {
+    ((1.0 - dist_sq * inv_d_cut_sq).max(0.0) * GAUSS_SCALE).round() as u64
+}
+
+/// The fixed-point pair weight of a pairwise-additive model: 1 for the
+/// cutoff count, the kernel weight for Gaussian/Epanechnikov. The one
+/// dispatch point the streaming repair and the weighted tree scans share
+/// (kNN has no per-pair weights and must not reach here).
+#[inline]
+pub fn pair_weight(model: DensityModel, dist_sq: f64, inv_d_cut_sq: f64) -> u64 {
+    match model {
+        DensityModel::CutoffCount => 1,
+        DensityModel::GaussianKernel => gaussian_weight(dist_sq, inv_d_cut_sq),
+        DensityModel::Epanechnikov => epanechnikov_weight(dist_sq, inv_d_cut_sq),
+        DensityModel::KnnRadius { .. } => unreachable!("knn density has no per-pair weight"),
+    }
 }
 
 /// Saturate a fixed-point weight sum into the pipeline's `u32` ρ slot.
@@ -187,10 +235,10 @@ pub(crate) fn tree_model_density<S: Scalar>(
             });
             knn_rank_densities(&dk)
         }
-        DensityModel::GaussianKernel => {
+        DensityModel::GaussianKernel | DensityModel::Epanechnikov => {
             let r_sq: S = radius_sq(d_cut);
             let inv = 1.0 / (d_cut * d_cut);
-            let weight = |ds: S| gaussian_weight(ds.to_f64(), inv);
+            let weight = |ds: S| pair_weight(model, ds.to_f64(), inv);
             parlay::par_map_grained(pts.len(), QUERY_GRAIN, |i| {
                 saturate_rho(tree.range_weight_sum(pts.point(i), r_sq, &weight, &mut NoStats))
             })
@@ -219,7 +267,7 @@ fn naive_model_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: Densit
             });
             knn_rank_densities(&dk)
         }
-        DensityModel::GaussianKernel => {
+        DensityModel::GaussianKernel | DensityModel::Epanechnikov => {
             let r_sq: S = radius_sq(d_cut);
             let inv = 1.0 / (d_cut * d_cut);
             parlay::par_map_grained(n, QUERY_GRAIN, |i| {
@@ -228,7 +276,7 @@ fn naive_model_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: Densit
                 for j in 0..n {
                     let ds = pts.dist_sq_to(j, q);
                     if ds <= r_sq {
-                        sum += gaussian_weight(ds.to_f64(), inv);
+                        sum += pair_weight(model, ds.to_f64(), inv);
                     }
                 }
                 saturate_rho(sum)
@@ -271,13 +319,18 @@ mod tests {
             ("cutoff", DensityModel::CutoffCount),
             ("knn:3", DensityModel::KnnRadius { k: 3 }),
             ("gauss", DensityModel::GaussianKernel),
+            ("epan", DensityModel::Epanechnikov),
         ] {
             assert_eq!(s.parse::<DensityModel>().unwrap(), m);
             assert_eq!(m.to_string().parse::<DensityModel>().unwrap(), m);
         }
         assert_eq!("cutoff-count".parse::<DensityModel>().unwrap(), DensityModel::CutoffCount);
         assert_eq!("gaussian".parse::<DensityModel>().unwrap(), DensityModel::GaussianKernel);
-        for bad in ["knn", "knn:", "knn:0", "knn:-1", "epanechnikov"] {
+        assert_eq!("epanechnikov".parse::<DensityModel>().unwrap(), DensityModel::Epanechnikov);
+        // The uniform kernel is the cutoff count up to scale — alias, not a
+        // fourth weighting.
+        assert_eq!("tophat".parse::<DensityModel>().unwrap(), DensityModel::CutoffCount);
+        for bad in ["knn", "knn:", "knn:0", "knn:-1", "triangular"] {
             assert!(bad.parse::<DensityModel>().is_err(), "{bad}");
         }
     }
@@ -288,12 +341,14 @@ mod tests {
         assert!(DensityModel::KnnRadius { k: 1 }.validate().is_ok());
         assert!(DensityModel::CutoffCount.validate().is_ok());
         assert!(DensityModel::GaussianKernel.validate().is_ok());
+        assert!(DensityModel::Epanechnikov.validate().is_ok());
     }
 
     #[test]
     fn monotonicity_classification() {
         assert!(DensityModel::CutoffCount.monotone_under_insertion());
         assert!(DensityModel::GaussianKernel.monotone_under_insertion());
+        assert!(DensityModel::Epanechnikov.monotone_under_insertion());
         assert!(!DensityModel::KnnRadius { k: 2 }.monotone_under_insertion());
     }
 
@@ -305,6 +360,27 @@ mod tests {
         assert_eq!(at_edge, (GAUSS_SCALE / std::f64::consts::E).round() as u64);
         assert!(at_edge >= 1, "in-ball weights must stay positive (monotonicity)");
         assert!(gaussian_weight(1.0, inv) > gaussian_weight(4.0, inv));
+    }
+
+    #[test]
+    fn epanechnikov_weight_bounds_and_monotonicity() {
+        let inv = 1.0 / 9.0; // d_cut = 3
+        assert_eq!(epanechnikov_weight(0.0, inv), GAUSS_SCALE as u64);
+        // Zero exactly at the boundary (a 0 contribution never lowers ρ, so
+        // monotonicity survives), positive strictly inside.
+        assert_eq!(epanechnikov_weight(9.0, inv), 0);
+        assert!(epanechnikov_weight(8.99, inv) >= 1);
+        assert!(epanechnikov_weight(1.0, inv) > epanechnikov_weight(4.0, inv));
+        // The parabola at the half-radius point: 4096 · (1 − 1/4).
+        assert_eq!(epanechnikov_weight(9.0 / 4.0, inv), 3072);
+    }
+
+    #[test]
+    fn pair_weight_dispatches_per_model() {
+        let inv = 1.0 / 4.0;
+        assert_eq!(pair_weight(DensityModel::CutoffCount, 1.0, inv), 1);
+        assert_eq!(pair_weight(DensityModel::GaussianKernel, 1.0, inv), gaussian_weight(1.0, inv));
+        assert_eq!(pair_weight(DensityModel::Epanechnikov, 1.0, inv), epanechnikov_weight(1.0, inv));
     }
 
     #[test]
@@ -328,7 +404,9 @@ mod tests {
     fn tree_and_naive_agree_for_knn_and_gauss() {
         let mut rng = SplitMix64::new(141);
         let pts = gen_uniform_points(&mut rng, 400, 2, 40.0);
-        for model in [DensityModel::KnnRadius { k: 5 }, DensityModel::GaussianKernel] {
+        for model in
+            [DensityModel::KnnRadius { k: 5 }, DensityModel::GaussianKernel, DensityModel::Epanechnikov]
+        {
             let a = compute_density_model(&pts, 4.0, model, DensityAlgo::Naive);
             for algo in [DensityAlgo::TreePruned, DensityAlgo::TreeNoPrune, DensityAlgo::BaselineIncremental] {
                 let b = compute_density_model(&pts, 4.0, model, algo);

@@ -25,9 +25,9 @@ pub mod oracle;
 pub mod session;
 pub mod stream;
 
-pub use density::{compute_density_model, gaussian_weight, DensityModel, GAUSS_SCALE};
+pub use density::{compute_density_model, epanechnikov_weight, gaussian_weight, pair_weight, DensityModel, GAUSS_SCALE};
 pub use session::{ClusterSession, DepArtifacts, SessionStats};
-pub use stream::{StreamStats, StreamingSession};
+pub use stream::{StreamState, StreamStats, StreamingSession};
 
 use crate::error::DpcError;
 use crate::geom::{radius_sq, PointStore, Scalar};

@@ -6,16 +6,17 @@
 //! all-pairs scans, no trees, no parallelism, no caches. Where the pipeline
 //! sorts/ranks/prunes, the oracle counts; where the pipeline unions in
 //! parallel, the oracle follows dependency chains one hop at a time. The
-//! only shared code is [`super::gaussian_weight`] and
-//! [`crate::geom::radius_sq`] — those two functions *define* the Gaussian
-//! model and "the radius at precision S", so an oracle that reimplemented
-//! them would be testing a different specification, not the same one.
+//! only shared code is [`super::density::pair_weight`] (backed by
+//! [`super::gaussian_weight`] / [`super::density::epanechnikov_weight`]) and
+//! [`crate::geom::radius_sq`] — those functions *define* the kernel models
+//! and "the radius at precision S", so an oracle that reimplemented them
+//! would be testing a different specification, not the same one.
 //!
 //! Used only by tests and benches; nothing in the serving path calls it.
 
 use crate::geom::{radius_sq, PointStore, Scalar};
 
-use super::density::{gaussian_weight, saturate_rho};
+use super::density::{pair_weight, saturate_rho};
 use super::{priority_key, DensityModel, DpcParams, DpcResult, StepTimings};
 
 /// Brute-force Step 1 under any [`DensityModel`].
@@ -47,14 +48,14 @@ pub fn oracle_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: Density
                 .map(|i| (0..n).filter(|&j| dk[j] > dk[i]).count() as u32)
                 .collect()
         }
-        DensityModel::GaussianKernel => {
+        DensityModel::GaussianKernel | DensityModel::Epanechnikov => {
             let inv = 1.0 / (d_cut * d_cut);
             (0..n)
                 .map(|i| {
                     let sum: u64 = (0..n)
                         .map(|j| pts.dist_sq(i, j))
                         .filter(|&ds| ds <= r_sq)
-                        .map(|ds| gaussian_weight(ds.to_f64(), inv))
+                        .map(|ds| pair_weight(model, ds.to_f64(), inv))
                         .sum();
                     saturate_rho(sum)
                 })

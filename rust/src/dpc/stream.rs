@@ -61,7 +61,7 @@ use crate::geom::{radius_sq, PointStore, Scalar};
 use crate::kdtree::{KdTree, NoStats};
 use crate::parlay;
 
-use super::density::{gaussian_weight, knn_rank_densities, saturate_rho};
+use super::density::{knn_rank_densities, pair_weight, saturate_rho};
 use super::{priority_key, session, DensityModel, DpcParams, DpcResult};
 
 /// One forest level: a static kd-tree over exactly 2^k of the session's
@@ -280,7 +280,7 @@ impl<S: Scalar> StreamingSession<S> {
                 self.pts = new_pts;
                 self.reingest_knn(k as usize, old_n);
             }
-            DensityModel::CutoffCount | DensityModel::GaussianKernel => {
+            DensityModel::CutoffCount | DensityModel::GaussianKernel | DensityModel::Epanechnikov => {
                 self.repair_monotone(&new_pts, new_ids, old_n, b);
             }
         }
@@ -290,8 +290,9 @@ impl<S: Scalar> StreamingSession<S> {
     }
 
     /// Incremental repair for pairwise-additive monotone models: each new
-    /// pair contributes a fixed positive integer (1 for cutoff, a
-    /// fixed-point kernel weight for Gaussian) to both endpoints, so the
+    /// pair contributes a fixed non-negative integer (1 for cutoff, a
+    /// fixed-point kernel weight for Gaussian/Epanechnikov) to both
+    /// endpoints, so the
     /// batch's effect on ρ is exactly the sum of its pair contributions —
     /// and the λ/δ repair can race cached dependents against only the
     /// priority-raised set.
@@ -299,7 +300,10 @@ impl<S: Scalar> StreamingSession<S> {
         let total = old_n + b;
         let r_sq: S = radius_sq(self.d_cut);
         let inv_d_cut_sq = 1.0 / (self.d_cut * self.d_cut);
-        let gauss = self.model == DensityModel::GaussianKernel;
+        // Kernel models sum per-pair weights; the cutoff count keeps the
+        // cheaper unweighted range count (its implicit weight is 1).
+        let weighted = self.model != DensityModel::CutoffCount;
+        let model = self.model;
 
         // ---- Step-1 repair (against the PRE-merge forest) ----
         let t_rho = Instant::now();
@@ -307,14 +311,14 @@ impl<S: Scalar> StreamingSession<S> {
         let (new_rho, changed_old) = {
             let levels = &self.levels;
             let np = new_pts;
-            let weight = |ds: S| gaussian_weight(ds.to_f64(), inv_d_cut_sq);
+            let weight = |ds: S| pair_weight(model, ds.to_f64(), inv_d_cut_sq);
             // Each new point's ρ = its contribution sum over the old forest
             // plus the batch (self-inclusive via the batch tree). The
             // per-tree sums are commutative integer adds, so the partition
             // into levels cannot perturb the total.
             let new_rho: Vec<u32> = parlay::par_map_grained(b, crate::dpc::QUERY_GRAIN, |t| {
                 let q = np.point(old_n + t);
-                if gauss {
+                if weighted {
                     let mut s = batch_tree.range_weight_sum(q, r_sq, &weight, &mut NoStats);
                     for lv in levels {
                         s += lv.tree.range_weight_sum(q, r_sq, &weight, &mut NoStats);
@@ -340,7 +344,7 @@ impl<S: Scalar> StreamingSession<S> {
                     lv.tree.range_report(q, r_sq, &mut hits);
                 }
                 for &i in &hits {
-                    let w = if gauss { weight(np.dist_sq(old_n + t, i as usize)) } else { 1 };
+                    let w = if weighted { weight(np.dist_sq(old_n + t, i as usize)) } else { 1 };
                     bumped[i as usize].fetch_add(w, AtomicOrdering::Relaxed);
                 }
             });
@@ -560,6 +564,108 @@ impl<S: Scalar> StreamingSession<S> {
         out.timings.dep_s = self.stats.dep_secs;
         Ok(out)
     }
+
+    /// Snapshot everything a checkpoint needs to reconstruct this session
+    /// bit for bit: the concatenated store (a refcount bump), the artifact
+    /// arrays, and the forest's **level partition**. The partition is state,
+    /// not an implementation detail — which ids pool into which rebuilt
+    /// tree on a future merge depends on it, so restoring a different
+    /// partition would diverge from the uninterrupted session on later
+    /// ingests (results would still be exact; the byte-identity contract
+    /// with the pre-crash process would not).
+    pub fn export_state(&self) -> StreamState<S> {
+        StreamState {
+            d_cut: self.d_cut,
+            model: self.model,
+            pts: self.pts.clone(),
+            levels: self.levels.iter().map(|lv| (lv.k, lv.ids.clone())).collect(),
+            rho: self.rho.clone(),
+            dep: self.dep.clone(),
+            delta: self.delta.clone(),
+            stats: self.stats,
+        }
+    }
+
+    /// Rebuild a session from an exported state. Level kd-trees are rebuilt
+    /// from their id lists against the restored store — stores only grow
+    /// and never mutate, so the coordinates at those ids are exactly the
+    /// ones each level was originally built over, and `build_from_ids` is
+    /// deterministic: the rebuilt trees equal the checkpointed ones.
+    ///
+    /// Validates the structural invariants (array lengths, the level
+    /// partition, id ranges) and rejects violations with a typed error —
+    /// a checkpoint decoder maps that to `DpcError::CorruptCheckpoint`,
+    /// never a partially-restored session.
+    pub fn from_state(state: StreamState<S>) -> Result<Self, DpcError> {
+        let StreamState { d_cut, model, pts, mut levels, rho, dep, delta, stats } = state;
+        if pts.dim() == 0 {
+            return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
+        }
+        session::validate_d_cut(d_cut)?;
+        model.validate()?;
+        pts.validate_finite()?;
+        let n = pts.len();
+        let bad = |requirement: &'static str| DpcError::InvalidParam {
+            name: "stream_state",
+            value: n as f64,
+            requirement,
+        };
+        if rho.len() != n || dep.len() != n || delta.len() != n {
+            return Err(bad("rho/dep/delta must have one entry per point"));
+        }
+        if dep.iter().flatten().any(|&j| j as usize >= n) {
+            return Err(bad("dependent ids must be in range"));
+        }
+        // The levels must partition 0..n into blocks of 2^k matching the
+        // set bits of n (each id exactly once).
+        let mut seen = vec![false; n];
+        for (k, ids) in &levels {
+            if *k >= usize::BITS || ids.len() != 1usize << k {
+                return Err(bad("level size must be 2^k"));
+            }
+            for &id in ids {
+                if id as usize >= n || std::mem::replace(&mut seen[id as usize], true) {
+                    return Err(bad("levels must partition the ids"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(bad("levels must cover every point"));
+        }
+        let mut ks: Vec<u32> = levels.iter().map(|&(k, _)| k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        if ks.len() != levels.len() {
+            return Err(bad("level sizes must be distinct powers of two"));
+        }
+        // Normalize to the invariant order (largest first) — `merge_levels`
+        // keeps it, so an export is already sorted, but the decoder must
+        // not trust that.
+        levels.sort_by_key(|&(k, _)| std::cmp::Reverse(k));
+        let gamma = rho.iter().enumerate().map(|(i, &r)| priority_key(r, i as u32)).collect();
+        let owned = levels.into_iter().map(|(k, ids)| OwnedLevel::build(&pts, k, ids)).collect();
+        Ok(StreamingSession { d_cut, model, pts, levels: owned, rho, gamma, dep, delta, stats })
+    }
+}
+
+/// An exported [`StreamingSession`] — the serialization boundary between
+/// the session and `crate::durability`'s checkpoint codec. Plain data:
+/// no trees (rebuilt on restore), no γ (derived from ρ).
+#[derive(Clone, Debug)]
+pub struct StreamState<S: Scalar> {
+    pub d_cut: f64,
+    pub model: DensityModel,
+    pub pts: PointStore<S>,
+    /// `(k, ids)` per forest level, ids in each level's build order.
+    pub levels: Vec<(u32, Vec<u32>)>,
+    pub rho: Vec<u32>,
+    pub dep: Vec<Option<u32>>,
+    pub delta: Vec<f64>,
+    /// Carried across restores so the observable repair accounting keeps
+    /// the whole stream's history. Replay re-measures wall-clock for the
+    /// replayed suffix, so timing fields are *not* part of the
+    /// byte-identity contract (the integer counters are).
+    pub stats: StreamStats,
 }
 
 #[cfg(test)]
@@ -781,5 +887,64 @@ mod tests {
     fn cut_on_empty_stream_is_typed_error() {
         let s = StreamingSession::<f64>::new(2, 1.0).unwrap();
         assert!(matches!(s.cut(0.0, 1.0), Err(DpcError::EmptyInput)));
+    }
+
+    #[test]
+    fn stream_matches_fresh_epanechnikov_kernel() {
+        let mut rng = SplitMix64::new(315);
+        let pts = gen_clustered_points(&mut rng, 160, 2, 3, 50.0, 2.0);
+        check_stream_matches_fresh_model(&pts, 3.0, DensityModel::Epanechnikov, &[37, 1, 80, 42]);
+    }
+
+    /// The checkpoint/restore contract: a restored session continues
+    /// exactly where the exported one left off — same artifacts now, same
+    /// artifacts (and level partition) after further ingests.
+    #[test]
+    fn export_restore_round_trip_continues_identically() {
+        let mut rng = SplitMix64::new(316);
+        let pts = gen_uniform_points(&mut rng, 200, 2, 40.0);
+        for model in DensityModel::REPRESENTATIVE {
+            let mut a = StreamingSession::<f64>::new_with_model(2, 4.0, model).unwrap();
+            a.ingest(&prefix(&pts, 130)).unwrap();
+            let mut b = StreamingSession::from_state(a.export_state()).unwrap();
+            assert_eq!(a.rho(), b.rho(), "{model}: restored rho");
+            assert_eq!(a.dep(), b.dep(), "{model}: restored dep");
+            assert_eq!(a.delta(), b.delta(), "{model}: restored delta");
+            assert_eq!(a.level_sizes(), b.level_sizes(), "{model}: restored levels");
+            let tail = PointSet::new(pts.coords()[130 * 2..200 * 2].to_vec(), 2);
+            a.ingest(&tail).unwrap();
+            b.ingest(&tail).unwrap();
+            assert_eq!(a.rho(), b.rho(), "{model}: post-ingest rho");
+            assert_eq!(a.dep(), b.dep(), "{model}: post-ingest dep");
+            assert_eq!(a.delta(), b.delta(), "{model}: post-ingest delta");
+            assert_eq!(a.level_sizes(), b.level_sizes(), "{model}: post-ingest levels");
+            assert_eq!(a.stats().tree_points_built, b.stats().tree_points_built, "{model}: counters carry");
+        }
+    }
+
+    #[test]
+    fn from_state_rejects_structural_corruption() {
+        let mut rng = SplitMix64::new(317);
+        let pts = gen_uniform_points(&mut rng, 48, 2, 20.0);
+        let mut s = StreamingSession::<f64>::new(2, 3.0).unwrap();
+        s.ingest(&pts).unwrap();
+        let good = s.export_state();
+        assert!(StreamingSession::from_state(good.clone()).is_ok());
+        // Truncated artifact array.
+        let mut st = good.clone();
+        st.rho.pop();
+        assert!(matches!(StreamingSession::from_state(st), Err(DpcError::InvalidParam { .. })));
+        // Out-of-range dependent.
+        let mut st = good.clone();
+        st.dep[0] = Some(999);
+        assert!(matches!(StreamingSession::from_state(st), Err(DpcError::InvalidParam { .. })));
+        // A duplicated level id breaks the partition.
+        let mut st = good.clone();
+        st.levels[0].1[0] = st.levels[0].1[1];
+        assert!(matches!(StreamingSession::from_state(st), Err(DpcError::InvalidParam { .. })));
+        // A level of non-2^k size.
+        let mut st = good;
+        st.levels[0].1.pop();
+        assert!(matches!(StreamingSession::from_state(st), Err(DpcError::InvalidParam { .. })));
     }
 }

@@ -1,0 +1,507 @@
+//! Checkpoints: a point-in-time serialization of every live stream's
+//! Bentley–Saxe forest state and every one-shot session's cached
+//! (ρ, λ, δ) artifacts, so recovery replays only the journal suffix
+//! written after the snapshot.
+//!
+//! ## File format (`checkpoint-<seq>.pclc`)
+//!
+//! ```text
+//! magic "PCLC" | version u32
+//! | n_streams u64 | stream... | n_sessions u64 | session...
+//! | crc u32                       — CRC-32 of every preceding byte
+//! stream:  id u64 | dtype u8 | d_cut f64 | density | pts (typed store)
+//!          | n_levels u64 | (k u32 | ids u32-slice)...
+//!          | rho u32-slice | dep u32-slice (u32::MAX = None)
+//!          | delta count u64 + f64... | stats (8×u64 + 2×f64)
+//! session: id u64 | d_cut f64 | density | pts (f64 store)
+//!          | rho u32-slice | dep u32-slice | delta | built_by str
+//!          | density_secs f64 | dep_secs f64
+//! ```
+//!
+//! Decoding is all-or-nothing: the whole-file CRC is verified *before*
+//! any section is parsed, and every section parse is bounds-checked, so a
+//! truncated or bit-flipped checkpoint yields
+//! [`DpcError::CorruptCheckpoint`] and zero restored state. One-shot
+//! sessions are f64-only in serve mode, and the checkpoint section
+//! mirrors that; streams are dtype-tagged and fully precision-generic.
+//!
+//! Writing is crash-safe by ordering: the checkpoint file is written and
+//! fsynced *first*, the manifest flips to it *second* (atomically — see
+//! [`super::manifest`]), and only then are older checkpoint files
+//! deleted. A crash between any two steps leaves the previous
+//! (checkpoint, offset) pair fully usable.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::dpc::{DensityModel, StreamState, StreamStats};
+use crate::error::DpcError;
+use crate::geom::{Dtype, PointSet, Scalar};
+
+use super::crc32::crc32;
+use super::journal::JournalWriter;
+use super::manifest::{self, Manifest};
+use super::wire::{self, Cursor};
+
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"PCLC";
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// `checkpoint-<seq>.pclc` in the durable directory.
+pub fn checkpoint_file(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("checkpoint-{seq}.pclc"))
+}
+
+/// A dtype-tagged stream snapshot (the runtime union of
+/// [`StreamState<f32>`] / [`StreamState<f64>`]).
+#[derive(Clone, Debug)]
+pub enum DynStreamState {
+    F32(StreamState<f32>),
+    F64(StreamState<f64>),
+}
+
+impl DynStreamState {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            DynStreamState::F32(_) => Dtype::F32,
+            DynStreamState::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DynStreamState::F32(s) => s.pts.len(),
+            DynStreamState::F64(s) => s.pts.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A one-shot session's cached artifacts, as held by the coordinator:
+/// enough to serve `recut`/`artifact` queries after restart without
+/// re-clustering.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    pub id: u64,
+    pub d_cut: f64,
+    pub density: DensityModel,
+    pub pts: PointSet,
+    pub rho: Vec<u32>,
+    pub dep: Vec<Option<u32>>,
+    pub delta: Vec<f64>,
+    /// Engine label of the build that produced the artifacts (display
+    /// only — restored sessions keep the original label).
+    pub built_by: String,
+    pub density_secs: f64,
+    pub dep_secs: f64,
+}
+
+/// Everything a checkpoint captures.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointData {
+    /// `(stream_id, state)`, any order.
+    pub streams: Vec<(u64, DynStreamState)>,
+    pub sessions: Vec<SessionState>,
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_dep(out: &mut Vec<u8>, dep: &[Option<u32>]) {
+    wire::put_u64(out, dep.len() as u64);
+    for d in dep {
+        wire::put_u32(out, d.map_or(u32::MAX, |x| x));
+    }
+}
+
+fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]) {
+    wire::put_u64(out, xs.len() as u64);
+    for &x in xs {
+        wire::put_f64(out, x);
+    }
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &StreamStats) {
+    for v in [
+        s.ingests,
+        s.points_ingested,
+        s.trees_built,
+        s.tree_points_built,
+        s.rho_bumped,
+        s.dep_full_queries,
+        s.dep_seeded_races,
+        s.dep_changed,
+    ] {
+        wire::put_u64(out, v);
+    }
+    wire::put_f64(out, s.rho_secs);
+    wire::put_f64(out, s.dep_secs);
+}
+
+fn put_stream_state<S: Scalar>(out: &mut Vec<u8>, st: &StreamState<S>) {
+    wire::put_f64(out, st.d_cut);
+    wire::put_density(out, st.model);
+    wire::put_store(out, &st.pts);
+    wire::put_u64(out, st.levels.len() as u64);
+    for (k, ids) in &st.levels {
+        wire::put_u32(out, *k);
+        wire::put_u32_slice(out, ids);
+    }
+    wire::put_u32_slice(out, &st.rho);
+    put_dep(out, &st.dep);
+    put_f64_slice(out, &st.delta);
+    put_stats(out, &st.stats);
+}
+
+pub fn encode(data: &CheckpointData) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&CHECKPOINT_MAGIC);
+    wire::put_u32(&mut out, CHECKPOINT_VERSION);
+    wire::put_u64(&mut out, data.streams.len() as u64);
+    for (id, state) in &data.streams {
+        wire::put_u64(&mut out, *id);
+        match state {
+            DynStreamState::F32(st) => {
+                out.push(Dtype::F32.size_bytes() as u8);
+                put_stream_state(&mut out, st);
+            }
+            DynStreamState::F64(st) => {
+                out.push(Dtype::F64.size_bytes() as u8);
+                put_stream_state(&mut out, st);
+            }
+        }
+    }
+    wire::put_u64(&mut out, data.sessions.len() as u64);
+    for s in &data.sessions {
+        wire::put_u64(&mut out, s.id);
+        wire::put_f64(&mut out, s.d_cut);
+        wire::put_density(&mut out, s.density);
+        wire::put_store(&mut out, &s.pts);
+        wire::put_u32_slice(&mut out, &s.rho);
+        put_dep(&mut out, &s.dep);
+        put_f64_slice(&mut out, &s.delta);
+        wire::put_str(&mut out, &s.built_by);
+        wire::put_f64(&mut out, s.density_secs);
+        wire::put_f64(&mut out, s.dep_secs);
+    }
+    let crc = crc32(&out);
+    wire::put_u32(&mut out, crc);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+fn get_dep(cur: &mut Cursor<'_>) -> Result<Vec<Option<u32>>, String> {
+    let raw = wire::get_u32_vec(cur)?;
+    Ok(raw.into_iter().map(|x| if x == u32::MAX { None } else { Some(x) }).collect())
+}
+
+fn get_f64_vec(cur: &mut Cursor<'_>) -> Result<Vec<f64>, String> {
+    let len = cur.u64()? as usize;
+    if cur.remaining() < len.checked_mul(8).ok_or("f64 slice length overflows")? {
+        return Err(format!("f64 slice claims {len} elements, buffer too short"));
+    }
+    (0..len).map(|_| cur.f64()).collect()
+}
+
+fn get_stats(cur: &mut Cursor<'_>) -> Result<StreamStats, String> {
+    Ok(StreamStats {
+        ingests: cur.u64()?,
+        points_ingested: cur.u64()?,
+        trees_built: cur.u64()?,
+        tree_points_built: cur.u64()?,
+        rho_bumped: cur.u64()?,
+        dep_full_queries: cur.u64()?,
+        dep_seeded_races: cur.u64()?,
+        dep_changed: cur.u64()?,
+        rho_secs: cur.f64()?,
+        dep_secs: cur.f64()?,
+    })
+}
+
+fn get_stream_state<S: Scalar>(cur: &mut Cursor<'_>) -> Result<StreamState<S>, String> {
+    let d_cut = cur.f64()?;
+    let model = wire::get_density(cur)?;
+    let pts = wire::get_store::<S>(cur)?;
+    let n_levels = cur.u64()? as usize;
+    if n_levels > usize::BITS as usize {
+        return Err(format!("{n_levels} forest levels exceeds the {} possible", usize::BITS));
+    }
+    let mut levels = Vec::with_capacity(n_levels);
+    for _ in 0..n_levels {
+        let k = cur.u32()?;
+        let ids = wire::get_u32_vec(cur)?;
+        levels.push((k, ids));
+    }
+    Ok(StreamState {
+        d_cut,
+        model,
+        pts,
+        levels,
+        rho: wire::get_u32_vec(cur)?,
+        dep: get_dep(cur)?,
+        delta: get_f64_vec(cur)?,
+        stats: get_stats(cur)?,
+    })
+}
+
+/// Decode a checkpoint image. All-or-nothing: any defect — truncation,
+/// CRC mismatch, undecodable section, trailing bytes — aborts with
+/// [`DpcError::CorruptCheckpoint`] before any state escapes.
+pub fn decode(bytes: &[u8]) -> Result<CheckpointData, DpcError> {
+    let corrupt = |detail: String| DpcError::CorruptCheckpoint { detail };
+    if bytes.len() < 8 + 4 {
+        return Err(corrupt(format!("file is {} bytes, shorter than header + CRC", bytes.len())));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    if crc32(body) != stored {
+        return Err(corrupt(format!(
+            "whole-file CRC mismatch (stored {stored:#010x}, computed {:#010x})",
+            crc32(body)
+        )));
+    }
+    let mut cur = Cursor::new(body);
+    let magic = cur.take(4).map_err(&corrupt)?;
+    if magic != CHECKPOINT_MAGIC {
+        return Err(corrupt(format!("bad magic {magic:?} (want \"PCLC\")")));
+    }
+    let version = cur.u32().map_err(&corrupt)?;
+    if version != CHECKPOINT_VERSION {
+        return Err(corrupt(format!("unsupported checkpoint version {version}")));
+    }
+
+    let n_streams = cur.u64().map_err(&corrupt)? as usize;
+    let mut streams = Vec::with_capacity(n_streams.min(1024));
+    for i in 0..n_streams {
+        let id = cur.u64().map_err(&corrupt)?;
+        let tag = cur.u8().map_err(&corrupt)?;
+        let dtype = Dtype::from_tag(tag)
+            .ok_or_else(|| corrupt(format!("stream {i}: unknown dtype tag {tag}")))?;
+        let state = match dtype {
+            Dtype::F32 => DynStreamState::F32(
+                get_stream_state(&mut cur).map_err(|d| corrupt(format!("stream {i}: {d}")))?,
+            ),
+            Dtype::F64 => DynStreamState::F64(
+                get_stream_state(&mut cur).map_err(|d| corrupt(format!("stream {i}: {d}")))?,
+            ),
+        };
+        streams.push((id, state));
+    }
+
+    let n_sessions = cur.u64().map_err(&corrupt)? as usize;
+    let mut sessions = Vec::with_capacity(n_sessions.min(1024));
+    for i in 0..n_sessions {
+        let sec = |d: String| corrupt(format!("session {i}: {d}"));
+        sessions.push(SessionState {
+            id: cur.u64().map_err(sec)?,
+            d_cut: cur.f64().map_err(sec)?,
+            density: wire::get_density(&mut cur).map_err(sec)?,
+            pts: wire::get_store::<f64>(&mut cur).map_err(sec)?,
+            rho: wire::get_u32_vec(&mut cur).map_err(sec)?,
+            dep: get_dep(&mut cur).map_err(sec)?,
+            delta: get_f64_vec(&mut cur).map_err(sec)?,
+            built_by: wire::get_str(&mut cur).map_err(sec)?,
+            density_secs: cur.f64().map_err(sec)?,
+            dep_secs: cur.f64().map_err(sec)?,
+        });
+    }
+    cur.expect_end("checkpoint").map_err(&corrupt)?;
+    Ok(CheckpointData { streams, sessions })
+}
+
+/// Read + decode `checkpoint-<seq>.pclc`.
+pub fn read(dir: &Path, seq: u64) -> Result<CheckpointData, DpcError> {
+    let path = checkpoint_file(dir, seq);
+    let mut buf = Vec::new();
+    File::open(&path)?.read_to_end(&mut buf)?;
+    decode(&buf)
+}
+
+/// Take a checkpoint: sync the journal, write + fsync the next
+/// `checkpoint-<seq>.pclc`, flip the manifest to `(seq, journal end)`,
+/// then garbage-collect older checkpoint files. Returns the new manifest.
+///
+/// The caller must ensure `data` reflects exactly the journal prefix up
+/// to `journal.len()` — i.e. all appended entries have been applied and
+/// no new ones can land mid-snapshot (the coordinator holds its journal
+/// lock across the quiesce + export).
+pub fn write(
+    dir: &Path,
+    journal: &mut JournalWriter,
+    data: &CheckpointData,
+    next_session_id: u64,
+) -> Result<Manifest, DpcError> {
+    journal.sync()?;
+    let prev = manifest::read(dir)?;
+    let seq = prev.map_or(1, |m| m.checkpoint_seq + 1);
+    let path = checkpoint_file(dir, seq);
+    {
+        let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&path)?;
+        f.write_all(&encode(data))?;
+        f.sync_data()?;
+    }
+    let m = Manifest {
+        checkpoint_seq: seq,
+        journal_offset: journal.len(),
+        next_lsn: journal.next_lsn(),
+        next_session_id,
+    };
+    manifest::write(dir, &m)?;
+    // Old checkpoints are now unreachable from the manifest; their
+    // deletion is best-effort cleanup, not a correctness step.
+    if let Some(prev) = prev {
+        if prev.checkpoint_seq != 0 {
+            let _ = std::fs::remove_file(checkpoint_file(dir, prev.checkpoint_seq));
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::StreamingSession;
+    use crate::geom::{DynPoints, PointStore};
+    use crate::prng::SplitMix64;
+    use crate::proputil::gen_clustered_points;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("parcluster-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_data() -> CheckpointData {
+        let mut rng = SplitMix64::new(99);
+        let pts = gen_clustered_points(&mut rng, 70, 2, 3, 40.0, 1.5);
+        let mut s64 =
+            StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::Epanechnikov).unwrap();
+        s64.ingest(&pts).unwrap();
+        let mut s32 =
+            StreamingSession::<f32>::new_with_model(3, 2.0, DensityModel::CutoffCount).unwrap();
+        s32.ingest(&PointStore::<f32>::new(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0], 3)).unwrap();
+        let session = SessionState {
+            id: 4,
+            d_cut: 3.0,
+            density: DensityModel::GaussianKernel,
+            pts: pts.clone(),
+            rho: s64.rho().to_vec(),
+            dep: s64.dep().to_vec(),
+            delta: s64.delta().to_vec(),
+            built_by: "rust-tree".into(),
+            density_secs: 0.25,
+            dep_secs: 0.5,
+        };
+        CheckpointData {
+            streams: vec![
+                (1, DynStreamState::F64(s64.export_state())),
+                (2, DynStreamState::F32(s32.export_state())),
+            ],
+            sessions: vec![session],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_preserves_everything() {
+        let data = sample_data();
+        let back = decode(&encode(&data)).unwrap();
+        assert_eq!(back.streams.len(), 2);
+        assert_eq!(back.sessions.len(), 1);
+        let (id, DynStreamState::F64(st)) = &back.streams[0] else {
+            panic!("stream 0 must be f64")
+        };
+        let DynStreamState::F64(want) = &data.streams[0].1 else { unreachable!() };
+        assert_eq!(*id, 1);
+        assert_eq!(st.rho, want.rho);
+        assert_eq!(st.dep, want.dep);
+        assert_eq!(st.delta, want.delta);
+        assert_eq!(st.levels, want.levels);
+        assert_eq!(st.pts.coords(), want.pts.coords());
+        assert_eq!(st.stats.ingests, want.stats.ingests);
+        let (_, DynStreamState::F32(st32)) = &back.streams[1] else {
+            panic!("stream 1 must be f32")
+        };
+        assert_eq!(st32.pts.dim(), 3);
+        let s = &back.sessions[0];
+        assert_eq!((s.id, s.built_by.as_str()), (4, "rust-tree"));
+        assert_eq!(s.rho, data.sessions[0].rho);
+        assert_eq!(s.delta, data.sessions[0].delta);
+
+        // The restored stream state must reconstruct a working session.
+        let restored = StreamingSession::from_state(st.clone()).unwrap();
+        assert_eq!(restored.rho(), want.rho.as_slice());
+    }
+
+    #[test]
+    fn truncation_and_bit_flips_are_all_or_nothing() {
+        let bytes = encode(&sample_data());
+        for cut in [0, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(decode(&bytes[..cut]), Err(DpcError::CorruptCheckpoint { .. })),
+                "truncation at {cut} must be CorruptCheckpoint"
+            );
+        }
+        for pos in [8, bytes.len() / 3, bytes.len() - 6] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x08;
+            assert!(
+                matches!(decode(&bad), Err(DpcError::CorruptCheckpoint { .. })),
+                "bit flip at {pos} must be CorruptCheckpoint"
+            );
+        }
+    }
+
+    #[test]
+    fn write_flips_manifest_and_collects_old_files() {
+        use super::super::journal::{JournalWriter, JOURNAL_FILE};
+        let dir = tmpdir("write");
+        let mut journal = JournalWriter::create(&dir.join(JOURNAL_FILE), 1).unwrap();
+        journal
+            .append(&super::super::journal::JournalEntry::OpenStream {
+                stream: 1,
+                dim: 2,
+                dtype: Dtype::F64,
+                d_cut: 3.0,
+                density: DensityModel::CutoffCount,
+            })
+            .unwrap();
+        manifest::write(
+            &dir,
+            &Manifest {
+                checkpoint_seq: 0,
+                journal_offset: super::super::journal::JOURNAL_HEADER_LEN,
+                next_lsn: 1,
+                next_session_id: 1,
+            },
+        )
+        .unwrap();
+
+        let m1 = write(&dir, &mut journal, &sample_data(), 5).unwrap();
+        assert_eq!(m1.checkpoint_seq, 1);
+        assert_eq!(m1.journal_offset, journal.len());
+        assert!(checkpoint_file(&dir, 1).exists());
+
+        let m2 = write(&dir, &mut journal, &sample_data(), 6).unwrap();
+        assert_eq!(m2.checkpoint_seq, 2);
+        assert!(checkpoint_file(&dir, 2).exists());
+        assert!(!checkpoint_file(&dir, 1).exists(), "old checkpoint must be collected");
+        assert_eq!(manifest::read(&dir).unwrap(), Some(m2));
+        assert_eq!(read(&dir, 2).unwrap().streams.len(), 2);
+
+        // Ingest batch codec sanity: DynPoints round-trips through the
+        // journal entry the checkpoint's offset points past.
+        let scan = super::super::journal::scan(&dir.join(JOURNAL_FILE)).unwrap();
+        assert_eq!(scan.entries.len(), 1);
+        let _ = DynPoints::F64(PointStore::new(vec![1.0, 2.0], 2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

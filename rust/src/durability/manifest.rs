@@ -1,0 +1,180 @@
+//! The durability manifest: a single fixed-size record naming the latest
+//! valid `(checkpoint, journal offset)` pair. Recovery reads it first and
+//! trusts nothing it does not point at.
+//!
+//! ## File format (`MANIFEST`)
+//!
+//! ```text
+//! magic "PCLM" | version u32 | checkpoint_seq u64 (0 = no checkpoint)
+//! | journal_offset u64 | next_lsn u64 | next_session_id u64 | crc u32
+//! ```
+//!
+//! The CRC-32 covers every preceding byte. The record is written with the
+//! classic atomic-replace dance — write `MANIFEST.tmp`, fsync it, rename
+//! over `MANIFEST`, fsync the directory — so a crash at any instant
+//! leaves either the old record or the new one, never a mix. Readers
+//! therefore treat a short/garbled manifest as [`DpcError::CorruptManifest`],
+//! not as something to repair around.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::DpcError;
+
+use super::crc32::crc32;
+use super::wire::{self, Cursor};
+
+pub const MANIFEST_MAGIC: [u8; 4] = *b"PCLM";
+pub const MANIFEST_VERSION: u32 = 1;
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Total encoded size: 4 + 4 + 8·4 + 4.
+const MANIFEST_LEN: usize = 44;
+
+/// The durable root of trust for a `--durable` directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Sequence number of the newest valid checkpoint
+    /// (`checkpoint-<seq>.pclc`); 0 means "no checkpoint yet — replay the
+    /// journal from its header".
+    pub checkpoint_seq: u64,
+    /// Journal byte offset replay starts from: everything at or past this
+    /// offset post-dates the checkpoint.
+    pub journal_offset: u64,
+    /// First LSN not covered by the checkpoint (the LSN expected at
+    /// `journal_offset`, or the writer's next LSN if the journal ends
+    /// exactly there).
+    pub next_lsn: u64,
+    /// Coordinator id-allocator floor as of the checkpoint.
+    pub next_session_id: u64,
+}
+
+impl Manifest {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(MANIFEST_LEN);
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        wire::put_u32(&mut out, MANIFEST_VERSION);
+        wire::put_u64(&mut out, self.checkpoint_seq);
+        wire::put_u64(&mut out, self.journal_offset);
+        wire::put_u64(&mut out, self.next_lsn);
+        wire::put_u64(&mut out, self.next_session_id);
+        let crc = crc32(&out);
+        wire::put_u32(&mut out, crc);
+        out
+    }
+}
+
+/// Atomically replace the manifest in `dir`.
+pub fn write(dir: &Path, m: &Manifest) -> Result<(), DpcError> {
+    let tmp = dir.join("MANIFEST.tmp");
+    let dst = dir.join(MANIFEST_FILE);
+    {
+        let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+        f.write_all(&m.encode())?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, &dst)?;
+    // Make the rename itself durable. Directory fsync is not supported on
+    // every platform; failure to open the dir read-only is non-fatal.
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_data();
+    }
+    Ok(())
+}
+
+/// Read the manifest; `Ok(None)` when the file does not exist (a fresh
+/// directory), [`DpcError::CorruptManifest`] when it exists but fails
+/// validation.
+pub fn read(dir: &Path) -> Result<Option<Manifest>, DpcError> {
+    let path = dir.join(MANIFEST_FILE);
+    let mut buf = Vec::new();
+    match File::open(&path) {
+        Ok(mut f) => f.read_to_end(&mut buf)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let corrupt = |detail: String| DpcError::CorruptManifest { detail };
+    if buf.len() != MANIFEST_LEN {
+        return Err(corrupt(format!("manifest is {} bytes, want {MANIFEST_LEN}", buf.len())));
+    }
+    let (body, crc_bytes) = buf.split_at(MANIFEST_LEN - 4);
+    let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    if crc32(body) != stored {
+        return Err(corrupt(format!(
+            "CRC mismatch (stored {stored:#010x}, computed {:#010x})",
+            crc32(body)
+        )));
+    }
+    let mut cur = Cursor::new(body);
+    let magic = cur.take(4).map_err(&corrupt)?;
+    if magic != MANIFEST_MAGIC {
+        return Err(corrupt(format!("bad magic {magic:?} (want \"PCLM\")")));
+    }
+    let version = cur.u32().map_err(&corrupt)?;
+    if version != MANIFEST_VERSION {
+        return Err(corrupt(format!("unsupported manifest version {version}")));
+    }
+    let m = Manifest {
+        checkpoint_seq: cur.u64().map_err(&corrupt)?,
+        journal_offset: cur.u64().map_err(&corrupt)?,
+        next_lsn: cur.u64().map_err(&corrupt)?,
+        next_session_id: cur.u64().map_err(&corrupt)?,
+    };
+    if m.next_lsn == 0 || m.next_session_id == 0 {
+        return Err(corrupt("next_lsn and next_session_id must be positive".into()));
+    }
+    Ok(Some(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("parcluster-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn round_trip_and_missing() {
+        let dir = tmpdir("rt");
+        assert!(read(&dir).unwrap().is_none(), "fresh dir has no manifest");
+        let m = Manifest { checkpoint_seq: 3, journal_offset: 1024, next_lsn: 17, next_session_id: 5 };
+        write(&dir, &m).unwrap();
+        assert_eq!(read(&dir).unwrap(), Some(m));
+        // Overwrite is atomic-replace, not append.
+        let m2 = Manifest { checkpoint_seq: 4, journal_offset: 2048, next_lsn: 30, next_session_id: 6 };
+        write(&dir, &m2).unwrap();
+        assert_eq!(read(&dir).unwrap(), Some(m2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_shapes_are_typed() {
+        let dir = tmpdir("corrupt");
+        let m = Manifest { checkpoint_seq: 1, journal_offset: 8, next_lsn: 1, next_session_id: 1 };
+        write(&dir, &m).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncated.
+        std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+        assert!(matches!(read(&dir), Err(DpcError::CorruptManifest { .. })));
+
+        // Bit flip in the body.
+        let mut flipped = good.clone();
+        flipped[10] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(matches!(read(&dir), Err(DpcError::CorruptManifest { .. })));
+
+        // Garbage of the right length.
+        std::fs::write(&path, vec![0xAB; good.len()]).unwrap();
+        assert!(matches!(read(&dir), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

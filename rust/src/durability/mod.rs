@@ -1,0 +1,48 @@
+//! Durable streams: write-ahead journal + checkpoint/restore for serve
+//! mode.
+//!
+//! A `--durable <dir>` coordinator writes every state-changing command —
+//! `open_stream` / `ingest` / `close_stream`, `open_session` / `recut` /
+//! `close_session` — to an append-only, CRC-framed journal *before*
+//! acknowledging it, and periodically snapshots the live state (each
+//! stream's Bentley–Saxe forest, each session's cached (ρ, λ, δ)
+//! artifacts) into a checkpoint named by an atomically-replaced manifest.
+//! After a crash, [`recover`] loads the newest checkpoint and replays the
+//! journal suffix through the normal ingest paths; because every path is
+//! deterministic, the restored artifacts are byte-identical to a fresh
+//! build over the concatenated batches — for every density model, dtype,
+//! and thread count.
+//!
+//! The directory layout:
+//!
+//! ```text
+//! <dir>/journal.pclj          append-only command log   (magic "PCLJ")
+//! <dir>/checkpoint-<seq>.pclc newest state snapshot     (magic "PCLC")
+//! <dir>/MANIFEST              root of trust             (magic "PCLM")
+//! ```
+//!
+//! Module map — each file owns one format or one phase:
+//!
+//! - [`crc32`]: the shared IEEE CRC-32 (hand-rolled, dependency-free).
+//! - [`wire`]: bounds-checked little-endian codecs (cursor, density
+//!   model, point batches) used by all three formats.
+//! - [`journal`]: framing, the fsync/group-commit policy, and the
+//!   torn-tail-vs-corruption scan.
+//! - [`checkpoint`]: whole-file-CRC state snapshots and the
+//!   write-then-flip-then-collect checkpoint protocol.
+//! - [`manifest`]: the fixed-size atomic root record.
+//! - [`recovery`]: manifest → checkpoint → replay orchestration.
+//!
+//! See DESIGN.md §Durability for the crash-consistency argument.
+
+pub mod checkpoint;
+pub mod crc32;
+pub mod journal;
+pub mod manifest;
+pub mod recovery;
+pub mod wire;
+
+pub use checkpoint::{CheckpointData, DynStreamState, SessionState};
+pub use journal::{JournalEntry, JournalWriter, ScanOutcome, ScannedFrame};
+pub use manifest::Manifest;
+pub use recovery::{recover, DynStream, Recovered, RecoveryReport};

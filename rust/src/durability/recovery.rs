@@ -1,0 +1,572 @@
+//! Crash recovery: manifest → checkpoint → journal-suffix replay.
+//!
+//! [`recover`] rebuilds exactly the state a durable coordinator held at
+//! its last acknowledged command: it loads the newest checkpoint named by
+//! the manifest, then replays every journal entry past the checkpoint's
+//! offset through the *normal* ingest/build paths — the same
+//! [`StreamingSession`] merge/repair code and the same exact pipeline the
+//! live server runs. Because every one of those paths is deterministic
+//! and thread-count-independent (the conformance suites pin this), the
+//! recovered (ρ, λ, δ) artifacts are byte-identical to a fresh build over
+//! the concatenated batches.
+//!
+//! Failure taxonomy (what each input defect becomes):
+//!
+//! | defect                                | outcome                        |
+//! |---------------------------------------|--------------------------------|
+//! | incomplete final journal frame        | silently truncated, replay ok  |
+//! | complete frame, bad CRC/LSN/payload   | [`DpcError::CorruptJournal`]   |
+//! | checkpoint truncated / bit-flipped    | [`DpcError::CorruptCheckpoint`]|
+//! | manifest garbled, or offset past end  | [`DpcError::CorruptManifest`]  |
+//! | journal present, manifest missing     | [`DpcError::CorruptManifest`]  |
+//! | replayed command fails (e.g. bad pts) | entry skipped, counted         |
+//!
+//! A *skipped* entry mirrors live behaviour: a command the live server
+//! accepted into the journal but whose job then failed leaves no state,
+//! so replaying its failure leaves no state either.
+
+use std::path::Path;
+
+use crate::dpc::{Dpc, DpcParams, StreamingSession};
+use crate::error::DpcError;
+use crate::geom::{Dtype, DynPoints};
+
+use super::checkpoint::{self, CheckpointData, DynStreamState, SessionState};
+use super::journal::{self, JournalEntry, JournalWriter, ScannedFrame, JOURNAL_FILE, JOURNAL_HEADER_LEN};
+use super::manifest::{self, Manifest};
+
+/// A live streaming session at either precision (the runtime union the
+/// replay loop drives; the coordinator's serve surface consumes the f64
+/// arm).
+#[derive(Debug)]
+pub enum DynStream {
+    F32(StreamingSession<f32>),
+    F64(StreamingSession<f64>),
+}
+
+impl DynStream {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            DynStream::F32(_) => Dtype::F32,
+            DynStream::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DynStream::F32(s) => s.len(),
+            DynStream::F64(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_state(state: DynStreamState) -> Result<DynStream, DpcError> {
+        // Structural defects inside a CRC-valid checkpoint are still
+        // checkpoint corruption, not parameter errors.
+        let wrap = |e: DpcError| DpcError::CorruptCheckpoint { detail: e.to_string() };
+        Ok(match state {
+            DynStreamState::F32(st) => DynStream::F32(StreamingSession::from_state(st).map_err(wrap)?),
+            DynStreamState::F64(st) => DynStream::F64(StreamingSession::from_state(st).map_err(wrap)?),
+        })
+    }
+
+    fn ingest(&mut self, batch: &DynPoints) -> Result<(), DpcError> {
+        match (self, batch) {
+            (DynStream::F32(s), DynPoints::F32(b)) => s.ingest(b),
+            (DynStream::F64(s), DynPoints::F64(b)) => s.ingest(b),
+            (s, b) => Err(DpcError::InvalidParam {
+                name: "batch_dtype",
+                value: b.dtype().size_bytes() as f64,
+                requirement: match s {
+                    DynStream::F32(_) => "stream is f32",
+                    DynStream::F64(_) => "stream is f64",
+                },
+            }),
+        }
+    }
+}
+
+/// What happened during a [`recover`] pass, for logs and tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Sequence of the checkpoint restored from (0 = none, full replay).
+    pub checkpoint_seq: u64,
+    /// Journal entries replayed after the checkpoint offset.
+    pub replayed: usize,
+    /// Replayed entries that failed to apply and were dropped.
+    pub skipped: usize,
+    /// Bytes of torn journal tail truncated before appending resumes.
+    pub torn_bytes: u64,
+}
+
+/// The full recovered serve state plus the re-armed journal writer.
+#[derive(Debug)]
+pub struct Recovered {
+    /// `(id, stream)` for every stream open at the crash.
+    pub streams: Vec<(u64, DynStream)>,
+    /// Every one-shot session open at the crash, artifacts rebuilt.
+    pub sessions: Vec<SessionState>,
+    /// Floor for the coordinator's shared session/stream id allocator.
+    pub next_session_id: u64,
+    /// Journal writer positioned at the end of the valid prefix.
+    pub writer: JournalWriter,
+    pub report: RecoveryReport,
+}
+
+fn rebuild_session(
+    id: u64,
+    d_cut: f64,
+    density: crate::dpc::DensityModel,
+    pts: &DynPoints,
+) -> Result<SessionState, DpcError> {
+    // Serve-mode sessions are f64 (the coordinator's public surface);
+    // artifacts are the rho_min = 0 full forest, every threshold a mask.
+    let pts = pts.clone().into_f64();
+    let params = DpcParams { d_cut, rho_min: 0.0, delta_min: f64::INFINITY, density, ..DpcParams::default() };
+    let out = Dpc::new(params).run(&pts)?;
+    Ok(SessionState {
+        id,
+        d_cut,
+        density,
+        pts,
+        rho: out.rho,
+        dep: out.dep,
+        delta: out.delta,
+        built_by: "replay".into(),
+        density_secs: out.timings.density_s,
+        dep_secs: out.timings.dep_s,
+    })
+}
+
+/// Recover (or freshly initialize) a durable directory.
+///
+/// - Empty/missing directory: create it, write a header-only journal and
+///   a no-checkpoint manifest, return empty state.
+/// - Otherwise: validate manifest → checkpoint → journal, truncate any
+///   torn tail, replay the suffix, and hand back a writer that appends
+///   where the valid prefix ends.
+pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
+    std::fs::create_dir_all(dir)?;
+    let journal_path = dir.join(JOURNAL_FILE);
+
+    let Some(m) = manifest::read(dir)? else {
+        if journal_path.exists() {
+            return Err(DpcError::CorruptManifest {
+                detail: "journal exists but MANIFEST is missing (did a partial copy drop it?)".into(),
+            });
+        }
+        let writer = JournalWriter::create(&journal_path, fsync_every)?;
+        manifest::write(
+            dir,
+            &Manifest {
+                checkpoint_seq: 0,
+                journal_offset: JOURNAL_HEADER_LEN,
+                next_lsn: 1,
+                next_session_id: 1,
+            },
+        )?;
+        return Ok(Recovered {
+            streams: Vec::new(),
+            sessions: Vec::new(),
+            next_session_id: 1,
+            writer,
+            report: RecoveryReport::default(),
+        });
+    };
+
+    if !journal_path.exists() {
+        return Err(DpcError::CorruptManifest {
+            detail: "MANIFEST points at a journal that does not exist".into(),
+        });
+    }
+    let scan = journal::scan(&journal_path)?;
+    if m.journal_offset > scan.valid_len {
+        return Err(DpcError::CorruptManifest {
+            detail: format!(
+                "journal_offset {} is past the journal's valid length {}",
+                m.journal_offset, scan.valid_len
+            ),
+        });
+    }
+    // The offset must land exactly on a frame boundary (or the end).
+    let replay_from = if m.journal_offset == scan.valid_len {
+        scan.entries.len()
+    } else {
+        scan.entries
+            .binary_search_by_key(&m.journal_offset, |f: &ScannedFrame| f.offset)
+            .map_err(|_| DpcError::CorruptManifest {
+                detail: format!("journal_offset {} is not a frame boundary", m.journal_offset),
+            })?
+    };
+    let expected_lsn =
+        scan.entries.get(replay_from).map_or(scan.next_lsn, |f| f.lsn);
+    if m.next_lsn != expected_lsn {
+        return Err(DpcError::CorruptManifest {
+            detail: format!(
+                "manifest next_lsn {} disagrees with journal LSN {} at offset {}",
+                m.next_lsn, expected_lsn, m.journal_offset
+            ),
+        });
+    }
+
+    // Checkpoint (if any) seeds the state maps.
+    let data = if m.checkpoint_seq == 0 {
+        CheckpointData::default()
+    } else {
+        checkpoint::read(dir, m.checkpoint_seq)?
+    };
+    let mut streams: Vec<(u64, DynStream)> = Vec::with_capacity(data.streams.len());
+    for (id, st) in data.streams {
+        streams.push((id, DynStream::from_state(st)?));
+    }
+    let mut sessions = data.sessions;
+
+    // Replay the suffix through the normal paths.
+    let mut report = RecoveryReport {
+        checkpoint_seq: m.checkpoint_seq,
+        torn_bytes: scan.torn_bytes,
+        ..RecoveryReport::default()
+    };
+    let mut max_id_seen = 0u64;
+    for frame in &scan.entries[replay_from..] {
+        report.replayed += 1;
+        let applied = match &frame.entry {
+            JournalEntry::OpenStream { stream, dim, dtype, d_cut, density } => {
+                max_id_seen = max_id_seen.max(*stream);
+                if streams.iter().any(|(id, _)| id == stream) {
+                    false
+                } else {
+                    let made = match dtype {
+                        Dtype::F32 => StreamingSession::<f32>::new_with_model(*dim as usize, *d_cut, *density)
+                            .map(DynStream::F32),
+                        Dtype::F64 => StreamingSession::<f64>::new_with_model(*dim as usize, *d_cut, *density)
+                            .map(DynStream::F64),
+                    };
+                    match made {
+                        Ok(s) => {
+                            streams.push((*stream, s));
+                            true
+                        }
+                        Err(_) => false,
+                    }
+                }
+            }
+            JournalEntry::Ingest { stream, batch, .. } => {
+                match streams.iter_mut().find(|(id, _)| id == stream) {
+                    Some((_, s)) => s.ingest(batch).is_ok(),
+                    None => false,
+                }
+            }
+            JournalEntry::CloseStream { stream } => {
+                let before = streams.len();
+                streams.retain(|(id, _)| id != stream);
+                streams.len() != before
+            }
+            JournalEntry::OpenSession { session, d_cut, density, pts } => {
+                max_id_seen = max_id_seen.max(*session);
+                if sessions.iter().any(|s| s.id == *session) {
+                    false
+                } else {
+                    match rebuild_session(*session, *d_cut, *density, pts) {
+                        Ok(s) => {
+                            sessions.push(s);
+                            true
+                        }
+                        Err(_) => false,
+                    }
+                }
+            }
+            // Recuts read cached artifacts; replay has nothing to apply.
+            JournalEntry::Recut { .. } => true,
+            JournalEntry::CloseSession { session } => {
+                let before = sessions.len();
+                sessions.retain(|s| s.id != *session);
+                sessions.len() != before
+            }
+        };
+        if !applied {
+            report.skipped += 1;
+        }
+    }
+
+    let writer = JournalWriter::open_end(&journal_path, scan.valid_len, scan.next_lsn, fsync_every)?;
+    Ok(Recovered {
+        streams,
+        sessions,
+        next_session_id: m.next_session_id.max(max_id_seen + 1),
+        writer,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpc::DensityModel;
+    use crate::geom::PointSet;
+    use crate::prng::SplitMix64;
+    use crate::proputil::gen_clustered_points;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("parcluster-recover-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn batches(seed: u64, n: usize, splits: &[usize]) -> Vec<PointSet> {
+        let mut rng = SplitMix64::new(seed);
+        let pts = gen_clustered_points(&mut rng, n, 2, 3, 50.0, 1.8);
+        let mut out = Vec::new();
+        let mut at = 0;
+        for &len in splits {
+            out.push(PointSet::new(
+                pts.coords()[at * 2..(at + len) * 2].to_vec(),
+                2,
+            ));
+            at += len;
+        }
+        assert_eq!(at, n);
+        out
+    }
+
+    #[test]
+    fn fresh_directory_initializes_empty() {
+        let dir = tmpdir("fresh");
+        let rec = recover(&dir, 1).unwrap();
+        assert!(rec.streams.is_empty() && rec.sessions.is_empty());
+        assert_eq!(rec.next_session_id, 1);
+        assert_eq!(rec.report.replayed, 0);
+        assert!(dir.join(JOURNAL_FILE).exists());
+        assert!(manifest::read(&dir).unwrap().is_some());
+        // Recovering again over the initialized-but-idle dir is a no-op.
+        drop(rec);
+        let rec2 = recover(&dir, 1).unwrap();
+        assert!(rec2.streams.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_only_replay_matches_fresh_build() {
+        let dir = tmpdir("replay");
+        let all = batches(7, 150, &[60, 25, 65]);
+        {
+            let mut rec = recover(&dir, 1).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 3.0,
+                    density: DensityModel::Epanechnikov,
+                })
+                .unwrap();
+            for b in &all {
+                rec.writer
+                    .append(&JournalEntry::Ingest {
+                        stream: 1,
+                        rho_min: 0.0,
+                        delta_min: 20.0,
+                        batch: DynPoints::F64(b.clone()),
+                    })
+                    .unwrap();
+            }
+            // Simulated crash: writer dropped without checkpoint/close.
+        }
+        let rec = recover(&dir, 1).unwrap();
+        assert_eq!(rec.report.replayed, 4);
+        assert_eq!(rec.report.skipped, 0);
+        assert_eq!(rec.streams.len(), 1);
+        let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+
+        let mut fresh =
+            StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::Epanechnikov).unwrap();
+        for b in &all {
+            fresh.ingest(b).unwrap();
+        }
+        assert_eq!(got.rho(), fresh.rho());
+        assert_eq!(got.dep(), fresh.dep());
+        assert_eq!(got.delta(), fresh.delta());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replay_skips_failed_and_out_of_order_entries() {
+        let dir = tmpdir("skips");
+        {
+            let mut rec = recover(&dir, 1).unwrap();
+            // Ingest into a stream that was never opened.
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 9,
+                    rho_min: 0.0,
+                    delta_min: 0.0,
+                    batch: DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2)),
+                })
+                .unwrap();
+            // Close a stream that does not exist.
+            rec.writer.append(&JournalEntry::CloseStream { stream: 9 }).unwrap();
+            // A working open + wrong-dimension ingest (fails inside the
+            // session, must be skipped, stream survives).
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 1.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 1,
+                    rho_min: 0.0,
+                    delta_min: 0.0,
+                    batch: DynPoints::F64(PointSet::new(vec![1.0, 2.0, 3.0], 3)),
+                })
+                .unwrap();
+        }
+        let rec = recover(&dir, 1).unwrap();
+        assert_eq!(rec.report.replayed, 4);
+        assert_eq!(rec.report.skipped, 3);
+        assert_eq!(rec.streams.len(), 1);
+        assert!(rec.streams[0].1.is_empty(), "failed ingest leaves no points");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn session_replay_rebuilds_artifacts() {
+        let dir = tmpdir("session");
+        let pts = batches(11, 80, &[80]).pop().unwrap();
+        {
+            let mut rec = recover(&dir, 1).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenSession {
+                    session: 3,
+                    d_cut: 3.0,
+                    density: DensityModel::GaussianKernel,
+                    pts: DynPoints::F64(pts.clone()),
+                })
+                .unwrap();
+            rec.writer
+                .append(&JournalEntry::Recut { session: 3, rho_min: 1.0, delta_min: 5.0 })
+                .unwrap();
+        }
+        let rec = recover(&dir, 1).unwrap();
+        assert_eq!(rec.sessions.len(), 1);
+        assert_eq!(rec.next_session_id, 4);
+        let s = &rec.sessions[0];
+        let want = Dpc::new(DpcParams {
+            d_cut: 3.0,
+            rho_min: 0.0,
+            delta_min: f64::INFINITY,
+            density: DensityModel::GaussianKernel,
+            ..DpcParams::default()
+        })
+        .run(&pts)
+        .unwrap();
+        assert_eq!(s.rho, want.rho);
+        assert_eq!(s.dep, want.dep);
+        assert_eq!(s.delta, want.delta);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_journal_disagreements_are_corrupt_manifest() {
+        // Manifest missing but journal present.
+        let dir = tmpdir("nomanifest");
+        {
+            let _ = recover(&dir, 1).unwrap();
+        }
+        std::fs::remove_file(dir.join(manifest::MANIFEST_FILE)).unwrap();
+        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        // Manifest pointing past the journal's end.
+        let dir = tmpdir("staleoffset");
+        {
+            let _ = recover(&dir, 1).unwrap();
+        }
+        manifest::write(
+            &dir,
+            &Manifest { checkpoint_seq: 0, journal_offset: 4096, next_lsn: 1, next_session_id: 1 },
+        )
+        .unwrap();
+        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        // Manifest pointing at a missing journal.
+        let dir = tmpdir("nojournal");
+        {
+            let _ = recover(&dir, 1).unwrap();
+        }
+        std::fs::remove_file(dir.join(JOURNAL_FILE)).unwrap();
+        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_restart_replays_only_the_suffix() {
+        let dir = tmpdir("ckptsuffix");
+        let all = batches(23, 120, &[50, 40, 30]);
+        {
+            let mut rec = recover(&dir, 1).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 3.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            let mut live =
+                StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+            for b in &all[..2] {
+                rec.writer
+                    .append(&JournalEntry::Ingest {
+                        stream: 1,
+                        rho_min: 0.0,
+                        delta_min: 0.0,
+                        batch: DynPoints::F64(b.clone()),
+                    })
+                    .unwrap();
+                live.ingest(b).unwrap();
+            }
+            // Checkpoint covering the first two batches...
+            let data = CheckpointData {
+                streams: vec![(1, DynStreamState::F64(live.export_state()))],
+                sessions: Vec::new(),
+            };
+            checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap();
+            // ...then one post-checkpoint batch before the "crash".
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 1,
+                    rho_min: 0.0,
+                    delta_min: 0.0,
+                    batch: DynPoints::F64(all[2].clone()),
+                })
+                .unwrap();
+        }
+        let rec = recover(&dir, 1).unwrap();
+        assert_eq!(rec.report.checkpoint_seq, 1);
+        assert_eq!(rec.report.replayed, 1, "only the post-checkpoint ingest replays");
+        let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+
+        let mut fresh =
+            StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+        for b in &all {
+            fresh.ingest(b).unwrap();
+        }
+        assert_eq!(got.rho(), fresh.rho());
+        assert_eq!(got.dep(), fresh.dep());
+        assert_eq!(got.delta(), fresh.delta());
+        assert_eq!(got.level_sizes(), fresh.level_sizes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

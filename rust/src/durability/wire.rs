@@ -1,0 +1,310 @@
+//! Little-endian wire codecs shared by the journal, checkpoint, and
+//! manifest formats.
+//!
+//! Decoding is *total*: every read goes through the bounds-checked
+//! [`Cursor`], every length is validated against the bytes actually
+//! present before a single element is allocated, and every decoder
+//! returns `Result` — a malformed buffer yields a detail string (which
+//! the caller wraps into the appropriate `DpcError::Corrupt*` variant
+//! with positional context), never a panic or a partially-filled value.
+
+use crate::dpc::DensityModel;
+use crate::geom::{Dtype, DynPoints, PointStore, Scalar};
+
+/// Bounds-checked forward reader over a byte slice.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Bytes consumed so far (for error positions).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "need {n} bytes at offset {}, only {} remain",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Assert the buffer is fully consumed — trailing garbage inside a
+    /// length-delimited frame is corruption, not slack.
+    pub fn expect_end(&self, what: &str) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{what}: {} trailing bytes after payload", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// DensityModel codec
+// ---------------------------------------------------------------------------
+
+/// `u8` tag + `u32` k (zero unless k-NN). Tags are append-only: 0 cutoff,
+/// 1 knn, 2 gauss, 3 epan.
+pub fn put_density(out: &mut Vec<u8>, model: DensityModel) {
+    let (tag, k) = match model {
+        DensityModel::CutoffCount => (0u8, 0u32),
+        DensityModel::KnnRadius { k } => (1, k),
+        DensityModel::GaussianKernel => (2, 0),
+        DensityModel::Epanechnikov => (3, 0),
+    };
+    out.push(tag);
+    put_u32(out, k);
+}
+
+pub fn get_density(cur: &mut Cursor<'_>) -> Result<DensityModel, String> {
+    let tag = cur.u8()?;
+    let k = cur.u32()?;
+    let model = match tag {
+        0 => DensityModel::CutoffCount,
+        1 => DensityModel::KnnRadius { k },
+        2 => DensityModel::GaussianKernel,
+        3 => DensityModel::Epanechnikov,
+        other => return Err(format!("unknown density model tag {other}")),
+    };
+    if tag != 1 && k != 0 {
+        return Err(format!("density tag {tag} carries spurious k = {k}"));
+    }
+    model.validate().map_err(|e| e.to_string())?;
+    Ok(model)
+}
+
+// ---------------------------------------------------------------------------
+// Point-batch codec
+// ---------------------------------------------------------------------------
+
+/// `u8` dtype tag (4 = f32, 8 = f64, matching the `datasets::io` v2
+/// header byte) + `u64` n + `u32` dim + n·dim little-endian coordinates.
+pub fn put_points(out: &mut Vec<u8>, pts: &DynPoints) {
+    match pts {
+        DynPoints::F32(p) => put_store(out, p),
+        DynPoints::F64(p) => put_store(out, p),
+    }
+}
+
+pub fn put_store<S: Scalar>(out: &mut Vec<u8>, pts: &PointStore<S>) {
+    out.push(S::DTYPE.size_bytes() as u8);
+    put_u64(out, pts.len() as u64);
+    put_u32(out, pts.dim() as u32);
+    for &c in pts.coords() {
+        c.write_le(out);
+    }
+}
+
+pub fn get_points(cur: &mut Cursor<'_>) -> Result<DynPoints, String> {
+    let tag = cur.u8()?;
+    let dtype =
+        Dtype::from_tag(tag).ok_or_else(|| format!("unknown dtype tag {tag} in point batch"))?;
+    match dtype {
+        Dtype::F32 => Ok(DynPoints::F32(get_store_body(cur)?)),
+        Dtype::F64 => Ok(DynPoints::F64(get_store_body(cur)?)),
+    }
+}
+
+/// Decode a `PointStore<S>` whose dtype tag must match `S` exactly (used
+/// by the checkpoint's typed stream sections).
+pub fn get_store<S: Scalar>(cur: &mut Cursor<'_>) -> Result<PointStore<S>, String> {
+    let tag = cur.u8()?;
+    if tag as usize != S::DTYPE.size_bytes() {
+        return Err(format!("dtype tag {tag} does not match expected {}", S::DTYPE));
+    }
+    get_store_body(cur)
+}
+
+fn get_store_body<S: Scalar>(cur: &mut Cursor<'_>) -> Result<PointStore<S>, String> {
+    let n = cur.u64()?;
+    let d = cur.u32()? as usize;
+    // n = 0 is legal (a checkpointed stream that has not ingested yet);
+    // d = 0 never is.
+    if d == 0 {
+        return Err(format!("point batch with dim = 0 (n = {n})"));
+    }
+    // Size check BEFORE allocation: the coordinate payload must actually
+    // be present, so a forged n can never drive a huge reservation.
+    let want = (n as usize)
+        .checked_mul(d)
+        .and_then(|c| c.checked_mul(S::BYTES))
+        .ok_or_else(|| format!("point batch size overflows: n = {n}, dim = {d}"))?;
+    if cur.remaining() < want {
+        return Err(format!(
+            "point batch claims {want} coordinate bytes, only {} remain",
+            cur.remaining()
+        ));
+    }
+    let n = n as usize;
+    let mut coords = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        coords.push(S::read_le(cur.take(S::BYTES)?));
+    }
+    PointStore::try_new(coords, d).map_err(|e| e.to_string())
+}
+
+/// `u64` length + raw bytes, for variable-length strings (stream names
+/// never occur — this carries `built_by` engine labels in checkpoints).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn get_str(cur: &mut Cursor<'_>) -> Result<String, String> {
+    let len = cur.u64()? as usize;
+    if len > 4096 {
+        return Err(format!("string length {len} exceeds sanity bound 4096"));
+    }
+    let bytes = cur.take(len)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| "string is not valid UTF-8".into())
+}
+
+/// `u64` count + `u32` elements.
+pub fn put_u32_slice(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+pub fn get_u32_vec(cur: &mut Cursor<'_>) -> Result<Vec<u32>, String> {
+    let len = cur.u64()? as usize;
+    if cur.remaining() < len.checked_mul(4).ok_or("u32 slice length overflows")? {
+        return Err(format!("u32 slice claims {len} elements, buffer too short"));
+    }
+    (0..len).map(|_| cur.u32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::PointSet;
+
+    #[test]
+    fn cursor_reads_and_bounds() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 7);
+        put_u64(&mut buf, 1 << 40);
+        put_f64(&mut buf, -2.5);
+        buf.push(9);
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(cur.u32().unwrap(), 7);
+        assert_eq!(cur.u64().unwrap(), 1 << 40);
+        assert_eq!(cur.f64().unwrap(), -2.5);
+        assert_eq!(cur.u8().unwrap(), 9);
+        cur.expect_end("test").unwrap();
+        assert!(cur.u8().is_err(), "read past end must fail");
+    }
+
+    #[test]
+    fn density_round_trips_and_rejects_bad_tags() {
+        for model in [
+            DensityModel::CutoffCount,
+            DensityModel::KnnRadius { k: 5 },
+            DensityModel::GaussianKernel,
+            DensityModel::Epanechnikov,
+        ] {
+            let mut buf = Vec::new();
+            put_density(&mut buf, model);
+            assert_eq!(get_density(&mut Cursor::new(&buf)).unwrap(), model);
+        }
+        let bad = [7u8, 0, 0, 0, 0];
+        assert!(get_density(&mut Cursor::new(&bad)).is_err());
+        // Spurious k on a non-knn tag is corruption, not slack.
+        let spurious = [0u8, 3, 0, 0, 0];
+        assert!(get_density(&mut Cursor::new(&spurious)).is_err());
+        // knn with k = 0 fails model validation.
+        let zero_k = [1u8, 0, 0, 0, 0];
+        assert!(get_density(&mut Cursor::new(&zero_k)).is_err());
+    }
+
+    #[test]
+    fn points_round_trip_both_dtypes() {
+        let f64_pts = DynPoints::F64(PointSet::new(vec![1.0, 2.0, 3.0, 4.5], 2));
+        let f32_pts = DynPoints::F32(PointStore::<f32>::new(vec![1.0, 2.0, 3.0], 3));
+        for pts in [f64_pts, f32_pts] {
+            let mut buf = Vec::new();
+            put_points(&mut buf, &pts);
+            let mut cur = Cursor::new(&buf);
+            let back = get_points(&mut cur).unwrap();
+            cur.expect_end("points").unwrap();
+            assert_eq!(back.dtype(), pts.dtype());
+            assert_eq!((back.len(), back.dim()), (pts.len(), pts.dim()));
+            assert_eq!(back.clone().into_f64().coords(), pts.clone().into_f64().coords());
+        }
+    }
+
+    #[test]
+    fn forged_point_count_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        put_points(&mut buf, &DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2)));
+        // Inflate n to a huge value; the coordinate bytes are absent, so
+        // the size check must fire (and must not try to allocate first).
+        buf[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(get_points(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn typed_store_rejects_dtype_mismatch() {
+        let mut buf = Vec::new();
+        put_store(&mut buf, &PointSet::new(vec![1.0, 2.0], 2));
+        assert!(get_store::<f32>(&mut Cursor::new(&buf)).is_err());
+        assert!(get_store::<f64>(&mut Cursor::new(&buf)).is_ok());
+    }
+
+    #[test]
+    fn strings_and_slices_round_trip() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "rust-tree");
+        put_u32_slice(&mut buf, &[3, 1, 4, 1, 5]);
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(get_str(&mut cur).unwrap(), "rust-tree");
+        assert_eq!(get_u32_vec(&mut cur).unwrap(), vec![3, 1, 4, 1, 5]);
+        cur.expect_end("strings").unwrap();
+    }
+}

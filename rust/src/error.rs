@@ -36,6 +36,18 @@ pub enum DpcError {
     Backend { engine: String, message: String },
     /// An underlying I/O failure (dataset files, label dumps).
     Io(std::io::Error),
+    /// A fully-present write-ahead journal frame failed validation (bad
+    /// magic/version, CRC mismatch, LSN discontinuity, undecodable
+    /// payload). Distinct from a *torn tail* — an incomplete final frame —
+    /// which recovery truncates silently instead of surfacing.
+    CorruptJournal { offset: u64, detail: String },
+    /// A checkpoint file failed validation (truncation, CRC mismatch,
+    /// inconsistent section structure). Checkpoints are all-or-nothing:
+    /// no partially-restored state ever escapes the decoder.
+    CorruptCheckpoint { detail: String },
+    /// The durability manifest is unreadable or inconsistent with the
+    /// files it points at (e.g. a journal offset past the journal's end).
+    CorruptManifest { detail: String },
 }
 
 impl fmt::Display for DpcError {
@@ -66,6 +78,11 @@ impl fmt::Display for DpcError {
             DpcError::UnknownSession(id) => write!(f, "unknown session {id}"),
             DpcError::Backend { engine, message } => write!(f, "{engine} backend: {message}"),
             DpcError::Io(e) => write!(f, "io: {e}"),
+            DpcError::CorruptJournal { offset, detail } => {
+                write!(f, "corrupt journal at byte {offset}: {detail}")
+            }
+            DpcError::CorruptCheckpoint { detail } => write!(f, "corrupt checkpoint: {detail}"),
+            DpcError::CorruptManifest { detail } => write!(f, "corrupt manifest: {detail}"),
         }
     }
 }
@@ -105,6 +122,9 @@ mod tests {
             (DpcError::MissingStage { need: "density", call: "cut" }, "density"),
             (DpcError::UnknownSession(9), "9"),
             (DpcError::Backend { engine: "xla".into(), message: "boom".into() }, "boom"),
+            (DpcError::CorruptJournal { offset: 24, detail: "crc mismatch".into() }, "byte 24"),
+            (DpcError::CorruptCheckpoint { detail: "truncated".into() }, "truncated"),
+            (DpcError::CorruptManifest { detail: "offset past journal end".into() }, "manifest"),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -46,6 +46,11 @@
 //! memory-bound traversals and produces byte-identical results whenever
 //! the data is f32-losslessly representable (see DESIGN.md §2b).
 //!
+//! Serve mode can run **durably**: with `--durable <dir>` the coordinator
+//! write-ahead-journals every state-changing command and checkpoints live
+//! stream/session state, so a crashed server restarts exactly where it
+//! stopped ([`durability`], DESIGN.md §Durability).
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -62,6 +67,7 @@ pub mod dpc;
 pub mod datasets;
 pub mod runtime;
 pub mod coordinator;
+pub mod durability;
 pub mod bench;
 pub mod cli;
 pub mod metrics;

@@ -32,6 +32,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "decision" => cmd_decision(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
+        "journal" => cmd_journal(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -290,12 +291,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get_parse::<usize>("workers")? {
         cfg.workers = w.max(1);
     }
+    if let Some(dir) = args.get("durable") {
+        cfg.durable_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(n) = args.get_parse::<u64>("fsync-every")? {
+        cfg.fsync_every = n;
+    }
     args.reject_unknown()?;
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`",
+        "parcluster serve: {} workers, xla={}, durable={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`,\n  `checkpoint` (durable mode: snapshot state now)",
         coord.config().workers,
-        coord.has_xla()
+        coord.has_xla(),
+        coord.is_durable()
     );
     let stdin = std::io::stdin();
     let mut ids = Vec::new();
@@ -406,6 +414,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     eprintln!("closestream failed: unknown stream {sid}");
                 }
             }
+            "checkpoint" => {
+                // Accept both `checkpoint` and `checkpoint now`.
+                if parts.len() > 2 || (parts.len() == 2 && parts[1] != "now") {
+                    eprintln!("skipping malformed checkpoint line: {t:?} (want `checkpoint [now]`)");
+                    continue;
+                }
+                match coord.checkpoint_now() {
+                    Ok(m) => println!(
+                        "checkpoint {} taken (journal offset {}, next lsn {})",
+                        m.checkpoint_seq, m.journal_offset, m.next_lsn
+                    ),
+                    Err(e) => eprintln!("checkpoint failed: {e}"),
+                }
+            }
             "recut" => {
                 if parts.len() != 4 {
                     eprintln!("skipping malformed recut line: {t:?} (want `recut <session> <rho_min> <delta_min>`)");
@@ -480,5 +502,82 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     println!("--- metrics ---\n{}", coord.metrics.render());
+    Ok(())
+}
+
+/// `journal inspect --dir DIR` — read-only durable-directory forensics:
+/// the manifest, the checkpoint files, and every journal frame, plus
+/// whether the tail is clean or torn. Corruption surfaces as the same
+/// typed error recovery would report, never a partial parse.
+fn cmd_journal(args: &Args) -> Result<()> {
+    use parcluster::durability::{journal, manifest, JournalEntry};
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    if sub != "inspect" {
+        bail!("unknown journal subcommand {sub:?} (want `journal inspect --dir DIR`)");
+    }
+    let dir = std::path::PathBuf::from(args.require("dir")?);
+    args.reject_unknown()?;
+
+    match manifest::read(&dir)? {
+        None => println!("manifest   : none (directory not yet initialized)"),
+        Some(m) => println!(
+            "manifest   : checkpoint_seq={} journal_offset={} next_lsn={} next_session_id={}",
+            m.checkpoint_seq, m.journal_offset, m.next_lsn, m.next_session_id
+        ),
+    }
+    let mut ckpts: Vec<(String, u64)> = std::fs::read_dir(&dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.starts_with("checkpoint-") && n.ends_with(".pclc")
+        })
+        .map(|e| {
+            let len = e.metadata().map(|m| m.len()).unwrap_or(0);
+            (e.file_name().to_string_lossy().into_owned(), len)
+        })
+        .collect();
+    ckpts.sort();
+    if ckpts.is_empty() {
+        println!("checkpoints: none");
+    } else {
+        for (name, len) in &ckpts {
+            println!("checkpoint : {name} ({len} bytes)");
+        }
+    }
+
+    let jpath = dir.join(journal::JOURNAL_FILE);
+    if !jpath.exists() {
+        println!("journal    : none");
+        return Ok(());
+    }
+    let scan = journal::scan(&jpath)?;
+    println!("journal    : {} frames, {} valid bytes", scan.entries.len(), scan.valid_len);
+    let mut table = Table::new(&["offset", "lsn", "kind", "detail"]);
+    for f in &scan.entries {
+        let detail = match &f.entry {
+            JournalEntry::OpenStream { stream, dim, dtype, d_cut, density } => {
+                format!("stream={stream} dim={dim} dtype={dtype} d_cut={d_cut} density={density}")
+            }
+            JournalEntry::Ingest { stream, rho_min, delta_min, batch } => {
+                format!("stream={stream} n={} rho_min={rho_min} delta_min={delta_min}", batch.len())
+            }
+            JournalEntry::CloseStream { stream } => format!("stream={stream}"),
+            JournalEntry::OpenSession { session, d_cut, density, pts } => {
+                format!("session={session} n={} d_cut={d_cut} density={density}", pts.len())
+            }
+            JournalEntry::Recut { session, rho_min, delta_min } => {
+                format!("session={session} rho_min={rho_min} delta_min={delta_min}")
+            }
+            JournalEntry::CloseSession { session } => format!("session={session}"),
+        };
+        table.row(vec![f.offset.to_string(), f.lsn.to_string(), f.entry.kind_name().to_string(), detail]);
+    }
+    table.print();
+    if scan.torn_bytes > 0 {
+        println!("tail       : TORN ({} bytes past the last valid frame would be truncated)", scan.torn_bytes);
+    } else {
+        println!("tail       : clean (next lsn {})", scan.next_lsn);
+    }
     Ok(())
 }

@@ -113,14 +113,15 @@ pub fn gen_degenerate_points(rng: &mut SplitMix64, n: usize, d: usize) -> PointS
     PointSet::new(coords, d)
 }
 
-/// A random density model: the three definitions are equally likely, with
+/// A random density model: the four definitions are equally likely, with
 /// `k` drawn small enough (1..=8) that k-NN radii stay meaningful on
 /// property-test-sized inputs.
 pub fn gen_density_model(rng: &mut SplitMix64) -> DensityModel {
-    match rng.next_below(3) {
+    match rng.next_below(4) {
         0 => DensityModel::CutoffCount,
         1 => DensityModel::KnnRadius { k: 1 + rng.next_below(8) as u32 },
-        _ => DensityModel::GaussianKernel,
+        2 => DensityModel::GaussianKernel,
+        _ => DensityModel::Epanechnikov,
     }
 }
 
@@ -134,7 +135,8 @@ pub fn gen_dpc_params(rng: &mut SplitMix64) -> DpcParams {
     let rho_min = match density {
         DensityModel::CutoffCount => rng.next_below(5) as f64,
         DensityModel::KnnRadius { .. } => rng.next_below(12) as f64,
-        DensityModel::GaussianKernel => (rng.next_below(5) * 3000) as f64,
+        // Kernel-mass units (weights of up to 4096 per in-ball neighbor).
+        DensityModel::GaussianKernel | DensityModel::Epanechnikov => (rng.next_below(5) * 3000) as f64,
     };
     let delta_min = [0.0, 2.0, 4.0, 8.0, f64::INFINITY][rng.next_below(5) as usize];
     DpcParams { d_cut, rho_min, delta_min, density, ..DpcParams::default() }
@@ -192,7 +194,7 @@ mod tests {
             assert!(!p.delta_min.is_nan());
             seen.insert(std::mem::discriminant(&p.density));
         }
-        assert_eq!(seen.len(), 3, "all three models must be generated");
+        assert_eq!(seen.len(), 4, "all four models must be generated");
     }
 
     #[test]

@@ -61,6 +61,12 @@ fn gen_family(family: &str, seed: u64, n: usize) -> PointSet {
     }
 }
 
+/// Models whose ρ is a fixed-point kernel mass (up to 4096 per neighbor)
+/// rather than a neighbor count — thresholds must scale accordingly.
+fn kernel_mass_units(model: DensityModel) -> bool {
+    matches!(model, DensityModel::GaussianKernel | DensityModel::Epanechnikov)
+}
+
 fn family_d_cut(family: &str) -> f64 {
     match family {
         "uniform" => 4.0,
@@ -160,7 +166,7 @@ fn density_models_conform_across_dep_algos_and_strategies() {
         for model in DensityModel::REPRESENTATIVE {
             let params = DpcParams {
                 d_cut: family_d_cut(family),
-                rho_min: if model == DensityModel::GaussianKernel { 8000.0 } else { 2.0 },
+                rho_min: if kernel_mass_units(model) { 8000.0 } else { 2.0 },
                 delta_min: 6.0,
                 density: model,
                 ..DpcParams::default()
@@ -203,7 +209,7 @@ fn streaming_matches_fresh_for_every_density_model() {
                 assert_eq!(stream.dep(), &art.dep[..], "{family} {model}: dep at {hi}");
                 assert_eq!(stream.delta(), &art.delta[..], "{family} {model}: delta at {hi}");
                 let (rho_min, delta_min) =
-                    if model == DensityModel::GaussianKernel { (8000.0, 4.0) } else { (2.0, 4.0) };
+                    if kernel_mass_units(model) { (8000.0, 4.0) } else { (2.0, 4.0) };
                 let a = stream.cut(rho_min, delta_min).unwrap();
                 let b = fresh.cut(rho_min, delta_min).unwrap();
                 assert_identical(&a, &b, &format!("{family} {model}: cut at {hi}"));
@@ -223,7 +229,7 @@ fn f32_and_f64_byte_identical_for_every_density_model() {
     for model in DensityModel::REPRESENTATIVE {
         let params = DpcParams {
             d_cut: 3.0,
-            rho_min: if model == DensityModel::GaussianKernel { 8000.0 } else { 2.0 },
+            rho_min: if kernel_mass_units(model) { 8000.0 } else { 2.0 },
             delta_min: 4.0,
             dtype: Dtype::F64,
             density: model,

@@ -1,0 +1,419 @@
+//! Durability integration suite: the recovery differential gate plus the
+//! kill-point matrix.
+//!
+//! The contract under test (DESIGN.md §Durability): recovering a durable
+//! directory yields state **byte-identical** to a fresh build over the
+//! concatenated batches — for every density model and dtype, at any
+//! thread count — and every corrupted input yields a typed
+//! `DpcError::Corrupt*`, never a panic and never a partial parse.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::dpc::{DensityModel, Dpc, DpcParams, StreamingSession};
+use parcluster::durability::{
+    checkpoint::{self, CheckpointData, DynStreamState},
+    journal::{self, JournalEntry, JOURNAL_FILE},
+    manifest::{self, Manifest, MANIFEST_FILE},
+    recovery::{recover, DynStream},
+};
+use parcluster::error::DpcError;
+use parcluster::geom::{Dtype, DynPoints, PointSet};
+use parcluster::parlay;
+use parcluster::prng::SplitMix64;
+use parcluster::proputil::gen_clustered_points;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parcluster-durability-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Three clustered batches (integer-snapped so f32 casts are lossless and
+/// the f32/f64 legs can share one expected history).
+fn batches(seed: u64, n: usize, splits: &[usize]) -> Vec<PointSet> {
+    let mut rng = SplitMix64::new(seed);
+    let pts = gen_clustered_points(&mut rng, n, 2, 3, 50.0, 1.8);
+    let snapped: Vec<f64> = pts.coords().iter().map(|c| (c * 4.0).round() / 4.0).collect();
+    let mut out = Vec::new();
+    let mut at = 0;
+    for &len in splits {
+        out.push(PointSet::new(snapped[at * 2..(at + len) * 2].to_vec(), 2));
+        at += len;
+    }
+    assert_eq!(at, n);
+    out
+}
+
+/// Journal an OpenStream + every batch (checkpointing after
+/// `checkpoint_after` batches if `Some`), then "crash" by dropping the
+/// writer. Returns the stream id used.
+fn write_history(
+    dir: &PathBuf,
+    dtype: Dtype,
+    model: DensityModel,
+    all: &[PointSet],
+    checkpoint_after: Option<usize>,
+) -> u64 {
+    let mut rec = recover(dir, 1).unwrap();
+    rec.writer
+        .append(&JournalEntry::OpenStream { stream: 1, dim: 2, dtype, d_cut: 3.0, density: model })
+        .unwrap();
+    let mut live32 = StreamingSession::<f32>::new_with_model(2, 3.0, model).unwrap();
+    let mut live64 = StreamingSession::<f64>::new_with_model(2, 3.0, model).unwrap();
+    for (i, b) in all.iter().enumerate() {
+        let batch = DynPoints::F64(b.clone()).cast(dtype);
+        rec.writer
+            .append(&JournalEntry::Ingest { stream: 1, rho_min: 0.0, delta_min: 20.0, batch: batch.clone() })
+            .unwrap();
+        match &batch {
+            DynPoints::F32(b) => live32.ingest(b).unwrap(),
+            DynPoints::F64(b) => live64.ingest(b).unwrap(),
+        }
+        if checkpoint_after == Some(i + 1) {
+            let state = match dtype {
+                Dtype::F32 => DynStreamState::F32(live32.export_state()),
+                Dtype::F64 => DynStreamState::F64(live64.export_state()),
+            };
+            let data = CheckpointData { streams: vec![(1, state)], sessions: Vec::new() };
+            checkpoint::write(dir, &mut rec.writer, &data, 2).unwrap();
+        }
+    }
+    1
+}
+
+/// Fresh (never-crashed) f64 build over the same batches.
+fn fresh_f64(model: DensityModel, all: &[PointSet]) -> StreamingSession<f64> {
+    let mut s = StreamingSession::<f64>::new_with_model(2, 3.0, model).unwrap();
+    for b in all {
+        s.ingest(b).unwrap();
+    }
+    s
+}
+
+/// Fresh f32 build over the same batches, cast through the same
+/// `DynPoints::cast` the journaled history used.
+fn fresh_f32(model: DensityModel, all: &[PointSet]) -> StreamingSession<f32> {
+    let mut s = StreamingSession::<f32>::new_with_model(2, 3.0, model).unwrap();
+    for b in all {
+        let DynPoints::F32(b32) = DynPoints::F64(b.clone()).cast(Dtype::F32) else { unreachable!() };
+        s.ingest(&b32).unwrap();
+    }
+    s
+}
+
+/// The PR's acceptance gate: for every density model × dtype, a recovery
+/// that stacks a mid-history checkpoint with a journal suffix produces
+/// (ρ, λ, δ) byte-identical to a fresh build on the concatenated batches.
+#[test]
+fn recovery_differential_every_model_and_dtype() {
+    let all = batches(41, 120, &[50, 40, 30]);
+    for model in DensityModel::REPRESENTATIVE {
+        for dtype in [Dtype::F64, Dtype::F32] {
+            let dir = tmpdir(&format!("diff-{model}-{dtype}"));
+            write_history(&dir, dtype, model, &all, Some(2));
+            let rec = recover(&dir, 1).unwrap();
+            assert_eq!(rec.report.checkpoint_seq, 1, "{model}/{dtype}");
+            assert_eq!(rec.report.replayed, 1, "{model}/{dtype}: only the suffix replays");
+            assert_eq!(rec.streams.len(), 1, "{model}/{dtype}");
+            match &rec.streams[0].1 {
+                DynStream::F64(got) => {
+                    assert_eq!(dtype, Dtype::F64);
+                    let fresh = fresh_f64(model, &all);
+                    assert_eq!(got.rho(), fresh.rho(), "{model}/f64 rho");
+                    assert_eq!(got.dep(), fresh.dep(), "{model}/f64 dep");
+                    assert_eq!(got.delta(), fresh.delta(), "{model}/f64 delta");
+                    assert_eq!(got.level_sizes(), fresh.level_sizes(), "{model}/f64 forest shape");
+                }
+                DynStream::F32(got) => {
+                    assert_eq!(dtype, Dtype::F32);
+                    let fresh = fresh_f32(model, &all);
+                    assert_eq!(got.rho(), fresh.rho(), "{model}/f32 rho");
+                    assert_eq!(got.dep(), fresh.dep(), "{model}/f32 dep");
+                    assert_eq!(got.delta(), fresh.delta(), "{model}/f32 delta");
+                    assert_eq!(got.level_sizes(), fresh.level_sizes(), "{model}/f32 forest shape");
+                }
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+}
+
+/// Recovery replays through the same deterministic parallel paths the live
+/// server runs, so the thread count cannot change the recovered bytes:
+/// a 1-thread and an 8-thread recovery agree with each other and with a
+/// 1-thread fresh build.
+#[test]
+fn replay_is_thread_count_invariant() {
+    let all = batches(43, 150, &[60, 50, 40]);
+    let dir = tmpdir("threads");
+    write_history(&dir, Dtype::F64, DensityModel::Epanechnikov, &all, None);
+    let prev = parlay::num_threads();
+    parlay::set_threads(1);
+    let fresh = fresh_f64(DensityModel::Epanechnikov, &all);
+    let rec1 = recover(&dir, 1).unwrap();
+    parlay::set_threads(8);
+    let rec8 = recover(&dir, 1).unwrap();
+    parlay::set_threads(prev);
+    let (DynStream::F64(s1), DynStream::F64(s8)) = (&rec1.streams[0].1, &rec8.streams[0].1) else {
+        panic!("f64 streams")
+    };
+    assert_eq!(s1.rho(), s8.rho());
+    assert_eq!(s1.dep(), s8.dep());
+    assert_eq!(s1.delta(), s8.delta());
+    assert_eq!(s1.rho(), fresh.rho());
+    assert_eq!(s1.dep(), fresh.dep());
+    assert_eq!(s1.delta(), fresh.delta());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 1 — torn final frame: an append cut mid-write is silently
+/// truncated; everything before it recovers, and the journal accepts new
+/// appends at the truncation point.
+#[test]
+fn torn_final_frame_is_truncated_not_fatal() {
+    let all = batches(47, 90, &[40, 30, 20]);
+    let dir = tmpdir("torn");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    let jpath = dir.join(JOURNAL_FILE);
+    let len = std::fs::metadata(&jpath).unwrap().len();
+    // Cut the last frame short (well past its 8-byte prefix, well short of
+    // its end) — the canonical kill -9 mid-append.
+    let f = std::fs::OpenOptions::new().write(true).open(&jpath).unwrap();
+    f.set_len(len - 37).unwrap();
+    drop(f);
+
+    let mut rec = recover(&dir, 1).unwrap();
+    assert!(rec.report.torn_bytes > 0, "the cut frame is torn, not corrupt");
+    assert_eq!(rec.report.replayed, 3, "open + first two ingests survive");
+    let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all[..2]);
+    assert_eq!(got.rho(), fresh.rho());
+    assert_eq!(got.delta(), fresh.delta());
+
+    // The re-armed writer appends where the valid prefix ends; a second
+    // recovery then sees the re-written batch.
+    rec.writer
+        .append(&JournalEntry::Ingest {
+            stream: 1,
+            rho_min: 0.0,
+            delta_min: 20.0,
+            batch: DynPoints::F64(all[2].clone()),
+        })
+        .unwrap();
+    drop(rec);
+    let rec2 = recover(&dir, 1).unwrap();
+    let DynStream::F64(got) = &rec2.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    assert_eq!(got.rho(), fresh.rho());
+    assert_eq!(got.dep(), fresh.dep());
+    assert_eq!(got.delta(), fresh.delta());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill points 2–5 — every *corrupted* (not merely torn) input is a typed
+/// `DpcError::Corrupt*`: bit-flipped journal CRC, truncated checkpoint,
+/// bit-flipped checkpoint, garbage manifest, stale manifest offset.
+#[test]
+fn corruption_yields_typed_errors_never_partial_state() {
+    let all = batches(53, 90, &[40, 30, 20]);
+
+    // Bit-flip inside a complete journal frame -> CorruptJournal.
+    let dir = tmpdir("crcflip");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    let jpath = dir.join(JOURNAL_FILE);
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&jpath, &bytes).unwrap();
+    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptJournal { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // Truncated checkpoint -> CorruptCheckpoint (whole-file CRC, no
+    // partial parse).
+    let dir = tmpdir("ckpttrunc");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2));
+    let cpath = dir.join("checkpoint-1.pclc");
+    let clen = std::fs::metadata(&cpath).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&cpath).unwrap();
+    f.set_len(clen / 2).unwrap();
+    drop(f);
+    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptCheckpoint { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // Bit-flipped checkpoint -> CorruptCheckpoint.
+    let dir = tmpdir("ckptflip");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2));
+    let cpath = dir.join("checkpoint-1.pclc");
+    let mut bytes = std::fs::read(&cpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&cpath, &bytes).unwrap();
+    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptCheckpoint { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // Garbage manifest -> CorruptManifest.
+    let dir = tmpdir("garbage");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    std::fs::write(dir.join(MANIFEST_FILE), b"not a manifest, definitely").unwrap();
+    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // Manifest offset past the journal's end (a stale manifest restored
+    // next to a shorter journal) -> CorruptManifest.
+    let dir = tmpdir("stale");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    let jlen = std::fs::metadata(dir.join(JOURNAL_FILE)).unwrap().len();
+    manifest::write(
+        &dir,
+        &Manifest { checkpoint_seq: 0, journal_offset: jlen + 512, next_lsn: 99, next_session_id: 1 },
+    )
+    .unwrap();
+    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// End-to-end through the public serve surface: a durable coordinator that
+/// checkpoints, keeps working, and is killed restarts into a state whose
+/// recut output matches a never-crashed coordinator's.
+#[test]
+fn coordinator_checkpoint_crash_restart_round_trip() {
+    let all = batches(59, 120, &[50, 40, 30]);
+    let dir = tmpdir("coord");
+    let cfg = CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        durable_dir: Some(dir.clone()),
+        ..CoordinatorConfig::default()
+    };
+    let sid;
+    {
+        let coord = Coordinator::start(cfg.clone()).unwrap();
+        sid = coord.open_stream(2, 3.0).unwrap();
+        coord.wait(coord.submit_ingest(sid, Arc::new(all[0].clone()), 0.0, 20.0).unwrap()).unwrap();
+        coord.checkpoint_now().unwrap();
+        coord.wait(coord.submit_ingest(sid, Arc::new(all[1].clone()), 0.0, 20.0).unwrap()).unwrap();
+        // kill -9: drop with a journal suffix past the checkpoint.
+    }
+    let coord = Coordinator::start(cfg).unwrap();
+    let out = coord
+        .wait(coord.submit_ingest(sid, Arc::new(all[2].clone()), 0.0, 20.0).unwrap())
+        .unwrap();
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    let want = fresh.cut(0.0, 20.0).unwrap();
+    assert_eq!(out.result.rho, want.rho);
+    assert_eq!(out.result.dep, want.dep);
+    assert_eq!(out.result.delta, want.delta);
+    assert_eq!(out.result.labels, want.labels);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Randomized crash-injection sweep (nightly: `--include-ignored`): cut
+/// the journal at *every byte offset class* and flip random bytes; every
+/// outcome must be a clean prefix recovery or a typed error — never a
+/// panic, never a partially-applied entry.
+#[test]
+#[ignore = "slow randomized sweep; nightly runs it via --include-ignored"]
+fn randomized_crash_injection_sweep() {
+    let all = batches(61, 90, &[40, 30, 20]);
+    let golden = tmpdir("sweep-golden");
+    write_history(&golden, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    let journal_bytes = std::fs::read(golden.join(JOURNAL_FILE)).unwrap();
+    let manifest_bytes = std::fs::read(golden.join(MANIFEST_FILE)).unwrap();
+    std::fs::remove_dir_all(&golden).unwrap();
+
+    let dir = tmpdir("sweep");
+    let mut rng = SplitMix64::new(67);
+    for trial in 0..200 {
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(MANIFEST_FILE), &manifest_bytes).unwrap();
+        let mut j = journal_bytes.clone();
+        // Half the trials truncate (a crash mid-append); half flip a byte
+        // (a disk/copy fault).
+        if trial % 2 == 0 {
+            let cut = rng.next_below(j.len() as u64) as usize;
+            j.truncate(cut);
+        } else {
+            let at = rng.next_below(j.len() as u64) as usize;
+            j[at] ^= 1 << rng.next_below(8);
+        }
+        std::fs::write(dir.join(JOURNAL_FILE), &j).unwrap();
+        match recover(&dir, 1) {
+            Ok(rec) => {
+                // A recovered prefix must be internally consistent: the
+                // stream (if its open survived) holds a batch-prefix state
+                // that a fresh build can reproduce.
+                if let Some((_, DynStream::F64(got))) = rec.streams.first() {
+                    let mut fresh = StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+                    for b in &all {
+                        if fresh.len() + b.len() > got.len() {
+                            break;
+                        }
+                        fresh.ingest(b).unwrap();
+                    }
+                    assert_eq!(got.len(), fresh.len(), "trial {trial}: prefix is whole batches");
+                    assert_eq!(got.rho(), fresh.rho(), "trial {trial}");
+                    assert_eq!(got.delta(), fresh.delta(), "trial {trial}");
+                }
+            }
+            Err(
+                DpcError::CorruptJournal { .. }
+                | DpcError::CorruptCheckpoint { .. }
+                | DpcError::CorruptManifest { .. },
+            ) => {}
+            Err(e) => panic!("trial {trial}: non-durability error {e}"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Scan directly (the `journal inspect` path) must also never panic on
+    // the same mutated inputs.
+    let mut j = journal_bytes.clone();
+    j.truncate(journal_bytes.len() - 3);
+    let dir = tmpdir("sweep-scan");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join(JOURNAL_FILE), &j).unwrap();
+    let scan = journal::scan(&dir.join(JOURNAL_FILE)).unwrap();
+    assert!(scan.torn_bytes > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Sessions round-trip through checkpoint + journal too: an OpenSession in
+/// the journal suffix is rebuilt by replay with the exact artifacts of a
+/// fresh `Dpc` run.
+#[test]
+fn session_commands_replay_to_fresh_artifacts() {
+    let pts = batches(71, 80, &[80]).pop().unwrap();
+    let dir = tmpdir("sessions");
+    {
+        let mut rec = recover(&dir, 1).unwrap();
+        rec.writer
+            .append(&JournalEntry::OpenSession {
+                session: 5,
+                d_cut: 3.0,
+                density: DensityModel::Epanechnikov,
+                pts: DynPoints::F64(pts.clone()),
+            })
+            .unwrap();
+        rec.writer.append(&JournalEntry::Recut { session: 5, rho_min: 8000.0, delta_min: 5.0 }).unwrap();
+    }
+    let rec = recover(&dir, 1).unwrap();
+    assert_eq!(rec.sessions.len(), 1);
+    assert_eq!(rec.report.skipped, 0);
+    let got = &rec.sessions[0];
+    let want = Dpc::new(DpcParams {
+        d_cut: 3.0,
+        rho_min: 0.0,
+        delta_min: f64::INFINITY,
+        density: DensityModel::Epanechnikov,
+        ..DpcParams::default()
+    })
+    .run(&pts)
+    .unwrap();
+    assert_eq!(got.rho, want.rho);
+    assert_eq!(got.dep, want.dep);
+    assert_eq!(got.delta, want.delta);
+    assert_eq!(rec.next_session_id, 6);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -65,6 +65,12 @@ fn gen_family(family: &str, rng: &mut SplitMix64, n: usize) -> PointSet {
     }
 }
 
+/// Models whose ρ is a fixed-point kernel mass (up to 4096 per neighbor)
+/// rather than a neighbor count — thresholds must scale accordingly.
+fn kernel_mass_units(model: DensityModel) -> bool {
+    matches!(model, DensityModel::GaussianKernel | DensityModel::Epanechnikov)
+}
+
 fn assert_matches_oracle(got: &DpcResult, want: &DpcResult, ctx: &str) -> Result<(), String> {
     if got.rho != want.rho {
         return Err(format!("{ctx}: rho diverged from oracle"));
@@ -150,7 +156,7 @@ fn differential_exhaustive_model_by_algo_grid() {
             // noise threshold must clear it to bite.
             let params = DpcParams {
                 d_cut: 3.0,
-                rho_min: if model == DensityModel::GaussianKernel { 9000.0 } else { 2.0 },
+                rho_min: if kernel_mass_units(model) { 9000.0 } else { 2.0 },
                 delta_min: 5.0,
                 density: model,
                 ..DpcParams::default()
@@ -176,7 +182,7 @@ fn differential_streaming_matches_oracle() {
         let d = pts.dim();
         let params = DpcParams {
             d_cut: 3.0,
-            rho_min: if model == DensityModel::GaussianKernel { 8000.0 } else { 1.0 },
+            rho_min: if kernel_mass_units(model) { 8000.0 } else { 1.0 },
             delta_min: 6.0,
             density: model,
             ..DpcParams::default()
