@@ -1,0 +1,146 @@
+//! Leaf-kernel study: per-point gather loop vs blocked SoA leaf sweeps.
+//!
+//! Two levels. The *kernel* table isolates one leaf visit: the pre-blocked
+//! per-point idiom (gather a lane's coordinates, then the scalar
+//! `dist_sq`) against `dist_sq_block` in its portable-scalar and default
+//! (SIMD where the host has it) forms, on a synthetic dim-major block
+//! stream. The *tree* table measures what the hot paths actually buy:
+//! range-count, range-weight-sum, and kNN over a full kd-tree with the
+//! default kernel vs the scalar kernel forced — both paths byte-identical
+//! by construction (asserted here, live).
+//!
+//! ```sh
+//! cargo bench --bench leaf_kernel
+//! ```
+
+use std::time::Instant;
+
+use parcluster::bench::{fmt_secs, Table};
+use parcluster::geom::{
+    block_kernel_name, force_scalar_kernel, scalar::dist_sq_block_scalar, PointStore, Scalar, BLOCK_LANES,
+};
+use parcluster::kdtree::{KdTree, NoStats};
+use parcluster::prng::SplitMix64;
+use parcluster::proputil::gen_uniform_points;
+
+/// Median of three timed runs of `f`.
+fn med3<F: FnMut() -> f64>(mut f: F) -> f64 {
+    let mut t = [f(), f(), f()];
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t[1]
+}
+
+/// One synthetic dim-major block stream: `blocks` full blocks at dim `d`.
+fn block_stream<S: Scalar>(rng: &mut SplitMix64, blocks: usize, d: usize) -> Vec<S> {
+    (0..blocks * d * BLOCK_LANES).map(|_| S::from_f64(rng.uniform(0.0, 50.0))).collect()
+}
+
+fn kernel_row<S: Scalar>(rng: &mut SplitMix64, d: usize, table: &mut Table) {
+    const BLOCKS: usize = 50_000;
+    let stream = block_stream::<S>(rng, BLOCKS, d);
+    let q: Vec<S> = (0..d).map(|_| S::from_f64(rng.uniform(0.0, 50.0))).collect();
+    let stride = d * BLOCK_LANES;
+    let mut sink = S::ZERO;
+
+    // Pre-blocked idiom: per point, gather its coordinates out of the
+    // dim-major rows, then the scalar pairwise kernel.
+    let mut lane = vec![S::ZERO; d];
+    let per_point = med3(|| {
+        let t = Instant::now();
+        for b in 0..BLOCKS {
+            let block = &stream[b * stride..(b + 1) * stride];
+            for l in 0..BLOCK_LANES {
+                for (k, c) in lane.iter_mut().enumerate() {
+                    *c = block[k * BLOCK_LANES + l];
+                }
+                sink += S::dist_sq(&lane, &q);
+            }
+        }
+        t.elapsed().as_secs_f64()
+    });
+
+    let mut out = [S::ZERO; BLOCK_LANES];
+    let blocked_scalar = med3(|| {
+        let t = Instant::now();
+        for b in 0..BLOCKS {
+            dist_sq_block_scalar(&stream[b * stride..(b + 1) * stride], d, &q, &mut out);
+            sink += out[0];
+        }
+        t.elapsed().as_secs_f64()
+    });
+
+    let blocked_default = med3(|| {
+        let t = Instant::now();
+        for b in 0..BLOCKS {
+            S::dist_sq_block(&stream[b * stride..(b + 1) * stride], d, &q, &mut out);
+            sink += out[0];
+        }
+        t.elapsed().as_secs_f64()
+    });
+    std::hint::black_box(sink);
+
+    let dists = (BLOCKS * BLOCK_LANES) as f64;
+    table.row(vec![
+        format!("{} d={d}", S::DTYPE),
+        format!("{:.0} M/s", dists / per_point / 1e6),
+        format!("{:.0} M/s", dists / blocked_scalar / 1e6),
+        format!("{:.0} M/s", dists / blocked_default / 1e6),
+        format!("{:.2}x", per_point / blocked_default.max(1e-12)),
+    ]);
+}
+
+fn tree_rows(n: usize, d: usize, table: &mut Table) {
+    let mut rng = SplitMix64::new(0x1EAF + n as u64);
+    let pts: PointStore<f64> = gen_uniform_points(&mut rng, n, d, 100.0);
+    let tree = KdTree::build(&pts);
+    let r_sq = 9.0;
+    let weight = |ds: f64| (ds * 4.0) as u64 + 1;
+    let queries: Vec<usize> = (0..n).step_by(16).collect();
+
+    let mut run = |label: &str, f: &dyn Fn(&[f64]) -> u64| {
+        let mut sums = (0u64, 0u64);
+        let fast = med3(|| {
+            let t = Instant::now();
+            sums.0 = queries.iter().map(|&i| f(pts.point(i))).sum();
+            t.elapsed().as_secs_f64()
+        });
+        force_scalar_kernel(true);
+        let scalar = med3(|| {
+            let t = Instant::now();
+            sums.1 = queries.iter().map(|&i| f(pts.point(i))).sum();
+            t.elapsed().as_secs_f64()
+        });
+        force_scalar_kernel(false);
+        assert_eq!(sums.0, sums.1, "{label}: kernels disagree");
+        table.row(vec![
+            format!("{label} (n={n})"),
+            fmt_secs(scalar),
+            fmt_secs(fast),
+            format!("{:.2}x", scalar / fast.max(1e-12)),
+        ]);
+    };
+
+    run("range-count", &|q| tree.range_count(q, r_sq, &mut NoStats) as u64);
+    run("range-weight-sum", &|q| tree.range_weight_sum(q, r_sq, &weight, &mut NoStats));
+    run("knn (k=8)", &|q| tree.kth_nn_dist_sq(q, 8, u32::MAX).to_bits());
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(0x51D0);
+    println!("default block kernel on this host: {}", block_kernel_name());
+
+    let mut kt = Table::new(&["kernel case", "per-point", "blocked scalar", "blocked default", "speedup"]);
+    for d in [2usize, 3, 8] {
+        kernel_row::<f32>(&mut rng, d, &mut kt);
+        kernel_row::<f64>(&mut rng, d, &mut kt);
+    }
+    kt.print();
+    println!("(distances per second per core; speedup = per-point vs blocked default)");
+
+    let mut tt = Table::new(&["tree query", "forced scalar", "default kernel", "speedup"]);
+    for n in [50_000usize, 200_000] {
+        tree_rows(n, 2, &mut tt);
+    }
+    tt.print();
+    println!("(speedup > 1 means the SIMD leaf sweep wins; identical results asserted)");
+}

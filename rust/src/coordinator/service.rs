@@ -446,6 +446,12 @@ impl Coordinator {
         delta_min: f64,
     ) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
+        // Reject poisoned batches BEFORE the WAL append below: a journaled
+        // batch is replayed on recovery, and a non-finite coordinate that
+        // got past this point would re-panic the stream engine on every
+        // restart. (Stream-level `ingest` re-validates, but by then the
+        // entry is durable.)
+        batch.validate_finite()?;
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };

@@ -143,7 +143,8 @@ pub fn write_csv(pts: &PointSet, path: &Path) -> std::io::Result<()> {
 
 /// Read CSV of floats (`#`-prefixed lines and a non-numeric first row are
 /// skipped as headers/comments). Ragged rows surface as
-/// [`DpcError::DimensionMismatch`], NaN/∞ as [`DpcError::NonFinite`].
+/// [`DpcError::DimensionMismatch`], NaN/∞ as
+/// [`DpcError::NonFiniteCoordinate`].
 pub fn read_csv(path: &Path) -> Result<PointSet, DpcError> {
     let r = BufReader::new(File::open(path)?);
     let mut coords: Vec<f64> = Vec::new();
@@ -170,9 +171,8 @@ pub fn read_csv(path: &Path) -> Result<PointSet, DpcError> {
         coords.extend(vals);
     }
     let d = d.ok_or(DpcError::EmptyInput)?;
-    let pts = PointSet::try_new(coords, d)?;
-    pts.validate_finite()?;
-    Ok(pts)
+    // try_new scans for non-finite coordinates itself.
+    PointSet::try_new(coords, d)
 }
 
 #[cfg(test)]
@@ -286,9 +286,11 @@ mod tests {
     #[test]
     fn binary_rejects_nonfinite_coords() {
         let path = tmpdir().join("nan.pclb");
-        let pts = PointSet::new(vec![1.0, 2.0, f64::NAN, 4.0], 2);
+        // Unvalidated generator path: `PointSet::new` rejects the NaN itself.
+        let coords = [1.0, 2.0, f64::NAN, 4.0];
+        let pts = PointSet::from_flat_fn(2, 2, |i| coords[i]);
         write_binary(&pts, &path).unwrap();
-        assert!(matches!(read_binary(&path), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+        assert!(matches!(read_binary(&path), Err(DpcError::NonFiniteCoordinate { point: 1, dim: 0 })));
     }
 
     #[test]
@@ -326,7 +328,7 @@ mod tests {
     fn csv_rejects_nonfinite_and_empty() {
         let path = tmpdir().join("nan.csv");
         std::fs::write(&path, "1.0,2.0\nNaN,4.0\n").unwrap();
-        assert!(matches!(read_csv(&path), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+        assert!(matches!(read_csv(&path), Err(DpcError::NonFiniteCoordinate { point: 1, dim: 0 })));
         let path = tmpdir().join("empty.csv");
         std::fs::write(&path, "# nothing here\n").unwrap();
         assert!(matches!(read_csv(&path), Err(DpcError::EmptyInput)));

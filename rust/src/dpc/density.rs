@@ -49,6 +49,12 @@
 //! deterministic (the oracle and every engine share [`gaussian_weight`]);
 //! across platforms `exp` may differ in the last ulp, which is why the
 //! golden conformance snapshots pin the cutoff model only.
+//!
+//! Every tree-backed model here inherits the kd-tree's blocked leaves
+//! (`kdtree::leaf`): each leaf a traversal reaches costs one
+//! [`Scalar::dist_sq_block`] sweep — the SIMD kernel when available,
+//! bit-identical to the scalar path either way — which is where the bulk
+//! of Step 1's runtime goes.
 
 use std::fmt;
 
@@ -294,6 +300,10 @@ pub(crate) fn knn_rank_densities<S: Scalar>(dk: &[S]) -> Vec<u32> {
     let n = dk.len();
     let mut order: Vec<u32> = (0..n as u32).collect();
     order.sort_by(|&a, &b| {
+        // The unwrap cannot fire: every ingress (PointStore::try_new, file
+        // readers, stream/coordinator ingest) rejects non-finite
+        // coordinates, so each d_k is a sum of squares of finite values —
+        // finite or +∞, never NaN, and partial_cmp is total over those.
         dk[b as usize].partial_cmp(&dk[a as usize]).unwrap().then(a.cmp(&b))
     });
     let mut rho = vec![0u32; n];

@@ -411,8 +411,10 @@ mod tests {
     #[test]
     fn build_rejects_empty_and_nonfinite() {
         assert!(matches!(ClusterSession::build(&PointSet::empty(2)), Err(DpcError::EmptyInput)));
-        let bad = PointSet::new(vec![0.0, 0.0, f64::NAN, 1.0], 2);
-        assert!(matches!(ClusterSession::build(&bad), Err(DpcError::NonFinite { point: 1, dim: 0 })));
+        // Unvalidated generator path: `PointSet::new` rejects the NaN itself.
+        let coords = [0.0, 0.0, f64::NAN, 1.0];
+        let bad = PointSet::from_flat_fn(2, 2, |i| coords[i]);
+        assert!(matches!(ClusterSession::build(&bad), Err(DpcError::NonFiniteCoordinate { point: 1, dim: 0 })));
     }
 
     #[test]

@@ -861,10 +861,12 @@ mod tests {
             s.ingest(&PointSet::new(vec![1.0, 2.0, 3.0], 3)),
             Err(DpcError::DimensionMismatch { expected: 2, got: 3 })
         ));
-        // Non-finite (position is batch-local).
+        // Non-finite (position is batch-local). Built via the unvalidated
+        // generator path — `PointSet::new` itself rejects the NaN now.
+        let poisoned = [0.0, f64::NAN];
         assert!(matches!(
-            s.ingest(&PointSet::new(vec![0.0, f64::NAN], 2)),
-            Err(DpcError::NonFinite { point: 0, dim: 1 })
+            s.ingest(&PointSet::from_flat_fn(1, 2, |i| poisoned[i])),
+            Err(DpcError::NonFiniteCoordinate { point: 0, dim: 1 })
         ));
         // Empty batch is a no-op.
         s.ingest(&PointSet::empty(2)).unwrap();

@@ -48,6 +48,14 @@ const FRAME_PREFIX: usize = 8;
 
 pub const JOURNAL_FILE: &str = "journal.pclj";
 
+/// Check that an encoded payload fits the frame format's u32 length field,
+/// returning the prefix value to write. A >4 GiB batch (≈270M f64 2-d
+/// points in one ingest) would otherwise wrap `as u32` and poison the
+/// journal; separated out so the bound is testable without allocating one.
+fn check_frame_len(len: usize) -> Result<u32, DpcError> {
+    u32::try_from(len).map_err(|_| DpcError::OversizedJournalEntry { len: len as u64, max: u32::MAX as u64 })
+}
+
 /// One logged command. Bodies mirror the coordinator's public API inputs
 /// exactly — replay feeds them back through the same entry points.
 #[derive(Clone, Debug)]
@@ -243,13 +251,20 @@ impl JournalWriter {
     /// Frame, checksum, and write `entry`; returns its LSN. Durability
     /// follows the `fsync_every` policy — callers that need a hard
     /// guarantee right now (checkpointing) call [`JournalWriter::sync`].
+    ///
+    /// Payloads that overflow the frame format's u32 length field are
+    /// rejected with [`DpcError::OversizedJournalEntry`] before a single
+    /// byte hits the file — a silently-truncated length prefix would frame
+    /// the entry's own bytes as garbage follow-on frames and corrupt the
+    /// journal for every later reader.
     pub fn append(&mut self, entry: &JournalEntry) -> Result<u64, DpcError> {
         let lsn = self.next_lsn;
         let mut payload = Vec::with_capacity(64);
         wire::put_u64(&mut payload, lsn);
         entry.encode_body(&mut payload);
+        let len = check_frame_len(payload.len())?;
         let mut frame = Vec::with_capacity(FRAME_PREFIX + payload.len());
-        wire::put_u32(&mut frame, payload.len() as u32);
+        wire::put_u32(&mut frame, len);
         wire::put_u32(&mut frame, crc32(&payload));
         frame.extend_from_slice(&payload);
         self.file.write_all(&frame)?;
@@ -406,6 +421,31 @@ mod tests {
 
     fn assert_same_entry(a: &JournalEntry, b: &JournalEntry) {
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn oversized_payloads_are_rejected_up_front() {
+        // The bound itself, without allocating 4 GiB.
+        assert_eq!(check_frame_len(0).unwrap(), 0);
+        assert_eq!(check_frame_len(u32::MAX as usize).unwrap(), u32::MAX);
+        assert!(matches!(
+            check_frame_len(u32::MAX as usize + 1),
+            Err(DpcError::OversizedJournalEntry { len, max })
+                if len == u32::MAX as u64 + 1 && max == u32::MAX as u64
+        ));
+        // And the writer stays clean after a rejected append: nothing was
+        // framed, so normal entries still land with consecutive LSNs.
+        let dir = tmpdir("oversize");
+        let path = dir.join(JOURNAL_FILE);
+        let mut w = JournalWriter::create(&path, 1).unwrap();
+        let before = w.len();
+        assert_eq!(w.next_lsn(), 1);
+        w.append(&JournalEntry::CloseStream { stream: 9 }).unwrap();
+        assert!(w.len() > before);
+        assert_eq!(w.next_lsn(), 2);
+        let scan = scan(&path).unwrap();
+        assert_eq!(scan.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

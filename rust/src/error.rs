@@ -20,7 +20,7 @@ pub enum DpcError {
     /// dimension.
     RaggedCoords { len: usize, dim: usize },
     /// A coordinate is NaN or infinite.
-    NonFinite { point: usize, dim: usize },
+    NonFiniteCoordinate { point: usize, dim: usize },
     /// A requested *lossless* precision conversion would round the given
     /// coordinate (e.g. `0.1` into an `f32` store).
     LossyCast { point: usize, dim: usize, value: f64, dtype: &'static str },
@@ -48,6 +48,11 @@ pub enum DpcError {
     /// The durability manifest is unreadable or inconsistent with the
     /// files it points at (e.g. a journal offset past the journal's end).
     CorruptManifest { detail: String },
+    /// A write-ahead journal entry whose encoded payload exceeds the
+    /// frame format's u32 length field. Rejected before any bytes reach
+    /// the file — the alternative is a silently truncated length that a
+    /// later scan reports as corruption.
+    OversizedJournalEntry { len: u64, max: u64 },
 }
 
 impl fmt::Display for DpcError {
@@ -60,7 +65,7 @@ impl fmt::Display for DpcError {
             DpcError::RaggedCoords { len, dim } => {
                 write!(f, "coordinate buffer of length {len} is not divisible by dimension {dim}")
             }
-            DpcError::NonFinite { point, dim } => {
+            DpcError::NonFiniteCoordinate { point, dim } => {
                 write!(f, "non-finite coordinate at point {point}, dimension {dim}")
             }
             DpcError::LossyCast { point, dim, value, dtype } => {
@@ -83,6 +88,9 @@ impl fmt::Display for DpcError {
             }
             DpcError::CorruptCheckpoint { detail } => write!(f, "corrupt checkpoint: {detail}"),
             DpcError::CorruptManifest { detail } => write!(f, "corrupt manifest: {detail}"),
+            DpcError::OversizedJournalEntry { len, max } => {
+                write!(f, "journal entry payload of {len} bytes exceeds the frame format's maximum of {max}")
+            }
         }
     }
 }
@@ -112,7 +120,7 @@ mod tests {
             (DpcError::EmptyInput, "empty"),
             (DpcError::DimensionMismatch { expected: 3, got: 2 }, "expected 3-d"),
             (DpcError::RaggedCoords { len: 7, dim: 2 }, "not divisible"),
-            (DpcError::NonFinite { point: 4, dim: 1 }, "non-finite"),
+            (DpcError::NonFiniteCoordinate { point: 4, dim: 1 }, "non-finite"),
             (DpcError::LossyCast { point: 2, dim: 0, value: 0.1, dtype: "f32" }, "not exactly representable"),
             (DpcError::UnsupportedDtype { tag: 3 }, "dtype tag 3"),
             (
@@ -125,6 +133,7 @@ mod tests {
             (DpcError::CorruptJournal { offset: 24, detail: "crc mismatch".into() }, "byte 24"),
             (DpcError::CorruptCheckpoint { detail: "truncated".into() }, "truncated"),
             (DpcError::CorruptManifest { detail: "offset past journal end".into() }, "manifest"),
+            (DpcError::OversizedJournalEntry { len: 5_000_000_000, max: 4_294_967_295 }, "5000000000"),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -26,7 +26,10 @@ pub mod bbox;
 pub mod scalar;
 
 pub use bbox::Bbox;
-pub use scalar::{radius_sq, Dtype, Scalar};
+pub use scalar::{
+    block_kernel_name, force_scalar_kernel, kernel_toggle_guard, radius_sq, scalar_kernel_forced, Dtype, Scalar,
+    BLOCK_LANES,
+};
 
 use std::sync::Arc;
 
@@ -45,10 +48,13 @@ pub struct PointStore<S: Scalar = f64> {
 pub type PointSet = PointStore<f64>;
 
 impl<S: Scalar> PointStore<S> {
-    /// Fallible constructor: rejects `d == 0` and coordinate buffers whose
-    /// length is not a multiple of `d`. This is the entry point for
-    /// user-supplied data; [`PointStore::new`] is the panicking convenience
-    /// for generators and tests whose inputs are correct by construction.
+    /// Fallible constructor: rejects `d == 0`, coordinate buffers whose
+    /// length is not a multiple of `d`, and NaN/±∞ coordinates
+    /// ([`DpcError::NonFiniteCoordinate`] — non-finite values would
+    /// otherwise survive until a sort comparator deep in the density
+    /// kernels and panic there). This is the entry point for user-supplied
+    /// data; [`PointStore::new`] is the panicking convenience for
+    /// generators and tests whose inputs are correct by construction.
     ///
     /// Note the `Vec → Arc<[S]>` conversion copies the buffer once (the
     /// `Arc` header precludes reusing the `Vec` allocation) — a one-time
@@ -60,7 +66,9 @@ impl<S: Scalar> PointStore<S> {
     /// [`PointStore::from_flat_fn`] / [`PointStore::try_from_flat_fn`] and
     /// skip the copy entirely.
     pub fn try_new(coords: Vec<S>, d: usize) -> Result<Self, DpcError> {
-        Self::try_from_shared(Arc::from(coords), d)
+        let ps = Self::try_from_shared(Arc::from(coords), d)?;
+        ps.validate_finite()?;
+        Ok(ps)
     }
 
     /// Build a store by writing coordinates straight into one shared
@@ -104,7 +112,11 @@ impl<S: Scalar> PointStore<S> {
     }
 
     /// Zero-copy constructor over an already-shared buffer (the `Arc` is
-    /// kept, not copied): same shape checks as [`PointStore::try_new`].
+    /// kept, not copied): same *shape* checks as [`PointStore::try_new`],
+    /// but no coordinate scan — re-wrapping a buffer that some validated
+    /// store already owns must stay O(1). Callers wrapping data from an
+    /// unvalidated source should follow up with
+    /// [`PointStore::validate_finite`].
     pub fn try_from_shared(coords: Arc<[S]>, d: usize) -> Result<Self, DpcError> {
         if d == 0 {
             return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
@@ -195,7 +207,7 @@ impl<S: Scalar> PointStore<S> {
     pub fn validate_finite(&self) -> Result<(), DpcError> {
         for (idx, &c) in self.coords.iter().enumerate() {
             if !c.finite() {
-                return Err(DpcError::NonFinite { point: idx / self.d, dim: idx % self.d });
+                return Err(DpcError::NonFiniteCoordinate { point: idx / self.d, dim: idx % self.d });
             }
         }
         Ok(())
@@ -477,10 +489,10 @@ mod tests {
             if i < 3 {
                 Ok(i as f64)
             } else {
-                Err(DpcError::NonFinite { point: i / 2, dim: i % 2 })
+                Err(DpcError::NonFiniteCoordinate { point: i / 2, dim: i % 2 })
             }
         });
-        assert!(matches!(got, Err(DpcError::NonFinite { point: 1, dim: 1 })));
+        assert!(matches!(got, Err(DpcError::NonFiniteCoordinate { point: 1, dim: 1 })));
         assert!(matches!(
             PointSet::try_from_flat_fn(1, 0, |_| Ok(0.0)),
             Err(DpcError::InvalidParam { .. })
@@ -542,15 +554,35 @@ mod tests {
         assert!(matches!(PointSet::try_from_rows(&ragged), Err(DpcError::DimensionMismatch { expected: 2, got: 1 })));
     }
 
+    /// Plant `bad` at flat index `at` of an `n × d` store, bypassing the
+    /// validating constructors (the generator path stays unvalidated by
+    /// design — this is how tests build intentionally poisoned stores).
+    fn poisoned<S: Scalar>(n: usize, d: usize, at: usize, bad: S) -> PointStore<S> {
+        PointStore::from_flat_fn(n, d, |i| if i == at { bad } else { S::from_f64(i as f64) })
+    }
+
     #[test]
     fn validate_finite_reports_position() {
-        let ps = PointSet::new(vec![0.0, 1.0, 2.0, f64::NAN, 4.0, 5.0], 2);
-        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 1, dim: 1 })));
-        let ps = PointSet::new(vec![0.0, f64::INFINITY], 2);
-        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 0, dim: 1 })));
+        let ps = poisoned::<f64>(3, 2, 3, f64::NAN);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFiniteCoordinate { point: 1, dim: 1 })));
+        let ps = poisoned::<f64>(1, 2, 1, f64::INFINITY);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFiniteCoordinate { point: 0, dim: 1 })));
         assert!(PointSet::new(vec![1.0, 2.0], 2).validate_finite().is_ok());
-        let ps = PointStore::<f32>::new(vec![0.0, f32::NAN], 2);
-        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFinite { point: 0, dim: 1 })));
+        let ps = poisoned::<f32>(1, 2, 1, f32::NAN);
+        assert!(matches!(ps.validate_finite(), Err(DpcError::NonFiniteCoordinate { point: 0, dim: 1 })));
+    }
+
+    #[test]
+    fn try_new_rejects_non_finite_coordinates() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let got = PointSet::try_new(vec![0.0, 1.0, 2.0, bad], 2);
+            assert!(matches!(got, Err(DpcError::NonFiniteCoordinate { point: 1, dim: 1 })), "{bad}");
+        }
+        let got = PointStore::<f32>::try_new(vec![f32::NAN, 1.0], 2);
+        assert!(matches!(got, Err(DpcError::NonFiniteCoordinate { point: 0, dim: 0 })));
+        // Row-wise construction funnels through the same gate.
+        let got = PointSet::try_from_rows(&[vec![0.0, 1.0], vec![f64::NAN, 3.0]]);
+        assert!(matches!(got, Err(DpcError::NonFiniteCoordinate { point: 1, dim: 0 })));
     }
 
     #[test]

@@ -14,8 +14,146 @@
 //! byte-identical results; `rust/tests/conformance.rs` enforces that.
 
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::error::DpcError;
+
+/// Lane count of a blocked leaf: every kd-tree leaf (8–16 points, see
+/// `kdtree::leaf`) occupies one dim-major block of this many lanes, so a
+/// single [`Scalar::dist_sq_block`] call covers any leaf. 16 f32 lanes are
+/// exactly one cache line per dimension row (two for f64), and two AVX
+/// `f32x8` registers (four `f64x4`).
+pub const BLOCK_LANES: usize = 16;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force [`Scalar::dist_sq_block`] down the portable scalar path,
+/// process-wide, at runtime. The oracle differential suite flips this to
+/// pin the SIMD and scalar kernels byte-identical within one process; the
+/// `force-scalar-kernel` cargo feature is the compile-time equivalent CI's
+/// feature matrix builds.
+pub fn force_scalar_kernel(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`force_scalar_kernel`] currently pins the portable path.
+pub fn scalar_kernel_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Serializes tests and benches that flip [`force_scalar_kernel`]: the
+/// toggle is process-global and the test harness runs threads
+/// concurrently. Concurrent *readers* need no guard — both kernel paths
+/// are bit-identical, so a mid-test flip cannot change any result.
+pub fn kernel_toggle_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Which `dist_sq_block` implementation the next call will take — for
+/// bench/diagnostic labels, not dispatch.
+pub fn block_kernel_name() -> &'static str {
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar-kernel")))]
+    if simd::avx_available() && !scalar_kernel_forced() {
+        return "avx";
+    }
+    "scalar"
+}
+
+/// Portable reference implementation of [`Scalar::dist_sq_block`]. The
+/// inner lane loop has a fixed trip count and no data-dependent control
+/// flow, so LLVM autovectorizes it on targets without a hand-written
+/// override; it is also the byte-exactness baseline the SIMD paths are
+/// differential-tested against.
+#[inline]
+pub fn dist_sq_block_scalar<S: Scalar>(block: &[S], d: usize, q: &[S], out: &mut [S; BLOCK_LANES]) {
+    debug_assert_eq!(block.len(), d * BLOCK_LANES);
+    debug_assert_eq!(q.len(), d);
+    *out = [S::ZERO; BLOCK_LANES];
+    for k in 0..d {
+        let row = &block[k * BLOCK_LANES..(k + 1) * BLOCK_LANES];
+        let qk = q[k];
+        for (acc, &x) in out.iter_mut().zip(row) {
+            let t = x - qk;
+            *acc += t * t;
+        }
+    }
+}
+
+/// Hand-written AVX lane kernels, dispatched at runtime (`cpuid` probed
+/// once, cached). Per lane they run the exact operation sequence of
+/// [`dist_sq_block_scalar`] — ascending-dimension subtract, multiply, add,
+/// never FMA — so results are bit-identical to the portable path; IEEE-754
+/// arithmetic is deterministic given the same operation order.
+#[cfg(all(target_arch = "x86_64", not(feature = "force-scalar-kernel")))]
+mod simd {
+    use super::BLOCK_LANES;
+    use std::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// 0 = unprobed, 1 = AVX present, 2 = absent.
+    static AVX: AtomicU8 = AtomicU8::new(0);
+
+    #[inline]
+    pub fn avx_available() -> bool {
+        match AVX.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let ok = std::arch::is_x86_feature_detected!("avx");
+                AVX.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+                ok
+            }
+        }
+    }
+
+    /// 16 f32 lanes as two 256-bit accumulators.
+    ///
+    /// # Safety
+    /// Requires AVX (checked by the caller via [`avx_available`]) and
+    /// `block.len() == d * BLOCK_LANES`, `q.len() == d`.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dist_sq_block_f32(block: &[f32], d: usize, q: &[f32], out: &mut [f32; BLOCK_LANES]) {
+        debug_assert_eq!(block.len(), d * BLOCK_LANES);
+        debug_assert_eq!(q.len(), d);
+        let p = block.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for k in 0..d {
+            let qk = _mm256_set1_ps(*q.get_unchecked(k));
+            let row = p.add(k * BLOCK_LANES);
+            let t0 = _mm256_sub_ps(_mm256_loadu_ps(row), qk);
+            let t1 = _mm256_sub_ps(_mm256_loadu_ps(row.add(8)), qk);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(t0, t0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(t1, t1));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(out.as_mut_ptr().add(8), acc1);
+    }
+
+    /// 16 f64 lanes as four 256-bit accumulators.
+    ///
+    /// # Safety
+    /// Same contract as [`dist_sq_block_f32`].
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dist_sq_block_f64(block: &[f64], d: usize, q: &[f64], out: &mut [f64; BLOCK_LANES]) {
+        debug_assert_eq!(block.len(), d * BLOCK_LANES);
+        debug_assert_eq!(q.len(), d);
+        let p = block.as_ptr();
+        let mut acc = [_mm256_setzero_pd(); 4];
+        for k in 0..d {
+            let qk = _mm256_set1_pd(*q.get_unchecked(k));
+            let row = p.add(k * BLOCK_LANES);
+            for (v, a) in acc.iter_mut().enumerate() {
+                let t = _mm256_sub_pd(_mm256_loadu_pd(row.add(4 * v)), qk);
+                *a = _mm256_add_pd(*a, _mm256_mul_pd(t, t));
+            }
+        }
+        for (v, a) in acc.iter().enumerate() {
+            _mm256_storeu_pd(out.as_mut_ptr().add(4 * v), *a);
+        }
+    }
+}
 
 mod sealed {
     /// Seals [`super::Scalar`]: the unsafe traversal code (raw-pointer arena
@@ -141,6 +279,24 @@ pub trait Scalar:
         s
     }
 
+    /// Squared distances from the query `q` (length `d`) to all
+    /// [`BLOCK_LANES`] lanes of a dim-major coordinate block
+    /// (`block[k * BLOCK_LANES + l]` is coordinate `k` of lane `l`;
+    /// `block.len() == d * BLOCK_LANES`), written to `out`.
+    ///
+    /// Exactness contract: every implementation — this portable default
+    /// and the SIMD overrides — accumulates each lane in ascending
+    /// dimension order with a separate multiply and add (no FMA), the
+    /// same operation sequence as [`Scalar::dist_sq`]. IEEE-754 ops are
+    /// deterministic, so all paths return bit-identical lanes; the oracle
+    /// suite's forced-scalar differential leg pins this rather than
+    /// assuming it. Padding lanes filled with [`Scalar::INFINITY`] come
+    /// out as `INFINITY` (the query is finite, so no `∞ − ∞` NaN arises).
+    #[inline]
+    fn dist_sq_block(block: &[Self], d: usize, q: &[Self], out: &mut [Self; BLOCK_LANES]) {
+        dist_sq_block_scalar(block, d, q, out)
+    }
+
     /// Append the little-endian encoding to `out`.
     fn write_le(self, out: &mut Vec<u8>);
 
@@ -185,6 +341,18 @@ impl Scalar for f32 {
     #[inline]
     fn smax(self, other: f32) -> f32 {
         self.max(other)
+    }
+
+    #[inline]
+    fn dist_sq_block(block: &[f32], d: usize, q: &[f32], out: &mut [f32; BLOCK_LANES]) {
+        #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar-kernel")))]
+        if simd::avx_available() && !scalar_kernel_forced() {
+            // SAFETY: AVX presence checked on this line; slice lengths are
+            // debug-asserted inside and guaranteed by the leaf arena.
+            unsafe { simd::dist_sq_block_f32(block, d, q, out) };
+            return;
+        }
+        dist_sq_block_scalar(block, d, q, out)
     }
 
     #[inline]
@@ -233,6 +401,18 @@ impl Scalar for f64 {
     #[inline]
     fn smax(self, other: f64) -> f64 {
         self.max(other)
+    }
+
+    #[inline]
+    fn dist_sq_block(block: &[f64], d: usize, q: &[f64], out: &mut [f64; BLOCK_LANES]) {
+        #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar-kernel")))]
+        if simd::avx_available() && !scalar_kernel_forced() {
+            // SAFETY: AVX presence checked on this line; slice lengths are
+            // debug-asserted inside and guaranteed by the leaf arena.
+            unsafe { simd::dist_sq_block_f64(block, d, q, out) };
+            return;
+        }
+        dist_sq_block_scalar(block, d, q, out)
     }
 
     #[inline]
@@ -328,6 +508,61 @@ mod tests {
         assert_eq!(r32, 0.1f32 * 0.1f32);
         let r64: f64 = radius_sq(0.1);
         assert_eq!(r64, 0.1f64 * 0.1f64);
+    }
+
+    fn fill_block<S: Scalar>(d: usize, lanes: usize) -> (Vec<S>, Vec<S>) {
+        // Deterministic awkward values (not representable sums) so any
+        // reassociation or FMA contraction in a kernel would change bits.
+        let mut block = vec![S::INFINITY; d * BLOCK_LANES];
+        for l in 0..lanes {
+            for k in 0..d {
+                let v = 0.1 + (l as f64) * 0.3 + (k as f64) * 0.7 - ((l * k) as f64) * 0.01;
+                block[k * BLOCK_LANES + l] = S::from_f64(v);
+            }
+        }
+        let q: Vec<S> = (0..d).map(|k| S::from_f64(0.2 + 0.05 * k as f64)).collect();
+        (block, q)
+    }
+
+    fn block_kernel_case<S: Scalar>(d: usize, lanes: usize) {
+        let (block, q) = fill_block::<S>(d, lanes);
+        let mut out = [S::ZERO; BLOCK_LANES];
+        S::dist_sq_block(&block, d, &q, &mut out);
+        // Reference: the per-point kernel over each lane's gathered coords.
+        for l in 0..BLOCK_LANES {
+            let lane: Vec<S> = (0..d).map(|k| block[k * BLOCK_LANES + l]).collect();
+            let want = S::dist_sq(&lane, &q);
+            if l < lanes {
+                assert!(out[l] == want, "lane {l}: {:?} != {want:?}", out[l]);
+            } else {
+                assert!(out[l] == S::INFINITY, "padding lane {l} must be +inf");
+            }
+        }
+        // Forced-scalar path agrees bit-for-bit with whatever ran above.
+        let mut scalar_out = [S::ZERO; BLOCK_LANES];
+        dist_sq_block_scalar(&block, d, &q, &mut scalar_out);
+        assert!(out == scalar_out, "SIMD and scalar block kernels disagree");
+    }
+
+    #[test]
+    fn block_kernel_matches_per_point_kernel_and_pads_with_inf() {
+        for d in [1, 2, 3, 5, 8] {
+            for lanes in [1, 7, 8, 13, BLOCK_LANES] {
+                block_kernel_case::<f32>(d, lanes);
+                block_kernel_case::<f64>(d, lanes);
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_toggle_round_trips() {
+        let _serial = kernel_toggle_guard();
+        assert!(!scalar_kernel_forced());
+        force_scalar_kernel(true);
+        assert!(scalar_kernel_forced());
+        assert_eq!(block_kernel_name(), "scalar");
+        force_scalar_kernel(false);
+        assert!(!scalar_kernel_forced());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use crate::geom::Scalar;
+use crate::geom::{Scalar, BLOCK_LANES};
 
 use super::{KdTree, StatSink};
 
@@ -74,12 +74,16 @@ impl<'t, S: Scalar> IncompleteKdTree<'t, S> {
         stats.visit_node();
         stats.depth(depth);
         if self.tree.is_leaf_idx(i) {
-            for &p in self.tree.leaf_pts(i) {
+            // One block sweep for the whole leaf; the per-lane activity
+            // filter runs on the precomputed distances.
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let ids = self.tree.leaf_scan_idx(i, q, &mut dbuf);
+            for (l, &p) in ids.iter().enumerate() {
                 if p == exclude || !self.point_active[p as usize].load(Ordering::Acquire) {
                     continue;
                 }
                 stats.scan_point();
-                let ds = self.tree.points().dist_sq_to(p as usize, q);
+                let ds = dbuf[l];
                 if ds < best.1 || (ds == best.1 && p < best.0) {
                     *best = (p, ds);
                 }

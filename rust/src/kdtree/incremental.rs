@@ -7,8 +7,12 @@
 //!
 //! This exists purely as the *baseline* under benchmark; the paper's
 //! improvements (incomplete kd-tree, priority search kd-tree, Fenwick tree)
-//! live in sibling modules. Generic over the coordinate [`Scalar`] like the
-//! rest of the tree family; pins its input store by refcount.
+//! live in sibling modules. It deliberately does NOT use the blocked SoA
+//! leaves of [`super::leaf`]: those rely on the arena builder's 8–16-point
+//! leaf guarantee, which per-point insertion cannot maintain — one-point
+//! "leaves" scattered across the heap are exactly the layout being
+//! measured against. Generic over the coordinate [`Scalar`] like the rest
+//! of the tree family; pins its input store by refcount.
 
 use crate::geom::{PointStore, Scalar};
 

@@ -1,0 +1,175 @@
+//! Cache-line-aligned SoA leaf blocks for the kd-tree family.
+//!
+//! Every leaf of a [`super::KdTree`] (and every tail subtree of a
+//! [`crate::pskd::PriorityKdTree`]) owns one fixed-capacity **block** of
+//! [`BLOCK_LANES`] = 16 lanes in a flat arena, stored dim-major:
+//! `block[k * BLOCK_LANES + l]` is coordinate `k` of lane `l`. A leaf visit
+//! is then one [`Scalar::dist_sq_block`] sweep — 16 squared distances per
+//! call out of contiguous, 64-byte-aligned rows — instead of a per-point
+//! gather loop.
+//!
+//! # Block indexing without a node field
+//!
+//! Blocks are addressed by `perm_offset / BLOCK_MIN`, not by a pointer or
+//! an extra per-node index. This works because the builder's median split
+//! guarantees every leaf holds between [`BLOCK_MIN`] = 8 and 16 points
+//! (splitting `m ≥ 17` yields halves `≥ 8`; recursion stops at `m ≤ 16`),
+//! except a lone root leaf when the whole tree has `≤ 16` points. Leaves
+//! partition `0..n` into consecutive runs of length `≥ 8` (the small-root
+//! case has a single run), so distinct leaves' start offsets differ by at
+//! least 8 and `offset / 8` is injective. An arena of `ceil(n / 8)` blocks
+//! therefore fits every leaf, at the cost of holes (blocks no leaf maps
+//! to) when leaves run longer than 8 — bounded 2× space for index-free,
+//! raceless addressing: parallel builder tasks own disjoint offset ranges,
+//! hence disjoint blocks.
+//!
+//! Unused lanes of a block are padded with [`Scalar::INFINITY`]: the
+//! kernel then reports `+∞` distance for them (queries are validated
+//! finite, so no `∞ − ∞` NaN can arise), and every consumer additionally
+//! iterates only the leaf's live lanes, so padding never reaches a
+//! tie-break comparison.
+
+use std::marker::PhantomData;
+
+use crate::geom::{Scalar, BLOCK_LANES};
+
+/// Minimum points per leaf block (= half the leaf-size cap): the divisor
+/// that makes `perm_offset / BLOCK_MIN` a collision-free block index.
+pub const BLOCK_MIN: usize = BLOCK_LANES / 2;
+
+/// One cache line of raw storage. The arena's backing vector is a
+/// `Vec<CacheLine>`, so its allocation — and, because a block's byte size
+/// (`16 lanes × d × 4-or-8 bytes`) is always a multiple of 64, every
+/// block — starts on a 64-byte boundary.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct CacheLine([u8; 64]);
+
+/// Flat arena of dim-major leaf blocks. Built once (filled through a raw
+/// pointer by the parallel tree builder), then read-only.
+pub struct LeafArena<S: Scalar> {
+    lines: Vec<CacheLine>,
+    /// Total scalars = `blocks × BLOCK_LANES × dim`.
+    scalars: usize,
+    /// Scalars per block (`BLOCK_LANES × dim`), cached for indexing.
+    stride: usize,
+    _marker: PhantomData<S>,
+}
+
+impl<S: Scalar> LeafArena<S> {
+    /// Arena sized for `blocks` blocks of dimension `d`, zero-filled.
+    /// Holes (blocks no leaf claims) keep the zero fill and are never
+    /// read; claimed blocks are fully overwritten by the builder
+    /// (coordinates in the live lanes, `+∞` padding in the rest).
+    pub fn new(blocks: usize, d: usize) -> Self {
+        let stride = BLOCK_LANES * d;
+        let scalars = blocks * stride;
+        let bytes = scalars * std::mem::size_of::<S>();
+        debug_assert_eq!(bytes % 64, 0, "blocks are whole cache lines");
+        LeafArena { lines: vec![CacheLine([0u8; 64]); bytes / 64], scalars, stride, _marker: PhantomData }
+    }
+
+    /// Raw base pointer for the builder's writes. Builder tasks write
+    /// disjoint blocks (see the module doc), so no synchronization is
+    /// needed beyond the build's own join.
+    pub fn as_mut_ptr(&mut self) -> *mut S {
+        self.lines.as_mut_ptr() as *mut S
+    }
+
+    /// The dim-major coordinate block at index `b`
+    /// (`BLOCK_LANES × d` scalars).
+    #[inline]
+    pub fn block(&self, b: usize) -> &[S] {
+        let start = b * self.stride;
+        debug_assert!(start + self.stride <= self.scalars, "block {b} out of bounds");
+        // SAFETY: CacheLine is plain initialized bytes, S is f32/f64 (any
+        // bit pattern valid), the 64-byte alignment exceeds S's, and the
+        // range check above keeps the slice inside the allocation.
+        unsafe { std::slice::from_raw_parts((self.lines.as_ptr() as *const S).add(start), self.stride) }
+    }
+
+    /// Number of blocks the arena holds.
+    pub fn blocks(&self) -> usize {
+        if self.stride == 0 {
+            0
+        } else {
+            self.scalars / self.stride
+        }
+    }
+
+    /// Arena footprint in bytes (diagnostics; 64 × number of cache lines).
+    pub fn bytes(&self) -> usize {
+        self.lines.len() * 64
+    }
+}
+
+/// Fill block `b` of the arena behind `base` (obtained from
+/// [`LeafArena::as_mut_ptr`]): lane `l < m` gets point `ids[l]`'s
+/// coordinates from `coords` (row-major, dimension `d`), lanes `m..16` get
+/// `+∞` padding.
+///
+/// # Safety
+/// `base` must point at an arena of dimension `d` with more than `b`
+/// blocks, and no other thread may touch block `b` concurrently (the tree
+/// builders guarantee this: each leaf's offset range — hence block — is
+/// owned by exactly one build task).
+pub unsafe fn fill_block<S: Scalar>(base: *mut S, b: usize, coords: &[S], d: usize, ids: &[u32]) {
+    let m = ids.len();
+    debug_assert!(m <= BLOCK_LANES);
+    let block = base.add(b * BLOCK_LANES * d);
+    for k in 0..d {
+        let row = block.add(k * BLOCK_LANES);
+        for l in 0..BLOCK_LANES {
+            let v = if l < m { *coords.get_unchecked(ids[l] as usize * d + k) } else { S::INFINITY };
+            row.add(l).write(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_blocks_are_cache_line_aligned() {
+        for d in [1, 2, 3, 7] {
+            let arena = LeafArena::<f32>::new(3, d);
+            for b in 0..3 {
+                assert_eq!(arena.block(b).as_ptr() as usize % 64, 0, "d={d} b={b}");
+            }
+            assert_eq!(arena.blocks(), 3);
+            assert_eq!(arena.bytes(), 3 * BLOCK_LANES * d * 4);
+        }
+        let arena64 = LeafArena::<f64>::new(2, 3);
+        assert_eq!(arena64.block(1).as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn fill_block_transposes_and_pads() {
+        // 3 points in 2-d, gathered out of order into lanes 0..3.
+        let coords = vec![10.0f64, 11.0, 20.0, 21.0, 30.0, 31.0];
+        let mut arena = LeafArena::<f64>::new(2, 2);
+        unsafe { fill_block(arena.as_mut_ptr(), 1, &coords, 2, &[2, 0, 1]) };
+        let blk = arena.block(1);
+        assert_eq!(&blk[0..3], &[30.0, 10.0, 20.0]); // x row, lanes 0..3
+        assert_eq!(&blk[BLOCK_LANES..BLOCK_LANES + 3], &[31.0, 11.0, 21.0]); // y row
+        for l in 3..BLOCK_LANES {
+            assert_eq!(blk[l], f64::INFINITY);
+            assert_eq!(blk[BLOCK_LANES + l], f64::INFINITY);
+        }
+        // The untouched block keeps its zero fill.
+        assert!(arena.block(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn filled_block_feeds_the_kernel() {
+        let coords = vec![1.0f32, 2.0, 4.0, 6.0];
+        let mut arena = LeafArena::<f32>::new(1, 2);
+        unsafe { fill_block(arena.as_mut_ptr(), 0, &coords, 2, &[0, 1]) };
+        let mut out = [0.0f32; BLOCK_LANES];
+        f32::dist_sq_block(arena.block(0), 2, &[1.0, 2.0], &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 25.0);
+        assert!(out[2..].iter().all(|&v| v == f32::INFINITY));
+    }
+}

@@ -12,7 +12,16 @@
 //!   copy. That removes the old borrow lifetime, so sessions and the
 //!   Bentley–Saxe stream forest hold trees without self-reference tricks.
 //! - **Split rule**: median along the widest dimension of the node's cell
-//!   (the bounding box of its points), leaves hold ≤ `LEAF_SIZE` points.
+//!   (the bounding box of its points), leaves hold ≤ `LEAF_SIZE` points —
+//!   and, because a median split of `m ≥ 17` leaves halves of `≥ 8`, every
+//!   leaf except a lone small root holds **8–16** points.
+//! - **Blocked leaves**: each leaf owns one cache-line-aligned, dim-major
+//!   SoA block of 16 lanes in a flat [`leaf::LeafArena`], addressed by
+//!   `lo / 8` (injective precisely because of the 8–16 guarantee — see the
+//!   `leaf` module doc). A leaf visit is a single [`Scalar::dist_sq_block`]
+//!   sweep — scalar by default, AVX `f32x8`/`f64x4` when the CPU has it —
+//!   instead of a per-point distance loop; both kernels are bit-identical
+//!   by construction and pinned so by the oracle suite's forced-scalar leg.
 //! - **Queries**: nearest-neighbor / K-NN with cell-distance pruning, range
 //!   **count** with the §6.1 optimization (cells fully inside the query ball
 //!   contribute `count` without traversal) plus an unoptimized variant used
@@ -25,9 +34,11 @@
 
 pub mod incomplete;
 pub mod incremental;
+pub mod leaf;
 
-use crate::geom::{Bbox, PointStore, PointsView, Scalar};
+use crate::geom::{Bbox, PointStore, PointsView, Scalar, BLOCK_LANES};
 use crate::parlay;
+use leaf::{LeafArena, BLOCK_MIN};
 
 pub const LEAF_SIZE: usize = 16;
 /// Subtrees smaller than this build sequentially. With the work-stealing
@@ -92,9 +103,11 @@ pub struct KdTree<S: Scalar = f64> {
     bounds: Vec<S>,
     /// Permutation of point ids; leaves own contiguous ranges of it.
     perm: Vec<u32>,
-    /// Coordinates in `perm` order (leaf scans read contiguously — §Perf:
-    /// removes the scattered per-point indirection into the PointStore).
-    pcoords: Vec<S>,
+    /// Dim-major SoA coordinate blocks, one per leaf at block index
+    /// `lo / BLOCK_MIN` (see the [`leaf`] module doc for why that is
+    /// collision-free). Replaces the old perm-ordered AoS copy: leaf scans
+    /// are now one [`Scalar::dist_sq_block`] sweep over aligned rows.
+    leaves: LeafArena<S>,
     root: u32,
     /// parent[node] (NONE for root). Needed by the incomplete-tree wrapper.
     parent: Vec<u32>,
@@ -128,10 +141,17 @@ impl<S: Scalar> KdTree<S> {
     fn build_impl(pts: &PointStore<S>, mut ids: Vec<u32>, with_maps: bool) -> Self {
         let n = ids.len();
         let d = pts.dim();
+        // Unreachable from the public API: every entry point (sessions,
+        // streams, the coordinator, the Fenwick/forest structures) rejects
+        // empty inputs with `DpcError::EmptyInput` first. The assert guards
+        // direct library misuse, not user input.
         assert!(n > 0, "cannot build kd-tree over zero points");
         let slots = 2 * n - 1;
         let mut nodes = vec![Node { left: NONE, right: NONE, lo: 0, hi: 0 }; slots];
         let mut bounds = vec![S::ZERO; slots * 2 * d];
+        // Leaves start at perm offsets ≥ 8 apart, so `ceil(n/8)` blocks
+        // cover every `lo / BLOCK_MIN` index the builder can produce.
+        let mut leaves = LeafArena::new(n.div_ceil(BLOCK_MIN), d);
         let mut parent = if with_maps { vec![NONE; slots] } else { Vec::new() };
         let mut leaf_of_point = if with_maps { vec![NONE; pts.len()] } else { Vec::new() };
         {
@@ -139,6 +159,7 @@ impl<S: Scalar> KdTree<S> {
                 pts: pts.view(),
                 nodes_ptr: nodes.as_mut_ptr() as usize,
                 bounds_ptr: bounds.as_mut_ptr() as usize,
+                arena_ptr: leaves.as_mut_ptr() as usize,
                 parent_ptr: if with_maps { parent.as_mut_ptr() as usize } else { 0 },
                 leaf_ptr: if with_maps { leaf_of_point.as_mut_ptr() as usize } else { 0 },
                 d,
@@ -149,17 +170,12 @@ impl<S: Scalar> KdTree<S> {
             };
             b.build_rec(&mut ids, 0, 0, NONE);
         }
-        // Perm-ordered coordinate copy for contiguous leaf scans.
-        let mut pcoords = vec![S::ZERO; ids.len() * d];
-        for (j, &p) in ids.iter().enumerate() {
-            pcoords[j * d..(j + 1) * d].copy_from_slice(pts.point(p as usize));
-        }
         KdTree {
             pts: pts.clone(),
             nodes,
             bounds,
             perm: ids,
-            pcoords,
+            leaves,
             root: 0,
             parent,
             leaf_of_point,
@@ -227,6 +243,17 @@ impl<S: Scalar> KdTree<S> {
         &self.perm[n.lo as usize..n.hi as usize]
     }
 
+    /// One-sweep leaf visit: computes the squared distance from `q` to
+    /// every lane of leaf `n`'s coordinate block into `dbuf` and returns
+    /// the leaf's point ids (lane `l` ↔ `ids[l]`; lanes past `ids.len()`
+    /// are `+∞` padding and must not be consumed).
+    #[inline]
+    fn leaf_scan(&self, n: &Node, q: &[S], dbuf: &mut [S; BLOCK_LANES]) -> &[u32] {
+        let lo = n.lo as usize;
+        S::dist_sq_block(self.leaves.block(lo / BLOCK_MIN), self.pts.dim(), q, dbuf);
+        &self.perm[lo..n.hi as usize]
+    }
+
     // -----------------------------------------------------------------
     // Range count (Step 1 density): QUERY-RANGE(x, r) of the paper.
     // -----------------------------------------------------------------
@@ -255,11 +282,12 @@ impl<S: Scalar> KdTree<S> {
             return (n.hi - n.lo) as usize;
         }
         if self.is_leaf(i) {
-            let d = self.pts.dim();
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let m = self.leaf_scan(n, q, &mut dbuf).len();
             let mut c = 0;
-            for j in n.lo as usize..n.hi as usize {
+            for &ds in &dbuf[..m] {
                 stats.scan_point();
-                if dist_sq_at(&self.pcoords, d, j, q) <= r_sq {
+                if ds <= r_sq {
                     c += 1;
                 }
             }
@@ -300,11 +328,11 @@ impl<S: Scalar> KdTree<S> {
         }
         let n = self.node(i);
         if self.is_leaf(i) {
-            let d = self.pts.dim();
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let m = self.leaf_scan(n, q, &mut dbuf).len();
             let mut s = 0u64;
-            for j in n.lo as usize..n.hi as usize {
+            for &ds in &dbuf[..m] {
                 stats.scan_point();
-                let ds = dist_sq_at(&self.pcoords, d, j, q);
                 if ds <= r_sq {
                     s += weight(ds);
                 }
@@ -325,8 +353,10 @@ impl<S: Scalar> KdTree<S> {
             return;
         }
         if self.is_leaf(i) {
-            for &p in self.leaf_points(i) {
-                if self.pts.dist_sq_to(p as usize, q) <= r_sq {
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let ids = self.leaf_scan(n, q, &mut dbuf);
+            for (l, &p) in ids.iter().enumerate() {
+                if dbuf[l] <= r_sq {
                     out.push(p);
                 }
             }
@@ -358,18 +388,16 @@ impl<S: Scalar> KdTree<S> {
         stats.depth(depth);
         let n = self.node(i);
         if self.is_leaf(i) {
-            let d = self.pts.dim();
-            for j in n.lo as usize..n.hi as usize {
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let ids = self.leaf_scan(n, q, &mut dbuf);
+            for (l, &p) in ids.iter().enumerate() {
                 stats.scan_point();
-                let ds = dist_sq_at(&self.pcoords, d, j, q);
-                if ds < best.1 || ds == best.1 {
-                    let p = self.perm[j];
-                    if p == exclude {
-                        continue;
-                    }
-                    if ds < best.1 || p < best.0 {
-                        *best = (p, ds);
-                    }
+                let ds = dbuf[l];
+                if ds > best.1 || p == exclude {
+                    continue;
+                }
+                if ds < best.1 || p < best.0 {
+                    *best = (p, ds);
                 }
             }
             return;
@@ -417,15 +445,13 @@ impl<S: Scalar> KdTree<S> {
         stats.depth(depth);
         let n = self.node(i);
         if self.is_leaf(i) {
-            let d = self.pts.dim();
-            for j in n.lo as usize..n.hi as usize {
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let ids = self.leaf_scan(n, q, &mut dbuf);
+            for (l, &p) in ids.iter().enumerate() {
                 stats.scan_point();
-                let ds = dist_sq_at(&self.pcoords, d, j, q);
-                if ds <= best.1 {
-                    let p = self.perm[j];
-                    if (ds < best.1 || p < best.0) && keep(p) {
-                        *best = (p, ds);
-                    }
+                let ds = dbuf[l];
+                if ds <= best.1 && (ds < best.1 || p < best.0) && keep(p) {
+                    *best = (p, ds);
                 }
             }
             return;
@@ -492,12 +518,13 @@ impl<S: Scalar> KdTree<S> {
         }
         let n = self.node(i);
         if self.is_leaf(i) {
-            for &p in self.leaf_points(i) {
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            let ids = self.leaf_scan(n, q, &mut dbuf);
+            for (l, &p) in ids.iter().enumerate() {
                 if p == exclude {
                     continue;
                 }
-                let ds = self.pts.dist_sq_to(p as usize, q);
-                let cand = (ds, p);
+                let cand = (dbuf[l], p);
                 if heap.len() < k {
                     heap.push(cand);
                     heap_up(heap);
@@ -541,6 +568,11 @@ impl<S: Scalar> KdTree<S> {
     pub(crate) fn leaf_pts(&self, i: u32) -> &[u32] {
         self.leaf_points(i)
     }
+    /// [`KdTree::leaf_scan`] by node index — the incomplete-tree wrapper's
+    /// entry into the blocked leaf sweep.
+    pub(crate) fn leaf_scan_idx(&self, i: u32, q: &[S], dbuf: &mut [S; BLOCK_LANES]) -> &[u32] {
+        self.leaf_scan(self.node(i), q, dbuf)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -555,6 +587,10 @@ struct Builder<'p, S: Scalar> {
     pts: PointsView<'p, S>,
     nodes_ptr: usize,
     bounds_ptr: usize,
+    /// Base of the leaf-block arena; a leaf at perm offset `lo` owns block
+    /// `lo / BLOCK_MIN` exclusively (offset ranges are disjoint across
+    /// tasks), so block writes need no synchronization.
+    arena_ptr: usize,
     parent_ptr: usize,
     leaf_ptr: usize,
     d: usize,
@@ -590,6 +626,9 @@ impl<S: Scalar> Builder<'_, S> {
                     lo: perm_off as u32,
                     hi: (perm_off + m) as u32,
                 };
+                // Transpose this leaf's coordinates into its SoA block
+                // (+∞ padding beyond lane m).
+                leaf::fill_block(self.arena_ptr as *mut S, perm_off / BLOCK_MIN, self.pts.coords(), d, ids);
                 if self.leaf_ptr != 0 {
                     let lp = self.leaf_ptr as *mut u32;
                     for &p in ids.iter() {
@@ -649,49 +688,6 @@ impl<S: Scalar> Builder<'_, S> {
             bb.merge(b);
         }
         bb
-    }
-}
-
-/// Squared distance between `q` and the `j`-th perm-ordered point,
-/// specialized by dimension so the compiler fully unrolls the common cases
-/// (`d` is a runtime value, so the generic loop alone would pay
-/// loop-control overhead in the innermost leaf-scan kernel).
-#[inline(always)]
-fn dist_sq_at<S: Scalar>(pcoords: &[S], d: usize, j: usize, q: &[S]) -> S {
-    let base = j * d;
-    // SAFETY: j < perm.len(), q.len() == d — callers pass tree-owned values.
-    unsafe {
-        let p = pcoords.get_unchecked(base..base + d);
-        match d {
-            1 => {
-                let t = p[0] - q[0];
-                t * t
-            }
-            2 => {
-                let (a, b) = (p[0] - q[0], p[1] - q[1]);
-                a * a + b * b
-            }
-            3 => {
-                let (a, b, c) = (p[0] - q[0], p[1] - q[1], p[2] - q[2]);
-                a * a + b * b + c * c
-            }
-            4 => {
-                let (a, b, c, e) = (p[0] - q[0], p[1] - q[1], p[2] - q[2], p[3] - q[3]);
-                a * a + b * b + c * c + e * e
-            }
-            5 => {
-                let (a, b, c, e, f) = (p[0] - q[0], p[1] - q[1], p[2] - q[2], p[3] - q[3], p[4] - q[4]);
-                a * a + b * b + c * c + e * e + f * f
-            }
-            _ => {
-                let mut s = S::ZERO;
-                for k in 0..d {
-                    let t = *p.get_unchecked(k) - *q.get_unchecked(k);
-                    s += t * t;
-                }
-                s
-            }
-        }
     }
 }
 
@@ -1047,6 +1043,72 @@ mod tests {
         tree.range_count(pts.point(0), 1e12, &mut s1);
         tree.range_count_noprune(pts.point(0), 1e12, &mut s2);
         assert!(s1.nodes_visited < s2.nodes_visited / 10, "{} vs {}", s1.nodes_visited, s2.nodes_visited);
+    }
+
+    /// The structural invariant behind index-free block addressing: every
+    /// leaf holds 8–16 points (except a lone root leaf on tiny inputs),
+    /// and `lo / BLOCK_MIN` never collides across leaves.
+    #[test]
+    fn leaf_sizes_and_block_indices_are_well_formed() {
+        for n in [1usize, 7, 16, 17, 100, 1000, 4097] {
+            let pts = sample_points(n as u64, n, 3);
+            let tree = KdTree::build(&pts);
+            let mut seen = std::collections::HashSet::new();
+            for (i, node) in tree.nodes.iter().enumerate() {
+                if node.left != NONE {
+                    continue;
+                }
+                let (lo, hi) = (node.lo as usize, node.hi as usize);
+                let m = hi - lo;
+                assert!((1..=LEAF_SIZE).contains(&m), "n={n} leaf {i} has {m} points");
+                if n > LEAF_SIZE {
+                    assert!(m >= BLOCK_MIN, "n={n} leaf {i} has {m} < {BLOCK_MIN} points");
+                }
+                assert!(seen.insert(lo / BLOCK_MIN), "n={n} block collision at lo={lo}");
+                assert!(lo / BLOCK_MIN < tree.leaves.blocks(), "n={n} block index out of range");
+                // The block's live lanes hold exactly the leaf's coordinates.
+                let blk = tree.leaves.block(lo / BLOCK_MIN);
+                for (l, &p) in tree.perm[lo..hi].iter().enumerate() {
+                    for k in 0..3 {
+                        assert_eq!(blk[k * BLOCK_LANES + l], pts.coord(p as usize, k));
+                    }
+                }
+                for l in m..BLOCK_LANES {
+                    assert_eq!(blk[l], f64::INFINITY, "n={n} lane {l} not padded");
+                }
+            }
+        }
+    }
+
+    /// The SIMD and forced-scalar leaf sweeps must agree bit for bit on
+    /// whole-tree query results (the in-process half of the differential
+    /// contract; the oracle suite runs the full-pipeline half).
+    #[test]
+    fn forced_scalar_kernel_is_byte_identical() {
+        use crate::geom::{force_scalar_kernel, kernel_toggle_guard};
+        let _serial = kernel_toggle_guard();
+        let pts = sample_points(77, 1200, 3);
+        let tree = KdTree::build(&pts);
+        let queries: Vec<usize> = (0..pts.len()).step_by(97).collect();
+        let run = |t: &KdTree| -> Vec<(usize, u64, (u32, f64), f64)> {
+            queries
+                .iter()
+                .map(|&i| {
+                    let q = pts.point(i);
+                    (
+                        t.range_count(q, 49.0, &mut NoStats),
+                        t.range_weight_sum(q, 49.0, &|ds| (ds * 8.0) as u64, &mut NoStats),
+                        t.nn(q, i as u32, &mut NoStats).unwrap(),
+                        t.kth_nn_dist_sq(q, 5, i as u32),
+                    )
+                })
+                .collect()
+        };
+        let default_path = run(&tree);
+        force_scalar_kernel(true);
+        let scalar_path = run(&tree);
+        force_scalar_kernel(false);
+        assert_eq!(default_path, scalar_path);
     }
 
     #[test]

@@ -48,7 +48,9 @@ fn cmd_datasets(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let mut table = parcluster::bench::Table::new(&["name", "n (here)", "n (paper)", "d", "d_cut", "rho_min", "delta_min"]);
     for name in datasets::registry(1.0) {
-        let ds = datasets::by_name(name, n, seed).unwrap();
+        // Registry names are self-reported, but route through the typed
+        // error anyway: a registry/by_name drift must not abort the CLI.
+        let ds = datasets::by_name(name, n, seed).with_context(|| format!("unknown dataset {name:?}"))?;
         table.row(vec![
             ds.name.clone(),
             ds.pts.len().to_string(),

@@ -30,11 +30,23 @@
 //! O(log n log log n) span (theoretical; the per-node median select is
 //! sequential in this implementation — see DESIGN.md §Perf).
 //!
+//! **Tail blocks**: every *maximal* small subtree (≤ 16 points whose
+//! parent is larger; the whole tree when `n ≤ 16`) additionally records
+//! its slot-ordered coordinates in a dim-major SoA block, mirroring the
+//! kd-tree's blocked leaves. The same size argument applies — splitting
+//! the `m − 1` rest of an `m ≥ 17` node leaves halves `≥ 8`, so maximal
+//! tails span 8–16 consecutive slots and `slot / 8` indexes their blocks
+//! collision-free. A priority-NN visit that reaches a tail root does one
+//! [`Scalar::dist_sq_block`] sweep with a per-lane γ filter instead of
+//! recursing node by node; the candidate set and the strict `(dist, id)`
+//! min are unchanged, so results stay byte-identical.
+//!
 //! Generic over the coordinate [`Scalar`] (priorities stay `u64`, so the
 //! heap/tie-break structure — and thus exactness — is precision-
 //! independent); pins its input [`PointStore`] by refcount.
 
-use crate::geom::{Bbox, PointStore, PointsView, Scalar};
+use crate::geom::{Bbox, PointStore, PointsView, Scalar, BLOCK_LANES};
+use crate::kdtree::leaf::{LeafArena, BLOCK_MIN};
 use crate::kdtree::StatSink;
 use crate::parlay;
 
@@ -55,6 +67,12 @@ pub struct PriorityKdTree<S: Scalar = f64> {
     left: Vec<u32>,
     right: Vec<u32>,
     bounds: Vec<S>,
+    /// `tail_len[slot] = m > 0` iff `slot` roots a maximal small subtree of
+    /// `m` points (see the module doc): its slot-ordered coordinates live in
+    /// `tails` block `slot / BLOCK_MIN`, and priority-NN sweeps all `m`
+    /// lanes in one kernel call.
+    tail_len: Vec<u8>,
+    tails: LeafArena<S>,
     root: u32,
 }
 
@@ -72,6 +90,11 @@ impl<S: Scalar> PriorityKdTree<S> {
         let mut left = vec![NONE; n];
         let mut right = vec![NONE; n];
         let mut bounds = vec![S::ZERO; n * 2 * d];
+        let mut tail_len = vec![0u8; n];
+        // Maximal tails start ≥ BLOCK_MIN slots apart, so ceil(n/8) blocks
+        // cover every `slot / BLOCK_MIN` index (same bound as kd-tree
+        // leaves).
+        let mut tails = LeafArena::new(n.div_ceil(BLOCK_MIN), d);
         {
             let b = PskdBuilder {
                 pts: pts.view(),
@@ -83,12 +106,25 @@ impl<S: Scalar> PriorityKdTree<S> {
                 left: left.as_mut_ptr() as usize,
                 right: right.as_mut_ptr() as usize,
                 bounds: bounds.as_mut_ptr() as usize,
+                tail_len: tail_len.as_mut_ptr() as usize,
+                tails: tails.as_mut_ptr() as usize,
                 // Resolved once; the fork path below runs per node.
                 pool: parlay::pool::global(),
             };
-            b.build_rec(&mut ids, 0);
+            b.build_rec(&mut ids, 0, n <= BLOCK_LANES);
         }
-        PriorityKdTree { pts: pts.clone(), node_point, node_gamma, node_coords, left, right, bounds, root: 0 }
+        PriorityKdTree {
+            pts: pts.clone(),
+            node_point,
+            node_gamma,
+            node_coords,
+            left,
+            right,
+            bounds,
+            tail_len,
+            tails,
+            root: 0,
+        }
     }
 
     #[inline]
@@ -131,6 +167,30 @@ impl<S: Scalar> PriorityKdTree<S> {
         }
         stats.visit_node();
         stats.depth(depth);
+        let m = self.tail_len[i as usize] as usize;
+        if m > 0 {
+            // Maximal tail subtree: all m node points sit in slots
+            // [i, i + m), so one blocked kernel sweep replaces the
+            // recursion. The per-lane γ filter is exactly the recursion's
+            // candidate condition and the strict (dist, id) min is
+            // order-independent, so the result is byte-identical; only the
+            // visit/prune diagnostics differ (fewer nodes "visited").
+            // Lanes ≥ m are never read — they belong to other subtrees.
+            let mut dbuf = [S::ZERO; BLOCK_LANES];
+            S::dist_sq_block(self.tails.block(i as usize / BLOCK_MIN), self.pts.dim(), q, &mut dbuf);
+            for (l, &ds) in dbuf.iter().enumerate().take(m) {
+                let s = i as usize + l;
+                if self.node_gamma[s] <= gamma_q {
+                    continue;
+                }
+                stats.scan_point();
+                let p = self.node_point[s];
+                if ds < best.1 || (ds == best.1 && p < best.0) {
+                    *best = (p, ds);
+                }
+            }
+            return;
+        }
         // The node's own point is a valid candidate (γ > γ_q holds here).
         stats.scan_point();
         let d = self.pts.dim();
@@ -217,6 +277,8 @@ struct PskdBuilder<'a, S: Scalar> {
     left: usize,
     right: usize,
     bounds: usize,
+    tail_len: usize,
+    tails: usize,
     pool: std::sync::Arc<parlay::Pool>,
 }
 
@@ -224,7 +286,11 @@ unsafe impl<S: Scalar> Sync for PskdBuilder<'_, S> {}
 
 impl<S: Scalar> PskdBuilder<'_, S> {
     /// Subtree over `ids` occupies slots `[slot, slot + ids.len())`.
-    fn build_rec(&self, ids: &mut [u32], slot: usize) {
+    /// `tail_root` marks it as a *maximal* small subtree (≤ BLOCK_LANES
+    /// points, parent larger — or the whole tree): after its nodes are
+    /// written, their slot-ordered coordinates are transposed into tail
+    /// block `slot / BLOCK_MIN`.
+    fn build_rec(&self, ids: &mut [u32], slot: usize, tail_root: bool) {
         let m = ids.len();
         debug_assert!(m >= 1);
         let d = self.d;
@@ -261,6 +327,10 @@ impl<S: Scalar> PskdBuilder<'_, S> {
                 *(self.left as *mut u32).add(slot) = NONE;
                 *(self.right as *mut u32).add(slot) = NONE;
             }
+            if tail_root {
+                // SAFETY: this task owns slots [slot, slot + 1).
+                unsafe { self.finish_tail(slot, 1) };
+            }
             return;
         }
         let dim = bb.widest_dim();
@@ -281,16 +351,50 @@ impl<S: Scalar> PskdBuilder<'_, S> {
             *(self.left as *mut u32).add(slot) = if lids.is_empty() { NONE } else { lslot as u32 };
             *(self.right as *mut u32).add(slot) = if rids.is_empty() { NONE } else { rslot as u32 };
         }
-        let go = |ids: &mut [u32], s: usize| {
+        // A child becomes a tail root when this node is too large to be in
+        // a tail itself but the child fits a block.
+        let child_tail = |c: &[u32]| m > BLOCK_LANES && c.len() <= BLOCK_LANES;
+        let (ltail, rtail) = (child_tail(lids), child_tail(rids));
+        let go = |ids: &mut [u32], s: usize, tail: bool| {
             if !ids.is_empty() {
-                self.build_rec(ids, s);
+                self.build_rec(ids, s, tail);
             }
         };
         if m >= BUILD_GRAIN {
-            self.pool.join(|| go(lids, lslot), || go(rids, rslot));
+            self.pool.join(|| go(lids, lslot, ltail), || go(rids, rslot, rtail));
         } else {
-            go(lids, lslot);
-            go(rids, rslot);
+            go(lids, lslot, ltail);
+            go(rids, rslot, rtail);
+        }
+        if tail_root {
+            // SAFETY: m ≤ BLOCK_LANES < BUILD_GRAIN, so the whole subtree
+            // was built sequentially above by this task, which owns slots
+            // [slot, slot + m) — and hence tail block slot / BLOCK_MIN —
+            // exclusively.
+            unsafe { self.finish_tail(slot, m) };
+        }
+    }
+
+    /// Record a finished maximal tail: transpose the `m` slot-ordered node
+    /// coordinates at `[slot, slot + m)` into dim-major tail block
+    /// `slot / BLOCK_MIN`, padding lanes `m..BLOCK_LANES` with `+∞`.
+    ///
+    /// # Safety
+    /// The caller's build task must own slots `[slot, slot + m)`; distinct
+    /// maximal tails start ≥ BLOCK_MIN slots apart, so their blocks are
+    /// disjoint and the write is raceless.
+    unsafe fn finish_tail(&self, slot: usize, m: usize) {
+        debug_assert!((1..=BLOCK_LANES).contains(&m));
+        *(self.tail_len as *mut u8).add(slot) = m as u8;
+        let d = self.d;
+        let nc = self.node_coords as *const S;
+        let block = (self.tails as *mut S).add((slot / BLOCK_MIN) * BLOCK_LANES * d);
+        for k in 0..d {
+            let row = block.add(k * BLOCK_LANES);
+            for l in 0..BLOCK_LANES {
+                let v = if l < m { *nc.add((slot + l) * d + k) } else { S::INFINITY };
+                row.add(l).write(v);
+            }
         }
     }
 
@@ -439,6 +543,67 @@ mod tests {
             .filter(|&i| gamma[i as usize] > gq && pts.dist_sq_to(i as usize, q) <= r_sq)
             .collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tail_blocks_are_well_formed() {
+        let mut rng = SplitMix64::new(21);
+        for n in [1usize, 5, 16, 17, 33, 300, 2048] {
+            let d = 2;
+            let pts = gen_uniform_points(&mut rng, n, d, 50.0);
+            let gamma = random_gamma(&mut rng, n);
+            let t = PriorityKdTree::build(&pts, &gamma);
+            let mut covered = vec![false; n];
+            let mut blocks = std::collections::HashSet::new();
+            for s in 0..n {
+                let m = t.tail_len[s] as usize;
+                if m == 0 {
+                    continue;
+                }
+                assert!(m <= BLOCK_LANES, "n={n} slot {s}");
+                if n > BLOCK_LANES {
+                    assert!(m >= BLOCK_MIN, "n={n} tail at {s} has only {m} points");
+                }
+                assert!(blocks.insert(s / BLOCK_MIN), "n={n} tail block collision at slot {s}");
+                let blk = t.tails.block(s / BLOCK_MIN);
+                for l in 0..BLOCK_LANES {
+                    for k in 0..d {
+                        let want = if l < m { t.node_coords[(s + l) * d + k] } else { f64::INFINITY };
+                        assert_eq!(blk[k * BLOCK_LANES + l], want, "n={n} slot {s} lane {l} dim {k}");
+                    }
+                }
+                for c in covered.iter_mut().skip(s).take(m) {
+                    assert!(!*c, "n={n}: slot inside two tails");
+                    *c = true;
+                }
+            }
+            // Every childless node roots a 1-point subtree, so it must lie
+            // inside some maximal tail.
+            for s in 0..n {
+                if t.left[s] == NONE && t.right[s] == NONE {
+                    assert!(covered[s], "n={n}: leaf slot {s} not covered by any tail");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_tail_sweep_is_byte_identical() {
+        use crate::geom::{force_scalar_kernel, kernel_toggle_guard};
+        let _serial = kernel_toggle_guard();
+        let mut rng = SplitMix64::new(22);
+        let pts = gen_uniform_points(&mut rng, 700, 3, 60.0);
+        let gamma = random_gamma(&mut rng, 700);
+        let t = PriorityKdTree::build(&pts, &gamma);
+        let queries: Vec<usize> = (0..700).step_by(19).collect();
+        let fast: Vec<_> = queries.iter().map(|&i| t.priority_nn(pts.point(i), gamma[i], &mut NoStats)).collect();
+        force_scalar_kernel(true);
+        let slow: Vec<_> = queries.iter().map(|&i| t.priority_nn(pts.point(i), gamma[i], &mut NoStats)).collect();
+        force_scalar_kernel(false);
+        assert_eq!(fast, slow);
+        for (&i, got) in queries.iter().zip(&fast) {
+            assert_eq!(*got, brute_priority_nn(&pts, &gamma, pts.point(i), gamma[i]), "query {i}");
+        }
     }
 
     #[test]

@@ -171,6 +171,34 @@ fn differential_exhaustive_model_by_algo_grid() {
     }
 }
 
+/// The SIMD/scalar leaf-kernel differential: the full pipeline, run once on
+/// the default `dist_sq_block` path (AVX where the host has it) and once
+/// with the portable scalar kernel forced, must agree byte for byte with
+/// each other and with the oracle — the end-to-end half of the exactness
+/// contract in `geom::scalar` (its unit tests pin single kernel calls; the
+/// `--features force-scalar-kernel` CI leg pins the compile-time variant).
+#[test]
+fn differential_forced_scalar_kernel_is_byte_identical() {
+    use parcluster::geom::{force_scalar_kernel, kernel_toggle_guard};
+    let _serial = kernel_toggle_guard();
+    for family in FAMILIES {
+        let mut rng = SplitMix64::new(0xD1FF_3000);
+        let pts = gen_family(family, &mut rng, 100);
+        let params = DpcParams { d_cut: 3.0, rho_min: 2.0, delta_min: 5.0, ..DpcParams::default() };
+        let want = oracle::oracle_pipeline(&pts, params);
+        let default_path = Dpc::new(params).run(&pts).unwrap();
+        force_scalar_kernel(true);
+        let scalar_path = Dpc::new(params).run(&pts).unwrap();
+        force_scalar_kernel(false);
+        assert_matches_oracle(&default_path, &want, &format!("{family} default-kernel"))
+            .unwrap_or_else(|e| panic!("{e}"));
+        assert_matches_oracle(&scalar_path, &want, &format!("{family} forced-scalar"))
+            .unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(default_path.rho, scalar_path.rho, "{family}: kernels disagree on rho");
+        assert_eq!(default_path.delta, scalar_path.delta, "{family}: kernels disagree on delta");
+    }
+}
+
 /// Streaming sessions against the oracle: after every batch, the stream's
 /// cut must match the oracle on the concatenated prefix, per model.
 #[test]

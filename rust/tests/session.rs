@@ -93,14 +93,25 @@ fn prop_malformed_inputs_are_typed_errors() {
             if !matches!(PointSet::try_from_rows(&rows), Err(DpcError::DimensionMismatch { .. })) {
                 return Err("ragged rows: wrong error".into());
             }
-            // NaN / ∞ coordinates at a random position.
+            // NaN / ∞ coordinates at a random position. The validated
+            // constructor rejects them at the door ...
             for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
                 let mut coords: Vec<f64> = (0..n * 2).map(|_| rng.uniform(0.0, 9.0)).collect();
                 let pos = rng.next_below((n * 2) as u64) as usize;
                 coords[pos] = bad;
-                let pts = PointSet::new(coords, 2);
+                match PointSet::try_new(coords.clone(), 2) {
+                    Err(DpcError::NonFiniteCoordinate { point, dim }) => {
+                        if point * 2 + dim != pos {
+                            return Err(format!("nonfinite at {pos}: reported ({point}, {dim})"));
+                        }
+                    }
+                    other => return Err(format!("nonfinite: got {other:?}", other = other.err())),
+                }
+                // ... and a store poisoned through the unvalidated generator
+                // path still fails typed, not by panic, in the session.
+                let pts = PointSet::from_flat_fn(n, 2, |i| coords[i]);
                 match ClusterSession::build(&pts) {
-                    Err(DpcError::NonFinite { point, dim }) => {
+                    Err(DpcError::NonFiniteCoordinate { point, dim }) => {
                         if point * 2 + dim != pos {
                             return Err(format!("nonfinite at {pos}: reported ({point}, {dim})"));
                         }
@@ -108,10 +119,11 @@ fn prop_malformed_inputs_are_typed_errors() {
                     other => return Err(format!("nonfinite: got {other:?}", other = other.err())),
                 }
                 // Same through the one-shot wrapper.
-                let pts = PointSet::new(vec![0.0, bad], 2);
+                let poisoned = [0.0, bad];
+                let pts = PointSet::from_flat_fn(1, 2, |i| poisoned[i]);
                 if !matches!(
                     Dpc::new(DpcParams { d_cut: 1.0, rho_min: 0.0, delta_min: 1.0, ..DpcParams::default() }).run(&pts),
-                    Err(DpcError::NonFinite { .. })
+                    Err(DpcError::NonFiniteCoordinate { .. })
                 ) {
                     return Err("Dpc::run nonfinite: wrong error".into());
                 }
