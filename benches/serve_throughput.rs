@@ -1,0 +1,64 @@
+//! Serve-surface throughput/latency bench: the loadgen harness against an
+//! in-process TCP server, sweeping connection counts — the numbers for
+//! EXPERIMENTS.md §Serve.
+//!
+//!   cargo bench --bench serve_throughput
+//!   PARBENCH_N=500 PARBENCH_OPS=50 cargo bench --bench serve_throughput
+//!
+//! Expected: throughput grows with connections until the coordinator's
+//! worker pool saturates (requests on one connection are strictly
+//! serial — concurrency comes from more connections), and p99 stays
+//! bounded because admission control sheds load as `Busy` (counted
+//! separately, retried by the harness) instead of queueing unboundedly.
+
+use std::sync::Arc;
+
+use parcluster::bench::Table;
+use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::serve::loadgen::{run, LoadgenOpts};
+use parcluster::serve::{server, ServeState};
+
+fn main() {
+    let n: u64 = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    let ops: usize = std::env::var("PARBENCH_OPS").ok().and_then(|v| v.parse().ok()).unwrap_or(25);
+    let workers: usize = std::env::var("PARBENCH_WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let cfg = CoordinatorConfig {
+        artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+        workers,
+        ..CoordinatorConfig::default()
+    };
+    let state = Arc::new(ServeState::new(Coordinator::start(cfg).expect("coordinator")));
+    let handle = server::spawn("127.0.0.1:0", Arc::clone(&state)).expect("bind");
+    let addr = handle.local_addr.to_string();
+
+    println!("# Serve throughput: {ops} mixed ops/conn (50% ingest, 50% recut), n={n}/batch, {workers} workers");
+    let mut table = Table::new(&["conns", "ops", "busy", "p50 (ms)", "p99 (ms)", "ops/s", "errors"]);
+    for conns in [1usize, 2, 4, 8] {
+        let report = run(&LoadgenOpts {
+            addr: addr.clone(),
+            connections: conns,
+            ops_per_conn: ops,
+            n,
+            ..LoadgenOpts::default()
+        });
+        table.row(vec![
+            conns.to_string(),
+            report.ops.to_string(),
+            report.busy.to_string(),
+            format!("{:.2}", report.p50.as_secs_f64() * 1e3),
+            format!("{:.2}", report.p99.as_secs_f64() * 1e3),
+            format!("{:.1}", report.ops_per_sec),
+            (report.proto_errors + report.request_errors).to_string(),
+        ]);
+        eprintln!("done: {conns} connections");
+        if report.proto_errors > 0 {
+            eprintln!("ERROR: {} protocol errors at {conns} connections", report.proto_errors);
+            handle.shutdown();
+            std::process::exit(1);
+        }
+    }
+    table.print();
+    println!("\n# paste the row matching the EXPERIMENTS.md §Serve template (conns=4)");
+    handle.shutdown();
+}

@@ -1,0 +1,132 @@
+//! `loadgen` — drive the parcluster TCP serve surface with concurrent
+//! mixed traffic and report latency percentiles + throughput.
+//!
+//! Two modes:
+//!
+//! - `loadgen --addr HOST:PORT ...` — hit an already-running
+//!   `parcluster serve --listen HOST:PORT`.
+//! - `loadgen --self-serve ...` — spin up an in-process server on
+//!   `127.0.0.1:0` (OS-assigned port), run the workload against it over
+//!   real sockets, then shut it down. This is what CI's smoke leg uses:
+//!   no orchestration, still exercises the full TCP path.
+//!
+//! Exit status is nonzero if any protocol error occurred (the serve
+//! contract is zero protocol errors under well-formed traffic) or if no
+//! operations completed.
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use parcluster::cli::Args;
+use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::serve::loadgen::{run, LoadgenOpts};
+use parcluster::serve::{server, ServeState};
+
+const USAGE: &str = "\
+loadgen — concurrency/latency harness for `parcluster serve --listen`
+
+USAGE:
+  loadgen (--addr HOST:PORT | --self-serve) [FLAGS]
+
+FLAGS:
+  --addr HOST:PORT     target an external `parcluster serve --listen` server
+  --self-serve         spawn an in-process server on 127.0.0.1:0 instead
+  --connections M      concurrent client connections        (default 4)
+  --ops N              operations per connection            (default 25)
+  --n N                points per session / ingest batch    (default 200)
+  --dataset NAME       server-side dataset generator        (default simden)
+  --ingest-pct P       percent of ops that are stream ingests, rest are
+                       session recuts                       (default 50)
+  --tenant ID          tenant id sent in each connection's hello
+  --workers N          (self-serve) coordinator worker threads
+  --max-inflight N     (self-serve) coordinator admission cap, 0 = unlimited
+  --smoke              tiny fast preset: --connections 4 --ops 5 --n 120
+
+Reports total ops, Busy retries, p50/p99 latency, and throughput; exits
+nonzero on any protocol error or if zero operations completed.
+";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("loadgen: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<ExitCode> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.switch("help") || args.positional.iter().any(|p| p == "help") {
+        print!("{USAGE}");
+        return Ok(ExitCode::SUCCESS);
+    }
+    let mut opts = LoadgenOpts::default();
+    if args.switch("smoke") {
+        opts.connections = 4;
+        opts.ops_per_conn = 5;
+        opts.n = 120;
+    }
+    opts.connections = args.get_or("connections", opts.connections)?;
+    opts.ops_per_conn = args.get_or("ops", opts.ops_per_conn)?;
+    opts.n = args.get_or("n", opts.n)?;
+    opts.dataset = args.get("dataset").unwrap_or(&opts.dataset).to_string();
+    opts.ingest_pct = args.get_or("ingest-pct", opts.ingest_pct)?;
+    opts.tenant = args.get("tenant").unwrap_or("").to_string();
+    let addr = args.get("addr").map(|s| s.to_string());
+    let self_serve = args.switch("self-serve");
+    let workers: usize = args.get_or("workers", 0)?;
+    let max_inflight: u64 = args.get_or("max-inflight", 0)?;
+    args.reject_unknown()?;
+
+    // A self-served target owns its server handle for shutdown at the end.
+    let mut owned: Option<server::ServerHandle> = None;
+    match (addr, self_serve) {
+        (Some(a), false) => opts.addr = a,
+        (None, true) => {
+            let mut cfg = CoordinatorConfig::default();
+            if workers > 0 {
+                cfg.workers = workers;
+            }
+            cfg.max_inflight_jobs = max_inflight;
+            let state = Arc::new(ServeState::new(Coordinator::start(cfg)?));
+            let handle = server::spawn("127.0.0.1:0", state)?;
+            opts.addr = handle.local_addr.to_string();
+            eprintln!("loadgen: self-serving on {}", opts.addr);
+            owned = Some(handle);
+        }
+        _ => anyhow::bail!("exactly one of --addr or --self-serve is required (see --help)"),
+    }
+
+    let report = run(&opts);
+    if let Some(h) = owned {
+        h.shutdown();
+    }
+
+    println!(
+        "loadgen: {} conns x {} ops, dataset={} n={} ingest={}%",
+        opts.connections, opts.ops_per_conn, opts.dataset, opts.n, opts.ingest_pct
+    );
+    println!(
+        "  ops={} busy_retries={} request_errors={} proto_errors={}",
+        report.ops, report.busy, report.request_errors, report.proto_errors
+    );
+    println!(
+        "  p50={:.2}ms p99={:.2}ms throughput={:.1} ops/s wall={:.2}s",
+        report.p50.as_secs_f64() * 1e3,
+        report.p99.as_secs_f64() * 1e3,
+        report.ops_per_sec,
+        report.wall.as_secs_f64()
+    );
+
+    if report.proto_errors > 0 {
+        eprintln!("loadgen: FAIL — {} protocol errors", report.proto_errors);
+        return Ok(ExitCode::FAILURE);
+    }
+    if report.ops == 0 {
+        eprintln!("loadgen: FAIL — zero operations completed");
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}

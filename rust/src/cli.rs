@@ -124,18 +124,32 @@ COMMANDS:
              reporting per-batch latency (--verify re-checks exactness
              against a from-scratch run after every batch)
   serve      [--config FILE] [--workers N] [--durable DIR] [--fsync-every N]
-             read jobs from stdin, one per line:
-             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`  full pipeline job
-             `open <dataset> <n> <d_cut>`                          open a cached session
-             `recut <session> <rho_min> <delta_min>`               linkage-only re-cut
+             [--listen HOST:PORT] [--max-inflight N] [--max-open-sessions N]
+             [--max-sessions-per-tenant N]
+             read requests from stdin, one per line (responses print in
+             request order; trailing options parse in any order):
+             `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density] [full]`  full pipeline job
+             `hello <tenant>`                                      bind a tenant id (quotas)
+             `open <dataset> <n> <d_cut> [density] [tag=T]`        open a cached session
+             `recut <session> <rho_min> <delta_min> [full]`        linkage-only re-cut
              `close <session>`                                     drop a session's cache
-             `stream <dim> <d_cut>`                                open a streaming session
-             `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`  batch + cut
+             `stream <dim> <d_cut> [density] [tag=T]`              open a streaming session
+             `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`  batch + cut
              `closestream <stream>`                                drop a streaming session
              `checkpoint`                                          snapshot durable state now
              (--durable write-ahead-journals every command into DIR and
              restores streams/sessions from DIR on startup; --fsync-every
-             sets group commit: 1 = every append (default), N = every N, 0 = never)
+             sets group commit: 1 = every append (default), N = every N, 0 = never;
+             --listen also serves the same requests as a length-prefixed,
+             CRC-framed binary protocol over TCP — the `loadgen` binary is
+             the reference client; --max-inflight bounds jobs in flight
+             (excess requests get a retryable `busy` response) and
+             --max-open-sessions / --max-sessions-per-tenant bound open
+             handles, evicting the least-recently-used idle one at the
+             global cap; all three default to 0 = unlimited)
+             [the `loadgen` binary drives a serve --listen endpoint with
+             concurrent mixed traffic and reports p50/p99 latency and
+             throughput — see `loadgen --help`]
   journal    inspect --dir DIR    print the manifest, checkpoints, and every
              journal frame (offset, LSN, kind) of a durable directory, plus
              whether the tail is clean or torn — read-only

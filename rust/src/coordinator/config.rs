@@ -45,6 +45,21 @@ pub struct CoordinatorConfig {
     /// Journal fsync policy: 1 = fsync every append (default), N = group
     /// commit every N appends, 0 = never (the OS flushes).
     pub fsync_every: u64,
+    /// TCP listen address for the binary serve front end (e.g.
+    /// `127.0.0.1:7401`). `None` = stdin-only serve (the default).
+    pub listen_addr: Option<String>,
+    /// Admission control: maximum jobs queued or running before
+    /// `try_submit`/`submit_recut`/`submit_ingest` reject with
+    /// `Backpressure`. 0 = unlimited (the default).
+    pub max_inflight_jobs: u64,
+    /// Serve admission: maximum open sessions + streams a single tenant id
+    /// may hold before opens fail with `QuotaExceeded`. 0 = unlimited.
+    pub max_sessions_per_tenant: usize,
+    /// Serve admission: global cap on open sessions + streams. When an
+    /// open would exceed it, the least-recently-used *idle* session is
+    /// evicted (closed) to make room; if every open handle is busy the
+    /// open fails with `Backpressure`. 0 = unlimited (the default).
+    pub max_open_sessions: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -58,6 +73,10 @@ impl Default for CoordinatorConfig {
             workers: 1,
             durable_dir: None,
             fsync_every: 1,
+            listen_addr: None,
+            max_inflight_jobs: 0,
+            max_sessions_per_tenant: 0,
+            max_open_sessions: 0,
         }
     }
 }
@@ -96,6 +115,12 @@ impl CoordinatorConfig {
                 "workers" => cfg.workers = v.parse::<usize>().context("workers")?.max(1),
                 "durable_dir" => cfg.durable_dir = Some(PathBuf::from(v)),
                 "fsync_every" => cfg.fsync_every = v.parse().context("fsync_every")?,
+                "listen_addr" => cfg.listen_addr = Some(v),
+                "max_inflight_jobs" => cfg.max_inflight_jobs = v.parse().context("max_inflight_jobs")?,
+                "max_sessions_per_tenant" => {
+                    cfg.max_sessions_per_tenant = v.parse().context("max_sessions_per_tenant")?
+                }
+                "max_open_sessions" => cfg.max_open_sessions = v.parse().context("max_open_sessions")?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -126,6 +151,18 @@ impl CoordinatorConfig {
         if let Ok(v) = std::env::var("PARCLUSTER_FSYNC_EVERY") {
             self.fsync_every = v.parse().context("PARCLUSTER_FSYNC_EVERY")?;
         }
+        if let Ok(v) = std::env::var("PARCLUSTER_LISTEN_ADDR") {
+            self.listen_addr = Some(v);
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_MAX_INFLIGHT_JOBS") {
+            self.max_inflight_jobs = v.parse().context("PARCLUSTER_MAX_INFLIGHT_JOBS")?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_MAX_SESSIONS_PER_TENANT") {
+            self.max_sessions_per_tenant = v.parse().context("PARCLUSTER_MAX_SESSIONS_PER_TENANT")?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_MAX_OPEN_SESSIONS") {
+            self.max_open_sessions = v.parse().context("PARCLUSTER_MAX_OPEN_SESSIONS")?;
+        }
         Ok(self)
     }
 }
@@ -155,7 +192,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let cfg = CoordinatorConfig::parse(
-            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\ndurable_dir = /tmp/dpc-wal\nfsync_every = 16\n",
+            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\ndurable_dir = /tmp/dpc-wal\nfsync_every = 16\nlisten_addr = 127.0.0.1:7401\nmax_inflight_jobs = 64\nmax_sessions_per_tenant = 8\nmax_open_sessions = 128\n",
         )
         .unwrap();
         assert_eq!(cfg.threads, 4);
@@ -165,6 +202,20 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.durable_dir, Some(PathBuf::from("/tmp/dpc-wal")));
         assert_eq!(cfg.fsync_every, 16);
+        assert_eq!(cfg.listen_addr.as_deref(), Some("127.0.0.1:7401"));
+        assert_eq!(cfg.max_inflight_jobs, 64);
+        assert_eq!(cfg.max_sessions_per_tenant, 8);
+        assert_eq!(cfg.max_open_sessions, 128);
+    }
+
+    #[test]
+    fn admission_defaults_are_unlimited() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.listen_addr, None);
+        assert_eq!(cfg.max_inflight_jobs, 0);
+        assert_eq!(cfg.max_sessions_per_tenant, 0);
+        assert_eq!(cfg.max_open_sessions, 0);
+        assert!(CoordinatorConfig::parse("max_inflight_jobs = lots\n").is_err());
     }
 
     #[test]

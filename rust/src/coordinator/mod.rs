@@ -27,10 +27,12 @@ pub mod engine;
 pub mod job;
 pub mod router;
 pub mod service;
+pub mod spec;
 pub mod metrics;
 
 pub use config::CoordinatorConfig;
 pub use engine::{Engine, JobSpec, TreeEngine, XlaEngine};
 pub use job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 pub use router::{Backend, Router};
-pub use service::{Coordinator, SessionEntry, SessionId, StreamEntry};
+pub use service::{Coordinator, JobId, SessionEntry, SessionId, StreamEntry};
+pub use spec::{OpenSource, OpenSpec};

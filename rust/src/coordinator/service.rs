@@ -44,6 +44,7 @@ use super::engine::JobSpec;
 use super::job::{ClusterJob, JobOutput, JobPayload, JobStatus};
 use super::metrics::Metrics;
 use super::router::{Backend, Router};
+use super::spec::OpenSpec;
 
 pub type JobId = u64;
 pub type SessionId = u64;
@@ -69,6 +70,9 @@ pub struct SessionEntry {
     pub density_s: f64,
     /// Wall-clock seconds Step 2 (dependents + δ) took at build time.
     pub dep_s: f64,
+    /// The open's [`OpenSpec::tag`] label, echoed in re-cut job outputs.
+    /// In-memory only; recovered sessions carry `"recovered"`.
+    pub tag: String,
 }
 
 impl SessionEntry {
@@ -86,6 +90,9 @@ pub struct StreamEntry {
     /// The stream's density model (immutable, like the radius — readable
     /// without the session lock).
     pub density: DensityModel,
+    /// The open's [`OpenSpec::tag`] label, echoed in ingest job outputs.
+    /// In-memory only; recovered streams carry `"recovered"`.
+    pub tag: String,
     pub session: Mutex<StreamingSession>,
     /// FIFO ingest tickets, issued under this lock *around* the queue push
     /// so ticket order equals queue order; workers wait for their ticket
@@ -111,6 +118,12 @@ struct Shared {
     shutdown: AtomicBool,
     sessions: Mutex<HashMap<SessionId, Arc<SessionEntry>>>,
     streams: Mutex<HashMap<SessionId, Arc<StreamEntry>>>,
+    /// Jobs submitted but not yet terminal (queued + running). The
+    /// admission gate ([`Coordinator::try_submit`] and the gated
+    /// `submit_recut`/`submit_ingest` paths) bounds this at
+    /// `CoordinatorConfig::max_inflight_jobs`; workers decrement as jobs
+    /// reach a terminal status.
+    inflight: AtomicU64,
 }
 
 /// The write-ahead half of `--durable` serve mode. Lock ordering: the
@@ -182,6 +195,7 @@ impl Coordinator {
                                 Arc::new(StreamEntry {
                                     d_cut: s.d_cut(),
                                     density: s.density_model(),
+                                    tag: "recovered".to_string(),
                                     session: Mutex::new(s),
                                     tickets: Mutex::new(TicketState::default()),
                                     turn: Condvar::new(),
@@ -214,6 +228,7 @@ impl Coordinator {
                             },
                             density_s: s.density_secs,
                             dep_s: s.dep_secs,
+                            tag: "recovered".to_string(),
                         }),
                     );
                 }
@@ -230,6 +245,7 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             sessions: Mutex::new(sessions),
             streams: Mutex::new(streams),
+            inflight: AtomicU64::new(0),
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers)
@@ -279,8 +295,57 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Submit a job; returns immediately.
+    /// Submit a job; returns immediately. Unbounded — the admission gate
+    /// lives in [`Coordinator::try_submit`] and the `submit_recut` /
+    /// `submit_ingest` paths; this raw entry point always queues (tests,
+    /// embedded batch drivers).
     pub fn submit(&self, job: ClusterJob) -> JobId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
+        self.shared.queue.lock().unwrap().push_back((id, job));
+        self.shared.queue_cv.notify_one();
+        self.metrics.inc("jobs_submitted");
+        id
+    }
+
+    /// Jobs submitted but not yet terminal (queued + running).
+    pub fn inflight_jobs(&self) -> u64 {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// Reserve an in-flight slot against `max_inflight_jobs` (0 = no
+    /// limit). A CAS loop so concurrent admitters can never overshoot the
+    /// limit; the slot is released when the job goes terminal, so a
+    /// caller that reserves MUST enqueue (or call `release_slot` on an
+    /// abandoned path).
+    fn admit_job(&self) -> Result<(), DpcError> {
+        let limit = self.cfg.max_inflight_jobs;
+        if limit == 0 {
+            self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        }
+        let mut cur = self.shared.inflight.load(Ordering::Acquire);
+        loop {
+            if cur >= limit {
+                self.metrics.inc("jobs_rejected_backpressure");
+                return Err(DpcError::Backpressure { in_flight: cur, limit });
+            }
+            match self.shared.inflight.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Ok(()),
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    fn release_slot(&self) {
+        self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Enqueue a job whose slot [`Coordinator::admit_job`] already
+    /// reserved (keeps `submit`'s unconditional increment from double
+    /// counting).
+    fn submit_admitted(&self, job: ClusterJob) -> JobId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
         self.shared.queue.lock().unwrap().push_back((id, job));
@@ -289,27 +354,25 @@ impl Coordinator {
         id
     }
 
-    /// Open a session: validate the input, run Steps 1–2 once through the
-    /// routed engine, and cache the artifacts for threshold-only re-cuts.
-    /// Synchronous — the build is the expensive part the session exists to
-    /// amortize, so callers should see its cost exactly once. Runs the
-    /// paper's cutoff-count density; see
-    /// [`Coordinator::open_session_with_model`].
-    pub fn open_session(&self, pts: Arc<PointSet>, d_cut: f64) -> Result<SessionId, DpcError> {
-        self.open_session_with_model(pts, d_cut, DensityModel::CutoffCount)
+    /// [`Coordinator::submit`] behind the admission gate: fails with
+    /// [`DpcError::Backpressure`] instead of queueing once
+    /// `max_inflight_jobs` jobs are queued or running. The serve surfaces
+    /// submit through this so a traffic burst degrades into explicit
+    /// `Busy` responses rather than an unbounded queue.
+    pub fn try_submit(&self, job: ClusterJob) -> Result<JobId, DpcError> {
+        self.admit_job()?;
+        Ok(self.submit_admitted(job))
     }
 
-    /// [`Coordinator::open_session`] under any [`DensityModel`]; every
-    /// re-cut of the session inherits the model.
-    pub fn open_session_with_model(
-        &self,
-        pts: Arc<PointSet>,
-        d_cut: f64,
-        density: DensityModel,
-    ) -> Result<SessionId, DpcError> {
+    /// Open a session described by an [`OpenSpec`] with a points source:
+    /// validate the input, run Steps 1–2 once through the routed engine,
+    /// and cache the artifacts for threshold-only re-cuts. Synchronous —
+    /// the build is the expensive part the session exists to amortize, so
+    /// callers should see its cost exactly once.
+    pub fn open_session(&self, spec: OpenSpec) -> Result<SessionId, DpcError> {
+        spec.validate()?;
+        let (pts, d_cut, density, tag) = spec.into_points()?;
         session::validate_points(&pts)?;
-        session::validate_d_cut(d_cut)?;
-        density.validate()?;
         // The payload shares the session store's coordinate buffer (a
         // refcount bump, no copy).
         let payload = DynPoints::F64((*pts).clone());
@@ -334,6 +397,7 @@ impl Coordinator {
             built_by: engine.name(),
             density_s,
             dep_s,
+            tag,
         });
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         // WAL before publish: replay recomputes the same artifacts from
@@ -344,34 +408,65 @@ impl Coordinator {
         Ok(id)
     }
 
+    /// Deprecated shim for the pre-[`OpenSpec`] signature.
+    #[deprecated(since = "0.3.0", note = "use open_session(OpenSpec::points(pts, d_cut).density(model))")]
+    pub fn open_session_with_model(
+        &self,
+        pts: Arc<PointSet>,
+        d_cut: f64,
+        density: DensityModel,
+    ) -> Result<SessionId, DpcError> {
+        self.open_session(OpenSpec::points(pts, d_cut).density(density))
+    }
+
     /// Look up an open session's cached artifacts.
     pub fn session(&self, id: SessionId) -> Option<Arc<SessionEntry>> {
         self.shared.sessions.lock().unwrap().get(&id).cloned()
     }
 
+    /// Every open session id (serve admission seeds its registry from
+    /// this after a durable recovery).
+    pub fn session_ids(&self) -> Vec<SessionId> {
+        self.shared.sessions.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Every open stream id.
+    pub fn stream_ids(&self) -> Vec<SessionId> {
+        self.shared.streams.lock().unwrap().keys().copied().collect()
+    }
+
     /// Submit a linkage-only re-cut of an open session at new thresholds.
+    /// Gated by `max_inflight_jobs`: at the limit this fails with
+    /// [`DpcError::Backpressure`] instead of queueing.
     pub fn submit_recut(&self, id: SessionId, rho_min: f64, delta_min: f64) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         let entry = self.session(id).ok_or(DpcError::UnknownSession(id))?;
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
+        let tag = if entry.tag.is_empty() { format!("recut:{id}") } else { entry.tag.clone() };
+        self.admit_job()?;
         // Audit-only entry: replay rebuilds the same cached artifacts from
         // the session's OpenSession record, so a recut has nothing to redo.
-        self.journal_append(&JournalEntry::Recut { session: id, rho_min, delta_min })?;
-        let job = ClusterJob::recut(id, params).tag(format!("recut:{id}"));
+        if let Err(e) = self.journal_append(&JournalEntry::Recut { session: id, rho_min, delta_min }) {
+            self.release_slot();
+            return Err(e);
+        }
+        let job = ClusterJob::recut(id, params).tag(tag);
         self.metrics.inc("recuts_submitted");
-        Ok(self.submit(job))
+        Ok(self.submit_admitted(job))
     }
 
-    /// Drop a session's cached artifacts. Returns whether it existed;
-    /// re-cuts already dequeued keep their `Arc` and complete.
-    pub fn close_session(&self, id: SessionId) -> bool {
+    /// Drop a session's cached artifacts. Closing an id that was never
+    /// opened (or already closed) is a typed
+    /// [`DpcError::UnknownSession`]; re-cuts already dequeued keep their
+    /// `Arc` and complete.
+    pub fn close_session(&self, id: SessionId) -> Result<(), DpcError> {
         // Journal lock (outermost) before the map lock; the entry is
         // logged only for a session that actually existed.
         let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
         let mut sessions = self.shared.sessions.lock().unwrap();
         if !sessions.contains_key(&id) {
-            return false;
+            return Err(DpcError::UnknownSession(id));
         }
         if let Some(j) = journal.as_deref_mut() {
             if let Err(e) = j.append(&JournalEntry::CloseSession { session: id }) {
@@ -382,25 +477,18 @@ impl Coordinator {
             }
         }
         sessions.remove(&id);
-        true
+        self.metrics.inc("sessions_closed");
+        Ok(())
     }
 
-    /// Open a streaming session at a fixed radius under the cutoff-count
-    /// density: subsequent [`Coordinator::submit_ingest`] jobs grow it
-    /// batch by batch. Stream ids share the session id namespace but not
-    /// the session store.
-    pub fn open_stream(&self, dim: usize, d_cut: f64) -> Result<SessionId, DpcError> {
-        self.open_stream_with_model(dim, d_cut, DensityModel::CutoffCount)
-    }
-
-    /// [`Coordinator::open_stream`] under any [`DensityModel`] (fixed for
-    /// the stream's lifetime, like the radius).
-    pub fn open_stream_with_model(
-        &self,
-        dim: usize,
-        d_cut: f64,
-        density: DensityModel,
-    ) -> Result<SessionId, DpcError> {
+    /// Open a streaming session described by an [`OpenSpec`] with a
+    /// dimension source: subsequent [`Coordinator::submit_ingest`] jobs
+    /// grow it batch by batch at the spec's fixed radius and density
+    /// model. Stream ids share the session id namespace but not the
+    /// session store.
+    pub fn open_stream(&self, spec: OpenSpec) -> Result<SessionId, DpcError> {
+        spec.validate()?;
+        let (dim, d_cut, density, tag) = spec.into_dim()?;
         let s = StreamingSession::<f64>::new_with_model(dim, d_cut, density)?;
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         self.journal_append(&JournalEntry::OpenStream {
@@ -415,6 +503,7 @@ impl Coordinator {
             Arc::new(StreamEntry {
                 d_cut,
                 density,
+                tag,
                 session: Mutex::new(s),
                 tickets: Mutex::new(TicketState::default()),
                 turn: Condvar::new(),
@@ -422,6 +511,17 @@ impl Coordinator {
         );
         self.metrics.inc("streams_opened");
         Ok(id)
+    }
+
+    /// Deprecated shim for the pre-[`OpenSpec`] signature.
+    #[deprecated(since = "0.3.0", note = "use open_stream(OpenSpec::dim(dim, d_cut).density(model))")]
+    pub fn open_stream_with_model(
+        &self,
+        dim: usize,
+        d_cut: f64,
+        density: DensityModel,
+    ) -> Result<SessionId, DpcError> {
+        self.open_stream(OpenSpec::dim(dim, d_cut).density(density))
     }
 
     /// Look up an open stream.
@@ -455,39 +555,45 @@ impl Coordinator {
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
+        let tag = if entry.tag.is_empty() { format!("ingest:{id}") } else { entry.tag.clone() };
+        self.admit_job()?;
         // WAL first, and hold the journal lock (outermost) across ticket
         // issuance and the queue push: journal order == ticket order ==
         // application order for every stream, which is exactly what replay
         // reproduces. The batch share is a refcount bump, not a copy.
         let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
         if let Some(j) = journal.as_deref_mut() {
-            j.append(&JournalEntry::Ingest {
+            if let Err(e) = j.append(&JournalEntry::Ingest {
                 stream: id,
                 rho_min,
                 delta_min,
                 batch: DynPoints::F64((*batch).clone()),
-            })?;
+            }) {
+                self.release_slot();
+                return Err(e);
+            }
         }
         // Issue the ticket and enqueue under the ticket lock, so ticket
         // order always equals queue order for this stream.
         let mut tickets = entry.tickets.lock().unwrap();
         let seq = tickets.next;
         tickets.next += 1;
-        let job = ClusterJob::ingest(id, batch, seq, params).tag(format!("ingest:{id}"));
+        let job = ClusterJob::ingest(id, batch, seq, params).tag(tag);
         self.metrics.inc("ingests_submitted");
-        let job_id = self.submit(job);
+        let job_id = self.submit_admitted(job);
         drop(tickets);
         drop(journal);
         Ok(job_id)
     }
 
-    /// Drop an open stream. Returns whether it existed. Ingests already
-    /// dequeued keep their `Arc` and may still complete in ticket order;
-    /// ones that look the stream up after the close fail with
+    /// Drop an open stream. Closing an id that was never opened (or
+    /// already closed) is a typed [`DpcError::UnknownSession`]. Ingests
+    /// already dequeued keep their `Arc` and may still complete in ticket
+    /// order; ones that look the stream up after the close fail with
     /// [`DpcError::UnknownSession`] — and the close wakes ticket waiters so
     /// a job stranded behind such a failed predecessor bails out instead of
     /// deadlocking the worker pool.
-    pub fn close_stream(&self, id: SessionId) -> bool {
+    pub fn close_stream(&self, id: SessionId) -> Result<(), DpcError> {
         // Journal lock (outermost) before the map and ticket locks.
         let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
         let removed = self.shared.streams.lock().unwrap().remove(&id);
@@ -502,9 +608,10 @@ impl Coordinator {
                 tickets.closed = true;
                 entry.turn.notify_all();
                 drop(tickets);
-                true
+                self.metrics.inc("streams_closed");
+                Ok(())
             }
-            None => false,
+            None => Err(DpcError::UnknownSession(id)),
         }
     }
 
@@ -634,6 +741,10 @@ fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &Coordinato
             ),
             Err(e) => set_status(sh, id, JobStatus::Failed(e.to_string())),
         }
+        // Terminal status is visible; free the admission slot so a caller
+        // parked on Backpressure can get in. Decrement AFTER set_status so
+        // `inflight` never undercounts live work.
+        sh.inflight.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -898,7 +1009,7 @@ mod tests {
     fn session_recut_matches_full_run_and_skips_steps12() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
         let pts = blob_points();
-        let sid = coord.open_session(Arc::clone(&pts), 3.0).unwrap();
+        let sid = coord.open_session(OpenSpec::points(Arc::clone(&pts), 3.0)).unwrap();
         for (rho_min, delta_min) in [(0.0, 20.0), (2.0, 10.0), (0.0, f64::INFINITY)] {
             let out = coord
                 .wait(coord.submit_recut(sid, rho_min, delta_min).unwrap())
@@ -912,7 +1023,7 @@ mod tests {
         }
         assert_eq!(coord.metrics.counter("sessions_opened"), 1);
         assert_eq!(coord.metrics.counter("recuts_submitted"), 3);
-        assert!(coord.close_session(sid));
+        coord.close_session(sid).unwrap();
     }
 
     #[test]
@@ -927,12 +1038,12 @@ mod tests {
             assert_eq!(out.result.rho, fresh.rho, "{model}: job rho");
             assert_eq!(out.result.labels, fresh.labels, "{model}: job labels");
             // Session re-cuts inherit the model.
-            let sid = coord.open_session_with_model(Arc::clone(&pts), 3.0, model).unwrap();
+            let sid = coord.open_session(OpenSpec::points(Arc::clone(&pts), 3.0).density(model)).unwrap();
             let recut = coord.wait(coord.submit_recut(sid, 0.0, 20.0).unwrap()).unwrap();
             assert_eq!(recut.result.rho, fresh.rho, "{model}: recut rho");
             assert_eq!(recut.result.dep, fresh.dep, "{model}: recut dep");
             assert_eq!(recut.result.labels, fresh.labels, "{model}: recut labels");
-            assert!(coord.close_session(sid));
+            coord.close_session(sid).unwrap();
         }
     }
 
@@ -942,7 +1053,7 @@ mod tests {
         let pts = blob_points();
         let d = pts.dim();
         for model in [DensityModel::KnnRadius { k: 3 }, DensityModel::GaussianKernel] {
-            let sid = coord.open_stream_with_model(d, 3.0, model).unwrap();
+            let sid = coord.open_stream(OpenSpec::dim(d, 3.0).density(model)).unwrap();
             for (lo, hi) in [(0usize, 70usize), (70, 160)] {
                 let batch = Arc::new(PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d));
                 let out = coord.wait(coord.submit_ingest(sid, batch, 0.0, 20.0).unwrap()).unwrap();
@@ -959,7 +1070,7 @@ mod tests {
                 assert_eq!(out.result.dep, fresh.dep, "{model}: dep after {hi}");
                 assert_eq!(out.result.labels, fresh.labels, "{model}: labels after {hi}");
             }
-            assert!(coord.close_stream(sid));
+            coord.close_stream(sid).unwrap();
         }
     }
 
@@ -967,16 +1078,16 @@ mod tests {
     fn recut_of_unknown_or_closed_session_is_typed_error() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
         assert!(matches!(coord.submit_recut(42, 0.0, 1.0), Err(DpcError::UnknownSession(42))));
-        let sid = coord.open_session(blob_points(), 3.0).unwrap();
-        assert!(coord.close_session(sid));
-        assert!(!coord.close_session(sid));
+        let sid = coord.open_session(OpenSpec::points(blob_points(), 3.0)).unwrap();
+        coord.close_session(sid).unwrap();
+        assert!(matches!(coord.close_session(sid), Err(DpcError::UnknownSession(_))));
         assert!(matches!(coord.submit_recut(sid, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
     }
 
     #[test]
     fn recut_timings_report_cached_stage_costs() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
-        let sid = coord.open_session(blob_points(), 3.0).unwrap();
+        let sid = coord.open_session(OpenSpec::points(blob_points(), 3.0)).unwrap();
         let entry = coord.session(sid).unwrap();
         let out = coord.wait(coord.submit_recut(sid, 0.0, 20.0).unwrap()).unwrap();
         // Not just linkage: the density/dep slots carry the cached stages'
@@ -992,7 +1103,7 @@ mod tests {
         let pts = blob_points();
         let d = pts.dim();
         let (d_cut, rho_min, delta_min) = (3.0, 0.0, 20.0);
-        let sid = coord.open_stream(d, d_cut).unwrap();
+        let sid = coord.open_stream(OpenSpec::dim(d, d_cut)).unwrap();
         for (lo, hi) in [(0usize, 50usize), (50, 61), (61, 160)] {
             let batch = Arc::new(PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d));
             let out = coord
@@ -1009,8 +1120,8 @@ mod tests {
         assert_eq!(out_len(&coord, sid), 160);
         assert_eq!(coord.metrics.counter("streams_opened"), 1);
         assert_eq!(coord.metrics.counter("ingests_submitted"), 3);
-        assert!(coord.close_stream(sid));
-        assert!(!coord.close_stream(sid));
+        coord.close_stream(sid).unwrap();
+        assert!(matches!(coord.close_stream(sid), Err(DpcError::UnknownSession(_))));
     }
 
     fn out_len(coord: &Coordinator, sid: SessionId) -> usize {
@@ -1024,7 +1135,7 @@ mod tests {
         let coord = Coordinator::start(cfg).unwrap();
         let pts = blob_points();
         let d = pts.dim();
-        let sid = coord.open_stream(d, 3.0).unwrap();
+        let sid = coord.open_stream(OpenSpec::dim(d, 3.0)).unwrap();
         // Burst-submit without waiting: workers race the shared queue, but
         // per-stream tickets force batches to land in submission order —
         // point ids (and thus deps/labels) would differ otherwise.
@@ -1055,11 +1166,11 @@ mod tests {
         cfg.workers = 2;
         let coord = Coordinator::start(cfg).unwrap();
         let pts = blob_points();
-        let sid = coord.open_stream(2, 3.0).unwrap();
+        let sid = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
         let ids: Vec<JobId> = (0..4)
             .map(|_| coord.submit_ingest(sid, Arc::clone(&pts), 0.0, 20.0).unwrap())
             .collect();
-        assert!(coord.close_stream(sid));
+        coord.close_stream(sid).unwrap();
         // The close may race the dequeues arbitrarily; every job must still
         // reach a terminal state (applied in order, or UnknownSession) —
         // this test hangs if a ticket waiter is ever stranded.
@@ -1071,13 +1182,20 @@ mod tests {
     #[test]
     fn stream_errors_are_typed() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
-        assert!(matches!(coord.open_stream(0, 1.0), Err(DpcError::InvalidParam { name: "dim", .. })));
-        assert!(matches!(coord.open_stream(2, -1.0), Err(DpcError::InvalidParam { name: "d_cut", .. })));
+        assert!(matches!(coord.open_stream(OpenSpec::dim(0, 1.0)), Err(DpcError::InvalidParam { name: "dim", .. })));
+        assert!(matches!(
+            coord.open_stream(OpenSpec::dim(2, -1.0)),
+            Err(DpcError::InvalidParam { name: "d_cut", .. })
+        ));
+        assert!(matches!(
+            coord.open_stream(OpenSpec::points(blob_points(), 1.0)),
+            Err(DpcError::InvalidParam { name: "open_spec", .. })
+        ));
         assert!(matches!(
             coord.submit_ingest(99, blob_points(), 0.0, 1.0),
             Err(DpcError::UnknownSession(99))
         ));
-        let sid = coord.open_stream(2, 3.0).unwrap();
+        let sid = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
         assert!(matches!(
             coord.submit_ingest(sid, blob_points(), f64::NAN, 1.0),
             Err(DpcError::InvalidParam { name: "rho_min", .. })
@@ -1091,10 +1209,17 @@ mod tests {
     #[test]
     fn open_session_validates_input() {
         let coord = Coordinator::start(tree_only_config()).unwrap();
-        assert!(matches!(coord.open_session(Arc::new(PointSet::empty(2)), 1.0), Err(DpcError::EmptyInput)));
         assert!(matches!(
-            coord.open_session(blob_points(), f64::NAN),
+            coord.open_session(OpenSpec::points(Arc::new(PointSet::empty(2)), 1.0)),
+            Err(DpcError::EmptyInput)
+        ));
+        assert!(matches!(
+            coord.open_session(OpenSpec::points(blob_points(), f64::NAN)),
             Err(DpcError::InvalidParam { name: "d_cut", .. })
+        ));
+        assert!(matches!(
+            coord.open_session(OpenSpec::dim(2, 1.0)),
+            Err(DpcError::InvalidParam { name: "open_spec", .. })
         ));
     }
 
@@ -1122,12 +1247,12 @@ mod tests {
         {
             let coord = Coordinator::start(cfg.clone()).unwrap();
             assert!(coord.is_durable());
-            sid_stream = coord.open_stream(d, 3.0).unwrap();
+            sid_stream = coord.open_stream(OpenSpec::dim(d, 3.0)).unwrap();
             for (lo, hi) in [(0usize, 60usize), (60, 100)] {
                 let batch = Arc::new(PointSet::new(pts.coords()[lo * d..hi * d].to_vec(), d));
                 coord.wait(coord.submit_ingest(sid_stream, batch, 0.0, 20.0).unwrap()).unwrap();
             }
-            sid_session = coord.open_session(Arc::clone(&pts), 3.0).unwrap();
+            sid_session = coord.open_session(OpenSpec::points(Arc::clone(&pts), 3.0)).unwrap();
             // Checkpoint mid-history, then keep going: recovery must stack
             // the snapshot with the journal suffix.
             let m = coord.checkpoint_now().unwrap();
@@ -1153,10 +1278,12 @@ mod tests {
         // and new ids never collide with recovered ones.
         let out = coord.wait(coord.submit_recut(sid_session, 0.0, 20.0).unwrap()).unwrap();
         assert_eq!(out.result.num_clusters, 2);
-        let new_id = coord.open_stream(d, 3.0).unwrap();
+        let new_id = coord.open_stream(OpenSpec::dim(d, 3.0)).unwrap();
         assert!(new_id > sid_stream.max(sid_session), "id allocator resumes past recovered ids");
-        assert!(coord.close_stream(sid_stream));
-        assert!(coord.close_session(sid_session));
+        assert_eq!(coord.stream(sid_stream).unwrap().tag, "recovered");
+        assert_eq!(sess.tag, "recovered");
+        coord.close_stream(sid_stream).unwrap();
+        coord.close_session(sid_session).unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -1165,13 +1292,118 @@ mod tests {
         let (cfg, dir) = durable_config("close");
         {
             let coord = Coordinator::start(cfg.clone()).unwrap();
-            let sid = coord.open_stream(2, 3.0).unwrap();
+            let sid = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
             let batch = Arc::new(PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2));
             coord.wait(coord.submit_ingest(sid, batch, 0.0, 1.0).unwrap()).unwrap();
-            assert!(coord.close_stream(sid));
+            coord.close_stream(sid).unwrap();
         }
         let coord = Coordinator::start(cfg).unwrap();
         assert!(coord.shared.streams.lock().unwrap().is_empty(), "closed stream stays closed");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn backpressure_rejects_at_the_limit_and_clears_after_drain() {
+        let mut cfg = tree_only_config();
+        cfg.max_inflight_jobs = 2;
+        let coord = Coordinator::start(cfg).unwrap();
+        // Deterministic: park two phantom slots so the gate is exactly full
+        // (workers can't dequeue jobs that were never enqueued).
+        coord.shared.inflight.fetch_add(2, Ordering::AcqRel);
+        let job = || ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() });
+        assert!(matches!(
+            coord.try_submit(job()),
+            Err(DpcError::Backpressure { in_flight: 2, limit: 2 })
+        ));
+        let sid = coord.open_session(OpenSpec::points(blob_points(), 3.0)).unwrap();
+        assert!(matches!(coord.submit_recut(sid, 0.0, 20.0), Err(DpcError::Backpressure { .. })));
+        let stream = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
+        assert!(matches!(
+            coord.submit_ingest(stream, blob_points(), 0.0, 20.0),
+            Err(DpcError::Backpressure { .. })
+        ));
+        assert_eq!(coord.metrics.counter("jobs_rejected_backpressure"), 3);
+        // Release the phantom slots: admission recovers immediately.
+        coord.shared.inflight.fetch_sub(2, Ordering::AcqRel);
+        let id = coord.try_submit(job()).unwrap();
+        coord.wait(id).unwrap();
+        // The slot release lands just after the terminal status becomes
+        // visible; give the worker a beat before asserting it drained.
+        for _ in 0..1000 {
+            if coord.inflight_jobs() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(coord.inflight_jobs(), 0, "terminal jobs release their slots");
+        // The raw submit entry point stays ungated even at the limit.
+        coord.shared.inflight.fetch_add(2, Ordering::AcqRel);
+        let id = coord.submit(job());
+        coord.wait(id).unwrap();
+        coord.shared.inflight.fetch_sub(2, Ordering::AcqRel);
+    }
+
+    #[test]
+    fn zero_limit_means_unbounded_admission() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert_eq!(coord.cfg.max_inflight_jobs, 0);
+        for _ in 0..8 {
+            let id = coord
+                .try_submit(ClusterJob::new(blob_points(), DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }))
+                .unwrap();
+            coord.wait(id).unwrap();
+        }
+        for _ in 0..1000 {
+            if coord.inflight_jobs() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(coord.inflight_jobs(), 0);
+    }
+
+    #[test]
+    fn open_spec_tag_is_echoed_in_job_outputs() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let sid = coord
+            .open_session(OpenSpec::points(blob_points(), 3.0).tag("tenant-a/run7"))
+            .unwrap();
+        let out = coord.wait(coord.submit_recut(sid, 0.0, 20.0).unwrap()).unwrap();
+        assert_eq!(out.tag, "tenant-a/run7");
+        let stream = coord.open_stream(OpenSpec::dim(2, 3.0).tag("tenant-b")).unwrap();
+        let batch = Arc::new(PointSet::new(vec![0.0, 0.0, 1.0, 1.0], 2));
+        let out = coord.wait(coord.submit_ingest(stream, batch, 0.0, 1.0).unwrap()).unwrap();
+        assert_eq!(out.tag, "tenant-b");
+        // Untagged opens keep the legacy kind:id tags.
+        let sid2 = coord.open_session(OpenSpec::points(blob_points(), 3.0)).unwrap();
+        let out = coord.wait(coord.submit_recut(sid2, 0.0, 20.0).unwrap()).unwrap();
+        assert_eq!(out.tag, format!("recut:{sid2}"));
+    }
+
+    #[test]
+    fn id_listings_track_opens_and_closes() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        assert!(coord.session_ids().is_empty() && coord.stream_ids().is_empty());
+        let sid = coord.open_session(OpenSpec::points(blob_points(), 3.0)).unwrap();
+        let stream = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
+        assert_eq!(coord.session_ids(), vec![sid]);
+        assert_eq!(coord.stream_ids(), vec![stream]);
+        coord.close_session(sid).unwrap();
+        coord.close_stream(stream).unwrap();
+        assert!(coord.session_ids().is_empty() && coord.stream_ids().is_empty());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_with_model_shims_still_forward() {
+        let coord = Coordinator::start(tree_only_config()).unwrap();
+        let sid = coord
+            .open_session_with_model(blob_points(), 3.0, DensityModel::GaussianKernel)
+            .unwrap();
+        assert_eq!(coord.session(sid).unwrap().density, DensityModel::GaussianKernel);
+        coord.close_session(sid).unwrap();
+        let stream = coord.open_stream_with_model(2, 3.0, DensityModel::KnnRadius { k: 3 }).unwrap();
+        assert_eq!(coord.stream(stream).unwrap().density, DensityModel::KnnRadius { k: 3 });
+        coord.close_stream(stream).unwrap();
     }
 }

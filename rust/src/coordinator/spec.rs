@@ -1,0 +1,206 @@
+//! [`OpenSpec`]: the one builder every session/stream open goes through.
+//!
+//! The coordinator used to expose four open entry points
+//! (`open_session`, `open_session_with_model`, `open_stream`,
+//! `open_stream_with_model`), and each new per-open knob (density model,
+//! dtype, tag) threatened to double the count again. `OpenSpec` collapses
+//! them: the *source* (a point set for a one-shot session, a dimension
+//! for a stream) plus the radius are required at construction, everything
+//! else is a builder default —
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use parcluster::coordinator::{Coordinator, CoordinatorConfig, OpenSpec};
+//! # use parcluster::dpc::DensityModel;
+//! # use parcluster::geom::PointSet;
+//! # let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
+//! # let pts = Arc::new(PointSet::new(vec![0.0, 0.0], 2));
+//! let sid = coord.open_session(OpenSpec::points(pts, 3.0).density(DensityModel::GaussianKernel).tag("demo"))?;
+//! let stream = coord.open_stream(OpenSpec::dim(2, 3.0))?;
+//! # Ok::<(), parcluster::DpcError>(())
+//! ```
+//!
+//! `open_session` requires a points source and `open_stream` a dimension
+//! source; handing the wrong kind is a typed [`DpcError::InvalidParam`],
+//! never a silent reinterpretation. The deprecated `*_with_model` shims
+//! forward here for one release.
+
+use std::sync::Arc;
+
+use crate::dpc::DensityModel;
+use crate::error::DpcError;
+use crate::geom::{Dtype, PointSet};
+
+/// What an open binds to: a full point set (one-shot session) or a
+/// dimension (streaming session that ingests batches later).
+#[derive(Clone, Debug)]
+pub enum OpenSource {
+    Points(Arc<PointSet>),
+    Dim(usize),
+}
+
+/// Builder-style description of a session or stream open. Construct with
+/// [`OpenSpec::points`] or [`OpenSpec::dim`], refine with the chained
+/// setters, and hand to [`super::Coordinator::open_session`] /
+/// [`super::Coordinator::open_stream`].
+#[derive(Clone, Debug)]
+pub struct OpenSpec {
+    source: OpenSource,
+    d_cut: f64,
+    density: DensityModel,
+    dtype: Dtype,
+    tag: String,
+}
+
+impl OpenSpec {
+    /// A one-shot session over `pts` at radius `d_cut` (cutoff-count
+    /// density, f64, untagged unless the setters say otherwise).
+    pub fn points(pts: Arc<PointSet>, d_cut: f64) -> Self {
+        OpenSpec {
+            source: OpenSource::Points(pts),
+            d_cut,
+            density: DensityModel::CutoffCount,
+            dtype: Dtype::F64,
+            tag: String::new(),
+        }
+    }
+
+    /// A streaming session over `dim`-dimensional batches at radius
+    /// `d_cut`.
+    pub fn dim(dim: usize, d_cut: f64) -> Self {
+        OpenSpec {
+            source: OpenSource::Dim(dim),
+            d_cut,
+            density: DensityModel::CutoffCount,
+            dtype: Dtype::F64,
+            tag: String::new(),
+        }
+    }
+
+    /// The exact density model every job in the session runs under
+    /// (default: the paper's cutoff count).
+    pub fn density(mut self, model: DensityModel) -> Self {
+        self.density = model;
+        self
+    }
+
+    /// Coordinate precision. The serve surface is f64-only today (the
+    /// durability layer already round-trips f32 streams, but the
+    /// coordinator's public stream API is not yet dtype-generic), so
+    /// anything but [`Dtype::F64`] fails [`OpenSpec::validate`] with a
+    /// typed error instead of silently widening.
+    pub fn dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Free-form label echoed in job outputs for this session's re-cuts
+    /// and ingests (and into serve-mode responses). In-memory only: the
+    /// durable journal does not record it, so recovered sessions come
+    /// back tagged `"recovered"`.
+    pub fn tag(mut self, tag: impl Into<String>) -> Self {
+        self.tag = tag.into();
+        self
+    }
+
+    pub fn source(&self) -> &OpenSource {
+        &self.source
+    }
+
+    pub fn d_cut_value(&self) -> f64 {
+        self.d_cut
+    }
+
+    pub fn density_model(&self) -> DensityModel {
+        self.density
+    }
+
+    pub fn dtype_value(&self) -> Dtype {
+        self.dtype
+    }
+
+    pub fn tag_value(&self) -> &str {
+        &self.tag
+    }
+
+    /// Source-independent validation shared by both open entry points.
+    pub fn validate(&self) -> Result<(), DpcError> {
+        crate::dpc::session::validate_d_cut(self.d_cut)?;
+        self.density.validate()?;
+        if self.dtype != Dtype::F64 {
+            return Err(DpcError::InvalidParam {
+                name: "dtype",
+                value: self.dtype.size_bytes() as f64,
+                requirement: "the coordinator serve surface is f64-only (see ROADMAP item 1)",
+            });
+        }
+        Ok(())
+    }
+
+    /// Unwrap a points source or fail typed.
+    pub fn into_points(self) -> Result<(Arc<PointSet>, f64, DensityModel, String), DpcError> {
+        match self.source {
+            OpenSource::Points(p) => Ok((p, self.d_cut, self.density, self.tag)),
+            OpenSource::Dim(_) => Err(DpcError::InvalidParam {
+                name: "open_spec",
+                value: 0.0,
+                requirement: "open_session requires a points source (OpenSpec::points)",
+            }),
+        }
+    }
+
+    /// Unwrap a dimension source or fail typed.
+    pub fn into_dim(self) -> Result<(usize, f64, DensityModel, String), DpcError> {
+        match self.source {
+            OpenSource::Dim(d) => Ok((d, self.d_cut, self.density, self.tag)),
+            OpenSource::Points(_) => Err(DpcError::InvalidParam {
+                name: "open_spec",
+                value: 0.0,
+                requirement: "open_stream requires a dimension source (OpenSpec::dim)",
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let spec = OpenSpec::dim(3, 2.5);
+        assert_eq!(spec.d_cut_value(), 2.5);
+        assert_eq!(spec.density_model(), DensityModel::CutoffCount);
+        assert_eq!(spec.dtype_value(), Dtype::F64);
+        assert_eq!(spec.tag_value(), "");
+        let spec = spec.density(DensityModel::KnnRadius { k: 4 }).tag("t");
+        assert_eq!(spec.density_model(), DensityModel::KnnRadius { k: 4 });
+        assert_eq!(spec.tag_value(), "t");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn wrong_source_kind_is_typed() {
+        let pts = Arc::new(PointSet::new(vec![0.0, 0.0], 2));
+        assert!(matches!(
+            OpenSpec::points(pts, 1.0).into_dim(),
+            Err(DpcError::InvalidParam { name: "open_spec", .. })
+        ));
+        assert!(matches!(
+            OpenSpec::dim(2, 1.0).into_points(),
+            Err(DpcError::InvalidParam { name: "open_spec", .. })
+        ));
+    }
+
+    #[test]
+    fn non_f64_dtype_is_rejected_for_now() {
+        let err = OpenSpec::dim(2, 1.0).dtype(Dtype::F32).validate().unwrap_err();
+        assert!(matches!(err, DpcError::InvalidParam { name: "dtype", .. }));
+    }
+
+    #[test]
+    fn invalid_radius_and_model_fail_validation() {
+        assert!(OpenSpec::dim(2, -1.0).validate().is_err());
+        assert!(OpenSpec::dim(2, 1.0).density(DensityModel::KnnRadius { k: 0 }).validate().is_err());
+    }
+}

@@ -220,6 +220,40 @@ pub fn get_u32_vec(cur: &mut Cursor<'_>) -> Result<Vec<u32>, String> {
     (0..len).map(|_| cur.u32()).collect()
 }
 
+/// `u64` count + bit-pattern `u64` elements. f64 slices travel as raw bits
+/// (like every scalar f64 here) so NaN payloads and signed zeros survive.
+pub fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_f64(out, x);
+    }
+}
+
+pub fn get_f64_vec(cur: &mut Cursor<'_>) -> Result<Vec<f64>, String> {
+    let len = cur.u64()? as usize;
+    if cur.remaining() < len.checked_mul(8).ok_or("f64 slice length overflows")? {
+        return Err(format!("f64 slice claims {len} elements, buffer too short"));
+    }
+    (0..len).map(|_| cur.f64()).collect()
+}
+
+/// `u64` count + two's-complement `u64` elements (cluster labels, where
+/// −1 marks noise).
+pub fn put_i64_slice(out: &mut Vec<u8>, xs: &[i64]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u64(out, x as u64);
+    }
+}
+
+pub fn get_i64_vec(cur: &mut Cursor<'_>) -> Result<Vec<i64>, String> {
+    let len = cur.u64()? as usize;
+    if cur.remaining() < len.checked_mul(8).ok_or("i64 slice length overflows")? {
+        return Err(format!("i64 slice claims {len} elements, buffer too short"));
+    }
+    (0..len).map(|_| cur.u64().map(|v| v as i64)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,9 +336,28 @@ mod tests {
         let mut buf = Vec::new();
         put_str(&mut buf, "rust-tree");
         put_u32_slice(&mut buf, &[3, 1, 4, 1, 5]);
+        put_f64_slice(&mut buf, &[0.5, f64::INFINITY, -0.0]);
+        put_i64_slice(&mut buf, &[-1, 0, i64::MAX]);
         let mut cur = Cursor::new(&buf);
         assert_eq!(get_str(&mut cur).unwrap(), "rust-tree");
         assert_eq!(get_u32_vec(&mut cur).unwrap(), vec![3, 1, 4, 1, 5]);
+        let fs = get_f64_vec(&mut cur).unwrap();
+        assert_eq!(fs[0], 0.5);
+        assert_eq!(fs[1], f64::INFINITY);
+        assert!(fs[2] == 0.0 && fs[2].is_sign_negative(), "-0.0 survives");
+        assert_eq!(get_i64_vec(&mut cur).unwrap(), vec![-1, 0, i64::MAX]);
         cur.expect_end("strings").unwrap();
+    }
+
+    #[test]
+    fn forged_slice_counts_are_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        put_f64_slice(&mut buf, &[1.0]);
+        buf[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(get_f64_vec(&mut Cursor::new(&buf)).is_err());
+        let mut buf = Vec::new();
+        put_i64_slice(&mut buf, &[1]);
+        buf[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(get_i64_vec(&mut Cursor::new(&buf)).is_err());
     }
 }

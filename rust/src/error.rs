@@ -53,6 +53,14 @@ pub enum DpcError {
     /// the file — the alternative is a silently truncated length that a
     /// later scan reports as corruption.
     OversizedJournalEntry { len: u64, max: u64 },
+    /// Admission control rejected a job: the coordinator already has
+    /// `limit` jobs queued or running. The caller should back off and
+    /// retry; the serve surfaces translate this into a `Busy` response
+    /// rather than queueing unboundedly.
+    Backpressure { in_flight: u64, limit: u64 },
+    /// Admission control rejected an open: the tenant already holds its
+    /// full quota of open sessions/streams.
+    QuotaExceeded { tenant: String, open: usize, limit: usize },
 }
 
 impl fmt::Display for DpcError {
@@ -90,6 +98,12 @@ impl fmt::Display for DpcError {
             DpcError::CorruptManifest { detail } => write!(f, "corrupt manifest: {detail}"),
             DpcError::OversizedJournalEntry { len, max } => {
                 write!(f, "journal entry payload of {len} bytes exceeds the frame format's maximum of {max}")
+            }
+            DpcError::Backpressure { in_flight, limit } => {
+                write!(f, "backpressure: {in_flight} jobs in flight at the admission limit of {limit}")
+            }
+            DpcError::QuotaExceeded { tenant, open, limit } => {
+                write!(f, "tenant {tenant:?} already holds {open} open sessions at its quota of {limit}")
             }
         }
     }
@@ -134,6 +148,8 @@ mod tests {
             (DpcError::CorruptCheckpoint { detail: "truncated".into() }, "truncated"),
             (DpcError::CorruptManifest { detail: "offset past journal end".into() }, "manifest"),
             (DpcError::OversizedJournalEntry { len: 5_000_000_000, max: 4_294_967_295 }, "5000000000"),
+            (DpcError::Backpressure { in_flight: 64, limit: 64 }, "64 jobs in flight"),
+            (DpcError::QuotaExceeded { tenant: "acme".into(), open: 8, limit: 8 }, "acme"),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -68,6 +68,7 @@ pub mod datasets;
 pub mod runtime;
 pub mod coordinator;
 pub mod durability;
+pub mod serve;
 pub mod bench;
 pub mod cli;
 pub mod metrics;

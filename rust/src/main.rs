@@ -9,10 +9,11 @@ use anyhow::{bail, Context, Result};
 use parcluster::bench::{fmt_secs, Table};
 use parcluster::cli::{Args, USAGE};
 use parcluster::coordinator::config::{parse_backend, parse_dep_algo};
-use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig};
+use parcluster::coordinator::{ClusterJob, Coordinator, CoordinatorConfig, OpenSpec};
 use parcluster::datasets::{self, io};
 use parcluster::dpc::{decision, ClusterSession, DensityModel, DepAlgo, DpcParams};
 use parcluster::geom::{Dtype, DynPoints, PointSet};
+use parcluster::serve::{dispatch, ConnCtx, Request, ServeState};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -225,7 +226,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let d = pts.dim();
     let n = pts.len();
     let per = n.div_ceil(batches);
-    let sid = coord.open_stream_with_model(d, params.d_cut, params.density)?;
+    let sid = coord.open_stream(OpenSpec::dim(d, params.d_cut).density(params.density).tag(&tag))?;
     println!(
         "stream {sid}: {tag} (n={n}, d={d}) in {batches} batches, d_cut={}, rho_min={}, delta_min={}, density={}",
         params.d_cut, params.rho_min, params.delta_min, params.density
@@ -283,7 +284,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Service demo: read jobs from stdin, submit to the coordinator, report.
+/// Serve mode: the stdin line surface and (with `--listen`) the TCP
+/// binary surface, both feeding [`parcluster::serve::dispatch`] — one
+/// parser, one dispatcher, one behavior. Each stdin line is parsed into
+/// a [`Request`], dispatched synchronously, and its [`Response`] printed;
+/// malformed lines report to stderr and never take the server down.
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
         Some(p) => CoordinatorConfig::load(Path::new(p))?,
@@ -299,211 +304,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get_parse::<u64>("fsync-every")? {
         cfg.fsync_every = n;
     }
+    if let Some(a) = args.get("listen") {
+        cfg.listen_addr = Some(a.to_string());
+    }
+    if let Some(n) = args.get_parse::<u64>("max-inflight")? {
+        cfg.max_inflight_jobs = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("max-sessions-per-tenant")? {
+        cfg.max_sessions_per_tenant = n;
+    }
+    if let Some(n) = args.get_parse::<usize>("max-open-sessions")? {
+        cfg.max_open_sessions = n;
+    }
     args.reject_unknown()?;
+    let listen = cfg.listen_addr.clone();
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}, durable={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density]`,\n  `open <dataset> <n> <d_cut>` (prints session id), `recut <session> <rho_min> <delta_min>`, `close <session>`,\n  `stream <dim> <d_cut>` (prints stream id), `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`, `closestream <stream>`,\n  `checkpoint` (durable mode: snapshot state now)",
+        "parcluster serve: {} workers, xla={}, durable={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density] [full]`,\n  `hello <tenant>`, `open <dataset> <n> <d_cut> [density] [tag=T]` (prints session id), `recut <session> <rho_min> <delta_min> [full]`,\n  `close <session>`, `stream <dim> <d_cut> [density] [tag=T]` (prints stream id),\n  `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`, `closestream <stream>`,\n  `checkpoint` (durable mode: snapshot state now)",
         coord.config().workers,
         coord.has_xla(),
         coord.is_durable()
     );
+    let state = Arc::new(ServeState::new(coord));
+    let server = match &listen {
+        Some(addr) => {
+            let h = parcluster::serve::server::spawn(addr, Arc::clone(&state))?;
+            println!("listening on {} (binary protocol v{})", h.local_addr, parcluster::serve::PROTO_VERSION);
+            Some(h)
+        }
+        None => None,
+    };
     let stdin = std::io::stdin();
-    let mut ids = Vec::new();
+    let mut ctx = ConnCtx::default();
     for line in stdin.lock().lines() {
         let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') {
-            continue;
-        }
-        let parts: Vec<&str> = t.split_whitespace().collect();
-        // A malformed interactive line never takes the server down: every
-        // parse failure reports and skips, like the arity/dataset checks.
-        match parts[0] {
-            "open" => {
-                if parts.len() != 4 {
-                    eprintln!("skipping malformed open line: {t:?} (want `open <dataset> <n> <d_cut>`)");
-                    continue;
-                }
-                let (Ok(n), Ok(d_cut)) = (parts[2].parse::<usize>(), parts[3].parse::<f64>()) else {
-                    eprintln!("skipping open line with non-numeric n/d_cut: {t:?}");
-                    continue;
-                };
-                let Some(ds) = datasets::by_name(parts[1], Some(n), 42) else {
-                    eprintln!("unknown dataset {:?}", parts[1]);
-                    continue;
-                };
-                match coord.open_session(Arc::new(ds.pts), d_cut) {
-                    Ok(sid) => println!("session {sid}: {} (n={n}) d_cut={d_cut}", parts[1]),
-                    Err(e) => eprintln!("open failed: {e}"),
-                }
-            }
-            "close" => {
-                if parts.len() != 2 {
-                    eprintln!("skipping malformed close line: {t:?} (want `close <session>`)");
-                    continue;
-                }
-                let Ok(sid) = parts[1].parse::<u64>() else {
-                    eprintln!("skipping close line with non-numeric session: {t:?}");
-                    continue;
-                };
-                if coord.close_session(sid) {
-                    println!("session {sid} closed");
-                } else {
-                    eprintln!("close failed: unknown session {sid}");
-                }
-            }
-            "stream" => {
-                if parts.len() != 3 {
-                    eprintln!("skipping malformed stream line: {t:?} (want `stream <dim> <d_cut>`)");
-                    continue;
-                }
-                let (Ok(dim), Ok(d_cut)) = (parts[1].parse::<usize>(), parts[2].parse::<f64>()) else {
-                    eprintln!("skipping stream line with non-numeric dim/d_cut: {t:?}");
-                    continue;
-                };
-                match coord.open_stream(dim, d_cut) {
-                    Ok(sid) => println!("stream {sid}: dim={dim} d_cut={d_cut}"),
-                    Err(e) => eprintln!("stream open failed: {e}"),
-                }
-            }
-            "ingest" => {
-                if parts.len() != 6 && parts.len() != 7 {
-                    eprintln!(
-                        "skipping malformed ingest line: {t:?} (want `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed]`)"
-                    );
-                    continue;
-                }
-                let (Ok(sid), Ok(n), Ok(rho_min), Ok(delta_min)) = (
-                    parts[1].parse::<u64>(),
-                    parts[3].parse::<usize>(),
-                    parts[4].parse::<f64>(),
-                    parts[5].parse::<f64>(),
-                ) else {
-                    eprintln!("skipping ingest line with non-numeric fields: {t:?}");
-                    continue;
-                };
-                // The stream grows with every line, so the batch seed
-                // matters: vary it to feed distinct batches.
-                let seed = match parts.get(6).map(|s| s.parse::<u64>()) {
-                    None => 42,
-                    Some(Ok(s)) => s,
-                    Some(Err(_)) => {
-                        eprintln!("skipping ingest line with non-numeric seed: {t:?}");
-                        continue;
-                    }
-                };
-                let Some(ds) = datasets::by_name(parts[2], Some(n), seed) else {
-                    eprintln!("unknown dataset {:?}", parts[2]);
-                    continue;
-                };
-                match coord.submit_ingest(sid, Arc::new(ds.pts), rho_min, delta_min) {
-                    Ok(id) => ids.push(id),
-                    Err(e) => eprintln!("ingest failed: {e}"),
-                }
-            }
-            "closestream" => {
-                if parts.len() != 2 {
-                    eprintln!("skipping malformed closestream line: {t:?} (want `closestream <stream>`)");
-                    continue;
-                }
-                let Ok(sid) = parts[1].parse::<u64>() else {
-                    eprintln!("skipping closestream line with non-numeric stream: {t:?}");
-                    continue;
-                };
-                if coord.close_stream(sid) {
-                    println!("stream {sid} closed");
-                } else {
-                    eprintln!("closestream failed: unknown stream {sid}");
-                }
-            }
-            "checkpoint" => {
-                // Accept both `checkpoint` and `checkpoint now`.
-                if parts.len() > 2 || (parts.len() == 2 && parts[1] != "now") {
-                    eprintln!("skipping malformed checkpoint line: {t:?} (want `checkpoint [now]`)");
-                    continue;
-                }
-                match coord.checkpoint_now() {
-                    Ok(m) => println!(
-                        "checkpoint {} taken (journal offset {}, next lsn {})",
-                        m.checkpoint_seq, m.journal_offset, m.next_lsn
-                    ),
-                    Err(e) => eprintln!("checkpoint failed: {e}"),
-                }
-            }
-            "recut" => {
-                if parts.len() != 4 {
-                    eprintln!("skipping malformed recut line: {t:?} (want `recut <session> <rho_min> <delta_min>`)");
-                    continue;
-                }
-                let (Ok(sid), Ok(rho_min), Ok(delta_min)) =
-                    (parts[1].parse::<u64>(), parts[2].parse::<f64>(), parts[3].parse::<f64>())
-                else {
-                    eprintln!("skipping recut line with non-numeric fields: {t:?}");
-                    continue;
-                };
-                match coord.submit_recut(sid, rho_min, delta_min) {
-                    Ok(id) => ids.push(id),
-                    Err(e) => eprintln!("recut failed: {e}"),
-                }
-            }
-            _ => {
-                if parts.len() < 5 {
-                    eprintln!("skipping malformed job line: {t:?}");
-                    continue;
-                }
-                let (Ok(n), Ok(d_cut), Ok(rho_min), Ok(delta_min)) = (
-                    parts[1].parse::<usize>(),
-                    parts[2].parse::<f64>(),
-                    parts[3].parse::<f64>(),
-                    parts[4].parse::<f64>(),
-                ) else {
-                    eprintln!("skipping job line with non-numeric fields: {t:?}");
-                    continue;
-                };
-                let Some(ds) = datasets::by_name(parts[0], Some(n), 42) else {
-                    eprintln!("unknown dataset {:?}", parts[0]);
-                    continue;
-                };
-                let density = match parts.get(6).map(|m| m.parse::<DensityModel>()) {
-                    None => DensityModel::CutoffCount,
-                    Some(Ok(m)) => m,
-                    Some(Err(e)) => {
-                        eprintln!("skipping job line: {e}");
-                        continue;
-                    }
-                };
-                let mut job = ClusterJob::new(
-                    Arc::new(ds.pts),
-                    DpcParams { d_cut, rho_min, delta_min, density, ..DpcParams::default() },
-                )
-                .tag(parts[0]);
-                if let Some(a) = parts.get(5) {
-                    match parse_dep_algo(a) {
-                        Ok(algo) => job = job.dep_algo(algo),
-                        Err(e) => {
-                            eprintln!("skipping job line: {e}");
-                            continue;
-                        }
-                    }
-                }
-                ids.push(coord.submit(job));
+        match Request::from_line(&line) {
+            Ok(None) => {}
+            // A malformed interactive line never takes the server down.
+            Err(e) => eprintln!("skipping line {:?}: {e}", line.trim()),
+            Ok(Some(req)) => {
+                let resp = dispatch(&state, &mut ctx, req);
+                println!("{}", resp.to_line());
             }
         }
     }
-    for id in ids {
-        match coord.wait(id) {
-            Ok(out) => println!(
-                "job {id}: tag={} backend={} clusters={} noise={} wall={}",
-                out.tag,
-                out.backend_used.name(),
-                out.result.num_clusters,
-                out.result.num_noise,
-                fmt_secs(out.wall_s)
-            ),
-            Err(e) => println!("job {id}: FAILED {e}"),
-        }
+    if let Some(h) = server {
+        h.shutdown();
     }
-    println!("--- metrics ---\n{}", coord.metrics.render());
+    println!("--- metrics ---\n{}", state.coord.metrics.render());
     Ok(())
 }
 

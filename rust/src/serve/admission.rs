@@ -1,0 +1,255 @@
+//! Serve-side admission control: who may hold how many open handles.
+//!
+//! The coordinator's own gate (`max_inflight_jobs`) bounds *work in
+//! flight*; this module bounds *state at rest* — open sessions and
+//! streams — which is what a long-lived server actually leaks. Two
+//! knobs, both from [`crate::coordinator::CoordinatorConfig`]:
+//!
+//! - `max_sessions_per_tenant`: a tenant id (supplied by the
+//!   connection's `hello`, empty for anonymous) may hold at most this
+//!   many open handles; further opens fail with
+//!   [`DpcError::QuotaExceeded`]. 0 = unlimited.
+//! - `max_open_sessions`: global cap. An open at the cap evicts the
+//!   least-recently-used *idle* handle (no job currently running against
+//!   it) to make room; if every handle is busy the open fails with
+//!   [`DpcError::Backpressure`]. 0 = unlimited.
+//!
+//! Recency is a logical clock bumped on every touch, not wall time —
+//! deterministic under test and free of `Instant` syscalls on the hot
+//! path. Lock ordering: the registry lock is taken by the serve layer
+//! only, and the coordinator never takes it, so holding it across a
+//! `close_session` call (eviction) cannot deadlock.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::error::DpcError;
+
+/// What an admission handle points at (decides which close the evictor
+/// calls).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HandleKind {
+    Session,
+    Stream,
+}
+
+#[derive(Debug)]
+struct Handle {
+    tenant: String,
+    kind: HandleKind,
+    last_used: u64,
+    /// Jobs currently running against this handle; only `busy == 0`
+    /// handles are eviction candidates.
+    busy: u32,
+}
+
+#[derive(Default)]
+struct Inner {
+    handles: HashMap<u64, Handle>,
+    clock: u64,
+}
+
+/// The shared handle registry. One per server, shared by every surface.
+pub struct Admission {
+    max_per_tenant: usize,
+    max_open: usize,
+    inner: Mutex<Inner>,
+}
+
+/// A locked view for the open path: quota check, eviction pick, and
+/// registration must be one atomic step or concurrent opens overshoot
+/// the caps.
+pub struct AdmissionGuard<'a> {
+    inner: MutexGuard<'a, Inner>,
+    max_per_tenant: usize,
+    max_open: usize,
+}
+
+impl Admission {
+    pub fn new(max_per_tenant: usize, max_open: usize) -> Self {
+        Admission { max_per_tenant, max_open, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Lock the registry for an open (see [`AdmissionGuard`]).
+    pub fn lock(&self) -> AdmissionGuard<'_> {
+        AdmissionGuard {
+            inner: self.inner.lock().unwrap(),
+            max_per_tenant: self.max_per_tenant,
+            max_open: self.max_open,
+        }
+    }
+
+    /// Bump a handle's recency (any request that names it).
+    pub fn touch(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        if let Some(h) = g.handles.get_mut(&id) {
+            h.last_used = now;
+        }
+    }
+
+    /// Mark a job in flight against `id` (shields it from eviction).
+    pub fn begin_job(&self, id: u64) {
+        if let Some(h) = self.inner.lock().unwrap().handles.get_mut(&id) {
+            h.busy += 1;
+        }
+    }
+
+    pub fn end_job(&self, id: u64) {
+        if let Some(h) = self.inner.lock().unwrap().handles.get_mut(&id) {
+            h.busy = h.busy.saturating_sub(1);
+        }
+    }
+
+    /// Drop a handle after an explicit close.
+    pub fn remove(&self, id: u64) {
+        self.inner.lock().unwrap().handles.remove(&id);
+    }
+
+    /// Open handles held by `tenant` (quota accounting).
+    pub fn tenant_open(&self, tenant: &str) -> usize {
+        self.inner.lock().unwrap().handles.values().filter(|h| h.tenant == tenant).count()
+    }
+
+    pub fn open_handles(&self) -> usize {
+        self.inner.lock().unwrap().handles.len()
+    }
+
+    /// Seed the registry after durable recovery: recovered handles
+    /// belong to no tenant (quotas bind new traffic, not history) but do
+    /// count against the global cap and are immediately evictable.
+    pub fn seed_recovered(&self, ids: impl IntoIterator<Item = (u64, HandleKind)>) {
+        let mut g = self.inner.lock().unwrap();
+        for (id, kind) in ids {
+            g.handles.insert(id, Handle { tenant: String::new(), kind, last_used: 0, busy: 0 });
+        }
+    }
+}
+
+impl AdmissionGuard<'_> {
+    /// Admit one open for `tenant`. Returns the handle to evict first
+    /// (already deregistered here — the caller must close it on the
+    /// coordinator while still holding this guard), or `None` if there
+    /// is room.
+    pub fn check_open(&mut self, tenant: &str) -> Result<Option<(u64, HandleKind)>, DpcError> {
+        if self.max_per_tenant > 0 {
+            let open = self.inner.handles.values().filter(|h| h.tenant == tenant).count();
+            if open >= self.max_per_tenant {
+                return Err(DpcError::QuotaExceeded {
+                    tenant: tenant.to_string(),
+                    open,
+                    limit: self.max_per_tenant,
+                });
+            }
+        }
+        if self.max_open == 0 || self.inner.handles.len() < self.max_open {
+            return Ok(None);
+        }
+        let victim = self
+            .inner
+            .handles
+            .iter()
+            .filter(|(_, h)| h.busy == 0)
+            .min_by_key(|(id, h)| (h.last_used, **id))
+            .map(|(id, h)| (*id, h.kind));
+        match victim {
+            Some((id, kind)) => {
+                self.inner.handles.remove(&id);
+                Ok(Some((id, kind)))
+            }
+            None => Err(DpcError::Backpressure {
+                in_flight: self.inner.handles.len() as u64,
+                limit: self.max_open as u64,
+            }),
+        }
+    }
+
+    /// Record a freshly opened handle (most-recently-used by
+    /// construction).
+    pub fn register(&mut self, id: u64, tenant: &str, kind: HandleKind) {
+        self.inner.clock += 1;
+        let now = self.inner.clock;
+        self.inner.handles.insert(
+            id,
+            Handle { tenant: tenant.to_string(), kind, last_used: now, busy: 0 },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_by_default() {
+        let a = Admission::new(0, 0);
+        let mut g = a.lock();
+        for id in 0..100 {
+            assert!(g.check_open("t").unwrap().is_none());
+            g.register(id, "t", HandleKind::Session);
+        }
+        drop(g);
+        assert_eq!(a.open_handles(), 100);
+    }
+
+    #[test]
+    fn tenant_quota_is_per_tenant() {
+        let a = Admission::new(2, 0);
+        let mut g = a.lock();
+        g.register(1, "acme", HandleKind::Session);
+        g.register(2, "acme", HandleKind::Stream);
+        let err = g.check_open("acme").unwrap_err();
+        assert!(matches!(err, DpcError::QuotaExceeded { open: 2, limit: 2, .. }));
+        // A different tenant is unaffected.
+        assert!(g.check_open("other").unwrap().is_none());
+        drop(g);
+        // Closing frees quota.
+        a.remove(1);
+        assert!(a.lock().check_open("acme").unwrap().is_none());
+    }
+
+    #[test]
+    fn global_cap_evicts_least_recently_used_idle_handle() {
+        let a = Admission::new(0, 2);
+        let mut g = a.lock();
+        g.register(1, "", HandleKind::Session);
+        g.register(2, "", HandleKind::Stream);
+        drop(g);
+        a.touch(1); // 2 is now the LRU
+        let victim = a.lock().check_open("").unwrap();
+        assert_eq!(victim, Some((2, HandleKind::Stream)));
+        let mut g = a.lock();
+        g.register(3, "", HandleKind::Session);
+        drop(g);
+        assert_eq!(a.open_handles(), 2);
+    }
+
+    #[test]
+    fn busy_handles_are_not_evicted() {
+        let a = Admission::new(0, 2);
+        let mut g = a.lock();
+        g.register(1, "", HandleKind::Session);
+        g.register(2, "", HandleKind::Session);
+        drop(g);
+        a.begin_job(1);
+        a.begin_job(2);
+        // Every handle busy: the open fails instead of evicting.
+        assert!(matches!(a.lock().check_open("").unwrap_err(), DpcError::Backpressure { .. }));
+        a.end_job(2);
+        // 2 is idle again and older than nothing — it's the only idle one.
+        assert_eq!(a.lock().check_open("").unwrap(), Some((2, HandleKind::Session)));
+    }
+
+    #[test]
+    fn recovered_handles_count_and_evict_first() {
+        let a = Admission::new(0, 2);
+        a.seed_recovered([(7, HandleKind::Stream), (8, HandleKind::Session)]);
+        assert_eq!(a.open_handles(), 2);
+        a.touch(8);
+        // 7 untouched since recovery: first out.
+        assert_eq!(a.lock().check_open("t").unwrap(), Some((7, HandleKind::Stream)));
+        // Recovered handles belong to no tenant, so quotas don't see them.
+        assert_eq!(a.tenant_open("t"), 0);
+    }
+}

@@ -1,0 +1,354 @@
+//! One dispatcher for every serve surface.
+//!
+//! The stdin loop parses lines into [`Request`]s, the TCP server decodes
+//! frames into [`Request`]s, and both hand them here — so a command
+//! means exactly the same thing (same validation, same admission, same
+//! coordinator calls, same response) no matter how it arrived.
+//!
+//! Dispatch is synchronous: one request, one [`Response`], in order.
+//! Backpressure from the coordinator's admission gate surfaces as
+//! [`Response::Busy`] (nothing was enqueued; the client should back off
+//! and retry) rather than queueing unboundedly — the issue the old
+//! submit-all-then-wait stdin loop had.
+
+use std::sync::Arc;
+
+use crate::coordinator::{ClusterJob, Coordinator, OpenSpec};
+use crate::datasets;
+use crate::dpc::DpcParams;
+use crate::error::DpcError;
+
+use super::admission::{Admission, HandleKind};
+use super::proto::{FullResult, Request, Response};
+
+/// Everything a serve surface needs: the coordinator plus the serve-side
+/// admission registry, seeded with whatever a durable recovery restored.
+pub struct ServeState {
+    pub coord: Coordinator,
+    pub admission: Admission,
+}
+
+impl ServeState {
+    pub fn new(coord: Coordinator) -> Self {
+        let cfg = coord.config();
+        let admission = Admission::new(cfg.max_sessions_per_tenant, cfg.max_open_sessions);
+        admission.seed_recovered(
+            coord
+                .session_ids()
+                .into_iter()
+                .map(|id| (id, HandleKind::Session))
+                .chain(coord.stream_ids().into_iter().map(|id| (id, HandleKind::Stream))),
+        );
+        ServeState { coord, admission }
+    }
+}
+
+/// Per-connection context: the tenant id is connection state (set by
+/// `hello`), not per-request payload.
+#[derive(Default)]
+pub struct ConnCtx {
+    pub tenant: String,
+}
+
+fn err_response(e: DpcError) -> Response {
+    match e {
+        DpcError::Backpressure { .. } => Response::Busy { detail: e.to_string() },
+        other => Response::Error { detail: other.to_string() },
+    }
+}
+
+fn dataset_points(name: &str, n: u64, seed: u64) -> Result<crate::geom::PointSet, Response> {
+    match datasets::by_name(name, Some(n as usize), seed) {
+        Some(ds) => Ok(ds.pts),
+        None => Err(Response::Error { detail: format!("unknown dataset {name:?}") }),
+    }
+}
+
+/// Open a session or stream under admission control: tenant quota, then
+/// the global cap (evicting the LRU idle handle if needed), then the
+/// coordinator open, then registration — all under the registry lock so
+/// concurrent opens can't overshoot. The coordinator never takes this
+/// lock, so closing the victim inside it cannot deadlock.
+fn open_under_admission(
+    state: &ServeState,
+    tenant: &str,
+    kind: HandleKind,
+    open: impl FnOnce() -> Result<u64, DpcError>,
+) -> Response {
+    let mut guard = state.admission.lock();
+    let victim = match guard.check_open(tenant) {
+        Ok(v) => v,
+        Err(e) => return err_response(e),
+    };
+    if let Some((vid, vkind)) = victim {
+        // The victim was already deregistered; a racing close may have
+        // beaten us to the coordinator, which is fine.
+        let _ = match vkind {
+            HandleKind::Session => state.coord.close_session(vid),
+            HandleKind::Stream => state.coord.close_stream(vid),
+        };
+        state.coord.metrics.inc("serve_evictions");
+    }
+    match open() {
+        Ok(id) => {
+            guard.register(id, tenant, kind);
+            Response::Opened { id, evicted: victim.map(|(vid, _)| vid) }
+        }
+        Err(e) => err_response(e),
+    }
+}
+
+/// Submit-and-wait for the job-shaped requests, bracketed by busy marks
+/// so the handle can't be LRU-evicted mid-job.
+fn run_job(
+    state: &ServeState,
+    handle: Option<u64>,
+    full: bool,
+    submit: impl FnOnce() -> Result<u64, DpcError>,
+) -> Response {
+    if let Some(h) = handle {
+        state.admission.touch(h);
+        state.admission.begin_job(h);
+    }
+    let resp = match submit() {
+        Err(e) => err_response(e),
+        Ok(job) => match state.coord.wait(job) {
+            Err(msg) => Response::Error { detail: msg },
+            Ok(out) => Response::Result {
+                job,
+                tag: out.tag,
+                backend: out.backend_used.name().to_string(),
+                clusters: out.result.num_clusters as u64,
+                noise: out.result.num_noise as u64,
+                wall_s: out.wall_s,
+                full: full.then(|| FullResult::from_result(&out.result)),
+            },
+        },
+    };
+    if let Some(h) = handle {
+        state.admission.end_job(h);
+    }
+    resp
+}
+
+/// Handle one request. Never panics on user input; every failure is a
+/// [`Response::Error`] or [`Response::Busy`] and the connection stays
+/// usable.
+pub fn dispatch(state: &ServeState, ctx: &mut ConnCtx, req: Request) -> Response {
+    state.coord.metrics.inc("serve_requests");
+    match req {
+        Request::Hello { tenant } => {
+            ctx.tenant = tenant.clone();
+            Response::Hello { tenant }
+        }
+        Request::Cluster { dataset, n, d_cut, rho_min, delta_min, algo, density, full } => {
+            let pts = match dataset_points(&dataset, n, 42) {
+                Ok(p) => p,
+                Err(resp) => return resp,
+            };
+            run_job(state, None, full, || {
+                let params = DpcParams { d_cut, rho_min, delta_min, density, ..DpcParams::default() };
+                let mut job = ClusterJob::new(Arc::new(pts), params).tag(&dataset);
+                if let Some(a) = algo {
+                    job = job.dep_algo(a);
+                }
+                state.coord.try_submit(job)
+            })
+        }
+        Request::OpenSession { dataset, n, d_cut, density, tag } => {
+            let pts = match dataset_points(&dataset, n, 42) {
+                Ok(p) => p,
+                Err(resp) => return resp,
+            };
+            let tenant = ctx.tenant.clone();
+            open_under_admission(state, &tenant, HandleKind::Session, || {
+                state.coord.open_session(OpenSpec::points(Arc::new(pts), d_cut).density(density).tag(tag))
+            })
+        }
+        Request::Recut { session, rho_min, delta_min, full } => run_job(state, Some(session), full, || {
+            state.coord.submit_recut(session, rho_min, delta_min)
+        }),
+        Request::CloseSession { session } => match state.coord.close_session(session) {
+            Ok(()) => {
+                state.admission.remove(session);
+                Response::Closed { id: session }
+            }
+            Err(e) => err_response(e),
+        },
+        Request::OpenStream { dim, d_cut, density, tag } => {
+            let tenant = ctx.tenant.clone();
+            open_under_admission(state, &tenant, HandleKind::Stream, || {
+                state.coord.open_stream(OpenSpec::dim(dim as usize, d_cut).density(density).tag(tag))
+            })
+        }
+        Request::Ingest { stream, dataset, n, seed, rho_min, delta_min, full } => {
+            let pts = match dataset_points(&dataset, n, seed) {
+                Ok(p) => p,
+                Err(resp) => return resp,
+            };
+            run_job(state, Some(stream), full, || {
+                state.coord.submit_ingest(stream, Arc::new(pts), rho_min, delta_min)
+            })
+        }
+        Request::IngestPoints { stream, batch, rho_min, delta_min, full } => {
+            run_job(state, Some(stream), full, || {
+                state.coord.submit_ingest(stream, batch, rho_min, delta_min)
+            })
+        }
+        Request::CloseStream { stream } => match state.coord.close_stream(stream) {
+            Ok(()) => {
+                state.admission.remove(stream);
+                Response::Closed { id: stream }
+            }
+            Err(e) => err_response(e),
+        },
+        Request::Checkpoint => match state.coord.checkpoint_now() {
+            Ok(m) => Response::CheckpointTaken {
+                seq: m.checkpoint_seq,
+                journal_offset: m.journal_offset,
+                next_lsn: m.next_lsn,
+            },
+            Err(e) => err_response(e),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::dpc::DensityModel;
+
+    fn state_with(cfg_mut: impl FnOnce(&mut CoordinatorConfig)) -> ServeState {
+        let mut cfg = CoordinatorConfig {
+            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+            ..CoordinatorConfig::default()
+        };
+        cfg_mut(&mut cfg);
+        ServeState::new(Coordinator::start(cfg).unwrap())
+    }
+
+    fn open_req(tag: &str) -> Request {
+        Request::OpenSession {
+            dataset: "simden".into(),
+            n: 60,
+            d_cut: 3.0,
+            density: DensityModel::CutoffCount,
+            tag: tag.into(),
+        }
+    }
+
+    #[test]
+    fn full_text_session_lifecycle_through_dispatch() {
+        let state = state_with(|_| {});
+        let mut ctx = ConnCtx::default();
+        let Response::Opened { id, evicted: None } =
+            dispatch(&state, &mut ctx, Request::from_line("open simden 60 3.0").unwrap().unwrap())
+            else {
+                panic!("open failed")
+            };
+        let resp = dispatch(
+            &state,
+            &mut ctx,
+            Request::from_line(&format!("recut {id} 0 20 full")).unwrap().unwrap(),
+        );
+        let Response::Result { clusters, full: Some(f), .. } = resp else {
+            panic!("recut failed: {resp:?}")
+        };
+        assert!(clusters >= 1);
+        assert_eq!(f.labels.len(), 60);
+        assert!(matches!(
+            dispatch(&state, &mut ctx, Request::from_line(&format!("close {id}")).unwrap().unwrap()),
+            Response::Closed { .. }
+        ));
+        // Closing again is a typed error, not a panic.
+        assert!(matches!(
+            dispatch(&state, &mut ctx, Request::CloseSession { session: id }),
+            Response::Error { .. }
+        ));
+    }
+
+    #[test]
+    fn tenant_quota_binds_through_dispatch() {
+        let state = state_with(|c| c.max_sessions_per_tenant = 1);
+        let mut ctx = ConnCtx::default();
+        assert!(matches!(
+            dispatch(&state, &mut ctx, Request::Hello { tenant: "acme".into() }),
+            Response::Hello { .. }
+        ));
+        assert!(matches!(dispatch(&state, &mut ctx, open_req("a")), Response::Opened { .. }));
+        let resp = dispatch(&state, &mut ctx, open_req("b"));
+        let Response::Error { detail } = resp else { panic!("expected quota error, got {resp:?}") };
+        assert!(detail.contains("quota"), "{detail}");
+        // A different tenant on another connection still gets in.
+        let mut other = ConnCtx { tenant: "zen".into() };
+        assert!(matches!(dispatch(&state, &mut other, open_req("c")), Response::Opened { .. }));
+    }
+
+    #[test]
+    fn global_cap_evicts_lru_idle_session() {
+        let state = state_with(|c| c.max_open_sessions = 2);
+        let mut ctx = ConnCtx::default();
+        let Response::Opened { id: first, .. } = dispatch(&state, &mut ctx, open_req("a")) else {
+            panic!()
+        };
+        let Response::Opened { id: second, .. } = dispatch(&state, &mut ctx, open_req("b")) else {
+            panic!()
+        };
+        // Touch the first so the second becomes LRU.
+        dispatch(&state, &mut ctx, Request::Recut { session: first, rho_min: 0.0, delta_min: 20.0, full: false });
+        let Response::Opened { id: third, evicted: Some(victim) } =
+            dispatch(&state, &mut ctx, open_req("c"))
+            else {
+                panic!("expected eviction")
+            };
+        assert_eq!(victim, second);
+        assert!(state.coord.session(second).is_none(), "evicted session is closed");
+        assert!(state.coord.session(first).is_some());
+        assert!(state.coord.session(third).is_some());
+        assert_eq!(state.coord.metrics.counter("serve_evictions"), 1);
+    }
+
+    #[test]
+    fn error_mapping_separates_busy_from_failure() {
+        // Backpressure (from either admission gate) → Busy: retryable,
+        // nothing enqueued. Everything else → Error.
+        assert!(matches!(
+            err_response(DpcError::Backpressure { in_flight: 4, limit: 4 }),
+            Response::Busy { .. }
+        ));
+        assert!(matches!(err_response(DpcError::UnknownSession(9)), Response::Error { .. }));
+        assert!(matches!(
+            err_response(DpcError::QuotaExceeded { tenant: "t".into(), open: 1, limit: 1 }),
+            Response::Error { .. }
+        ));
+    }
+
+    #[test]
+    fn unknown_dataset_and_unknown_handle_stay_usable() {
+        let state = state_with(|_| {});
+        let mut ctx = ConnCtx::default();
+        let resp = dispatch(
+            &state,
+            &mut ctx,
+            Request::Cluster {
+                dataset: "no-such-set".into(),
+                n: 10,
+                d_cut: 1.0,
+                rho_min: 0.0,
+                delta_min: 1.0,
+                algo: None,
+                density: DensityModel::CutoffCount,
+                full: false,
+            },
+        );
+        let Response::Error { detail } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(detail.contains("unknown dataset"), "{detail}");
+        assert!(matches!(
+            dispatch(&state, &mut ctx, Request::Recut { session: 404, rho_min: 0.0, delta_min: 1.0, full: false }),
+            Response::Error { .. }
+        ));
+        // The dispatcher still serves after both failures.
+        assert!(matches!(dispatch(&state, &mut ctx, open_req("ok")), Response::Opened { .. }));
+    }
+}

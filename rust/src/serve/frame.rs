@@ -1,0 +1,188 @@
+//! Length-prefixed, CRC-guarded framing for the TCP serve surface.
+//!
+//! Layout (all little-endian, mirroring the journal's frame discipline):
+//!
+//! ```text
+//! [u32 len] [u32 crc32(payload)] [payload: len bytes]
+//! ```
+//!
+//! where the payload is a `serve::proto` message (`[version][kind][body]`).
+//! The taxonomy is the journal's, transplanted to a socket: an
+//! *incomplete* frame (header or payload not fully arrived) is normal —
+//! keep reading; a frame that is fully present but *invalid* (length over
+//! [`MAX_FRAME`], CRC mismatch) is corruption — the connection is broken
+//! and must be dropped, because byte-stream framing cannot resynchronize
+//! after a bad length.
+//!
+//! [`FrameBuf`] is the incremental decoder for non-blocking reads: feed
+//! it whatever `read()` returned, pull zero or more complete payloads
+//! out. It never allocates for a frame until the header passes the size
+//! check, so a forged length can't drive a huge reservation.
+
+use crate::durability::crc32::crc32;
+
+/// Hard cap on a single frame's payload. Large enough for a full-result
+/// response over millions of points; small enough that a corrupt length
+/// field is caught long before `usize`-scale allocation.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Frame header size: `u32` length + `u32` CRC.
+pub const HEADER: usize = 8;
+
+/// A fully-present-but-invalid frame. Incomplete frames are *not*
+/// errors — [`FrameBuf::next_frame`] returns `Ok(None)` for those.
+#[derive(Debug, PartialEq)]
+pub enum FrameError {
+    Oversized { len: u32 },
+    CrcMismatch { want: u32, got: u32 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len } => {
+                write!(f, "frame claims {len} bytes, over the {MAX_FRAME}-byte cap")
+            }
+            FrameError::CrcMismatch { want, got } => {
+                write!(f, "frame crc mismatch: header says {want:#010x}, payload hashes to {got:#010x}")
+            }
+        }
+    }
+}
+
+/// Frame a payload for the wire. Panics only if the payload exceeds
+/// `u32::MAX` bytes, which [`MAX_FRAME`] (checked by callers building
+/// responses) rules out long before.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME as usize, "frame over MAX_FRAME");
+    let mut out = Vec::with_capacity(HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental frame decoder over an arbitrary byte-chunk stream.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Bytes already consumed from the front of `buf` (compacted lazily
+    /// so each `feed` is amortized O(chunk)).
+    start: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        FrameBuf::default()
+    }
+
+    /// Append bytes as they arrive from the socket.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        // Compact before growing: keeps the buffer bounded by one frame
+        // plus one read chunk instead of the whole connection history.
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet consumed (incomplete-frame detection:
+    /// a connection that closes with `pending() > 0` died mid-frame).
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pull the next complete payload, if one has fully arrived.
+    /// `Ok(None)` = need more bytes; `Err` = the stream is corrupt and
+    /// the connection must be dropped.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < HEADER {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
+        if len > MAX_FRAME {
+            return Err(FrameError::Oversized { len });
+        }
+        let want_crc = u32::from_le_bytes([avail[4], avail[5], avail[6], avail[7]]);
+        let total = HEADER + len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let payload = &avail[HEADER..total];
+        let got = crc32(payload);
+        if got != want_crc {
+            return Err(FrameError::CrcMismatch { want: want_crc, got });
+        }
+        let out = payload.to_vec();
+        self.start += total;
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_through_arbitrary_chunking() {
+        let payloads: Vec<Vec<u8>> = vec![vec![], vec![1], vec![2; 1000], (0..=255).collect()];
+        let mut stream = Vec::new();
+        for p in &payloads {
+            stream.extend_from_slice(&encode_frame(p));
+        }
+        // Feed in pathological chunk sizes: 1 byte at a time, then 7s.
+        for chunk in [1usize, 7] {
+            let mut fb = FrameBuf::new();
+            let mut got = Vec::new();
+            for c in stream.chunks(chunk) {
+                fb.feed(c);
+                while let Some(p) = fb.next_frame().unwrap() {
+                    got.push(p);
+                }
+            }
+            assert_eq!(got, payloads, "chunk size {chunk}");
+            assert_eq!(fb.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_incomplete_not_corrupt() {
+        let frame = encode_frame(&[1, 2, 3, 4]);
+        let mut fb = FrameBuf::new();
+        fb.feed(&frame[..frame.len() - 1]);
+        assert_eq!(fb.next_frame().unwrap(), None, "torn tail: wait for more bytes");
+        assert_eq!(fb.pending(), frame.len() - 1);
+        fb.feed(&frame[frame.len() - 1..]);
+        assert_eq!(fb.next_frame().unwrap().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_buffering_payload() {
+        let mut fb = FrameBuf::new();
+        let mut header = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        header.extend_from_slice(&[0; 4]);
+        fb.feed(&header);
+        assert!(matches!(fb.next_frame(), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn flipped_bit_is_crc_mismatch() {
+        let mut frame = encode_frame(&[9, 9, 9]);
+        let last = frame.len() - 1;
+        frame[last] ^= 0x01;
+        let mut fb = FrameBuf::new();
+        fb.feed(&frame);
+        assert!(matches!(fb.next_frame(), Err(FrameError::CrcMismatch { .. })));
+    }
+
+    #[test]
+    fn corrupt_header_crc_is_mismatch_too() {
+        let mut frame = encode_frame(&[5; 16]);
+        frame[4] ^= 0xFF;
+        let mut fb = FrameBuf::new();
+        fb.feed(&frame);
+        assert!(matches!(fb.next_frame(), Err(FrameError::CrcMismatch { .. })));
+    }
+}

@@ -1,0 +1,272 @@
+//! Load-generation harness for the TCP serve surface.
+//!
+//! [`Client`] is a minimal synchronous protocol client (connect, frame a
+//! [`Request`], block for the framed [`Response`]) — also the reference
+//! implementation for anyone speaking the protocol from outside this
+//! repo. [`run`] drives M concurrent connections through a deterministic
+//! mixed workload (open → ingest×K / recut×K → close per connection,
+//! seeded per connection id) and reports latency percentiles and
+//! throughput for EXPERIMENTS.md §Serve.
+//!
+//! Protocol errors are counted, not tolerated: the harness's contract
+//! (and the CI smoke run's assertion) is zero `proto_errors` — a `Busy`
+//! response is *not* a protocol error, it's the admission control
+//! working, and the generator backs off and retries.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::prng::SplitMix64;
+
+use super::frame::{encode_frame, FrameBuf};
+use super::proto::{Request, Response};
+
+/// Synchronous protocol client: one request in flight at a time.
+pub struct Client {
+    sock: TcpStream,
+    fb: FrameBuf,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true)?;
+        Ok(Client { sock, fb: FrameBuf::new() })
+    }
+
+    /// Send one request and block for its response. A frame or decode
+    /// failure is an `Err` (the connection is unusable afterwards).
+    pub fn call(&mut self, req: &Request) -> Result<Response, String> {
+        self.sock
+            .write_all(&encode_frame(&req.encode()))
+            .map_err(|e| format!("send: {e}"))?;
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some(payload) = self.fb.next_frame().map_err(|e| e.to_string())? {
+                return Response::decode(&payload);
+            }
+            let n = self.sock.read(&mut chunk).map_err(|e| format!("recv: {e}"))?;
+            if n == 0 {
+                return Err("server closed the connection mid-response".into());
+            }
+            self.fb.feed(&chunk[..n]);
+        }
+    }
+}
+
+/// Workload shape for one loadgen run.
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    pub addr: String,
+    /// Concurrent connections (each on its own thread).
+    pub connections: usize,
+    /// Operations per connection, *excluding* the open/close bookends.
+    pub ops_per_conn: usize,
+    /// Points per opened session / ingested batch.
+    pub n: u64,
+    /// Dataset name fed to the server-side generator.
+    pub dataset: String,
+    /// Fraction of ops that are stream ingests (the rest are session
+    /// recuts), in percent.
+    pub ingest_pct: u8,
+    /// Retries per op on `Busy` before counting it as saturated.
+    pub busy_retries: usize,
+    /// Tenant id sent in each connection's hello (empty = anonymous).
+    pub tenant: String,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            addr: String::new(),
+            connections: 4,
+            ops_per_conn: 25,
+            n: 200,
+            dataset: "simden".into(),
+            ingest_pct: 50,
+            busy_retries: 50,
+            tenant: String::new(),
+        }
+    }
+}
+
+/// Aggregate results across every connection.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Completed operations (each got a non-`Busy`, non-`Error` response).
+    pub ops: u64,
+    /// `Busy` responses observed (then retried).
+    pub busy: u64,
+    /// `Error` responses (server-side request failures).
+    pub request_errors: u64,
+    /// Transport/framing/codec failures — the smoke gate asserts zero.
+    pub proto_errors: u64,
+    pub wall: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Completed ops per second of wall time.
+    pub ops_per_sec: f64,
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct ConnStats {
+    latencies: Vec<Duration>,
+    busy: u64,
+    request_errors: u64,
+    proto_errors: u64,
+}
+
+/// One connection's scripted life: hello, open a session and a stream,
+/// then `ops_per_conn` operations mixing recuts and ingests, then close
+/// both. Deterministic per `(conn_id)` so runs are comparable.
+fn run_conn(opts: &LoadgenOpts, conn_id: usize) -> ConnStats {
+    let mut stats = ConnStats { latencies: Vec::new(), busy: 0, request_errors: 0, proto_errors: 0 };
+    let mut rng = SplitMix64::new(0x10ad_6e00 + conn_id as u64);
+    let mut client = match Client::connect(&opts.addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("loadgen conn {conn_id}: connect failed: {e}");
+            stats.proto_errors += 1;
+            return stats;
+        }
+    };
+    // A call that survives Busy with bounded retries; returns None on a
+    // protocol error (after recording it).
+    let mut timed_call = |client: &mut Client,
+                          req: &Request,
+                          stats: &mut ConnStats,
+                          record: bool|
+     -> Option<Response> {
+        for _ in 0..=opts.busy_retries {
+            let t = Instant::now();
+            match client.call(req) {
+                Ok(Response::Busy { .. }) => {
+                    stats.busy += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Ok(Response::Error { detail }) => {
+                    stats.request_errors += 1;
+                    eprintln!("loadgen conn {conn_id}: request error: {detail}");
+                    return None;
+                }
+                Ok(resp) => {
+                    if record {
+                        stats.latencies.push(t.elapsed());
+                    }
+                    return Some(resp);
+                }
+                Err(e) => {
+                    stats.proto_errors += 1;
+                    eprintln!("loadgen conn {conn_id}: protocol error: {e}");
+                    return None;
+                }
+            }
+        }
+        stats.busy += 1;
+        None
+    };
+    if !opts.tenant.is_empty() {
+        let hello = Request::Hello { tenant: opts.tenant.clone() };
+        timed_call(&mut client, &hello, &mut stats, false);
+    }
+    let open = Request::OpenSession {
+        dataset: opts.dataset.clone(),
+        n: opts.n,
+        d_cut: 3.0,
+        density: crate::dpc::DensityModel::CutoffCount,
+        tag: format!("loadgen-{conn_id}"),
+    };
+    let Some(Response::Opened { id: session, .. }) = timed_call(&mut client, &open, &mut stats, false)
+    else {
+        return stats;
+    };
+    let stream_open = Request::OpenStream {
+        dim: 2,
+        d_cut: 3.0,
+        density: crate::dpc::DensityModel::CutoffCount,
+        tag: format!("loadgen-{conn_id}-stream"),
+    };
+    let Some(Response::Opened { id: stream, .. }) =
+        timed_call(&mut client, &stream_open, &mut stats, false)
+    else {
+        return stats;
+    };
+    for op in 0..opts.ops_per_conn {
+        let req = if rng.next_below(100) < opts.ingest_pct as u64 {
+            Request::Ingest {
+                stream,
+                dataset: opts.dataset.clone(),
+                n: opts.n,
+                // Distinct batches per op, stable across runs.
+                seed: (conn_id * 1_000 + op) as u64,
+                rho_min: 0.0,
+                delta_min: 20.0,
+                full: false,
+            }
+        } else {
+            Request::Recut {
+                session,
+                rho_min: rng.uniform(0.0, 2.0),
+                delta_min: rng.uniform(5.0, 25.0),
+                full: false,
+            }
+        };
+        timed_call(&mut client, &req, &mut stats, true);
+    }
+    timed_call(&mut client, &Request::CloseStream { stream }, &mut stats, false);
+    timed_call(&mut client, &Request::CloseSession { session }, &mut stats, false);
+    stats
+}
+
+/// Run the workload and aggregate. Spawns `opts.connections` client
+/// threads against `opts.addr`.
+pub fn run(opts: &LoadgenOpts) -> LoadgenReport {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..opts.connections)
+        .map(|conn_id| {
+            let opts = opts.clone();
+            std::thread::Builder::new()
+                .name(format!("loadgen-{conn_id}"))
+                .spawn(move || run_conn(&opts, conn_id))
+                .expect("spawn loadgen thread")
+        })
+        .collect();
+    let mut all = Vec::new();
+    let mut report = LoadgenReport::default();
+    for h in handles {
+        let stats = h.join().expect("loadgen thread panicked");
+        report.busy += stats.busy;
+        report.request_errors += stats.request_errors;
+        report.proto_errors += stats.proto_errors;
+        all.extend(stats.latencies);
+    }
+    report.wall = t0.elapsed();
+    report.ops = all.len() as u64;
+    all.sort();
+    report.p50 = percentile(&all, 0.50);
+    report.p99 = percentile(&all, 0.99);
+    report.ops_per_sec = report.ops as f64 / report.wall.as_secs_f64().max(1e-9);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_order_statistics() {
+        let ms: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 0.50), Duration::from_millis(50));
+        assert_eq!(percentile(&ms, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&ms, 1.0), Duration::from_millis(100));
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+    }
+}

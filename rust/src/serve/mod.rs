@@ -1,0 +1,32 @@
+//! The serve subsystem: every way a request reaches the coordinator.
+//!
+//! One request model, three transports:
+//!
+//! - [`proto`] — the [`proto::Request`]/[`proto::Response`] enums, with
+//!   two codecs: a versioned, CRC-framed binary encoding (reusing
+//!   `durability::wire`) and a line grammar. The stdin loop and the TCP
+//!   server parse into the *same* types, so a command means the same
+//!   thing everywhere.
+//! - [`frame`] — `[len][crc][payload]` framing with the journal's
+//!   torn-vs-corrupt taxonomy transplanted to sockets.
+//! - [`server`] — the dependency-free TCP front end (thread per
+//!   connection, non-blocking accept, poll-for-shutdown).
+//! - [`dispatch`] — the single dispatcher both surfaces feed, wrapping
+//!   the coordinator with serve-side [`admission`] control (per-tenant
+//!   quotas, global handle cap with LRU idle eviction) on top of the
+//!   coordinator's own in-flight job gate.
+//! - [`loadgen`] — the reference protocol client plus the concurrent
+//!   workload harness behind the `loadgen` binary (EXPERIMENTS.md
+//!   §Serve).
+
+pub mod admission;
+pub mod dispatch;
+pub mod frame;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use dispatch::{dispatch, ConnCtx, ServeState};
+pub use frame::{encode_frame, FrameBuf, FrameError, HEADER, MAX_FRAME};
+pub use proto::{FullResult, Request, Response, PROTO_VERSION};
+pub use server::{spawn, ServerHandle};

@@ -1,0 +1,789 @@
+//! The one request/response vocabulary every serve surface speaks.
+//!
+//! The stdin loop and the TCP front end used to be a risk of drifting
+//! into two dialects; instead both parse into [`Request`] and render
+//! [`Response`] — the text grammar ([`Request::from_line`] /
+//! [`Request::to_line`]) and the binary codec ([`Request::encode`] /
+//! [`Request::decode`]) are two skins over the same types, dispatched by
+//! the same function (`serve::dispatch`). The equivalence is enforced by
+//! property tests: for every line-expressible request,
+//! `from_line(to_line(r)) == r` and `decode(encode(r)) == r`.
+//!
+//! Binary bodies reuse the durability layer's bounds-checked
+//! [`wire`] codecs, so the serve protocol inherits the journal's
+//! total-decoding discipline: every length is validated against the
+//! bytes present before allocation, unknown tags are typed errors, and
+//! trailing bytes inside a frame are corruption. Floats travel as raw
+//! bit patterns (exactness is the repo's contract) and print via Rust's
+//! shortest-round-trip `Display`, so the text surface is exactly as
+//! lossless as the binary one.
+//!
+//! Versioning: every message starts with [`PROTO_VERSION`]; a decoder
+//! rejects other versions with a message naming both sides' versions.
+//! Kind tags and field layouts are append-only, like the journal's.
+
+use std::sync::Arc;
+
+use crate::coordinator::config::parse_dep_algo;
+use crate::dpc::{DensityModel, DepAlgo};
+use crate::durability::wire::{self, Cursor};
+use crate::geom::PointSet;
+
+/// Bumped on any incompatible layout change; see the module docs for the
+/// append-only evolution rules that make bumps rare.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Everything a serve client can ask for. One enum for all surfaces;
+/// [`Request::IngestPoints`] (a raw coordinate batch) is binary-only,
+/// everything else round-trips through the line grammar too.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Bind this connection to a tenant id (admission quotas key on it).
+    Hello { tenant: String },
+    /// One-shot full pipeline over a named dataset.
+    Cluster {
+        dataset: String,
+        n: u64,
+        d_cut: f64,
+        rho_min: f64,
+        delta_min: f64,
+        algo: Option<DepAlgo>,
+        density: DensityModel,
+        full: bool,
+    },
+    /// Open a cached session over a named dataset.
+    OpenSession { dataset: String, n: u64, d_cut: f64, density: DensityModel, tag: String },
+    /// Linkage-only re-cut of an open session.
+    Recut { session: u64, rho_min: f64, delta_min: f64, full: bool },
+    CloseSession { session: u64 },
+    /// Open a streaming session.
+    OpenStream { dim: u32, d_cut: f64, density: DensityModel, tag: String },
+    /// Ingest a batch drawn from a named dataset generator.
+    Ingest { stream: u64, dataset: String, n: u64, seed: u64, rho_min: f64, delta_min: f64, full: bool },
+    /// Ingest a client-supplied coordinate batch (binary-only: points
+    /// have no lossless whitespace-token form).
+    IngestPoints { stream: u64, batch: Arc<PointSet>, rho_min: f64, delta_min: f64, full: bool },
+    CloseStream { stream: u64 },
+    /// Durable mode: snapshot state now.
+    Checkpoint,
+}
+
+/// Full per-point arrays, shipped only when a request asked for `full`
+/// (they dominate the response size). `dep` uses `u32::MAX` as the
+/// "no dependent" sentinel — point counts are bounded far below it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FullResult {
+    pub rho: Vec<u32>,
+    pub dep: Vec<u32>,
+    pub delta: Vec<f64>,
+    pub labels: Vec<i64>,
+    pub centers: Vec<u32>,
+}
+
+impl FullResult {
+    pub fn from_result(r: &crate::dpc::DpcResult) -> Self {
+        FullResult {
+            rho: r.rho.clone(),
+            dep: r.dep.iter().map(|d| d.map_or(u32::MAX, |v| v)).collect(),
+            delta: r.delta.clone(),
+            labels: r.labels.clone(),
+            centers: r.centers.clone(),
+        }
+    }
+}
+
+/// Exactly one [`Response`] per [`Request`], in request order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Hello { tenant: String },
+    /// A session or stream open succeeded (possibly after an LRU
+    /// eviction, reported in `evicted`).
+    Opened { id: u64, evicted: Option<u64> },
+    /// A cluster/recut/ingest job completed.
+    Result {
+        job: u64,
+        tag: String,
+        backend: String,
+        clusters: u64,
+        noise: u64,
+        wall_s: f64,
+        full: Option<FullResult>,
+    },
+    Closed { id: u64 },
+    CheckpointTaken { seq: u64, journal_offset: u64, next_lsn: u64 },
+    /// Admission control: back off and retry (nothing was enqueued).
+    Busy { detail: String },
+    /// The request failed; the connection stays usable.
+    Error { detail: String },
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------------
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+fn get_bool(cur: &mut Cursor<'_>) -> Result<bool, String> {
+    match cur.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(format!("bool field carries {other} (want 0 or 1)")),
+    }
+}
+
+/// `0` = None, else 1 + position in [`DepAlgo::ALL`] (append-only order).
+fn put_algo(out: &mut Vec<u8>, algo: Option<DepAlgo>) {
+    let tag = match algo {
+        None => 0u8,
+        Some(a) => 1 + DepAlgo::ALL.iter().position(|x| *x == a).expect("algo in ALL") as u8,
+    };
+    out.push(tag);
+}
+
+fn get_algo(cur: &mut Cursor<'_>) -> Result<Option<DepAlgo>, String> {
+    match cur.u8()? {
+        0 => Ok(None),
+        i if (i as usize) <= DepAlgo::ALL.len() => Ok(Some(DepAlgo::ALL[i as usize - 1])),
+        other => Err(format!("unknown dep-algo tag {other}")),
+    }
+}
+
+/// Detail strings are operator-facing; clamp so a pathological error
+/// message can never push a frame past the decoder's string bound.
+fn put_detail(out: &mut Vec<u8>, s: &str) {
+    let clamped: String = s.chars().take(1024).collect();
+    wire::put_str(out, &clamped);
+}
+
+fn check_version(cur: &mut Cursor<'_>) -> Result<(), String> {
+    let v = cur.u8()?;
+    if v != PROTO_VERSION {
+        return Err(format!("protocol version {v} (this build speaks {PROTO_VERSION})"));
+    }
+    Ok(())
+}
+
+impl Request {
+    /// `[version][kind][body]` — framing (length + CRC) is `serve::frame`'s
+    /// job, not the message codec's.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![PROTO_VERSION];
+        match self {
+            Request::Hello { tenant } => {
+                out.push(0);
+                wire::put_str(&mut out, tenant);
+            }
+            Request::Cluster { dataset, n, d_cut, rho_min, delta_min, algo, density, full } => {
+                out.push(1);
+                wire::put_str(&mut out, dataset);
+                wire::put_u64(&mut out, *n);
+                wire::put_f64(&mut out, *d_cut);
+                wire::put_f64(&mut out, *rho_min);
+                wire::put_f64(&mut out, *delta_min);
+                put_algo(&mut out, *algo);
+                wire::put_density(&mut out, *density);
+                put_bool(&mut out, *full);
+            }
+            Request::OpenSession { dataset, n, d_cut, density, tag } => {
+                out.push(2);
+                wire::put_str(&mut out, dataset);
+                wire::put_u64(&mut out, *n);
+                wire::put_f64(&mut out, *d_cut);
+                wire::put_density(&mut out, *density);
+                wire::put_str(&mut out, tag);
+            }
+            Request::Recut { session, rho_min, delta_min, full } => {
+                out.push(3);
+                wire::put_u64(&mut out, *session);
+                wire::put_f64(&mut out, *rho_min);
+                wire::put_f64(&mut out, *delta_min);
+                put_bool(&mut out, *full);
+            }
+            Request::CloseSession { session } => {
+                out.push(4);
+                wire::put_u64(&mut out, *session);
+            }
+            Request::OpenStream { dim, d_cut, density, tag } => {
+                out.push(5);
+                wire::put_u32(&mut out, *dim);
+                wire::put_f64(&mut out, *d_cut);
+                wire::put_density(&mut out, *density);
+                wire::put_str(&mut out, tag);
+            }
+            Request::Ingest { stream, dataset, n, seed, rho_min, delta_min, full } => {
+                out.push(6);
+                wire::put_u64(&mut out, *stream);
+                wire::put_str(&mut out, dataset);
+                wire::put_u64(&mut out, *n);
+                wire::put_u64(&mut out, *seed);
+                wire::put_f64(&mut out, *rho_min);
+                wire::put_f64(&mut out, *delta_min);
+                put_bool(&mut out, *full);
+            }
+            Request::IngestPoints { stream, batch, rho_min, delta_min, full } => {
+                out.push(7);
+                wire::put_u64(&mut out, *stream);
+                wire::put_store(&mut out, batch.as_ref());
+                wire::put_f64(&mut out, *rho_min);
+                wire::put_f64(&mut out, *delta_min);
+                put_bool(&mut out, *full);
+            }
+            Request::CloseStream { stream } => {
+                out.push(8);
+                wire::put_u64(&mut out, *stream);
+            }
+            Request::Checkpoint => out.push(9),
+        }
+        out
+    }
+
+    /// Total decode: bounds-checked, version-checked, and trailing bytes
+    /// inside the message are an error (the frame already delimited it).
+    pub fn decode(buf: &[u8]) -> Result<Request, String> {
+        let mut cur = Cursor::new(buf);
+        check_version(&mut cur)?;
+        let kind = cur.u8()?;
+        let req = match kind {
+            0 => Request::Hello { tenant: wire::get_str(&mut cur)? },
+            1 => Request::Cluster {
+                dataset: wire::get_str(&mut cur)?,
+                n: cur.u64()?,
+                d_cut: cur.f64()?,
+                rho_min: cur.f64()?,
+                delta_min: cur.f64()?,
+                algo: get_algo(&mut cur)?,
+                density: wire::get_density(&mut cur)?,
+                full: get_bool(&mut cur)?,
+            },
+            2 => Request::OpenSession {
+                dataset: wire::get_str(&mut cur)?,
+                n: cur.u64()?,
+                d_cut: cur.f64()?,
+                density: wire::get_density(&mut cur)?,
+                tag: wire::get_str(&mut cur)?,
+            },
+            3 => Request::Recut {
+                session: cur.u64()?,
+                rho_min: cur.f64()?,
+                delta_min: cur.f64()?,
+                full: get_bool(&mut cur)?,
+            },
+            4 => Request::CloseSession { session: cur.u64()? },
+            5 => Request::OpenStream {
+                dim: cur.u32()?,
+                d_cut: cur.f64()?,
+                density: wire::get_density(&mut cur)?,
+                tag: wire::get_str(&mut cur)?,
+            },
+            6 => Request::Ingest {
+                stream: cur.u64()?,
+                dataset: wire::get_str(&mut cur)?,
+                n: cur.u64()?,
+                seed: cur.u64()?,
+                rho_min: cur.f64()?,
+                delta_min: cur.f64()?,
+                full: get_bool(&mut cur)?,
+            },
+            7 => Request::IngestPoints {
+                stream: cur.u64()?,
+                batch: Arc::new(wire::get_store::<f64>(&mut cur)?),
+                rho_min: cur.f64()?,
+                delta_min: cur.f64()?,
+                full: get_bool(&mut cur)?,
+            },
+            8 => Request::CloseStream { stream: cur.u64()? },
+            9 => Request::Checkpoint,
+            other => return Err(format!("unknown request kind {other}")),
+        };
+        cur.expect_end("request")?;
+        Ok(req)
+    }
+
+    // -----------------------------------------------------------------
+    // Line grammar (the stdin surface, and loadgen's script format)
+    // -----------------------------------------------------------------
+
+    /// Parse one text line. `Ok(None)` for blanks and `#` comments;
+    /// `Err` never kills a serve loop (the caller reports and continues).
+    ///
+    /// Trailing optional tokens are resolved by *what parses*, not by
+    /// position: a dep-algo name, a density-model name, `tag=<label>`,
+    /// and the literal `full` can appear in any order after the required
+    /// fields (their vocabularies are disjoint).
+    pub fn from_line(line: &str) -> Result<Option<Request>, String> {
+        let t = line.split('#').next().unwrap_or("").trim();
+        if t.is_empty() {
+            return Ok(None);
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        let req = match parts[0] {
+            "hello" => {
+                let &[_, tenant] = parts.as_slice() else {
+                    return Err(format!("want `hello <tenant>`, got {t:?}"));
+                };
+                Request::Hello { tenant: tenant.to_string() }
+            }
+            "open" => {
+                if parts.len() < 4 {
+                    return Err(format!("want `open <dataset> <n> <d_cut> [density] [tag=T]`, got {t:?}"));
+                }
+                let n = parse_num::<u64>("n", parts[2])?;
+                let d_cut = parse_num::<f64>("d_cut", parts[3])?;
+                let (density, tag, _, _) = parse_trailing(&parts[4..])?;
+                Request::OpenSession { dataset: parts[1].to_string(), n, d_cut, density, tag }
+            }
+            "recut" => {
+                if parts.len() < 4 {
+                    return Err(format!("want `recut <session> <rho_min> <delta_min> [full]`, got {t:?}"));
+                }
+                let session = parse_num::<u64>("session", parts[1])?;
+                let rho_min = parse_num::<f64>("rho_min", parts[2])?;
+                let delta_min = parse_num::<f64>("delta_min", parts[3])?;
+                let (_, _, full, _) = parse_trailing(&parts[4..])?;
+                Request::Recut { session, rho_min, delta_min, full }
+            }
+            "close" => {
+                let &[_, sid] = parts.as_slice() else {
+                    return Err(format!("want `close <session>`, got {t:?}"));
+                };
+                Request::CloseSession { session: parse_num::<u64>("session", sid)? }
+            }
+            "stream" => {
+                if parts.len() < 3 {
+                    return Err(format!("want `stream <dim> <d_cut> [density] [tag=T]`, got {t:?}"));
+                }
+                let dim = parse_num::<u32>("dim", parts[1])?;
+                let d_cut = parse_num::<f64>("d_cut", parts[2])?;
+                let (density, tag, _, _) = parse_trailing(&parts[3..])?;
+                Request::OpenStream { dim, d_cut, density, tag }
+            }
+            "ingest" => {
+                if parts.len() < 6 {
+                    return Err(format!(
+                        "want `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`, got {t:?}"
+                    ));
+                }
+                let stream = parse_num::<u64>("stream", parts[1])?;
+                let n = parse_num::<u64>("n", parts[3])?;
+                let rho_min = parse_num::<f64>("rho_min", parts[4])?;
+                let delta_min = parse_num::<f64>("delta_min", parts[5])?;
+                let (_, _, full, seed) = parse_trailing(&parts[6..])?;
+                Request::Ingest {
+                    stream,
+                    dataset: parts[2].to_string(),
+                    n,
+                    seed: seed.unwrap_or(42),
+                    rho_min,
+                    delta_min,
+                    full,
+                }
+            }
+            "closestream" => {
+                let &[_, sid] = parts.as_slice() else {
+                    return Err(format!("want `closestream <stream>`, got {t:?}"));
+                };
+                Request::CloseStream { stream: parse_num::<u64>("stream", sid)? }
+            }
+            "checkpoint" => {
+                if parts.len() > 2 || (parts.len() == 2 && parts[1] != "now") {
+                    return Err(format!("want `checkpoint [now]`, got {t:?}"));
+                }
+                Request::Checkpoint
+            }
+            dataset => {
+                if parts.len() < 5 {
+                    return Err(format!(
+                        "want `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density] [full]`, got {t:?}"
+                    ));
+                }
+                let n = parse_num::<u64>("n", parts[1])?;
+                let d_cut = parse_num::<f64>("d_cut", parts[2])?;
+                let rho_min = parse_num::<f64>("rho_min", parts[3])?;
+                let delta_min = parse_num::<f64>("delta_min", parts[4])?;
+                let mut algo = None;
+                let mut density = DensityModel::CutoffCount;
+                let mut full = false;
+                for tok in &parts[5..] {
+                    if *tok == "full" {
+                        full = true;
+                    } else if let Ok(a) = parse_dep_algo(tok) {
+                        algo = Some(a);
+                    } else if let Ok(m) = tok.parse::<DensityModel>() {
+                        density = m;
+                    } else {
+                        return Err(format!("unknown job option {tok:?} (algo, density, or `full`)"));
+                    }
+                }
+                Request::Cluster { dataset: dataset.to_string(), n, d_cut, rho_min, delta_min, algo, density, full }
+            }
+        };
+        Ok(Some(req))
+    }
+
+    /// Canonical text rendering; `None` for binary-only requests.
+    /// `from_line(to_line(r).unwrap()) == r` for every `Some` — Rust's
+    /// `f64` `Display` is shortest-round-trip, so no precision is lost.
+    pub fn to_line(&self) -> Option<String> {
+        let line = match self {
+            Request::Hello { tenant } => format!("hello {tenant}"),
+            Request::Cluster { dataset, n, d_cut, rho_min, delta_min, algo, density, full } => {
+                let mut s = format!("{dataset} {n} {d_cut} {rho_min} {delta_min}");
+                if let Some(a) = algo {
+                    s.push_str(&format!(" {}", a.name()));
+                }
+                if *density != DensityModel::CutoffCount {
+                    s.push_str(&format!(" {density}"));
+                }
+                if *full {
+                    s.push_str(" full");
+                }
+                s
+            }
+            Request::OpenSession { dataset, n, d_cut, density, tag } => {
+                let mut s = format!("open {dataset} {n} {d_cut}");
+                if *density != DensityModel::CutoffCount {
+                    s.push_str(&format!(" {density}"));
+                }
+                if !tag.is_empty() {
+                    s.push_str(&format!(" tag={tag}"));
+                }
+                s
+            }
+            Request::Recut { session, rho_min, delta_min, full } => {
+                let mut s = format!("recut {session} {rho_min} {delta_min}");
+                if *full {
+                    s.push_str(" full");
+                }
+                s
+            }
+            Request::CloseSession { session } => format!("close {session}"),
+            Request::OpenStream { dim, d_cut, density, tag } => {
+                let mut s = format!("stream {dim} {d_cut}");
+                if *density != DensityModel::CutoffCount {
+                    s.push_str(&format!(" {density}"));
+                }
+                if !tag.is_empty() {
+                    s.push_str(&format!(" tag={tag}"));
+                }
+                s
+            }
+            Request::Ingest { stream, dataset, n, seed, rho_min, delta_min, full } => {
+                let mut s = format!("ingest {stream} {dataset} {n} {rho_min} {delta_min} seed={seed}");
+                if *full {
+                    s.push_str(" full");
+                }
+                s
+            }
+            Request::IngestPoints { .. } => return None,
+            Request::CloseStream { stream } => format!("closestream {stream}"),
+            Request::Checkpoint => "checkpoint".to_string(),
+        };
+        Some(line)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(name: &str, tok: &str) -> Result<T, String> {
+    tok.parse::<T>().map_err(|_| format!("non-numeric {name}: {tok:?}"))
+}
+
+/// Shared trailing-token parser: `[density] [tag=T] [seed=S] [full]` in
+/// any order. Returns `(density, tag, full, seed)`.
+fn parse_trailing(toks: &[&str]) -> Result<(DensityModel, String, bool, Option<u64>), String> {
+    let mut density = DensityModel::CutoffCount;
+    let mut tag = String::new();
+    let mut full = false;
+    let mut seed = None;
+    for tok in toks {
+        if *tok == "full" {
+            full = true;
+        } else if let Some(t) = tok.strip_prefix("tag=") {
+            tag = t.to_string();
+        } else if let Some(s) = tok.strip_prefix("seed=") {
+            seed = Some(parse_num::<u64>("seed", s)?);
+        } else if let Ok(m) = tok.parse::<DensityModel>() {
+            density = m;
+        } else {
+            return Err(format!("unknown option {tok:?} (density, tag=T, seed=S, or `full`)"));
+        }
+    }
+    Ok((density, tag, full, seed))
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![PROTO_VERSION];
+        match self {
+            Response::Hello { tenant } => {
+                out.push(0);
+                wire::put_str(&mut out, tenant);
+            }
+            Response::Opened { id, evicted } => {
+                out.push(1);
+                wire::put_u64(&mut out, *id);
+                match evicted {
+                    None => out.push(0),
+                    Some(e) => {
+                        out.push(1);
+                        wire::put_u64(&mut out, *e);
+                    }
+                }
+            }
+            Response::Result { job, tag, backend, clusters, noise, wall_s, full } => {
+                out.push(2);
+                wire::put_u64(&mut out, *job);
+                wire::put_str(&mut out, tag);
+                wire::put_str(&mut out, backend);
+                wire::put_u64(&mut out, *clusters);
+                wire::put_u64(&mut out, *noise);
+                wire::put_f64(&mut out, *wall_s);
+                match full {
+                    None => out.push(0),
+                    Some(f) => {
+                        out.push(1);
+                        wire::put_u32_slice(&mut out, &f.rho);
+                        wire::put_u32_slice(&mut out, &f.dep);
+                        wire::put_f64_slice(&mut out, &f.delta);
+                        wire::put_i64_slice(&mut out, &f.labels);
+                        wire::put_u32_slice(&mut out, &f.centers);
+                    }
+                }
+            }
+            Response::Closed { id } => {
+                out.push(3);
+                wire::put_u64(&mut out, *id);
+            }
+            Response::CheckpointTaken { seq, journal_offset, next_lsn } => {
+                out.push(4);
+                wire::put_u64(&mut out, *seq);
+                wire::put_u64(&mut out, *journal_offset);
+                wire::put_u64(&mut out, *next_lsn);
+            }
+            Response::Busy { detail } => {
+                out.push(5);
+                put_detail(&mut out, detail);
+            }
+            Response::Error { detail } => {
+                out.push(6);
+                put_detail(&mut out, detail);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response, String> {
+        let mut cur = Cursor::new(buf);
+        check_version(&mut cur)?;
+        let kind = cur.u8()?;
+        let resp = match kind {
+            0 => Response::Hello { tenant: wire::get_str(&mut cur)? },
+            1 => Response::Opened {
+                id: cur.u64()?,
+                evicted: match get_bool(&mut cur)? {
+                    false => None,
+                    true => Some(cur.u64()?),
+                },
+            },
+            2 => Response::Result {
+                job: cur.u64()?,
+                tag: wire::get_str(&mut cur)?,
+                backend: wire::get_str(&mut cur)?,
+                clusters: cur.u64()?,
+                noise: cur.u64()?,
+                wall_s: cur.f64()?,
+                full: match get_bool(&mut cur)? {
+                    false => None,
+                    true => Some(FullResult {
+                        rho: wire::get_u32_vec(&mut cur)?,
+                        dep: wire::get_u32_vec(&mut cur)?,
+                        delta: wire::get_f64_vec(&mut cur)?,
+                        labels: wire::get_i64_vec(&mut cur)?,
+                        centers: wire::get_u32_vec(&mut cur)?,
+                    }),
+                },
+            },
+            3 => Response::Closed { id: cur.u64()? },
+            4 => Response::CheckpointTaken {
+                seq: cur.u64()?,
+                journal_offset: cur.u64()?,
+                next_lsn: cur.u64()?,
+            },
+            5 => Response::Busy { detail: wire::get_str(&mut cur)? },
+            6 => Response::Error { detail: wire::get_str(&mut cur)? },
+            other => return Err(format!("unknown response kind {other}")),
+        };
+        cur.expect_end("response")?;
+        Ok(resp)
+    }
+
+    /// Human rendering for the stdin surface (full arrays are summarized
+    /// — the text surface is for operators, the binary one for bytes).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Hello { tenant } => format!("hello: tenant {tenant:?}"),
+            Response::Opened { id, evicted: None } => format!("opened {id}"),
+            Response::Opened { id, evicted: Some(e) } => format!("opened {id} (evicted idle session {e})"),
+            Response::Result { job, tag, backend, clusters, noise, wall_s, full } => {
+                let mut s = format!(
+                    "job {job}: tag={tag} backend={backend} clusters={clusters} noise={noise} wall={}",
+                    crate::bench::fmt_secs(*wall_s)
+                );
+                if let Some(f) = full {
+                    s.push_str(&format!(" points={}", f.labels.len()));
+                }
+                s
+            }
+            Response::Closed { id } => format!("closed {id}"),
+            Response::CheckpointTaken { seq, journal_offset, next_lsn } => {
+                format!("checkpoint {seq} taken (journal offset {journal_offset}, next lsn {next_lsn})")
+            }
+            Response::Busy { detail } => format!("busy: {detail}"),
+            Response::Error { detail } => format!("error: {detail}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_grammar_round_trips() {
+        let reqs = [
+            Request::Hello { tenant: "acme".into() },
+            Request::Cluster {
+                dataset: "simden".into(),
+                n: 500,
+                d_cut: 3.5,
+                rho_min: 0.0,
+                delta_min: f64::INFINITY,
+                algo: Some(DepAlgo::Fenwick),
+                density: DensityModel::KnnRadius { k: 8 },
+                full: true,
+            },
+            Request::OpenSession {
+                dataset: "varden".into(),
+                n: 200,
+                d_cut: 0.1,
+                density: DensityModel::GaussianKernel,
+                tag: "t1".into(),
+            },
+            Request::Recut { session: 7, rho_min: 2.5, delta_min: 10.0, full: false },
+            Request::CloseSession { session: 7 },
+            Request::OpenStream { dim: 3, d_cut: 2.0, density: DensityModel::CutoffCount, tag: String::new() },
+            Request::Ingest {
+                stream: 9,
+                dataset: "simden".into(),
+                n: 100,
+                seed: 7,
+                rho_min: 0.5,
+                delta_min: 20.0,
+                full: true,
+            },
+            Request::CloseStream { stream: 9 },
+            Request::Checkpoint,
+        ];
+        for req in reqs {
+            let line = req.to_line().expect("line-expressible");
+            let back = Request::from_line(&line).unwrap().unwrap();
+            assert_eq!(back, req, "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_are_none() {
+        assert_eq!(Request::from_line("").unwrap(), None);
+        assert_eq!(Request::from_line("  # job list").unwrap(), None);
+        assert_eq!(
+            Request::from_line("close 3 # drop it").unwrap(),
+            Some(Request::CloseSession { session: 3 })
+        );
+    }
+
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        for line in [
+            "open onlyname",
+            "recut notanumber 0 1",
+            "close",
+            "stream 2",
+            "ingest 1 ds 10 0",
+            "checkpoint later",
+            "simden 100 3.0 0",
+            "simden 100 3.0 0 20 bogus-option",
+            "open ds 10 1.0 notadensity",
+        ] {
+            assert!(Request::from_line(line).is_err(), "{line:?} should fail");
+        }
+    }
+
+    #[test]
+    fn ingest_points_has_no_line_form() {
+        let req = Request::IngestPoints {
+            stream: 1,
+            batch: Arc::new(PointSet::new(vec![0.0, 0.0], 2)),
+            rho_min: 0.0,
+            delta_min: 1.0,
+            full: false,
+        };
+        assert_eq!(req.to_line(), None);
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn responses_round_trip_binary() {
+        let resps = [
+            Response::Hello { tenant: "t".into() },
+            Response::Opened { id: 3, evicted: None },
+            Response::Opened { id: 4, evicted: Some(1) },
+            Response::Result {
+                job: 11,
+                tag: "simden".into(),
+                backend: "rust-tree".into(),
+                clusters: 2,
+                noise: 5,
+                wall_s: 0.125,
+                full: Some(FullResult {
+                    rho: vec![3, 1],
+                    dep: vec![u32::MAX, 0],
+                    delta: vec![f64::INFINITY, 0.5],
+                    labels: vec![0, -1],
+                    centers: vec![0],
+                }),
+            },
+            Response::Closed { id: 3 },
+            Response::CheckpointTaken { seq: 1, journal_offset: 640, next_lsn: 9 },
+            Response::Busy { detail: "64 jobs in flight".into() },
+            Response::Error { detail: "unknown session 5".into() },
+        ];
+        for resp in resps {
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_version_kind_and_trailing_garbage() {
+        let mut buf = Request::Checkpoint.encode();
+        buf[0] = PROTO_VERSION + 1;
+        assert!(Request::decode(&buf).unwrap_err().contains("version"));
+        let mut buf = Request::Checkpoint.encode();
+        buf[1] = 200;
+        assert!(Request::decode(&buf).unwrap_err().contains("kind"));
+        let mut buf = Request::CloseSession { session: 1 }.encode();
+        buf.push(0);
+        assert!(Request::decode(&buf).unwrap_err().contains("trailing"));
+        assert!(Request::decode(&[]).is_err());
+        let mut buf = Response::Closed { id: 1 }.encode();
+        buf.truncate(buf.len() - 1);
+        assert!(Response::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn bool_fields_reject_non_canonical_bytes() {
+        let mut buf = Request::Recut { session: 1, rho_min: 0.0, delta_min: 1.0, full: true }.encode();
+        let last = buf.len() - 1;
+        buf[last] = 2;
+        assert!(Request::decode(&buf).unwrap_err().contains("bool"));
+    }
+}

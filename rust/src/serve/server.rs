@@ -1,0 +1,147 @@
+//! The TCP front end: a thread-per-connection acceptor over non-blocking
+//! reads, feeding the same dispatcher as the stdin loop.
+//!
+//! Dependency-free by construction (`std::net` only — the container has
+//! no tokio and the repo's policy is no new dependencies): the acceptor
+//! polls a non-blocking listener so it can observe the shutdown flag,
+//! and each connection thread drives a read-timeout socket through a
+//! [`FrameBuf`], dispatching one request at a time. Responses are
+//! written back in request order — the protocol is strictly
+//! request/response per connection; concurrency comes from opening more
+//! connections (which is exactly what `loadgen` does).
+//!
+//! A corrupt frame (bad CRC, oversized length) kills only its own
+//! connection: byte-stream framing cannot resynchronize after a bad
+//! length, so the server sends a final `Error` response if it can and
+//! drops the socket. A cleanly closed socket mid-frame is treated like
+//! the journal's torn tail — abandoned work, no error.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::dispatch::{dispatch, ConnCtx, ServeState};
+use super::frame::{encode_frame, FrameBuf};
+use super::proto::{Request, Response};
+
+/// How often blocked reads/accepts wake to check the shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Handle to a running TCP server; dropping the handle does NOT stop it
+/// — call [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join the acceptor (connection threads drain
+    /// on their next poll tick).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7401`, or port 0 for an OS-assigned
+/// port) and serve until [`ServerHandle::shutdown`].
+pub fn spawn(addr: &str, state: Arc<ServeState>) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local_addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let acceptor = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || accept_loop(listener, state, stop2))
+        .expect("spawn acceptor");
+    Ok(ServerHandle { local_addr, stop, acceptor: Some(acceptor) })
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServeState>, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let state = Arc::clone(&state);
+                let stop = Arc::clone(&stop);
+                state.coord.metrics.inc("serve_connections");
+                conns.push(
+                    std::thread::Builder::new()
+                        .name("serve-conn".into())
+                        .spawn(move || {
+                            if let Err(e) = connection_loop(sock, &state, &stop) {
+                                // An I/O failure on one connection is that
+                                // connection's problem, not the server's.
+                                state.coord.metrics.inc("serve_conn_errors");
+                                let _ = e;
+                            }
+                        })
+                        .expect("spawn connection thread"),
+                );
+                // Reap finished connection threads so a long-lived server
+                // doesn't accumulate handles.
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn connection_loop(sock: TcpStream, state: &ServeState, stop: &AtomicBool) -> std::io::Result<()> {
+    // Blocking socket with a short read timeout: the thread parks in the
+    // kernel between requests but still honors shutdown within a tick.
+    sock.set_read_timeout(Some(POLL))?;
+    sock.set_nodelay(true)?;
+    let mut sock = sock;
+    let mut fb = FrameBuf::new();
+    let mut ctx = ConnCtx::default();
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        // Drain every complete frame before reading again.
+        loop {
+            match fb.next_frame() {
+                Ok(None) => break,
+                Ok(Some(payload)) => {
+                    let resp = match Request::decode(&payload) {
+                        Ok(req) => dispatch(state, &mut ctx, req),
+                        // Undecodable payload inside a valid frame: the
+                        // framing is still synchronized, so answer and
+                        // keep the connection.
+                        Err(detail) => {
+                            state.coord.metrics.inc("serve_proto_errors");
+                            Response::Error { detail }
+                        }
+                    };
+                    sock.write_all(&encode_frame(&resp.encode()))?;
+                }
+                Err(e) => {
+                    // Framing broke: best-effort final error, then drop.
+                    state.coord.metrics.inc("serve_proto_errors");
+                    let resp = Response::Error { detail: e.to_string() };
+                    let _ = sock.write_all(&encode_frame(&resp.encode()));
+                    return Ok(());
+                }
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        match sock.read(&mut chunk) {
+            Ok(0) => return Ok(()), // peer closed; mid-frame bytes are a torn tail
+            Ok(n) => fb.feed(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}

@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::coordinator::{Coordinator, CoordinatorConfig, OpenSpec};
 use parcluster::dpc::{DensityModel, Dpc, DpcParams, StreamingSession};
 use parcluster::durability::{
     checkpoint::{self, CheckpointData, DynStreamState},
@@ -289,7 +289,7 @@ fn coordinator_checkpoint_crash_restart_round_trip() {
     let sid;
     {
         let coord = Coordinator::start(cfg.clone()).unwrap();
-        sid = coord.open_stream(2, 3.0).unwrap();
+        sid = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
         coord.wait(coord.submit_ingest(sid, Arc::new(all[0].clone()), 0.0, 20.0).unwrap()).unwrap();
         coord.checkpoint_now().unwrap();
         coord.wait(coord.submit_ingest(sid, Arc::new(all[1].clone()), 0.0, 20.0).unwrap()).unwrap();

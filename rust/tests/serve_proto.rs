@@ -1,0 +1,367 @@
+//! Serve-protocol conformance suite.
+//!
+//! Three contracts, mirroring the durability layer's codec discipline:
+//!
+//! 1. **Round-trip identity** — `decode(encode(r)) == r` for randomized
+//!    requests/responses across the whole enum surface, and
+//!    `from_line(to_line(r)) == r` for every line-expressible request
+//!    (the stdin surface and the binary surface parse into the *same*
+//!    value, so the two transports cannot drift).
+//! 2. **Rejection matrix** — truncations at every byte boundary,
+//!    bit flips, version/kind garbage, and oversized frames are all
+//!    typed errors, never panics and never wrong-value decodes.
+//! 3. **Framing taxonomy** — an incomplete frame is "keep reading", a
+//!    corrupt frame is a connection-fatal error, exactly like the
+//!    journal's torn-tail-vs-corruption split.
+
+use std::sync::Arc;
+
+use parcluster::dpc::{DensityModel, DepAlgo};
+use parcluster::geom::PointSet;
+use parcluster::prng::SplitMix64;
+use parcluster::serve::proto::{FullResult, Request, Response};
+use parcluster::serve::{encode_frame, FrameBuf, FrameError, HEADER, MAX_FRAME};
+
+fn gen_density(rng: &mut SplitMix64) -> DensityModel {
+    match rng.next_below(4) {
+        0 => DensityModel::CutoffCount,
+        1 => DensityModel::KnnRadius { k: 1 + rng.next_below(16) as usize },
+        2 => DensityModel::GaussianKernel,
+        _ => DensityModel::Epanechnikov,
+    }
+}
+
+fn gen_tag(rng: &mut SplitMix64) -> String {
+    // Whitespace-free (the line grammar is token-based); includes the
+    // chars the binary codec must pass through untouched.
+    let alphabet: Vec<char> = "abcXYZ019_-./:".chars().collect();
+    (0..rng.next_below(12)).map(|_| alphabet[rng.next_below(alphabet.len() as u64) as usize]).collect()
+}
+
+/// Like [`gen_tag`] but never empty — for fields whose line form has no
+/// "absent" rendering (a tenant id is a required positional token).
+fn gen_name(rng: &mut SplitMix64) -> String {
+    let mut s = gen_tag(rng);
+    if s.is_empty() {
+        s.push('x');
+    }
+    s
+}
+
+fn gen_f64(rng: &mut SplitMix64) -> f64 {
+    // Mix of awkward values: exact decimals, irrationals-ish, extremes.
+    match rng.next_below(5) {
+        0 => 0.0,
+        1 => f64::INFINITY,
+        2 => rng.uniform(0.0, 1e-300),
+        3 => rng.uniform(0.0, 1e12),
+        _ => rng.uniform(0.0, 50.0),
+    }
+}
+
+fn gen_request(rng: &mut SplitMix64) -> Request {
+    match rng.next_below(10) {
+        0 => Request::Hello { tenant: gen_name(rng) },
+        1 => Request::Cluster {
+            dataset: "simden".into(),
+            n: rng.next_below(10_000),
+            d_cut: gen_f64(rng),
+            rho_min: gen_f64(rng),
+            delta_min: gen_f64(rng),
+            algo: match rng.next_below(6) {
+                0 => None,
+                i => Some(DepAlgo::ALL[(i - 1) as usize]),
+            },
+            density: gen_density(rng),
+            full: rng.next_below(2) == 1,
+        },
+        2 => Request::OpenSession {
+            dataset: "varden".into(),
+            n: rng.next_below(10_000),
+            d_cut: gen_f64(rng),
+            density: gen_density(rng),
+            tag: gen_tag(rng),
+        },
+        3 => Request::Recut {
+            session: rng.next_u64(),
+            rho_min: gen_f64(rng),
+            delta_min: gen_f64(rng),
+            full: rng.next_below(2) == 1,
+        },
+        4 => Request::CloseSession { session: rng.next_u64() },
+        5 => Request::OpenStream {
+            dim: 1 + rng.next_below(8) as u32,
+            d_cut: gen_f64(rng),
+            density: gen_density(rng),
+            tag: gen_tag(rng),
+        },
+        6 => Request::Ingest {
+            stream: rng.next_u64(),
+            dataset: "uniform".into(),
+            n: rng.next_below(10_000),
+            seed: rng.next_u64(),
+            rho_min: gen_f64(rng),
+            delta_min: gen_f64(rng),
+            full: rng.next_below(2) == 1,
+        },
+        7 => {
+            let d = 1 + rng.next_below(4) as usize;
+            let n = 1 + rng.next_below(20) as usize;
+            let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            Request::IngestPoints {
+                stream: rng.next_u64(),
+                batch: Arc::new(PointSet::new(coords, d)),
+                rho_min: gen_f64(rng),
+                delta_min: gen_f64(rng),
+                full: rng.next_below(2) == 1,
+            }
+        }
+        8 => Request::CloseStream { stream: rng.next_u64() },
+        _ => Request::Checkpoint,
+    }
+}
+
+fn gen_response(rng: &mut SplitMix64) -> Response {
+    match rng.next_below(7) {
+        0 => Response::Hello { tenant: gen_tag(rng) },
+        1 => Response::Opened {
+            id: rng.next_u64(),
+            evicted: (rng.next_below(2) == 1).then(|| rng.next_u64()),
+        },
+        2 => {
+            let n = rng.next_below(30) as usize;
+            Response::Result {
+                job: rng.next_u64(),
+                tag: gen_tag(rng),
+                backend: "rust-tree".into(),
+                clusters: rng.next_below(10),
+                noise: rng.next_below(30),
+                wall_s: gen_f64(rng),
+                full: (rng.next_below(2) == 1).then(|| FullResult {
+                    rho: (0..n).map(|_| rng.next_below(1 << 20) as u32).collect(),
+                    dep: (0..n)
+                        .map(|_| if rng.next_below(8) == 0 { u32::MAX } else { rng.next_below(n.max(1) as u64) as u32 })
+                        .collect(),
+                    delta: (0..n).map(|_| gen_f64(rng)).collect(),
+                    labels: (0..n).map(|_| rng.next_below(10) as i64 - 1).collect(),
+                    centers: (0..rng.next_below(5) as usize).map(|_| rng.next_below(n.max(1) as u64) as u32).collect(),
+                }),
+            }
+        }
+        3 => Response::Closed { id: rng.next_u64() },
+        4 => Response::CheckpointTaken {
+            seq: rng.next_u64(),
+            journal_offset: rng.next_u64(),
+            next_lsn: rng.next_u64(),
+        },
+        5 => Response::Busy { detail: gen_tag(rng) },
+        _ => Response::Error { detail: gen_tag(rng) },
+    }
+}
+
+// --- 1. round-trip identity -------------------------------------------------
+
+#[test]
+fn prop_request_binary_round_trip_identity() {
+    let mut rng = SplitMix64::new(0x5e7_1);
+    for case in 0..500 {
+        let req = gen_request(&mut rng);
+        let back = Request::decode(&req.encode())
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e} for {req:?}"));
+        assert_eq!(back, req, "case {case}");
+    }
+}
+
+#[test]
+fn prop_response_binary_round_trip_identity() {
+    let mut rng = SplitMix64::new(0x5e7_2);
+    for case in 0..500 {
+        let resp = gen_response(&mut rng);
+        let back = Response::decode(&resp.encode())
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e} for {resp:?}"));
+        assert_eq!(back, resp, "case {case}");
+    }
+}
+
+/// The line grammar and the binary codec parse into the same value: for
+/// every line-expressible request, text round-trips losslessly (f64
+/// `Display` is shortest-round-trip) and agrees with the binary path.
+#[test]
+fn prop_line_and_binary_surfaces_agree() {
+    let mut rng = SplitMix64::new(0x5e7_3);
+    let mut line_cases = 0;
+    for _ in 0..500 {
+        let req = gen_request(&mut rng);
+        let Some(line) = req.to_line() else {
+            assert!(matches!(req, Request::IngestPoints { .. }), "only IngestPoints is binary-only");
+            continue;
+        };
+        line_cases += 1;
+        let from_text = Request::from_line(&line).unwrap().unwrap_or_else(|| panic!("line {line:?} parsed to None"));
+        let from_binary = Request::decode(&req.encode()).unwrap();
+        assert_eq!(from_text, req, "text round trip for {line:?}");
+        assert_eq!(from_binary, from_text, "binary and text disagree for {line:?}");
+    }
+    assert!(line_cases > 300, "generator should exercise the line grammar ({line_cases} cases)");
+}
+
+/// Frames survive arbitrary re-chunking (1-byte drip to jumbo reads).
+#[test]
+fn prop_framing_survives_rechunking() {
+    let mut rng = SplitMix64::new(0x5e7_4);
+    let reqs: Vec<Request> = (0..50).map(|_| gen_request(&mut rng)).collect();
+    let mut stream = Vec::new();
+    for r in &reqs {
+        stream.extend_from_slice(&encode_frame(&r.encode()));
+    }
+    for trial in 0..20 {
+        let mut fb = FrameBuf::new();
+        let mut got = Vec::new();
+        let mut at = 0;
+        while at < stream.len() {
+            let step = 1 + rng.next_below(97) as usize;
+            let hi = (at + step).min(stream.len());
+            fb.feed(&stream[at..hi]);
+            at = hi;
+            while let Some(p) = fb.next_frame().unwrap() {
+                got.push(Request::decode(&p).unwrap());
+            }
+        }
+        assert_eq!(got, reqs, "trial {trial}");
+        assert_eq!(fb.pending(), 0, "trial {trial}");
+    }
+}
+
+// --- 2. rejection matrix ----------------------------------------------------
+
+/// Every proper prefix of a valid message must fail to decode — a
+/// truncation can never yield a wrong value silently.
+#[test]
+fn prop_every_truncation_is_rejected() {
+    let mut rng = SplitMix64::new(0x5e7_5);
+    for _ in 0..60 {
+        let buf = gen_request(&mut rng).encode();
+        for cut in 0..buf.len() {
+            assert!(
+                Request::decode(&buf[..cut]).is_err(),
+                "prefix of {cut}/{} bytes decoded",
+                buf.len()
+            );
+        }
+        let buf = gen_response(&mut rng).encode();
+        for cut in 0..buf.len() {
+            assert!(Response::decode(&buf[..cut]).is_err(), "response prefix {cut} decoded");
+        }
+    }
+}
+
+/// Random bit flips either still decode (the flip hit a value byte — the
+/// CRC layer above catches those on the wire) or fail typed; they never
+/// panic. Flips in the version or kind byte must always fail.
+#[test]
+fn prop_bit_flips_never_panic() {
+    let mut rng = SplitMix64::new(0x5e7_6);
+    for _ in 0..300 {
+        let mut buf = gen_request(&mut rng).encode();
+        let at = rng.next_below(buf.len() as u64) as usize;
+        buf[at] ^= 1 << rng.next_below(8);
+        let result = Request::decode(&buf); // must return, not panic
+        if at == 0 {
+            assert!(result.is_err(), "corrupt version byte accepted");
+        }
+    }
+}
+
+#[test]
+fn unknown_version_kind_and_trailing_bytes_are_typed_errors() {
+    let good = Request::Recut { session: 1, rho_min: 0.5, delta_min: 2.0, full: false };
+    let mut buf = good.encode();
+    buf[0] = 99;
+    assert!(Request::decode(&buf).unwrap_err().contains("version"));
+    let mut buf = good.encode();
+    buf[1] = 250;
+    assert!(Request::decode(&buf).unwrap_err().contains("kind"));
+    let mut buf = good.encode();
+    buf.extend_from_slice(&[0, 0, 0]);
+    assert!(Request::decode(&buf).unwrap_err().contains("trailing"));
+    assert!(Request::decode(&[]).is_err());
+    assert!(Response::decode(&[]).is_err());
+}
+
+/// A forged length field cannot drive allocation: string/array lengths
+/// inside the body are validated against the bytes actually present.
+#[test]
+fn forged_interior_lengths_are_rejected_without_allocation() {
+    // Hello's body is [u32 len][bytes]; claim 2^31 bytes with 5 present.
+    let mut buf = vec![1u8, 0u8]; // version, kind=Hello
+    buf.extend_from_slice(&(1u32 << 31).to_le_bytes());
+    buf.extend_from_slice(b"five!");
+    let err = Request::decode(&buf).unwrap_err();
+    assert!(!err.is_empty());
+}
+
+// --- 3. framing taxonomy ----------------------------------------------------
+
+#[test]
+fn incomplete_frames_wait_and_corrupt_frames_kill() {
+    let payload = Request::Checkpoint.encode();
+    let frame = encode_frame(&payload);
+
+    // Incomplete: every prefix of the frame is "keep reading".
+    for cut in 0..frame.len() {
+        let mut fb = FrameBuf::new();
+        fb.feed(&frame[..cut]);
+        assert_eq!(fb.next_frame().unwrap(), None, "prefix {cut} should be incomplete");
+        assert_eq!(fb.pending(), cut);
+    }
+
+    // Corrupt payload byte: CRC mismatch, connection-fatal.
+    let mut bad = frame.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x10;
+    let mut fb = FrameBuf::new();
+    fb.feed(&bad);
+    assert!(matches!(fb.next_frame(), Err(FrameError::CrcMismatch { .. })));
+
+    // Oversized length: rejected from the header alone.
+    let mut fb = FrameBuf::new();
+    let mut huge = (MAX_FRAME + 1).to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0; 4]);
+    fb.feed(&huge);
+    assert!(matches!(fb.next_frame(), Err(FrameError::Oversized { .. })));
+
+    // A valid frame after a partial feed still decodes (header split
+    // across reads).
+    let mut fb = FrameBuf::new();
+    fb.feed(&frame[..HEADER / 2]);
+    assert_eq!(fb.next_frame().unwrap(), None);
+    fb.feed(&frame[HEADER / 2..]);
+    assert_eq!(fb.next_frame().unwrap().unwrap(), payload);
+}
+
+/// The full-result payload — the biggest message the protocol ships —
+/// round-trips through framing intact, dep sentinel and all.
+#[test]
+fn full_result_round_trips_through_framing() {
+    let n = 10_000usize;
+    let full = FullResult {
+        rho: (0..n as u32).collect(),
+        dep: (0..n as u32).map(|i| if i % 97 == 0 { u32::MAX } else { i / 2 }).collect(),
+        delta: (0..n).map(|i| i as f64 * 0.125).collect(),
+        labels: (0..n).map(|i| (i % 7) as i64 - 1).collect(),
+        centers: vec![0, 97, 194],
+    };
+    let resp = Response::Result {
+        job: 1,
+        tag: "big".into(),
+        backend: "rust-tree".into(),
+        clusters: 6,
+        noise: n as u64 / 7,
+        wall_s: 1.5,
+        full: Some(full),
+    };
+    let mut fb = FrameBuf::new();
+    fb.feed(&encode_frame(&resp.encode()));
+    let back = Response::decode(&fb.next_frame().unwrap().unwrap()).unwrap();
+    assert_eq!(back, resp);
+}

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use parcluster::coordinator::{Coordinator, CoordinatorConfig};
+use parcluster::coordinator::{Coordinator, CoordinatorConfig, OpenSpec};
 use parcluster::dpc::{ClusterSession, DepAlgo, Dpc, DpcParams, DpcResult};
 use parcluster::error::DpcError;
 use parcluster::geom::PointSet;
@@ -183,7 +183,7 @@ fn coordinator_session_recuts_match_fresh_runs() {
     let mut rng = SplitMix64::new(17);
     let pts = Arc::new(proputil::gen_clustered_points(&mut rng, 400, 2, 3, 150.0, 2.5));
     let d_cut = 4.0;
-    let sid = coord.open_session(Arc::clone(&pts), d_cut).unwrap();
+    let sid = coord.open_session(OpenSpec::points(Arc::clone(&pts), d_cut)).unwrap();
     let entry = coord.session(sid).expect("entry");
     assert_eq!(entry.built_by, "tree");
     assert_eq!(entry.rho.len(), pts.len());
@@ -206,7 +206,8 @@ fn coordinator_session_recuts_match_fresh_runs() {
 
     assert!(matches!(coord.submit_recut(sid + 1, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
     assert!(matches!(coord.submit_recut(sid, f64::NAN, 1.0), Err(DpcError::InvalidParam { name: "rho_min", .. })));
-    assert!(coord.close_session(sid));
+    coord.close_session(sid).unwrap();
+    assert!(matches!(coord.close_session(sid), Err(DpcError::UnknownSession(_))));
     assert!(matches!(coord.submit_recut(sid, 0.0, 1.0), Err(DpcError::UnknownSession(_))));
 }
 
