@@ -15,6 +15,8 @@ pub fn time_median<F: FnMut()>(trials: usize, mut f: F) -> f64 {
             t.elapsed().as_secs_f64()
         })
         .collect();
+    // lint: allow(panic-surface) — wall-clock samples are finite by
+    // construction, so partial_cmp cannot see a NaN.
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     samples[samples.len() / 2]
 }
@@ -27,6 +29,7 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
 }
 
 /// Fixed-width table printer.
+#[derive(Debug)]
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,

@@ -1,0 +1,50 @@
+//! `pallas-lint` — the repo's contract linter (DESIGN.md §Static
+//! analysis).
+//!
+//! Usage:
+//!
+//! ```text
+//! pallas_lint [ROOT]     # default ROOT: rust/src relative to the cwd
+//! ```
+//!
+//! Scans every `.rs` file under ROOT with the rule catalog in
+//! [`parcluster::lint`] and prints one `file:line: [rule] message` per
+//! violation. Exit status: 0 when clean, 1 when violations were found,
+//! 2 on I/O failure. CI runs this on `rust/src` in the feature-matrix
+//! legs; run it locally the same way before pushing.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use parcluster::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args_os()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("rust/src"));
+
+    if !root.is_dir() {
+        eprintln!("pallas-lint: {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+
+    let violations = match lint::scan_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("pallas-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        eprintln!("pallas-lint: clean ({})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("pallas-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -7,13 +7,14 @@
 //! on the caller's side. The [`super::Router`] hands out `Arc<dyn Engine>`
 //! per resolved backend.
 
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Weak};
 
 use crate::dpc::{self, DensityAlgo, DensityModel, DepAlgo};
 use crate::error::DpcError;
 use crate::geom::{Dtype, DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::engine::D_PAD;
 use crate::runtime::{XlaDpcOutput, XlaService};
+use crate::sync::{rank, OrderedMutex};
 
 /// Shape and algorithm choices of one clustering job — what an engine needs
 /// for capability checks ([`Engine::supports`]) and per-job overrides.
@@ -99,6 +100,7 @@ pub trait Engine: Send + Sync {
 
 /// The Rust tree engine: the paper's algorithm suite. Exact per precision,
 /// any size, dimension, dtype, and density model.
+#[derive(Debug)]
 pub struct TreeEngine;
 
 impl Engine for TreeEngine {
@@ -144,7 +146,13 @@ impl Engine for TreeEngine {
 /// dead entries are pruned on insert.
 pub struct XlaEngine {
     svc: Arc<XlaService>,
-    memo: Mutex<Vec<Memo>>,
+    memo: OrderedMutex<Vec<Memo>, { rank::ENGINE_MEMO }>,
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine").field("capacity", &self.svc.capacity()).finish_non_exhaustive()
+    }
 }
 
 /// More concurrent XLA jobs than this re-execute instead of caching.
@@ -164,7 +172,7 @@ struct Memo {
 
 impl XlaEngine {
     pub fn new(svc: Arc<XlaService>) -> Self {
-        XlaEngine { svc, memo: Mutex::new(Vec::new()) }
+        XlaEngine { svc, memo: OrderedMutex::new(Vec::new()) }
     }
 
     pub fn capacity(&self) -> usize {
@@ -175,7 +183,7 @@ impl XlaEngine {
         let bits = d_cut.to_bits();
         let buf = pts.shared_coords();
         {
-            let memo = self.memo.lock().unwrap();
+            let memo = self.memo.lock();
             if let Some(m) = memo.iter().find(|m| {
                 std::ptr::eq(m.buf.as_ptr(), Arc::as_ptr(&buf))
                     && m.n == pts.len()
@@ -191,7 +199,7 @@ impl XlaEngine {
             .svc
             .run(Arc::new(pts.clone()), d_cut)
             .map_err(|e| DpcError::Backend { engine: "xla".into(), message: e.to_string() })?;
-        let mut memo = self.memo.lock().unwrap();
+        let mut memo = self.memo.lock();
         memo.retain(|m| m.buf.strong_count() > 0);
         if memo.len() >= MEMO_CAP {
             memo.remove(0);

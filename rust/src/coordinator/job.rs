@@ -14,7 +14,7 @@ use super::service::SessionId;
 /// wrapper added an `Arc` layer solely so the XLA memo could key on its
 /// allocation; the memo now keys on the store's own shared coordinate
 /// buffer, so the wrapper is gone.)
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub enum JobPayload {
     /// A full three-step pipeline over a point set (either precision).
     /// Cloning shares the store's `Arc<[S]>` buffer — large point sets are
@@ -32,7 +32,7 @@ pub enum JobPayload {
 }
 
 /// A clustering request.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct ClusterJob {
     pub payload: JobPayload,
     pub params: DpcParams,

@@ -3,13 +3,16 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
-#[derive(Default)]
+use crate::sync::{rank, OrderedMutex};
+
+/// Map locks rank [`rank::METRICS`] — metrics are bumped while holding
+/// nearly any coordinator lock, so they sit just below the pool leaves.
+#[derive(Debug, Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: OrderedMutex<BTreeMap<String, AtomicU64>, { rank::METRICS }>,
     /// Sums stored as f64 bits.
-    sums: Mutex<BTreeMap<String, AtomicU64>>,
+    sums: OrderedMutex<BTreeMap<String, AtomicU64>, { rank::METRICS }>,
 }
 
 impl Metrics {
@@ -22,17 +25,22 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        let mut g = self.counters.lock().unwrap();
+        let mut g = self.counters.lock();
+        // relaxed: the map lock serializes slot creation; the counter value
+        // itself is a monotonic statistic with no ordering dependency.
         g.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0)).fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn observe_secs(&self, name: &str, secs: f64) {
-        let mut g = self.sums.lock().unwrap();
+        let mut g = self.sums.lock();
         let slot = g.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0f64.to_bits()));
         // CAS-loop float accumulation.
+        // relaxed: the CAS loop only needs atomicity of the one slot; the
+        // sum is a statistic read long after, under the same map lock.
         let mut cur = slot.load(Ordering::Relaxed);
         loop {
             let next = (f64::from_bits(cur) + secs).to_bits();
+            // relaxed: see above — per-slot atomicity only.
             match slot.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
                 Ok(_) => break,
                 Err(c) => cur = c,
@@ -41,19 +49,23 @@ impl Metrics {
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).map(|a| a.load(Ordering::Relaxed)).unwrap_or(0)
+        // relaxed: statistic read; the map lock orders slot existence.
+        self.counters.lock().get(name).map(|a| a.load(Ordering::Relaxed)).unwrap_or(0)
     }
 
     pub fn sum_secs(&self, name: &str) -> f64 {
-        self.sums.lock().unwrap().get(name).map(|a| f64::from_bits(a.load(Ordering::Relaxed))).unwrap_or(0.0)
+        // relaxed: statistic read; the map lock orders slot existence.
+        self.sums.lock().get(name).map(|a| f64::from_bits(a.load(Ordering::Relaxed))).unwrap_or(0.0)
     }
 
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in self.counters.lock().iter() {
+            // relaxed: statistic read; the map lock orders slot existence.
             out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
         }
-        for (k, v) in self.sums.lock().unwrap().iter() {
+        for (k, v) in self.sums.lock().iter() {
+            // relaxed: statistic read; the map lock orders slot existence.
             out.push_str(&format!("{k}_seconds {:.6}\n", f64::from_bits(v.load(Ordering::Relaxed))));
         }
         out

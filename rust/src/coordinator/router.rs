@@ -30,6 +30,7 @@ impl Backend {
 }
 
 /// Size-based router over the registered engines.
+#[derive(Debug)]
 pub struct Router {
     tree: Arc<TreeEngine>,
     xla: Option<Arc<XlaEngine>>,

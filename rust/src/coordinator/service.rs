@@ -23,7 +23,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::thread;
 use std::time::Instant;
 
@@ -38,6 +38,7 @@ use crate::durability::{
 use crate::error::DpcError;
 use crate::geom::{DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::XlaService;
+use crate::sync::{rank, OrderedMutex};
 
 use super::config::CoordinatorConfig;
 use super::engine::JobSpec;
@@ -82,6 +83,18 @@ impl SessionEntry {
     }
 }
 
+impl std::fmt::Debug for SessionEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionEntry")
+            .field("points", &self.pts.len())
+            .field("d_cut", &self.d_cut)
+            .field("density", &self.density)
+            .field("built_by", &self.built_by)
+            .field("tag", &self.tag)
+            .finish_non_exhaustive()
+    }
+}
+
 /// An open streaming session plus its immutable radius (readable without
 /// taking the session lock, so submitting never blocks behind a running
 /// ingest).
@@ -93,14 +106,24 @@ pub struct StreamEntry {
     /// The open's [`OpenSpec::tag`] label, echoed in ingest job outputs.
     /// In-memory only; recovered streams carry `"recovered"`.
     pub tag: String,
-    pub session: Mutex<StreamingSession>,
+    pub session: OrderedMutex<StreamingSession, { rank::STREAM_STATE }>,
     /// FIFO ingest tickets, issued under this lock *around* the queue push
     /// so ticket order equals queue order; workers wait for their ticket
     /// before applying, which makes batches land in submission order
     /// regardless of worker scheduling. `closed` unblocks waiters when the
     /// stream is dropped mid-burst (their predecessors may never bump).
-    tickets: Mutex<TicketState>,
+    tickets: OrderedMutex<TicketState, { rank::STREAM_TICKETS }>,
     turn: Condvar,
+}
+
+impl std::fmt::Debug for StreamEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamEntry")
+            .field("d_cut", &self.d_cut)
+            .field("density", &self.density)
+            .field("tag", &self.tag)
+            .finish_non_exhaustive()
+    }
 }
 
 #[derive(Clone, Copy, Default)]
@@ -111,13 +134,13 @@ struct TicketState {
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<(JobId, ClusterJob)>>,
+    queue: OrderedMutex<VecDeque<(JobId, ClusterJob)>, { rank::JOB_QUEUE }>,
     queue_cv: Condvar,
-    status: Mutex<HashMap<JobId, JobStatus>>,
+    status: OrderedMutex<HashMap<JobId, JobStatus>, { rank::JOB_STATUS }>,
     status_cv: Condvar,
     shutdown: AtomicBool,
-    sessions: Mutex<HashMap<SessionId, Arc<SessionEntry>>>,
-    streams: Mutex<HashMap<SessionId, Arc<StreamEntry>>>,
+    sessions: OrderedMutex<HashMap<SessionId, Arc<SessionEntry>>, { rank::SESSION_REGISTRY }>,
+    streams: OrderedMutex<HashMap<SessionId, Arc<StreamEntry>>, { rank::STREAM_REGISTRY }>,
     /// Jobs submitted but not yet terminal (queued + running). The
     /// admission gate ([`Coordinator::try_submit`] and the gated
     /// `submit_recut`/`submit_ingest` paths) bounds this at
@@ -127,14 +150,16 @@ struct Shared {
 }
 
 /// The write-ahead half of `--durable` serve mode. Lock ordering: the
-/// journal lock is the OUTERMOST state lock — taken before any ticket,
-/// stream-map, or session-map lock and never after them — so journal
-/// order always equals ticket/application order, and
-/// [`Coordinator::checkpoint_now`] can freeze the command stream by
-/// holding it alone.
+/// journal lock is the OUTERMOST coordinator state lock
+/// ([`rank::JOURNAL`]) — taken before any ticket, stream-map, or
+/// session-map lock and never after them — so journal order always equals
+/// ticket/application order, and [`Coordinator::checkpoint_now`] can
+/// freeze the command stream by holding it alone. The ordering is
+/// machine-checked: every lock here carries its [`rank`] and debug builds
+/// abort on any out-of-order acquisition.
 struct DurableLog {
     dir: PathBuf,
-    journal: Mutex<JournalWriter>,
+    journal: OrderedMutex<JournalWriter, { rank::JOURNAL }>,
 }
 
 /// The clustering service. Create with [`Coordinator::start`], submit jobs,
@@ -148,6 +173,16 @@ pub struct Coordinator {
     next_session_id: AtomicU64,
     durable: Option<DurableLog>,
     pub metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator")
+            .field("workers", &self.workers.len())
+            .field("durable", &self.durable.is_some())
+            .field("has_xla", &self.router.has_xla())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Coordinator {
@@ -196,8 +231,8 @@ impl Coordinator {
                                     d_cut: s.d_cut(),
                                     density: s.density_model(),
                                     tag: "recovered".to_string(),
-                                    session: Mutex::new(s),
-                                    tickets: Mutex::new(TicketState::default()),
+                                    session: OrderedMutex::new(s),
+                                    tickets: OrderedMutex::new(TicketState::default()),
                                     turn: Condvar::new(),
                                 }),
                             );
@@ -233,18 +268,18 @@ impl Coordinator {
                     );
                 }
                 first_session_id = rec.next_session_id;
-                Some(DurableLog { dir: dir.clone(), journal: Mutex::new(rec.writer) })
+                Some(DurableLog { dir: dir.clone(), journal: OrderedMutex::new(rec.writer) })
             }
         };
 
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: OrderedMutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
-            status: Mutex::new(HashMap::new()),
+            status: OrderedMutex::new(HashMap::new()),
             status_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            sessions: Mutex::new(sessions),
-            streams: Mutex::new(streams),
+            sessions: OrderedMutex::new(sessions),
+            streams: OrderedMutex::new(streams),
             inflight: AtomicU64::new(0),
         });
         let metrics = Arc::new(Metrics::new());
@@ -257,6 +292,8 @@ impl Coordinator {
                 thread::Builder::new()
                     .name(format!("coord-{w}"))
                     .spawn(move || worker_loop(&sh, &rt, &mt, &cfg))
+                    // lint: allow(panic-surface) — thread spawn fails only on
+                    // resource exhaustion at startup; no caller can proceed.
                     .expect("spawn worker")
             })
             .collect();
@@ -290,7 +327,7 @@ impl Coordinator {
     /// never acknowledged without a durable record.
     fn journal_append(&self, entry: &JournalEntry) -> Result<(), DpcError> {
         if let Some(d) = &self.durable {
-            d.journal.lock().unwrap().append(entry)?;
+            d.journal.lock().append(entry)?;
         }
         Ok(())
     }
@@ -300,10 +337,11 @@ impl Coordinator {
     /// `submit_ingest` paths; this raw entry point always queues (tests,
     /// embedded batch drivers).
     pub fn submit(&self, job: ClusterJob) -> JobId {
+        // relaxed: pure id allocation — uniqueness is all that matters.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.shared.inflight.fetch_add(1, Ordering::AcqRel);
-        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
-        self.shared.queue.lock().unwrap().push_back((id, job));
+        self.shared.status.lock().insert(id, JobStatus::Queued);
+        self.shared.queue.lock().push_back((id, job));
         self.shared.queue_cv.notify_one();
         self.metrics.inc("jobs_submitted");
         id
@@ -346,9 +384,10 @@ impl Coordinator {
     /// reserved (keeps `submit`'s unconditional increment from double
     /// counting).
     fn submit_admitted(&self, job: ClusterJob) -> JobId {
+        // relaxed: pure id allocation — uniqueness is all that matters.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
-        self.shared.queue.lock().unwrap().push_back((id, job));
+        self.shared.status.lock().insert(id, JobStatus::Queued);
+        self.shared.queue.lock().push_back((id, job));
         self.shared.queue_cv.notify_one();
         self.metrics.inc("jobs_submitted");
         id
@@ -399,40 +438,30 @@ impl Coordinator {
             dep_s,
             tag,
         });
+        // relaxed: pure id allocation — uniqueness is all that matters.
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         // WAL before publish: replay recomputes the same artifacts from
         // the logged inputs (the pipeline is deterministic).
         self.journal_append(&JournalEntry::OpenSession { session: id, d_cut, density, pts: payload })?;
-        self.shared.sessions.lock().unwrap().insert(id, entry);
+        self.shared.sessions.lock().insert(id, entry);
         self.metrics.inc("sessions_opened");
         Ok(id)
     }
 
-    /// Deprecated shim for the pre-[`OpenSpec`] signature.
-    #[deprecated(since = "0.3.0", note = "use open_session(OpenSpec::points(pts, d_cut).density(model))")]
-    pub fn open_session_with_model(
-        &self,
-        pts: Arc<PointSet>,
-        d_cut: f64,
-        density: DensityModel,
-    ) -> Result<SessionId, DpcError> {
-        self.open_session(OpenSpec::points(pts, d_cut).density(density))
-    }
-
     /// Look up an open session's cached artifacts.
     pub fn session(&self, id: SessionId) -> Option<Arc<SessionEntry>> {
-        self.shared.sessions.lock().unwrap().get(&id).cloned()
+        self.shared.sessions.lock().get(&id).cloned()
     }
 
     /// Every open session id (serve admission seeds its registry from
     /// this after a durable recovery).
     pub fn session_ids(&self) -> Vec<SessionId> {
-        self.shared.sessions.lock().unwrap().keys().copied().collect()
+        self.shared.sessions.lock().keys().copied().collect()
     }
 
     /// Every open stream id.
     pub fn stream_ids(&self) -> Vec<SessionId> {
-        self.shared.streams.lock().unwrap().keys().copied().collect()
+        self.shared.streams.lock().keys().copied().collect()
     }
 
     /// Submit a linkage-only re-cut of an open session at new thresholds.
@@ -463,8 +492,8 @@ impl Coordinator {
     pub fn close_session(&self, id: SessionId) -> Result<(), DpcError> {
         // Journal lock (outermost) before the map lock; the entry is
         // logged only for a session that actually existed.
-        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
-        let mut sessions = self.shared.sessions.lock().unwrap();
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock());
+        let mut sessions = self.shared.sessions.lock();
         if !sessions.contains_key(&id) {
             return Err(DpcError::UnknownSession(id));
         }
@@ -490,6 +519,7 @@ impl Coordinator {
         spec.validate()?;
         let (dim, d_cut, density, tag) = spec.into_dim()?;
         let s = StreamingSession::<f64>::new_with_model(dim, d_cut, density)?;
+        // relaxed: pure id allocation — uniqueness is all that matters.
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         self.journal_append(&JournalEntry::OpenStream {
             stream: id,
@@ -498,14 +528,14 @@ impl Coordinator {
             d_cut,
             density,
         })?;
-        self.shared.streams.lock().unwrap().insert(
+        self.shared.streams.lock().insert(
             id,
             Arc::new(StreamEntry {
                 d_cut,
                 density,
                 tag,
-                session: Mutex::new(s),
-                tickets: Mutex::new(TicketState::default()),
+                session: OrderedMutex::new(s),
+                tickets: OrderedMutex::new(TicketState::default()),
                 turn: Condvar::new(),
             }),
         );
@@ -513,20 +543,9 @@ impl Coordinator {
         Ok(id)
     }
 
-    /// Deprecated shim for the pre-[`OpenSpec`] signature.
-    #[deprecated(since = "0.3.0", note = "use open_stream(OpenSpec::dim(dim, d_cut).density(model))")]
-    pub fn open_stream_with_model(
-        &self,
-        dim: usize,
-        d_cut: f64,
-        density: DensityModel,
-    ) -> Result<SessionId, DpcError> {
-        self.open_stream(OpenSpec::dim(dim, d_cut).density(density))
-    }
-
     /// Look up an open stream.
     pub fn stream(&self, id: SessionId) -> Option<Arc<StreamEntry>> {
-        self.shared.streams.lock().unwrap().get(&id).cloned()
+        self.shared.streams.lock().get(&id).cloned()
     }
 
     /// Submit a batch ingest into an open stream. The job repairs the
@@ -561,7 +580,7 @@ impl Coordinator {
         // issuance and the queue push: journal order == ticket order ==
         // application order for every stream, which is exactly what replay
         // reproduces. The batch share is a refcount bump, not a copy.
-        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock());
         if let Some(j) = journal.as_deref_mut() {
             if let Err(e) = j.append(&JournalEntry::Ingest {
                 stream: id,
@@ -575,7 +594,7 @@ impl Coordinator {
         }
         // Issue the ticket and enqueue under the ticket lock, so ticket
         // order always equals queue order for this stream.
-        let mut tickets = entry.tickets.lock().unwrap();
+        let mut tickets = entry.tickets.lock();
         let seq = tickets.next;
         tickets.next += 1;
         let job = ClusterJob::ingest(id, batch, seq, params).tag(tag);
@@ -595,8 +614,8 @@ impl Coordinator {
     /// deadlocking the worker pool.
     pub fn close_stream(&self, id: SessionId) -> Result<(), DpcError> {
         // Journal lock (outermost) before the map and ticket locks.
-        let mut journal = self.durable.as_ref().map(|d| d.journal.lock().unwrap());
-        let removed = self.shared.streams.lock().unwrap().remove(&id);
+        let mut journal = self.durable.as_ref().map(|d| d.journal.lock());
+        let removed = self.shared.streams.lock().remove(&id);
         match removed {
             Some(entry) => {
                 if let Some(j) = journal.as_deref_mut() {
@@ -604,7 +623,7 @@ impl Coordinator {
                         eprintln!("warning: journaling close-stream {id} failed: {e}");
                     }
                 }
-                let mut tickets = entry.tickets.lock().unwrap();
+                let mut tickets = entry.tickets.lock();
                 tickets.closed = true;
                 entry.turn.notify_all();
                 drop(tickets);
@@ -627,24 +646,23 @@ impl Coordinator {
         let Some(d) = &self.durable else {
             return Err(DpcError::MissingStage { need: "durable serve (--durable)", call: "checkpoint" });
         };
-        let mut journal = d.journal.lock().unwrap();
+        let mut journal = d.journal.lock();
         let streams: Vec<(SessionId, Arc<StreamEntry>)> =
-            self.shared.streams.lock().unwrap().iter().map(|(k, v)| (*k, Arc::clone(v))).collect();
+            self.shared.streams.lock().iter().map(|(k, v)| (*k, Arc::clone(v))).collect();
         let mut stream_states = Vec::with_capacity(streams.len());
         for (sid, entry) in &streams {
-            let mut tickets = entry.tickets.lock().unwrap();
+            let mut tickets = entry.tickets.lock();
             while tickets.applied != tickets.next {
-                tickets = entry.turn.wait(tickets).unwrap();
+                tickets = tickets.wait(&entry.turn);
             }
             drop(tickets);
-            let state = entry.session.lock().unwrap().export_state();
+            let state = entry.session.lock().export_state();
             stream_states.push((*sid, DynStreamState::F64(state)));
         }
         let sessions: Vec<SessionState> = self
             .shared
             .sessions
             .lock()
-            .unwrap()
             .iter()
             .map(|(id, e)| SessionState {
                 id: *id,
@@ -660,6 +678,8 @@ impl Coordinator {
             })
             .collect();
         let data = CheckpointData { streams: stream_states, sessions };
+        // relaxed: reading our own id allocator; the journal lock already
+        // froze every path that could bump it.
         let m = checkpoint::write(&d.dir, &mut journal, &data, self.next_session_id.load(Ordering::Relaxed))?;
         self.metrics.inc("checkpoints_taken");
         Ok(m)
@@ -667,13 +687,13 @@ impl Coordinator {
 
     /// Current status (non-blocking).
     pub fn status(&self, id: JobId) -> Option<JobStatus> {
-        self.shared.status.lock().unwrap().get(&id).cloned()
+        self.shared.status.lock().get(&id).cloned()
     }
 
     /// Block until the job completes; returns the output or the failure
     /// message.
     pub fn wait(&self, id: JobId) -> Result<JobOutput, String> {
-        let mut st = self.shared.status.lock().unwrap();
+        let mut st = self.shared.status.lock();
         loop {
             match st.get(&id) {
                 None => return Err(format!("unknown job {id}")),
@@ -681,10 +701,12 @@ impl Coordinator {
                     return match s.clone() {
                         JobStatus::Done(out) => Ok(*out),
                         JobStatus::Failed(msg) => Err(msg),
+                        // lint: allow(panic-surface) — is_terminal() just
+                        // matched Done/Failed; no third terminal state exists.
                         _ => unreachable!(),
                     };
                 }
-                _ => st = self.shared.status_cv.wait(st).unwrap(),
+                _ => st = st.wait(&self.shared.status_cv),
             }
         }
     }
@@ -713,7 +735,7 @@ impl Drop for Coordinator {
 fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &CoordinatorConfig) {
     loop {
         let (id, job) = {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = sh.queue.lock();
             loop {
                 if sh.shutdown.load(Ordering::Acquire) {
                     return;
@@ -721,7 +743,7 @@ fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &Coordinato
                 if let Some(item) = q.pop_front() {
                     break item;
                 }
-                q = sh.queue_cv.wait(q).unwrap();
+                q = q.wait(&sh.queue_cv);
             }
         };
         set_status(sh, id, JobStatus::Running);
@@ -749,7 +771,7 @@ fn worker_loop(sh: &Shared, router: &Router, metrics: &Metrics, cfg: &Coordinato
 }
 
 fn set_status(sh: &Shared, id: JobId, s: JobStatus) {
-    sh.status.lock().unwrap().insert(id, s);
+    sh.status.lock().insert(id, s);
     sh.status_cv.notify_all();
 }
 
@@ -837,7 +859,6 @@ fn run_recut_job(sid: SessionId, params: DpcParams, sh: &Shared) -> Result<DpcRe
     let entry = sh
         .sessions
         .lock()
-        .unwrap()
         .get(&sid)
         .cloned()
         .ok_or(DpcError::UnknownSession(sid))?;
@@ -859,7 +880,6 @@ fn run_ingest_job(
     let entry = sh
         .streams
         .lock()
-        .unwrap()
         .get(&sid)
         .cloned()
         .ok_or(DpcError::UnknownSession(sid))?;
@@ -869,23 +889,23 @@ fn run_ingest_job(
     // exception is a closed stream, where an earlier job may have failed
     // its lookup without ever bumping: `closed` bails waiters out.
     {
-        let mut tickets = entry.tickets.lock().unwrap();
+        let mut tickets = entry.tickets.lock();
         while tickets.applied != seq {
             if tickets.closed {
                 return Err(DpcError::UnknownSession(sid));
             }
-            tickets = entry.turn.wait(tickets).unwrap();
+            tickets = tickets.wait(&entry.turn);
         }
     }
     let result = {
-        let mut stream = entry.session.lock().unwrap();
+        let mut stream = entry.session.lock();
         match stream.ingest(batch) {
             Ok(()) => stream.cut(params.rho_min, params.delta_min),
             Err(e) => Err(e),
         }
     };
     // Bump even on failure so later tickets are never stranded.
-    let mut tickets = entry.tickets.lock().unwrap();
+    let mut tickets = entry.tickets.lock();
     tickets.applied += 1;
     entry.turn.notify_all();
     result
@@ -1125,7 +1145,7 @@ mod tests {
     }
 
     fn out_len(coord: &Coordinator, sid: SessionId) -> usize {
-        coord.stream(sid).unwrap().session.lock().unwrap().len()
+        coord.stream(sid).unwrap().session.lock().len()
     }
 
     #[test]
@@ -1152,7 +1172,7 @@ mod tests {
         }
         let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() }).run(&pts).unwrap();
         let entry = coord.stream(sid).unwrap();
-        let s = entry.session.lock().unwrap();
+        let s = entry.session.lock();
         assert_eq!(s.rho(), &fresh.rho[..]);
         assert_eq!(s.dep(), &fresh.dep[..]);
         let cut = s.cut(0.0, 20.0).unwrap();
@@ -1264,7 +1284,7 @@ mod tests {
         let coord = Coordinator::start(cfg).unwrap();
         let entry = coord.stream(sid_stream).expect("stream survives restart");
         {
-            let s = entry.session.lock().unwrap();
+            let s = entry.session.lock();
             let fresh = Dpc::new(DpcParams { d_cut: 3.0, rho_min: 0.0, delta_min: 20.0, ..DpcParams::default() })
                 .run(&pts)
                 .unwrap();
@@ -1298,7 +1318,7 @@ mod tests {
             coord.close_stream(sid).unwrap();
         }
         let coord = Coordinator::start(cfg).unwrap();
-        assert!(coord.shared.streams.lock().unwrap().is_empty(), "closed stream stays closed");
+        assert!(coord.shared.streams.lock().is_empty(), "closed stream stays closed");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -1394,15 +1414,19 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_with_model_shims_still_forward() {
+    fn open_spec_density_reaches_session_and_stream_entries() {
+        // Replaces the deprecated `open_*_with_model` shim test: the
+        // OpenSpec builder is now the only spelling, and the chosen density
+        // model must land in the cached entries exactly as the shims did.
         let coord = Coordinator::start(tree_only_config()).unwrap();
         let sid = coord
-            .open_session_with_model(blob_points(), 3.0, DensityModel::GaussianKernel)
+            .open_session(OpenSpec::points(blob_points(), 3.0).density(DensityModel::GaussianKernel))
             .unwrap();
         assert_eq!(coord.session(sid).unwrap().density, DensityModel::GaussianKernel);
         coord.close_session(sid).unwrap();
-        let stream = coord.open_stream_with_model(2, 3.0, DensityModel::KnnRadius { k: 3 }).unwrap();
+        let stream = coord
+            .open_stream(OpenSpec::dim(2, 3.0).density(DensityModel::KnnRadius { k: 3 }))
+            .unwrap();
         assert_eq!(coord.stream(stream).unwrap().density, DensityModel::KnnRadius { k: 3 });
         coord.close_stream(stream).unwrap();
     }

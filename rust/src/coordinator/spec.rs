@@ -22,8 +22,8 @@
 //!
 //! `open_session` requires a points source and `open_stream` a dimension
 //! source; handing the wrong kind is a typed [`DpcError::InvalidParam`],
-//! never a silent reinterpretation. The deprecated `*_with_model` shims
-//! forward here for one release.
+//! never a silent reinterpretation. (The `*_with_model` shims that once
+//! forwarded here have been removed; `OpenSpec` is the only open path.)
 
 use std::sync::Arc;
 

@@ -26,6 +26,16 @@ pub struct Dataset {
     pub paper_n: usize,
 }
 
+impl std::fmt::Debug for Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Dataset")
+            .field("name", &self.name)
+            .field("n", &self.pts.len())
+            .field("paper_n", &self.paper_n)
+            .finish_non_exhaustive()
+    }
+}
+
 /// The nine benchmark datasets of Table 2, at a scale factor (1.0 = the
 /// sizes used by this repo's benches; the paper's original n is recorded in
 /// [`Dataset::paper_n`]).

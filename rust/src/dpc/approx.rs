@@ -257,15 +257,21 @@ pub fn run_approx_budgeted(pts: &PointSet, params: DpcParams, budget_s: f64) -> 
     let cancelled = AtomicBool::new(false);
     let deadline = Instant::now();
     let dep: Vec<Option<u32>> = parlay::par_map_grained(n, crate::dpc::QUERY_GRAIN, |i| {
+        // relaxed: advisory cancellation flag — a stale read only delays the
+        // bail-out by one item; the join below is the synchronization point.
         if cancelled.load(Ordering::Relaxed) {
             return None;
         }
         if deadline.elapsed().as_secs_f64() > budget_s {
+            // relaxed: idempotent one-way flag; ordering of the store is
+            // irrelevant because every racer writes the same value.
             cancelled.store(true, Ordering::Relaxed);
             return None;
         }
         approx_dependent_one_deadline(pts, &grid, &rho, params.rho_min, i, max_extent, Some((deadline, budget_s)))
     });
+    // relaxed: read after the par_map join, which already synchronizes all
+    // worker writes with this thread.
     if cancelled.load(Ordering::Relaxed) {
         return None;
     }

@@ -189,6 +189,8 @@ pub fn pair_weight(model: DensityModel, dist_sq: f64, inv_d_cut_sq: f64) -> u64 
         DensityModel::CutoffCount => 1,
         DensityModel::GaussianKernel => gaussian_weight(dist_sq, inv_d_cut_sq),
         DensityModel::Epanechnikov => epanechnikov_weight(dist_sq, inv_d_cut_sq),
+        // lint: allow(panic-surface) — guarded by the dispatch in
+        // compute_density, which never routes KnnRadius through this path.
         DensityModel::KnnRadius { .. } => unreachable!("knn density has no per-pair weight"),
     }
 }
@@ -233,6 +235,8 @@ pub(crate) fn tree_model_density<S: Scalar>(
 ) -> Vec<u32> {
     match model {
         DensityModel::CutoffCount => {
+            // lint: allow(panic-surface) — the session dispatch sends
+            // CutoffCount through compute_density before reaching here.
             unreachable!("cutoff density runs through compute_density / the session's pruned path")
         }
         DensityModel::KnnRadius { k } => {
@@ -257,6 +261,8 @@ pub(crate) fn tree_model_density<S: Scalar>(
 fn naive_model_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: DensityModel) -> Vec<u32> {
     let n = pts.len();
     match model {
+        // lint: allow(panic-surface) — same dispatch invariant as the tree
+        // leg: CutoffCount never reaches the naive model path.
         DensityModel::CutoffCount => unreachable!("cutoff density runs through compute_density"),
         DensityModel::KnnRadius { k } => {
             let k = k as usize;
@@ -268,6 +274,8 @@ fn naive_model_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: Densit
                 }
                 // Only the k-th smallest *value* matters; ties among equal
                 // distances cannot change it.
+                // lint: allow(panic-surface) — distances are sums of squares
+                // of ingest-validated finite coordinates, never NaN.
                 ds.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
                 ds[k - 1]
             });
@@ -304,6 +312,7 @@ pub(crate) fn knn_rank_densities<S: Scalar>(dk: &[S]) -> Vec<u32> {
         // readers, stream/coordinator ingest) rejects non-finite
         // coordinates, so each d_k is a sum of squares of finite values —
         // finite or +∞, never NaN, and partial_cmp is total over those.
+        // lint: allow(panic-surface) — see the ingress argument above.
         dk[b as usize].partial_cmp(&dk[a as usize]).unwrap().then(a.cmp(&b))
     });
     let mut rho = vec![0u32; n];

@@ -13,6 +13,7 @@ use crate::geom::{PointStore, Scalar};
 use crate::parlay;
 use crate::unionfind::ConcurrentUnionFind;
 
+#[derive(Debug)]
 pub struct LinkageOutput {
     /// Cluster label per point: the *center's point id*, or −1 for noise.
     pub labels: Vec<i64>,

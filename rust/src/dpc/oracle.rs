@@ -36,6 +36,8 @@ pub fn oracle_density<S: Scalar>(pts: &PointStore<S>, d_cut: f64, model: Density
                 .map(|i| {
                     let mut ds: Vec<S> =
                         (0..n).filter(|&j| j != i).map(|j| pts.dist_sq(i, j)).collect();
+                    // lint: allow(panic-surface) — distances over
+                    // ingest-validated finite coordinates are never NaN.
                     ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
                     if ds.len() < k {
                         S::INFINITY
@@ -123,6 +125,8 @@ pub fn oracle_pipeline<S: Scalar>(pts: &PointStore<S>, params: DpcParams) -> Dpc
             }
             let mut cur = i;
             while !is_center[cur] {
+                // lint: allow(panic-surface) — Algorithm 1 invariant: every
+                // non-center, non-noise point has a dependent by definition.
                 cur = dep[cur].expect("non-center non-noise point must have a dependent") as usize;
             }
             cur as i64

@@ -111,6 +111,16 @@ pub struct ClusterSession<S: Scalar = f64> {
     stats: SessionStats,
 }
 
+impl<S: Scalar> std::fmt::Debug for ClusterSession<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterSession")
+            .field("len", &self.pts.len())
+            .field("density_algo", &self.density_algo)
+            .field("active_stage", &self.active_stage)
+            .finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> ClusterSession<S> {
     /// Validate the input (non-empty, finite coordinates) and open the
     /// session over a refcount share of `pts`. The owned kd-tree is built
@@ -248,6 +258,8 @@ impl<S: Scalar> ClusterSession<S> {
             self.active_algo = None;
         }
         self.active_stage = Some((d_cut, model));
+        // lint: allow(panic-surface) — the entry was inserted a few lines
+        // up under the same &mut self borrow; no eviction can intervene.
         let cached = self.rho_cache.get(&key).expect("just ensured");
         Ok(Arc::clone(&cached.rho))
     }

@@ -149,6 +149,17 @@ pub struct StreamingSession<S: Scalar = f64> {
     stats: StreamStats,
 }
 
+impl<S: Scalar> std::fmt::Debug for StreamingSession<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingSession")
+            .field("len", &self.pts.len())
+            .field("d_cut", &self.d_cut)
+            .field("model", &self.model)
+            .field("levels", &self.levels.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> StreamingSession<S> {
     /// Open an empty session at a fixed density radius, under the paper's
     /// cutoff-count density. The radius is part of the maintained state

@@ -17,6 +17,15 @@ pub struct Cursor<'a> {
     pos: usize,
 }
 
+impl std::fmt::Debug for Cursor<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Cursor")
+            .field("pos", &self.pos)
+            .field("len", &self.buf.len())
+            .finish()
+    }
+}
+
 impl<'a> Cursor<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
         Cursor { buf, pos: 0 }
@@ -39,6 +48,7 @@ impl<'a> Cursor<'a> {
                 self.remaining()
             ));
         }
+        // bounds: the remaining() < n guard above proves pos + n <= len.
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
@@ -50,11 +60,13 @@ impl<'a> Cursor<'a> {
 
     pub fn u32(&mut self) -> Result<u32, String> {
         let b = self.take(4)?;
+        // bounds: take(4) returned exactly 4 bytes or erred out above.
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn u64(&mut self) -> Result<u64, String> {
         let b = self.take(8)?;
+        // bounds: take(8) returned exactly 8 bytes or erred out above.
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
@@ -181,6 +193,8 @@ fn get_store_body<S: Scalar>(cur: &mut Cursor<'_>) -> Result<PointStore<S>, Stri
         ));
     }
     let n = n as usize;
+    // bounds: n·d·S::BYTES passed the checked_mul and the remaining() check
+    // above, so the capacity is covered by bytes actually on the wire.
     let mut coords = Vec::with_capacity(n * d);
     for _ in 0..n * d {
         coords.push(S::read_le(cur.take(S::BYTES)?));
@@ -201,6 +215,8 @@ pub fn get_str(cur: &mut Cursor<'_>) -> Result<String, String> {
         return Err(format!("string length {len} exceeds sanity bound 4096"));
     }
     let bytes = cur.take(len)?;
+    // bounds: len passed the 4096 sanity cap and take(len) proved the bytes
+    // exist, so this copies at most 4 KiB of received data.
     String::from_utf8(bytes.to_vec()).map_err(|_| "string is not valid UTF-8".into())
 }
 

@@ -52,6 +52,14 @@ pub struct FenwickDep<S: Scalar = f64> {
     trees: Vec<Option<KdTree<S>>>,
 }
 
+impl<S: Scalar> std::fmt::Debug for FenwickDep<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FenwickDep")
+            .field("points", &self.sorted.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> FenwickDep<S> {
     /// Lines 9-13 of Algorithm 2: radix-sort by descending priority and
     /// build all block kd-trees in parallel.
@@ -99,6 +107,8 @@ impl<S: Scalar> FenwickDep<S> {
         let mut best = (u32::MAX, S::INFINITY);
         let mut j = r; // 1-based prefix [1, r] = 0-based ranks [0, r-1]
         while j > 0 {
+            // lint: allow(panic-surface) — the Fenwick traversal only
+            // visits levels whose block tree was built during `insert`.
             let tree = self.trees[j].as_ref().expect("block tree exists");
             if let Some((p, ds)) = tree.nn(q, u32::MAX, stats) {
                 if ds < best.1 || (ds == best.1 && p < best.0) {

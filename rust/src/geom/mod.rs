@@ -79,6 +79,8 @@ impl<S: Scalar> PointStore<S> {
     pub fn from_flat_fn(n: usize, d: usize, mut f: impl FnMut(usize) -> S) -> Self {
         assert!(d > 0, "dimension must be positive");
         let mut buf = Arc::new_uninit_slice(n * d);
+        // lint: allow(panic-surface) — the Arc was allocated on the line
+        // above and has not been cloned, so get_mut always succeeds.
         let slots = Arc::get_mut(&mut buf).expect("freshly allocated Arc is unique");
         for (i, slot) in slots.iter_mut().enumerate() {
             slot.write(f(i));
@@ -101,6 +103,8 @@ impl<S: Scalar> PointStore<S> {
             return Err(DpcError::InvalidParam { name: "dim", value: 0.0, requirement: "must be positive" });
         }
         let mut buf = Arc::new_uninit_slice(n * d);
+        // lint: allow(panic-surface) — the Arc was allocated on the line
+        // above and has not been cloned, so get_mut always succeeds.
         let slots = Arc::get_mut(&mut buf).expect("freshly allocated Arc is unique");
         for (i, slot) in slots.iter_mut().enumerate() {
             slot.write(f(i)?);
@@ -128,7 +132,11 @@ impl<S: Scalar> PointStore<S> {
         Ok(PointStore { coords, n, d })
     }
 
+    /// Panicking convenience over [`Self::try_new`] for callers with
+    /// statically well-formed input (tests, generators).
     pub fn new(coords: Vec<S>, d: usize) -> Self {
+        // lint: allow(panic-surface) — documented panicking constructor;
+        // fallible callers use try_new.
         Self::try_new(coords, d).expect("well-formed coordinate buffer")
     }
 
@@ -152,7 +160,10 @@ impl<S: Scalar> PointStore<S> {
         Self::try_new(coords, d)
     }
 
+    /// Panicking convenience over [`Self::try_from_rows`].
     pub fn from_rows(rows: &[Vec<S>]) -> Self {
+        // lint: allow(panic-surface) — documented panicking constructor;
+        // fallible callers use try_from_rows.
         Self::try_from_rows(rows).expect("non-empty, non-ragged rows")
     }
 

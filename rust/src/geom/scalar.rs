@@ -33,11 +33,14 @@ static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
 /// `force-scalar-kernel` cargo feature is the compile-time equivalent CI's
 /// feature matrix builds.
 pub fn force_scalar_kernel(on: bool) {
+    // relaxed: standalone toggle — both kernel paths are bit-identical, so
+    // no reader depends on when the flip becomes visible.
     FORCE_SCALAR.store(on, Ordering::Relaxed);
 }
 
 /// Whether [`force_scalar_kernel`] currently pins the portable path.
 pub fn scalar_kernel_forced() -> bool {
+    // relaxed: see `force_scalar_kernel` — visibility timing is immaterial.
     FORCE_SCALAR.load(Ordering::Relaxed)
 }
 
@@ -96,11 +99,14 @@ mod simd {
 
     #[inline]
     pub fn avx_available() -> bool {
+        // relaxed: idempotent probe cache — racing probes all write the
+        // same cpuid-derived answer.
         match AVX.load(Ordering::Relaxed) {
             1 => true,
             2 => false,
             _ => {
                 let ok = std::arch::is_x86_feature_detected!("avx");
+                // relaxed: same value from every racer; see above.
                 AVX.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
                 ok
             }
@@ -116,19 +122,24 @@ mod simd {
     pub unsafe fn dist_sq_block_f32(block: &[f32], d: usize, q: &[f32], out: &mut [f32; BLOCK_LANES]) {
         debug_assert_eq!(block.len(), d * BLOCK_LANES);
         debug_assert_eq!(q.len(), d);
-        let p = block.as_ptr();
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        for k in 0..d {
-            let qk = _mm256_set1_ps(*q.get_unchecked(k));
-            let row = p.add(k * BLOCK_LANES);
-            let t0 = _mm256_sub_ps(_mm256_loadu_ps(row), qk);
-            let t1 = _mm256_sub_ps(_mm256_loadu_ps(row.add(8)), qk);
-            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(t0, t0));
-            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(t1, t1));
+        // SAFETY: caller contract — AVX is present, `block` holds
+        // d × BLOCK_LANES scalars and `q` holds d, so every unchecked
+        // index and unaligned 8-lane load/store below stays in bounds.
+        unsafe {
+            let p = block.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for k in 0..d {
+                let qk = _mm256_set1_ps(*q.get_unchecked(k));
+                let row = p.add(k * BLOCK_LANES);
+                let t0 = _mm256_sub_ps(_mm256_loadu_ps(row), qk);
+                let t1 = _mm256_sub_ps(_mm256_loadu_ps(row.add(8)), qk);
+                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(t0, t0));
+                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(t1, t1));
+            }
+            _mm256_storeu_ps(out.as_mut_ptr(), acc0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(8), acc1);
         }
-        _mm256_storeu_ps(out.as_mut_ptr(), acc0);
-        _mm256_storeu_ps(out.as_mut_ptr().add(8), acc1);
     }
 
     /// 16 f64 lanes as four 256-bit accumulators.
@@ -139,18 +150,23 @@ mod simd {
     pub unsafe fn dist_sq_block_f64(block: &[f64], d: usize, q: &[f64], out: &mut [f64; BLOCK_LANES]) {
         debug_assert_eq!(block.len(), d * BLOCK_LANES);
         debug_assert_eq!(q.len(), d);
-        let p = block.as_ptr();
-        let mut acc = [_mm256_setzero_pd(); 4];
-        for k in 0..d {
-            let qk = _mm256_set1_pd(*q.get_unchecked(k));
-            let row = p.add(k * BLOCK_LANES);
-            for (v, a) in acc.iter_mut().enumerate() {
-                let t = _mm256_sub_pd(_mm256_loadu_pd(row.add(4 * v)), qk);
-                *a = _mm256_add_pd(*a, _mm256_mul_pd(t, t));
+        // SAFETY: caller contract — AVX is present and the slice lengths
+        // match the block layout, so every unchecked index and unaligned
+        // 4-lane load/store below stays in bounds.
+        unsafe {
+            let p = block.as_ptr();
+            let mut acc = [_mm256_setzero_pd(); 4];
+            for k in 0..d {
+                let qk = _mm256_set1_pd(*q.get_unchecked(k));
+                let row = p.add(k * BLOCK_LANES);
+                for (v, a) in acc.iter_mut().enumerate() {
+                    let t = _mm256_sub_pd(_mm256_loadu_pd(row.add(4 * v)), qk);
+                    *a = _mm256_add_pd(*a, _mm256_mul_pd(t, t));
+                }
             }
-        }
-        for (v, a) in acc.iter().enumerate() {
-            _mm256_storeu_pd(out.as_mut_ptr().add(4 * v), *a);
+            for (v, a) in acc.iter().enumerate() {
+                _mm256_storeu_pd(out.as_mut_ptr().add(4 * v), *a);
+            }
         }
     }
 }

@@ -21,6 +21,15 @@ pub struct IncompleteKdTree<'t, S: Scalar = f64> {
     point_active: Vec<AtomicBool>,
 }
 
+impl<S: Scalar> std::fmt::Debug for IncompleteKdTree<'_, S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IncompleteKdTree")
+            .field("nodes", &self.node_active.len())
+            .field("points", &self.point_active.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl<'t, S: Scalar> IncompleteKdTree<'t, S> {
     pub fn new(tree: &'t KdTree<S>) -> Self {
         IncompleteKdTree {

@@ -30,6 +30,12 @@ pub struct IncrementalKdTree<S: Scalar = f64> {
     len: usize,
 }
 
+impl<S: Scalar> std::fmt::Debug for IncrementalKdTree<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IncrementalKdTree").field("len", &self.len).finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> IncrementalKdTree<S> {
     pub fn new(pts: &PointStore<S>) -> Self {
         IncrementalKdTree { pts: pts.clone(), root: None, len: 0 }

@@ -56,6 +56,15 @@ pub struct LeafArena<S: Scalar> {
     _marker: PhantomData<S>,
 }
 
+impl<S: Scalar> std::fmt::Debug for LeafArena<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LeafArena")
+            .field("blocks", &self.blocks())
+            .field("stride", &self.stride)
+            .finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> LeafArena<S> {
     /// Arena sized for `blocks` blocks of dimension `d`, zero-filled.
     /// Holes (blocks no leaf claims) keep the zero fill and are never
@@ -116,12 +125,22 @@ impl<S: Scalar> LeafArena<S> {
 pub unsafe fn fill_block<S: Scalar>(base: *mut S, b: usize, coords: &[S], d: usize, ids: &[u32]) {
     let m = ids.len();
     debug_assert!(m <= BLOCK_LANES);
-    let block = base.add(b * BLOCK_LANES * d);
+    // SAFETY: the caller contract places block `b` inside the arena.
+    let block = unsafe { base.add(b * BLOCK_LANES * d) };
     for k in 0..d {
-        let row = block.add(k * BLOCK_LANES);
+        // SAFETY: `k < d` keeps the row inside block `b`.
+        let row = unsafe { block.add(k * BLOCK_LANES) };
         for l in 0..BLOCK_LANES {
-            let v = if l < m { *coords.get_unchecked(ids[l] as usize * d + k) } else { S::INFINITY };
-            row.add(l).write(v);
+            let v = if l < m {
+                // SAFETY: `ids` holds valid point ids for `coords`
+                // (caller contract) and `k < d`, so the flat index is
+                // in bounds of the row-major coordinate slice.
+                unsafe { *coords.get_unchecked(ids[l] as usize * d + k) }
+            } else {
+                S::INFINITY
+            };
+            // SAFETY: `l < BLOCK_LANES` keeps the write inside the row.
+            unsafe { row.add(l).write(v) };
         }
     }
 }

@@ -58,6 +58,7 @@ pub trait StatSink {
 }
 
 /// Zero-cost sink.
+#[derive(Debug)]
 pub struct NoStats;
 impl StatSink for NoStats {}
 
@@ -113,6 +114,15 @@ pub struct KdTree<S: Scalar = f64> {
     parent: Vec<u32>,
     /// leaf_of_point[original id] = leaf node index.
     leaf_of_point: Vec<u32>,
+}
+
+impl<S: Scalar> std::fmt::Debug for KdTree<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KdTree")
+            .field("points", &self.perm.len())
+            .field("nodes", &self.nodes.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl<S: Scalar> KdTree<S> {
@@ -476,6 +486,8 @@ impl<S: Scalar> KdTree<S> {
         let mut heap: Vec<(S, u32)> = Vec::with_capacity(k + 1); // max-heap by (dist, id)
         self.knn_rec(self.root, q, k, exclude, &mut heap);
         let mut out: Vec<(u32, S)> = heap.into_iter().map(|(d, p)| (p, d)).collect();
+        // lint: allow(panic-surface) — heap distances come from finite
+        // validated coordinates, so partial_cmp cannot see a NaN.
         out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
         out
     }
@@ -597,6 +609,10 @@ struct Builder<'p, S: Scalar> {
     pool: std::sync::Arc<parlay::Pool>,
 }
 
+// SAFETY: the raw base pointers are shared across build tasks, but each
+// recursive task writes only its own subtree's slot range and leaf blocks
+// (disjoint by the `2m-1` slot layout and the perm-offset block map), so
+// concurrent `&Builder` access never races.
 unsafe impl<S: Scalar> Sync for Builder<'_, S> {}
 
 impl<S: Scalar> Builder<'_, S> {
@@ -608,6 +624,8 @@ impl<S: Scalar> Builder<'_, S> {
         let d = self.d;
         // Compute the cell (bbox of the subtree's points).
         let bb = self.compute_bbox(ids);
+        // SAFETY: `slot` is this task's exclusively owned node index (see
+        // the Sync impl above), inside arenas sized for the whole tree.
         unsafe {
             let bptr = (self.bounds_ptr as *mut S).add(slot * 2 * d);
             for k in 0..d {
@@ -619,6 +637,9 @@ impl<S: Scalar> Builder<'_, S> {
             }
         }
         if m <= LEAF_SIZE {
+            // SAFETY: same exclusive ownership as above — `slot`, the leaf
+            // block at `perm_off / BLOCK_MIN`, and the per-point leaf-map
+            // entries for `ids` all belong to this task alone.
             unsafe {
                 *(self.nodes_ptr as *mut Node).add(slot) = Node {
                     left: NONE,
@@ -644,12 +665,15 @@ impl<S: Scalar> Builder<'_, S> {
         ids.select_nth_unstable_by(mid, |&a, &b| {
             pts.coord(a as usize, dim)
                 .partial_cmp(&pts.coord(b as usize, dim))
+                // lint: allow(panic-surface) — coordinates are validated
+                // finite at ingest, so partial_cmp cannot see a NaN.
                 .unwrap()
                 .then(a.cmp(&b))
         });
         let (left_ids, right_ids) = ids.split_at_mut(mid);
         let left_slot = slot + 1;
         let right_slot = slot + 2 * mid; // left subtree occupies 2*mid-1 slots
+        // SAFETY: `slot` is exclusively owned by this task (Sync impl).
         unsafe {
             *(self.nodes_ptr as *mut Node).add(slot) = Node {
                 left: left_slot as u32,

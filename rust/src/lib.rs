@@ -54,6 +54,13 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+// The crate's contracts are machine-checked: `pallas-lint` ([`lint`], run
+// by CI) enforces the panic-surface / float-determinism / atomic-audit /
+// wire-safety / SAFETY-comment rules statically, and these two lints keep
+// the unsafe surface explicit and the public API debuggable.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_debug_implementations)]
+
 pub mod error;
 pub mod parlay;
 pub mod prng;
@@ -72,5 +79,7 @@ pub mod serve;
 pub mod bench;
 pub mod cli;
 pub mod metrics;
+pub mod sync;
+pub mod lint;
 
 pub use error::DpcError;

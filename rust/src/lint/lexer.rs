@@ -1,0 +1,361 @@
+//! A minimal Rust lexer for `pallas-lint` (dependency-free by design).
+//!
+//! Produces just enough structure for the rule pass: identifier and
+//! punctuation tokens with line numbers, a per-line map of comment text,
+//! and the raw lines. Comments, string/char literals (including raw and
+//! byte forms), lifetimes, and numeric literals are recognized so that
+//! rule needles (`unwrap`, `Ordering::Relaxed`, …) can never false-match
+//! inside a string or a comment. This is a *lexer*, not a parser — the
+//! rules operate on token patterns, which is exactly the right fidelity
+//! for contract linting (and keeps the checker ~free of parse-evolution
+//! churn).
+
+use std::collections::HashMap;
+
+/// One lexed token. Literals and lifetimes are deliberately dropped from
+/// the stream — no rule needs them, and their absence can't create false
+/// token adjacencies for the patterns we match (none spans a literal).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unsafe`, `unwrap`, `Ordering`, …).
+    Ident(String),
+    /// A single punctuation character (`::` arrives as two `:`).
+    Punct(char),
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct SpannedTok {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<SpannedTok>,
+    /// Concatenated comment text per 1-based line. Block comments append
+    /// their full text to every line they span, so adjacency checks see
+    /// them from any covered line.
+    pub comments: HashMap<u32, String>,
+    /// Raw source lines (index 0 = line 1).
+    pub lines: Vec<String>,
+}
+
+impl Lexed {
+    pub fn ident_at(&self, i: usize) -> Option<&str> {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn punct_at(&self, i: usize) -> Option<char> {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(Tok::Punct(c)) => Some(*c),
+            _ => None,
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `text`. Never fails: unterminated constructs consume to EOF, which
+/// is the forgiving behavior a linter wants (the compiler owns rejection).
+pub fn lex(text: &str) -> Lexed {
+    let mut out = Lexed { lines: text.lines().map(str::to_string).collect(), ..Lexed::default() };
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Record `chars[start..end]` as comment text for `first_line` and, if
+    // the comment spans lines, each later covered line too.
+    let push_comment = |out: &mut Lexed, chars: &[char], start: usize, end: usize, first_line: u32| {
+        let text: String = chars[start..end].iter().collect();
+        let mut l = first_line;
+        for seg in text.split('\n') {
+            let entry = out.comments.entry(l).or_default();
+            if !entry.is_empty() {
+                entry.push(' ');
+            }
+            entry.push_str(seg.trim());
+            l += 1;
+        }
+    };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //!).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            push_comment(&mut out, &chars, start, i, line);
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let first_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            push_comment(&mut out, &chars, start, i, first_line);
+            continue;
+        }
+        // Identifier, keyword, or a string/char prefix (r, b, br, r#raw_id).
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(chars[i]) {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            // String-literal prefixes: `r"`, `b"`, `br"`, `r#"` (any number
+            // of hashes), `br#"`, and the byte-char `b'`.
+            if matches!(word.as_str(), "r" | "b" | "br") && i < n {
+                if chars[i] == '"' {
+                    i = consume_string(&chars, i, &mut line, word.starts_with('r') || word == "br");
+                    continue;
+                }
+                if chars[i] == '#' && (word == "r" || word == "br") {
+                    let mut j = i;
+                    while j < n && chars[j] == '#' {
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        i = consume_raw_string(&chars, i, &mut line);
+                        continue;
+                    }
+                    // `r#ident` raw identifier.
+                    if word == "r" && j == i + 1 && j < n && is_ident_start(chars[j]) {
+                        i = j;
+                        let id_start = i;
+                        while i < n && is_ident_continue(chars[i]) {
+                            i += 1;
+                        }
+                        let id: String = chars[id_start..i].iter().collect();
+                        out.tokens.push(SpannedTok { tok: Tok::Ident(id), line });
+                        continue;
+                    }
+                }
+                if word == "b" && chars[i] == '\'' {
+                    i = consume_char(&chars, i, &mut line);
+                    continue;
+                }
+            }
+            out.tokens.push(SpannedTok { tok: Tok::Ident(word), line });
+            continue;
+        }
+        // Plain string literal.
+        if c == '"' {
+            i = consume_string(&chars, i, &mut line, false);
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            // Lifetime: 'ident NOT followed by a closing quote.
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                if j < n && chars[j] == '\'' {
+                    // 'a' — a char literal after all.
+                    i = j + 1;
+                } else {
+                    i = j; // lifetime: dropped from the stream
+                }
+                continue;
+            }
+            i = consume_char(&chars, i, &mut line);
+            continue;
+        }
+        // Numeric literal (digits, type suffixes, `0x…`, and a decimal
+        // point only when followed by a digit so `0..n` stays 3 tokens).
+        if c.is_ascii_digit() {
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if is_ident_continue(d) {
+                    i += 1;
+                } else if d == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            continue;
+        }
+        out.tokens.push(SpannedTok { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    out
+}
+
+/// Consume a (possibly byte) string starting at the opening quote; in raw
+/// mode backslashes are literal.
+fn consume_string(chars: &[char], mut i: usize, line: &mut u32, raw: bool) -> usize {
+    let n = chars.len();
+    i += 1; // opening quote
+    while i < n {
+        match chars[i] {
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '\\' if !raw => i += 2,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume `r#…#"…"#…#` from the first `#`.
+fn consume_raw_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    let mut hashes = 0usize;
+    while i < n && chars[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < n {
+        if chars[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if chars[i] == '"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while j < n && chars[j] == '#' && seen < hashes {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return j;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Consume a char (or byte-char) literal from the opening quote.
+fn consume_char(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    i += 1; // opening quote
+    while i < n {
+        match chars[i] {
+            '\'' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '\\' => i += 2,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                Tok::Punct(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_needles() {
+        let src = r##"
+            let a = "x.unwrap()"; // unwrap here is comment text
+            let b = r#"panic!("still a string")"#;
+            /* Ordering::Relaxed in a block comment */
+            let c = 'u';
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"panic".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"Relaxed".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; x }";
+        let ids = idents(src);
+        // The 'x' char literal must not swallow the closing brace.
+        assert!(lex(src).tokens.iter().any(|t| t.tok == Tok::Punct('}')));
+        assert!(ids.contains(&"str".to_string()));
+    }
+
+    #[test]
+    fn comment_text_lands_on_every_spanned_line() {
+        let src = "/* one\ntwo SAFETY\nthree */\nlet x = 1;\n";
+        let lx = lex(src);
+        assert!(lx.comments.get(&2).is_some_and(|t| t.contains("SAFETY")));
+        assert!(lx.comments.contains_key(&1) && lx.comments.contains_key(&3));
+        assert!(!lx.comments.contains_key(&4));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_strings() {
+        let src = "let s = \"a\nb\nc\";\nfoo();\n";
+        let lx = lex(src);
+        let foo = lx.tokens.iter().find(|t| t.tok == Tok::Ident("foo".into()));
+        assert_eq!(foo.map(|t| t.line), Some(4));
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let ids = idents("let r#type = 1; let s = r#\"raw \" string\"#;");
+        assert!(ids.contains(&"type".to_string()));
+        assert!(!ids.contains(&"raw".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let src = "/* outer /* inner */ still comment */ fn live() {}";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn".to_string(), "live".to_string()]);
+    }
+}

@@ -1,0 +1,96 @@
+//! `pallas-lint`: the in-repo static-analysis pass (DESIGN.md §Static
+//! analysis).
+//!
+//! The exactness and concurrency contracts this crate makes — typed
+//! [`crate::DpcError`]s instead of panics, no-FMA bit-identical kernels,
+//! audited `Ordering::Relaxed`, length-checked wire decoding, and
+//! `SAFETY`-commented `unsafe` — are enforced here as token-pattern rules
+//! over a small dependency-free lexer, run by the `pallas_lint` binary and
+//! CI. The runtime half of the same program is [`crate::sync::ordered`],
+//! which turns the lock-order contract into a debug-build assertion.
+//!
+//! Entry points: [`scan_source`] for one file (used by the fixture tests),
+//! [`scan_tree`] for a whole `rust/src` tree (used by the binary and the
+//! self-scan test).
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Rule, Violation};
+
+/// Lint one file's source text. `relpath` is the path relative to the
+/// scan root (slash-separated) — it selects the path-scoped rules
+/// (kernel/wire) and is echoed into each [`Violation`].
+pub fn scan_source(relpath: &str, text: &str) -> Vec<Violation> {
+    rules::check(relpath, &lexer::lex(text))
+}
+
+/// Lint every `.rs` file under `root`, depth-first in sorted order so
+/// output (and CI diffs) are deterministic. Violations come back grouped
+/// by file in that same order.
+pub fn scan_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let text = fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.extend(scan_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let ty = entry.file_type()?;
+        if ty.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if ty.is_file() && path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_source_routes_path_scoped_rules() {
+        let src = "fn d(n: usize) -> Vec<u8> { Vec::with_capacity(n) }";
+        assert_eq!(scan_source("durability/wire.rs", src).len(), 1);
+        assert!(scan_source("dpc/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scan_tree_is_deterministic_and_recursive() {
+        let dir = std::env::temp_dir().join(format!("pallas_lint_scan_{}", std::process::id()));
+        let sub = dir.join("geom");
+        std::fs::create_dir_all(&sub).expect("create fixture tree");
+        std::fs::write(dir.join("b.rs"), "fn f() { x.unwrap(); }").expect("write fixture");
+        std::fs::write(sub.join("a.rs"), "fn g(a: f64) -> f64 { a.mul_add(a, a) }").expect("write fixture");
+        std::fs::write(dir.join("notes.txt"), "x.unwrap()").expect("write fixture");
+
+        let v = scan_tree(&dir).expect("scan fixture tree");
+        let files: Vec<&str> = v.iter().map(|x| x.file.as_str()).collect();
+        assert_eq!(files, vec!["b.rs", "geom/a.rs"]);
+        assert_eq!(v[0].rule, Rule::PanicSurface);
+        assert_eq!(v[1].rule, Rule::FloatDeterminism);
+
+        std::fs::remove_dir_all(&dir).expect("remove fixture tree");
+    }
+}

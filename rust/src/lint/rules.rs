@@ -1,0 +1,570 @@
+//! The pallas-lint rule catalog (DESIGN.md §Static analysis).
+//!
+//! Every rule is a token-pattern check over [`super::lexer::Lexed`] with a
+//! shared *attachment* discipline for justification comments: a comment
+//! satisfies a site if it sits on the same line, or anywhere in the
+//! contiguous block of comment/attribute lines directly above the site's
+//! line (a blank or code line breaks attachment). That is exactly where
+//! human reviewers expect the justification to live.
+//!
+//! Suppression grammar (checked by the `allow-grammar` meta-rule):
+//!
+//! ```text
+//! // lint: allow(panic-surface) — why this site cannot fire in practice
+//! ```
+//!
+//! (Any rule name from the catalog may appear in place of
+//! `panic-surface`; the justification must be non-empty.)
+//!
+//! (`--` is accepted in place of the em-dash.) Test regions — items under
+//! `#[test]` or `#[cfg(test)]` — are excluded from every rule.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use super::lexer::{Lexed, Tok};
+
+/// Rule identifiers; `name()` is the string used in allow comments, CI
+/// output, and DESIGN.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// `unwrap`/`expect`/`panic!`-family (plus slice indexing in wire
+    /// decode paths) in production code without a justification.
+    PanicSurface,
+    /// FMA-family operations in the bit-exactness kernel paths
+    /// (`geom`/`kdtree`/`pskd`): fused rounding breaks the byte-identical
+    /// ρ/λ/δ contract (DESIGN.md §2c).
+    FloatDeterminism,
+    /// `Ordering::Relaxed` without a `relaxed:` audit comment.
+    RelaxedOrdering,
+    /// Allocation (or slice indexing) in wire decode paths without a
+    /// `bounds:` audit comment tying it to the length check that
+    /// precedes it.
+    WireSafety,
+    /// `unsafe` without an attached `SAFETY`/`# Safety` comment.
+    SafetyComment,
+    /// A suppression comment that doesn't parse, names an unknown rule,
+    /// or omits the justification.
+    AllowGrammar,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::PanicSurface,
+        Rule::FloatDeterminism,
+        Rule::RelaxedOrdering,
+        Rule::WireSafety,
+        Rule::SafetyComment,
+        Rule::AllowGrammar,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::PanicSurface => "panic-surface",
+            Rule::FloatDeterminism => "float-determinism",
+            Rule::RelaxedOrdering => "relaxed-ordering",
+            Rule::WireSafety => "wire-safety",
+            Rule::SafetyComment => "safety-comment",
+            Rule::AllowGrammar => "allow-grammar",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.name() == name)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One finding. `file` is the path relative to the scan root.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Receiver methods whose `.unwrap()` is idiomatic, not a panic surface:
+/// mutex/rwlock poisoning unwraps (poison is fatal by crate policy) and
+/// condvar waits.
+const POISON_EXEMPT_CALLEES: [&str; 5] = ["lock", "read", "write", "wait", "wait_timeout"];
+
+/// Idents that mark an FMA-family operation.
+fn is_fma_ident(id: &str) -> bool {
+    id == "mul_add" || id == "fma" || id == "fmaf" || (id.starts_with("_mm") && id.contains("fm"))
+}
+
+/// Whether `path` (slash-separated, relative) is inside one of `dirs`.
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(&format!("{d}/")) || path.starts_with(d) && path == *d)
+}
+
+/// Kernel paths under the float-determinism contract.
+fn is_kernel_path(path: &str) -> bool {
+    in_dirs(path, &["geom", "kdtree", "pskd"])
+}
+
+/// Wire decode paths under the wire-safety contract.
+fn is_wire_path(path: &str) -> bool {
+    path == "durability/wire.rs" || path == "serve/frame.rs"
+}
+
+/// Scan one already-lexed file. `path` drives the path-scoped rules and
+/// is echoed into violations.
+pub fn check(path: &str, lx: &Lexed) -> Vec<Violation> {
+    let excluded = test_region_lines(lx);
+    let mut out = Vec::new();
+    let v = |out: &mut Vec<Violation>, line: u32, rule: Rule, message: String| {
+        out.push(Violation { file: path.to_string(), line, rule, message });
+    };
+
+    check_allow_grammar(path, lx, &mut out);
+
+    let toks = &lx.tokens;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if excluded.contains(&line) {
+            continue;
+        }
+        let id = match &toks[i].tok {
+            Tok::Ident(s) => s.as_str(),
+            Tok::Punct(_) => continue,
+        };
+
+        // --- panic-surface ------------------------------------------------
+        if (id == "unwrap" || id == "expect")
+            && lx.punct_at(i.wrapping_sub(1)) == Some('.')
+            && lx.punct_at(i + 1) == Some('(')
+        {
+            let exempt = id == "unwrap" && poison_exempt(lx, i);
+            if !exempt && !allowed(lx, line, Rule::PanicSurface) {
+                v(&mut out, line, Rule::PanicSurface, format!(".{id}() without `lint: allow(panic-surface)`"));
+            }
+        }
+        if matches!(id, "panic" | "unreachable" | "todo" | "unimplemented") && lx.punct_at(i + 1) == Some('!') {
+            // `core::panic!` et al. in macro-rules output don't occur here;
+            // plain invocation is the only shape in this tree.
+            if !allowed(lx, line, Rule::PanicSurface) {
+                v(&mut out, line, Rule::PanicSurface, format!("{id}! without `lint: allow(panic-surface)`"));
+            }
+        }
+        // Slice indexing in wire decode paths: `ident[...]` where the
+        // bracket opens an expression index (an ident directly before `[`
+        // rules out attribute and type positions).
+        if is_wire_path(path) && lx.punct_at(i + 1) == Some('[') && !matches!(id, "mut" | "dyn" | "in") {
+            if !audited(lx, line, "bounds:") && !allowed(lx, line, Rule::PanicSurface) {
+                v(
+                    &mut out,
+                    line,
+                    Rule::PanicSurface,
+                    format!("slice index `{id}[..]` in a wire path without a `bounds:` audit comment"),
+                );
+            }
+        }
+
+        // --- float-determinism -------------------------------------------
+        if is_kernel_path(path) && is_fma_ident(id) && !allowed(lx, line, Rule::FloatDeterminism) {
+            v(
+                &mut out,
+                line,
+                Rule::FloatDeterminism,
+                format!("`{id}` fuses the multiply-add rounding step; kernel paths must stay bit-identical (DESIGN.md §2c)"),
+            );
+        }
+
+        // --- relaxed-ordering --------------------------------------------
+        if id == "Relaxed"
+            && lx.punct_at(i.wrapping_sub(1)) == Some(':')
+            && lx.punct_at(i.wrapping_sub(2)) == Some(':')
+            && lx.ident_at(i.wrapping_sub(3)) == Some("Ordering")
+        {
+            if !audited(lx, line, "relaxed:") && !allowed(lx, line, Rule::RelaxedOrdering) {
+                v(
+                    &mut out,
+                    line,
+                    Rule::RelaxedOrdering,
+                    "Ordering::Relaxed without a `relaxed:` audit comment".to_string(),
+                );
+            }
+        }
+
+        // --- wire-safety ---------------------------------------------------
+        if is_wire_path(path)
+            && matches!(id, "with_capacity" | "reserve" | "resize" | "to_vec")
+            && lx.punct_at(i + 1) == Some('(')
+        {
+            if !audited(lx, line, "bounds:") && !allowed(lx, line, Rule::WireSafety) {
+                v(
+                    &mut out,
+                    line,
+                    Rule::WireSafety,
+                    format!("allocation `{id}` in a wire path without a `bounds:` audit comment citing the preceding length check"),
+                );
+            }
+        }
+
+        // --- safety-comment ------------------------------------------------
+        if id == "unsafe" {
+            let has = attached(lx, line, |t| t.contains("SAFETY") || t.contains("# Safety"));
+            if !has && !allowed(lx, line, Rule::SafetyComment) {
+                v(
+                    &mut out,
+                    line,
+                    Rule::SafetyComment,
+                    "`unsafe` without an attached SAFETY / `# Safety` comment".to_string(),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// `.unwrap()` whose receiver is a direct `lock()/read()/write()/wait(..)`
+/// call: `<callee> ( … ) . unwrap` — walk back over the balanced argument
+/// parens to find the callee.
+fn poison_exempt(lx: &Lexed, unwrap_idx: usize) -> bool {
+    // tokens: … callee ( args ) . unwrap
+    if unwrap_idx < 4 || lx.punct_at(unwrap_idx - 2) != Some(')') {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut j = unwrap_idx - 2;
+    loop {
+        match lx.punct_at(j) {
+            Some(')') => depth += 1,
+            Some('(') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j > 0 && lx.ident_at(j - 1).is_some_and(|c| POISON_EXEMPT_CALLEES.contains(&c))
+}
+
+/// Lines covered by `#[test]`- or `#[cfg(test)]`-attributed items
+/// (including `mod tests` blocks). Token-level skip: after the marker
+/// attribute (and any further attributes), the item extends to the
+/// matching close brace — or to a top-level `;` for brace-less items —
+/// tracking all three bracket kinds so `;` inside `[u8; 4]` or argument
+/// lists can't end the skip early.
+fn test_region_lines(lx: &Lexed) -> HashSet<u32> {
+    let toks = &lx.tokens;
+    let mut excluded = HashSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if lx.punct_at(i) == Some('#') && lx.punct_at(i + 1) == Some('[') {
+            let (attr_ids, after) = read_attr(lx, i + 1);
+            let is_test = attr_ids.iter().any(|s| s == "test") && !attr_ids.iter().any(|s| s == "not");
+            if is_test {
+                let start_line = toks[i].line;
+                // Skip any stacked attributes between the marker and the item.
+                let mut k = after;
+                while lx.punct_at(k) == Some('#') && lx.punct_at(k + 1) == Some('[') {
+                    let (_, nxt) = read_attr(lx, k + 1);
+                    k = nxt;
+                }
+                // Consume the item.
+                let (mut paren, mut brack, mut brace) = (0i32, 0i32, 0i32);
+                let mut end = toks.len().saturating_sub(1);
+                while k < toks.len() {
+                    match lx.punct_at(k) {
+                        Some('(') => paren += 1,
+                        Some(')') => paren -= 1,
+                        Some('[') => brack += 1,
+                        Some(']') => brack -= 1,
+                        Some('{') => brace += 1,
+                        Some('}') => {
+                            brace -= 1;
+                            if brace == 0 && paren == 0 && brack == 0 {
+                                end = k;
+                                break;
+                            }
+                        }
+                        Some(';') if brace == 0 && paren == 0 && brack == 0 => {
+                            end = k;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let end_line = toks.get(end).map_or(start_line, |t| t.line);
+                for l in start_line..=end_line {
+                    excluded.insert(l);
+                }
+                i = end + 1;
+                continue;
+            }
+            i = after;
+            continue;
+        }
+        i += 1;
+    }
+    excluded
+}
+
+/// Read an attribute starting at its `[` token; returns the identifiers
+/// inside and the index just past the matching `]`.
+fn read_attr(lx: &Lexed, open_idx: usize) -> (Vec<String>, usize) {
+    let mut ids = Vec::new();
+    let mut depth = 0i32;
+    let mut j = open_idx;
+    while j < lx.tokens.len() {
+        match &lx.tokens[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (ids, j + 1);
+                }
+            }
+            Tok::Ident(s) => ids.push(s.clone()),
+            Tok::Punct(_) => {}
+        }
+        j += 1;
+    }
+    (ids, j)
+}
+
+/// Does a comment matching `pred` sit on `line` or in the contiguous
+/// comment/attribute block directly above it?
+fn attached(lx: &Lexed, line: u32, pred: impl Fn(&str) -> bool) -> bool {
+    if lx.comments.get(&line).is_some_and(|t| pred(t)) {
+        return true;
+    }
+    let mut j = line.saturating_sub(1);
+    while j >= 1 {
+        if lx.comments.get(&j).is_some_and(|t| pred(t)) {
+            return true;
+        }
+        if !passable_line(lx, j) {
+            return false;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// A line the attachment walk may cross: pure comment, attribute, or a
+/// block-comment interior. Blank lines and code lines break attachment.
+fn passable_line(lx: &Lexed, line: u32) -> bool {
+    if lx.comments.contains_key(&line) {
+        // A line with comment text is passable only if it has no code
+        // before the comment (a trailing comment on a code line must not
+        // extend attachment past that code).
+        let raw = lx.lines.get(line as usize - 1).map(String::as_str).unwrap_or("");
+        let t = raw.trim_start();
+        return t.starts_with("//") || t.starts_with("/*") || t.starts_with('*') || t.starts_with("*/");
+    }
+    let raw = lx.lines.get(line as usize - 1).map(String::as_str).unwrap_or("");
+    let t = raw.trim_start();
+    t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// Attached audit comment containing `tag` (e.g. `relaxed:`/`bounds:`).
+fn audited(lx: &Lexed, line: u32, tag: &str) -> bool {
+    attached(lx, line, |t| t.contains(tag))
+}
+
+/// Attached, well-formed suppression clause naming `rule`.
+fn allowed(lx: &Lexed, line: u32, rule: Rule) -> bool {
+    attached(lx, line, |t| parse_allows(t).iter().any(|a| matches!(a, Ok(r) if *r == rule)))
+}
+
+/// All suppression clauses in one comment text. `Err(offset)` marks a
+/// malformed clause (bad grammar, unknown rule, or missing justification).
+fn parse_allows(text: &str) -> Vec<Result<Rule, usize>> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find("lint: allow") {
+        let at = from + p;
+        let rest = &text[at + "lint: allow".len()..];
+        from = at + "lint: allow".len();
+        let Some(open_rest) = rest.strip_prefix('(') else {
+            out.push(Err(at));
+            continue;
+        };
+        let Some(close) = open_rest.find(')') else {
+            out.push(Err(at));
+            continue;
+        };
+        let name = open_rest[..close].trim();
+        let Some(rule) = Rule::from_name(name) else {
+            out.push(Err(at));
+            continue;
+        };
+        // Separator (— or -) plus a non-empty justification.
+        let after = open_rest[close + 1..].trim_start();
+        let just = after.strip_prefix('—').or_else(|| after.strip_prefix('-')).map(|s| s.trim_matches('-').trim());
+        match just {
+            Some(j) if !j.is_empty() => out.push(Ok(rule)),
+            _ => out.push(Err(at)),
+        }
+    }
+    out
+}
+
+/// The allow-grammar meta-rule: every suppression mention must parse.
+fn check_allow_grammar(path: &str, lx: &Lexed, out: &mut Vec<Violation>) {
+    let mut lines: Vec<&u32> = lx.comments.keys().collect();
+    lines.sort();
+    let mut seen_multiline: HashSet<(u32, usize)> = HashSet::new();
+    for &line in lines {
+        let Some(text) = lx.comments.get(&line) else { continue };
+        for a in parse_allows(text) {
+            if let Err(off) = a {
+                // Block comments repeat their text on every covered line;
+                // report each malformed clause once (at its first line).
+                if seen_multiline.insert((line, off)) && !lx.comments.get(&line.saturating_sub(1)).is_some_and(|p| p == text)
+                {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line,
+                        rule: Rule::AllowGrammar,
+                        message: "malformed `lint: allow` — expected `lint: allow(<rule>) — <justification>` with a known rule name".to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn scan(path: &str, src: &str) -> Vec<Violation> {
+        check(path, &lex(src))
+    }
+
+    fn rules_hit(path: &str, src: &str) -> Vec<Rule> {
+        scan(path, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_flagged_and_allow_clears_it() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules_hit("m.rs", bad), vec![Rule::PanicSurface]);
+        let ok = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic-surface) — caller checked is_some\n    x.unwrap()\n}";
+        assert!(scan("m.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn poison_unwraps_are_builtin_exempt() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }";
+        assert!(scan("m.rs", src).is_empty());
+        let src = "fn g(g: G) -> G { cv.wait(g).unwrap() }";
+        assert!(scan("m.rs", src).is_empty());
+        // …but an unwrap on something else is not.
+        let src = "fn h() -> u32 { compute().unwrap() }";
+        assert_eq!(rules_hit("m.rs", src), vec![Rule::PanicSurface]);
+    }
+
+    #[test]
+    fn test_regions_are_excluded() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { foo().unwrap(); panic!(\"x\"); }\n}\n";
+        assert!(scan("m.rs", src).is_empty());
+        // Production code after a test item is still checked.
+        let src2 = "#[test]\nfn t() { foo().unwrap(); }\nfn prod() { bar().unwrap(); }\n";
+        let v = scan("m.rs", src2);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn cfg_not_test_is_production() {
+        let src = "#[cfg(not(test))]\nfn prod() { foo().unwrap(); }\n";
+        assert_eq!(rules_hit("m.rs", src), vec![Rule::PanicSurface]);
+    }
+
+    #[test]
+    fn fma_only_fires_in_kernel_paths() {
+        let src = "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }";
+        assert_eq!(rules_hit("geom/scalar.rs", src), vec![Rule::FloatDeterminism]);
+        assert_eq!(rules_hit("kdtree/mod.rs", src), vec![Rule::FloatDeterminism]);
+        assert!(scan("bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_needs_audit_tag() {
+        let bad = "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) }";
+        assert_eq!(rules_hit("m.rs", bad), vec![Rule::RelaxedOrdering]);
+        let ok = "fn f(a: &AtomicU64) -> u64 {\n    // relaxed: monotonic counter, no ordering dependency\n    a.load(Ordering::Relaxed)\n}";
+        assert!(scan("m.rs", ok).is_empty());
+        let trailing = "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) } // relaxed: counter";
+        assert!(scan("m.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn wire_allocation_needs_bounds_audit() {
+        let bad = "fn d(n: usize) -> Vec<u8> { Vec::with_capacity(n) }";
+        assert_eq!(rules_hit("durability/wire.rs", bad), vec![Rule::WireSafety]);
+        let ok = "fn d(n: usize) -> Vec<u8> {\n    // bounds: n checked against remaining() above\n    Vec::with_capacity(n)\n}";
+        assert!(scan("durability/wire.rs", ok).is_empty());
+        // Outside wire paths the allocation rule does not apply.
+        assert!(scan("dpc/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn wire_indexing_needs_bounds_audit() {
+        let bad = "fn d(buf: &[u8], i: usize) -> u8 { buf[i] }";
+        assert_eq!(rules_hit("serve/frame.rs", bad), vec![Rule::PanicSurface]);
+        assert!(scan("kdtree/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_hit("m.rs", bad), vec![Rule::SafetyComment]);
+        let ok = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid for reads (caller contract).\n    unsafe { *p }\n}";
+        assert!(scan("m.rs", ok).is_empty());
+        // A `# Safety` doc section on an unsafe fn counts, across attributes.
+        let doc = "/// Does things.\n///\n/// # Safety\n/// `p` must be valid.\n#[inline]\npub unsafe fn g(p: *const u8) -> u8 { unsafe { *p } }";
+        let v = scan("m.rs", doc);
+        // The inner unsafe block is covered by the same attached doc walk.
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn attachment_breaks_across_code_lines() {
+        let src = "// SAFETY: explains the FIRST block only\nlet a = unsafe { f() };\nlet b = unsafe { g() };\n";
+        let v = scan("m.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn malformed_allow_is_its_own_violation() {
+        let unknown = "// lint: allow(no-such-rule) — whatever\nfn f() {}\n";
+        assert_eq!(rules_hit("m.rs", unknown), vec![Rule::AllowGrammar]);
+        let missing_just = "// lint: allow(panic-surface)\nfn f() { x.unwrap(); }\n";
+        let hits = rules_hit("m.rs", missing_just);
+        assert!(hits.contains(&Rule::AllowGrammar));
+        assert!(hits.contains(&Rule::PanicSurface), "malformed allow must not suppress");
+    }
+
+    #[test]
+    fn ascii_double_dash_separator_accepted() {
+        let ok = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic-surface) -- invariant: x set by caller\n    x.unwrap()\n}";
+        assert!(scan("m.rs", ok).is_empty());
+    }
+}

@@ -268,7 +268,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     }
     table.print();
     if let Some(entry) = coord.stream(sid) {
-        let s = entry.session.lock().unwrap();
+        let s = entry.session.lock();
         let st = s.stats();
         println!(
             "forest levels: {:?}; trees rebuilt: {} ({} points total) for {} ingested points",

@@ -146,6 +146,8 @@ pub fn par_scan_add(vals: &[usize]) -> (Vec<usize>, usize) {
     }
     // Pass 2: local scans with offsets.
     let mut out: Vec<MaybeUninit<usize>> = Vec::with_capacity(n);
+    // SAFETY: every slot in 0..n is written exactly once below before the
+    // transmute assumes initialization (chunks partition 0..n).
     #[allow(clippy::uninit_vec)]
     unsafe {
         out.set_len(n);
@@ -164,6 +166,8 @@ pub fn par_scan_add(vals: &[usize]) -> (Vec<usize>, usize) {
             acc += vals[i];
         }
     });
+    // SAFETY: all n slots initialized by the pass above; MaybeUninit<usize>
+    // and usize share layout.
     let out = unsafe { std::mem::transmute::<Vec<MaybeUninit<usize>>, Vec<usize>>(out) };
     (out, total)
 }
@@ -179,6 +183,8 @@ where
     let flags: Vec<usize> = par_map(n, |i| usize::from(keep(i)));
     let (pos, total) = par_scan_add(&flags);
     let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(total);
+    // SAFETY: the scan gives every kept index a unique slot in 0..total and
+    // the loop below writes each exactly once before the transmute.
     #[allow(clippy::uninit_vec)]
     unsafe {
         out.set_len(total);
@@ -193,6 +199,8 @@ where
             }
         }
     });
+    // SAFETY: all `total` slots initialized above; MaybeUninit<T> and T
+    // share layout.
     unsafe { std::mem::transmute::<Vec<MaybeUninit<T>>, Vec<T>>(out) }
 }
 
@@ -204,6 +212,7 @@ where
 ///
 /// Relies on the fact that for non-negative IEEE-754 doubles the bit pattern
 /// ordering equals numeric ordering, so `fetch_min` on the raw bits is exact.
+#[derive(Debug)]
 pub struct WriteMinF64 {
     bits: AtomicU64,
 }
@@ -217,10 +226,13 @@ impl WriteMinF64 {
     #[inline]
     pub fn update(&self, v: f64) {
         debug_assert!(v >= 0.0);
+        // relaxed: commutative min — any interleaving yields the same
+        // final value; readers synchronize via the enclosing join.
         self.bits.fetch_min(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn get(&self) -> f64 {
+        // relaxed: read after the parallel phase's join edge.
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
 }
@@ -239,6 +251,7 @@ impl Default for WriteMinF64 {
 /// Call sites that need exact f64 comparisons (e.g. the Fenwick query's
 /// O(log n)-way aggregation) use a sequential exact reduce instead; this type
 /// is for high-fan-in concurrent writes where f32 key resolution suffices.
+#[derive(Debug)]
 pub struct WriteMinPair {
     bits: AtomicU64,
 }
@@ -258,11 +271,14 @@ impl WriteMinPair {
     #[inline]
     pub fn update(&self, dist: f64, id: u32) {
         debug_assert!(dist >= 0.0);
+        // relaxed: commutative min over packed (key, id) — order-free;
+        // readers synchronize via the enclosing join.
         self.bits.fetch_min(Self::pack(dist, id), Ordering::Relaxed);
     }
 
     /// Returns `(dist, id)`, or `None` if never updated.
     pub fn get(&self) -> Option<(f32, u32)> {
+        // relaxed: read after the parallel phase's join edge.
         let b = self.bits.load(Ordering::Relaxed);
         if b == u64::MAX {
             return None;

@@ -42,8 +42,10 @@ use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{fence, AtomicBool, AtomicIsize, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, Condvar, OnceLock};
 use std::thread;
+
+use crate::sync::{rank, OrderedMutex, OrderedRwLock};
 
 // ---------------------------------------------------------------------------
 // Tasks
@@ -83,10 +85,14 @@ impl Task {
     /// failed one). Failure ordering `Relaxed`: a loser takes no action that
     /// depends on the task's contents.
     fn run(&self) -> bool {
+        // relaxed: failure ordering only — a loser takes no action that
+        // depends on the task's contents (full audit in the doc above).
         if self.state.compare_exchange(PENDING, RUNNING, Ordering::Acquire, Ordering::Relaxed).is_err() {
             return false;
         }
         // SAFETY: winning the CAS grants exclusive access to `func`.
+        // lint: allow(panic-surface) — a claimed task always carries its
+        // closure: `func` is taken exactly once, by the unique CAS winner.
         let f = unsafe { (*self.func.get()).take() }.expect("claimed task has a closure");
         f();
         // Release: everything the closure wrote (e.g. the join's result slot)
@@ -156,11 +162,13 @@ impl Deque {
     /// against `top` guarantees writes stay ≥ DEQUE_CAP ahead of any index a
     /// thief could still claim.
     fn push(&self, task: Arc<Task>) -> Result<(), Arc<Task>> {
+        // relaxed: owner-only read of our own last `bottom` store.
         let b = self.bottom.load(Ordering::Relaxed);
         let t = self.top.load(Ordering::Acquire);
         if b - t >= DEQUE_CAP as isize {
             return Err(task);
         }
+        // relaxed: the Release store of `bottom` below publishes this slot.
         self.slot(b).store(Arc::into_raw(task) as usize, Ordering::Relaxed);
         self.bottom.store(b + 1, Ordering::Release);
         Ok(())
@@ -168,19 +176,28 @@ impl Deque {
 
     /// Owner-only LIFO pop.
     fn pop(&self) -> Option<Arc<Task>> {
+        // relaxed: owner-only read of our own `bottom`.
         let b = self.bottom.load(Ordering::Relaxed) - 1;
+        // relaxed: the SeqCst fence below globally orders this decrement.
         self.bottom.store(b, Ordering::Relaxed);
         fence(Ordering::SeqCst);
+        // relaxed: ordered against thieves by the fence above.
         let t = self.top.load(Ordering::Relaxed);
         if t > b {
             // Deque was empty; restore bottom.
+            // relaxed: owner-only restore; nothing is published.
             self.bottom.store(b + 1, Ordering::Relaxed);
             return None;
         }
+        // relaxed: the slot write is ours (owner) or claimed via the `top`
+        // CAS arbitration below before the pointer is consumed.
         let raw = self.slot(b).load(Ordering::Relaxed) as *const Task;
         if t == b {
             // Last element: race thieves for it via `top`.
+            // relaxed: CAS failure means a thief won; we take no action
+            // that depends on the failed value.
             let won = self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+            // relaxed: owner-only restore of `bottom`.
             self.bottom.store(b + 1, Ordering::Relaxed);
             if !won {
                 // The winning thief owns the refcount at this index.
@@ -201,7 +218,10 @@ impl Deque {
         if t >= b {
             return Steal::Empty;
         }
+        // relaxed: the SeqCst CAS below is the real claim; a stale read
+        // here is discarded unconsumed on CAS failure.
         let raw = self.slot(t).load(Ordering::Relaxed) as *const Task;
+        // relaxed: failure ordering — the loser discards `raw` untouched.
         if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_err() {
             // Lost the race (to the owner's pop of a last element or another
             // thief). `raw` may be stale — discard it unconsumed.
@@ -224,6 +244,7 @@ impl Drop for Deque {
         let t = *self.top.get_mut();
         let b = *self.bottom.get_mut();
         for i in t..b {
+            // relaxed: `&mut self` — no concurrent access remains.
             let raw = self.slots[(i as usize) & (DEQUE_CAP - 1)].load(Ordering::Relaxed) as *const Task;
             // SAFETY: indices in top..bottom each still own one refcount.
             drop(unsafe { Arc::from_raw(raw) });
@@ -242,7 +263,9 @@ impl Drop for Deque {
 /// its last (failed) scan for work. See [`Shared::unpark_one`] for the
 /// lost-wakeup proof.
 struct Sleep {
-    lock: Mutex<()>,
+    /// Rank [`rank::POOL_PARKING`] — the maximum rank in the table:
+    /// parking is a leaf, nothing is ever acquired while it is held.
+    lock: OrderedMutex<(), { rank::POOL_PARKING }>,
     cv: Condvar,
     epoch: AtomicUsize,
     sleepers: AtomicUsize,
@@ -256,8 +279,11 @@ struct Shared {
     /// One deque per spawned worker (the external caller has none and uses
     /// the injector).
     deques: Box<[Deque]>,
-    /// External submissions and deque-overflow spill.
-    injector: Mutex<VecDeque<Arc<Task>>>,
+    /// External submissions and deque-overflow spill. Rank
+    /// [`rank::POOL_INJECTOR`]: jobs fork while holding coordinator locks,
+    /// so the injector sits above the whole coordinator band and below
+    /// only the parking lock.
+    injector: OrderedMutex<VecDeque<Arc<Task>>, { rank::POOL_INJECTOR }>,
     /// Mirror of `injector.len()`, maintained under the injector lock and
     /// read without it: lets the (very hot) empty-injector path of
     /// `find_task` skip the mutex entirely, so spinning workers/joiners
@@ -274,8 +300,9 @@ struct Shared {
 impl Shared {
     /// Append to the injector (external submission or deque-overflow spill).
     fn inject(&self, t: Arc<Task>) {
-        let mut q = self.injector.lock().unwrap();
+        let mut q = self.injector.lock();
         q.push_back(t);
+        // relaxed: approximate mirror; see the field's audit note.
         self.injector_len.store(q.len(), Ordering::Relaxed);
     }
 
@@ -287,9 +314,12 @@ impl Shared {
                 return Some(t);
             }
         }
+        // relaxed: approximate fast-path read — a racing push is found on
+        // the next scan, and the pusher's epoch bump prevents a parked miss.
         if self.injector_len.load(Ordering::Relaxed) > 0 {
-            let mut q = self.injector.lock().unwrap();
+            let mut q = self.injector.lock();
             let t = q.pop_front();
+            // relaxed: mirror maintained under the injector lock.
             self.injector_len.store(q.len(), Ordering::Relaxed);
             if let Some(t) = t {
                 return Some(t);
@@ -337,7 +367,7 @@ impl Shared {
     fn unpark_one(&self) {
         self.sleep.epoch.fetch_add(1, Ordering::SeqCst);
         if self.sleep.sleepers.load(Ordering::SeqCst) > 0 {
-            let _g = self.sleep.lock.lock().unwrap();
+            let _g = self.sleep.lock.lock();
             self.sleep.cv.notify_one();
         }
     }
@@ -345,7 +375,7 @@ impl Shared {
     /// Wake every parked worker (shutdown).
     fn wake_all(&self) {
         self.sleep.epoch.fetch_add(1, Ordering::SeqCst);
-        let _g = self.sleep.lock.lock().unwrap();
+        let _g = self.sleep.lock.lock();
         self.sleep.cv.notify_all();
     }
 }
@@ -398,9 +428,9 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
         // Park. Order matters: advertise sleeper intent, then re-check the
         // epoch under the lock (see unpark_one).
         shared.sleep.sleepers.fetch_add(1, Ordering::SeqCst);
-        let guard = shared.sleep.lock.lock().unwrap();
+        let guard = shared.sleep.lock.lock();
         if shared.sleep.epoch.load(Ordering::SeqCst) == epoch && !shared.shutdown.load(Ordering::Acquire) {
-            drop(shared.sleep.cv.wait(guard).unwrap());
+            drop(guard.wait(&shared.sleep.cv));
         } else {
             drop(guard);
         }
@@ -418,6 +448,15 @@ pub struct Pool {
     handles: Vec<thread::JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.shared.threads)
+            .field("workers", &self.handles.len())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Worker stack size: the kd-tree/pskd builds and deep help-first chains
 /// recurse; match the default main-thread stack instead of the 2 MiB thread
 /// default.
@@ -432,10 +471,10 @@ impl Pool {
         let nworkers = threads - 1;
         let shared = Arc::new(Shared {
             deques: (0..nworkers).map(|_| Deque::new()).collect::<Vec<_>>().into_boxed_slice(),
-            injector: Mutex::new(VecDeque::new()),
+            injector: OrderedMutex::new(VecDeque::new()),
             injector_len: AtomicUsize::new(0),
             sleep: Sleep {
-                lock: Mutex::new(()),
+                lock: OrderedMutex::new(()),
                 cv: Condvar::new(),
                 epoch: AtomicUsize::new(0),
                 sleepers: AtomicUsize::new(0),
@@ -450,6 +489,8 @@ impl Pool {
                     .name(format!("parlay-{i}"))
                     .stack_size(WORKER_STACK)
                     .spawn(move || worker_loop(&sh, i))
+                    // lint: allow(panic-surface) — thread spawn failing at
+                    // pool construction is unrecoverable resource exhaustion.
                     .expect("spawn worker")
             })
             .collect();
@@ -541,6 +582,9 @@ impl Pool {
         // Raw pointer (not a borrow) so `rb` stays movable after the task
         // finishes; Send-wrapped for the closure.
         struct SendPtr<T>(*mut T);
+        // SAFETY: the pointer targets `rb` on the joiner's stack, which
+        // outlives the task (`join` does not return until the task is
+        // done), and exactly one thread — the task's runner — writes it.
         unsafe impl<T> Send for SendPtr<T> {}
         let rb_ptr = SendPtr(&mut rb as *mut Option<std::thread::Result<RB>>);
         let bf: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
@@ -592,6 +636,9 @@ impl Pool {
             }
         }
         debug_assert!(task.is_done());
+        // lint: allow(panic-surface) — `b` runs under catch_unwind and
+        // always stores a result before DONE; reaching here without one is
+        // a scheduler bug worth dying loudly on.
         let rb = rb.expect("join: task b did not produce a result");
         match (ra, rb) {
             (Ok(ra), Ok(rb)) => (ra, rb),
@@ -651,11 +698,14 @@ impl Drop for Pool {
 // Global pool management
 // ---------------------------------------------------------------------------
 
-static GLOBAL: OnceLock<RwLock<Arc<Pool>>> = OnceLock::new();
+/// Rank [`rank::POOL_REGISTRY`]: read on every `ops` entry point (under
+/// whatever coordinator locks the caller already holds), written only by
+/// [`set_threads`] — and never held across worker shutdown.
+static GLOBAL: OnceLock<OrderedRwLock<Arc<Pool>, { rank::POOL_REGISTRY }>> = OnceLock::new();
 static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-fn global_cell() -> &'static RwLock<Arc<Pool>> {
-    GLOBAL.get_or_init(|| RwLock::new(Arc::new(Pool::new(default_threads()))))
+fn global_cell() -> &'static OrderedRwLock<Arc<Pool>, { rank::POOL_REGISTRY }> {
+    GLOBAL.get_or_init(|| OrderedRwLock::new(Arc::new(Pool::new(default_threads()))))
 }
 
 /// The thread-count environment override, if set: `PALLAS_THREADS` (the
@@ -676,6 +726,8 @@ pub fn env_threads() -> Option<usize> {
 }
 
 fn default_threads() -> usize {
+    // relaxed: plain configuration cell; the pool swap that accompanies a
+    // change synchronizes through the registry rwlock.
     let ov = OVERRIDE_THREADS.load(Ordering::Relaxed);
     if ov > 0 {
         return ov;
@@ -688,7 +740,7 @@ fn default_threads() -> usize {
 
 /// The global pool used by all `parlay::ops` entry points.
 pub fn global() -> Arc<Pool> {
-    Arc::clone(&global_cell().read().unwrap())
+    Arc::clone(&global_cell().read())
 }
 
 /// Resize the global pool to `t` threads. Safe at any time, including while
@@ -697,8 +749,9 @@ pub fn global() -> Arc<Pool> {
 /// when its last reference drops. A no-op if the size already matches.
 pub fn set_threads(t: usize) {
     let t = t.max(1);
+    // relaxed: see `default_threads` — the registry rwlock is the sync edge.
     OVERRIDE_THREADS.store(t, Ordering::Relaxed);
-    if global_cell().read().unwrap().threads() == t {
+    if global_cell().read().threads() == t {
         return;
     }
     // Spawn the replacement pool BEFORE taking the write lock — thread
@@ -706,7 +759,7 @@ pub fn set_threads(t: usize) {
     // `global()` reader — then swap under the lock, re-checking the size in
     // case a racing resize won.
     let fresh = Arc::new(Pool::new(t));
-    let mut g = global_cell().write().unwrap();
+    let mut g = global_cell().write();
     if g.threads() == t {
         drop(g);
         return; // raced: discard `fresh` (its workers shut down on drop)
@@ -730,12 +783,13 @@ pub fn num_threads() -> usize {
 /// `.lock().unwrap_or_else(|e| e.into_inner())` so a panicking test does not
 /// poison the rest.
 #[cfg(test)]
-pub(crate) static TEST_POOL_LOCK: Mutex<()> = Mutex::new(());
+pub(crate) static TEST_POOL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
 
     /// Sizes shrink under miri (it interprets every instruction).
     const fn sz(real: usize, miri: usize) -> usize {

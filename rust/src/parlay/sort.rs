@@ -52,8 +52,13 @@ where
     let mut src_is_items = true;
     while width < n {
         let (src, dst): (&[T], &mut [T]) = if src_is_items {
+            // SAFETY: this round reads `items` and writes only `buf`; the
+            // raw re-borrow just expresses that disjointness to the borrow
+            // checker.
             (unsafe { std::slice::from_raw_parts(items.as_ptr(), n) }, &mut buf[..])
         } else {
+            // SAFETY: mirror of the arm above — reads `buf`, writes only
+            // `items`.
             (unsafe { std::slice::from_raw_parts(buf.as_ptr(), n) }, &mut items[..])
         };
         let dst_ptr = dst.as_mut_ptr() as usize;

@@ -46,6 +46,8 @@ where
         let mut rng = SplitMix64::new(case_seed);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
+            // lint: allow(panic-surface) — test harness: panicking with the
+            // seed and input is exactly how a property failure reports.
             panic!(
                 "property '{name}' FAILED at case {case}/{} (seed {case_seed:#x}):\n  {msg}\n  input: {input:?}",
                 cfg.cases

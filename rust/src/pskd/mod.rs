@@ -76,6 +76,14 @@ pub struct PriorityKdTree<S: Scalar = f64> {
     root: u32,
 }
 
+impl<S: Scalar> std::fmt::Debug for PriorityKdTree<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PriorityKdTree")
+            .field("points", &self.node_point.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl<S: Scalar> PriorityKdTree<S> {
     /// BUILD-PRIORITY-SEARCH-KD-TREE(P, γ).
     pub fn build(pts: &PointStore<S>, gamma: &[u64]) -> Self {
@@ -282,6 +290,10 @@ struct PskdBuilder<'a, S: Scalar> {
     pool: std::sync::Arc<parlay::Pool>,
 }
 
+// SAFETY: the raw base pointers are shared across build tasks, but the
+// subtree at `slot` writes only slots `[slot, slot + m)` and the tail
+// blocks derived from them — disjoint ranges across concurrent tasks — so
+// shared `&PskdBuilder` access never races.
 unsafe impl<S: Scalar> Sync for PskdBuilder<'_, S> {}
 
 impl<S: Scalar> PskdBuilder<'_, S> {
@@ -296,6 +308,8 @@ impl<S: Scalar> PskdBuilder<'_, S> {
         let d = self.d;
         // Cell = bbox over ALL points of the subtree (incl. the hoisted max).
         let bb = self.compute_bbox(ids);
+        // SAFETY: `slot` is this task's exclusively owned node index (see
+        // the Sync impl above), inside arenas sized for the whole tree.
         unsafe {
             let bptr = (self.bounds as *mut S).add(slot * 2 * d);
             for k in 0..d {
@@ -313,6 +327,8 @@ impl<S: Scalar> PskdBuilder<'_, S> {
         }
         ids.swap(0, max_i);
         let p = ids[0];
+        // SAFETY: same exclusive ownership of `slot`; the coordinate copy
+        // targets this node's `d`-scalar row only.
         unsafe {
             *(self.node_point as *mut u32).add(slot) = p;
             *(self.node_gamma as *mut u64).add(slot) = self.gamma[p as usize];
@@ -323,6 +339,7 @@ impl<S: Scalar> PskdBuilder<'_, S> {
         let rest = &mut ids[1..];
         let r = rest.len();
         if r == 0 {
+            // SAFETY: same exclusive ownership of `slot`.
             unsafe {
                 *(self.left as *mut u32).add(slot) = NONE;
                 *(self.right as *mut u32).add(slot) = NONE;
@@ -340,6 +357,8 @@ impl<S: Scalar> PskdBuilder<'_, S> {
             rest.select_nth_unstable_by(mid, |&a, &b| {
                 pts.coord(a as usize, dim)
                     .partial_cmp(&pts.coord(b as usize, dim))
+                    // lint: allow(panic-surface) — coordinates are validated
+                    // finite at ingest, so partial_cmp cannot see a NaN.
                     .unwrap()
                     .then(a.cmp(&b))
             });
@@ -347,6 +366,7 @@ impl<S: Scalar> PskdBuilder<'_, S> {
         let (lids, rids) = rest.split_at_mut(mid);
         let lslot = slot + 1;
         let rslot = slot + 1 + mid;
+        // SAFETY: same exclusive ownership of `slot`.
         unsafe {
             *(self.left as *mut u32).add(slot) = if lids.is_empty() { NONE } else { lslot as u32 };
             *(self.right as *mut u32).add(slot) = if rids.is_empty() { NONE } else { rslot as u32 };
@@ -385,15 +405,20 @@ impl<S: Scalar> PskdBuilder<'_, S> {
     /// disjoint and the write is raceless.
     unsafe fn finish_tail(&self, slot: usize, m: usize) {
         debug_assert!((1..=BLOCK_LANES).contains(&m));
-        *(self.tail_len as *mut u8).add(slot) = m as u8;
-        let d = self.d;
-        let nc = self.node_coords as *const S;
-        let block = (self.tails as *mut S).add((slot / BLOCK_MIN) * BLOCK_LANES * d);
-        for k in 0..d {
-            let row = block.add(k * BLOCK_LANES);
-            for l in 0..BLOCK_LANES {
-                let v = if l < m { *nc.add((slot + l) * d + k) } else { S::INFINITY };
-                row.add(l).write(v);
+        // SAFETY: the caller contract gives this task slots
+        // [slot, slot + m) and the tail block slot / BLOCK_MIN; every
+        // pointer below stays inside those exclusively owned ranges.
+        unsafe {
+            *(self.tail_len as *mut u8).add(slot) = m as u8;
+            let d = self.d;
+            let nc = self.node_coords as *const S;
+            let block = (self.tails as *mut S).add((slot / BLOCK_MIN) * BLOCK_LANES * d);
+            for k in 0..d {
+                let row = block.add(k * BLOCK_LANES);
+                for l in 0..BLOCK_LANES {
+                    let v = if l < m { *nc.add((slot + l) * d + k) } else { S::INFINITY };
+                    row.add(l).write(v);
+                }
             }
         }
     }

@@ -133,6 +133,15 @@ mod pjrt {
         inner: Mutex<Inner>,
     }
 
+    impl std::fmt::Debug for XlaDpcEngine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("XlaDpcEngine")
+                .field("dir", &self.dir)
+                .field("manifest", &self.manifest)
+                .finish_non_exhaustive()
+        }
+    }
+
     struct Inner {
         client: xla::PjRtClient,
         cache: BTreeMap<usize, xla::PjRtLoadedExecutable>,
@@ -183,6 +192,8 @@ mod pjrt {
                 let exe = inner.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
                 inner.cache.insert(n_pad, exe);
             }
+            // lint: allow(panic-surface) — inserted just above under the
+            // same lock guard; the key cannot disappear in between.
             let exe = inner.cache.get(&n_pad).expect("just inserted");
 
             let points_lit = xla::Literal::vec1(&padded)
@@ -219,6 +230,7 @@ pub use pjrt::XlaDpcEngine;
 /// fails (after validating the manifest, so configuration errors still
 /// surface first), which the service layer reports and degrades from.
 #[cfg(not(feature = "xla"))]
+#[derive(Debug)]
 pub struct XlaDpcEngine {
     manifest: Manifest,
 }

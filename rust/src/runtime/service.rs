@@ -27,6 +27,12 @@ pub struct XlaService {
     capacity: usize,
 }
 
+impl std::fmt::Debug for XlaService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaService").field("capacity", &self.capacity).finish_non_exhaustive()
+    }
+}
+
 impl XlaService {
     /// Spawn the engine thread; fails if the artifacts/manifest cannot be
     /// loaded or the PJRT client cannot start.

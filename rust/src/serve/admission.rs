@@ -18,12 +18,16 @@
 //! deterministic under test and free of `Instant` syscalls on the hot
 //! path. Lock ordering: the registry lock is taken by the serve layer
 //! only, and the coordinator never takes it, so holding it across a
-//! `close_session` call (eviction) cannot deadlock.
+//! `close_session` call (eviction) cannot deadlock. That contract is
+//! machine-checked: the registry is an [`OrderedMutex`] at
+//! [`rank::SERVE_ADMISSION`], the lowest rank in the table, so debug
+//! builds abort if any coordinator path ever takes it while holding a
+//! coordinator lock.
 
 use std::collections::HashMap;
-use std::sync::{Mutex, MutexGuard};
 
 use crate::error::DpcError;
+use crate::sync::{rank, OrderedMutex, OrderedMutexGuard};
 
 /// What an admission handle points at (decides which close the evictor
 /// calls).
@@ -43,37 +47,39 @@ struct Handle {
     busy: u32,
 }
 
-#[derive(Default)]
+#[derive(Debug, Default)]
 struct Inner {
     handles: HashMap<u64, Handle>,
     clock: u64,
 }
 
 /// The shared handle registry. One per server, shared by every surface.
+#[derive(Debug)]
 pub struct Admission {
     max_per_tenant: usize,
     max_open: usize,
-    inner: Mutex<Inner>,
+    inner: OrderedMutex<Inner, { rank::SERVE_ADMISSION }>,
 }
 
 /// A locked view for the open path: quota check, eviction pick, and
 /// registration must be one atomic step or concurrent opens overshoot
 /// the caps.
+#[derive(Debug)]
 pub struct AdmissionGuard<'a> {
-    inner: MutexGuard<'a, Inner>,
+    inner: OrderedMutexGuard<'a, Inner, { rank::SERVE_ADMISSION }>,
     max_per_tenant: usize,
     max_open: usize,
 }
 
 impl Admission {
     pub fn new(max_per_tenant: usize, max_open: usize) -> Self {
-        Admission { max_per_tenant, max_open, inner: Mutex::new(Inner::default()) }
+        Admission { max_per_tenant, max_open, inner: OrderedMutex::new(Inner::default()) }
     }
 
     /// Lock the registry for an open (see [`AdmissionGuard`]).
     pub fn lock(&self) -> AdmissionGuard<'_> {
         AdmissionGuard {
-            inner: self.inner.lock().unwrap(),
+            inner: self.inner.lock(),
             max_per_tenant: self.max_per_tenant,
             max_open: self.max_open,
         }
@@ -81,7 +87,7 @@ impl Admission {
 
     /// Bump a handle's recency (any request that names it).
     pub fn touch(&self, id: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.clock += 1;
         let now = g.clock;
         if let Some(h) = g.handles.get_mut(&id) {
@@ -91,36 +97,36 @@ impl Admission {
 
     /// Mark a job in flight against `id` (shields it from eviction).
     pub fn begin_job(&self, id: u64) {
-        if let Some(h) = self.inner.lock().unwrap().handles.get_mut(&id) {
+        if let Some(h) = self.inner.lock().handles.get_mut(&id) {
             h.busy += 1;
         }
     }
 
     pub fn end_job(&self, id: u64) {
-        if let Some(h) = self.inner.lock().unwrap().handles.get_mut(&id) {
+        if let Some(h) = self.inner.lock().handles.get_mut(&id) {
             h.busy = h.busy.saturating_sub(1);
         }
     }
 
     /// Drop a handle after an explicit close.
     pub fn remove(&self, id: u64) {
-        self.inner.lock().unwrap().handles.remove(&id);
+        self.inner.lock().handles.remove(&id);
     }
 
     /// Open handles held by `tenant` (quota accounting).
     pub fn tenant_open(&self, tenant: &str) -> usize {
-        self.inner.lock().unwrap().handles.values().filter(|h| h.tenant == tenant).count()
+        self.inner.lock().handles.values().filter(|h| h.tenant == tenant).count()
     }
 
     pub fn open_handles(&self) -> usize {
-        self.inner.lock().unwrap().handles.len()
+        self.inner.lock().handles.len()
     }
 
     /// Seed the registry after durable recovery: recovered handles
     /// belong to no tenant (quotas bind new traffic, not history) but do
     /// count against the global cap and are immediately evictable.
     pub fn seed_recovered(&self, ids: impl IntoIterator<Item = (u64, HandleKind)>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         for (id, kind) in ids {
             g.handles.insert(id, Handle { tenant: String::new(), kind, last_used: 0, busy: 0 });
         }

@@ -23,6 +23,7 @@ use super::proto::{FullResult, Request, Response};
 
 /// Everything a serve surface needs: the coordinator plus the serve-side
 /// admission registry, seeded with whatever a durable recovery restored.
+#[derive(Debug)]
 pub struct ServeState {
     pub coord: Coordinator,
     pub admission: Admission,
@@ -45,7 +46,7 @@ impl ServeState {
 
 /// Per-connection context: the tenant id is connection state (set by
 /// `hello`), not per-request payload.
-#[derive(Default)]
+#[derive(Default, Debug)]
 pub struct ConnCtx {
     pub tenant: String,
 }

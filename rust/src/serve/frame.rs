@@ -55,6 +55,8 @@ impl std::fmt::Display for FrameError {
 /// responses) rules out long before.
 pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
     debug_assert!(payload.len() <= MAX_FRAME as usize, "frame over MAX_FRAME");
+    // bounds: encode path — the payload is locally built (never
+    // attacker-length), and MAX_FRAME caps it per the assert above.
     let mut out = Vec::with_capacity(HEADER + payload.len());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32(payload).to_le_bytes());
@@ -69,6 +71,15 @@ pub struct FrameBuf {
     /// Bytes already consumed from the front of `buf` (compacted lazily
     /// so each `feed` is amortized O(chunk)).
     start: usize,
+}
+
+impl std::fmt::Debug for FrameBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrameBuf")
+            .field("pending", &self.pending())
+            .field("start", &self.start)
+            .finish_non_exhaustive()
+    }
 }
 
 impl FrameBuf {
@@ -97,24 +108,31 @@ impl FrameBuf {
     /// `Ok(None)` = need more bytes; `Err` = the stream is corrupt and
     /// the connection must be dropped.
     pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        // bounds: `start <= buf.len()` is a struct invariant — it only
+        // advances by `total` after proving that many bytes are buffered.
         let avail = &self.buf[self.start..];
         if avail.len() < HEADER {
             return Ok(None);
         }
+        // bounds: the HEADER guard above proves at least 8 bytes remain.
         let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
         if len > MAX_FRAME {
             return Err(FrameError::Oversized { len });
         }
+        // bounds: same HEADER guard covers offsets 4..8.
         let want_crc = u32::from_le_bytes([avail[4], avail[5], avail[6], avail[7]]);
         let total = HEADER + len as usize;
         if avail.len() < total {
             return Ok(None);
         }
+        // bounds: the avail.len() < total return above proves the slice.
         let payload = &avail[HEADER..total];
         let got = crc32(payload);
         if got != want_crc {
             return Err(FrameError::CrcMismatch { want: want_crc, got });
         }
+        // bounds: len cleared the MAX_FRAME cap before we buffered this
+        // much, so the copy is at most MAX_FRAME bytes of checksummed data.
         let out = payload.to_vec();
         self.start += total;
         Ok(Some(out))

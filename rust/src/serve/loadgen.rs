@@ -28,6 +28,12 @@ pub struct Client {
     fb: FrameBuf,
 }
 
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client").field("peer", &self.sock.peer_addr().ok()).finish_non_exhaustive()
+    }
+}
+
 impl Client {
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         let sock = TcpStream::connect(addr)?;
@@ -236,12 +242,16 @@ pub fn run(opts: &LoadgenOpts) -> LoadgenReport {
             std::thread::Builder::new()
                 .name(format!("loadgen-{conn_id}"))
                 .spawn(move || run_conn(&opts, conn_id))
+                // lint: allow(panic-surface) — loadgen is a CLI harness;
+                // failing to spawn a thread is unrecoverable here.
                 .expect("spawn loadgen thread")
         })
         .collect();
     let mut all = Vec::new();
     let mut report = LoadgenReport::default();
     for h in handles {
+        // lint: allow(panic-surface) — propagating a worker panic out of
+        // the CLI harness is the intended failure mode.
         let stats = h.join().expect("loadgen thread panicked");
         report.busy += stats.busy;
         report.request_errors += stats.request_errors;

@@ -137,6 +137,8 @@ fn get_bool(cur: &mut Cursor<'_>) -> Result<bool, String> {
 fn put_algo(out: &mut Vec<u8>, algo: Option<DepAlgo>) {
     let tag = match algo {
         None => 0u8,
+        // lint: allow(panic-surface) — DepAlgo::ALL enumerates every
+        // variant by construction; position always finds a match.
         Some(a) => 1 + DepAlgo::ALL.iter().position(|x| *x == a).expect("algo in ALL") as u8,
     };
     out.push(tag);

@@ -37,6 +37,12 @@ pub struct ServerHandle {
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle").field("local_addr", &self.local_addr).finish_non_exhaustive()
+    }
+}
+
 impl ServerHandle {
     /// Signal shutdown and join the acceptor (connection threads drain
     /// on their next poll tick).
@@ -59,6 +65,8 @@ pub fn spawn(addr: &str, state: Arc<ServeState>) -> std::io::Result<ServerHandle
     let acceptor = std::thread::Builder::new()
         .name("serve-accept".into())
         .spawn(move || accept_loop(listener, state, stop2))
+        // lint: allow(panic-surface) — spawn failure at server startup has
+        // no useful recovery; surfacing it immediately is correct.
         .expect("spawn acceptor");
     Ok(ServerHandle { local_addr, stop, acceptor: Some(acceptor) })
 }
@@ -82,6 +90,9 @@ fn accept_loop(listener: TcpListener, state: Arc<ServeState>, stop: Arc<AtomicBo
                                 let _ = e;
                             }
                         })
+                        // lint: allow(panic-surface) — thread-spawn failure
+                        // means resource exhaustion; dying loudly beats
+                        // silently dropping the accepted connection.
                         .expect("spawn connection thread"),
                 );
                 // Reap finished connection threads so a long-lived server

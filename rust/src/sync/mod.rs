@@ -1,0 +1,69 @@
+//! Rank-ordered synchronization primitives (DESIGN.md §Static analysis).
+//!
+//! The coordinator/durability/serve stack holds several locks at once on
+//! its hot paths (the write-ahead journal across ticket issuance, the
+//! admission registry across coordinator opens, …). The global acyclicity
+//! of that lock graph used to live only in comments; [`ordered`] turns it
+//! into a machine-checked invariant: every shared lock is an
+//! [`ordered::OrderedMutex`] carrying a compile-time rank from [`rank`],
+//! and debug builds keep a per-thread stack of held ranks, asserting that
+//! every acquisition's rank strictly exceeds every rank already held.
+//! A future ordering violation therefore aborts deterministically at the
+//! offending `lock()` in any debug/test run instead of deadlocking under
+//! production load. Release builds compile the bookkeeping out entirely.
+
+pub mod ordered;
+
+pub use ordered::{OrderedMutex, OrderedMutexGuard, OrderedRwLock};
+
+/// The global lock-rank table. One rank per lock *role*; a thread may only
+/// acquire strictly increasing ranks. Gaps are deliberate — new locks slot
+/// in without renumbering. The documented nesting paths each rank must
+/// support are listed in DESIGN.md §Static analysis; the load-bearing
+/// chains are:
+///
+/// - serve open: `SERVE_ADMISSION` → coordinator locks (eviction and open
+///   run under the admission guard);
+/// - durable ingest: `JOURNAL` → `STREAM_TICKETS` → `JOB_STATUS`/`JOB_QUEUE`
+///   (WAL order == ticket order == queue order);
+/// - checkpoint: `JOURNAL` → `STREAM_REGISTRY` → `STREAM_TICKETS` (wait) →
+///   `STREAM_STATE` → `SESSION_REGISTRY`;
+/// - compute: `STREAM_STATE` → pool locks (ingest repair runs parallel ops
+///   while holding the stream).
+pub mod rank {
+    /// Serve-side admission registry ([`crate::serve`]): held across
+    /// coordinator opens/closes (LRU eviction), so it ranks below every
+    /// coordinator lock.
+    pub const SERVE_ADMISSION: u16 = 100;
+    /// The write-ahead journal — outermost coordinator state lock
+    /// (DESIGN.md §Durability): journal order must equal application
+    /// order, so it is taken before any ticket or registry lock.
+    pub const JOURNAL: u16 = 200;
+    /// Coordinator stream map (`Shared::streams`).
+    pub const STREAM_REGISTRY: u16 = 300;
+    /// Coordinator session map (`Shared::sessions`).
+    pub const SESSION_REGISTRY: u16 = 310;
+    /// Per-stream FIFO ingest tickets (taken after the journal on the
+    /// submit path, and after the stream registry during checkpoint).
+    pub const STREAM_TICKETS: u16 = 400;
+    /// Per-stream [`crate::dpc::StreamingSession`] state — held across the
+    /// whole ingest compute, which runs pool ops underneath.
+    pub const STREAM_STATE: u16 = 500;
+    /// Job status map (`Shared::status`).
+    pub const JOB_STATUS: u16 = 600;
+    /// Job queue (`Shared::queue`).
+    pub const JOB_QUEUE: u16 = 610;
+    /// The XLA engine's output memo ([`crate::coordinator::XlaEngine`]).
+    pub const ENGINE_MEMO: u16 = 700;
+    /// Metrics registry maps — leaf-adjacent: metrics are bumped while
+    /// holding nearly anything above.
+    pub const METRICS: u16 = 800;
+    /// The global pool cell (`parlay::pool::GLOBAL`): read by every
+    /// parallel op entry point, including under `STREAM_STATE`.
+    pub const POOL_REGISTRY: u16 = 890;
+    /// The pool's external-submission injector queue.
+    pub const POOL_INJECTOR: u16 = 900;
+    /// The pool's eventcount parking lock — a true leaf (nothing is ever
+    /// acquired under it).
+    pub const POOL_PARKING: u16 = 910;
+}

@@ -1,0 +1,388 @@
+//! [`OrderedMutex`]/[`OrderedRwLock`]: `std::sync` wrappers that enforce
+//! the global lock-rank table ([`super::rank`]) at runtime in debug builds.
+//!
+//! Each lock carries its rank as a const generic. A thread-local stack
+//! records the ranks currently held by this thread; acquiring asserts the
+//! new rank strictly exceeds the largest held rank. Because every push
+//! exceeds the previous maximum, the stack is always sorted, so the check
+//! is O(1) against the top. Guards may be dropped in any order (release
+//! removes the matching rank wherever it sits), which keeps the
+//! early-`drop(journal)` patterns in the coordinator legal.
+//!
+//! Poisoning policy matches the rest of the crate: a poisoned lock is a
+//! fatal logic error (`lock` panics), exactly like the `.lock().unwrap()`
+//! idiom these wrappers replace. In release builds (`debug_assertions`
+//! off) the rank bookkeeping compiles to nothing and the wrappers are
+//! zero-cost newtypes over `Mutex`/`RwLock`.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(debug_assertions)]
+mod held {
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks of the ordered locks this thread currently holds, sorted
+        /// ascending (each acquisition must exceed the current maximum).
+        static HELD: RefCell<Vec<u16>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn acquire(rank: u16) {
+        HELD.with(|h| {
+            let mut s = h.borrow_mut();
+            if let Some(&top) = s.last() {
+                assert!(
+                    rank > top,
+                    "lock-order violation: acquiring rank {rank} while holding rank {top} \
+                     (held stack: {s:?}; see the rank table in sync::rank)",
+                );
+            }
+            s.push(rank);
+        });
+    }
+
+    pub fn release(rank: u16) {
+        HELD.with(|h| {
+            let mut s = h.borrow_mut();
+            if let Some(i) = s.iter().rposition(|&r| r == rank) {
+                s.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod held {
+    #[inline(always)]
+    pub fn acquire(_rank: u16) {}
+    #[inline(always)]
+    pub fn release(_rank: u16) {}
+}
+
+/// A `Mutex` with a compile-time lock rank (see module docs).
+pub struct OrderedMutex<T, const RANK: u16> {
+    inner: Mutex<T>,
+}
+
+impl<T, const RANK: u16> OrderedMutex<T, RANK> {
+    pub const fn new(value: T) -> Self {
+        OrderedMutex { inner: Mutex::new(value) }
+    }
+
+    /// Acquire. Debug builds assert `RANK` exceeds every rank this thread
+    /// already holds; a violation panics at the acquisition site with the
+    /// full held stack.
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T, RANK> {
+        held::acquire(RANK);
+        match self.inner.lock() {
+            Ok(g) => OrderedMutexGuard { inner: Some(g) },
+            Err(poisoned) => {
+                held::release(RANK);
+                // lint: allow(panic-surface) — poisoning is fatal by policy,
+                // matching the `.lock().unwrap()` idiom this wrapper replaces.
+                panic!("ordered lock (rank {RANK}) poisoned: {poisoned}");
+            }
+        }
+    }
+
+    /// Consume the lock, returning its value (poison is discarded — by the
+    /// time a lock can be consumed no other holder exists).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl<T: Default, const RANK: u16> Default for OrderedMutex<T, RANK> {
+    fn default() -> Self {
+        OrderedMutex::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug, const RANK: u16> fmt::Debug for OrderedMutex<T, RANK> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex").field("rank", &RANK).field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard for [`OrderedMutex`]. The inner `Option` exists only so
+/// [`OrderedMutexGuard::wait`] can hand the std guard to a `Condvar` by
+/// value; it is `Some` for the guard's entire observable lifetime.
+pub struct OrderedMutexGuard<'a, T, const RANK: u16> {
+    inner: Option<MutexGuard<'a, T>>,
+}
+
+impl<T, const RANK: u16> OrderedMutexGuard<'_, T, RANK> {
+    /// Block on `cv`, releasing the mutex (and this thread's claim to
+    /// `RANK`) while parked, reacquiring both on wake. Consumes and
+    /// returns the guard, mirroring `Condvar::wait`'s guard-in/guard-out
+    /// shape so the standard `while !cond { g = g.wait(&cv) }` loop works.
+    pub fn wait(mut self, cv: &Condvar) -> Self {
+        let std_guard = match self.inner.take() {
+            Some(g) => g,
+            // lint: allow(panic-surface) — unreachable by construction:
+            // `inner` is None only transiently inside this method.
+            None => unreachable!("ordered guard without inner std guard"),
+        };
+        held::release(RANK);
+        // The wait itself re-blocks on the mutex before returning, which
+        // re-establishes this thread's claim to the rank.
+        let woke = cv.wait(std_guard);
+        held::acquire(RANK);
+        match woke {
+            Ok(g) => {
+                self.inner = Some(g);
+                self
+            }
+            Err(poisoned) => {
+                held::release(RANK);
+                // lint: allow(panic-surface) — same fatal-poison policy as
+                // `lock` (the pre-OrderedMutex code was `.wait(g).unwrap()`).
+                panic!("ordered lock (rank {RANK}) poisoned during wait: {poisoned}");
+            }
+        }
+    }
+}
+
+impl<T, const RANK: u16> Deref for OrderedMutexGuard<'_, T, RANK> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            Some(g) => g,
+            // lint: allow(panic-surface) — unreachable: `inner` is Some
+            // whenever the guard is observable (see the struct docs).
+            None => unreachable!("ordered guard without inner std guard"),
+        }
+    }
+}
+
+impl<T, const RANK: u16> DerefMut for OrderedMutexGuard<'_, T, RANK> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            Some(g) => g,
+            // lint: allow(panic-surface) — unreachable: `inner` is Some
+            // whenever the guard is observable (see the struct docs).
+            None => unreachable!("ordered guard without inner std guard"),
+        }
+    }
+}
+
+impl<T, const RANK: u16> Drop for OrderedMutexGuard<'_, T, RANK> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            held::release(RANK);
+        }
+    }
+}
+
+impl<T: fmt::Debug, const RANK: u16> fmt::Debug for OrderedMutexGuard<'_, T, RANK> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+/// An `RwLock` with a compile-time lock rank. Both read and write
+/// acquisitions claim the rank: two readers never conflict with each
+/// other, but a read held while acquiring a lower-ranked lock is exactly
+/// the kind of latent writer-deadlock the table exists to rule out.
+pub struct OrderedRwLock<T, const RANK: u16> {
+    inner: RwLock<T>,
+}
+
+impl<T, const RANK: u16> OrderedRwLock<T, RANK> {
+    pub const fn new(value: T) -> Self {
+        OrderedRwLock { inner: RwLock::new(value) }
+    }
+
+    pub fn read(&self) -> OrderedReadGuard<'_, T, RANK> {
+        held::acquire(RANK);
+        match self.inner.read() {
+            Ok(g) => OrderedReadGuard { inner: g },
+            Err(poisoned) => {
+                held::release(RANK);
+                // lint: allow(panic-surface) — fatal-poison policy (see
+                // OrderedMutex::lock).
+                panic!("ordered rwlock (rank {RANK}) poisoned: {poisoned}");
+            }
+        }
+    }
+
+    pub fn write(&self) -> OrderedWriteGuard<'_, T, RANK> {
+        held::acquire(RANK);
+        match self.inner.write() {
+            Ok(g) => OrderedWriteGuard { inner: g },
+            Err(poisoned) => {
+                held::release(RANK);
+                // lint: allow(panic-surface) — fatal-poison policy (see
+                // OrderedMutex::lock).
+                panic!("ordered rwlock (rank {RANK}) poisoned: {poisoned}");
+            }
+        }
+    }
+}
+
+impl<T: fmt::Debug, const RANK: u16> fmt::Debug for OrderedRwLock<T, RANK> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedRwLock").field("rank", &RANK).field("inner", &self.inner).finish()
+    }
+}
+
+/// Read guard for [`OrderedRwLock`].
+#[derive(Debug)]
+pub struct OrderedReadGuard<'a, T, const RANK: u16> {
+    inner: RwLockReadGuard<'a, T>,
+}
+
+impl<T, const RANK: u16> Deref for OrderedReadGuard<'_, T, RANK> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T, const RANK: u16> Drop for OrderedReadGuard<'_, T, RANK> {
+    fn drop(&mut self) {
+        held::release(RANK);
+    }
+}
+
+/// Write guard for [`OrderedRwLock`].
+#[derive(Debug)]
+pub struct OrderedWriteGuard<'a, T, const RANK: u16> {
+    inner: RwLockWriteGuard<'a, T>,
+}
+
+impl<T, const RANK: u16> Deref for OrderedWriteGuard<'_, T, RANK> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T, const RANK: u16> DerefMut for OrderedWriteGuard<'_, T, RANK> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T, const RANK: u16> Drop for OrderedWriteGuard<'_, T, RANK> {
+    fn drop(&mut self) {
+        held::release(RANK);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ascending_acquisition_is_fine() {
+        let a: OrderedMutex<u32, 100> = OrderedMutex::new(1);
+        let b: OrderedMutex<u32, 200> = OrderedMutex::new(2);
+        let c: OrderedMutex<u32, 300> = OrderedMutex::new(3);
+        let ga = a.lock();
+        let gb = b.lock();
+        let gc = c.lock();
+        assert_eq!(*ga + *gb + *gc, 6);
+    }
+
+    #[test]
+    fn out_of_order_drop_keeps_stack_consistent() {
+        let a: OrderedMutex<(), 100> = OrderedMutex::new(());
+        let b: OrderedMutex<(), 200> = OrderedMutex::new(());
+        let c: OrderedMutex<(), 300> = OrderedMutex::new(());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga); // release the LOWER rank first (journal-style early drop)
+        let gc = c.lock(); // still legal: 300 > 200
+        drop(gb);
+        drop(gc);
+        // And the stack is genuinely empty again.
+        let _ = a.lock();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "rank checks compile out in release")]
+    fn descending_acquisition_panics() {
+        let hi: Arc<OrderedMutex<(), 300>> = Arc::new(OrderedMutex::new(()));
+        let lo: Arc<OrderedMutex<(), 100>> = Arc::new(OrderedMutex::new(()));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = hi.lock();
+            let _bad = lo.lock();
+        }));
+        assert!(r.is_err(), "rank 100 under rank 300 must abort");
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "rank checks compile out in release")]
+    fn same_rank_reacquisition_panics() {
+        let a: OrderedMutex<(), 100> = OrderedMutex::new(());
+        let b: OrderedMutex<(), 100> = OrderedMutex::new(());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = a.lock();
+            let _bad = b.lock();
+        }));
+        assert!(r.is_err(), "two rank-100 locks held together must abort");
+    }
+
+    #[test]
+    fn ranks_are_per_thread() {
+        let hi: Arc<OrderedMutex<u32, 300>> = Arc::new(OrderedMutex::new(7));
+        let lo: Arc<OrderedMutex<u32, 100>> = Arc::new(OrderedMutex::new(5));
+        let _g = hi.lock();
+        // Another thread's stack is empty; it may take the low rank.
+        let lo2 = Arc::clone(&lo);
+        let v = std::thread::spawn(move || *lo2.lock()).join().unwrap();
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn condvar_wait_releases_and_reclaims_rank() {
+        let pair = Arc::new((OrderedMutex::<bool, 400>::new(false), Condvar::new()));
+        let lower: Arc<OrderedMutex<(), 200>> = Arc::new(OrderedMutex::new(()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while !*g {
+                g = g.wait(cv);
+            }
+            *g
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        {
+            let (m, cv) = &*pair;
+            // Holding a lower rank while signalling a higher-ranked lock is
+            // the checkpoint_now shape: journal (200) held, tickets (400)
+            // waited on elsewhere.
+            let _lo = lower.lock();
+            *m.lock() = true;
+            cv.notify_all();
+        }
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn rwlock_read_write_roundtrip() {
+        let l: OrderedRwLock<Vec<u32>, 890> = OrderedRwLock::new(vec![1, 2]);
+        assert_eq!(l.read().len(), 2);
+        l.write().push(3);
+        assert_eq!(*l.read(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn guard_wait_loop_with_lower_rank_held() {
+        // The submit_ingest shape: journal (200) held across a tickets
+        // (400) lock whose guard is dropped before the journal's.
+        let j: OrderedMutex<(), 200> = OrderedMutex::new(());
+        let t: OrderedMutex<u64, 400> = OrderedMutex::new(0);
+        let gj = j.lock();
+        let mut gt = t.lock();
+        *gt += 1;
+        drop(gt);
+        drop(gj);
+        assert_eq!(*t.lock(), 1);
+    }
+}

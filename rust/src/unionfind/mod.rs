@@ -19,6 +19,12 @@ pub struct ConcurrentUnionFind {
     weight: Vec<u32>,
 }
 
+impl std::fmt::Debug for ConcurrentUnionFind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConcurrentUnionFind").field("len", &self.parent.len()).finish_non_exhaustive()
+    }
+}
+
 impl ConcurrentUnionFind {
     pub fn new(n: usize) -> Self {
         assert!(n < u32::MAX as usize);
@@ -56,6 +62,8 @@ impl ConcurrentUnionFind {
             }
             // Path halving: benign race; any stale write still points to an
             // ancestor.
+            // relaxed: failure ordering only — on failure we reread through
+            // `find`'s Acquire loads, so no data is published via this CAS.
             let _ = self.parent[x as usize].compare_exchange_weak(p, gp, Ordering::AcqRel, Ordering::Relaxed);
             x = gp;
         }
@@ -74,6 +82,8 @@ impl ConcurrentUnionFind {
             // Link lower weight under higher (ties by id to stay acyclic).
             let (lo, hi) = if (self.weight[a as usize], a) < (self.weight[b as usize], b) { (a, b) } else { (b, a) };
             if self.parent[lo as usize]
+                // relaxed: failure ordering only — the retry loop re-runs
+                // `find`, whose Acquire loads re-establish the needed edges.
                 .compare_exchange(lo, hi, Ordering::AcqRel, Ordering::Relaxed)
                 .is_ok()
             {
@@ -111,6 +121,12 @@ impl ConcurrentUnionFind {
 pub struct SeqUnionFind {
     parent: Vec<u32>,
     rank: Vec<u8>,
+}
+
+impl std::fmt::Debug for SeqUnionFind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SeqUnionFind").field("len", &self.parent.len()).finish_non_exhaustive()
+    }
 }
 
 impl SeqUnionFind {

@@ -1,0 +1,120 @@
+//! pallas-lint fixture suite + self-scan.
+//!
+//! Each rule gets a violating fixture asserted to trip and an
+//! allowlisted/clean counterpart asserted quiet. Fixtures are scanned
+//! under *virtual* relpaths so the path-scoped rules (kernel FMA, wire
+//! safety) see the paths they key on. The final test pins the real
+//! `rust/src` tree at zero violations — the same bar the CI `pallas_lint`
+//! job enforces.
+
+use std::path::Path;
+
+use parcluster::lint::{scan_source, scan_tree, Rule};
+
+fn rules_hit(relpath: &str, src: &str) -> Vec<Rule> {
+    scan_source(relpath, src).into_iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn panic_surface_fixture_trips() {
+    let hits = rules_hit("dpc/fixture.rs", include_str!("lint_fixtures/panic_surface_bad.rs"));
+    assert_eq!(hits.len(), 3, "unwrap, expect, panic! should each trip: {hits:?}");
+    assert!(hits.iter().all(|r| *r == Rule::PanicSurface));
+}
+
+#[test]
+fn panic_surface_fixture_clean() {
+    let vs = scan_source("dpc/fixture.rs", include_str!("lint_fixtures/panic_surface_ok.rs"));
+    assert!(vs.is_empty(), "allow comment, poison-exempt lock, and test region should all pass: {vs:?}");
+}
+
+#[test]
+fn float_determinism_fixture_trips() {
+    let hits = rules_hit("geom/fixture.rs", include_str!("lint_fixtures/float_determinism_bad.rs"));
+    assert_eq!(hits, vec![Rule::FloatDeterminism]);
+}
+
+#[test]
+fn float_determinism_fixture_clean() {
+    let src = include_str!("lint_fixtures/float_determinism_ok.rs");
+    let vs = scan_source("geom/fixture.rs", src);
+    assert!(vs.is_empty(), "{vs:?}");
+    // The same FMA outside a kernel path is not the lint's business.
+    let vs = scan_source("serve/fixture.rs", include_str!("lint_fixtures/float_determinism_bad.rs"));
+    assert!(vs.is_empty(), "FMA outside geom/kdtree/pskd must not trip: {vs:?}");
+}
+
+#[test]
+fn relaxed_ordering_fixture_trips() {
+    let hits = rules_hit("parlay/fixture.rs", include_str!("lint_fixtures/relaxed_ordering_bad.rs"));
+    assert_eq!(hits, vec![Rule::RelaxedOrdering]);
+}
+
+#[test]
+fn relaxed_ordering_fixture_clean() {
+    let vs = scan_source("parlay/fixture.rs", include_str!("lint_fixtures/relaxed_ordering_ok.rs"));
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn wire_safety_fixture_trips() {
+    let hits = rules_hit("durability/wire.rs", include_str!("lint_fixtures/wire_safety_bad.rs"));
+    assert!(
+        hits.contains(&Rule::WireSafety),
+        "length-driven allocation before the bounds check must trip: {hits:?}"
+    );
+    assert!(
+        hits.contains(&Rule::PanicSurface),
+        "unaudited wire slice indexing must trip: {hits:?}"
+    );
+}
+
+#[test]
+fn wire_safety_fixture_clean() {
+    let vs = scan_source("durability/wire.rs", include_str!("lint_fixtures/wire_safety_ok.rs"));
+    assert!(vs.is_empty(), "{vs:?}");
+    // The same code outside a wire decode path is unconstrained.
+    let vs = scan_source("dpc/fixture.rs", include_str!("lint_fixtures/wire_safety_bad.rs"));
+    assert!(vs.is_empty(), "wire rules must stay scoped to decode paths: {vs:?}");
+}
+
+#[test]
+fn safety_comment_fixture_trips() {
+    let hits = rules_hit("parlay/fixture.rs", include_str!("lint_fixtures/safety_comment_bad.rs"));
+    assert_eq!(hits, vec![Rule::SafetyComment]);
+}
+
+#[test]
+fn safety_comment_fixture_clean() {
+    let vs = scan_source("parlay/fixture.rs", include_str!("lint_fixtures/safety_comment_ok.rs"));
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn allow_grammar_fixture_trips() {
+    let hits = rules_hit("dpc/fixture.rs", include_str!("lint_fixtures/allow_grammar_bad.rs"));
+    // A malformed allow is itself a violation AND fails to suppress the
+    // site it hangs over.
+    assert_eq!(hits.iter().filter(|r| **r == Rule::AllowGrammar).count(), 2, "{hits:?}");
+    assert_eq!(hits.iter().filter(|r| **r == Rule::PanicSurface).count(), 2, "{hits:?}");
+}
+
+#[test]
+fn allow_grammar_fixture_clean() {
+    let vs = scan_source("dpc/fixture.rs", include_str!("lint_fixtures/allow_grammar_ok.rs"));
+    assert!(vs.is_empty(), "both separator forms must parse: {vs:?}");
+}
+
+/// The bar CI holds `rust/src` to: zero violations, forever. A failure
+/// here reads exactly like the `pallas_lint` binary's output — fix the
+/// site or justify it with a suppression comment.
+#[test]
+fn self_scan_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let vs = scan_tree(&root).expect("rust/src is readable");
+    assert!(
+        vs.is_empty(),
+        "pallas-lint violations in rust/src:\n{}",
+        vs.iter().map(|v| format!("  {v}\n")).collect::<String>()
+    );
+}

@@ -1,0 +1,11 @@
+// Fixture: malformed suppressions — unknown rule name, and a missing
+// justification. Neither suppresses, and each is itself a violation.
+pub fn first(xs: &[u32]) -> u32 {
+    // lint: allow(no-such-rule) — unknown rule name.
+    *xs.first().unwrap()
+}
+
+pub fn second(xs: &[u32]) -> u32 {
+    // lint: allow(panic-surface)
+    *xs.first().unwrap()
+}

@@ -1,0 +1,10 @@
+// Fixture: well-formed suppressions — known rule, dash, justification.
+pub fn first(xs: &[u32]) -> u32 {
+    // lint: allow(panic-surface) — fixture: em-dash separator form.
+    *xs.first().unwrap()
+}
+
+pub fn second(xs: &[u32]) -> u32 {
+    // lint: allow(panic-surface) -- fixture: double-dash separator form.
+    *xs.first().unwrap()
+}

@@ -1,0 +1,9 @@
+// Fixture: FMA in a kernel path (scanned as geom/…) breaks the
+// bit-identical-results contract.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc = x.mul_add(*y, acc);
+    }
+    acc
+}

@@ -1,0 +1,14 @@
+// Fixture: plain mul+add keeps kernel arithmetic reproducible; an
+// explicitly justified FMA is also accepted.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+pub fn fused(a: f64, b: f64, c: f64) -> f64 {
+    // lint: allow(float-determinism) — fixture: off the exactness path.
+    a.mul_add(b, c)
+}

@@ -1,0 +1,12 @@
+// Fixture: production-path panics without suppression comments.
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn named(xs: &[u32]) -> u32 {
+    *xs.first().expect("non-empty")
+}
+
+pub fn boom() {
+    panic!("explicit panic in production code");
+}

@@ -1,0 +1,6 @@
+// Fixture: an unaudited Ordering::Relaxed.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    c.fetch_add(1, Ordering::Relaxed)
+}

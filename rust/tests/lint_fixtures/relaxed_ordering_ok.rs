@@ -1,0 +1,7 @@
+// Fixture: every Relaxed carries a `relaxed:` audit comment.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    // relaxed: standalone counter — no other memory is published through it.
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,4 @@
+// Fixture: an unsafe block with no SAFETY comment.
+pub fn head(xs: &[u32]) -> u32 {
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,16 @@
+// Fixture: unsafe sites carry SAFETY comments (or a `# Safety` doc
+// section for unsafe fns).
+pub fn head(xs: &[u32]) -> u32 {
+    assert!(!xs.is_empty());
+    // SAFETY: the assert above proves index 0 is in bounds.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+/// Reads one element without a bounds check.
+///
+/// # Safety
+/// `i` must be in bounds for `xs`.
+pub unsafe fn head_unchecked(xs: &[u32], i: usize) -> u32 {
+    // SAFETY: caller contract — `i < xs.len()`.
+    unsafe { *xs.get_unchecked(i) }
+}

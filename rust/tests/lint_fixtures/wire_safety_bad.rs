@@ -1,0 +1,8 @@
+// Fixture: decode path (scanned as durability/wire.rs) allocating from a
+// wire-supplied length before any bounds check, plus an unaudited index.
+pub fn decode(buf: &[u8]) -> Vec<u8> {
+    let len = buf[0] as usize;
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(&buf[1..1 + len]);
+    out
+}

@@ -1,0 +1,18 @@
+// Fixture: the same decode with bounds audits tying each allocation and
+// index to the length check that precedes it.
+pub fn decode(buf: &[u8]) -> Option<Vec<u8>> {
+    if buf.is_empty() {
+        return None;
+    }
+    // bounds: the is_empty guard above proves index 0 exists.
+    let len = buf[0] as usize;
+    if buf.len() < 1 + len {
+        return None;
+    }
+    // bounds: len is covered by the buf.len() check above, so the
+    // allocation never exceeds bytes actually received.
+    let mut out = Vec::with_capacity(len);
+    // bounds: same check covers the 1..1+len range.
+    out.extend_from_slice(&buf[1..1 + len]);
+    Some(out)
+}
