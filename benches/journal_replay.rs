@@ -4,29 +4,35 @@
 //!   cargo bench --bench journal_replay
 //!   PARBENCH_N=200000 cargo bench --bench journal_replay
 //!
-//! Three questions, one table each:
+//! Four questions, one table each:
 //!
 //! 1. **Append cost** — journaling an ingest batch under each fsync
-//!    policy (1 = per-append, 64 = group commit, 0 = never). The fsync-1
-//!    row is the durability ceiling: it bounds acknowledged-command
-//!    latency, and group commit should close most of the gap to fsync-0.
+//!    policy (1 = per-append, 64 = group commit, 0 = never), with and
+//!    without segment rotation. The fsync-1 row is the durability
+//!    ceiling: it bounds acknowledged-command latency, and group commit
+//!    should close most of the gap to fsync-0. Rotation adds one extra
+//!    fsync + create per segment boundary and should be noise.
 //! 2. **Replay throughput** — `recover` on a journal-only history vs the
 //!    live ingests that produced it. Replay runs the same deterministic
 //!    ingest path, so it should land near live speed (the journal adds
 //!    decode + no fsync).
-//! 3. **Checkpoint leverage** — snapshot size and write time, and the
-//!    recovery speedup of checkpoint+suffix over full replay.
+//! 3. **Checkpoint leverage** — snapshot size and write time for a full
+//!    image, an all-ref delta (unchanged forest), and a ~1%-growth delta
+//!    (EXPERIMENTS.md §Durability: the delta should scale with what
+//!    changed, not with the forest), plus the recovery speedup of
+//!    checkpoint+suffix over full replay.
 
 use parcluster::bench::{fmt_secs, time_median, Table};
 use parcluster::datasets::synthetic;
 use parcluster::dpc::{DensityModel, StreamingSession};
 use parcluster::durability::{
     checkpoint::{self, CheckpointData, DynStreamState},
-    journal::{JournalEntry, JOURNAL_FILE},
+    journal::{self, JournalEntry},
     recovery::recover,
 };
 use parcluster::geom::{DynPoints, PointSet};
 use std::path::PathBuf;
+use std::time::Instant;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("parcluster-bench-journal-{tag}-{}", std::process::id()));
@@ -47,6 +53,16 @@ fn batches(pts: &PointSet, count: usize) -> Vec<PointSet> {
     out
 }
 
+/// Total on-disk journal bytes across the segment chain.
+fn journal_bytes(dir: &PathBuf) -> u64 {
+    journal::list_segments(dir)
+        .unwrap_or_default()
+        .iter()
+        .filter_map(|(_, p)| std::fs::metadata(p).ok())
+        .map(|md| md.len())
+        .sum()
+}
+
 fn main() {
     let n: usize = std::env::var("PARBENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50_000);
     let trials: usize = std::env::var("PARBENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
@@ -54,15 +70,16 @@ fn main() {
     let pts = synthetic::simden(n, 2, 42);
     let all = batches(&pts, 10);
 
-    // 1. Append cost per fsync policy (journal only, no compute).
+    // 1. Append cost per fsync policy × rotation (journal only, no compute).
     println!("# Journal append cost on simden n={n}, 10 batches (median of {trials})");
-    let mut table = Table::new(&["fsync_every", "journal 10 batches", "per batch", "bytes"]);
-    for fsync_every in [1u64, 64, 0] {
-        let dir = tmpdir(&format!("append-{fsync_every}"));
+    let mut table = Table::new(&["fsync_every", "rotate", "journal 10 batches", "per batch", "bytes", "segments"]);
+    for (fsync_every, rotate_bytes) in [(1u64, 0u64), (1, 256 << 10), (64, 0), (0, 0)] {
+        let dir = tmpdir(&format!("append-{fsync_every}-{rotate_bytes}"));
         let mut bytes = 0u64;
+        let mut segments = 0usize;
         let secs = time_median(trials, || {
             let _ = std::fs::remove_dir_all(&dir);
-            let mut rec = recover(&dir, fsync_every).unwrap();
+            let mut rec = recover(&dir, fsync_every, rotate_bytes).unwrap();
             rec.writer
                 .append(&JournalEntry::OpenStream {
                     stream: 1,
@@ -83,13 +100,16 @@ fn main() {
                     .unwrap();
             }
             rec.writer.sync().unwrap();
-            bytes = rec.writer.len();
+            segments = rec.writer.seq() as usize;
+            bytes = journal_bytes(&dir);
         });
         table.row(vec![
             fsync_every.to_string(),
+            if rotate_bytes == 0 { "off".into() } else { format!("{} KiB", rotate_bytes >> 10) },
             fmt_secs(secs),
             fmt_secs(secs / all.len() as f64),
             bytes.to_string(),
+            segments.to_string(),
         ]);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -106,7 +126,7 @@ fn main() {
     });
     let dir = tmpdir("replay");
     {
-        let mut rec = recover(&dir, 0).unwrap();
+        let mut rec = recover(&dir, 0, 0).unwrap();
         rec.writer
             .append(&JournalEntry::OpenStream {
                 stream: 1,
@@ -129,35 +149,76 @@ fn main() {
         rec.writer.sync().unwrap();
     }
     let replay_s = time_median(trials, || {
-        let rec = recover(&dir, 0).unwrap();
+        let rec = recover(&dir, 0, 0).unwrap();
         std::hint::black_box(rec.streams.len());
     });
     let mut table = Table::new(&["path", "time", "points/s"]);
     table.row(vec!["live ingest".into(), fmt_secs(live_s), format!("{:.0}", n as f64 / live_s)]);
     table.row(vec!["full replay".into(), fmt_secs(replay_s), format!("{:.0}", n as f64 / replay_s)]);
 
-    // 3. Checkpoint: write cost, size, and the recovery it buys.
+    // 3. Checkpoint leverage: full image, all-ref delta, ~1%-growth delta.
     {
-        let mut rec = recover(&dir, 0).unwrap();
+        let mut rec = recover(&dir, 0, 0).unwrap();
         let (_, stream) = rec.streams.pop().expect("stream recovered");
-        let state = match stream {
+        let mut stream = stream;
+        let state = match &stream {
             parcluster::durability::DynStream::F64(s) => DynStreamState::F64(s.export_state()),
             parcluster::durability::DynStream::F32(s) => DynStreamState::F32(s.export_state()),
         };
         let data = CheckpointData { streams: vec![(1, state)], sessions: Vec::new() };
-        let ckpt_s = time_median(trials, || {
-            // Rewrites the checkpoint file each trial; the manifest flip
-            // keeps exactly one live.
-            std::hint::black_box(checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap());
-        });
-        let m = checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap();
-        let size = std::fs::metadata(dir.join(format!("checkpoint-{}.pclc", m.checkpoint_seq)))
+
+        // First write has no predecessor: a fully-inline image.
+        let t0 = Instant::now();
+        let m_full = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
+        let full_s = t0.elapsed().as_secs_f64();
+        let full_size = std::fs::metadata(dir.join(format!("checkpoint-{}.pclc", m_full.checkpoint_seq)))
             .map(|md| md.len())
             .unwrap_or(0);
-        table.row(vec!["checkpoint write".into(), fmt_secs(ckpt_s), format!("{size} bytes")]);
+        table.row(vec!["checkpoint full image".into(), fmt_secs(full_s), format!("{full_size} bytes")]);
+
+        // Unchanged forest: every level refs the predecessor.
+        let mut last_seq = m_full.checkpoint_seq;
+        let ident_s = time_median(trials, || {
+            let m = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
+            last_seq = m.checkpoint_seq;
+        });
+        let ident_size = std::fs::metadata(dir.join(format!("checkpoint-{last_seq}.pclc")))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        table.row(vec!["checkpoint delta (unchanged)".into(), fmt_secs(ident_s), format!("{ident_size} bytes")]);
+
+        // ~1% more points: only the rebuilt low levels write; the big
+        // levels ride along as refs to the previous file.
+        let grow = (n / 100).max(1);
+        let small = PointSet::new(pts.coords()[..grow * 2].to_vec(), 2);
+        rec.writer
+            .append(&JournalEntry::Ingest {
+                stream: 1,
+                rho_min: 0.0,
+                delta_min: f64::INFINITY,
+                batch: DynPoints::F64(small.clone()),
+            })
+            .unwrap();
+        stream.ingest(&DynPoints::F64(small)).unwrap();
+        let grown = match &stream {
+            parcluster::durability::DynStream::F64(s) => DynStreamState::F64(s.export_state()),
+            parcluster::durability::DynStream::F32(s) => DynStreamState::F32(s.export_state()),
+        };
+        let grown_data = CheckpointData { streams: vec![(1, grown)], sessions: Vec::new() };
+        let t0 = Instant::now();
+        let m_delta = checkpoint::write(&dir, &mut rec.writer, &grown_data, 2, 1).unwrap();
+        let delta_s = t0.elapsed().as_secs_f64();
+        let delta_size = std::fs::metadata(dir.join(format!("checkpoint-{}.pclc", m_delta.checkpoint_seq)))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        table.row(vec![
+            format!("checkpoint delta (+{grow} pts)"),
+            fmt_secs(delta_s),
+            format!("{delta_size} bytes ({:.1}% of full)", 100.0 * delta_size as f64 / full_size.max(1) as f64),
+        ]);
     }
     let ckpt_replay_s = time_median(trials, || {
-        let rec = recover(&dir, 0).unwrap();
+        let rec = recover(&dir, 0, 0).unwrap();
         assert!(rec.report.checkpoint_seq > 0);
         std::hint::black_box(rec.streams.len());
     });
@@ -168,7 +229,7 @@ fn main() {
     ]);
     table.print();
 
-    let jlen = std::fs::metadata(dir.join(JOURNAL_FILE)).map(|m| m.len()).unwrap_or(0);
+    let jlen = journal_bytes(&dir);
     println!("\njournal size: {jlen} bytes for {n} points in {} batches", all.len());
     println!(
         "checkpoint restore vs full replay: {:.1}x",

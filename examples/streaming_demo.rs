@@ -30,9 +30,13 @@ fn main() {
     let per = n.div_ceil(batches);
     let checkpoint_at = 6usize; // checkpoint after this many batches
 
+    // Rotate segments at 128 KiB so the demo journal spans a chain and the
+    // mid-stream checkpoint visibly GCs the segments below its horizon.
+    let rotate_bytes = 128u64 << 10;
+
     let dir = std::env::temp_dir().join(format!("parcluster-streaming-demo-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut rec = recover(&dir, 1).expect("init durable dir");
+    let mut rec = recover(&dir, 1, rotate_bytes).expect("init durable dir");
     rec.writer
         .append(&JournalEntry::OpenStream {
             stream: 1,
@@ -68,8 +72,11 @@ fn main() {
                 streams: vec![(1, DynStreamState::F64(s.export_state()))],
                 sessions: Vec::new(),
             };
-            let m = checkpoint::write(&dir, &mut rec.writer, &data, 2).expect("checkpoint");
-            format!("checkpoint {} @ offset {}", m.checkpoint_seq, m.journal_offset)
+            let m = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).expect("checkpoint");
+            format!(
+                "checkpoint {} @ segment {} offset {}",
+                m.checkpoint_seq, m.journal_seq, m.journal_offset
+            )
         } else {
             "journaled".to_string()
         };
@@ -115,13 +122,15 @@ fn main() {
     println!("\n-- simulated crash (all in-memory state dropped) --");
 
     let t = std::time::Instant::now();
-    let recd = recover(&dir, 1).expect("recover");
+    let recd = recover(&dir, 1, rotate_bytes).expect("recover");
     let recover_s = t.elapsed().as_secs_f64();
     println!(
-        "recovered in {}: checkpoint {} + {} journal entries replayed ({} torn bytes truncated)",
+        "recovered in {}: checkpoint {} + {} journal entries replayed \
+         across {} segment(s) ({} torn bytes truncated)",
         fmt_secs(recover_s),
         recd.report.checkpoint_seq,
         recd.report.replayed,
+        recd.report.segments,
         recd.report.torn_bytes
     );
     let DynStream::F64(restored) = &recd.streams[0].1 else { panic!("f64 stream") };

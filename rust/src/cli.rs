@@ -124,6 +124,7 @@ COMMANDS:
              reporting per-batch latency (--verify re-checks exactness
              against a from-scratch run after every batch)
   serve      [--config FILE] [--workers N] [--durable DIR] [--fsync-every N]
+             [--journal-rotate-bytes N] [--checkpoint-retain N]
              [--listen HOST:PORT] [--max-inflight N] [--max-open-sessions N]
              [--max-sessions-per-tenant N]
              read requests from stdin, one per line (responses print in
@@ -133,13 +134,17 @@ COMMANDS:
              `open <dataset> <n> <d_cut> [density] [tag=T]`        open a cached session
              `recut <session> <rho_min> <delta_min> [full]`        linkage-only re-cut
              `close <session>`                                     drop a session's cache
-             `stream <dim> <d_cut> [density] [tag=T]`              open a streaming session
+             `stream <dim> <d_cut> [density] [f32|f64] [tag=T]`    open a streaming session
              `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`  batch + cut
              `closestream <stream>`                                drop a streaming session
              `checkpoint`                                          snapshot durable state now
              (--durable write-ahead-journals every command into DIR and
              restores streams/sessions from DIR on startup; --fsync-every
              sets group commit: 1 = every append (default), N = every N, 0 = never;
+             --journal-rotate-bytes seals a journal segment at N bytes
+             (default 64 MiB, 0 = never) so checkpoints can delete whole
+             segments below the replay horizon; --checkpoint-retain keeps
+             the last N checkpoints as delta bases (default 1, min 1);
              --listen also serves the same requests as a length-prefixed,
              CRC-framed binary protocol over TCP — the `loadgen` binary is
              the reference client; --max-inflight bounds jobs in flight
@@ -151,8 +156,10 @@ COMMANDS:
              concurrent mixed traffic and reports p50/p99 latency and
              throughput — see `loadgen --help`]
   journal    inspect --dir DIR    print the manifest, checkpoints, and every
-             journal frame (offset, LSN, kind) of a durable directory, plus
-             whether the tail is clean or torn — read-only
+             journal frame (segment, offset, LSN, kind) of a durable
+             directory's segment chain — including sealed segments below
+             the replay horizon that GC has not yet swept — plus whether
+             the final segment's tail is clean or torn — read-only
   help
 
 Algorithms (--algo): naive | exact-baseline | incomplete | priority | fenwick

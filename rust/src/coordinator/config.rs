@@ -13,6 +13,8 @@
 //! workers = 2
 //! durable_dir = /var/lib/dpc    # enable the write-ahead journal
 //! fsync_every = 1               # 1 = every append, N = group commit, 0 = never
+//! journal_rotate_bytes = 67108864  # segment rotation threshold, 0 = never
+//! checkpoint_retain = 1            # checkpoint roots kept by GC
 //! ```
 
 use std::collections::HashMap;
@@ -45,6 +47,15 @@ pub struct CoordinatorConfig {
     /// Journal fsync policy: 1 = fsync every append (default), N = group
     /// commit every N appends, 0 = never (the OS flushes).
     pub fsync_every: u64,
+    /// Journal segment rotation threshold in bytes: a segment that would
+    /// grow past this rolls over to `journal-<seq+1>.pclj`, and
+    /// checkpoints delete whole segments past the replay horizon. 0 =
+    /// never rotate (unbounded single segment, the pre-rotation
+    /// behaviour). Default 64 MiB.
+    pub journal_rotate_bytes: u64,
+    /// How many checkpoint *roots* GC keeps (each root pins the prior
+    /// checkpoints its delta levels reference). Minimum 1 (the newest).
+    pub checkpoint_retain: u64,
     /// TCP listen address for the binary serve front end (e.g.
     /// `127.0.0.1:7401`). `None` = stdin-only serve (the default).
     pub listen_addr: Option<String>,
@@ -73,6 +84,8 @@ impl Default for CoordinatorConfig {
             workers: 1,
             durable_dir: None,
             fsync_every: 1,
+            journal_rotate_bytes: 64 << 20,
+            checkpoint_retain: 1,
             listen_addr: None,
             max_inflight_jobs: 0,
             max_sessions_per_tenant: 0,
@@ -115,6 +128,12 @@ impl CoordinatorConfig {
                 "workers" => cfg.workers = v.parse::<usize>().context("workers")?.max(1),
                 "durable_dir" => cfg.durable_dir = Some(PathBuf::from(v)),
                 "fsync_every" => cfg.fsync_every = v.parse().context("fsync_every")?,
+                "journal_rotate_bytes" => {
+                    cfg.journal_rotate_bytes = v.parse().context("journal_rotate_bytes")?
+                }
+                "checkpoint_retain" => {
+                    cfg.checkpoint_retain = v.parse::<u64>().context("checkpoint_retain")?.max(1)
+                }
                 "listen_addr" => cfg.listen_addr = Some(v),
                 "max_inflight_jobs" => cfg.max_inflight_jobs = v.parse().context("max_inflight_jobs")?,
                 "max_sessions_per_tenant" => {
@@ -150,6 +169,13 @@ impl CoordinatorConfig {
         }
         if let Ok(v) = std::env::var("PARCLUSTER_FSYNC_EVERY") {
             self.fsync_every = v.parse().context("PARCLUSTER_FSYNC_EVERY")?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_JOURNAL_ROTATE_BYTES") {
+            self.journal_rotate_bytes = v.parse().context("PARCLUSTER_JOURNAL_ROTATE_BYTES")?;
+        }
+        if let Ok(v) = std::env::var("PARCLUSTER_CHECKPOINT_RETAIN") {
+            self.checkpoint_retain =
+                v.parse::<u64>().context("PARCLUSTER_CHECKPOINT_RETAIN")?.max(1);
         }
         if let Ok(v) = std::env::var("PARCLUSTER_LISTEN_ADDR") {
             self.listen_addr = Some(v);
@@ -192,7 +218,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let cfg = CoordinatorConfig::parse(
-            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\ndurable_dir = /tmp/dpc-wal\nfsync_every = 16\nlisten_addr = 127.0.0.1:7401\nmax_inflight_jobs = 64\nmax_sessions_per_tenant = 8\nmax_open_sessions = 128\n",
+            "threads = 4\nbackend = xla # inline comment\ndep_algo = fenwick\nxla_threshold = 999\nworkers = 3\ndurable_dir = /tmp/dpc-wal\nfsync_every = 16\njournal_rotate_bytes = 1048576\ncheckpoint_retain = 3\nlisten_addr = 127.0.0.1:7401\nmax_inflight_jobs = 64\nmax_sessions_per_tenant = 8\nmax_open_sessions = 128\n",
         )
         .unwrap();
         assert_eq!(cfg.threads, 4);
@@ -202,6 +228,8 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.durable_dir, Some(PathBuf::from("/tmp/dpc-wal")));
         assert_eq!(cfg.fsync_every, 16);
+        assert_eq!(cfg.journal_rotate_bytes, 1 << 20);
+        assert_eq!(cfg.checkpoint_retain, 3);
         assert_eq!(cfg.listen_addr.as_deref(), Some("127.0.0.1:7401"));
         assert_eq!(cfg.max_inflight_jobs, 64);
         assert_eq!(cfg.max_sessions_per_tenant, 8);
@@ -223,7 +251,12 @@ mod tests {
         let cfg = CoordinatorConfig::default();
         assert_eq!(cfg.durable_dir, None);
         assert_eq!(cfg.fsync_every, 1, "default policy is fsync-per-append");
+        assert_eq!(cfg.journal_rotate_bytes, 64 << 20, "default rotation threshold is 64 MiB");
+        assert_eq!(cfg.checkpoint_retain, 1, "GC keeps only the newest root by default");
         assert!(CoordinatorConfig::parse("fsync_every = banana\n").is_err());
+        assert!(CoordinatorConfig::parse("journal_rotate_bytes = tiny\n").is_err());
+        // retain = 0 would leave GC rootless; it is clamped, not rejected.
+        assert_eq!(CoordinatorConfig::parse("checkpoint_retain = 0\n").unwrap().checkpoint_retain, 1);
     }
 
     #[test]

@@ -24,11 +24,13 @@ pub enum JobPayload {
     /// (Steps 1–2 are served from the session).
     Recut(SessionId),
     /// A batch ingest into an open streaming session, followed by a cut at
-    /// the job's thresholds (Steps 1–2 are incrementally repaired). `seq`
-    /// is the stream's FIFO ticket: workers apply ingests in ticket order,
-    /// so batches land in submission order even when several workers race
-    /// the shared queue.
-    Ingest { stream: SessionId, batch: Arc<PointSet>, seq: u64 },
+    /// the job's thresholds (Steps 1–2 are incrementally repaired). The
+    /// batch is a [`DynPoints`] so f32 streams ingest at their own
+    /// precision; cloning shares the store's buffer. `seq` is the stream's
+    /// FIFO ticket: workers apply ingests in ticket order, so batches land
+    /// in submission order even when several workers race the shared
+    /// queue.
+    Ingest { stream: SessionId, batch: DynPoints, seq: u64 },
 }
 
 /// A clustering request.
@@ -73,7 +75,7 @@ impl ClusterJob {
     /// post-ingest clustering at the given thresholds (`d_cut` is fixed by
     /// the stream; the field here is filled in from it for reporting).
     /// `seq` is the per-stream FIFO ticket issued by the coordinator.
-    pub fn ingest(stream: SessionId, batch: Arc<PointSet>, seq: u64, params: DpcParams) -> Self {
+    pub fn ingest(stream: SessionId, batch: DynPoints, seq: u64, params: DpcParams) -> Self {
         ClusterJob {
             payload: JobPayload::Ingest { stream, batch, seq },
             params,

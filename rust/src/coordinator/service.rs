@@ -29,14 +29,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::dpc::{dep, linkage, session, stream::StreamingSession, DensityModel, DpcParams, DpcResult, StepTimings};
+use crate::dpc::{dep, linkage, session, DensityModel, DpcParams, DpcResult, StepTimings};
 use crate::durability::{
-    checkpoint::{self, CheckpointData, DynStreamState, SessionState},
+    checkpoint::{self, CheckpointData, SessionState},
     journal::JournalEntry,
     recovery, DynStream, JournalWriter, Manifest,
 };
 use crate::error::DpcError;
-use crate::geom::{DynPoints, PointSet, PointStore, Scalar};
+use crate::geom::{Dtype, DynPoints, PointSet, PointStore, Scalar};
 use crate::runtime::XlaService;
 use crate::sync::{rank, OrderedMutex};
 
@@ -103,10 +103,13 @@ pub struct StreamEntry {
     /// The stream's density model (immutable, like the radius — readable
     /// without the session lock).
     pub density: DensityModel,
+    /// The stream's coordinate precision (immutable; batches must match
+    /// or `submit_ingest_dyn` fails with [`DpcError::DtypeMismatch`]).
+    pub dtype: Dtype,
     /// The open's [`OpenSpec::tag`] label, echoed in ingest job outputs.
     /// In-memory only; recovered streams carry `"recovered"`.
     pub tag: String,
-    pub session: OrderedMutex<StreamingSession, { rank::STREAM_STATE }>,
+    pub session: OrderedMutex<DynStream, { rank::STREAM_STATE }>,
     /// FIFO ingest tickets, issued under this lock *around* the queue push
     /// so ticket order equals queue order; workers wait for their ticket
     /// before applying, which makes batches land in submission order
@@ -121,6 +124,7 @@ impl std::fmt::Debug for StreamEntry {
         f.debug_struct("StreamEntry")
             .field("d_cut", &self.d_cut)
             .field("density", &self.density)
+            .field("dtype", &self.dtype)
             .field("tag", &self.tag)
             .finish_non_exhaustive()
     }
@@ -215,35 +219,29 @@ impl Coordinator {
         let durable = match &cfg.durable_dir {
             None => None,
             Some(dir) => {
-                let rec = recovery::recover(dir, cfg.fsync_every)?;
+                let rec = recovery::recover(dir, cfg.fsync_every, cfg.journal_rotate_bytes)?;
                 if rec.report.replayed > 0 || rec.report.torn_bytes > 0 || rec.report.checkpoint_seq > 0 {
                     eprintln!(
-                        "durable recovery: checkpoint {} + {} journal entries replayed ({} skipped), {} torn bytes truncated",
-                        rec.report.checkpoint_seq, rec.report.replayed, rec.report.skipped, rec.report.torn_bytes
+                        "durable recovery: checkpoint {} + {} journal entries replayed ({} skipped) across {} segments, {} torn bytes truncated",
+                        rec.report.checkpoint_seq, rec.report.replayed, rec.report.skipped, rec.report.segments, rec.report.torn_bytes
                     );
                 }
+                // Both precisions come back first-class: the stream map
+                // holds the runtime union, so a recovered f32 stream keeps
+                // ingesting f32 batches after the restart.
                 for (id, ds) in rec.streams {
-                    match ds {
-                        DynStream::F64(s) => {
-                            streams.insert(
-                                id,
-                                Arc::new(StreamEntry {
-                                    d_cut: s.d_cut(),
-                                    density: s.density_model(),
-                                    tag: "recovered".to_string(),
-                                    session: OrderedMutex::new(s),
-                                    tickets: OrderedMutex::new(TicketState::default()),
-                                    turn: Condvar::new(),
-                                }),
-                            );
-                        }
-                        // The coordinator's serve surface is f64-only; an
-                        // f32 stream can only come from an out-of-band
-                        // journal and is surfaced, not silently dropped.
-                        DynStream::F32(_) => {
-                            eprintln!("warning: skipping recovered f32 stream {id} (serve surface is f64)")
-                        }
-                    }
+                    streams.insert(
+                        id,
+                        Arc::new(StreamEntry {
+                            d_cut: ds.d_cut(),
+                            density: ds.density_model(),
+                            dtype: ds.dtype(),
+                            tag: "recovered".to_string(),
+                            session: OrderedMutex::new(ds),
+                            tickets: OrderedMutex::new(TicketState::default()),
+                            turn: Condvar::new(),
+                        }),
+                    );
                 }
                 for s in rec.sessions {
                     sessions.insert(
@@ -517,14 +515,14 @@ impl Coordinator {
     /// session store.
     pub fn open_stream(&self, spec: OpenSpec) -> Result<SessionId, DpcError> {
         spec.validate()?;
-        let (dim, d_cut, density, tag) = spec.into_dim()?;
-        let s = StreamingSession::<f64>::new_with_model(dim, d_cut, density)?;
+        let (dim, d_cut, density, dtype, tag) = spec.into_dim()?;
+        let s = DynStream::new_with_model(dtype, dim, d_cut, density)?;
         // relaxed: pure id allocation — uniqueness is all that matters.
         let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
         self.journal_append(&JournalEntry::OpenStream {
             stream: id,
             dim: dim as u32,
-            dtype: crate::geom::Dtype::F64,
+            dtype,
             d_cut,
             density,
         })?;
@@ -533,6 +531,7 @@ impl Coordinator {
             Arc::new(StreamEntry {
                 d_cut,
                 density,
+                dtype,
                 tag,
                 session: OrderedMutex::new(s),
                 tickets: OrderedMutex::new(TicketState::default()),
@@ -564,6 +563,21 @@ impl Coordinator {
         rho_min: f64,
         delta_min: f64,
     ) -> Result<JobId, DpcError> {
+        // The store share is a refcount bump, not a copy.
+        self.submit_ingest_dyn(id, DynPoints::F64((*batch).clone()), rho_min, delta_min)
+    }
+
+    /// [`Coordinator::submit_ingest`] over a runtime-tagged batch: the
+    /// batch's precision must match the stream's (checked BEFORE the WAL
+    /// append — a mismatch is a typed [`DpcError::DtypeMismatch`] at
+    /// submit time, never a journaled entry that fails on every replay).
+    pub fn submit_ingest_dyn(
+        &self,
+        id: SessionId,
+        batch: DynPoints,
+        rho_min: f64,
+        delta_min: f64,
+    ) -> Result<JobId, DpcError> {
         session::validate_thresholds(rho_min, delta_min)?;
         // Reject poisoned batches BEFORE the WAL append below: a journaled
         // batch is replayed on recovery, and a non-finite coordinate that
@@ -572,6 +586,12 @@ impl Coordinator {
         // entry is durable.)
         batch.validate_finite()?;
         let entry = self.stream(id).ok_or(DpcError::UnknownSession(id))?;
+        if batch.dtype() != entry.dtype {
+            return Err(DpcError::DtypeMismatch {
+                expected: entry.dtype.name(),
+                got: batch.dtype().name(),
+            });
+        }
         let params =
             DpcParams { d_cut: entry.d_cut, rho_min, delta_min, density: entry.density, ..DpcParams::default() };
         let tag = if entry.tag.is_empty() { format!("ingest:{id}") } else { entry.tag.clone() };
@@ -586,7 +606,7 @@ impl Coordinator {
                 stream: id,
                 rho_min,
                 delta_min,
-                batch: DynPoints::F64((*batch).clone()),
+                batch: batch.clone(),
             }) {
                 self.release_slot();
                 return Err(e);
@@ -656,8 +676,7 @@ impl Coordinator {
                 tickets = tickets.wait(&entry.turn);
             }
             drop(tickets);
-            let state = entry.session.lock().export_state();
-            stream_states.push((*sid, DynStreamState::F64(state)));
+            stream_states.push((*sid, entry.session.lock().export_state()));
         }
         let sessions: Vec<SessionState> = self
             .shared
@@ -680,7 +699,18 @@ impl Coordinator {
         let data = CheckpointData { streams: stream_states, sessions };
         // relaxed: reading our own id allocator; the journal lock already
         // froze every path that could bump it.
-        let m = checkpoint::write(&d.dir, &mut journal, &data, self.next_session_id.load(Ordering::Relaxed))?;
+        //
+        // `write` also runs both GC sweeps after the manifest flip:
+        // checkpoint files outside the newest `checkpoint_retain` roots
+        // (and their delta references), and whole journal segments below
+        // the new replay horizon — this is what keeps disk use bounded.
+        let m = checkpoint::write(
+            &d.dir,
+            &mut journal,
+            &data,
+            self.next_session_id.load(Ordering::Relaxed),
+            self.cfg.checkpoint_retain,
+        )?;
         self.metrics.inc("checkpoints_taken");
         Ok(m)
     }
@@ -872,7 +902,7 @@ fn run_recut_job(sid: SessionId, params: DpcParams, sh: &Shared) -> Result<DpcRe
 
 fn run_ingest_job(
     sid: SessionId,
-    batch: &Arc<PointSet>,
+    batch: &DynPoints,
     seq: u64,
     params: DpcParams,
     sh: &Shared,
@@ -1319,6 +1349,94 @@ mod tests {
         }
         let coord = Coordinator::start(cfg).unwrap();
         assert!(coord.shared.streams.lock().is_empty(), "closed stream stays closed");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn f32_streams_ingest_and_survive_restart() {
+        let (cfg, dir) = durable_config("f32stream");
+        let pts64 = blob_points();
+        let pts32 = PointStore::<f32>::cast_from_f64(&pts64);
+        let d = pts32.dim();
+        let sid;
+        {
+            let coord = Coordinator::start(cfg.clone()).unwrap();
+            sid = coord.open_stream(OpenSpec::dim(d, 3.0).dtype(crate::geom::Dtype::F32)).unwrap();
+            assert_eq!(coord.stream(sid).unwrap().dtype, crate::geom::Dtype::F32);
+            // A mismatched (f64) batch is a typed error at submit time and
+            // never reaches the journal.
+            let err = coord
+                .submit_ingest_dyn(sid, DynPoints::F64((*pts64).clone()), 0.0, 20.0)
+                .unwrap_err();
+            assert!(matches!(err, DpcError::DtypeMismatch { expected: "f32", got: "f64" }));
+            for (lo, hi) in [(0usize, 90usize), (90, 160)] {
+                let batch =
+                    DynPoints::F32(PointStore::<f32>::new(pts32.coords()[lo * d..hi * d].to_vec(), d));
+                let out = coord.wait(coord.submit_ingest_dyn(sid, batch, 0.0, 20.0).unwrap()).unwrap();
+                assert_eq!(out.result.num_clusters, 2);
+            }
+            // Simulated crash.
+        }
+        let coord = Coordinator::start(cfg).unwrap();
+        let entry = coord.stream(sid).expect("f32 stream survives restart first-class");
+        assert_eq!(entry.dtype, crate::geom::Dtype::F32);
+        {
+            let s = entry.session.lock();
+            assert_eq!(s.len(), 160);
+            let fresh = Dpc::new(DpcParams {
+                d_cut: 3.0,
+                rho_min: 0.0,
+                delta_min: 20.0,
+                dtype: crate::geom::Dtype::F32,
+                ..DpcParams::default()
+            })
+            .run(&pts32)
+            .unwrap();
+            assert_eq!(s.rho(), &fresh.rho[..], "recovered f32 rho == fresh f32 build");
+            assert_eq!(s.dep(), &fresh.dep[..], "recovered f32 dep == fresh f32 build");
+        }
+        // And it keeps ingesting after recovery — the old warn-and-drop
+        // path would have discarded it.
+        let more = DynPoints::F32(PointStore::<f32>::new(vec![0.5, 0.5], 2));
+        coord.wait(coord.submit_ingest_dyn(sid, more, 0.0, 20.0).unwrap()).unwrap();
+        assert_eq!(entry.session.lock().len(), 161);
+        coord.close_stream(sid).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoints_bound_journal_disk_use() {
+        // The bounded-growth contract: ingest → checkpoint loops leave at
+        // most ~2× the rotation threshold of journal bytes on disk (the
+        // live tail past the replay horizon), no matter how many batches
+        // have ever been journaled.
+        let (mut cfg, dir) = durable_config("bounded");
+        cfg.journal_rotate_bytes = 4096;
+        let coord = Coordinator::start(cfg).unwrap();
+        let sid = coord.open_stream(OpenSpec::dim(2, 3.0)).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let mut total_journaled = 0u64;
+        for round in 0u64..6 {
+            for _ in 0..4 {
+                let coords: Vec<f64> = (0..160).map(|_| rng.normal() * 10.0).collect();
+                total_journaled += (coords.len() * 8) as u64;
+                let batch = Arc::new(PointSet::new(coords, 2));
+                coord.wait(coord.submit_ingest(sid, batch, 0.0, 20.0).unwrap()).unwrap();
+            }
+            let m = coord.checkpoint_now().unwrap();
+            assert_eq!(m.checkpoint_seq, round + 1);
+            let journal_bytes: u64 = crate::durability::journal::list_segments(&dir)
+                .unwrap()
+                .iter()
+                .map(|(_, p)| std::fs::metadata(p).unwrap().len())
+                .sum();
+            assert!(
+                journal_bytes < 2 * 4096,
+                "round {round}: {journal_bytes} journal bytes on disk (threshold 4096)"
+            );
+        }
+        assert!(total_journaled > 4 * 4096, "the test must journal well past the ceiling");
+        coord.close_stream(sid).unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

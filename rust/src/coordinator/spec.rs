@@ -84,11 +84,12 @@ impl OpenSpec {
         self
     }
 
-    /// Coordinate precision. The serve surface is f64-only today (the
-    /// durability layer already round-trips f32 streams, but the
-    /// coordinator's public stream API is not yet dtype-generic), so
-    /// anything but [`Dtype::F64`] fails [`OpenSpec::validate`] with a
-    /// typed error instead of silently widening.
+    /// Coordinate precision. Streams honour it end to end — an f32 stream
+    /// ingests f32 batches (anything else is a typed
+    /// [`DpcError::DtypeMismatch`]) and survives durable recovery at its
+    /// own precision. One-shot sessions remain f64 (their payload source
+    /// is a [`PointSet`]), so a non-f64 points-source spec fails
+    /// [`OpenSpec::validate`].
     pub fn dtype(mut self, dtype: Dtype) -> Self {
         self.dtype = dtype;
         self
@@ -127,11 +128,11 @@ impl OpenSpec {
     pub fn validate(&self) -> Result<(), DpcError> {
         crate::dpc::session::validate_d_cut(self.d_cut)?;
         self.density.validate()?;
-        if self.dtype != Dtype::F64 {
+        if self.dtype != Dtype::F64 && matches!(self.source, OpenSource::Points(_)) {
             return Err(DpcError::InvalidParam {
                 name: "dtype",
                 value: self.dtype.size_bytes() as f64,
-                requirement: "the coordinator serve surface is f64-only (see ROADMAP item 1)",
+                requirement: "one-shot sessions are f64 (points sources carry a PointSet); use a stream for f32",
             });
         }
         Ok(())
@@ -150,9 +151,9 @@ impl OpenSpec {
     }
 
     /// Unwrap a dimension source or fail typed.
-    pub fn into_dim(self) -> Result<(usize, f64, DensityModel, String), DpcError> {
+    pub fn into_dim(self) -> Result<(usize, f64, DensityModel, Dtype, String), DpcError> {
         match self.source {
-            OpenSource::Dim(d) => Ok((d, self.d_cut, self.density, self.tag)),
+            OpenSource::Dim(d) => Ok((d, self.d_cut, self.density, self.dtype, self.tag)),
             OpenSource::Points(_) => Err(DpcError::InvalidParam {
                 name: "open_spec",
                 value: 0.0,
@@ -193,8 +194,13 @@ mod tests {
     }
 
     #[test]
-    fn non_f64_dtype_is_rejected_for_now() {
-        let err = OpenSpec::dim(2, 1.0).dtype(Dtype::F32).validate().unwrap_err();
+    fn f32_streams_are_accepted_f32_sessions_are_not() {
+        let spec = OpenSpec::dim(2, 1.0).dtype(Dtype::F32);
+        spec.validate().unwrap();
+        let (_, _, _, dtype, _) = spec.into_dim().unwrap();
+        assert_eq!(dtype, Dtype::F32);
+        let pts = Arc::new(PointSet::new(vec![0.0, 0.0], 2));
+        let err = OpenSpec::points(pts, 1.0).dtype(Dtype::F32).validate().unwrap_err();
         assert!(matches!(err, DpcError::InvalidParam { name: "dtype", .. }));
     }
 

@@ -679,6 +679,26 @@ pub struct StreamState<S: Scalar> {
     pub stats: StreamStats,
 }
 
+impl<S: Scalar> StreamState<S> {
+    /// Gather one level's coordinate rows in id order — the payload the
+    /// checkpoint codec content-addresses per level. Because level
+    /// buffers are immutable (a merge replaces levels, it never edits
+    /// one) and the gather order is the ids' own order, an unchanged
+    /// level yields byte-identical output on every export, which is what
+    /// makes the `(crc64, len)` blob key a stable identity across
+    /// checkpoints.
+    pub fn level_coords(&self, ids: &[u32]) -> Vec<S> {
+        let dim = self.pts.dim();
+        let coords = self.pts.coords();
+        let mut out = Vec::with_capacity(ids.len() * dim);
+        for &id in ids {
+            let base = id as usize * dim;
+            out.extend_from_slice(&coords[base..base + dim]);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

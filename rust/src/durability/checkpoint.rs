@@ -3,20 +3,58 @@
 //! (ρ, λ, δ) artifacts, so recovery replays only the journal suffix
 //! written after the snapshot.
 //!
-//! ## File format (`checkpoint-<seq>.pclc`)
+//! ## File format (`checkpoint-<seq>.pclc`, version 2)
 //!
 //! ```text
 //! magic "PCLC" | version u32
 //! | n_streams u64 | stream... | n_sessions u64 | session...
 //! | crc u32                       — CRC-32 of every preceding byte
-//! stream:  id u64 | dtype u8 | d_cut f64 | density | pts (typed store)
-//!          | n_levels u64 | (k u32 | ids u32-slice)...
+//! stream:  id u64 | dtype u8 | d_cut f64 | density
+//!          | n u64 | dim u32 | n_levels u64 | level...
 //!          | rho u32-slice | dep u32-slice (u32::MAX = None)
 //!          | delta count u64 + f64... | stats (8×u64 + 2×f64)
+//! level:   k u32 | tag u8
+//!          tag 0 (inline): blob_len u64 | blob bytes
+//!          tag 1 (ref):    home_seq u64 | crc64 u64 | blob_len u64
+//! blob:    ids u32-slice | gathered coords (ids.len()·dim raw LE scalars)
 //! session: id u64 | d_cut f64 | density | pts (f64 store)
 //!          | rho u32-slice | dep u32-slice | delta | built_by str
 //!          | density_secs f64 | dep_secs f64
 //! ```
+//!
+//! ## Incremental checkpoints
+//!
+//! Bentley–Saxe levels are immutable once built — a merge *replaces*
+//! levels, it never mutates one — so most levels survive unchanged
+//! between checkpoints, and the big ones (which dominate bytes) survive
+//! longest. Version 2 exploits that: each level is serialized as a
+//! standalone **blob** (its ids plus their gathered coordinate rows) and
+//! content-addressed by the key `(crc64(blob), blob_len)`. When a blob's
+//! key already exists in the previous checkpoint, the new file stores a
+//! 25-byte **ref** naming the checkpoint file where the blob lives
+//! inline, instead of the blob itself — so a checkpoint writes only the
+//! levels rebuilt since the last snapshot plus a small index. Refs never
+//! chain: a ref always names the physical file holding the inline bytes
+//! (when the previous checkpoint itself held a ref, the new one copies
+//! that ref's home, not the previous checkpoint's seq).
+//!
+//! Reassembly scatters each level's gathered rows back through its ids
+//! into the flat `n × dim` buffer; since the levels partition the id
+//! space, the rebuilt store is byte-identical to the one exported. The
+//! CRC-64 key is verified at resolution (the blob map is keyed by the
+//! computed CRC of the referenced file's actual bytes), so a stale or
+//! corrupt referenced file yields [`DpcError::CorruptCheckpoint`], never
+//! spliced coordinates.
+//!
+//! ## GC
+//!
+//! Old checkpoints are collected by a refcount-aware sweep
+//! ([`gc`]): the newest `retain` checkpoint files are roots, every
+//! file a root references is live, and everything else is deleted.
+//! Journal segments strictly below the manifest's replay horizon are
+//! swept at the same time ([`super::journal::gc_segments`]). Both sweeps
+//! run strictly *after* the manifest flip and are best-effort —
+//! correctness never depends on a delete.
 //!
 //! Decoding is all-or-nothing: the whole-file CRC is verified *before*
 //! any section is parsed, and every section parse is bounds-checked, so a
@@ -27,29 +65,56 @@
 //!
 //! Writing is crash-safe by ordering: the checkpoint file is written and
 //! fsynced *first*, the manifest flips to it *second* (atomically — see
-//! [`super::manifest`]), and only then are older checkpoint files
-//! deleted. A crash between any two steps leaves the previous
-//! (checkpoint, offset) pair fully usable.
+//! [`super::manifest`]), and only then does GC run. A crash between any
+//! two steps leaves the previous (checkpoint, journal position) pair
+//! fully usable.
 
+use std::collections::{HashMap, HashSet};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::dpc::{DensityModel, StreamState, StreamStats};
 use crate::error::DpcError;
-use crate::geom::{Dtype, PointSet, Scalar};
+use crate::geom::{Dtype, PointSet, PointStore, Scalar};
 
 use super::crc32::crc32;
-use super::journal::JournalWriter;
+use super::crc64::crc64;
+use super::journal::{self, JournalWriter};
 use super::manifest::{self, Manifest};
 use super::wire::{self, Cursor};
 
 pub const CHECKPOINT_MAGIC: [u8; 4] = *b"PCLC";
-pub const CHECKPOINT_VERSION: u32 = 1;
+pub const CHECKPOINT_VERSION: u32 = 2;
+
+/// A level blob's content address: `(crc64 of the blob bytes, length)`.
+pub type BlobKey = (u64, u64);
 
 /// `checkpoint-<seq>.pclc` in the durable directory.
 pub fn checkpoint_file(dir: &Path, seq: u64) -> PathBuf {
     dir.join(format!("checkpoint-{seq}.pclc"))
+}
+
+/// Inverse of [`checkpoint_file`]'s naming: parse a directory entry name.
+pub fn parse_checkpoint_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("checkpoint-")?.strip_suffix(".pclc")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Every checkpoint file in `dir`, sorted ascending by seq.
+pub fn list_checkpoints(dir: &Path) -> Result<Vec<(u64, PathBuf)>, DpcError> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(seq) = entry.file_name().to_str().and_then(parse_checkpoint_name) {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(seq, _)| seq);
+    Ok(out)
 }
 
 /// A dtype-tagged stream snapshot (the runtime union of
@@ -142,14 +207,43 @@ fn put_stats(out: &mut Vec<u8>, s: &StreamStats) {
     wire::put_f64(out, s.dep_secs);
 }
 
-fn put_stream_state<S: Scalar>(out: &mut Vec<u8>, st: &StreamState<S>) {
+/// Encode one level's content-addressed blob: its ids and their gathered
+/// coordinate rows. Unchanged levels produce byte-identical blobs (the
+/// store is immutable and the gather is in id order), which is what makes
+/// the `(crc64, len)` key a stable identity across checkpoints.
+fn encode_blob<S: Scalar>(ids: &[u32], st: &StreamState<S>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + ids.len() * (4 + st.pts.dim() * S::BYTES));
+    wire::put_u32_slice(&mut out, ids);
+    for c in st.level_coords(ids) {
+        c.write_le(&mut out);
+    }
+    out
+}
+
+fn put_stream_state<S: Scalar>(
+    out: &mut Vec<u8>,
+    st: &StreamState<S>,
+    avail: &HashMap<BlobKey, u64>,
+) {
     wire::put_f64(out, st.d_cut);
     wire::put_density(out, st.model);
-    wire::put_store(out, &st.pts);
+    wire::put_u64(out, st.pts.len() as u64);
+    wire::put_u32(out, st.pts.dim() as u32);
     wire::put_u64(out, st.levels.len() as u64);
     for (k, ids) in &st.levels {
         wire::put_u32(out, *k);
-        wire::put_u32_slice(out, ids);
+        let blob = encode_blob(ids, st);
+        let key: BlobKey = (crc64(&blob), blob.len() as u64);
+        if let Some(&home) = avail.get(&key) {
+            out.push(1);
+            wire::put_u64(out, home);
+            wire::put_u64(out, key.0);
+            wire::put_u64(out, key.1);
+        } else {
+            out.push(0);
+            wire::put_u64(out, blob.len() as u64);
+            out.extend_from_slice(&blob);
+        }
     }
     wire::put_u32_slice(out, &st.rho);
     put_dep(out, &st.dep);
@@ -157,7 +251,10 @@ fn put_stream_state<S: Scalar>(out: &mut Vec<u8>, st: &StreamState<S>) {
     put_stats(out, &st.stats);
 }
 
-pub fn encode(data: &CheckpointData) -> Vec<u8> {
+/// Encode a checkpoint, turning any level blob whose key appears in
+/// `avail` into a ref to its home checkpoint. An empty map produces a
+/// fully self-contained (all-inline) image.
+pub fn encode_with_refs(data: &CheckpointData, avail: &HashMap<BlobKey, u64>) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(&CHECKPOINT_MAGIC);
     wire::put_u32(&mut out, CHECKPOINT_VERSION);
@@ -167,11 +264,11 @@ pub fn encode(data: &CheckpointData) -> Vec<u8> {
         match state {
             DynStreamState::F32(st) => {
                 out.push(Dtype::F32.size_bytes() as u8);
-                put_stream_state(&mut out, st);
+                put_stream_state(&mut out, st, avail);
             }
             DynStreamState::F64(st) => {
                 out.push(Dtype::F64.size_bytes() as u8);
-                put_stream_state(&mut out, st);
+                put_stream_state(&mut out, st, avail);
             }
         }
     }
@@ -191,6 +288,11 @@ pub fn encode(data: &CheckpointData) -> Vec<u8> {
     let crc = crc32(&out);
     wire::put_u32(&mut out, crc);
     out
+}
+
+/// Encode a fully self-contained checkpoint (every level inline).
+pub fn encode(data: &CheckpointData) -> Vec<u8> {
+    encode_with_refs(data, &HashMap::new())
 }
 
 // ---------------------------------------------------------------------------
@@ -225,37 +327,46 @@ fn get_stats(cur: &mut Cursor<'_>) -> Result<StreamStats, String> {
     })
 }
 
-fn get_stream_state<S: Scalar>(cur: &mut Cursor<'_>) -> Result<StreamState<S>, String> {
-    let d_cut = cur.f64()?;
-    let model = wire::get_density(cur)?;
-    let pts = wire::get_store::<S>(cur)?;
-    let n_levels = cur.u64()? as usize;
-    if n_levels > usize::BITS as usize {
-        return Err(format!("{n_levels} forest levels exceeds the {} possible", usize::BITS));
-    }
-    let mut levels = Vec::with_capacity(n_levels);
-    for _ in 0..n_levels {
-        let k = cur.u32()?;
-        let ids = wire::get_u32_vec(cur)?;
-        levels.push((k, ids));
-    }
-    Ok(StreamState {
-        d_cut,
-        model,
-        pts,
-        levels,
-        rho: wire::get_u32_vec(cur)?,
-        dep: get_dep(cur)?,
-        delta: get_f64_vec(cur)?,
-        stats: get_stats(cur)?,
-    })
+/// Where a parsed level's bytes live.
+enum LevelSrc<'a> {
+    /// Blob inline in this file (integrity covered by the whole-file CRC).
+    Inline(&'a [u8]),
+    /// Blob inline in checkpoint `home`, addressed by its key.
+    Ref { home: u64, key: BlobKey },
 }
 
-/// Decode a checkpoint image. All-or-nothing: any defect — truncation,
-/// CRC mismatch, undecodable section, trailing bytes — aborts with
-/// [`DpcError::CorruptCheckpoint`] before any state escapes.
-pub fn decode(bytes: &[u8]) -> Result<CheckpointData, DpcError> {
-    let corrupt = |detail: String| DpcError::CorruptCheckpoint { detail };
+struct ParsedLevel<'a> {
+    k: u32,
+    src: LevelSrc<'a>,
+}
+
+struct ParsedStream<'a> {
+    id: u64,
+    dtype: Dtype,
+    d_cut: f64,
+    density: DensityModel,
+    n: usize,
+    dim: usize,
+    levels: Vec<ParsedLevel<'a>>,
+    rho: Vec<u32>,
+    dep: Vec<Option<u32>>,
+    delta: Vec<f64>,
+    stats: StreamStats,
+}
+
+struct Parsed<'a> {
+    streams: Vec<ParsedStream<'a>>,
+    sessions: Vec<SessionState>,
+}
+
+fn corrupt(detail: String) -> DpcError {
+    DpcError::CorruptCheckpoint { detail }
+}
+
+/// Structural parse: CRC-verify the whole file, then walk every section,
+/// keeping level blobs as borrowed slices / unresolved refs. Nothing is
+/// reassembled yet.
+fn parse(bytes: &[u8]) -> Result<Parsed<'_>, DpcError> {
     if bytes.len() < 8 + 4 {
         return Err(corrupt(format!("file is {} bytes, shorter than header + CRC", bytes.len())));
     }
@@ -268,34 +379,73 @@ pub fn decode(bytes: &[u8]) -> Result<CheckpointData, DpcError> {
         )));
     }
     let mut cur = Cursor::new(body);
-    let magic = cur.take(4).map_err(&corrupt)?;
+    let magic = cur.take(4).map_err(corrupt)?;
     if magic != CHECKPOINT_MAGIC {
         return Err(corrupt(format!("bad magic {magic:?} (want \"PCLC\")")));
     }
-    let version = cur.u32().map_err(&corrupt)?;
+    let version = cur.u32().map_err(corrupt)?;
     if version != CHECKPOINT_VERSION {
-        return Err(corrupt(format!("unsupported checkpoint version {version}")));
+        return Err(corrupt(format!(
+            "unsupported checkpoint version {version} (want {CHECKPOINT_VERSION}; pre-segmentation dirs must be rebuilt)"
+        )));
     }
 
-    let n_streams = cur.u64().map_err(&corrupt)? as usize;
+    let n_streams = cur.u64().map_err(corrupt)? as usize;
     let mut streams = Vec::with_capacity(n_streams.min(1024));
     for i in 0..n_streams {
-        let id = cur.u64().map_err(&corrupt)?;
-        let tag = cur.u8().map_err(&corrupt)?;
-        let dtype = Dtype::from_tag(tag)
-            .ok_or_else(|| corrupt(format!("stream {i}: unknown dtype tag {tag}")))?;
-        let state = match dtype {
-            Dtype::F32 => DynStreamState::F32(
-                get_stream_state(&mut cur).map_err(|d| corrupt(format!("stream {i}: {d}")))?,
-            ),
-            Dtype::F64 => DynStreamState::F64(
-                get_stream_state(&mut cur).map_err(|d| corrupt(format!("stream {i}: {d}")))?,
-            ),
-        };
-        streams.push((id, state));
+        let sec = |d: String| corrupt(format!("stream {i}: {d}"));
+        let id = cur.u64().map_err(sec)?;
+        let tag = cur.u8().map_err(sec)?;
+        let dtype = Dtype::from_tag(tag).ok_or_else(|| sec(format!("unknown dtype tag {tag}")))?;
+        let d_cut = cur.f64().map_err(sec)?;
+        let density = wire::get_density(&mut cur).map_err(sec)?;
+        let n = cur.u64().map_err(sec)? as usize;
+        let dim = cur.u32().map_err(sec)? as usize;
+        if dim == 0 {
+            return Err(sec(format!("dim = 0 (n = {n})")));
+        }
+        let n_levels = cur.u64().map_err(sec)? as usize;
+        if n_levels > usize::BITS as usize {
+            return Err(sec(format!("{n_levels} forest levels exceeds the {} possible", usize::BITS)));
+        }
+        let mut levels = Vec::with_capacity(n_levels);
+        for li in 0..n_levels {
+            let lsec = |d: String| corrupt(format!("stream {i} level {li}: {d}"));
+            let k = cur.u32().map_err(lsec)?;
+            let src = match cur.u8().map_err(lsec)? {
+                0 => {
+                    let blob_len = cur.u64().map_err(lsec)? as usize;
+                    LevelSrc::Inline(cur.take(blob_len).map_err(lsec)?)
+                }
+                1 => {
+                    let home = cur.u64().map_err(lsec)?;
+                    let crc = cur.u64().map_err(lsec)?;
+                    let len = cur.u64().map_err(lsec)?;
+                    if home == 0 {
+                        return Err(lsec("ref names checkpoint 0 (seqs start at 1)".into()));
+                    }
+                    LevelSrc::Ref { home, key: (crc, len) }
+                }
+                other => return Err(lsec(format!("unknown level tag {other}"))),
+            };
+            levels.push(ParsedLevel { k, src });
+        }
+        streams.push(ParsedStream {
+            id,
+            dtype,
+            d_cut,
+            density,
+            n,
+            dim,
+            levels,
+            rho: wire::get_u32_vec(&mut cur).map_err(sec)?,
+            dep: get_dep(&mut cur).map_err(sec)?,
+            delta: get_f64_vec(&mut cur).map_err(sec)?,
+            stats: get_stats(&mut cur).map_err(sec)?,
+        });
     }
 
-    let n_sessions = cur.u64().map_err(&corrupt)? as usize;
+    let n_sessions = cur.u64().map_err(corrupt)? as usize;
     let mut sessions = Vec::with_capacity(n_sessions.min(1024));
     for i in 0..n_sessions {
         let sec = |d: String| corrupt(format!("session {i}: {d}"));
@@ -312,55 +462,287 @@ pub fn decode(bytes: &[u8]) -> Result<CheckpointData, DpcError> {
             dep_secs: cur.f64().map_err(sec)?,
         });
     }
-    cur.expect_end("checkpoint").map_err(&corrupt)?;
-    Ok(CheckpointData { streams, sessions })
+    cur.expect_end("checkpoint").map_err(corrupt)?;
+    Ok(Parsed { streams, sessions })
 }
 
-/// Read + decode `checkpoint-<seq>.pclc`.
+/// Decode one level blob against the stream's dim: `(ids, gathered rows)`.
+fn decode_blob<S: Scalar>(blob: &[u8], dim: usize) -> Result<(Vec<u32>, Vec<S>), String> {
+    let mut cur = Cursor::new(blob);
+    let ids = wire::get_u32_vec(&mut cur)?;
+    let want = ids
+        .len()
+        .checked_mul(dim)
+        .and_then(|c| c.checked_mul(S::BYTES))
+        .ok_or("level blob size overflows")?;
+    if cur.remaining() != want {
+        return Err(format!(
+            "level blob carries {} coordinate bytes, its {} ids × dim {dim} need {want}",
+            cur.remaining(),
+            ids.len()
+        ));
+    }
+    let mut coords = Vec::with_capacity(ids.len() * dim);
+    for _ in 0..ids.len() * dim {
+        coords.push(S::read_le(cur.take(S::BYTES)?));
+    }
+    Ok((ids, coords))
+}
+
+/// Rebuild one stream's [`StreamState`] from its parsed section and the
+/// resolved external blobs. The reassembled point store is byte-identical
+/// to the exported one: each level's gathered rows scatter back through
+/// its ids, and the levels must partition `0..n` exactly.
+fn build_stream<S: Scalar>(
+    ps: ParsedStream<'_>,
+    external: &HashMap<BlobKey, Vec<u8>>,
+) -> Result<StreamState<S>, DpcError> {
+    let sec = |d: String| corrupt(format!("stream id {}: {d}", ps.id));
+    // Resolve every blob to real bytes *before* sizing any allocation:
+    // inline blobs are slices of this file, refs come from the loaded
+    // (disk-backed) external map, so a forged `n` can only pass the
+    // structural size equation below by actually shipping the bytes.
+    let mut blobs = Vec::with_capacity(ps.levels.len());
+    for (li, lvl) in ps.levels.iter().enumerate() {
+        let bytes: &[u8] = match &lvl.src {
+            LevelSrc::Inline(b) => b,
+            LevelSrc::Ref { home, key } => external.get(key).map(Vec::as_slice).ok_or_else(|| {
+                sec(format!(
+                    "level {li}: blob {:#018x}/{} referenced from checkpoint {home} is unavailable",
+                    key.0, key.1
+                ))
+            })?,
+        };
+        blobs.push(bytes);
+    }
+    let per_point = 4 + ps.dim * S::BYTES;
+    let total: usize = blobs.iter().map(|b| b.len()).sum();
+    let want = ps
+        .n
+        .checked_mul(per_point)
+        .and_then(|c| c.checked_add(8 * ps.levels.len()))
+        .ok_or_else(|| sec("stream size overflows".into()))?;
+    if total != want {
+        return Err(sec(format!(
+            "level blobs total {total} bytes, {} points × dim {} across {} levels need {want}",
+            ps.n,
+            ps.dim,
+            ps.levels.len()
+        )));
+    }
+    let mut coords = vec![S::ZERO; ps.n * ps.dim];
+    let mut covered = vec![false; ps.n];
+    let mut levels = Vec::with_capacity(ps.levels.len());
+    for (li, (lvl, blob)) in ps.levels.iter().zip(&blobs).enumerate() {
+        let (ids, rows) =
+            decode_blob::<S>(blob, ps.dim).map_err(|d| sec(format!("level {li}: {d}")))?;
+        for (row, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            if id >= ps.n {
+                return Err(sec(format!("level {li}: id {id} out of range (n = {})", ps.n)));
+            }
+            if covered[id] {
+                return Err(sec(format!("level {li}: id {id} appears in more than one level")));
+            }
+            covered[id] = true;
+            coords[id * ps.dim..(id + 1) * ps.dim]
+                .copy_from_slice(&rows[row * ps.dim..(row + 1) * ps.dim]);
+        }
+        levels.push((lvl.k, ids));
+    }
+    let missing = covered.iter().filter(|&&c| !c).count();
+    if missing != 0 {
+        return Err(sec(format!("{missing} of {} points appear in no level", ps.n)));
+    }
+    let pts = PointStore::try_new(coords, ps.dim).map_err(|e| sec(e.to_string()))?;
+    Ok(StreamState {
+        d_cut: ps.d_cut,
+        model: ps.density,
+        pts,
+        levels,
+        rho: ps.rho,
+        dep: ps.dep,
+        delta: ps.delta,
+        stats: ps.stats,
+    })
+}
+
+fn assemble(
+    parsed: Parsed<'_>,
+    external: &HashMap<BlobKey, Vec<u8>>,
+) -> Result<CheckpointData, DpcError> {
+    let mut streams = Vec::with_capacity(parsed.streams.len());
+    for ps in parsed.streams {
+        let id = ps.id;
+        let state = match ps.dtype {
+            Dtype::F32 => DynStreamState::F32(build_stream::<f32>(ps, external)?),
+            Dtype::F64 => DynStreamState::F64(build_stream::<f64>(ps, external)?),
+        };
+        streams.push((id, state));
+    }
+    Ok(CheckpointData { streams, sessions: parsed.sessions })
+}
+
+/// Decode a *self-contained* checkpoint image. All-or-nothing: any defect
+/// — truncation, CRC mismatch, undecodable section, trailing bytes, or a
+/// ref to another file (which a bare byte buffer cannot resolve) — aborts
+/// with [`DpcError::CorruptCheckpoint`] before any state escapes. Images
+/// on disk may carry refs; read those through [`read`].
+pub fn decode(bytes: &[u8]) -> Result<CheckpointData, DpcError> {
+    assemble(parse(bytes)?, &HashMap::new())
+}
+
+/// Read + decode `checkpoint-<seq>.pclc`, resolving level refs against
+/// the checkpoint files they name. Every touched file is whole-file
+/// CRC-verified before any blob is trusted, and refs resolve by content
+/// key — a missing, stale, or corrupt referenced file is
+/// [`DpcError::CorruptCheckpoint`].
 pub fn read(dir: &Path, seq: u64) -> Result<CheckpointData, DpcError> {
     let path = checkpoint_file(dir, seq);
     let mut buf = Vec::new();
     File::open(&path)?.read_to_end(&mut buf)?;
-    decode(&buf)
+    let parsed = parse(&buf)?;
+    let mut homes: HashSet<u64> = HashSet::new();
+    for s in &parsed.streams {
+        for l in &s.levels {
+            if let LevelSrc::Ref { home, .. } = l.src {
+                homes.insert(home);
+            }
+        }
+    }
+    let mut external: HashMap<BlobKey, Vec<u8>> = HashMap::new();
+    for home in homes {
+        if home == seq {
+            return Err(corrupt(format!("checkpoint {seq} references itself")));
+        }
+        let hp = checkpoint_file(dir, home);
+        let mut hbuf = Vec::new();
+        File::open(&hp)
+            .and_then(|mut f| f.read_to_end(&mut hbuf))
+            .map_err(|e| corrupt(format!("referenced checkpoint {home} unreadable: {e}")))?;
+        let hparsed = parse(&hbuf)
+            .map_err(|e| corrupt(format!("referenced checkpoint {home} invalid: {e}")))?;
+        for s in &hparsed.streams {
+            for l in &s.levels {
+                if let LevelSrc::Inline(b) = l.src {
+                    external.entry((crc64(b), b.len() as u64)).or_insert_with(|| b.to_vec());
+                }
+            }
+        }
+    }
+    assemble(parsed, &external)
+}
+
+/// The blob keys an existing checkpoint makes addressable, mapped to the
+/// checkpoint file that holds each blob *inline* (refs contribute their
+/// already-resolved home, so refs built from this map never chain).
+fn available_blobs(dir: &Path, seq: u64) -> Result<HashMap<BlobKey, u64>, DpcError> {
+    let mut buf = Vec::new();
+    File::open(checkpoint_file(dir, seq))?.read_to_end(&mut buf)?;
+    let parsed = parse(&buf)?;
+    let mut map = HashMap::new();
+    for s in &parsed.streams {
+        for l in &s.levels {
+            match &l.src {
+                LevelSrc::Inline(b) => {
+                    map.insert((crc64(b), b.len() as u64), seq);
+                }
+                LevelSrc::Ref { home, key } => {
+                    map.insert(*key, *home);
+                }
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// Refcount-aware checkpoint GC. The newest `retain` (min 1) checkpoint
+/// files at or below `newest` are roots; every checkpoint a root
+/// references is live; everything else — including crashed leftovers
+/// above `newest` that no manifest ever reached — is deleted. Aborts
+/// (deleting nothing) if any root is unreadable: a conservative sweep
+/// can only leak disk, never break recovery. Returns the seqs removed.
+pub fn gc(dir: &Path, newest: u64, retain: u64) -> Vec<u64> {
+    let Ok(all) = list_checkpoints(dir) else {
+        return Vec::new();
+    };
+    let retain = retain.max(1) as usize;
+    let roots: Vec<u64> =
+        all.iter().rev().map(|&(s, _)| s).filter(|&s| s <= newest).take(retain).collect();
+    if roots.first() != Some(&newest) {
+        return Vec::new(); // the manifest's checkpoint is missing — leave everything alone
+    }
+    let mut live: HashSet<u64> = roots.iter().copied().collect();
+    for &root in &roots {
+        let Ok(bytes) = std::fs::read(checkpoint_file(dir, root)) else {
+            return Vec::new();
+        };
+        let Ok(parsed) = parse(&bytes) else {
+            return Vec::new();
+        };
+        for s in &parsed.streams {
+            for l in &s.levels {
+                if let LevelSrc::Ref { home, .. } = l.src {
+                    live.insert(home);
+                }
+            }
+        }
+    }
+    let mut removed = Vec::new();
+    for (seq, path) in all {
+        if !live.contains(&seq) && std::fs::remove_file(&path).is_ok() {
+            removed.push(seq);
+        }
+    }
+    removed
 }
 
 /// Take a checkpoint: sync the journal, write + fsync the next
-/// `checkpoint-<seq>.pclc`, flip the manifest to `(seq, journal end)`,
-/// then garbage-collect older checkpoint files. Returns the new manifest.
+/// `checkpoint-<seq>.pclc` (delta-encoded against the previous one),
+/// flip the manifest to `(seq, journal position)`, then garbage-collect
+/// unreachable checkpoint files and journal segments below the new
+/// replay horizon. Returns the new manifest.
 ///
 /// The caller must ensure `data` reflects exactly the journal prefix up
-/// to `journal.len()` — i.e. all appended entries have been applied and
-/// no new ones can land mid-snapshot (the coordinator holds its journal
-/// lock across the quiesce + export).
+/// to `journal.position()` — i.e. all appended entries have been applied
+/// and no new ones can land mid-snapshot (the coordinator holds its
+/// journal lock across the quiesce + export).
 pub fn write(
     dir: &Path,
     journal: &mut JournalWriter,
     data: &CheckpointData,
     next_session_id: u64,
+    retain: u64,
 ) -> Result<Manifest, DpcError> {
     journal.sync()?;
     let prev = manifest::read(dir)?;
     let seq = prev.map_or(1, |m| m.checkpoint_seq + 1);
+    // Delta-encode against the previous checkpoint when possible; a
+    // missing or unreadable predecessor just degrades to a full image.
+    let avail = match prev.map(|m| m.checkpoint_seq) {
+        Some(p) if p != 0 => available_blobs(dir, p).unwrap_or_default(),
+        _ => HashMap::new(),
+    };
     let path = checkpoint_file(dir, seq);
     {
         let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&path)?;
-        f.write_all(&encode(data))?;
+        f.write_all(&encode_with_refs(data, &avail))?;
         f.sync_data()?;
     }
+    let (journal_seq, journal_offset) = journal.position();
     let m = Manifest {
         checkpoint_seq: seq,
-        journal_offset: journal.len(),
+        journal_seq,
+        journal_offset,
         next_lsn: journal.next_lsn(),
         next_session_id,
     };
     manifest::write(dir, &m)?;
-    // Old checkpoints are now unreachable from the manifest; their
-    // deletion is best-effort cleanup, not a correctness step.
-    if let Some(prev) = prev {
-        if prev.checkpoint_seq != 0 {
-            let _ = std::fs::remove_file(checkpoint_file(dir, prev.checkpoint_seq));
-        }
-    }
+    // Both sweeps are best-effort cleanup after the flip, not correctness
+    // steps: checkpoints unreachable from the retained roots, then
+    // journal segments wholly below the new replay horizon.
+    let _ = gc(dir, seq, retain);
+    let _ = journal::gc_segments(dir, journal_seq);
     Ok(m)
 }
 
@@ -368,7 +750,7 @@ pub fn write(
 mod tests {
     use super::*;
     use crate::dpc::StreamingSession;
-    use crate::geom::{DynPoints, PointStore};
+    use crate::geom::PointStore;
     use crate::prng::SplitMix64;
     use crate::proputil::gen_clustered_points;
 
@@ -380,8 +762,8 @@ mod tests {
         dir
     }
 
-    fn sample_data() -> CheckpointData {
-        let mut rng = SplitMix64::new(99);
+    fn sample_data_seeded(seed: u64) -> CheckpointData {
+        let mut rng = SplitMix64::new(seed);
         let pts = gen_clustered_points(&mut rng, 70, 2, 3, 40.0, 1.5);
         let mut s64 =
             StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::Epanechnikov).unwrap();
@@ -408,6 +790,33 @@ mod tests {
             ],
             sessions: vec![session],
         }
+    }
+
+    fn sample_data() -> CheckpointData {
+        sample_data_seeded(99)
+    }
+
+    fn assert_same_data(a: &CheckpointData, b: &CheckpointData) {
+        assert_eq!(a.streams.len(), b.streams.len());
+        for ((ida, sa), (idb, sb)) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(ida, idb);
+            match (sa, sb) {
+                (DynStreamState::F64(x), DynStreamState::F64(y)) => {
+                    assert_eq!(x.pts.coords(), y.pts.coords());
+                    assert_eq!(x.levels, y.levels);
+                    assert_eq!(x.rho, y.rho);
+                    assert_eq!(x.dep, y.dep);
+                    assert_eq!(x.delta, y.delta);
+                }
+                (DynStreamState::F32(x), DynStreamState::F32(y)) => {
+                    assert_eq!(x.pts.coords(), y.pts.coords());
+                    assert_eq!(x.levels, y.levels);
+                    assert_eq!(x.rho, y.rho);
+                }
+                _ => panic!("dtype mismatch between checkpoints"),
+            }
+        }
+        assert_eq!(a.sessions.len(), b.sessions.len());
     }
 
     #[test]
@@ -461,47 +870,104 @@ mod tests {
     }
 
     #[test]
-    fn write_flips_manifest_and_collects_old_files() {
-        use super::super::journal::{JournalWriter, JOURNAL_FILE};
-        let dir = tmpdir("write");
-        let mut journal = JournalWriter::create(&dir.join(JOURNAL_FILE), 1).unwrap();
-        journal
-            .append(&super::super::journal::JournalEntry::OpenStream {
-                stream: 1,
-                dim: 2,
-                dtype: Dtype::F64,
-                d_cut: 3.0,
-                density: DensityModel::CutoffCount,
-            })
-            .unwrap();
-        manifest::write(
-            &dir,
-            &Manifest {
-                checkpoint_seq: 0,
-                journal_offset: super::super::journal::JOURNAL_HEADER_LEN,
-                next_lsn: 1,
-                next_session_id: 1,
-            },
-        )
-        .unwrap();
+    fn delta_checkpoints_reference_unchanged_levels() {
+        let dir = tmpdir("delta");
+        let mut journal = JournalWriter::create(&dir, 1, 0).unwrap();
+        let data = sample_data();
 
-        let m1 = write(&dir, &mut journal, &sample_data(), 5).unwrap();
-        assert_eq!(m1.checkpoint_seq, 1);
-        assert_eq!(m1.journal_offset, journal.len());
-        assert!(checkpoint_file(&dir, 1).exists());
+        let m1 = write(&dir, &mut journal, &data, 5, 1).unwrap();
+        assert_eq!((m1.checkpoint_seq, m1.journal_seq), (1, 1));
+        let full_len = std::fs::metadata(checkpoint_file(&dir, 1)).unwrap().len();
 
-        let m2 = write(&dir, &mut journal, &sample_data(), 6).unwrap();
+        // Identical forest ⇒ every level refs checkpoint 1; the delta
+        // image carries only the index + inline artifacts.
+        let m2 = write(&dir, &mut journal, &data, 5, 1).unwrap();
         assert_eq!(m2.checkpoint_seq, 2);
-        assert!(checkpoint_file(&dir, 2).exists());
-        assert!(!checkpoint_file(&dir, 1).exists(), "old checkpoint must be collected");
-        assert_eq!(manifest::read(&dir).unwrap(), Some(m2));
-        assert_eq!(read(&dir, 2).unwrap().streams.len(), 2);
+        let delta_len = std::fs::metadata(checkpoint_file(&dir, 2)).unwrap().len();
+        assert!(
+            delta_len < full_len,
+            "delta ({delta_len} B) must be smaller than full ({full_len} B)"
+        );
+        assert!(
+            checkpoint_file(&dir, 1).exists(),
+            "checkpoint 1 is referenced by 2 and must survive GC"
+        );
 
-        // Ingest batch codec sanity: DynPoints round-trips through the
-        // journal entry the checkpoint's offset points past.
-        let scan = super::super::journal::scan(&dir.join(JOURNAL_FILE)).unwrap();
-        assert_eq!(scan.entries.len(), 1);
-        let _ = DynPoints::F64(PointStore::new(vec![1.0, 2.0], 2));
+        // Reassembly through the refs is byte-identical.
+        assert_same_data(&read(&dir, 2).unwrap(), &read(&dir, 1).unwrap());
+        assert_same_data(&read(&dir, 2).unwrap(), &decode(&encode(&data)).unwrap());
+
+        // A delta image is NOT self-contained: bare decode must refuse it
+        // rather than hand back a forest with holes.
+        let bytes = std::fs::read(checkpoint_file(&dir, 2)).unwrap();
+        assert!(matches!(decode(&bytes), Err(DpcError::CorruptCheckpoint { .. })));
+
+        // Fully-changed forest ⇒ nothing to reference; the old chain is
+        // no longer live and the sweep reclaims both old files.
+        let other = sample_data_seeded(1234);
+        let m3 = write(&dir, &mut journal, &other, 6, 1).unwrap();
+        assert_eq!(m3.checkpoint_seq, 3);
+        assert!(!checkpoint_file(&dir, 1).exists(), "unreferenced checkpoint 1 must be swept");
+        assert!(!checkpoint_file(&dir, 2).exists(), "unreferenced checkpoint 2 must be swept");
+        assert_same_data(&read(&dir, 3).unwrap(), &decode(&encode(&other)).unwrap());
+        assert_eq!(manifest::read(&dir).unwrap(), Some(m3));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retain_keeps_history_roots() {
+        let dir = tmpdir("retain");
+        let mut journal = JournalWriter::create(&dir, 1, 0).unwrap();
+        let a = sample_data_seeded(7);
+        let b = sample_data_seeded(8);
+        write(&dir, &mut journal, &a, 2, 2).unwrap();
+        write(&dir, &mut journal, &b, 2, 2).unwrap();
+        write(&dir, &mut journal, &b, 2, 2).unwrap();
+        // retain 2 keeps roots {3, 2}; 2 references nothing from 1 (a ≠ b),
+        // so 1 is swept.
+        assert!(!checkpoint_file(&dir, 1).exists());
+        assert!(checkpoint_file(&dir, 2).exists());
+        assert!(checkpoint_file(&dir, 3).exists());
+        assert_same_data(&read(&dir, 3).unwrap(), &read(&dir, 2).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_flips_manifest_and_journal_gc_trims_segments() {
+        use super::super::journal::{segment_file, JournalEntry};
+        let dir = tmpdir("write");
+        // Tiny rotation threshold: every append seals a segment.
+        let mut journal =
+            JournalWriter::create(&dir, 1, super::super::journal::JOURNAL_HEADER_LEN + 1).unwrap();
+        for i in 0..4 {
+            journal
+                .append(&JournalEntry::OpenStream {
+                    stream: i,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 3.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+        }
+        let live_seq = journal.seq();
+        assert!(live_seq >= 4);
+        let m = write(&dir, &mut journal, &sample_data(), 5, 1).unwrap();
+        assert_eq!(m.checkpoint_seq, 1);
+        assert_eq!((m.journal_seq, m.journal_offset), journal.position());
+        assert_eq!(manifest::read(&dir).unwrap(), Some(m));
+        // Segments below the replay horizon are gone; the live one stays.
+        for seq in 1..live_seq {
+            assert!(!dir.join(segment_file(seq)).exists(), "segment {seq} must be GC'd");
+        }
+        assert!(dir.join(segment_file(live_seq)).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_names_round_trip() {
+        assert_eq!(parse_checkpoint_name("checkpoint-12.pclc"), Some(12));
+        assert_eq!(parse_checkpoint_name("checkpoint-.pclc"), None);
+        assert_eq!(parse_checkpoint_name("journal-3.pclj"), None);
     }
 }

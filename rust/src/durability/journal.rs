@@ -1,32 +1,53 @@
-//! The write-ahead journal: an append-only log of every state-changing
-//! serve-mode command, durable before the command is acknowledged.
+//! The write-ahead journal: an append-only, **segmented** log of every
+//! state-changing serve-mode command, durable before the command is
+//! acknowledged.
 //!
-//! ## File format (`journal.pclj`)
+//! ## On-disk layout (`journal-<seq>.pclj`, decimal seq from 1)
+//!
+//! The log is a sequence of segment files with contiguous sequence
+//! numbers. Each segment:
 //!
 //! ```text
-//! header:  magic "PCLJ" (4 bytes) | version u32 LE        — 8 bytes
+//! header:  magic "PCLJ" (4) | version u32 LE | seq u64 LE | first_lsn u64 LE   — 24 bytes
 //! frame:   len u32 LE | crc u32 LE | payload (len bytes)
 //! payload: lsn u64 LE | kind u8 | body (kind-specific, see JournalEntry)
 //! ```
 //!
 //! The CRC-32 covers the payload only. LSNs are contiguous from 1 across
-//! the whole file — the journal is never head-truncated (checkpoints make
-//! replay *start* later, they do not rewrite history), so `journal
-//! inspect` can always audit the full command sequence.
+//! the whole *log* — each segment header pins where its slice of the
+//! sequence starts, so a scan can verify continuity across segment
+//! boundaries without trusting filenames alone (the header `seq` must
+//! also match the filename).
+//!
+//! ## Rotation and GC
+//!
+//! [`JournalWriter::append`] seals the live segment and opens the next
+//! one when a frame would push it past the configured `rotate_bytes`
+//! threshold (0 = never rotate). Sealing syncs the old file **before**
+//! the new one is created, so a crash can never leave an unsynced torn
+//! tail in a non-final segment. Checkpoints advance the manifest's
+//! replay position to a `(seq, offset)` pair; after the manifest flip,
+//! whole segments strictly below that horizon are deleted
+//! ([`super::checkpoint::write`]) in ascending order — the surviving
+//! files are always a contiguous suffix, and on-disk journal bytes are
+//! bounded by the live segments past the horizon instead of the full
+//! history.
 //!
 //! ## Torn tail vs corruption
 //!
-//! [`scan`] distinguishes the two failure shapes a crash can leave:
+//! [`scan_dir`] distinguishes the two failure shapes a crash can leave:
 //!
-//! - **Torn tail** — the file ends before a frame's declared bytes are all
-//!   present. This is the expected result of dying mid-`write`; the scan
-//!   reports the incomplete suffix (`torn_bytes`) and recovery truncates
-//!   it silently. Every acknowledged entry is still intact.
-//! - **Corruption** — a *complete* frame whose CRC mismatches, whose LSN
-//!   breaks the contiguous sequence, or whose payload does not decode.
-//!   That can only come from bit rot or external interference, so it
-//!   surfaces as [`DpcError::CorruptJournal`] with the byte offset —
-//!   never a partial parse.
+//! - **Torn tail** — the *final* segment ends before a frame's declared
+//!   bytes are all present. This is the expected result of dying
+//!   mid-`write`; the scan reports the incomplete suffix (`torn_bytes`)
+//!   and recovery truncates it silently. Every acknowledged entry is
+//!   still intact.
+//! - **Corruption** — a complete frame whose CRC mismatches, whose LSN
+//!   breaks the contiguous sequence, or whose payload does not decode —
+//!   or a short frame in any segment *other than the last* (sealed
+//!   segments were synced whole; a hole there can only be bit rot or
+//!   interference). These surface as [`DpcError::CorruptJournal`] with
+//!   the byte offset — never a partial parse.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -40,13 +61,40 @@ use super::crc32::crc32;
 use super::wire::{self, Cursor};
 
 pub const JOURNAL_MAGIC: [u8; 4] = *b"PCLJ";
-pub const JOURNAL_VERSION: u32 = 1;
-/// Header length: magic + version.
-pub const JOURNAL_HEADER_LEN: u64 = 8;
+pub const JOURNAL_VERSION: u32 = 2;
+/// Header length: magic + version + seq + first_lsn.
+pub const JOURNAL_HEADER_LEN: u64 = 24;
 /// Frame prefix: len + crc.
 const FRAME_PREFIX: usize = 8;
 
-pub const JOURNAL_FILE: &str = "journal.pclj";
+/// Filename of journal segment `seq` (`journal-<seq>.pclj`).
+pub fn segment_file(seq: u64) -> String {
+    format!("journal-{seq}.pclj")
+}
+
+/// Inverse of [`segment_file`]: parse a directory entry name, `None` for
+/// anything that is not a journal segment.
+pub fn parse_segment_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("journal-")?.strip_suffix(".pclj")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Every journal segment in `dir`, sorted ascending by seq. Does not
+/// open the files — callers decide which suffix to scan.
+pub fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>, DpcError> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(seq) = entry.file_name().to_str().and_then(parse_segment_name) {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(seq, _)| seq);
+    Ok(out)
+}
 
 /// Check that an encoded payload fits the frame format's u32 length field,
 /// returning the prefix value to write. A >4 GiB batch (≈270M f64 2-d
@@ -168,13 +216,34 @@ impl JournalEntry {
     }
 }
 
-/// Append handle. All writes go through [`JournalWriter::append`], which
-/// assigns the LSN, frames, checksums, and applies the fsync policy.
+fn encode_header(seq: u64, first_lsn: u64) -> Vec<u8> {
+    let mut header = Vec::with_capacity(JOURNAL_HEADER_LEN as usize);
+    header.extend_from_slice(&JOURNAL_MAGIC);
+    wire::put_u32(&mut header, JOURNAL_VERSION);
+    wire::put_u64(&mut header, seq);
+    wire::put_u64(&mut header, first_lsn);
+    header
+}
+
+/// Best-effort directory fsync so a just-created or just-deleted segment
+/// entry survives a crash; on filesystems that refuse to fsync dirs this
+/// degrades gracefully (same policy as the manifest flip).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Append handle over the segment chain. All writes go through
+/// [`JournalWriter::append`], which assigns the LSN, frames, checksums,
+/// rotates at the byte threshold, and applies the fsync policy.
 #[derive(Debug)]
 pub struct JournalWriter {
     file: File,
-    path: PathBuf,
-    /// Current end-of-journal byte offset (== file length).
+    dir: PathBuf,
+    /// Sequence number of the live (last) segment.
+    seq: u64,
+    /// Current end-of-segment byte offset (== live segment length).
     len: u64,
     next_lsn: u64,
     /// `1` = fsync every append (default), `N` = group-commit every N
@@ -183,37 +252,46 @@ pub struct JournalWriter {
     /// consistent prefix).
     fsync_every: u64,
     unsynced: u64,
+    /// Rotate to a new segment when the live one would exceed this many
+    /// bytes (0 = never rotate — the PR-6 single-file behaviour).
+    rotate_bytes: u64,
 }
 
 impl JournalWriter {
-    /// Create a fresh journal (header only, synced). Fails if the file
-    /// already exists — an existing journal must be scanned, not clobbered.
-    pub fn create(path: &Path, fsync_every: u64) -> Result<Self, DpcError> {
-        let mut file = OpenOptions::new().write(true).create_new(true).open(path)?;
-        let mut header = Vec::with_capacity(JOURNAL_HEADER_LEN as usize);
-        header.extend_from_slice(&JOURNAL_MAGIC);
-        wire::put_u32(&mut header, JOURNAL_VERSION);
-        file.write_all(&header)?;
+    /// Create a fresh journal: segment 1, header only, synced. Fails if
+    /// the segment already exists — an existing journal must be scanned,
+    /// not clobbered.
+    pub fn create(dir: &Path, fsync_every: u64, rotate_bytes: u64) -> Result<Self, DpcError> {
+        let path = dir.join(segment_file(1));
+        let mut file = OpenOptions::new().write(true).create_new(true).open(&path)?;
+        file.write_all(&encode_header(1, 1))?;
         file.sync_data()?;
+        sync_dir(dir);
         Ok(JournalWriter {
             file,
-            path: path.to_path_buf(),
+            dir: dir.to_path_buf(),
+            seq: 1,
             len: JOURNAL_HEADER_LEN,
             next_lsn: 1,
             fsync_every,
             unsynced: 0,
+            rotate_bytes,
         })
     }
 
-    /// Open an existing journal for appending at `valid_len`, truncating
-    /// any torn tail beyond it (as reported by [`scan`]).
+    /// Open the *last* segment of an existing journal for appending at
+    /// `valid_len`, truncating any torn tail beyond it (as reported by
+    /// [`scan_dir`]).
     pub fn open_end(
-        path: &Path,
+        dir: &Path,
+        seq: u64,
         valid_len: u64,
         next_lsn: u64,
         fsync_every: u64,
+        rotate_bytes: u64,
     ) -> Result<Self, DpcError> {
-        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let path = dir.join(segment_file(seq));
+        let file = OpenOptions::new().read(true).write(true).open(&path)?;
         if file.metadata()?.len() > valid_len {
             file.set_len(valid_len)?;
             file.sync_data()?;
@@ -222,23 +300,44 @@ impl JournalWriter {
         file.seek(SeekFrom::Start(valid_len))?;
         Ok(JournalWriter {
             file,
-            path: path.to_path_buf(),
+            dir: dir.to_path_buf(),
+            seq,
             len: valid_len,
             next_lsn,
             fsync_every,
             unsynced: 0,
+            rotate_bytes,
         })
     }
 
-    pub fn path(&self) -> &Path {
-        &self.path
+    /// Directory holding the segment chain.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
-    /// Byte offset one past the last durable-framed entry.
+    /// Path of the live segment.
+    pub fn path(&self) -> PathBuf {
+        self.dir.join(segment_file(self.seq))
+    }
+
+    /// Sequence number of the live segment.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Byte offset one past the last framed entry in the live segment.
     pub fn len(&self) -> u64 {
         self.len
     }
 
+    /// The replay position a checkpoint taken *now* should record:
+    /// `(live segment seq, offset one past the last framed entry)`.
+    pub fn position(&self) -> (u64, u64) {
+        (self.seq, self.len)
+    }
+
+    /// No entries in the live segment (rotation never leaves an empty
+    /// sealed segment behind, so for segment 1 this means an empty log).
     pub fn is_empty(&self) -> bool {
         self.len == JOURNAL_HEADER_LEN
     }
@@ -246,6 +345,30 @@ impl JournalWriter {
     /// The LSN the next [`JournalWriter::append`] will assign.
     pub fn next_lsn(&self) -> u64 {
         self.next_lsn
+    }
+
+    /// Seal the live segment and start the next one. Ordering is the
+    /// crash-safety argument: the old segment is fsynced *before* the new
+    /// file exists, so once a successor segment is visible, every sealed
+    /// predecessor is complete on disk — which is exactly the invariant
+    /// that lets [`scan_dir`] treat a short frame in a non-final segment
+    /// as corruption. A crash between the sync and the create just leaves
+    /// a full, still-live segment (recovery reopens it and rotates on the
+    /// next append); a crash after the create leaves a header-only final
+    /// segment (a legal empty tail).
+    fn rotate(&mut self) -> Result<(), DpcError> {
+        self.file.sync_data()?;
+        self.unsynced = 0;
+        let next_seq = self.seq + 1;
+        let path = self.dir.join(segment_file(next_seq));
+        let mut file = OpenOptions::new().write(true).create_new(true).open(&path)?;
+        file.write_all(&encode_header(next_seq, self.next_lsn))?;
+        file.sync_data()?;
+        sync_dir(&self.dir);
+        self.file = file;
+        self.seq = next_seq;
+        self.len = JOURNAL_HEADER_LEN;
+        Ok(())
     }
 
     /// Frame, checksum, and write `entry`; returns its LSN. Durability
@@ -267,6 +390,15 @@ impl JournalWriter {
         wire::put_u32(&mut frame, len);
         wire::put_u32(&mut frame, crc32(&payload));
         frame.extend_from_slice(&payload);
+        // Rotate first if this frame would push a non-empty live segment
+        // past the threshold: segments stay under `rotate_bytes` unless a
+        // single frame alone exceeds it.
+        if self.rotate_bytes != 0
+            && self.len > JOURNAL_HEADER_LEN
+            && self.len + frame.len() as u64 > self.rotate_bytes
+        {
+            self.rotate()?;
+        }
         self.file.write_all(&frame)?;
         self.len += frame.len() as u64;
         self.next_lsn += 1;
@@ -277,7 +409,8 @@ impl JournalWriter {
         Ok(lsn)
     }
 
-    /// Force everything appended so far to stable storage.
+    /// Force everything appended so far to stable storage. (Sealed
+    /// segments were synced at rotation; only the live one can be dirty.)
     pub fn sync(&mut self) -> Result<(), DpcError> {
         if self.unsynced > 0 || self.fsync_every != 1 {
             self.file.sync_data()?;
@@ -287,57 +420,123 @@ impl JournalWriter {
     }
 }
 
-/// One decoded frame, with its position for error reporting and
-/// checkpoint offsets.
+/// One decoded frame, with its position (segment + byte offset) for
+/// error reporting and checkpoint replay offsets.
 #[derive(Clone, Debug)]
 pub struct ScannedFrame {
-    /// Byte offset of the frame's length prefix.
+    /// Segment the frame lives in.
+    pub seq: u64,
+    /// Byte offset of the frame's length prefix within that segment.
     pub offset: u64,
     pub lsn: u64,
     pub entry: JournalEntry,
 }
 
-/// Result of a full journal scan.
+/// Per-segment summary from a [`scan_dir`] pass (sizes for `journal
+/// inspect`, the tail state for recovery).
+#[derive(Clone, Debug)]
+pub struct SegmentInfo {
+    pub seq: u64,
+    pub path: PathBuf,
+    /// LSN of the segment's first frame, from its header.
+    pub first_lsn: u64,
+    pub frames: usize,
+    /// Byte offset one past the last fully-valid frame.
+    pub valid_len: u64,
+    /// Bytes of incomplete final frame beyond `valid_len` (0 = clean;
+    /// nonzero is only legal in the last segment).
+    pub torn_bytes: u64,
+}
+
+/// Result of scanning a segment chain.
 #[derive(Debug)]
 pub struct ScanOutcome {
+    /// Every decoded frame across the scanned segments, in LSN order.
     pub entries: Vec<ScannedFrame>,
-    /// Byte offset one past the last fully-valid frame — where appends
-    /// resume after truncating the tail.
-    pub valid_len: u64,
-    /// Bytes of incomplete final frame beyond `valid_len` (0 = clean).
+    /// The scanned segments, ascending by seq (never empty).
+    pub segments: Vec<SegmentInfo>,
+    /// Torn bytes in the final segment (0 = clean shutdown).
     pub torn_bytes: u64,
-    /// The LSN a writer reopened at `valid_len` should assign next.
+    /// The LSN a writer reopened at the end of the chain should assign
+    /// next.
     pub next_lsn: u64,
 }
 
-/// Read and validate the whole journal. Torn tails are *reported*, not
-/// errors; anything else malformed is [`DpcError::CorruptJournal`].
-pub fn scan(path: &Path) -> Result<ScanOutcome, DpcError> {
+impl ScanOutcome {
+    /// The live (last) segment's seq.
+    pub fn last_seq(&self) -> u64 {
+        // lint: allow(panic-surface) — scan_dir never returns an empty
+        // segment list (it errors instead), so last() always exists.
+        self.segments.last().expect("scan has at least one segment").seq
+    }
+
+    /// Valid byte length of the live segment — where appends resume.
+    pub fn valid_len(&self) -> u64 {
+        // lint: allow(panic-surface) — same invariant as last_seq.
+        self.segments.last().expect("scan has at least one segment").valid_len
+    }
+}
+
+struct SegmentScan {
+    first_lsn: u64,
+    entries: Vec<ScannedFrame>,
+    valid_len: u64,
+    torn_bytes: u64,
+    next_lsn: u64,
+}
+
+/// Read and validate one segment file. `expect_seq` pins the header's
+/// seq to the filename; LSN continuity against the *chain* is the
+/// caller's job (it knows the running expected LSN).
+fn scan_segment(path: &Path, expect_seq: u64) -> Result<SegmentScan, DpcError> {
     let mut buf = Vec::new();
     File::open(path)?.read_to_end(&mut buf)?;
     if buf.len() < JOURNAL_HEADER_LEN as usize {
         return Err(DpcError::CorruptJournal {
             offset: 0,
-            detail: format!("file is {} bytes, shorter than the 8-byte header", buf.len()),
+            detail: format!(
+                "segment {expect_seq} is {} bytes, shorter than the {JOURNAL_HEADER_LEN}-byte header",
+                buf.len()
+            ),
         });
     }
     if buf[..4] != JOURNAL_MAGIC {
         return Err(DpcError::CorruptJournal {
             offset: 0,
-            detail: format!("bad magic {:?} (want \"PCLJ\")", &buf[..4]),
+            detail: format!("segment {expect_seq}: bad magic {:?} (want \"PCLJ\")", &buf[..4]),
         });
     }
-    let version = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let mut cur = Cursor::new(&buf[4..JOURNAL_HEADER_LEN as usize]);
+    let header = (|| -> Result<(u32, u64, u64), String> {
+        Ok((cur.u32()?, cur.u64()?, cur.u64()?))
+    })();
+    // bounds: the length check above proved JOURNAL_HEADER_LEN bytes exist,
+    // so the three header reads cannot fail; keep the Result plumbing for
+    // totality anyway.
+    let (version, seq, first_lsn) =
+        header.map_err(|detail| DpcError::CorruptJournal { offset: 4, detail })?;
     if version != JOURNAL_VERSION {
         return Err(DpcError::CorruptJournal {
             offset: 4,
             detail: format!("unsupported journal version {version} (want {JOURNAL_VERSION})"),
         });
     }
+    if seq != expect_seq {
+        return Err(DpcError::CorruptJournal {
+            offset: 8,
+            detail: format!("segment header carries seq {seq}, filename says {expect_seq}"),
+        });
+    }
+    if first_lsn == 0 {
+        return Err(DpcError::CorruptJournal {
+            offset: 16,
+            detail: format!("segment {seq} header carries first_lsn 0 (LSNs start at 1)"),
+        });
+    }
 
     let mut entries = Vec::new();
     let mut pos = JOURNAL_HEADER_LEN as usize;
-    let mut expected_lsn = 1u64;
+    let mut expected_lsn = first_lsn;
     while pos < buf.len() {
         let avail = buf.len() - pos;
         if avail < FRAME_PREFIX {
@@ -352,7 +551,10 @@ pub fn scan(path: &Path) -> Result<ScanOutcome, DpcError> {
         if crc32(payload) != crc {
             return Err(DpcError::CorruptJournal {
                 offset: pos as u64,
-                detail: format!("frame CRC mismatch (stored {crc:#010x}, computed {:#010x})", crc32(payload)),
+                detail: format!(
+                    "segment {seq}: frame CRC mismatch (stored {crc:#010x}, computed {:#010x})",
+                    crc32(payload)
+                ),
             });
         }
         let mut cur = Cursor::new(payload);
@@ -360,21 +562,126 @@ pub fn scan(path: &Path) -> Result<ScanOutcome, DpcError> {
         if lsn != expected_lsn {
             return Err(DpcError::CorruptJournal {
                 offset: pos as u64,
-                detail: format!("LSN discontinuity: frame carries {lsn}, expected {expected_lsn}"),
+                detail: format!(
+                    "segment {seq}: LSN discontinuity: frame carries {lsn}, expected {expected_lsn}"
+                ),
             });
         }
         let entry = JournalEntry::decode(&mut cur)
             .map_err(|detail| DpcError::CorruptJournal { offset: pos as u64, detail })?;
-        entries.push(ScannedFrame { offset: pos as u64, lsn, entry });
+        entries.push(ScannedFrame { seq, offset: pos as u64, lsn, entry });
         expected_lsn += 1;
         pos += FRAME_PREFIX + len;
     }
-    Ok(ScanOutcome {
+    Ok(SegmentScan {
+        first_lsn,
         entries,
         valid_len: pos as u64,
         torn_bytes: (buf.len() - pos) as u64,
         next_lsn: expected_lsn,
     })
+}
+
+/// Read and validate the segment chain from `from_seq` to the end.
+///
+/// Segments strictly below `from_seq` are ignored — they are below the
+/// caller's replay horizon (a crash between a manifest flip and the GC
+/// sweep legally leaves such leftovers; the next checkpoint deletes
+/// them). The scanned suffix must be seq-contiguous, LSN-contiguous
+/// across boundaries, and whole except for a torn tail in the *final*
+/// segment; anything else is [`DpcError::CorruptJournal`].
+pub fn scan_dir(dir: &Path, from_seq: u64) -> Result<ScanOutcome, DpcError> {
+    let all = list_segments(dir)?;
+    let chain: Vec<&(u64, PathBuf)> = all.iter().filter(|&&(seq, _)| seq >= from_seq).collect();
+    if chain.is_empty() {
+        return Err(DpcError::CorruptJournal {
+            offset: 0,
+            detail: format!("no journal segment at or above seq {from_seq} in {}", dir.display()),
+        });
+    }
+    if chain[0].0 != from_seq {
+        return Err(DpcError::CorruptJournal {
+            offset: 0,
+            detail: format!("journal segment {from_seq} is missing (chain starts at {})", chain[0].0),
+        });
+    }
+    let mut entries = Vec::new();
+    let mut segments = Vec::new();
+    let mut expected_lsn: Option<u64> = None;
+    for (i, &&(seq, ref path)) in chain.iter().enumerate() {
+        if i > 0 && seq != chain[i - 1].0 + 1 {
+            return Err(DpcError::CorruptJournal {
+                offset: 0,
+                detail: format!("segment gap: {} is followed by {seq}", chain[i - 1].0),
+            });
+        }
+        let s = scan_segment(path, seq)?;
+        if let Some(want) = expected_lsn {
+            if s.first_lsn != want {
+                return Err(DpcError::CorruptJournal {
+                    offset: 16,
+                    detail: format!(
+                        "segment {seq} header claims first LSN {}, chain expects {want}",
+                        s.first_lsn
+                    ),
+                });
+            }
+        }
+        let last = i + 1 == chain.len();
+        if !last && s.torn_bytes != 0 {
+            return Err(DpcError::CorruptJournal {
+                offset: s.valid_len,
+                detail: format!(
+                    "segment {seq} has a {}-byte torn tail but is not the final segment (sealed segments are synced whole)",
+                    s.torn_bytes
+                ),
+            });
+        }
+        expected_lsn = Some(s.next_lsn);
+        let frames = s.entries.len();
+        entries.extend(s.entries);
+        segments.push(SegmentInfo {
+            seq,
+            path: path.clone(),
+            first_lsn: s.first_lsn,
+            frames,
+            valid_len: s.valid_len,
+            torn_bytes: s.torn_bytes,
+        });
+    }
+    // lint: allow(panic-surface) — the chain is non-empty, so the loop ran
+    // at least once and both unwraps below are on populated values.
+    let torn_bytes = segments.last().map(|s| s.torn_bytes).unwrap_or(0);
+    let next_lsn = expected_lsn.unwrap_or(1);
+    Ok(ScanOutcome { entries, segments, torn_bytes, next_lsn })
+}
+
+/// Delete every segment strictly below `horizon_seq`, in **ascending**
+/// order — a crash mid-sweep then leaves a contiguous suffix (a gap in
+/// the middle of the surviving chain would scan as corruption). Called
+/// after the manifest flip; best-effort (correctness never depends on
+/// the deletes, only disk usage does). Returns the seqs actually
+/// removed.
+pub fn gc_segments(dir: &Path, horizon_seq: u64) -> Vec<u64> {
+    let mut removed = Vec::new();
+    let Ok(all) = list_segments(dir) else {
+        return removed;
+    };
+    for (seq, path) in all {
+        if seq >= horizon_seq {
+            break;
+        }
+        if std::fs::remove_file(&path).is_ok() {
+            removed.push(seq);
+        } else {
+            // Stop at the first failure so the survivors stay contiguous.
+            break;
+        }
+    }
+    if !removed.is_empty() {
+        sync_dir(dir);
+    }
+    removed
 }
 
 #[cfg(test)]
@@ -424,6 +731,17 @@ mod tests {
     }
 
     #[test]
+    fn segment_names_round_trip() {
+        assert_eq!(segment_file(1), "journal-1.pclj");
+        assert_eq!(parse_segment_name("journal-1.pclj"), Some(1));
+        assert_eq!(parse_segment_name("journal-42.pclj"), Some(42));
+        assert_eq!(parse_segment_name("journal-.pclj"), None);
+        assert_eq!(parse_segment_name("journal-x.pclj"), None);
+        assert_eq!(parse_segment_name("journal.pclj"), None);
+        assert_eq!(parse_segment_name("checkpoint-1.pclc"), None);
+    }
+
+    #[test]
     fn oversized_payloads_are_rejected_up_front() {
         // The bound itself, without allocating 4 GiB.
         assert_eq!(check_frame_len(0).unwrap(), 0);
@@ -436,14 +754,13 @@ mod tests {
         // And the writer stays clean after a rejected append: nothing was
         // framed, so normal entries still land with consecutive LSNs.
         let dir = tmpdir("oversize");
-        let path = dir.join(JOURNAL_FILE);
-        let mut w = JournalWriter::create(&path, 1).unwrap();
+        let mut w = JournalWriter::create(&dir, 1, 0).unwrap();
         let before = w.len();
         assert_eq!(w.next_lsn(), 1);
         w.append(&JournalEntry::CloseStream { stream: 9 }).unwrap();
         assert!(w.len() > before);
         assert_eq!(w.next_lsn(), 2);
-        let scan = scan(&path).unwrap();
+        let scan = scan_dir(&dir, 1).unwrap();
         assert_eq!(scan.entries.len(), 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -451,18 +768,20 @@ mod tests {
     #[test]
     fn append_scan_round_trip() {
         let dir = tmpdir("roundtrip");
-        let path = dir.join(JOURNAL_FILE);
-        let mut w = JournalWriter::create(&path, 1).unwrap();
+        let mut w = JournalWriter::create(&dir, 1, 0).unwrap();
         let entries = sample_entries();
         for (i, e) in entries.iter().enumerate() {
             assert_eq!(w.append(e).unwrap(), i as u64 + 1);
         }
         let end = w.len();
+        assert_eq!(w.position(), (1, end));
         drop(w);
 
-        let scan = scan(&path).unwrap();
+        let scan = scan_dir(&dir, 1).unwrap();
         assert_eq!(scan.entries.len(), entries.len());
-        assert_eq!(scan.valid_len, end);
+        assert_eq!(scan.segments.len(), 1);
+        assert_eq!(scan.valid_len(), end);
+        assert_eq!(scan.last_seq(), 1);
         assert_eq!(scan.torn_bytes, 0);
         assert_eq!(scan.next_lsn, entries.len() as u64 + 1);
         for (got, want) in scan.entries.iter().zip(&entries) {
@@ -472,10 +791,73 @@ mod tests {
     }
 
     #[test]
-    fn torn_tail_is_reported_then_truncated_on_reopen() {
+    fn rotation_splits_segments_and_preserves_lsn_chain() {
+        let dir = tmpdir("rotate");
+        // Tiny threshold: every frame rotates once the segment is
+        // non-empty, so N appends land in N segments.
+        let mut w = JournalWriter::create(&dir, 1, JOURNAL_HEADER_LEN + 1).unwrap();
+        let entries = sample_entries();
+        for e in &entries {
+            w.append(e).unwrap();
+        }
+        assert_eq!(w.seq(), entries.len() as u64);
+        drop(w);
+        let scan = scan_dir(&dir, 1).unwrap();
+        assert_eq!(scan.segments.len(), entries.len());
+        assert_eq!(scan.entries.len(), entries.len());
+        assert_eq!(scan.next_lsn, entries.len() as u64 + 1);
+        for (i, s) in scan.segments.iter().enumerate() {
+            assert_eq!(s.seq, i as u64 + 1);
+            assert_eq!(s.first_lsn, i as u64 + 1);
+            assert_eq!(s.frames, 1);
+        }
+        // Entries carry their (seq, offset) position.
+        for (i, f) in scan.entries.iter().enumerate() {
+            assert_eq!((f.seq, f.offset), (i as u64 + 1, JOURNAL_HEADER_LEN));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn generous_threshold_keeps_one_segment() {
+        let dir = tmpdir("nosplit");
+        let mut w = JournalWriter::create(&dir, 1, 1 << 20).unwrap();
+        for e in sample_entries() {
+            w.append(&e).unwrap();
+        }
+        assert_eq!(w.seq(), 1);
+        drop(w);
+        assert_eq!(scan_dir(&dir, 1).unwrap().segments.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_deletes_strictly_below_horizon() {
+        let dir = tmpdir("gc");
+        let mut w = JournalWriter::create(&dir, 1, JOURNAL_HEADER_LEN + 1).unwrap();
+        for e in sample_entries() {
+            w.append(&e).unwrap();
+        }
+        let live = w.seq();
+        drop(w);
+        let removed = gc_segments(&dir, live);
+        assert_eq!(removed, (1..live).collect::<Vec<_>>());
+        // The suffix still scans clean from the horizon.
+        let scan = scan_dir(&dir, live).unwrap();
+        assert_eq!(scan.segments.len(), 1);
+        assert_eq!(scan.entries.len(), 1);
+        assert_eq!(scan.next_lsn, sample_entries().len() as u64 + 1);
+        // Scanning from seq 1 now fails — the chain no longer starts there.
+        assert!(matches!(scan_dir(&dir, 1), Err(DpcError::CorruptJournal { .. })));
+        // GC at the same horizon again is a no-op.
+        assert!(gc_segments(&dir, live).is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_in_final_segment_is_reported_then_truncated_on_reopen() {
         let dir = tmpdir("torn");
-        let path = dir.join(JOURNAL_FILE);
-        let mut w = JournalWriter::create(&path, 1).unwrap();
+        let mut w = JournalWriter::create(&dir, 1, 0).unwrap();
         for e in sample_entries() {
             w.append(&e).unwrap();
         }
@@ -483,44 +865,96 @@ mod tests {
         drop(w);
 
         // Chop the final frame in half: torn, not corrupt.
-        let clean = scan(&path).unwrap();
+        let clean = scan_dir(&dir, 1).unwrap();
         let last_off = clean.entries.last().unwrap().offset;
         let cut = last_off + (full - last_off) / 2;
+        let path = dir.join(segment_file(1));
         let f = OpenOptions::new().write(true).open(&path).unwrap();
         f.set_len(cut).unwrap();
         drop(f);
 
-        let torn = scan(&path).unwrap();
+        let torn = scan_dir(&dir, 1).unwrap();
         assert_eq!(torn.entries.len(), clean.entries.len() - 1);
-        assert_eq!(torn.valid_len, last_off);
+        assert_eq!(torn.valid_len(), last_off);
         assert_eq!(torn.torn_bytes, cut - last_off);
 
         // Reopen at the valid prefix: tail physically removed, appends
         // continue the LSN sequence.
-        let mut w = JournalWriter::open_end(&path, torn.valid_len, torn.next_lsn, 1).unwrap();
-        assert_eq!(std::fs::metadata(&path).unwrap().len(), torn.valid_len);
+        let mut w =
+            JournalWriter::open_end(&dir, torn.last_seq(), torn.valid_len(), torn.next_lsn, 1, 0)
+                .unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), torn.valid_len());
         w.append(&JournalEntry::CloseStream { stream: 1 }).unwrap();
         drop(w);
-        let again = scan(&path).unwrap();
+        let again = scan_dir(&dir, 1).unwrap();
         assert_eq!(again.entries.len(), torn.entries.len() + 1);
         assert_eq!(again.torn_bytes, 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
-    fn bit_flip_in_complete_frame_is_corruption() {
-        let dir = tmpdir("bitflip");
-        let path = dir.join(JOURNAL_FILE);
-        let mut w = JournalWriter::create(&path, 1).unwrap();
+    fn torn_tail_in_sealed_segment_is_corruption() {
+        let dir = tmpdir("torn-sealed");
+        let mut w = JournalWriter::create(&dir, 1, JOURNAL_HEADER_LEN + 1).unwrap();
+        for e in sample_entries() {
+            w.append(&e).unwrap();
+        }
+        assert!(w.seq() > 2);
+        drop(w);
+        // Shorten segment 2 (sealed, not final) by a few bytes.
+        let path = dir.join(segment_file(2));
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        match scan_dir(&dir, 1) {
+            Err(DpcError::CorruptJournal { detail, .. }) => {
+                assert!(detail.contains("not the final segment"), "{detail}")
+            }
+            other => panic!("expected CorruptJournal, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn segment_gap_and_header_mismatch_are_corruption() {
+        let dir = tmpdir("gap");
+        let mut w = JournalWriter::create(&dir, 1, JOURNAL_HEADER_LEN + 1).unwrap();
         for e in sample_entries() {
             w.append(&e).unwrap();
         }
         drop(w);
+        // Remove a middle segment: gap.
+        std::fs::remove_file(dir.join(segment_file(3))).unwrap();
+        match scan_dir(&dir, 1) {
+            Err(DpcError::CorruptJournal { detail, .. }) => assert!(detail.contains("gap"), "{detail}"),
+            other => panic!("expected CorruptJournal, got {other:?}"),
+        }
+        // Renaming a segment breaks the header/filename pin.
+        std::fs::rename(dir.join(segment_file(4)), dir.join(segment_file(3))).unwrap();
+        match scan_dir(&dir, 1) {
+            Err(DpcError::CorruptJournal { detail, .. }) => {
+                assert!(detail.contains("filename says"), "{detail}")
+            }
+            other => panic!("expected CorruptJournal, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_in_complete_frame_is_corruption() {
+        let dir = tmpdir("bitflip");
+        let mut w = JournalWriter::create(&dir, 1, 0).unwrap();
+        for e in sample_entries() {
+            w.append(&e).unwrap();
+        }
+        drop(w);
+        let path = dir.join(segment_file(1));
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x40;
         std::fs::write(&path, &bytes).unwrap();
-        match scan(&path) {
+        match scan_dir(&dir, 1) {
             Err(DpcError::CorruptJournal { .. }) => {}
             other => panic!("expected CorruptJournal, got {other:?}"),
         }
@@ -530,8 +964,7 @@ mod tests {
     #[test]
     fn lsn_discontinuity_is_corruption() {
         let dir = tmpdir("lsn");
-        let path = dir.join(JOURNAL_FILE);
-        let mut w = JournalWriter::create(&path, 1).unwrap();
+        let mut w = JournalWriter::create(&dir, 1, 0).unwrap();
         w.append(&JournalEntry::CloseStream { stream: 1 }).unwrap();
         drop(w);
         // Re-frame a second entry with LSN 7 (valid CRC, wrong sequence).
@@ -542,10 +975,10 @@ mod tests {
         wire::put_u32(&mut frame, payload.len() as u32);
         wire::put_u32(&mut frame, crc32(&payload));
         frame.extend_from_slice(&payload);
-        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        let mut f = OpenOptions::new().append(true).open(dir.join(segment_file(1))).unwrap();
         f.write_all(&frame).unwrap();
         drop(f);
-        match scan(&path) {
+        match scan_dir(&dir, 1) {
             Err(DpcError::CorruptJournal { detail, .. }) => {
                 assert!(detail.contains("discontinuity"), "{detail}")
             }
@@ -561,23 +994,21 @@ mod tests {
         // policy value, including 0 = never.
         for fsync_every in [0u64, 1, 3] {
             let dir = tmpdir(&format!("sync{fsync_every}"));
-            let path = dir.join(JOURNAL_FILE);
-            let mut w = JournalWriter::create(&path, fsync_every).unwrap();
+            let mut w = JournalWriter::create(&dir, fsync_every, 0).unwrap();
             for e in sample_entries() {
                 w.append(&e).unwrap();
             }
             w.sync().unwrap();
-            assert_eq!(scan(&path).unwrap().entries.len(), sample_entries().len());
+            assert_eq!(scan_dir(&dir, 1).unwrap().entries.len(), sample_entries().len());
             std::fs::remove_dir_all(&dir).unwrap();
         }
     }
 
     #[test]
-    fn create_refuses_existing_file() {
+    fn create_refuses_existing_segment() {
         let dir = tmpdir("exists");
-        let path = dir.join(JOURNAL_FILE);
-        JournalWriter::create(&path, 1).unwrap();
-        assert!(JournalWriter::create(&path, 1).is_err());
+        JournalWriter::create(&dir, 1, 0).unwrap();
+        assert!(JournalWriter::create(&dir, 1, 0).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,13 +1,21 @@
 //! The durability manifest: a single fixed-size record naming the latest
-//! valid `(checkpoint, journal offset)` pair. Recovery reads it first and
-//! trusts nothing it does not point at.
+//! valid `(checkpoint, journal position)` pair. Recovery reads it first
+//! and trusts nothing it does not point at.
 //!
 //! ## File format (`MANIFEST`)
 //!
 //! ```text
 //! magic "PCLM" | version u32 | checkpoint_seq u64 (0 = no checkpoint)
-//! | journal_offset u64 | next_lsn u64 | next_session_id u64 | crc u32
+//! | journal_seq u64 | journal_offset u64 | next_lsn u64
+//! | next_session_id u64 | crc u32
 //! ```
+//!
+//! Version 2 (this layout, 52 bytes) replaced the pre-segmentation v1
+//! record by inserting `journal_seq`: with a segmented journal the replay
+//! position is a `(segment seq, byte offset)` pair, not a bare offset.
+//! v1 manifests are rejected as [`DpcError::CorruptManifest`] — the
+//! formats are pre-release and migrate by rebuilding the durable dir,
+//! not by in-place upgrade (see DESIGN.md §Durability).
 //!
 //! The CRC-32 covers every preceding byte. The record is written with the
 //! classic atomic-replace dance — write `MANIFEST.tmp`, fsync it, rename
@@ -26,21 +34,25 @@ use super::crc32::crc32;
 use super::wire::{self, Cursor};
 
 pub const MANIFEST_MAGIC: [u8; 4] = *b"PCLM";
-pub const MANIFEST_VERSION: u32 = 1;
+pub const MANIFEST_VERSION: u32 = 2;
 pub const MANIFEST_FILE: &str = "MANIFEST";
 
-/// Total encoded size: 4 + 4 + 8·4 + 4.
-const MANIFEST_LEN: usize = 44;
+/// Total encoded size: 4 + 4 + 8·5 + 4.
+const MANIFEST_LEN: usize = 52;
 
 /// The durable root of trust for a `--durable` directory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Manifest {
     /// Sequence number of the newest valid checkpoint
     /// (`checkpoint-<seq>.pclc`); 0 means "no checkpoint yet — replay the
-    /// journal from its header".
+    /// journal from segment 1".
     pub checkpoint_seq: u64,
-    /// Journal byte offset replay starts from: everything at or past this
-    /// offset post-dates the checkpoint.
+    /// Journal segment replay starts in (`journal-<seq>.pclj`). Segments
+    /// strictly below this are past the replay horizon and eligible for
+    /// GC; leftovers below it are ignored by recovery.
+    pub journal_seq: u64,
+    /// Byte offset within that segment replay starts from: everything at
+    /// or past this offset post-dates the checkpoint.
     pub journal_offset: u64,
     /// First LSN not covered by the checkpoint (the LSN expected at
     /// `journal_offset`, or the writer's next LSN if the journal ends
@@ -56,6 +68,7 @@ impl Manifest {
         out.extend_from_slice(&MANIFEST_MAGIC);
         wire::put_u32(&mut out, MANIFEST_VERSION);
         wire::put_u64(&mut out, self.checkpoint_seq);
+        wire::put_u64(&mut out, self.journal_seq);
         wire::put_u64(&mut out, self.journal_offset);
         wire::put_u64(&mut out, self.next_lsn);
         wire::put_u64(&mut out, self.next_session_id);
@@ -113,14 +126,20 @@ pub fn read(dir: &Path) -> Result<Option<Manifest>, DpcError> {
     }
     let version = cur.u32().map_err(&corrupt)?;
     if version != MANIFEST_VERSION {
-        return Err(corrupt(format!("unsupported manifest version {version}")));
+        return Err(corrupt(format!(
+            "unsupported manifest version {version} (want {MANIFEST_VERSION}; pre-segmentation dirs must be rebuilt)"
+        )));
     }
     let m = Manifest {
         checkpoint_seq: cur.u64().map_err(&corrupt)?,
+        journal_seq: cur.u64().map_err(&corrupt)?,
         journal_offset: cur.u64().map_err(&corrupt)?,
         next_lsn: cur.u64().map_err(&corrupt)?,
         next_session_id: cur.u64().map_err(&corrupt)?,
     };
+    if m.journal_seq == 0 {
+        return Err(corrupt("journal_seq must be positive (segments start at 1)".into()));
+    }
     if m.next_lsn == 0 || m.next_session_id == 0 {
         return Err(corrupt("next_lsn and next_session_id must be positive".into()));
     }
@@ -144,11 +163,23 @@ mod tests {
     fn round_trip_and_missing() {
         let dir = tmpdir("rt");
         assert!(read(&dir).unwrap().is_none(), "fresh dir has no manifest");
-        let m = Manifest { checkpoint_seq: 3, journal_offset: 1024, next_lsn: 17, next_session_id: 5 };
+        let m = Manifest {
+            checkpoint_seq: 3,
+            journal_seq: 2,
+            journal_offset: 1024,
+            next_lsn: 17,
+            next_session_id: 5,
+        };
         write(&dir, &m).unwrap();
         assert_eq!(read(&dir).unwrap(), Some(m));
         // Overwrite is atomic-replace, not append.
-        let m2 = Manifest { checkpoint_seq: 4, journal_offset: 2048, next_lsn: 30, next_session_id: 6 };
+        let m2 = Manifest {
+            checkpoint_seq: 4,
+            journal_seq: 7,
+            journal_offset: 2048,
+            next_lsn: 30,
+            next_session_id: 6,
+        };
         write(&dir, &m2).unwrap();
         assert_eq!(read(&dir).unwrap(), Some(m2));
         std::fs::remove_dir_all(&dir).unwrap();
@@ -157,7 +188,13 @@ mod tests {
     #[test]
     fn corruption_shapes_are_typed() {
         let dir = tmpdir("corrupt");
-        let m = Manifest { checkpoint_seq: 1, journal_offset: 8, next_lsn: 1, next_session_id: 1 };
+        let m = Manifest {
+            checkpoint_seq: 1,
+            journal_seq: 1,
+            journal_offset: 24,
+            next_lsn: 1,
+            next_session_id: 1,
+        };
         write(&dir, &m).unwrap();
         let path = dir.join(MANIFEST_FILE);
         let good = std::fs::read(&path).unwrap();
@@ -175,6 +212,52 @@ mod tests {
         // Garbage of the right length.
         std::fs::write(&path, vec![0xAB; good.len()]).unwrap();
         assert!(matches!(read(&dir), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v1_manifest_is_rejected_with_guidance() {
+        // Hand-build a valid-CRC version-1 record (44 bytes, no
+        // journal_seq): must be refused, not misparsed.
+        let dir = tmpdir("v1");
+        let mut out = Vec::new();
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        wire::put_u32(&mut out, 1);
+        for v in [0u64, 8, 1, 1] {
+            wire::put_u64(&mut out, v);
+        }
+        let crc = crc32(&out);
+        wire::put_u32(&mut out, crc);
+        std::fs::write(dir.join(MANIFEST_FILE), &out).unwrap();
+        match read(&dir) {
+            Err(DpcError::CorruptManifest { detail }) => {
+                // 44 ≠ 52 bytes trips the length gate first; either
+                // message is an acceptable typed rejection.
+                assert!(detail.contains("52") || detail.contains("version"), "{detail}");
+            }
+            other => panic!("expected CorruptManifest, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn zero_journal_seq_is_rejected() {
+        let dir = tmpdir("zeroseq");
+        let mut out = Vec::new();
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        wire::put_u32(&mut out, MANIFEST_VERSION);
+        for v in [0u64, 0, 24, 1, 1] {
+            wire::put_u64(&mut out, v);
+        }
+        let crc = crc32(&out);
+        wire::put_u32(&mut out, crc);
+        std::fs::write(dir.join(MANIFEST_FILE), &out).unwrap();
+        match read(&dir) {
+            Err(DpcError::CorruptManifest { detail }) => {
+                assert!(detail.contains("journal_seq"), "{detail}")
+            }
+            other => panic!("expected CorruptManifest, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -3,9 +3,9 @@
 //!
 //! A `--durable <dir>` coordinator writes every state-changing command —
 //! `open_stream` / `ingest` / `close_stream`, `open_session` / `recut` /
-//! `close_session` — to an append-only, CRC-framed journal *before*
-//! acknowledging it, and periodically snapshots the live state (each
-//! stream's Bentley–Saxe forest, each session's cached (ρ, λ, δ)
+//! `close_session` — to an append-only, CRC-framed, *segmented* journal
+//! before acknowledging it, and periodically snapshots the live state
+//! (each stream's Bentley–Saxe forest, each session's cached (ρ, λ, δ)
 //! artifacts) into a checkpoint named by an atomically-replaced manifest.
 //! After a crash, [`recover`] loads the newest checkpoint and replays the
 //! journal suffix through the normal ingest paths; because every path is
@@ -13,22 +13,32 @@
 //! build over the concatenated batches — for every density model, dtype,
 //! and thread count.
 //!
+//! Disk use is bounded: the journal rotates to a new segment at a
+//! configurable byte threshold, and every checkpoint ends with two GC
+//! sweeps — whole journal segments strictly below the manifest's replay
+//! horizon, and checkpoint files no live snapshot references (checkpoints
+//! are *incremental*: unchanged forest levels are stored once and
+//! referenced by content address from later snapshots).
+//!
 //! The directory layout:
 //!
 //! ```text
-//! <dir>/journal.pclj          append-only command log   (magic "PCLJ")
-//! <dir>/checkpoint-<seq>.pclc newest state snapshot     (magic "PCLC")
-//! <dir>/MANIFEST              root of trust             (magic "PCLM")
+//! <dir>/journal-<seq>.pclj     command-log segments       (magic "PCLJ")
+//! <dir>/checkpoint-<seq>.pclc  state snapshots            (magic "PCLC")
+//! <dir>/MANIFEST               root of trust              (magic "PCLM")
 //! ```
 //!
 //! Module map — each file owns one format or one phase:
 //!
-//! - [`crc32`]: the shared IEEE CRC-32 (hand-rolled, dependency-free).
+//! - [`crc32`]: the shared IEEE CRC-32 (hand-rolled, dependency-free) —
+//!   corruption detection on every frame and file.
+//! - [`crc64`]: CRC-64/XZ — content identity for checkpoint level blobs
+//!   (64 bits so collisions across a checkpoint chain are negligible).
 //! - [`wire`]: bounds-checked little-endian codecs (cursor, density
-//!   model, point batches) used by all three formats.
-//! - [`journal`]: framing, the fsync/group-commit policy, and the
-//!   torn-tail-vs-corruption scan.
-//! - [`checkpoint`]: whole-file-CRC state snapshots and the
+//!   model, point batches) used by all the formats.
+//! - [`journal`]: segment framing, rotation, the fsync/group-commit
+//!   policy, the torn-tail-vs-corruption scan, and segment GC.
+//! - [`checkpoint`]: whole-file-CRC incremental snapshots and the
 //!   write-then-flip-then-collect checkpoint protocol.
 //! - [`manifest`]: the fixed-size atomic root record.
 //! - [`recovery`]: manifest → checkpoint → replay orchestration.
@@ -37,12 +47,13 @@
 
 pub mod checkpoint;
 pub mod crc32;
+pub mod crc64;
 pub mod journal;
 pub mod manifest;
 pub mod recovery;
 pub mod wire;
 
 pub use checkpoint::{CheckpointData, DynStreamState, SessionState};
-pub use journal::{JournalEntry, JournalWriter, ScanOutcome, ScannedFrame};
+pub use journal::{JournalEntry, JournalWriter, ScanOutcome, ScannedFrame, SegmentInfo};
 pub use manifest::Manifest;
 pub use recovery::{recover, DynStream, Recovered, RecoveryReport};

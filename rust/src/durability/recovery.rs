@@ -2,24 +2,33 @@
 //!
 //! [`recover`] rebuilds exactly the state a durable coordinator held at
 //! its last acknowledged command: it loads the newest checkpoint named by
-//! the manifest, then replays every journal entry past the checkpoint's
-//! offset through the *normal* ingest/build paths — the same
-//! [`StreamingSession`] merge/repair code and the same exact pipeline the
-//! live server runs. Because every one of those paths is deterministic
-//! and thread-count-independent (the conformance suites pin this), the
-//! recovered (ρ, λ, δ) artifacts are byte-identical to a fresh build over
-//! the concatenated batches.
+//! the manifest (resolving delta refs against prior checkpoint files),
+//! then replays every journal entry past the checkpoint's replay
+//! position — a `(segment seq, byte offset)` pair — through the *normal*
+//! ingest/build paths: the same [`StreamingSession`] merge/repair code
+//! and the same exact pipeline the live server runs. Because every one of
+//! those paths is deterministic and thread-count-independent (the
+//! conformance suites pin this), the recovered (ρ, λ, δ) artifacts are
+//! byte-identical to a fresh build over the concatenated batches.
+//!
+//! Segments strictly below the manifest's `journal_seq` are *ignored*,
+//! not scanned: a crash between a checkpoint's manifest flip and its GC
+//! sweep legally leaves stale segments behind, and the next checkpoint
+//! deletes them. The writer is re-armed at the end of the **last**
+//! segment.
 //!
 //! Failure taxonomy (what each input defect becomes):
 //!
-//! | defect                                | outcome                        |
-//! |---------------------------------------|--------------------------------|
-//! | incomplete final journal frame        | silently truncated, replay ok  |
-//! | complete frame, bad CRC/LSN/payload   | [`DpcError::CorruptJournal`]   |
-//! | checkpoint truncated / bit-flipped    | [`DpcError::CorruptCheckpoint`]|
-//! | manifest garbled, or offset past end  | [`DpcError::CorruptManifest`]  |
-//! | journal present, manifest missing     | [`DpcError::CorruptManifest`]  |
-//! | replayed command fails (e.g. bad pts) | entry skipped, counted         |
+//! | defect                                 | outcome                        |
+//! |----------------------------------------|--------------------------------|
+//! | incomplete frame ending the last segment | silently truncated, replay ok |
+//! | short frame in a sealed (non-final) segment | [`DpcError::CorruptJournal`] |
+//! | complete frame, bad CRC/LSN/payload    | [`DpcError::CorruptJournal`]   |
+//! | gap or header mismatch in the segment chain | [`DpcError::CorruptJournal`] |
+//! | checkpoint truncated / bit-flipped / ref unresolvable | [`DpcError::CorruptCheckpoint`] |
+//! | manifest garbled, or position past end | [`DpcError::CorruptManifest`]  |
+//! | journal present, manifest missing      | [`DpcError::CorruptManifest`]  |
+//! | replayed command fails (e.g. bad pts)  | entry skipped, counted         |
 //!
 //! A *skipped* entry mirrors live behaviour: a command the live server
 //! accepted into the journal but whose job then failed leaves no state,
@@ -27,17 +36,18 @@
 
 use std::path::Path;
 
-use crate::dpc::{Dpc, DpcParams, StreamingSession};
+use crate::dpc::{Dpc, DpcParams, DpcResult, StreamingSession, StreamStats};
 use crate::error::DpcError;
 use crate::geom::{Dtype, DynPoints};
 
 use super::checkpoint::{self, CheckpointData, DynStreamState, SessionState};
-use super::journal::{self, JournalEntry, JournalWriter, ScannedFrame, JOURNAL_FILE, JOURNAL_HEADER_LEN};
+use super::journal::{self, JournalEntry, JournalWriter, JOURNAL_HEADER_LEN};
 use super::manifest::{self, Manifest};
 
-/// A live streaming session at either precision (the runtime union the
-/// replay loop drives; the coordinator's serve surface consumes the f64
-/// arm).
+/// A live streaming session at either precision — the runtime union the
+/// replay loop drives, and the type the coordinator keeps per stream so
+/// crash-recovered f32 streams stay first-class (ingestable) instead of
+/// warn-and-drop dead ends.
 #[derive(Debug)]
 pub enum DynStream {
     F32(StreamingSession<f32>),
@@ -63,7 +73,90 @@ impl DynStream {
         self.len() == 0
     }
 
-    fn from_state(state: DynStreamState) -> Result<DynStream, DpcError> {
+    pub fn dim(&self) -> usize {
+        match self {
+            DynStream::F32(s) => s.dim(),
+            DynStream::F64(s) => s.dim(),
+        }
+    }
+
+    pub fn d_cut(&self) -> f64 {
+        match self {
+            DynStream::F32(s) => s.d_cut(),
+            DynStream::F64(s) => s.d_cut(),
+        }
+    }
+
+    pub fn density_model(&self) -> crate::dpc::DensityModel {
+        match self {
+            DynStream::F32(s) => s.density_model(),
+            DynStream::F64(s) => s.density_model(),
+        }
+    }
+
+    pub fn rho(&self) -> &[u32] {
+        match self {
+            DynStream::F32(s) => s.rho(),
+            DynStream::F64(s) => s.rho(),
+        }
+    }
+
+    pub fn dep(&self) -> &[Option<u32>] {
+        match self {
+            DynStream::F32(s) => s.dep(),
+            DynStream::F64(s) => s.dep(),
+        }
+    }
+
+    pub fn delta(&self) -> &[f64] {
+        match self {
+            DynStream::F32(s) => s.delta(),
+            DynStream::F64(s) => s.delta(),
+        }
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        match self {
+            DynStream::F32(s) => s.stats(),
+            DynStream::F64(s) => s.stats(),
+        }
+    }
+
+    pub fn level_sizes(&self) -> Vec<usize> {
+        match self {
+            DynStream::F32(s) => s.level_sizes(),
+            DynStream::F64(s) => s.level_sizes(),
+        }
+    }
+
+    pub fn cut(&self, rho_min: f64, delta_min: f64) -> Result<DpcResult, DpcError> {
+        match self {
+            DynStream::F32(s) => s.cut(rho_min, delta_min),
+            DynStream::F64(s) => s.cut(rho_min, delta_min),
+        }
+    }
+
+    pub fn export_state(&self) -> DynStreamState {
+        match self {
+            DynStream::F32(s) => DynStreamState::F32(s.export_state()),
+            DynStream::F64(s) => DynStreamState::F64(s.export_state()),
+        }
+    }
+
+    /// Open a fresh empty stream of the given precision.
+    pub fn new_with_model(
+        dtype: Dtype,
+        dim: usize,
+        d_cut: f64,
+        density: crate::dpc::DensityModel,
+    ) -> Result<DynStream, DpcError> {
+        Ok(match dtype {
+            Dtype::F32 => DynStream::F32(StreamingSession::new_with_model(dim, d_cut, density)?),
+            Dtype::F64 => DynStream::F64(StreamingSession::new_with_model(dim, d_cut, density)?),
+        })
+    }
+
+    pub fn from_state(state: DynStreamState) -> Result<DynStream, DpcError> {
         // Structural defects inside a CRC-valid checkpoint are still
         // checkpoint corruption, not parameter errors.
         let wrap = |e: DpcError| DpcError::CorruptCheckpoint { detail: e.to_string() };
@@ -73,17 +166,16 @@ impl DynStream {
         })
     }
 
-    fn ingest(&mut self, batch: &DynPoints) -> Result<(), DpcError> {
+    /// Feed a batch whose precision must match the stream's. A mismatch
+    /// is the typed [`DpcError::DtypeMismatch`] — never a silent cast,
+    /// which would break the byte-identity contract.
+    pub fn ingest(&mut self, batch: &DynPoints) -> Result<(), DpcError> {
         match (self, batch) {
             (DynStream::F32(s), DynPoints::F32(b)) => s.ingest(b),
             (DynStream::F64(s), DynPoints::F64(b)) => s.ingest(b),
-            (s, b) => Err(DpcError::InvalidParam {
-                name: "batch_dtype",
-                value: b.dtype().size_bytes() as f64,
-                requirement: match s {
-                    DynStream::F32(_) => "stream is f32",
-                    DynStream::F64(_) => "stream is f64",
-                },
+            (s, b) => Err(DpcError::DtypeMismatch {
+                expected: s.dtype().name(),
+                got: b.dtype().name(),
             }),
         }
     }
@@ -94,12 +186,15 @@ impl DynStream {
 pub struct RecoveryReport {
     /// Sequence of the checkpoint restored from (0 = none, full replay).
     pub checkpoint_seq: u64,
-    /// Journal entries replayed after the checkpoint offset.
+    /// Journal entries replayed after the checkpoint position.
     pub replayed: usize,
     /// Replayed entries that failed to apply and were dropped.
     pub skipped: usize,
-    /// Bytes of torn journal tail truncated before appending resumes.
+    /// Bytes of torn tail truncated from the final segment before
+    /// appending resumes.
     pub torn_bytes: u64,
+    /// Journal segments scanned (from the replay horizon to the end).
+    pub segments: usize,
 }
 
 /// The full recovered serve state plus the re-armed journal writer.
@@ -111,7 +206,8 @@ pub struct Recovered {
     pub sessions: Vec<SessionState>,
     /// Floor for the coordinator's shared session/stream id allocator.
     pub next_session_id: u64,
-    /// Journal writer positioned at the end of the valid prefix.
+    /// Journal writer positioned at the end of the last segment's valid
+    /// prefix.
     pub writer: JournalWriter,
     pub report: RecoveryReport,
 }
@@ -143,26 +239,28 @@ fn rebuild_session(
 
 /// Recover (or freshly initialize) a durable directory.
 ///
-/// - Empty/missing directory: create it, write a header-only journal and
-///   a no-checkpoint manifest, return empty state.
-/// - Otherwise: validate manifest → checkpoint → journal, truncate any
-///   torn tail, replay the suffix, and hand back a writer that appends
-///   where the valid prefix ends.
-pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
+/// - Empty/missing directory: create it, write a header-only first
+///   segment and a no-checkpoint manifest, return empty state.
+/// - Otherwise: validate manifest → checkpoint → segment chain from the
+///   manifest's replay horizon, truncate any torn tail in the final
+///   segment, replay the suffix, and hand back a writer that appends
+///   where the valid prefix ends (rotating at `rotate_bytes`; 0 = never).
+pub fn recover(dir: &Path, fsync_every: u64, rotate_bytes: u64) -> Result<Recovered, DpcError> {
     std::fs::create_dir_all(dir)?;
-    let journal_path = dir.join(JOURNAL_FILE);
 
     let Some(m) = manifest::read(dir)? else {
-        if journal_path.exists() {
+        if !journal::list_segments(dir)?.is_empty() {
             return Err(DpcError::CorruptManifest {
-                detail: "journal exists but MANIFEST is missing (did a partial copy drop it?)".into(),
+                detail: "journal segments exist but MANIFEST is missing (did a partial copy drop it?)"
+                    .into(),
             });
         }
-        let writer = JournalWriter::create(&journal_path, fsync_every)?;
+        let writer = JournalWriter::create(dir, fsync_every, rotate_bytes)?;
         manifest::write(
             dir,
             &Manifest {
                 checkpoint_seq: 0,
+                journal_seq: 1,
                 journal_offset: JOURNAL_HEADER_LEN,
                 next_lsn: 1,
                 next_session_id: 1,
@@ -173,41 +271,47 @@ pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
             sessions: Vec::new(),
             next_session_id: 1,
             writer,
-            report: RecoveryReport::default(),
+            report: RecoveryReport { segments: 1, ..RecoveryReport::default() },
         });
     };
 
-    if !journal_path.exists() {
+    if journal::list_segments(dir)?.is_empty() {
         return Err(DpcError::CorruptManifest {
             detail: "MANIFEST points at a journal that does not exist".into(),
         });
     }
-    let scan = journal::scan(&journal_path)?;
-    if m.journal_offset > scan.valid_len {
+    let scan = journal::scan_dir(dir, m.journal_seq)?;
+    // The manifest's replay position must be a frame boundary (or the
+    // end) inside the segment it names. `scan_dir` guarantees the first
+    // scanned segment IS `m.journal_seq`.
+    let horizon_valid_len = scan.segments[0].valid_len;
+    if m.journal_offset > horizon_valid_len {
         return Err(DpcError::CorruptManifest {
             detail: format!(
-                "journal_offset {} is past the journal's valid length {}",
-                m.journal_offset, scan.valid_len
+                "journal position ({}, {}) is past segment {}'s valid length {}",
+                m.journal_seq, m.journal_offset, m.journal_seq, horizon_valid_len
             ),
         });
     }
-    // The offset must land exactly on a frame boundary (or the end).
-    let replay_from = if m.journal_offset == scan.valid_len {
-        scan.entries.len()
-    } else {
-        scan.entries
-            .binary_search_by_key(&m.journal_offset, |f: &ScannedFrame| f.offset)
-            .map_err(|_| DpcError::CorruptManifest {
-                detail: format!("journal_offset {} is not a frame boundary", m.journal_offset),
-            })?
-    };
-    let expected_lsn =
-        scan.entries.get(replay_from).map_or(scan.next_lsn, |f| f.lsn);
+    let on_boundary = m.journal_offset == horizon_valid_len
+        || scan.entries.iter().any(|f| f.seq == m.journal_seq && f.offset == m.journal_offset);
+    if !on_boundary {
+        return Err(DpcError::CorruptManifest {
+            detail: format!(
+                "journal position ({}, {}) is not a frame boundary",
+                m.journal_seq, m.journal_offset
+            ),
+        });
+    }
+    let replay_from = scan.entries.partition_point(|f| {
+        f.seq < m.journal_seq || (f.seq == m.journal_seq && f.offset < m.journal_offset)
+    });
+    let expected_lsn = scan.entries.get(replay_from).map_or(scan.next_lsn, |f| f.lsn);
     if m.next_lsn != expected_lsn {
         return Err(DpcError::CorruptManifest {
             detail: format!(
-                "manifest next_lsn {} disagrees with journal LSN {} at offset {}",
-                m.next_lsn, expected_lsn, m.journal_offset
+                "manifest next_lsn {} disagrees with journal LSN {} at position ({}, {})",
+                m.next_lsn, expected_lsn, m.journal_seq, m.journal_offset
             ),
         });
     }
@@ -228,6 +332,7 @@ pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
     let mut report = RecoveryReport {
         checkpoint_seq: m.checkpoint_seq,
         torn_bytes: scan.torn_bytes,
+        segments: scan.segments.len(),
         ..RecoveryReport::default()
     };
     let mut max_id_seen = 0u64;
@@ -239,13 +344,7 @@ pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
                 if streams.iter().any(|(id, _)| id == stream) {
                     false
                 } else {
-                    let made = match dtype {
-                        Dtype::F32 => StreamingSession::<f32>::new_with_model(*dim as usize, *d_cut, *density)
-                            .map(DynStream::F32),
-                        Dtype::F64 => StreamingSession::<f64>::new_with_model(*dim as usize, *d_cut, *density)
-                            .map(DynStream::F64),
-                    };
-                    match made {
+                    match DynStream::new_with_model(*dtype, *dim as usize, *d_cut, *density) {
                         Ok(s) => {
                             streams.push((*stream, s));
                             true
@@ -292,7 +391,14 @@ pub fn recover(dir: &Path, fsync_every: u64) -> Result<Recovered, DpcError> {
         }
     }
 
-    let writer = JournalWriter::open_end(&journal_path, scan.valid_len, scan.next_lsn, fsync_every)?;
+    let writer = JournalWriter::open_end(
+        dir,
+        scan.last_seq(),
+        scan.valid_len(),
+        scan.next_lsn,
+        fsync_every,
+        rotate_bytes,
+    )?;
     Ok(Recovered {
         streams,
         sessions,
@@ -310,6 +416,8 @@ mod tests {
     use crate::prng::SplitMix64;
     use crate::proputil::gen_clustered_points;
     use std::path::PathBuf;
+
+    use super::super::journal::segment_file;
 
     fn tmpdir(tag: &str) -> PathBuf {
         let dir =
@@ -337,15 +445,15 @@ mod tests {
     #[test]
     fn fresh_directory_initializes_empty() {
         let dir = tmpdir("fresh");
-        let rec = recover(&dir, 1).unwrap();
+        let rec = recover(&dir, 1, 0).unwrap();
         assert!(rec.streams.is_empty() && rec.sessions.is_empty());
         assert_eq!(rec.next_session_id, 1);
         assert_eq!(rec.report.replayed, 0);
-        assert!(dir.join(JOURNAL_FILE).exists());
+        assert!(dir.join(segment_file(1)).exists());
         assert!(manifest::read(&dir).unwrap().is_some());
         // Recovering again over the initialized-but-idle dir is a no-op.
         drop(rec);
-        let rec2 = recover(&dir, 1).unwrap();
+        let rec2 = recover(&dir, 1, 0).unwrap();
         assert!(rec2.streams.is_empty());
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -355,7 +463,7 @@ mod tests {
         let dir = tmpdir("replay");
         let all = batches(7, 150, &[60, 25, 65]);
         {
-            let mut rec = recover(&dir, 1).unwrap();
+            let mut rec = recover(&dir, 1, 0).unwrap();
             rec.writer
                 .append(&JournalEntry::OpenStream {
                     stream: 1,
@@ -377,7 +485,7 @@ mod tests {
             }
             // Simulated crash: writer dropped without checkpoint/close.
         }
-        let rec = recover(&dir, 1).unwrap();
+        let rec = recover(&dir, 1, 0).unwrap();
         assert_eq!(rec.report.replayed, 4);
         assert_eq!(rec.report.skipped, 0);
         assert_eq!(rec.streams.len(), 1);
@@ -395,10 +503,54 @@ mod tests {
     }
 
     #[test]
+    fn rotated_journal_replay_matches_fresh_build() {
+        let dir = tmpdir("rotated");
+        let all = batches(13, 150, &[30, 30, 30, 30, 30]);
+        {
+            // ~1 KiB segments: the five ingests span several segments.
+            let mut rec = recover(&dir, 1, 1024).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 3.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            for b in &all {
+                rec.writer
+                    .append(&JournalEntry::Ingest {
+                        stream: 1,
+                        rho_min: 0.0,
+                        delta_min: 0.0,
+                        batch: DynPoints::F64(b.clone()),
+                    })
+                    .unwrap();
+            }
+            assert!(rec.writer.seq() > 1, "rotation must have happened");
+        }
+        let rec = recover(&dir, 1, 1024).unwrap();
+        assert!(rec.report.segments > 1);
+        assert_eq!(rec.report.skipped, 0);
+        let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+        let mut fresh =
+            StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+        for b in &all {
+            fresh.ingest(b).unwrap();
+        }
+        assert_eq!(got.rho(), fresh.rho());
+        assert_eq!(got.dep(), fresh.dep());
+        assert_eq!(got.delta(), fresh.delta());
+        assert_eq!(got.level_sizes(), fresh.level_sizes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn replay_skips_failed_and_out_of_order_entries() {
         let dir = tmpdir("skips");
         {
-            let mut rec = recover(&dir, 1).unwrap();
+            let mut rec = recover(&dir, 1, 0).unwrap();
             // Ingest into a stream that was never opened.
             rec.writer
                 .append(&JournalEntry::Ingest {
@@ -430,7 +582,7 @@ mod tests {
                 })
                 .unwrap();
         }
-        let rec = recover(&dir, 1).unwrap();
+        let rec = recover(&dir, 1, 0).unwrap();
         assert_eq!(rec.report.replayed, 4);
         assert_eq!(rec.report.skipped, 3);
         assert_eq!(rec.streams.len(), 1);
@@ -439,11 +591,53 @@ mod tests {
     }
 
     #[test]
+    fn dtype_mismatched_ingest_is_typed_and_skipped_on_replay() {
+        // Direct: the runtime union refuses a cross-precision batch with
+        // the typed error (not a log line, not a cast).
+        let mut s = DynStream::new_with_model(Dtype::F32, 2, 1.0, DensityModel::CutoffCount).unwrap();
+        let err = s.ingest(&DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2))).unwrap_err();
+        assert!(
+            matches!(err, DpcError::DtypeMismatch { expected: "f32", got: "f64" }),
+            "got {err:?}"
+        );
+        // And an f32 batch into the f32 stream works.
+        s.ingest(&DynPoints::F32(crate::geom::PointStore::<f32>::new(vec![1.0, 2.0], 2))).unwrap();
+        assert_eq!(s.len(), 1);
+
+        // Replay: a journaled mismatched ingest is skipped, stream survives.
+        let dir = tmpdir("dtypemix");
+        {
+            let mut rec = recover(&dir, 1, 0).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F32,
+                    d_cut: 1.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 1,
+                    rho_min: 0.0,
+                    delta_min: 0.0,
+                    batch: DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2)),
+                })
+                .unwrap();
+        }
+        let rec = recover(&dir, 1, 0).unwrap();
+        assert_eq!(rec.report.skipped, 1);
+        assert_eq!(rec.streams[0].1.dtype(), Dtype::F32);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn session_replay_rebuilds_artifacts() {
         let dir = tmpdir("session");
         let pts = batches(11, 80, &[80]).pop().unwrap();
         {
-            let mut rec = recover(&dir, 1).unwrap();
+            let mut rec = recover(&dir, 1, 0).unwrap();
             rec.writer
                 .append(&JournalEntry::OpenSession {
                     session: 3,
@@ -456,7 +650,7 @@ mod tests {
                 .append(&JournalEntry::Recut { session: 3, rho_min: 1.0, delta_min: 5.0 })
                 .unwrap();
         }
-        let rec = recover(&dir, 1).unwrap();
+        let rec = recover(&dir, 1, 0).unwrap();
         assert_eq!(rec.sessions.len(), 1);
         assert_eq!(rec.next_session_id, 4);
         let s = &rec.sessions[0];
@@ -480,32 +674,38 @@ mod tests {
         // Manifest missing but journal present.
         let dir = tmpdir("nomanifest");
         {
-            let _ = recover(&dir, 1).unwrap();
+            let _ = recover(&dir, 1, 0).unwrap();
         }
         std::fs::remove_file(dir.join(manifest::MANIFEST_FILE)).unwrap();
-        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptManifest { .. })));
         std::fs::remove_dir_all(&dir).unwrap();
 
         // Manifest pointing past the journal's end.
         let dir = tmpdir("staleoffset");
         {
-            let _ = recover(&dir, 1).unwrap();
+            let _ = recover(&dir, 1, 0).unwrap();
         }
         manifest::write(
             &dir,
-            &Manifest { checkpoint_seq: 0, journal_offset: 4096, next_lsn: 1, next_session_id: 1 },
+            &Manifest {
+                checkpoint_seq: 0,
+                journal_seq: 1,
+                journal_offset: 4096,
+                next_lsn: 1,
+                next_session_id: 1,
+            },
         )
         .unwrap();
-        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptManifest { .. })));
         std::fs::remove_dir_all(&dir).unwrap();
 
         // Manifest pointing at a missing journal.
         let dir = tmpdir("nojournal");
         {
-            let _ = recover(&dir, 1).unwrap();
+            let _ = recover(&dir, 1, 0).unwrap();
         }
-        std::fs::remove_file(dir.join(JOURNAL_FILE)).unwrap();
-        assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+        std::fs::remove_file(dir.join(segment_file(1))).unwrap();
+        assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptManifest { .. })));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -514,7 +714,7 @@ mod tests {
         let dir = tmpdir("ckptsuffix");
         let all = batches(23, 120, &[50, 40, 30]);
         {
-            let mut rec = recover(&dir, 1).unwrap();
+            let mut rec = recover(&dir, 1, 0).unwrap();
             rec.writer
                 .append(&JournalEntry::OpenStream {
                     stream: 1,
@@ -542,7 +742,7 @@ mod tests {
                 streams: vec![(1, DynStreamState::F64(live.export_state()))],
                 sessions: Vec::new(),
             };
-            checkpoint::write(&dir, &mut rec.writer, &data, 2).unwrap();
+            checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
             // ...then one post-checkpoint batch before the "crash".
             rec.writer
                 .append(&JournalEntry::Ingest {
@@ -553,7 +753,7 @@ mod tests {
                 })
                 .unwrap();
         }
-        let rec = recover(&dir, 1).unwrap();
+        let rec = recover(&dir, 1, 0).unwrap();
         assert_eq!(rec.report.checkpoint_seq, 1);
         assert_eq!(rec.report.replayed, 1, "only the post-checkpoint ingest replays");
         let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
@@ -567,6 +767,66 @@ mod tests {
         assert_eq!(got.dep(), fresh.dep());
         assert_eq!(got.delta(), fresh.delta());
         assert_eq!(got.level_sizes(), fresh.level_sizes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_past_rotation_replays_across_the_horizon() {
+        // Checkpoint lands mid-chain; pre-horizon segments are GC'd; the
+        // suffix replays from the recorded (seq, offset).
+        let dir = tmpdir("ckptrotate");
+        let all = batches(29, 120, &[40, 40, 40]);
+        {
+            let mut rec = recover(&dir, 1, 512).unwrap();
+            rec.writer
+                .append(&JournalEntry::OpenStream {
+                    stream: 1,
+                    dim: 2,
+                    dtype: Dtype::F64,
+                    d_cut: 3.0,
+                    density: DensityModel::CutoffCount,
+                })
+                .unwrap();
+            let mut live =
+                StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+            for b in &all[..2] {
+                rec.writer
+                    .append(&JournalEntry::Ingest {
+                        stream: 1,
+                        rho_min: 0.0,
+                        delta_min: 0.0,
+                        batch: DynPoints::F64(b.clone()),
+                    })
+                    .unwrap();
+                live.ingest(b).unwrap();
+            }
+            let data = CheckpointData {
+                streams: vec![(1, DynStreamState::F64(live.export_state()))],
+                sessions: Vec::new(),
+            };
+            let m = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
+            assert!(m.journal_seq > 1, "rotation must have moved the horizon");
+            // Pre-horizon segments were swept by the checkpoint's GC.
+            assert!(!dir.join(segment_file(1)).exists());
+            rec.writer
+                .append(&JournalEntry::Ingest {
+                    stream: 1,
+                    rho_min: 0.0,
+                    delta_min: 0.0,
+                    batch: DynPoints::F64(all[2].clone()),
+                })
+                .unwrap();
+        }
+        let rec = recover(&dir, 1, 512).unwrap();
+        assert_eq!(rec.report.checkpoint_seq, 1);
+        let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+        let mut fresh =
+            StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+        for b in &all {
+            fresh.ingest(b).unwrap();
+        }
+        assert_eq!(got.rho(), fresh.rho());
+        assert_eq!(got.delta(), fresh.delta());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

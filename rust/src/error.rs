@@ -53,6 +53,11 @@ pub enum DpcError {
     /// the file — the alternative is a silently truncated length that a
     /// later scan reports as corruption.
     OversizedJournalEntry { len: u64, max: u64 },
+    /// A point batch's coordinate precision disagrees with the stream it
+    /// targets (e.g. an f64 batch into a recovered f32 stream). Streams
+    /// are fixed-precision for their lifetime — silently widening or
+    /// narrowing would break the byte-identity contract.
+    DtypeMismatch { expected: &'static str, got: &'static str },
     /// Admission control rejected a job: the coordinator already has
     /// `limit` jobs queued or running. The caller should back off and
     /// retry; the serve surfaces translate this into a `Busy` response
@@ -98,6 +103,9 @@ impl fmt::Display for DpcError {
             DpcError::CorruptManifest { detail } => write!(f, "corrupt manifest: {detail}"),
             DpcError::OversizedJournalEntry { len, max } => {
                 write!(f, "journal entry payload of {len} bytes exceeds the frame format's maximum of {max}")
+            }
+            DpcError::DtypeMismatch { expected, got } => {
+                write!(f, "dtype mismatch: stream is {expected}, batch is {got}")
             }
             DpcError::Backpressure { in_flight, limit } => {
                 write!(f, "backpressure: {in_flight} jobs in flight at the admission limit of {limit}")
@@ -148,6 +156,7 @@ mod tests {
             (DpcError::CorruptCheckpoint { detail: "truncated".into() }, "truncated"),
             (DpcError::CorruptManifest { detail: "offset past journal end".into() }, "manifest"),
             (DpcError::OversizedJournalEntry { len: 5_000_000_000, max: 4_294_967_295 }, "5000000000"),
+            (DpcError::DtypeMismatch { expected: "f32", got: "f64" }, "stream is f32"),
             (DpcError::Backpressure { in_flight: 64, limit: 64 }, "64 jobs in flight"),
             (DpcError::QuotaExceeded { tenant: "acme".into(), open: 8, limit: 8 }, "acme"),
         ];

@@ -44,6 +44,23 @@ pub struct PointStore<S: Scalar = f64> {
     d: usize,
 }
 
+/// Bit-exact equality: same shape and the same coordinate bits. This is
+/// the identity the wire/journal codecs preserve (constructors reject
+/// NaN, so bitwise and `==` semantics never diverge in practice).
+impl<S: Scalar> PartialEq for PointStore<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.d == other.d
+            && self
+                .coords
+                .iter()
+                .zip(other.coords.iter())
+                .all(|(a, b)| a.to_f64().to_bits() == b.to_f64().to_bits())
+    }
+}
+
+impl<S: Scalar> Eq for PointStore<S> {}
+
 /// The pre-generic name: a double-precision point store.
 pub type PointSet = PointStore<f64>;
 
@@ -369,7 +386,7 @@ impl<'a, S: Scalar> From<&'a PointStore<S>> for PointsView<'a, S> {
 
 /// A runtime-tagged point store: what dtype boundaries (binary files, CLI
 /// flags, coordinator payloads) traffic in before monomorphizing.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum DynPoints {
     F32(PointStore<f32>),
     F64(PointStore<f64>),
@@ -406,6 +423,15 @@ impl DynPoints {
         match self {
             DynPoints::F32(p) => p.to_f64(),
             DynPoints::F64(p) => p,
+        }
+    }
+
+    /// Re-run the constructor's NaN/∞ scan (see
+    /// [`PointStore::validate_finite`]).
+    pub fn validate_finite(&self) -> Result<(), DpcError> {
+        match self {
+            DynPoints::F32(p) => p.validate_finite(),
+            DynPoints::F64(p) => p.validate_finite(),
         }
     }
 

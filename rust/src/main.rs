@@ -304,6 +304,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get_parse::<u64>("fsync-every")? {
         cfg.fsync_every = n;
     }
+    if let Some(n) = args.get_parse::<u64>("journal-rotate-bytes")? {
+        cfg.journal_rotate_bytes = n;
+    }
+    if let Some(n) = args.get_parse::<u64>("checkpoint-retain")? {
+        cfg.checkpoint_retain = n.max(1);
+    }
     if let Some(a) = args.get("listen") {
         cfg.listen_addr = Some(a.to_string());
     }
@@ -320,7 +326,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listen = cfg.listen_addr.clone();
     let coord = Coordinator::start(cfg)?;
     println!(
-        "parcluster serve: {} workers, xla={}, durable={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density] [full]`,\n  `hello <tenant>`, `open <dataset> <n> <d_cut> [density] [tag=T]` (prints session id), `recut <session> <rho_min> <delta_min> [full]`,\n  `close <session>`, `stream <dim> <d_cut> [density] [tag=T]` (prints stream id),\n  `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`, `closestream <stream>`,\n  `checkpoint` (durable mode: snapshot state now)",
+        "parcluster serve: {} workers, xla={}, durable={}; lines: `<dataset> <n> <d_cut> <rho_min> <delta_min> [algo] [density] [full]`,\n  `hello <tenant>`, `open <dataset> <n> <d_cut> [density] [tag=T]` (prints session id), `recut <session> <rho_min> <delta_min> [full]`,\n  `close <session>`, `stream <dim> <d_cut> [density] [f32|f64] [tag=T]` (prints stream id),\n  `ingest <stream> <dataset> <n> <rho_min> <delta_min> [seed=S] [full]`, `closestream <stream>`,\n  `checkpoint` (durable mode: snapshot state now)",
         coord.config().workers,
         coord.has_xla(),
         coord.is_durable()
@@ -356,9 +362,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `journal inspect --dir DIR` — read-only durable-directory forensics:
-/// the manifest, the checkpoint files, and every journal frame, plus
-/// whether the tail is clean or torn. Corruption surfaces as the same
-/// typed error recovery would report, never a partial parse.
+/// the manifest, the checkpoint files, and every frame across the
+/// journal's segment chain, plus whether the tail is clean or torn.
+/// Corruption surfaces as the same typed error recovery would report,
+/// never a partial parse.
 fn cmd_journal(args: &Args) -> Result<()> {
     use parcluster::durability::{journal, manifest, JournalEntry};
     let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
@@ -371,8 +378,8 @@ fn cmd_journal(args: &Args) -> Result<()> {
     match manifest::read(&dir)? {
         None => println!("manifest   : none (directory not yet initialized)"),
         Some(m) => println!(
-            "manifest   : checkpoint_seq={} journal_offset={} next_lsn={} next_session_id={}",
-            m.checkpoint_seq, m.journal_offset, m.next_lsn, m.next_session_id
+            "manifest   : checkpoint_seq={} journal_seq={} journal_offset={} next_lsn={} next_session_id={}",
+            m.checkpoint_seq, m.journal_seq, m.journal_offset, m.next_lsn, m.next_session_id
         ),
     }
     let mut ckpts: Vec<(String, u64)> = std::fs::read_dir(&dir)
@@ -396,14 +403,32 @@ fn cmd_journal(args: &Args) -> Result<()> {
         }
     }
 
-    let jpath = dir.join(journal::JOURNAL_FILE);
-    if !jpath.exists() {
+    // Scan the whole chain (from the lowest surviving segment, not the
+    // manifest's replay horizon — inspection shows what's on disk, GC'd
+    // or not).
+    let segments = journal::list_segments(&dir)?;
+    let Some(&(first_seq, _)) = segments.first() else {
         println!("journal    : none");
         return Ok(());
+    };
+    let scan = journal::scan_dir(&dir, first_seq)?;
+    println!(
+        "journal    : {} segments, {} frames, {} valid bytes",
+        scan.segments.len(),
+        scan.entries.len(),
+        scan.segments.iter().map(|s| s.valid_len).sum::<u64>()
+    );
+    for s in &scan.segments {
+        println!(
+            "segment    : journal-{}.pclj first_lsn={} frames={} valid_bytes={}{}",
+            s.seq,
+            s.first_lsn,
+            s.frames,
+            s.valid_len,
+            if s.torn_bytes > 0 { " (TORN TAIL)" } else { "" }
+        );
     }
-    let scan = journal::scan(&jpath)?;
-    println!("journal    : {} frames, {} valid bytes", scan.entries.len(), scan.valid_len);
-    let mut table = Table::new(&["offset", "lsn", "kind", "detail"]);
+    let mut table = Table::new(&["segment", "offset", "lsn", "kind", "detail"]);
     for f in &scan.entries {
         let detail = match &f.entry {
             JournalEntry::OpenStream { stream, dim, dtype, d_cut, density } => {
@@ -421,7 +446,13 @@ fn cmd_journal(args: &Args) -> Result<()> {
             }
             JournalEntry::CloseSession { session } => format!("session={session}"),
         };
-        table.row(vec![f.offset.to_string(), f.lsn.to_string(), f.entry.kind_name().to_string(), detail]);
+        table.row(vec![
+            f.seq.to_string(),
+            f.offset.to_string(),
+            f.lsn.to_string(),
+            f.entry.kind_name().to_string(),
+            detail,
+        ]);
     }
     table.print();
     if scan.torn_bytes > 0 {

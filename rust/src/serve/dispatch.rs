@@ -176,10 +176,12 @@ pub fn dispatch(state: &ServeState, ctx: &mut ConnCtx, req: Request) -> Response
             }
             Err(e) => err_response(e),
         },
-        Request::OpenStream { dim, d_cut, density, tag } => {
+        Request::OpenStream { dim, d_cut, density, tag, dtype } => {
             let tenant = ctx.tenant.clone();
             open_under_admission(state, &tenant, HandleKind::Stream, || {
-                state.coord.open_stream(OpenSpec::dim(dim as usize, d_cut).density(density).tag(tag))
+                state
+                    .coord
+                    .open_stream(OpenSpec::dim(dim as usize, d_cut).density(density).tag(tag).dtype(dtype))
             })
         }
         Request::Ingest { stream, dataset, n, seed, rho_min, delta_min, full } => {
@@ -192,8 +194,10 @@ pub fn dispatch(state: &ServeState, ctx: &mut ConnCtx, req: Request) -> Response
             })
         }
         Request::IngestPoints { stream, batch, rho_min, delta_min, full } => {
+            // The dyn path checks the batch's dtype against the stream's
+            // before journaling; a mismatch comes back as a typed error.
             run_job(state, Some(stream), full, || {
-                state.coord.submit_ingest(stream, batch, rho_min, delta_min)
+                state.coord.submit_ingest_dyn(stream, batch, rho_min, delta_min)
             })
         }
         Request::CloseStream { stream } => match state.coord.close_stream(stream) {
@@ -206,6 +210,7 @@ pub fn dispatch(state: &ServeState, ctx: &mut ConnCtx, req: Request) -> Response
         Request::Checkpoint => match state.coord.checkpoint_now() {
             Ok(m) => Response::CheckpointTaken {
                 seq: m.checkpoint_seq,
+                journal_seq: m.journal_seq,
                 journal_offset: m.journal_offset,
                 next_lsn: m.next_lsn,
             },

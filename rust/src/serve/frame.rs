@@ -50,18 +50,25 @@ impl std::fmt::Display for FrameError {
     }
 }
 
-/// Frame a payload for the wire. Panics only if the payload exceeds
-/// `u32::MAX` bytes, which [`MAX_FRAME`] (checked by callers building
-/// responses) rules out long before.
-pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
-    debug_assert!(payload.len() <= MAX_FRAME as usize, "frame over MAX_FRAME");
-    // bounds: encode path — the payload is locally built (never
-    // attacker-length), and MAX_FRAME caps it per the assert above.
+/// Frame a payload for the wire. The [`MAX_FRAME`] cap is enforced here
+/// in every build, not just debug: a peer that decodes by the same rules
+/// would drop the connection on an oversized frame, so emitting one is
+/// strictly worse than failing locally — the caller downgrades to a
+/// small typed-error response instead. (A `debug_assert!` once stood
+/// here; release builds of a server with a big enough result set could
+/// sail straight past it.)
+pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, FrameError> {
+    if payload.len() > MAX_FRAME as usize {
+        // The saturating cast only shapes the error message; the branch
+        // itself is the cap.
+        return Err(FrameError::Oversized { len: u32::try_from(payload.len()).unwrap_or(u32::MAX) });
+    }
+    // bounds: the cap check above bounds the reservation at MAX_FRAME.
     let mut out = Vec::with_capacity(HEADER + payload.len());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32(payload).to_le_bytes());
     out.extend_from_slice(payload);
-    out
+    Ok(out)
 }
 
 /// Incremental frame decoder over an arbitrary byte-chunk stream.
@@ -148,7 +155,7 @@ mod tests {
         let payloads: Vec<Vec<u8>> = vec![vec![], vec![1], vec![2; 1000], (0..=255).collect()];
         let mut stream = Vec::new();
         for p in &payloads {
-            stream.extend_from_slice(&encode_frame(p));
+            stream.extend_from_slice(&encode_frame(p).unwrap());
         }
         // Feed in pathological chunk sizes: 1 byte at a time, then 7s.
         for chunk in [1usize, 7] {
@@ -166,8 +173,20 @@ mod tests {
     }
 
     #[test]
+    fn encode_enforces_the_cap_at_the_boundary() {
+        // Exactly at the cap: allowed.
+        let at_cap = vec![0u8; MAX_FRAME as usize];
+        let framed = encode_frame(&at_cap).unwrap();
+        assert_eq!(framed.len(), HEADER + MAX_FRAME as usize);
+        // One byte over: a typed error in RELEASE builds too — this is
+        // the regression test for the debug_assert!-only cap.
+        let over = vec![0u8; MAX_FRAME as usize + 1];
+        assert_eq!(encode_frame(&over).unwrap_err(), FrameError::Oversized { len: MAX_FRAME + 1 });
+    }
+
+    #[test]
     fn truncated_frame_is_incomplete_not_corrupt() {
-        let frame = encode_frame(&[1, 2, 3, 4]);
+        let frame = encode_frame(&[1, 2, 3, 4]).unwrap();
         let mut fb = FrameBuf::new();
         fb.feed(&frame[..frame.len() - 1]);
         assert_eq!(fb.next_frame().unwrap(), None, "torn tail: wait for more bytes");
@@ -187,7 +206,7 @@ mod tests {
 
     #[test]
     fn flipped_bit_is_crc_mismatch() {
-        let mut frame = encode_frame(&[9, 9, 9]);
+        let mut frame = encode_frame(&[9, 9, 9]).unwrap();
         let last = frame.len() - 1;
         frame[last] ^= 0x01;
         let mut fb = FrameBuf::new();
@@ -197,7 +216,7 @@ mod tests {
 
     #[test]
     fn corrupt_header_crc_is_mismatch_too() {
-        let mut frame = encode_frame(&[5; 16]);
+        let mut frame = encode_frame(&[5; 16]).unwrap();
         frame[4] ^= 0xFF;
         let mut fb = FrameBuf::new();
         fb.feed(&frame);

@@ -44,9 +44,8 @@ impl Client {
     /// Send one request and block for its response. A frame or decode
     /// failure is an `Err` (the connection is unusable afterwards).
     pub fn call(&mut self, req: &Request) -> Result<Response, String> {
-        self.sock
-            .write_all(&encode_frame(&req.encode()))
-            .map_err(|e| format!("send: {e}"))?;
+        let framed = encode_frame(&req.encode()).map_err(|e| format!("encode: {e}"))?;
+        self.sock.write_all(&framed).map_err(|e| format!("send: {e}"))?;
         let mut chunk = [0u8; 64 * 1024];
         loop {
             if let Some(payload) = self.fb.next_frame().map_err(|e| e.to_string())? {
@@ -199,6 +198,7 @@ fn run_conn(opts: &LoadgenOpts, conn_id: usize) -> ConnStats {
         d_cut: 3.0,
         density: crate::dpc::DensityModel::CutoffCount,
         tag: format!("loadgen-{conn_id}-stream"),
+        dtype: crate::geom::Dtype::F64,
     };
     let Some(Response::Opened { id: stream, .. }) =
         timed_call(&mut client, &stream_open, &mut stats, false)

@@ -28,5 +28,5 @@ pub mod server;
 
 pub use dispatch::{dispatch, ConnCtx, ServeState};
 pub use frame::{encode_frame, FrameBuf, FrameError, HEADER, MAX_FRAME};
-pub use proto::{FullResult, Request, Response, PROTO_VERSION};
+pub use proto::{FullResult, Request, Response, MIN_PROTO_VERSION, PROTO_VERSION};
 pub use server::{spawn, ServerHandle};

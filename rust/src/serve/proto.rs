@@ -18,20 +18,31 @@
 //! shortest-round-trip `Display`, so the text surface is exactly as
 //! lossless as the binary one.
 //!
-//! Versioning: every message starts with [`PROTO_VERSION`]; a decoder
-//! rejects other versions with a message naming both sides' versions.
-//! Kind tags and field layouts are append-only, like the journal's.
-
-use std::sync::Arc;
+//! Versioning: every message starts with its protocol version; encoders
+//! emit [`PROTO_VERSION`], decoders accept any version back to
+//! [`MIN_PROTO_VERSION`] and fill the fields that version could not
+//! express with its implied defaults (a v1 `OpenStream` is f64, a v1
+//! point batch is f64, a v1 `CheckpointTaken` came from the
+//! single-journal layout, segment 1). Kind tags and field layouts are
+//! append-only within a version, like the journal's.
+//!
+//! v1 → v2: `OpenStream` gained a dtype tag (f32 streams), point
+//! batches became dtype-tagged [`DynPoints`], and `CheckpointTaken`
+//! gained `journal_seq` (the segmented journal's replay-horizon
+//! segment).
 
 use crate::coordinator::config::parse_dep_algo;
 use crate::dpc::{DensityModel, DepAlgo};
 use crate::durability::wire::{self, Cursor};
-use crate::geom::PointSet;
+use crate::geom::{Dtype, DynPoints};
 
-/// Bumped on any incompatible layout change; see the module docs for the
-/// append-only evolution rules that make bumps rare.
-pub const PROTO_VERSION: u8 = 1;
+/// The version encoders speak. Bumped on any layout change; decoders
+/// stay compatible back to [`MIN_PROTO_VERSION`].
+pub const PROTO_VERSION: u8 = 2;
+
+/// Oldest version decoders still accept (filling v1's missing fields
+/// with their implied defaults).
+pub const MIN_PROTO_VERSION: u8 = 1;
 
 /// Everything a serve client can ask for. One enum for all surfaces;
 /// [`Request::IngestPoints`] (a raw coordinate batch) is binary-only,
@@ -56,13 +67,16 @@ pub enum Request {
     /// Linkage-only re-cut of an open session.
     Recut { session: u64, rho_min: f64, delta_min: f64, full: bool },
     CloseSession { session: u64 },
-    /// Open a streaming session.
-    OpenStream { dim: u32, d_cut: f64, density: DensityModel, tag: String },
+    /// Open a streaming session. `dtype` fixes the coordinate precision
+    /// for the stream's whole life; every ingested batch must match.
+    OpenStream { dim: u32, d_cut: f64, density: DensityModel, tag: String, dtype: Dtype },
     /// Ingest a batch drawn from a named dataset generator.
     Ingest { stream: u64, dataset: String, n: u64, seed: u64, rho_min: f64, delta_min: f64, full: bool },
     /// Ingest a client-supplied coordinate batch (binary-only: points
-    /// have no lossless whitespace-token form).
-    IngestPoints { stream: u64, batch: Arc<PointSet>, rho_min: f64, delta_min: f64, full: bool },
+    /// have no lossless whitespace-token form). The batch is
+    /// dtype-tagged on the wire; a mismatch against the stream's dtype
+    /// is a typed server-side error, not a silent cast.
+    IngestPoints { stream: u64, batch: DynPoints, rho_min: f64, delta_min: f64, full: bool },
     CloseStream { stream: u64 },
     /// Durable mode: snapshot state now.
     Checkpoint,
@@ -110,7 +124,10 @@ pub enum Response {
         full: Option<FullResult>,
     },
     Closed { id: u64 },
-    CheckpointTaken { seq: u64, journal_offset: u64, next_lsn: u64 },
+    /// `journal_seq`/`journal_offset` name the segmented journal's
+    /// replay horizon — every segment strictly below `journal_seq` is
+    /// GC-eligible once this manifest is durable.
+    CheckpointTaken { seq: u64, journal_seq: u64, journal_offset: u64, next_lsn: u64 },
     /// Admission control: back off and retry (nothing was enqueued).
     Busy { detail: String },
     /// The request failed; the connection stays usable.
@@ -152,6 +169,17 @@ fn get_algo(cur: &mut Cursor<'_>) -> Result<Option<DepAlgo>, String> {
     }
 }
 
+/// Dtype travels as its `size_bytes` tag, the same self-describing byte
+/// the point-batch codec and the dataset binary header use.
+fn put_dtype(out: &mut Vec<u8>, dtype: Dtype) {
+    out.push(dtype.size_bytes() as u8);
+}
+
+fn get_dtype(cur: &mut Cursor<'_>) -> Result<Dtype, String> {
+    let tag = cur.u8()?;
+    Dtype::from_tag(tag).ok_or_else(|| format!("unknown dtype tag {tag} (want 4 or 8)"))
+}
+
 /// Detail strings are operator-facing; clamp so a pathological error
 /// message can never push a frame past the decoder's string bound.
 fn put_detail(out: &mut Vec<u8>, s: &str) {
@@ -159,12 +187,18 @@ fn put_detail(out: &mut Vec<u8>, s: &str) {
     wire::put_str(out, &clamped);
 }
 
-fn check_version(cur: &mut Cursor<'_>) -> Result<(), String> {
+/// Returns the message's version so decoders can fill fields a v1 peer
+/// could not express. Note no single-bit flip of the current version
+/// byte (2) lands on the other accepted version (1), so corruption
+/// cannot silently downgrade a message.
+fn check_version(cur: &mut Cursor<'_>) -> Result<u8, String> {
     let v = cur.u8()?;
-    if v != PROTO_VERSION {
-        return Err(format!("protocol version {v} (this build speaks {PROTO_VERSION})"));
+    if !(MIN_PROTO_VERSION..=PROTO_VERSION).contains(&v) {
+        return Err(format!(
+            "protocol version {v} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})"
+        ));
     }
-    Ok(())
+    Ok(v)
 }
 
 impl Request {
@@ -207,12 +241,14 @@ impl Request {
                 out.push(4);
                 wire::put_u64(&mut out, *session);
             }
-            Request::OpenStream { dim, d_cut, density, tag } => {
+            Request::OpenStream { dim, d_cut, density, tag, dtype } => {
                 out.push(5);
                 wire::put_u32(&mut out, *dim);
                 wire::put_f64(&mut out, *d_cut);
                 wire::put_density(&mut out, *density);
                 wire::put_str(&mut out, tag);
+                // v2 appended field: v1 ended at the tag string.
+                put_dtype(&mut out, *dtype);
             }
             Request::Ingest { stream, dataset, n, seed, rho_min, delta_min, full } => {
                 out.push(6);
@@ -227,7 +263,12 @@ impl Request {
             Request::IngestPoints { stream, batch, rho_min, delta_min, full } => {
                 out.push(7);
                 wire::put_u64(&mut out, *stream);
-                wire::put_store(&mut out, batch.as_ref());
+                // put_store leads with the dtype tag, so an f64 batch is
+                // byte-identical to the v1 encoding of the same batch.
+                match batch {
+                    DynPoints::F32(p) => wire::put_store(&mut out, p),
+                    DynPoints::F64(p) => wire::put_store(&mut out, p),
+                }
                 wire::put_f64(&mut out, *rho_min);
                 wire::put_f64(&mut out, *delta_min);
                 put_bool(&mut out, *full);
@@ -243,9 +284,11 @@ impl Request {
 
     /// Total decode: bounds-checked, version-checked, and trailing bytes
     /// inside the message are an error (the frame already delimited it).
+    /// v1 messages decode with their implied defaults (f64 everywhere,
+    /// journal segment 1).
     pub fn decode(buf: &[u8]) -> Result<Request, String> {
         let mut cur = Cursor::new(buf);
-        check_version(&mut cur)?;
+        let v = check_version(&mut cur)?;
         let kind = cur.u8()?;
         let req = match kind {
             0 => Request::Hello { tenant: wire::get_str(&mut cur)? },
@@ -278,6 +321,8 @@ impl Request {
                 d_cut: cur.f64()?,
                 density: wire::get_density(&mut cur)?,
                 tag: wire::get_str(&mut cur)?,
+                // v1 could only open f64 streams.
+                dtype: if v >= 2 { get_dtype(&mut cur)? } else { Dtype::F64 },
             },
             6 => Request::Ingest {
                 stream: cur.u64()?,
@@ -288,13 +333,25 @@ impl Request {
                 delta_min: cur.f64()?,
                 full: get_bool(&mut cur)?,
             },
-            7 => Request::IngestPoints {
-                stream: cur.u64()?,
-                batch: Arc::new(wire::get_store::<f64>(&mut cur)?),
-                rho_min: cur.f64()?,
-                delta_min: cur.f64()?,
-                full: get_bool(&mut cur)?,
-            },
+            7 => {
+                let stream = cur.u64()?;
+                let batch = wire::get_points(&mut cur)?;
+                // The batch codec is self-describing in both versions,
+                // but a v1 peer's contract was f64-only — hold it to it.
+                if v < 2 && batch.dtype() != Dtype::F64 {
+                    return Err(format!(
+                        "{} point batch in a v{v} message (dtypes need v2)",
+                        batch.dtype()
+                    ));
+                }
+                Request::IngestPoints {
+                    stream,
+                    batch,
+                    rho_min: cur.f64()?,
+                    delta_min: cur.f64()?,
+                    full: get_bool(&mut cur)?,
+                }
+            }
             8 => Request::CloseStream { stream: cur.u64()? },
             9 => Request::Checkpoint,
             other => return Err(format!("unknown request kind {other}")),
@@ -311,9 +368,9 @@ impl Request {
     /// `Err` never kills a serve loop (the caller reports and continues).
     ///
     /// Trailing optional tokens are resolved by *what parses*, not by
-    /// position: a dep-algo name, a density-model name, `tag=<label>`,
-    /// and the literal `full` can appear in any order after the required
-    /// fields (their vocabularies are disjoint).
+    /// position: a dep-algo name, a density-model name, a dtype name,
+    /// `tag=<label>`, and the literal `full` can appear in any order
+    /// after the required fields (their vocabularies are disjoint).
     pub fn from_line(line: &str) -> Result<Option<Request>, String> {
         let t = line.split('#').next().unwrap_or("").trim();
         if t.is_empty() {
@@ -333,8 +390,14 @@ impl Request {
                 }
                 let n = parse_num::<u64>("n", parts[2])?;
                 let d_cut = parse_num::<f64>("d_cut", parts[3])?;
-                let (density, tag, _, _) = parse_trailing(&parts[4..])?;
-                Request::OpenSession { dataset: parts[1].to_string(), n, d_cut, density, tag }
+                let tr = parse_trailing(&parts[4..])?;
+                Request::OpenSession {
+                    dataset: parts[1].to_string(),
+                    n,
+                    d_cut,
+                    density: tr.density,
+                    tag: tr.tag,
+                }
             }
             "recut" => {
                 if parts.len() < 4 {
@@ -343,8 +406,8 @@ impl Request {
                 let session = parse_num::<u64>("session", parts[1])?;
                 let rho_min = parse_num::<f64>("rho_min", parts[2])?;
                 let delta_min = parse_num::<f64>("delta_min", parts[3])?;
-                let (_, _, full, _) = parse_trailing(&parts[4..])?;
-                Request::Recut { session, rho_min, delta_min, full }
+                let tr = parse_trailing(&parts[4..])?;
+                Request::Recut { session, rho_min, delta_min, full: tr.full }
             }
             "close" => {
                 let &[_, sid] = parts.as_slice() else {
@@ -354,12 +417,20 @@ impl Request {
             }
             "stream" => {
                 if parts.len() < 3 {
-                    return Err(format!("want `stream <dim> <d_cut> [density] [tag=T]`, got {t:?}"));
+                    return Err(format!(
+                        "want `stream <dim> <d_cut> [density] [f32|f64] [tag=T]`, got {t:?}"
+                    ));
                 }
                 let dim = parse_num::<u32>("dim", parts[1])?;
                 let d_cut = parse_num::<f64>("d_cut", parts[2])?;
-                let (density, tag, _, _) = parse_trailing(&parts[3..])?;
-                Request::OpenStream { dim, d_cut, density, tag }
+                let tr = parse_trailing(&parts[3..])?;
+                Request::OpenStream {
+                    dim,
+                    d_cut,
+                    density: tr.density,
+                    tag: tr.tag,
+                    dtype: tr.dtype.unwrap_or(Dtype::F64),
+                }
             }
             "ingest" => {
                 if parts.len() < 6 {
@@ -371,15 +442,15 @@ impl Request {
                 let n = parse_num::<u64>("n", parts[3])?;
                 let rho_min = parse_num::<f64>("rho_min", parts[4])?;
                 let delta_min = parse_num::<f64>("delta_min", parts[5])?;
-                let (_, _, full, seed) = parse_trailing(&parts[6..])?;
+                let tr = parse_trailing(&parts[6..])?;
                 Request::Ingest {
                     stream,
                     dataset: parts[2].to_string(),
                     n,
-                    seed: seed.unwrap_or(42),
+                    seed: tr.seed.unwrap_or(42),
                     rho_min,
                     delta_min,
-                    full,
+                    full: tr.full,
                 }
             }
             "closestream" => {
@@ -461,10 +532,13 @@ impl Request {
                 s
             }
             Request::CloseSession { session } => format!("close {session}"),
-            Request::OpenStream { dim, d_cut, density, tag } => {
+            Request::OpenStream { dim, d_cut, density, tag, dtype } => {
                 let mut s = format!("stream {dim} {d_cut}");
                 if *density != DensityModel::CutoffCount {
                     s.push_str(&format!(" {density}"));
+                }
+                if *dtype != Dtype::F64 {
+                    s.push_str(&format!(" {dtype}"));
                 }
                 if !tag.is_empty() {
                     s.push_str(&format!(" tag={tag}"));
@@ -490,27 +564,46 @@ fn parse_num<T: std::str::FromStr>(name: &str, tok: &str) -> Result<T, String> {
     tok.parse::<T>().map_err(|_| format!("non-numeric {name}: {tok:?}"))
 }
 
-/// Shared trailing-token parser: `[density] [tag=T] [seed=S] [full]` in
-/// any order. Returns `(density, tag, full, seed)`.
-fn parse_trailing(toks: &[&str]) -> Result<(DensityModel, String, bool, Option<u64>), String> {
-    let mut density = DensityModel::CutoffCount;
-    let mut tag = String::new();
-    let mut full = false;
-    let mut seed = None;
+/// What the shared trailing-token parser collected.
+struct Trailing {
+    density: DensityModel,
+    tag: String,
+    full: bool,
+    seed: Option<u64>,
+    dtype: Option<Dtype>,
+}
+
+/// Shared trailing-token parser: `[density] [f32|f64] [tag=T] [seed=S]
+/// [full]` in any order — the vocabularies are disjoint ("f32"/"f64"
+/// name no density model). Commands that take no dtype simply ignore a
+/// parsed one, the same stance the grammar already takes on densities
+/// in `recut`.
+fn parse_trailing(toks: &[&str]) -> Result<Trailing, String> {
+    let mut tr = Trailing {
+        density: DensityModel::CutoffCount,
+        tag: String::new(),
+        full: false,
+        seed: None,
+        dtype: None,
+    };
     for tok in toks {
         if *tok == "full" {
-            full = true;
+            tr.full = true;
         } else if let Some(t) = tok.strip_prefix("tag=") {
-            tag = t.to_string();
+            tr.tag = t.to_string();
         } else if let Some(s) = tok.strip_prefix("seed=") {
-            seed = Some(parse_num::<u64>("seed", s)?);
+            tr.seed = Some(parse_num::<u64>("seed", s)?);
+        } else if let Ok(d) = tok.parse::<Dtype>() {
+            tr.dtype = Some(d);
         } else if let Ok(m) = tok.parse::<DensityModel>() {
-            density = m;
+            tr.density = m;
         } else {
-            return Err(format!("unknown option {tok:?} (density, tag=T, seed=S, or `full`)"));
+            return Err(format!(
+                "unknown option {tok:?} (density, f32|f64, tag=T, seed=S, or `full`)"
+            ));
         }
     }
-    Ok((density, tag, full, seed))
+    Ok(tr)
 }
 
 impl Response {
@@ -556,11 +649,13 @@ impl Response {
                 out.push(3);
                 wire::put_u64(&mut out, *id);
             }
-            Response::CheckpointTaken { seq, journal_offset, next_lsn } => {
+            Response::CheckpointTaken { seq, journal_seq, journal_offset, next_lsn } => {
                 out.push(4);
                 wire::put_u64(&mut out, *seq);
                 wire::put_u64(&mut out, *journal_offset);
                 wire::put_u64(&mut out, *next_lsn);
+                // v2 appended field: v1 ended at next_lsn.
+                wire::put_u64(&mut out, *journal_seq);
             }
             Response::Busy { detail } => {
                 out.push(5);
@@ -576,7 +671,7 @@ impl Response {
 
     pub fn decode(buf: &[u8]) -> Result<Response, String> {
         let mut cur = Cursor::new(buf);
-        check_version(&mut cur)?;
+        let v = check_version(&mut cur)?;
         let kind = cur.u8()?;
         let resp = match kind {
             0 => Response::Hello { tenant: wire::get_str(&mut cur)? },
@@ -606,11 +701,14 @@ impl Response {
                 },
             },
             3 => Response::Closed { id: cur.u64()? },
-            4 => Response::CheckpointTaken {
-                seq: cur.u64()?,
-                journal_offset: cur.u64()?,
-                next_lsn: cur.u64()?,
-            },
+            4 => {
+                let seq = cur.u64()?;
+                let journal_offset = cur.u64()?;
+                let next_lsn = cur.u64()?;
+                // A v1 server ran the single-journal layout: segment 1.
+                let journal_seq = if v >= 2 { cur.u64()? } else { 1 };
+                Response::CheckpointTaken { seq, journal_seq, journal_offset, next_lsn }
+            }
             5 => Response::Busy { detail: wire::get_str(&mut cur)? },
             6 => Response::Error { detail: wire::get_str(&mut cur)? },
             other => return Err(format!("unknown response kind {other}")),
@@ -637,8 +735,10 @@ impl Response {
                 s
             }
             Response::Closed { id } => format!("closed {id}"),
-            Response::CheckpointTaken { seq, journal_offset, next_lsn } => {
-                format!("checkpoint {seq} taken (journal offset {journal_offset}, next lsn {next_lsn})")
+            Response::CheckpointTaken { seq, journal_seq, journal_offset, next_lsn } => {
+                format!(
+                    "checkpoint {seq} taken (journal segment {journal_seq} offset {journal_offset}, next lsn {next_lsn})"
+                )
             }
             Response::Busy { detail } => format!("busy: {detail}"),
             Response::Error { detail } => format!("error: {detail}"),
@@ -649,6 +749,7 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geom::{PointSet, PointStore};
 
     #[test]
     fn line_grammar_round_trips() {
@@ -673,7 +774,20 @@ mod tests {
             },
             Request::Recut { session: 7, rho_min: 2.5, delta_min: 10.0, full: false },
             Request::CloseSession { session: 7 },
-            Request::OpenStream { dim: 3, d_cut: 2.0, density: DensityModel::CutoffCount, tag: String::new() },
+            Request::OpenStream {
+                dim: 3,
+                d_cut: 2.0,
+                density: DensityModel::CutoffCount,
+                tag: String::new(),
+                dtype: Dtype::F64,
+            },
+            Request::OpenStream {
+                dim: 4,
+                d_cut: 1.5,
+                density: DensityModel::GaussianKernel,
+                tag: "sensors".into(),
+                dtype: Dtype::F32,
+            },
             Request::Ingest {
                 stream: 9,
                 dataset: "simden".into(),
@@ -715,22 +829,31 @@ mod tests {
             "simden 100 3.0 0",
             "simden 100 3.0 0 20 bogus-option",
             "open ds 10 1.0 notadensity",
+            "stream 2 1.0 f16",
         ] {
             assert!(Request::from_line(line).is_err(), "{line:?} should fail");
         }
     }
 
     #[test]
-    fn ingest_points_has_no_line_form() {
-        let req = Request::IngestPoints {
+    fn ingest_points_round_trips_both_dtypes() {
+        let f64_req = Request::IngestPoints {
             stream: 1,
-            batch: Arc::new(PointSet::new(vec![0.0, 0.0], 2)),
+            batch: DynPoints::F64(PointSet::new(vec![0.0, 0.0], 2)),
             rho_min: 0.0,
             delta_min: 1.0,
             full: false,
         };
-        assert_eq!(req.to_line(), None);
-        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        assert_eq!(f64_req.to_line(), None, "binary-only");
+        assert_eq!(Request::decode(&f64_req.encode()).unwrap(), f64_req);
+        let f32_req = Request::IngestPoints {
+            stream: 2,
+            batch: DynPoints::F32(PointStore::new(vec![1.0f32, 2.0, 3.0, 4.0], 2)),
+            rho_min: 0.5,
+            delta_min: 2.0,
+            full: true,
+        };
+        assert_eq!(Request::decode(&f32_req.encode()).unwrap(), f32_req);
     }
 
     #[test]
@@ -755,7 +878,7 @@ mod tests {
                 }),
             },
             Response::Closed { id: 3 },
-            Response::CheckpointTaken { seq: 1, journal_offset: 640, next_lsn: 9 },
+            Response::CheckpointTaken { seq: 3, journal_seq: 2, journal_offset: 640, next_lsn: 9 },
             Response::Busy { detail: "64 jobs in flight".into() },
             Response::Error { detail: "unknown session 5".into() },
         ];
@@ -764,10 +887,74 @@ mod tests {
         }
     }
 
+    // v1 compatibility: a v2 message body truncated at v1's last field,
+    // with the version byte rewritten, is exactly what a v1 peer sends.
+    #[test]
+    fn v1_messages_still_decode_with_their_implied_defaults() {
+        // OpenStream: v1 ended at the tag string (no dtype byte).
+        let v2 = Request::OpenStream {
+            dim: 3,
+            d_cut: 2.0,
+            density: DensityModel::CutoffCount,
+            tag: "old".into(),
+            dtype: Dtype::F64,
+        }
+        .encode();
+        let mut v1 = v2[..v2.len() - 1].to_vec();
+        v1[0] = 1;
+        let Request::OpenStream { dtype, tag, .. } = Request::decode(&v1).unwrap() else {
+            panic!("wrong kind")
+        };
+        assert_eq!(dtype, Dtype::F64, "v1 streams are implicitly f64");
+        assert_eq!(tag, "old");
+
+        // IngestPoints with an f64 batch: byte-identical body, only the
+        // version byte differs.
+        let req = Request::IngestPoints {
+            stream: 5,
+            batch: DynPoints::F64(PointSet::new(vec![1.0, 2.0], 2)),
+            rho_min: 0.0,
+            delta_min: 1.0,
+            full: false,
+        };
+        let mut v1 = req.encode();
+        v1[0] = 1;
+        assert_eq!(Request::decode(&v1).unwrap(), req);
+
+        // CheckpointTaken: v1 ended at next_lsn; journal_seq defaults to
+        // the single-journal layout's only segment.
+        let v2 = Response::CheckpointTaken { seq: 2, journal_seq: 1, journal_offset: 99, next_lsn: 7 }
+            .encode();
+        let mut v1 = v2[..v2.len() - 8].to_vec();
+        v1[0] = 1;
+        assert_eq!(
+            Response::decode(&v1).unwrap(),
+            Response::CheckpointTaken { seq: 2, journal_seq: 1, journal_offset: 99, next_lsn: 7 }
+        );
+    }
+
+    #[test]
+    fn v1_f32_batches_are_rejected() {
+        let req = Request::IngestPoints {
+            stream: 5,
+            batch: DynPoints::F32(PointStore::new(vec![1.0f32, 2.0], 2)),
+            rho_min: 0.0,
+            delta_min: 1.0,
+            full: false,
+        };
+        let mut v1 = req.encode();
+        v1[0] = 1;
+        let err = Request::decode(&v1).unwrap_err();
+        assert!(err.contains("v2"), "{err}");
+    }
+
     #[test]
     fn decoder_rejects_version_kind_and_trailing_garbage() {
         let mut buf = Request::Checkpoint.encode();
         buf[0] = PROTO_VERSION + 1;
+        assert!(Request::decode(&buf).unwrap_err().contains("version"));
+        let mut buf = Request::Checkpoint.encode();
+        buf[0] = 0;
         assert!(Request::decode(&buf).unwrap_err().contains("version"));
         let mut buf = Request::Checkpoint.encode();
         buf[1] = 200;

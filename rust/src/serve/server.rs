@@ -108,6 +108,25 @@ fn accept_loop(listener: TcpListener, state: Arc<ServeState>, stop: Arc<AtomicBo
     }
 }
 
+/// Frame a response for the wire. A response that overflows `MAX_FRAME`
+/// (a full-result payload over an enormous stream) is downgraded to a
+/// small typed `Error` the client can actually receive — the connection
+/// stays synchronized and usable, where the old `debug_assert!`-only cap
+/// would have shipped a frame the peer must treat as corruption.
+fn encode_response(state: &ServeState, resp: Response) -> Vec<u8> {
+    match encode_frame(&resp.encode()) {
+        Ok(bytes) => bytes,
+        Err(e) => {
+            state.coord.metrics.inc("serve_oversized_responses");
+            let fallback = Response::Error { detail: e.to_string() };
+            // The fallback is a few hundred bytes — re-encoding cannot
+            // overflow the cap; `unwrap_or_default` only placates the
+            // type, an empty write is unreachable.
+            encode_frame(&fallback.encode()).unwrap_or_default()
+        }
+    }
+}
+
 fn connection_loop(sock: TcpStream, state: &ServeState, stop: &AtomicBool) -> std::io::Result<()> {
     // Blocking socket with a short read timeout: the thread parks in the
     // kernel between requests but still honors shutdown within a tick.
@@ -133,13 +152,13 @@ fn connection_loop(sock: TcpStream, state: &ServeState, stop: &AtomicBool) -> st
                             Response::Error { detail }
                         }
                     };
-                    sock.write_all(&encode_frame(&resp.encode()))?;
+                    sock.write_all(&encode_response(state, resp))?;
                 }
                 Err(e) => {
                     // Framing broke: best-effort final error, then drop.
                     state.coord.metrics.inc("serve_proto_errors");
                     let resp = Response::Error { detail: e.to_string() };
-                    let _ = sock.write_all(&encode_frame(&resp.encode()));
+                    let _ = sock.write_all(&encode_response(state, resp));
                     return Ok(());
                 }
             }

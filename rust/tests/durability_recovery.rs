@@ -4,8 +4,10 @@
 //! The contract under test (DESIGN.md §Durability): recovering a durable
 //! directory yields state **byte-identical** to a fresh build over the
 //! concatenated batches — for every density model and dtype, at any
-//! thread count — and every corrupted input yields a typed
-//! `DpcError::Corrupt*`, never a panic and never a partial parse.
+//! thread count, at any segment-rotation threshold — and every corrupted
+//! input yields a typed `DpcError::Corrupt*`, never a panic and never a
+//! partial parse. Torn tails are legal only in the *final* segment;
+//! everything below the manifest's replay horizon is ignorable garbage.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -14,7 +16,7 @@ use parcluster::coordinator::{Coordinator, CoordinatorConfig, OpenSpec};
 use parcluster::dpc::{DensityModel, Dpc, DpcParams, StreamingSession};
 use parcluster::durability::{
     checkpoint::{self, CheckpointData, DynStreamState},
-    journal::{self, JournalEntry, JOURNAL_FILE},
+    journal::{self, JournalEntry},
     manifest::{self, Manifest, MANIFEST_FILE},
     recovery::{recover, DynStream},
 };
@@ -30,8 +32,8 @@ fn tmpdir(tag: &str) -> PathBuf {
     dir
 }
 
-/// Three clustered batches (integer-snapped so f32 casts are lossless and
-/// the f32/f64 legs can share one expected history).
+/// Clustered batches (integer-snapped so f32 casts are lossless and the
+/// f32/f64 legs can share one expected history).
 fn batches(seed: u64, n: usize, splits: &[usize]) -> Vec<PointSet> {
     let mut rng = SplitMix64::new(seed);
     let pts = gen_clustered_points(&mut rng, n, 2, 3, 50.0, 1.8);
@@ -47,7 +49,8 @@ fn batches(seed: u64, n: usize, splits: &[usize]) -> Vec<PointSet> {
 }
 
 /// Journal an OpenStream + every batch (checkpointing after
-/// `checkpoint_after` batches if `Some`), then "crash" by dropping the
+/// `checkpoint_after` batches if `Some`), rotating segments at
+/// `rotate_bytes` (0 = single segment), then "crash" by dropping the
 /// writer. Returns the stream id used.
 fn write_history(
     dir: &PathBuf,
@@ -55,8 +58,9 @@ fn write_history(
     model: DensityModel,
     all: &[PointSet],
     checkpoint_after: Option<usize>,
+    rotate_bytes: u64,
 ) -> u64 {
-    let mut rec = recover(dir, 1).unwrap();
+    let mut rec = recover(dir, 1, rotate_bytes).unwrap();
     rec.writer
         .append(&JournalEntry::OpenStream { stream: 1, dim: 2, dtype, d_cut: 3.0, density: model })
         .unwrap();
@@ -77,7 +81,7 @@ fn write_history(
                 Dtype::F64 => DynStreamState::F64(live64.export_state()),
             };
             let data = CheckpointData { streams: vec![(1, state)], sessions: Vec::new() };
-            checkpoint::write(dir, &mut rec.writer, &data, 2).unwrap();
+            checkpoint::write(dir, &mut rec.writer, &data, 2, 1).unwrap();
         }
     }
     1
@@ -103,17 +107,36 @@ fn fresh_f32(model: DensityModel, all: &[PointSet]) -> StreamingSession<f32> {
     s
 }
 
+/// Assert a recovered f64 stream holds a whole-batch prefix of `all` and
+/// matches a fresh build over that prefix bit-for-bit.
+fn assert_whole_batch_prefix(got: &StreamingSession<f64>, all: &[PointSet], ctx: &str) {
+    let mut fresh =
+        StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+    for b in all {
+        if fresh.len() + b.len() > got.len() {
+            break;
+        }
+        fresh.ingest(b).unwrap();
+    }
+    assert_eq!(got.len(), fresh.len(), "{ctx}: prefix is whole batches");
+    assert_eq!(got.rho(), fresh.rho(), "{ctx}");
+    assert_eq!(got.delta(), fresh.delta(), "{ctx}");
+}
+
 /// The PR's acceptance gate: for every density model × dtype, a recovery
-/// that stacks a mid-history checkpoint with a journal suffix produces
-/// (ρ, λ, δ) byte-identical to a fresh build on the concatenated batches.
+/// that stacks a mid-history checkpoint with a journal suffix — across a
+/// *rotated* segment chain — produces (ρ, λ, δ) byte-identical to a
+/// fresh build on the concatenated batches.
 #[test]
 fn recovery_differential_every_model_and_dtype() {
     let all = batches(41, 120, &[50, 40, 30]);
     for model in DensityModel::REPRESENTATIVE {
         for dtype in [Dtype::F64, Dtype::F32] {
             let dir = tmpdir(&format!("diff-{model}-{dtype}"));
-            write_history(&dir, dtype, model, &all, Some(2));
-            let rec = recover(&dir, 1).unwrap();
+            // ~1.2 KiB rotation: each f64 ingest frame (~650 B+) lands in
+            // its own segment neighbourhood, so the history spans several.
+            write_history(&dir, dtype, model, &all, Some(2), 1200);
+            let rec = recover(&dir, 1, 1200).unwrap();
             assert_eq!(rec.report.checkpoint_seq, 1, "{model}/{dtype}");
             assert_eq!(rec.report.replayed, 1, "{model}/{dtype}: only the suffix replays");
             assert_eq!(rec.streams.len(), 1, "{model}/{dtype}");
@@ -148,13 +171,13 @@ fn recovery_differential_every_model_and_dtype() {
 fn replay_is_thread_count_invariant() {
     let all = batches(43, 150, &[60, 50, 40]);
     let dir = tmpdir("threads");
-    write_history(&dir, Dtype::F64, DensityModel::Epanechnikov, &all, None);
+    write_history(&dir, Dtype::F64, DensityModel::Epanechnikov, &all, None, 0);
     let prev = parlay::num_threads();
     parlay::set_threads(1);
     let fresh = fresh_f64(DensityModel::Epanechnikov, &all);
-    let rec1 = recover(&dir, 1).unwrap();
+    let rec1 = recover(&dir, 1, 0).unwrap();
     parlay::set_threads(8);
-    let rec8 = recover(&dir, 1).unwrap();
+    let rec8 = recover(&dir, 1, 0).unwrap();
     parlay::set_threads(prev);
     let (DynStream::F64(s1), DynStream::F64(s8)) = (&rec1.streams[0].1, &rec8.streams[0].1) else {
         panic!("f64 streams")
@@ -175,8 +198,8 @@ fn replay_is_thread_count_invariant() {
 fn torn_final_frame_is_truncated_not_fatal() {
     let all = batches(47, 90, &[40, 30, 20]);
     let dir = tmpdir("torn");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
-    let jpath = dir.join(JOURNAL_FILE);
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 0);
+    let jpath = dir.join(journal::segment_file(1));
     let len = std::fs::metadata(&jpath).unwrap().len();
     // Cut the last frame short (well past its 8-byte prefix, well short of
     // its end) — the canonical kill -9 mid-append.
@@ -184,7 +207,7 @@ fn torn_final_frame_is_truncated_not_fatal() {
     f.set_len(len - 37).unwrap();
     drop(f);
 
-    let mut rec = recover(&dir, 1).unwrap();
+    let mut rec = recover(&dir, 1, 0).unwrap();
     assert!(rec.report.torn_bytes > 0, "the cut frame is torn, not corrupt");
     assert_eq!(rec.report.replayed, 3, "open + first two ingests survive");
     let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
@@ -203,7 +226,7 @@ fn torn_final_frame_is_truncated_not_fatal() {
         })
         .unwrap();
     drop(rec);
-    let rec2 = recover(&dir, 1).unwrap();
+    let rec2 = recover(&dir, 1, 0).unwrap();
     let DynStream::F64(got) = &rec2.streams[0].1 else { panic!("f64 stream") };
     let fresh = fresh_f64(DensityModel::CutoffCount, &all);
     assert_eq!(got.rho(), fresh.rho());
@@ -221,62 +244,331 @@ fn corruption_yields_typed_errors_never_partial_state() {
 
     // Bit-flip inside a complete journal frame -> CorruptJournal.
     let dir = tmpdir("crcflip");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
-    let jpath = dir.join(JOURNAL_FILE);
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 0);
+    let jpath = dir.join(journal::segment_file(1));
     let mut bytes = std::fs::read(&jpath).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x40;
     std::fs::write(&jpath, &bytes).unwrap();
-    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptJournal { .. })));
+    assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptJournal { .. })));
     std::fs::remove_dir_all(&dir).unwrap();
 
     // Truncated checkpoint -> CorruptCheckpoint (whole-file CRC, no
     // partial parse).
     let dir = tmpdir("ckpttrunc");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2));
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2), 0);
     let cpath = dir.join("checkpoint-1.pclc");
     let clen = std::fs::metadata(&cpath).unwrap().len();
     let f = std::fs::OpenOptions::new().write(true).open(&cpath).unwrap();
     f.set_len(clen / 2).unwrap();
     drop(f);
-    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptCheckpoint { .. })));
+    assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptCheckpoint { .. })));
     std::fs::remove_dir_all(&dir).unwrap();
 
     // Bit-flipped checkpoint -> CorruptCheckpoint.
     let dir = tmpdir("ckptflip");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2));
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, Some(2), 0);
     let cpath = dir.join("checkpoint-1.pclc");
     let mut bytes = std::fs::read(&cpath).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x01;
     std::fs::write(&cpath, &bytes).unwrap();
-    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptCheckpoint { .. })));
+    assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptCheckpoint { .. })));
     std::fs::remove_dir_all(&dir).unwrap();
 
     // Garbage manifest -> CorruptManifest.
     let dir = tmpdir("garbage");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 0);
     std::fs::write(dir.join(MANIFEST_FILE), b"not a manifest, definitely").unwrap();
-    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+    assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptManifest { .. })));
     std::fs::remove_dir_all(&dir).unwrap();
 
-    // Manifest offset past the journal's end (a stale manifest restored
-    // next to a shorter journal) -> CorruptManifest.
+    // Manifest offset past the named segment's end (a stale manifest
+    // restored next to a shorter journal) -> CorruptManifest.
     let dir = tmpdir("stale");
-    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None);
-    let jlen = std::fs::metadata(dir.join(JOURNAL_FILE)).unwrap().len();
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 0);
+    let jlen = std::fs::metadata(dir.join(journal::segment_file(1))).unwrap().len();
     manifest::write(
         &dir,
-        &Manifest { checkpoint_seq: 0, journal_offset: jlen + 512, next_lsn: 99, next_session_id: 1 },
+        &Manifest {
+            checkpoint_seq: 0,
+            journal_seq: 1,
+            journal_offset: jlen + 512,
+            next_lsn: 99,
+            next_session_id: 1,
+        },
     )
     .unwrap();
-    assert!(matches!(recover(&dir, 1), Err(DpcError::CorruptManifest { .. })));
+    assert!(matches!(recover(&dir, 1, 0), Err(DpcError::CorruptManifest { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Tentpole gate — rotation + GC bound the journal: a rotated history
+/// spans several segments with contiguous LSNs; a checkpoint at the end
+/// flips the manifest horizon forward and deletes every segment strictly
+/// below it, and the survivors still recover byte-identical to fresh.
+#[test]
+fn rotation_spans_segments_and_checkpoint_gc_bounds_disk() {
+    let all = batches(73, 120, &[30, 30, 30, 30]);
+    let dir = tmpdir("rotate-gc");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    let segs = journal::list_segments(&dir).unwrap();
+    assert!(segs.len() >= 3, "1 KiB rotation must split 4 ingests, got {} segment(s)", segs.len());
+    let scan = journal::scan_dir(&dir, 1).unwrap();
+    assert_eq!(scan.entries.len(), 5, "open + 4 ingests across the chain");
+    for (i, f) in scan.entries.iter().enumerate() {
+        assert_eq!(f.lsn, 1 + i as u64, "LSNs contiguous across segment boundaries");
+    }
+
+    // Recover the rotated chain, checkpoint at the very end, and the
+    // journal's disk footprint collapses to the live segment.
+    let mut rec = recover(&dir, 1, 1024).unwrap();
+    assert_eq!(rec.report.segments, segs.len());
+    let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    assert_eq!(got.rho(), fresh.rho());
+    assert_eq!(got.dep(), fresh.dep());
+    assert_eq!(got.delta(), fresh.delta());
+
+    let state = DynStreamState::F64(got.export_state());
+    let data = CheckpointData { streams: vec![(1, state)], sessions: Vec::new() };
+    let m = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
+    drop(rec);
+    let after = journal::list_segments(&dir).unwrap();
+    assert!(
+        after.iter().all(|&(seq, _)| seq >= m.journal_seq),
+        "GC leaves nothing below the replay horizon {} (survivors: {:?})",
+        m.journal_seq,
+        after.iter().map(|&(s, _)| s).collect::<Vec<_>>()
+    );
+    assert!(after.len() < segs.len(), "the sweep actually deleted sealed segments");
+
+    // The bounded directory still recovers to the identical state.
+    let rec2 = recover(&dir, 1, 1024).unwrap();
+    assert_eq!(rec2.report.checkpoint_seq, m.checkpoint_seq);
+    assert_eq!(rec2.report.replayed, 0, "horizon is at the end: nothing to replay");
+    let DynStream::F64(got2) = &rec2.streams[0].1 else { panic!("f64 stream") };
+    assert_eq!(got2.rho(), fresh.rho());
+    assert_eq!(got2.dep(), fresh.dep());
+    assert_eq!(got2.delta(), fresh.delta());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 6 — crash *between* manifest flip and the GC sweep: stale
+/// segments below the replay horizon are legal leftovers. Recovery must
+/// ignore them entirely, and the next sweep removes them.
+#[test]
+fn gc_leftovers_below_horizon_are_ignored() {
+    let all = batches(79, 120, &[30, 30, 30, 30]);
+    let dir = tmpdir("gc-crash");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    // Stash every segment, then checkpoint (which GCs below the horizon).
+    let saved: Vec<(u64, Vec<u8>)> = journal::list_segments(&dir)
+        .unwrap()
+        .into_iter()
+        .map(|(seq, path)| (seq, std::fs::read(path).unwrap()))
+        .collect();
+    assert!(saved.len() >= 3);
+    let mut rec = recover(&dir, 1, 1024).unwrap();
+    let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+    let data = CheckpointData {
+        streams: vec![(1, DynStreamState::F64(got.export_state()))],
+        sessions: Vec::new(),
+    };
+    let m = checkpoint::write(&dir, &mut rec.writer, &data, 2, 1).unwrap();
+    drop(rec);
+    assert!(m.journal_seq > 1, "horizon moved past segment 1");
+
+    // "Crash before the sweep finished": resurrect the GC'd segments.
+    for (seq, bytes) in &saved {
+        if *seq < m.journal_seq {
+            std::fs::write(dir.join(journal::segment_file(*seq)), bytes).unwrap();
+        }
+    }
+    let rec2 = recover(&dir, 1, 1024).unwrap();
+    assert_eq!(rec2.report.replayed, 0, "leftovers below the horizon never replay");
+    let DynStream::F64(got2) = &rec2.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    assert_eq!(got2.rho(), fresh.rho());
+    assert_eq!(got2.delta(), fresh.delta());
+
+    // The next sweep (any checkpoint) clears the leftovers for good.
+    let removed = journal::gc_segments(&dir, m.journal_seq);
+    assert!(!removed.is_empty());
+    assert!(journal::list_segments(&dir).unwrap().iter().all(|&(s, _)| s >= m.journal_seq));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 7 — crash *after* rotation created the successor but before
+/// any append reached it: a header-only final segment is a legal empty
+/// tail. Recovery replays the sealed predecessors and re-arms the writer
+/// at the successor's header.
+#[test]
+fn header_only_final_segment_is_a_legal_empty_tail() {
+    let all = batches(83, 90, &[40, 30, 20]);
+    let dir = tmpdir("midrotate-created");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 0);
+    let scan = journal::scan_dir(&dir, 1).unwrap();
+    let (succ, first_lsn) = (scan.last_seq() + 1, scan.next_lsn);
+    // Hand-craft the successor exactly as a crashed rotate() leaves it:
+    // magic + version + seq + first_lsn, nothing else.
+    let mut hdr = Vec::with_capacity(journal::JOURNAL_HEADER_LEN as usize);
+    hdr.extend_from_slice(&journal::JOURNAL_MAGIC);
+    hdr.extend_from_slice(&journal::JOURNAL_VERSION.to_le_bytes());
+    hdr.extend_from_slice(&succ.to_le_bytes());
+    hdr.extend_from_slice(&first_lsn.to_le_bytes());
+    std::fs::write(dir.join(journal::segment_file(succ)), &hdr).unwrap();
+
+    let mut rec = recover(&dir, 1, 0).unwrap();
+    assert_eq!(rec.report.replayed, 4, "open + 3 ingests from the sealed predecessor");
+    assert_eq!(rec.report.segments, 2);
+    assert_eq!(rec.writer.seq(), succ, "writer re-arms in the empty successor");
+    assert!(rec.writer.is_empty());
+    assert_eq!(rec.writer.next_lsn(), first_lsn, "LSNs continue across the empty tail");
+    let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    assert_eq!(got.rho(), fresh.rho());
+    assert_eq!(got.delta(), fresh.delta());
+
+    // Appends land in the successor and survive another recovery.
+    rec.writer
+        .append(&JournalEntry::Ingest {
+            stream: 1,
+            rho_min: 0.0,
+            delta_min: 20.0,
+            batch: DynPoints::F64(all[0].clone()),
+        })
+        .unwrap();
+    drop(rec);
+    let rec2 = recover(&dir, 1, 0).unwrap();
+    assert_eq!(rec2.report.replayed, 5);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 8 — crash *between* sealing the old segment and creating
+/// its successor: the chain just ends at a sealed, whole segment.
+/// Recovery reopens it as the live segment and loses only the frames the
+/// vanished successor would have held — always a whole-batch prefix.
+#[test]
+fn missing_successor_segment_recovers_the_sealed_prefix() {
+    let all = batches(89, 120, &[30, 30, 30, 30]);
+    let dir = tmpdir("midrotate-missing");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    let segs = journal::list_segments(&dir).unwrap();
+    assert!(segs.len() >= 3);
+    let (last_seq, last_path) = segs.last().unwrap().clone();
+    std::fs::remove_file(&last_path).unwrap();
+
+    let rec = recover(&dir, 1, 1024).unwrap();
+    assert_eq!(rec.writer.seq(), last_seq - 1, "writer reopens the sealed predecessor");
+    let DynStream::F64(got) = &rec.streams[0].1 else { panic!("f64 stream") };
+    assert!(got.len() < 120, "the vanished segment's batches are gone");
+    assert_whole_batch_prefix(got, &all, "missing successor");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 9 — torn tail in a *sealed* (non-final) segment: rotation
+/// fsyncs a segment before its successor exists, so a short frame
+/// anywhere but the final segment cannot be a crash artifact — it is
+/// `CorruptJournal`, never a silent truncation.
+#[test]
+fn torn_tail_in_sealed_segment_is_corrupt() {
+    let all = batches(97, 120, &[30, 30, 30, 30]);
+    let dir = tmpdir("sealed-torn");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    let segs = journal::list_segments(&dir).unwrap();
+    assert!(segs.len() >= 3);
+    let (_, sealed_path) = &segs[segs.len() - 2];
+    let len = std::fs::metadata(sealed_path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(sealed_path).unwrap();
+    f.set_len(len - 9).unwrap();
+    drop(f);
+    match recover(&dir, 1, 1024) {
+        Err(DpcError::CorruptJournal { detail, .. }) => {
+            assert!(detail.contains("torn tail"), "wrong detail: {detail}")
+        }
+        other => panic!("sealed torn tail must be CorruptJournal, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill point 10 — a segment missing from the *middle* of the chain (at
+/// or above the horizon) is a gap, not a prefix: typed corruption.
+#[test]
+fn missing_segment_in_chain_is_corrupt() {
+    let all = batches(101, 120, &[30, 30, 30, 30]);
+    let dir = tmpdir("gap");
+    write_history(&dir, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    let segs = journal::list_segments(&dir).unwrap();
+    assert!(segs.len() >= 3);
+    std::fs::remove_file(&segs[1].1).unwrap();
+    assert!(matches!(recover(&dir, 1, 1024), Err(DpcError::CorruptJournal { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Incremental checkpoints reassemble across files: a second checkpoint
+/// delta-encoded against the first (sharing every unchanged level) must
+/// recover byte-identical, and must be far smaller than the full image
+/// it supersedes when only a small batch landed in between.
+#[test]
+fn delta_checkpoints_recover_byte_identical() {
+    // 128 then 16: the second ingest leaves the 128-point level's bit set
+    // in the Bentley–Saxe counter, so its blob is unchanged and refs.
+    let all = batches(103, 144, &[128, 16]);
+    let dir = tmpdir("delta");
+    let mut rec = recover(&dir, 1, 0).unwrap();
+    rec.writer
+        .append(&JournalEntry::OpenStream {
+            stream: 1,
+            dim: 2,
+            dtype: Dtype::F64,
+            d_cut: 3.0,
+            density: DensityModel::CutoffCount,
+        })
+        .unwrap();
+    let mut live = StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
+    for b in &all {
+        rec.writer
+            .append(&JournalEntry::Ingest {
+                stream: 1,
+                rho_min: 0.0,
+                delta_min: 20.0,
+                batch: DynPoints::F64(b.clone()),
+            })
+            .unwrap();
+        live.ingest(b).unwrap();
+        let data = CheckpointData {
+            streams: vec![(1, DynStreamState::F64(live.export_state()))],
+            sessions: Vec::new(),
+        };
+        // retain 2 keeps checkpoint 1 around as the delta base.
+        checkpoint::write(&dir, &mut rec.writer, &data, 2, 2).unwrap();
+    }
+    drop(rec);
+    let full = std::fs::metadata(dir.join("checkpoint-1.pclc")).unwrap().len();
+    let delta = std::fs::metadata(dir.join("checkpoint-2.pclc")).unwrap().len();
+    // Checkpoint 2 inlines only the 16-point level (plus the per-point
+    // artifact arrays); the 128-point level rides along as a ref.
+    assert!(
+        delta < full,
+        "checkpoint 2 should be a delta (full {full} B, delta {delta} B)"
+    );
+    let rec2 = recover(&dir, 1, 0).unwrap();
+    assert_eq!(rec2.report.checkpoint_seq, 2);
+    assert_eq!(rec2.report.replayed, 0);
+    let DynStream::F64(got) = &rec2.streams[0].1 else { panic!("f64 stream") };
+    let fresh = fresh_f64(DensityModel::CutoffCount, &all);
+    assert_eq!(got.rho(), fresh.rho());
+    assert_eq!(got.dep(), fresh.dep());
+    assert_eq!(got.delta(), fresh.delta());
+    assert_eq!(got.level_sizes(), fresh.level_sizes());
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 /// End-to-end through the public serve surface: a durable coordinator that
 /// checkpoints, keeps working, and is killed restarts into a state whose
-/// recut output matches a never-crashed coordinator's.
+/// recut output matches a never-crashed coordinator's — across a rotated
+/// segment chain.
 #[test]
 fn coordinator_checkpoint_crash_restart_round_trip() {
     let all = batches(59, 120, &[50, 40, 30]);
@@ -284,6 +576,8 @@ fn coordinator_checkpoint_crash_restart_round_trip() {
     let cfg = CoordinatorConfig {
         artifacts_dir: PathBuf::from("/nonexistent"),
         durable_dir: Some(dir.clone()),
+        // Rotate aggressively so the restart crosses segment boundaries.
+        journal_rotate_bytes: 2048,
         ..CoordinatorConfig::default()
     };
     let sid;
@@ -308,17 +602,22 @@ fn coordinator_checkpoint_crash_restart_round_trip() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
-/// Randomized crash-injection sweep (nightly: `--include-ignored`): cut
-/// the journal at *every byte offset class* and flip random bytes; every
-/// outcome must be a clean prefix recovery or a typed error — never a
-/// panic, never a partially-applied entry.
+/// Randomized crash-injection sweep (nightly: `--include-ignored`), over
+/// a *segmented* golden layout: pick a random segment, truncate it or
+/// flip a random bit; every outcome must be a clean prefix recovery or a
+/// typed error — never a panic, never a partially-applied entry.
 #[test]
 #[ignore = "slow randomized sweep; nightly runs it via --include-ignored"]
 fn randomized_crash_injection_sweep() {
-    let all = batches(61, 90, &[40, 30, 20]);
+    let all = batches(61, 120, &[30, 30, 30, 30]);
     let golden = tmpdir("sweep-golden");
-    write_history(&golden, Dtype::F64, DensityModel::CutoffCount, &all, None);
-    let journal_bytes = std::fs::read(golden.join(JOURNAL_FILE)).unwrap();
+    write_history(&golden, Dtype::F64, DensityModel::CutoffCount, &all, None, 1024);
+    let segments: Vec<(u64, Vec<u8>)> = journal::list_segments(&golden)
+        .unwrap()
+        .into_iter()
+        .map(|(seq, path)| (seq, std::fs::read(path).unwrap()))
+        .collect();
+    assert!(segments.len() >= 3, "golden layout must be segmented");
     let manifest_bytes = std::fs::read(golden.join(MANIFEST_FILE)).unwrap();
     std::fs::remove_dir_all(&golden).unwrap();
 
@@ -328,33 +627,30 @@ fn randomized_crash_injection_sweep() {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join(MANIFEST_FILE), &manifest_bytes).unwrap();
-        let mut j = journal_bytes.clone();
-        // Half the trials truncate (a crash mid-append); half flip a byte
-        // (a disk/copy fault).
-        if trial % 2 == 0 {
-            let cut = rng.next_below(j.len() as u64) as usize;
-            j.truncate(cut);
-        } else {
-            let at = rng.next_below(j.len() as u64) as usize;
-            j[at] ^= 1 << rng.next_below(8);
+        let victim = rng.next_below(segments.len() as u64) as usize;
+        for (i, (seq, bytes)) in segments.iter().enumerate() {
+            let mut j = bytes.clone();
+            if i == victim {
+                // Half the trials truncate (a crash mid-append — only
+                // legal in the final segment); half flip a bit (a
+                // disk/copy fault).
+                if trial % 2 == 0 {
+                    let cut = rng.next_below(j.len() as u64) as usize;
+                    j.truncate(cut);
+                } else {
+                    let at = rng.next_below(j.len() as u64) as usize;
+                    j[at] ^= 1 << rng.next_below(8);
+                }
+            }
+            std::fs::write(dir.join(journal::segment_file(*seq)), &j).unwrap();
         }
-        std::fs::write(dir.join(JOURNAL_FILE), &j).unwrap();
-        match recover(&dir, 1) {
+        match recover(&dir, 1, 1024) {
             Ok(rec) => {
                 // A recovered prefix must be internally consistent: the
                 // stream (if its open survived) holds a batch-prefix state
                 // that a fresh build can reproduce.
                 if let Some((_, DynStream::F64(got))) = rec.streams.first() {
-                    let mut fresh = StreamingSession::<f64>::new_with_model(2, 3.0, DensityModel::CutoffCount).unwrap();
-                    for b in &all {
-                        if fresh.len() + b.len() > got.len() {
-                            break;
-                        }
-                        fresh.ingest(b).unwrap();
-                    }
-                    assert_eq!(got.len(), fresh.len(), "trial {trial}: prefix is whole batches");
-                    assert_eq!(got.rho(), fresh.rho(), "trial {trial}");
-                    assert_eq!(got.delta(), fresh.delta(), "trial {trial}");
+                    assert_whole_batch_prefix(got, &all, &format!("trial {trial}"));
                 }
             }
             Err(
@@ -367,14 +663,18 @@ fn randomized_crash_injection_sweep() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 
-    // Scan directly (the `journal inspect` path) must also never panic on
-    // the same mutated inputs.
-    let mut j = journal_bytes.clone();
-    j.truncate(journal_bytes.len() - 3);
+    // Scanning the chain directly (the `journal inspect` path) must also
+    // stay calm on a torn final segment: report the tear, don't fail.
     let dir = tmpdir("sweep-scan");
     std::fs::create_dir_all(&dir).unwrap();
-    std::fs::write(dir.join(JOURNAL_FILE), &j).unwrap();
-    let scan = journal::scan(&dir.join(JOURNAL_FILE)).unwrap();
+    for (seq, bytes) in &segments {
+        let mut j = bytes.clone();
+        if *seq == segments.last().unwrap().0 {
+            j.truncate(j.len() - 3);
+        }
+        std::fs::write(dir.join(journal::segment_file(*seq)), &j).unwrap();
+    }
+    let scan = journal::scan_dir(&dir, 1).unwrap();
     assert!(scan.torn_bytes > 0);
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -387,7 +687,7 @@ fn session_commands_replay_to_fresh_artifacts() {
     let pts = batches(71, 80, &[80]).pop().unwrap();
     let dir = tmpdir("sessions");
     {
-        let mut rec = recover(&dir, 1).unwrap();
+        let mut rec = recover(&dir, 1, 0).unwrap();
         rec.writer
             .append(&JournalEntry::OpenSession {
                 session: 5,
@@ -398,7 +698,7 @@ fn session_commands_replay_to_fresh_artifacts() {
             .unwrap();
         rec.writer.append(&JournalEntry::Recut { session: 5, rho_min: 8000.0, delta_min: 5.0 }).unwrap();
     }
-    let rec = recover(&dir, 1).unwrap();
+    let rec = recover(&dir, 1, 0).unwrap();
     assert_eq!(rec.sessions.len(), 1);
     assert_eq!(rec.report.skipped, 0);
     let got = &rec.sessions[0];

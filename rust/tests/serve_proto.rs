@@ -14,10 +14,8 @@
 //!    corrupt frame is a connection-fatal error, exactly like the
 //!    journal's torn-tail-vs-corruption split.
 
-use std::sync::Arc;
-
 use parcluster::dpc::{DensityModel, DepAlgo};
-use parcluster::geom::PointSet;
+use parcluster::geom::{Dtype, DynPoints, PointSet, PointStore};
 use parcluster::prng::SplitMix64;
 use parcluster::serve::proto::{FullResult, Request, Response};
 use parcluster::serve::{encode_frame, FrameBuf, FrameError, HEADER, MAX_FRAME};
@@ -94,6 +92,7 @@ fn gen_request(rng: &mut SplitMix64) -> Request {
             d_cut: gen_f64(rng),
             density: gen_density(rng),
             tag: gen_tag(rng),
+            dtype: if rng.next_below(2) == 0 { Dtype::F64 } else { Dtype::F32 },
         },
         6 => Request::Ingest {
             stream: rng.next_u64(),
@@ -108,9 +107,15 @@ fn gen_request(rng: &mut SplitMix64) -> Request {
             let d = 1 + rng.next_below(4) as usize;
             let n = 1 + rng.next_below(20) as usize;
             let coords: Vec<f64> = (0..n * d).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            // Both dtypes cross the wire; the batch codec is self-tagging.
+            let batch = if rng.next_below(2) == 0 {
+                DynPoints::F64(PointSet::new(coords, d))
+            } else {
+                DynPoints::F32(PointStore::new(coords.iter().map(|&c| c as f32).collect(), d))
+            };
             Request::IngestPoints {
                 stream: rng.next_u64(),
-                batch: Arc::new(PointSet::new(coords, d)),
+                batch,
                 rho_min: gen_f64(rng),
                 delta_min: gen_f64(rng),
                 full: rng.next_below(2) == 1,
@@ -151,6 +156,7 @@ fn gen_response(rng: &mut SplitMix64) -> Response {
         3 => Response::Closed { id: rng.next_u64() },
         4 => Response::CheckpointTaken {
             seq: rng.next_u64(),
+            journal_seq: rng.next_u64(),
             journal_offset: rng.next_u64(),
             next_lsn: rng.next_u64(),
         },
@@ -212,7 +218,7 @@ fn prop_framing_survives_rechunking() {
     let reqs: Vec<Request> = (0..50).map(|_| gen_request(&mut rng)).collect();
     let mut stream = Vec::new();
     for r in &reqs {
-        stream.extend_from_slice(&encode_frame(&r.encode()));
+        stream.extend_from_slice(&encode_frame(&r.encode()).unwrap());
     }
     for trial in 0..20 {
         let mut fb = FrameBuf::new();
@@ -305,7 +311,7 @@ fn forged_interior_lengths_are_rejected_without_allocation() {
 #[test]
 fn incomplete_frames_wait_and_corrupt_frames_kill() {
     let payload = Request::Checkpoint.encode();
-    let frame = encode_frame(&payload);
+    let frame = encode_frame(&payload).unwrap();
 
     // Incomplete: every prefix of the frame is "keep reading".
     for cut in 0..frame.len() {
@@ -361,7 +367,7 @@ fn full_result_round_trips_through_framing() {
         full: Some(full),
     };
     let mut fb = FrameBuf::new();
-    fb.feed(&encode_frame(&resp.encode()));
+    fb.feed(&encode_frame(&resp.encode()).unwrap());
     let back = Response::decode(&fb.next_frame().unwrap().unwrap()).unwrap();
     assert_eq!(back, resp);
 }

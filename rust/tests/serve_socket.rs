@@ -17,6 +17,7 @@ use std::sync::Arc;
 use parcluster::coordinator::{Coordinator, CoordinatorConfig};
 use parcluster::datasets;
 use parcluster::dpc::{DensityModel, Dpc, DpcParams};
+use parcluster::geom::{Dtype, DynPoints, PointStore};
 use parcluster::serve::loadgen::{self, Client, LoadgenOpts};
 use parcluster::serve::proto::{Request, Response};
 use parcluster::serve::{encode_frame, server, ServeState};
@@ -124,6 +125,7 @@ fn socket_stream_ingest_matches_direct() {
             d_cut: 3.0,
             density: DensityModel::CutoffCount,
             tag: String::new(),
+            dtype: Dtype::F64,
         })
         .unwrap()
     else {
@@ -134,7 +136,7 @@ fn socket_stream_ingest_matches_direct() {
     client
         .call(&Request::IngestPoints {
             stream,
-            batch: Arc::new(b1.clone()),
+            batch: DynPoints::F64(b1.clone()),
             rho_min: 0.0,
             delta_min: 20.0,
             full: false,
@@ -143,7 +145,7 @@ fn socket_stream_ingest_matches_direct() {
     let resp = client
         .call(&Request::IngestPoints {
             stream,
-            batch: Arc::new(b2.clone()),
+            batch: DynPoints::F64(b2.clone()),
             rho_min: 0.0,
             delta_min: 20.0,
             full: true,
@@ -160,6 +162,55 @@ fn socket_stream_ingest_matches_direct() {
     assert_eq!(got.labels, want.labels);
     assert_eq!(got.rho, want.rho);
     assert_eq!(got.delta, want.delta);
+    assert_eq!(client.call(&Request::CloseStream { stream }).unwrap(), Response::Closed { id: stream });
+    handle.shutdown();
+}
+
+/// An f32 stream over the wire: the dtype travels in `OpenStream`, f32
+/// batches round-trip the binary codec, and a mismatched f64 batch is a
+/// typed error response that leaves the connection and stream usable.
+#[test]
+fn socket_f32_stream_enforces_dtype() {
+    let (handle, _state) = spawn_server(|_| {});
+    let mut client = connect(&handle);
+    let Response::Opened { id: stream, .. } = client
+        .call(&Request::OpenStream {
+            dim: 2,
+            d_cut: 3.0,
+            density: DensityModel::CutoffCount,
+            tag: "f32-sock".into(),
+            dtype: Dtype::F32,
+        })
+        .unwrap()
+    else {
+        panic!("f32 stream open failed");
+    };
+    // An f64 batch into an f32 stream: typed error, nothing enqueued.
+    let f64_batch = datasets::by_name("simden", Some(40), 1).unwrap().pts;
+    let resp = client
+        .call(&Request::IngestPoints {
+            stream,
+            batch: DynPoints::F64(f64_batch.clone()),
+            rho_min: 0.0,
+            delta_min: 20.0,
+            full: false,
+        })
+        .unwrap();
+    let Response::Error { detail } = resp else { panic!("expected dtype mismatch, got {resp:?}") };
+    assert!(detail.contains("f32") && detail.contains("f64"), "{detail}");
+    // A matching f32 batch lands and clusters.
+    let coords32: Vec<f32> = f64_batch.coords().iter().map(|&c| c as f32).collect();
+    let resp = client
+        .call(&Request::IngestPoints {
+            stream,
+            batch: DynPoints::F32(PointStore::new(coords32, 2)),
+            rho_min: 0.0,
+            delta_min: 20.0,
+            full: true,
+        })
+        .unwrap();
+    let Response::Result { full: Some(got), .. } = resp else { panic!("f32 ingest failed: {resp:?}") };
+    assert_eq!(got.labels.len(), 40);
     assert_eq!(client.call(&Request::CloseStream { stream }).unwrap(), Response::Closed { id: stream });
     handle.shutdown();
 }
@@ -255,7 +306,7 @@ fn corrupt_frame_kills_only_its_own_connection() {
 
     // Hand-corrupt a frame on a raw socket.
     let mut sock = TcpStream::connect(&addr).unwrap();
-    let mut frame = encode_frame(&Request::Checkpoint.encode());
+    let mut frame = encode_frame(&Request::Checkpoint.encode()).unwrap();
     let last = frame.len() - 1;
     frame[last] ^= 0xFF;
     sock.write_all(&frame).unwrap();
@@ -290,7 +341,7 @@ fn bad_payload_in_valid_frame_keeps_connection() {
     let (handle, _state) = spawn_server(|_| {});
     let addr = handle.local_addr.to_string();
     let mut sock = TcpStream::connect(&addr).unwrap();
-    sock.write_all(&encode_frame(&[99, 99, 99])).unwrap(); // bad version/kind
+    sock.write_all(&encode_frame(&[99, 99, 99]).unwrap()).unwrap(); // bad version/kind
     let mut fb = parcluster::serve::FrameBuf::new();
     let mut chunk = [0u8; 4096];
     let resp = loop {
@@ -303,7 +354,8 @@ fn bad_payload_in_valid_frame_keeps_connection() {
     };
     assert!(matches!(resp, Response::Error { .. }), "{resp:?}");
     // Same socket still serves a well-formed request.
-    sock.write_all(&encode_frame(&Request::Hello { tenant: "still-here".into() }.encode())).unwrap();
+    sock.write_all(&encode_frame(&Request::Hello { tenant: "still-here".into() }.encode()).unwrap())
+        .unwrap();
     let resp = loop {
         if let Some(p) = fb.next_frame().unwrap() {
             break Response::decode(&p).unwrap();
